@@ -1,0 +1,44 @@
+//! League table: all five auto-tuners across all three workflows and
+//! both objectives at one budget.
+//!
+//! ```bash
+//! cargo run --release --example compare_algorithms -- [m] [reps]
+//! ```
+
+use ceal::config::WorkflowId;
+use ceal::coordinator::{run_campaign, Algo, Campaign};
+use ceal::sim::Objective;
+use ceal::util::table::{fnum, Table};
+
+fn main() {
+    let m: usize = std::env::args()
+        .nth(1)
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(50);
+    let reps: usize = std::env::args()
+        .nth(2)
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(15);
+    let algos = [Algo::Rs, Algo::Geist, Algo::Al, Algo::Alph, Algo::Ceal];
+    println!("== algorithm league table: m={m}, reps={reps} (normalized best; 1.0 = pool optimum) ==");
+    for objective in Objective::ALL {
+        let mut t = Table::new(&["workflow", "RS", "GEIST", "AL", "ALpH", "CEAL", "winner"])
+            .align_left(&[0, 6]);
+        for wf in WorkflowId::ALL {
+            let mut cells = vec![wf.name().to_string()];
+            let mut best: Option<(f64, Algo)> = None;
+            for algo in algos {
+                let agg = run_campaign(algo, &Campaign::new(wf, objective, m).with_reps(reps));
+                let v = agg.mean_norm_best();
+                cells.push(fnum(v, 3));
+                if best.map(|(b, _)| v < b).unwrap_or(true) {
+                    best = Some((v, algo));
+                }
+            }
+            cells.push(best.unwrap().1.name().to_string());
+            t.row(&cells);
+        }
+        println!("-- objective: {}", objective.name());
+        print!("{}", t.render());
+    }
+}

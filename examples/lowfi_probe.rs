@@ -1,0 +1,27 @@
+use ceal::config::WorkflowId;
+use ceal::coordinator::historical_samples;
+use ceal::metrics::recall_score;
+use ceal::sim::Objective;
+use ceal::surrogate::{LowFiModel, Scorer};
+use ceal::tuner::ceal::gbt_params_for;
+use ceal::tuner::{Pool, Problem};
+
+fn main() {
+    for id in WorkflowId::ALL {
+        for obj in Objective::ALL {
+            let prob = Problem::new(id, obj);
+            let pool = Pool::generate(&prob, 500, 0xF14);
+            for n_hist in [25usize, 500] {
+                let hist = historical_samples(&prob, n_hist, 0x415);
+                let nf = prob.n_component_features();
+                let lf = LowFiModel::fit(&hist, &nf, obj, &gbt_params_for(n_hist));
+                let scores = lf.score(&pool.feats, &Scorer::Native);
+                let r: Vec<String> = [5, 10, 25]
+                    .iter()
+                    .map(|&n| format!("{:.0}%", recall_score(n, &scores, &pool.truth) * 100.0))
+                    .collect();
+                println!("{} {} hist={:<4} recall@5/10/25 = {}", id, obj, n_hist, r.join(" / "));
+            }
+        }
+    }
+}

@@ -1,0 +1,57 @@
+//! Quickstart: simulate an in-situ workflow, train a CEAL auto-tuner
+//! with a 25-run budget, and inspect the result.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use ceal::config::WorkflowId;
+use ceal::sim::Objective;
+use ceal::surrogate::Scorer;
+use ceal::tuner::{Ceal, CealParams, Pool, Problem, Tuner};
+use ceal::util::rng::Pcg32;
+
+fn main() {
+    // A tuning problem: workflow LV (LAMMPS + Voro++), minimize
+    // computer time (core-hours).
+    let prob = Problem::new(WorkflowId::Lv, Objective::CompTime);
+
+    // Run the simulator once at an arbitrary configuration.
+    let cfg = ceal::config::Config(vec![128, 16, 2, 200, 64, 16, 2]);
+    let m = prob.sim.expected(&cfg);
+    println!(
+        "one run of {cfg}: {:.1} s wall-clock on {} nodes = {:.2} core-h",
+        m.exec_time_s, m.nodes, m.computer_time_core_h
+    );
+
+    // The sample pool C_pool (the paper uses 2000; 400 keeps the
+    // quickstart fast) and its ground truth.
+    let pool = Pool::generate(&prob, 400, 42);
+    println!(
+        "pool of {} feasible configs; best {:.3} core-h at {}",
+        pool.len(),
+        pool.best_value(),
+        pool.configs[pool.best_idx]
+    );
+
+    // Score configurations through the AOT artifacts when available
+    // (L1 Pallas kernel -> L2 JAX graph -> L3 PJRT runtime), falling
+    // back to the exact native mirror otherwise.
+    let scorer = Scorer::pjrt_or_native();
+    println!("scoring backend: {}", scorer.name());
+
+    // Auto-tune with CEAL under a 25-workflow-run budget.
+    let mut rng = Pcg32::new(7, 0);
+    let out = Ceal::new(CealParams::no_hist()).run(&prob, &pool, &scorer, 25, &mut rng);
+    let tuned = pool.truth[out.best_idx];
+    println!(
+        "CEAL spent {} workflow runs (cost {:.1} core-h) and proposes {}",
+        out.workflow_runs, out.collection_cost, pool.configs[out.best_idx]
+    );
+    println!(
+        "tuned {:.3} core-h vs pool best {:.3} (normalized {:.3})",
+        tuned,
+        pool.best_value(),
+        tuned / pool.best_value()
+    );
+}

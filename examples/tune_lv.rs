@@ -1,0 +1,76 @@
+//! End-to-end driver (EXPERIMENTS.md §End-to-end): the full three-layer
+//! system on the paper's headline workload.
+//!
+//! Tunes the LV workflow for both objectives with CEAL at m = 50
+//! against the RS / GEIST / AL baselines, with the scoring hot path
+//! running through the AOT artifacts over PJRT (L1 Pallas kernel inside
+//! the L2 JAX graph, executed by this Rust binary).  Reports the
+//! paper's headline quantities: tuned-vs-baseline improvement, top-1
+//! recall, collection cost, and the least-number-of-uses payoff.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example tune_lv -- [reps]
+//! ```
+
+use ceal::config::WorkflowId;
+use ceal::coordinator::{run_campaign, Algo, Campaign, ScorerKind};
+use ceal::sim::Objective;
+use ceal::util::table::{fnum, Table};
+
+fn main() {
+    let reps: usize = std::env::args()
+        .nth(1)
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(20);
+    let m = 50;
+    println!("== CEAL end-to-end on LV: m={m}, reps={reps}, pool=2000 ==");
+    println!("scoring through the PJRT artifacts (one compile per worker thread)\n");
+
+    for objective in Objective::ALL {
+        let mut table = Table::new(&[
+            "algo",
+            "tuned (mean)",
+            "normalized",
+            "top-1 recall",
+            "cost",
+            "payoff runs",
+        ])
+        .align_left(&[0]);
+        let mut ceal_val = f64::NAN;
+        let mut rs_val = f64::NAN;
+        let mut geist_val = f64::NAN;
+        for algo in [Algo::Rs, Algo::Geist, Algo::Al, Algo::Ceal] {
+            // PJRT scorer on a single worker: the compiled artifacts are
+            // reused across all repetitions.
+            let campaign = Campaign::new(WorkflowId::Lv, objective, m)
+                .with_reps(reps)
+                .with_scorer(ScorerKind::Pjrt)
+                .with_threads(1);
+            let agg = run_campaign(algo, &campaign);
+            match algo {
+                Algo::Ceal => ceal_val = agg.mean_best(),
+                Algo::Rs => rs_val = agg.mean_best(),
+                Algo::Geist => geist_val = agg.mean_best(),
+                _ => {}
+            }
+            table.row(&[
+                algo.name().into(),
+                format!("{} {}", fnum(agg.mean_best(), 3), objective.unit()),
+                fnum(agg.mean_norm_best(), 3),
+                fnum(agg.mean_recall(1) * 100.0, 0) + "%",
+                fnum(agg.mean_cost(), 1),
+                agg.payoff_runs()
+                    .map(|p| fnum(p, 0))
+                    .unwrap_or_else(|| "never".into()),
+            ]);
+        }
+        println!("-- objective: {}", objective.name());
+        print!("{}", table.render());
+        println!(
+            "CEAL vs RS: {}% better; vs GEIST: {}% better  \
+             (paper at m=50: 17.6%/40.8% vs RS, 12.4%/32.5% vs GEIST)\n",
+            fnum((1.0 - ceal_val / rs_val) * 100.0, 1),
+            fnum((1.0 - ceal_val / geist_val) * 100.0, 1),
+        );
+    }
+}

@@ -1,0 +1,118 @@
+"""AOT pipeline: lower the L2 graphs to HLO *text* artifacts.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which the `xla` crate's
+bundled xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`).  The HLO
+text parser on the Rust side reassigns ids, so text round-trips cleanly.
+See /opt/xla-example/README.md.
+
+Lowering path: jax.jit(fn).lower(specs) -> StableHLO module ->
+XlaComputation (return_tuple=True; the Rust side unwraps with
+to_tuple1()) -> as_hlo_text().
+
+Artifacts (shapes must match rust/src/runtime/mod.rs):
+  ensemble_predict.hlo.txt        N=2048  F=8  T=64 D=6
+  ensemble_predict_small.hlo.txt  N=256   F=8  T=64 D=6
+  lowfi_score.hlo.txt             J=4 N=2048 F=8 T=64 D=6 + mode scalar
+  meta.json                       shape manifest consumed by Rust tests
+
+Python runs ONCE at build time (`make artifacts`); the Rust binary is
+self-contained afterwards.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import gbt_predict as gk
+
+J_MAX = 4
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_ensemble_predict(n, f=gk.F_MAX, trees=gk.T_TREES, depth=gk.DEPTH):
+    leaves_w = 1 << depth
+    specs = (
+        jax.ShapeDtypeStruct((n, f), jnp.float32),
+        jax.ShapeDtypeStruct((trees, depth), jnp.int32),
+        jax.ShapeDtypeStruct((trees, depth), jnp.float32),
+        jax.ShapeDtypeStruct((trees, leaves_w), jnp.float32),
+    )
+
+    def fn(x, feat, thr, leaves):
+        return (model.ensemble_predict(x, feat, thr, leaves),)
+
+    return jax.jit(fn).lower(*specs)
+
+
+def lower_lowfi_score(
+    n, j=J_MAX, f=gk.F_MAX, trees=gk.T_TREES, depth=gk.DEPTH
+):
+    leaves_w = 1 << depth
+    specs = (
+        jax.ShapeDtypeStruct((j, n, f), jnp.float32),
+        jax.ShapeDtypeStruct((j, trees, depth), jnp.int32),
+        jax.ShapeDtypeStruct((j, trees, depth), jnp.float32),
+        jax.ShapeDtypeStruct((j, trees, leaves_w), jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.float32),
+    )
+
+    def fn(xs, feats, thrs, leaves, mode):
+        return (model.lowfi_score(xs, feats, thrs, leaves, mode),)
+
+    return jax.jit(fn).lower(*specs)
+
+
+ARTIFACTS = {
+    "ensemble_predict.hlo.txt": lambda: lower_ensemble_predict(gk.POOL_N),
+    "ensemble_predict_small.hlo.txt": lambda: lower_ensemble_predict(gk.SMALL_N),
+    "lowfi_score.hlo.txt": lambda: lower_lowfi_score(gk.POOL_N),
+}
+
+
+def build_meta():
+    return {
+        "pool_n": gk.POOL_N,
+        "small_n": gk.SMALL_N,
+        "f_max": gk.F_MAX,
+        "trees": gk.T_TREES,
+        "depth": gk.DEPTH,
+        "leaves": 1 << gk.DEPTH,
+        "j_max": J_MAX,
+        "artifacts": sorted(ARTIFACTS),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    for name, builder in ARTIFACTS.items():
+        path = os.path.join(args.out_dir, name)
+        text = to_hlo_text(builder())
+        with open(path, "w") as fh:
+            fh.write(text)
+        print(f"wrote {len(text):>9} chars -> {path}")
+    meta_path = os.path.join(args.out_dir, "meta.json")
+    with open(meta_path, "w") as fh:
+        json.dump(build_meta(), fh, indent=2, sort_keys=True)
+        fh.write("\n")
+    print(f"wrote manifest     -> {meta_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,105 @@
+"""L1 Pallas kernel: oblivious gradient-boosted-tree ensemble inference.
+
+The surrogate models trained by the Rust coordinator (rust/src/gbt/) are
+*oblivious* decision trees: every level of a tree applies the same
+(feature, threshold) split to every node at that level.  That makes the
+whole ensemble a fixed-shape tensor program —
+
+    features   : [T, D]   int32   feature index tested at (tree, depth)
+    thresholds : [T, D]   float32 split threshold at (tree, depth)
+    leaves     : [T, 2^D] float32 leaf values per tree
+
+and inference over a batch X[N, F] is, per tree,
+
+    idx = sum_d (X[:, features[t, d]] > thresholds[t, d]) << d
+    pred += leaves[t, idx]
+
+which is D vectorized compares + one 2^D-wide gather per tree: dense,
+branch-free, VPU-friendly work.  This is the §Hardware-Adaptation story:
+the paper's xgboost inference is pointer-chasing on a CPU; on a TPU we
+restructure the model so a level is one vector compare over the whole
+N-tile and the leaf lookup is a gather from a VMEM-resident [T, 2^D]
+table.  The N dimension is tiled with a BlockSpec (HBM->VMEM schedule);
+the ensemble tables are small (T=64, D=6 -> 17 KiB of leaves) and are
+mapped to block (0, 0) at every grid step, i.e. held in VMEM rather than
+re-streamed.
+
+Padding conventions (must match rust/src/gbt/ensemble.rs):
+  * unused trees: thresholds = +inf, leaves = 0  -> contribute 0;
+  * the ensemble bias is folded into tree 0 as constant leaves;
+  * unused features: X column = 0, never selected by real splits.
+
+The kernel MUST be lowered with interpret=True: the CPU PJRT plugin
+cannot execute Mosaic custom-calls (real-TPU lowering).  Correctness is
+pinned against the pure-jnp oracle in ref.py by python/tests/.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default artifact shape constants — keep in sync with rust/src/runtime/mod.rs.
+POOL_N = 2048  # scored pool size (paper: |C_pool| = 2000, padded)
+SMALL_N = 256  # small-batch artifact (C_meas scoring, model-switch checks)
+F_MAX = 8  # max feature count (Table 1: <= 7 params per workflow view)
+T_TREES = 64  # boosting rounds
+DEPTH = 6  # oblivious tree depth (2^6 = 64 leaves)
+BLOCK_N = 256  # N-tile per grid step
+
+
+def _predict_kernel(x_ref, feat_ref, thr_ref, leaves_ref, out_ref, *, trees, depth):
+    """Pallas kernel body. Shapes: x [BN, F], feat/thr [T, D],
+    leaves [T, 2^depth], out [BN]."""
+    x = x_ref[...]
+    n = x.shape[0]
+    acc = jnp.zeros((n,), jnp.float32)
+    for t in range(trees):
+        idx = jnp.zeros((n,), jnp.int32)
+        for d in range(depth):
+            f = feat_ref[t, d]
+            # Dynamic feature gather: one column of the X tile.
+            xv = jnp.take(x, f, axis=1, mode="clip")
+            bit = (xv > thr_ref[t, d]).astype(jnp.int32)
+            idx = idx + bit * (1 << d)
+        acc = acc + jnp.take(leaves_ref[t], idx, mode="clip")
+    out_ref[...] = acc
+
+
+def make_ensemble_predict(n, f, trees, depth, block_n=None, interpret=True):
+    """Build the tiled pallas_call for a fixed (n, f, trees, depth).
+
+    Returns fn(x[n,f] f32, feat[trees,depth] i32, thr[trees,depth] f32,
+    leaves[trees,2^depth] f32) -> [n] f32.
+    """
+    if block_n is None:
+        block_n = min(BLOCK_N, n)
+    if n % block_n != 0:
+        raise ValueError(f"n={n} must be a multiple of block_n={block_n}")
+    leaves_w = 1 << depth
+    grid = (n // block_n,)
+    kernel = functools.partial(_predict_kernel, trees=trees, depth=depth)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            # X: stream one [block_n, F] tile per grid step.
+            pl.BlockSpec((block_n, f), lambda i: (i, 0)),
+            # Ensemble tables: same (small) block at every step -> VMEM-resident.
+            pl.BlockSpec((trees, depth), lambda i: (0, 0)),
+            pl.BlockSpec((trees, depth), lambda i: (0, 0)),
+            pl.BlockSpec((trees, leaves_w), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=interpret,
+    )
+
+
+def ensemble_predict(x, feat, thr, leaves, block_n=None, interpret=True):
+    """Convenience wrapper inferring shapes from the arguments."""
+    n, f = x.shape
+    trees, depth = feat.shape
+    fn = make_ensemble_predict(n, f, trees, depth, block_n=block_n, interpret=interpret)
+    return fn(x, feat, thr, leaves)

@@ -1,0 +1,50 @@
+"""Pure-jnp oracle for the oblivious-GBT ensemble kernels.
+
+This is the correctness ground truth: no pallas, no tiling — just the
+mathematical definition of oblivious-tree inference and the Eqn 1/2
+low-fidelity combination.  python/tests/ asserts the Pallas kernel
+(interpret mode) and the AOT-lowered HLO agree with these functions, and
+rust integration tests re-derive the same numbers through the PJRT path.
+"""
+
+import jax.numpy as jnp
+
+
+def ensemble_predict_ref(x, feat, thr, leaves):
+    """Reference oblivious-ensemble inference.
+
+    x:      [N, F] float32
+    feat:   [T, D] int32 (values in [0, F))
+    thr:    [T, D] float32
+    leaves: [T, 2^D] float32
+    returns [N] float32
+    """
+    n, _ = x.shape
+    trees, depth = feat.shape
+    acc = jnp.zeros((n,), jnp.float32)
+    for t in range(trees):
+        idx = jnp.zeros((n,), jnp.int32)
+        for d in range(depth):
+            xv = x[:, feat[t, d]]
+            idx = idx + (xv > thr[t, d]).astype(jnp.int32) * (1 << d)
+        acc = acc + leaves[t][idx]
+    return acc
+
+
+def lowfi_score_ref(xs, feats, thrs, leaves, mode):
+    """Reference low-fidelity combination (paper Eqns 1-2).
+
+    xs:    [J, N, F]; feats/thrs: [J, T, D]; leaves: [J, T, 2^D]
+    mode:  scalar in {1.0 (max / execution time), 0.0 (sum / computer time)}
+    returns [N] float32: mode*max_j exp(P_j) + (1-mode)*sum_j exp(P_j)
+
+    Component models are trained in log space; padding components carry
+    a large-negative constant (exp -> 0) so they are neutral.
+    """
+    j = xs.shape[0]
+    preds = jnp.exp(
+        jnp.stack(
+            [ensemble_predict_ref(xs[k], feats[k], thrs[k], leaves[k]) for k in range(j)]
+        )
+    )
+    return mode * jnp.max(preds, axis=0) + (1.0 - mode) * jnp.sum(preds, axis=0)

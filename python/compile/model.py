@@ -1,0 +1,62 @@
+"""L2: the JAX compute graphs the Rust coordinator executes on its hot loop.
+
+Two graphs, both calling the L1 Pallas kernel (kernels/gbt_predict.py):
+
+  * ensemble_predict — score a configuration pool X[N, F] with one
+    flattened oblivious-GBT ensemble (the high-fidelity surrogate, or a
+    single component model).
+
+  * lowfi_score — the paper's low-fidelity workflow model (§4): run J
+    per-component ensembles over their per-component feature views and
+    combine with Eqn 1 (max, execution time) or Eqn 2 (sum, computer
+    time).  `mode` is a runtime scalar (1.0 -> max, 0.0 -> sum) so a
+    single compiled artifact serves both optimization objectives:
+    score = mode*max_j exp(P_j) + (1-mode)*sum_j exp(P_j).
+
+Models are trained in LOG space (times span orders of magnitude), so
+the combination exponentiates each component prediction back to real
+time before taking max/sum.  Padded components (J fixed at 4) carry a
+large-negative constant tree (exp -> 0), which is neutral for both
+max-over-positive-times and sum.
+
+All shapes are static (AOT); ensembles are runtime *inputs*, so the Rust
+side retrains models freely without ever re-lowering or re-compiling.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import gbt_predict as gk
+
+
+def ensemble_predict(x, feat, thr, leaves, block_n=None, interpret=True):
+    """Score x[N, F] with one flattened ensemble. Returns [N] f32."""
+    return gk.ensemble_predict(
+        x, feat, thr, leaves, block_n=block_n, interpret=interpret
+    )
+
+
+def lowfi_score(xs, feats, thrs, leaves, mode, block_n=None, interpret=True):
+    """Low-fidelity combined score (Eqns 1-2), one fused graph.
+
+    xs:     [J, N, F] f32 — per-component feature views of the same pool
+    feats:  [J, T, D] i32; thrs: [J, T, D] f32; leaves: [J, T, 2^D] f32
+    mode:   scalar f32 — 1.0 selects max (exec time), 0.0 selects sum
+    returns [N] f32
+    """
+    j = xs.shape[0]
+    preds = jnp.exp(
+        jnp.stack(
+            [
+                gk.ensemble_predict(
+                    xs[k],
+                    feats[k],
+                    thrs[k],
+                    leaves[k],
+                    block_n=block_n,
+                    interpret=interpret,
+                )
+                for k in range(j)
+            ]
+        )
+    )
+    return mode * jnp.max(preds, axis=0) + (1.0 - mode) * jnp.sum(preds, axis=0)

@@ -1,0 +1,107 @@
+"""Pallas kernel vs pure-jnp oracle — the core L1 correctness signal.
+
+Hypothesis sweeps shapes (N, F, T, D, block size) and data; every case
+asserts allclose between the interpret-mode Pallas kernel and ref.py.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile.kernels import gbt_predict as gk
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def make_case(rng, n, f, trees, depth):
+    """Random ensemble + data with thresholds in data range."""
+    x = rng.uniform(0.0, 1.0, size=(n, f)).astype(np.float32)
+    feat = rng.integers(0, f, size=(trees, depth)).astype(np.int32)
+    thr = rng.uniform(0.0, 1.0, size=(trees, depth)).astype(np.float32)
+    leaves = rng.normal(0.0, 1.0, size=(trees, 1 << depth)).astype(np.float32)
+    return x, feat, thr, leaves
+
+
+@pytest.mark.parametrize("n,block_n", [(8, 8), (64, 32), (256, 64), (512, 256)])
+@pytest.mark.parametrize("trees,depth", [(1, 1), (4, 3), (16, 6)])
+def test_kernel_matches_ref_grid(n, block_n, trees, depth):
+    rng = np.random.default_rng(n * 1000 + trees * 10 + depth)
+    f = 8
+    x, feat, thr, leaves = make_case(rng, n, f, trees, depth)
+    got = gk.ensemble_predict(x, feat, thr, leaves, block_n=block_n)
+    want = ref.ensemble_predict_ref(x, feat, thr, leaves)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n_blocks=st.integers(1, 4),
+    block_n=st.sampled_from([8, 16, 32]),
+    f=st.integers(1, 8),
+    trees=st.integers(1, 12),
+    depth=st.integers(1, 6),
+)
+def test_kernel_matches_ref_hypothesis(seed, n_blocks, block_n, f, trees, depth):
+    rng = np.random.default_rng(seed)
+    n = n_blocks * block_n
+    x, feat, thr, leaves = make_case(rng, n, f, trees, depth)
+    got = gk.ensemble_predict(x, feat, thr, leaves, block_n=block_n)
+    want = ref.ensemble_predict_ref(x, feat, thr, leaves)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_padding_trees_are_neutral():
+    """Unused trees (thr=+inf, leaves=0) must contribute exactly 0."""
+    rng = np.random.default_rng(7)
+    n, f, trees, depth = 32, 8, 8, 4
+    x, feat, thr, leaves = make_case(rng, n, f, trees, depth)
+    # Pad: double the tree count with +inf thresholds and zero leaves.
+    feat2 = np.concatenate([feat, np.zeros_like(feat)], axis=0)
+    thr2 = np.concatenate([thr, np.full_like(thr, np.inf)], axis=0)
+    leaves2 = np.concatenate([leaves, np.zeros_like(leaves)], axis=0)
+    got = gk.ensemble_predict(x, feat2, thr2, leaves2, block_n=32)
+    want = ref.ensemble_predict_ref(x, feat, thr, leaves)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_bias_tree_constant_leaves():
+    """Bias convention: a tree with constant leaves adds the constant."""
+    n, f, trees, depth = 16, 4, 1, 3
+    x = np.random.default_rng(0).uniform(size=(n, f)).astype(np.float32)
+    feat = np.zeros((trees, depth), np.int32)
+    thr = np.full((trees, depth), np.inf, np.float32)
+    leaves = np.full((trees, 1 << depth), 3.25, np.float32)
+    got = gk.ensemble_predict(x, feat, thr, leaves, block_n=16)
+    np.testing.assert_allclose(np.asarray(got), np.full((n,), 3.25), rtol=1e-6)
+
+
+def test_single_split_partitions_batch():
+    """One depth-1 tree is a step function on the split feature."""
+    n = 32
+    x = np.linspace(0.0, 1.0, n, dtype=np.float32).reshape(n, 1)
+    feat = np.zeros((1, 1), np.int32)
+    thr = np.full((1, 1), 0.5, np.float32)
+    leaves = np.array([[-1.0, 2.0]], np.float32)
+    got = np.asarray(gk.ensemble_predict(x, feat, thr, leaves, block_n=n))
+    want = np.where(x[:, 0] > 0.5, 2.0, -1.0)
+    np.testing.assert_allclose(got, want)
+
+
+def test_block_n_must_divide_n():
+    with pytest.raises(ValueError):
+        gk.make_ensemble_predict(100, 8, 4, 3, block_n=64)
+
+
+def test_default_artifact_shape_runs():
+    """The exact artifact shape (N=2048, F=8, T=64, D=6) round-trips."""
+    rng = np.random.default_rng(42)
+    x, feat, thr, leaves = make_case(rng, gk.POOL_N, gk.F_MAX, gk.T_TREES, gk.DEPTH)
+    got = gk.ensemble_predict(x, feat, thr, leaves)
+    want = ref.ensemble_predict_ref(x, feat, thr, leaves)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)

@@ -1,0 +1,79 @@
+"""L2 graph tests: low-fidelity combination (Eqns 1-2) and padding."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import gbt_predict as gk
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def make_components(rng, j, n, f, trees, depth):
+    xs = rng.uniform(0.0, 1.0, size=(j, n, f)).astype(np.float32)
+    feats = rng.integers(0, f, size=(j, trees, depth)).astype(np.int32)
+    thrs = rng.uniform(0.0, 1.0, size=(j, trees, depth)).astype(np.float32)
+    leaves = rng.normal(1.0, 0.3, size=(j, trees, 1 << depth)).astype(np.float32)
+    return xs, feats, thrs, leaves
+
+
+@pytest.mark.parametrize("mode", [0.0, 1.0])
+@pytest.mark.parametrize("j", [1, 2, 4])
+def test_lowfi_matches_ref(mode, j):
+    rng = np.random.default_rng(j * 17 + int(mode))
+    n, f, trees, depth = 64, 8, 6, 4
+    xs, feats, thrs, leaves = make_components(rng, j, n, f, trees, depth)
+    got = model.lowfi_score(xs, feats, thrs, leaves, jnp.float32(mode), block_n=32)
+    want = ref.lowfi_score_ref(xs, feats, thrs, leaves, mode)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_mode_one_is_max_mode_zero_is_sum():
+    """mode=1 must equal max over exp(components); mode=0 the sum
+    (Eqns 1-2 on log-space model outputs)."""
+    rng = np.random.default_rng(3)
+    n, f, trees, depth, j = 32, 4, 4, 3, 3
+    xs, feats, thrs, leaves = make_components(rng, j, n, f, trees, depth)
+    preds = np.exp(
+        np.stack(
+            [
+                np.asarray(
+                    ref.ensemble_predict_ref(xs[k], feats[k], thrs[k], leaves[k])
+                )
+                for k in range(j)
+            ]
+        )
+    )
+    got_max = np.asarray(
+        model.lowfi_score(xs, feats, thrs, leaves, jnp.float32(1.0), block_n=32)
+    )
+    got_sum = np.asarray(
+        model.lowfi_score(xs, feats, thrs, leaves, jnp.float32(0.0), block_n=32)
+    )
+    np.testing.assert_allclose(got_max, preds.max(axis=0), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(got_sum, preds.sum(axis=0), rtol=1e-5, atol=1e-5)
+
+
+def test_padded_components_neutral_for_positive_times():
+    """Padding components carry a large-negative constant prediction
+    (exp -> 0), so they must not change max or sum of real component
+    times (the artifact always carries J=4 slots)."""
+    rng = np.random.default_rng(11)
+    n, f, trees, depth = 32, 8, 4, 3
+    xs, feats, thrs, leaves = make_components(rng, 2, n, f, trees, depth)
+    pad = 2
+    xs_p = np.concatenate([xs, np.zeros((pad, n, f), np.float32)])
+    feats_p = np.concatenate([feats, np.zeros((pad, trees, depth), np.int32)])
+    thrs_p = np.concatenate([thrs, np.full((pad, trees, depth), np.inf, np.float32)])
+    pad_leaves = np.zeros((pad, trees, 1 << depth), np.float32)
+    pad_leaves[:, 0, :] = -1.0e9  # NEG_PRED convention (exp -> 0)
+    leaves_p = np.concatenate([leaves, pad_leaves])
+    for mode in (0.0, 1.0):
+        got = np.asarray(
+            model.lowfi_score(xs_p, feats_p, thrs_p, leaves_p, jnp.float32(mode), block_n=32)
+        )
+        want = np.asarray(ref.lowfi_score_ref(xs, feats, thrs, leaves, mode))
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)

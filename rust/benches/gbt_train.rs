@@ -1,0 +1,53 @@
+//! GBT training benchmark: the modeler's cost at the paper's budgets
+//! (25-100 workflow samples), at component-history scale (500), and at
+//! pool scale (2000).
+
+use ceal::config::F_MAX;
+use ceal::gbt::{train_log, GbtParams};
+use ceal::util::bench::Bencher;
+use ceal::util::rng::Pcg32;
+
+fn data(rng: &mut Pcg32, n: usize) -> (Vec<[f32; F_MAX]>, Vec<f64>) {
+    let xs: Vec<[f32; F_MAX]> = (0..n)
+        .map(|_| {
+            let mut x = [0f32; F_MAX];
+            for v in x.iter_mut() {
+                *v = rng.f32();
+            }
+            x
+        })
+        .collect();
+    let y: Vec<f64> = xs
+        .iter()
+        .map(|x| 10.0 + 80.0 * x[0] as f64 + 20.0 * (x[1] as f64) * (x[2] as f64))
+        .collect();
+    (xs, y)
+}
+
+fn main() {
+    let mut rng = Pcg32::new(0x6B, 0);
+    let mut b = Bencher::from_env(2, 15);
+    for n in [25usize, 50, 100, 500, 2000] {
+        let (xs, y) = data(&mut rng, n);
+        let params = if n >= 200 {
+            GbtParams::default()
+        } else {
+            GbtParams::small_data()
+        };
+        b.bench_items(&format!("gbt/train_log/n{n}"), n as f64, || {
+            train_log(&xs, &y, 7, &params)
+        });
+    }
+    // prediction throughput of the native mirror
+    let (xs, y) = data(&mut rng, 500);
+    let ens = train_log(&xs, &y, 7, &GbtParams::default());
+    let (pool, _) = data(&mut rng, 2000);
+    b.bench_items("gbt/native_predict/pool2000", 2000.0, || {
+        ens.predict_batch(&pool)
+    });
+    let flat = ens.flatten();
+    b.bench_items("gbt/flatten", 1.0, || ens.flatten());
+    b.bench_items("gbt/flat_predict/pool2000", 2000.0, || {
+        pool.iter().map(|x| flat.predict(x)).collect::<Vec<f32>>()
+    });
+}

@@ -1,0 +1,36 @@
+//! Reproduction benchmark: time to regenerate each paper table/figure
+//! at reduced repetition counts — one bench per experiment, so `cargo
+//! bench` covers every table AND figure end-to-end.
+
+use ceal::coordinator::ScorerKind;
+use ceal::exper::{self, ExpCtx};
+use ceal::util::bench::Bencher;
+
+fn quick_ctx() -> ExpCtx {
+    let mut ctx = ExpCtx::default();
+    ctx.out_dir = std::env::temp_dir().join("ceal-bench-results");
+    ctx.reps = 3;
+    ctx.pool_size = 400;
+    ctx.threads = 1;
+    ctx.scorer = ScorerKind::Native;
+    ctx
+}
+
+/// Silence the experiment's stdout chatter while timing it.
+fn main() {
+    let ctx = quick_ctx();
+    let mut b = Bencher::from_env(0, 3);
+    b.bench("repro/table1", || exper::table1::run(&ctx));
+    b.bench("repro/table2", || exper::table2::run(&ctx));
+    b.bench("repro/fig04", || exper::fig04::run(&ctx));
+    b.bench("repro/fig05", || exper::fig05::run(&ctx));
+    b.bench("repro/fig06", || exper::fig06::run(&ctx));
+    b.bench("repro/fig07", || exper::fig07::run(&ctx));
+    b.bench("repro/fig08", || exper::fig08::run(&ctx));
+    b.bench("repro/fig09", || exper::fig09::run(&ctx));
+    b.bench("repro/fig10", || exper::fig10::run(&ctx));
+    b.bench("repro/fig11", || exper::fig11::run(&ctx));
+    b.bench("repro/fig12", || exper::fig12::run(&ctx));
+    b.bench("repro/fig13", || exper::fig13::run(&ctx));
+    println!("\n(reduced settings: reps=3, pool=400 — `ceal all` runs the full versions)");
+}

@@ -1,0 +1,61 @@
+//! Hot-path benchmark: surrogate scoring of the configuration pool —
+//! the operation CEAL repeats on every iteration (Alg. 1 lines 10/23).
+//! Compares the PJRT artifact path against the native mirror, at pool
+//! and small-batch sizes, plus the fused low-fidelity combination.
+
+use ceal::config::{lv_spec, Config, F_MAX};
+use ceal::gbt::{train_log, GbtParams};
+use ceal::runtime::Runtime;
+use ceal::sim::Objective;
+use ceal::surrogate::{PoolFeatures, Scorer};
+use ceal::util::bench::Bencher;
+use ceal::util::rng::Pcg32;
+
+fn main() {
+    let mut b = Bencher::from_env(3, 20);
+    let spec = lv_spec();
+    let mut rng = Pcg32::new(0xBE, 0);
+    let configs: Vec<Config> = (0..2000).map(|_| spec.sample(&mut rng)).collect();
+    let feats = PoolFeatures::encode(&spec, &configs);
+
+    // realistically-trained log-space models
+    let xs: Vec<[f32; F_MAX]> = feats.workflow.iter().take(50).cloned().collect();
+    let y: Vec<f64> = xs
+        .iter()
+        .map(|x| (10.0 + 50.0 * x[0] as f64).max(1.0))
+        .collect();
+    let ens = train_log(&xs, &y, 7, &GbtParams::small_data());
+    let cx: Vec<[f32; F_MAX]> = feats.per_component[0].iter().take(200).cloned().collect();
+    let cy: Vec<f64> = cx
+        .iter()
+        .map(|x| (5.0 + 20.0 * x[0] as f64).max(1.0))
+        .collect();
+    let comp0 = train_log(&cx, &cy, 4, &GbtParams::small_data());
+    let comp1 = comp0.clone();
+
+    println!("== pool scoring (2000 configs x 64-tree ensemble) ==");
+    let native = Scorer::Native;
+    b.bench_items("native/pool2000", 2000.0, || {
+        native.score(&ens, &feats.workflow)
+    });
+    b.bench_items("native/batch256", 256.0, || {
+        native.score(&ens, &feats.workflow[..256])
+    });
+    b.bench_items("native/lowfi2000", 2000.0, || {
+        native.lowfi(&[comp0.clone(), comp1.clone()], &feats, Objective::CompTime)
+    });
+
+    match Runtime::load_default() {
+        Ok(rt) => {
+            let pjrt = Scorer::Pjrt(rt);
+            b.bench_items("pjrt/pool2000", 2000.0, || pjrt.score(&ens, &feats.workflow));
+            b.bench_items("pjrt/batch256", 256.0, || {
+                pjrt.score(&ens, &feats.workflow[..256])
+            });
+            b.bench_items("pjrt/lowfi2000", 2000.0, || {
+                pjrt.lowfi(&[comp0.clone(), comp1.clone()], &feats, Objective::CompTime)
+            });
+        }
+        Err(e) => println!("(pjrt benches skipped: {e:#})"),
+    }
+}

@@ -1,0 +1,42 @@
+//! Simulator throughput: workflow runs per second (the collector's
+//! cost driver), the pipeline DES in isolation, and pool generation
+//! (2000-config test sets with ground truth).
+
+use ceal::config::WorkflowId;
+use ceal::sim::Objective;
+use ceal::tuner::{Pool, Problem};
+use ceal::util::bench::Bencher;
+use ceal::util::rng::Pcg32;
+
+fn main() {
+    let mut b = Bencher::from_env(3, 30);
+    for id in WorkflowId::ALL {
+        let prob = Problem::new(id, Objective::ExecTime);
+        let mut rng = Pcg32::new(1, 0);
+        let feasible = |c: &ceal::config::Config| prob.sim.feasible(c);
+        let cfgs: Vec<_> = (0..256)
+            .map(|_| prob.sim.spec.sample_feasible(&mut rng, &feasible, 100_000))
+            .collect();
+        let mut run_rng = Pcg32::new(2, 0);
+        let mut i = 0usize;
+        b.bench_items(&format!("sim/{}/noisy_run", id.name()), 1.0, || {
+            i = (i + 1) % cfgs.len();
+            prob.sim.run(&cfgs[i], &mut run_rng)
+        });
+        let mut j = 0usize;
+        b.bench_items(&format!("sim/{}/expected_run", id.name()), 1.0, || {
+            j = (j + 1) % cfgs.len();
+            prob.sim.expected(&cfgs[j])
+        });
+        let mut k = 0usize;
+        b.bench_items(&format!("sim/{}/pipeline_only", id.name()), 1.0, || {
+            k = (k + 1) % cfgs.len();
+            prob.sim.build_pipeline(&cfgs[k]).simulate()
+        });
+    }
+    let prob = Problem::new(WorkflowId::Lv, Objective::CompTime);
+    let mut bslow = Bencher::from_env(1, 5);
+    bslow.bench_items("pool/generate2000_with_truth", 2000.0, || {
+        Pool::generate(&prob, 2000, 7)
+    });
+}

@@ -1,0 +1,35 @@
+//! End-to-end tuner benchmark: one full tuning run per algorithm at the
+//! paper's settings (LV / computer time / m = 50 / pool 2000) — the
+//! whole-campaign wall clock the coordinator must sustain.
+
+use ceal::config::WorkflowId;
+use ceal::sim::Objective;
+use ceal::surrogate::Scorer;
+use ceal::tuner::{
+    ActiveLearning, Alph, Ceal, CealParams, Geist, Pool, Problem, RandomSampling, Tuner,
+};
+use ceal::util::bench::Bencher;
+use ceal::util::rng::Pcg32;
+
+fn main() {
+    let prob = Problem::new(WorkflowId::Lv, Objective::CompTime);
+    let pool = Pool::generate(&prob, 2000, 0xCEA1);
+    pool.knn_graph(10); // prebuild GEIST's graph, as campaigns do
+    let scorer = Scorer::Native;
+    let tuners: Vec<(&str, Box<dyn Tuner>)> = vec![
+        ("RS", Box::new(RandomSampling)),
+        ("AL", Box::new(ActiveLearning::default())),
+        ("GEIST", Box::new(Geist::default())),
+        ("CEAL", Box::new(Ceal::new(CealParams::no_hist()))),
+        ("ALpH", Box::new(Alph::new(CealParams::no_hist()))),
+    ];
+    let mut b = Bencher::from_env(1, 10);
+    for (name, tuner) in &tuners {
+        let mut rep = 0u64;
+        b.bench(&format!("tuner/{name}/m50_pool2000"), || {
+            rep += 1;
+            let mut rng = Pcg32::new(0xBEEF ^ rep, 0);
+            tuner.run(&prob, &pool, &scorer, 50, &mut rng)
+        });
+    }
+}

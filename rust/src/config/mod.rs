@@ -1,0 +1,12 @@
+//! Configuration-space machinery: typed parameter definitions,
+//! per-component and joint workflow spaces (paper Table 1), feature
+//! encoding for the surrogate models, feasibility filtering, and
+//! neighbor enumeration (GEIST's parameter graph).
+
+pub mod param;
+pub mod space;
+pub mod spaces;
+
+pub use param::{ParamDef, ParamValues};
+pub use space::{ComponentSpec, Config, WorkflowSpec, F_MAX};
+pub use spaces::{gp_spec, hs_spec, lv_spec, spec_by_name, WorkflowId};

@@ -1,0 +1,179 @@
+//! A single configuration parameter: a named, ordered, finite set of
+//! integer values (all Table 1 parameters are integer-valued).
+
+use crate::util::rng::Pcg32;
+
+/// The value domain of a parameter.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ParamValues {
+    /// `lo, lo+step, ..., <= hi` (inclusive arithmetic progression).
+    Range { lo: i64, hi: i64, step: i64 },
+    /// Explicit value list (ordered).
+    List(Vec<i64>),
+}
+
+/// A named parameter definition.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamDef {
+    pub name: String,
+    pub values: ParamValues,
+}
+
+impl ParamDef {
+    pub fn range(name: &str, lo: i64, hi: i64) -> Self {
+        ParamDef::range_step(name, lo, hi, 1)
+    }
+
+    pub fn range_step(name: &str, lo: i64, hi: i64, step: i64) -> Self {
+        assert!(step > 0 && hi >= lo, "bad range for {name}");
+        ParamDef {
+            name: name.to_string(),
+            values: ParamValues::Range { lo, hi, step },
+        }
+    }
+
+    pub fn list(name: &str, values: &[i64]) -> Self {
+        assert!(!values.is_empty(), "empty list for {name}");
+        ParamDef {
+            name: name.to_string(),
+            values: ParamValues::List(values.to_vec()),
+        }
+    }
+
+    /// Number of admissible values.
+    pub fn count(&self) -> u64 {
+        match &self.values {
+            ParamValues::Range { lo, hi, step } => ((hi - lo) / step + 1) as u64,
+            ParamValues::List(v) => v.len() as u64,
+        }
+    }
+
+    /// The `idx`-th value (0-based, ordered).
+    pub fn value_at(&self, idx: u64) -> i64 {
+        debug_assert!(idx < self.count(), "{}: index {idx} out of range", self.name);
+        match &self.values {
+            ParamValues::Range { lo, step, .. } => lo + step * idx as i64,
+            ParamValues::List(v) => v[idx as usize],
+        }
+    }
+
+    /// Index of `value`; None if not admissible.
+    pub fn index_of(&self, value: i64) -> Option<u64> {
+        match &self.values {
+            ParamValues::Range { lo, hi, step } => {
+                if value < *lo || value > *hi || (value - lo) % step != 0 {
+                    None
+                } else {
+                    Some(((value - lo) / step) as u64)
+                }
+            }
+            ParamValues::List(v) => v.iter().position(|&x| x == value).map(|i| i as u64),
+        }
+    }
+
+    /// Lowest / highest admissible value.
+    pub fn min(&self) -> i64 {
+        self.value_at(0)
+    }
+
+    pub fn max(&self) -> i64 {
+        self.value_at(self.count() - 1)
+    }
+
+    /// Uniform random admissible value.
+    pub fn sample(&self, rng: &mut Pcg32) -> i64 {
+        self.value_at(rng.gen_range(self.count()))
+    }
+
+    /// Normalize a value to [0, 1] by index position (robust to uneven
+    /// spacing in `List` domains).
+    pub fn normalize(&self, value: i64) -> f32 {
+        let idx = self
+            .index_of(value)
+            .unwrap_or_else(|| panic!("{}: value {value} not admissible", self.name));
+        let n = self.count();
+        if n <= 1 {
+            0.0
+        } else {
+            idx as f32 / (n - 1) as f32
+        }
+    }
+
+    /// Admissible values adjacent to `value` (±1 index) — the edges of
+    /// GEIST's parameter graph along this axis.
+    pub fn neighbors(&self, value: i64) -> Vec<i64> {
+        let idx = match self.index_of(value) {
+            Some(i) => i,
+            None => return vec![],
+        };
+        let mut out = Vec::with_capacity(2);
+        if idx > 0 {
+            out.push(self.value_at(idx - 1));
+        }
+        if idx + 1 < self.count() {
+            out.push(self.value_at(idx + 1));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn range_counting() {
+        let p = ParamDef::range("procs", 2, 1085);
+        assert_eq!(p.count(), 1084);
+        assert_eq!(p.value_at(0), 2);
+        assert_eq!(p.value_at(1083), 1085);
+        assert_eq!(p.index_of(2), Some(0));
+        assert_eq!(p.index_of(1086), None);
+    }
+
+    #[test]
+    fn stepped_range() {
+        let p = ParamDef::range_step("io", 50, 400, 50);
+        assert_eq!(p.count(), 8);
+        assert_eq!(p.value_at(7), 400);
+        assert_eq!(p.index_of(150), Some(2));
+        assert_eq!(p.index_of(151), None);
+    }
+
+    #[test]
+    fn list_domain() {
+        let p = ParamDef::list("tpp", &[1, 2, 3, 4]);
+        assert_eq!(p.count(), 4);
+        assert_eq!(p.index_of(3), Some(2));
+        assert_eq!(p.min(), 1);
+        assert_eq!(p.max(), 4);
+    }
+
+    #[test]
+    fn normalize_bounds() {
+        let p = ParamDef::range("x", 10, 20);
+        assert_eq!(p.normalize(10), 0.0);
+        assert_eq!(p.normalize(20), 1.0);
+        let single = ParamDef::list("one", &[7]);
+        assert_eq!(single.normalize(7), 0.0);
+    }
+
+    #[test]
+    fn neighbors_at_edges() {
+        let p = ParamDef::range_step("io", 50, 400, 50);
+        assert_eq!(p.neighbors(50), vec![100]);
+        assert_eq!(p.neighbors(400), vec![350]);
+        assert_eq!(p.neighbors(200), vec![150, 250]);
+        assert!(p.neighbors(123).is_empty());
+    }
+
+    #[test]
+    fn sampling_is_admissible() {
+        let p = ParamDef::range_step("io", 50, 400, 50);
+        let mut rng = Pcg32::new(1, 1);
+        for _ in 0..200 {
+            let v = p.sample(&mut rng);
+            assert!(p.index_of(v).is_some());
+        }
+    }
+}

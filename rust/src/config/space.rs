@@ -1,0 +1,306 @@
+//! Component and workflow configuration spaces, and the feature
+//! encodings consumed by the surrogate models and the AOT artifacts.
+
+use super::param::ParamDef;
+use crate::util::rng::Pcg32;
+
+/// Feature-vector width baked into the AOT artifacts
+/// (`python/compile/kernels/gbt_predict.py::F_MAX`). Every Table 1 view
+/// (whole workflow or single component) has <= 8 parameters.
+pub const F_MAX: usize = 8;
+
+/// A concrete joint configuration: one value per workflow parameter, in
+/// spec order (all components concatenated).
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct Config(pub Vec<i64>);
+
+impl Config {
+    pub fn values(&self) -> &[i64] {
+        &self.0
+    }
+}
+
+impl std::fmt::Display for Config {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "(")?;
+        for (i, v) in self.0.iter().enumerate() {
+            if i > 0 {
+                write!(f, ", ")?;
+            }
+            write!(f, "{v}")?;
+        }
+        write!(f, ")")
+    }
+}
+
+/// One component application's configurable view.
+#[derive(Clone, Debug)]
+pub struct ComponentSpec {
+    pub name: String,
+    pub params: Vec<ParamDef>,
+}
+
+impl ComponentSpec {
+    pub fn new(name: &str, params: Vec<ParamDef>) -> Self {
+        assert!(
+            params.len() <= F_MAX,
+            "{name}: {} params exceed F_MAX={F_MAX}",
+            params.len()
+        );
+        ComponentSpec {
+            name: name.to_string(),
+            params,
+        }
+    }
+
+    /// Size of this component's own configuration space.
+    pub fn space_size(&self) -> u64 {
+        self.params.iter().map(|p| p.count()).product::<u64>().max(1)
+    }
+
+    /// Whether this component exposes tunable parameters at all
+    /// (G-Plot / P-Plot in GP do not).
+    pub fn is_configurable(&self) -> bool {
+        !self.params.is_empty()
+    }
+
+    /// Sample a component-local configuration.
+    pub fn sample(&self, rng: &mut Pcg32) -> Vec<i64> {
+        self.params.iter().map(|p| p.sample(rng)).collect()
+    }
+
+    /// Normalize a component-local configuration into an F_MAX-wide
+    /// padded feature vector.
+    pub fn encode(&self, values: &[i64]) -> [f32; F_MAX] {
+        assert_eq!(values.len(), self.params.len(), "{}: arity", self.name);
+        let mut out = [0.0f32; F_MAX];
+        for (i, (p, &v)) in self.params.iter().zip(values).enumerate() {
+            out[i] = p.normalize(v);
+        }
+        out
+    }
+}
+
+/// A workflow: ordered components whose parameter lists concatenate into
+/// the joint configuration vector.
+#[derive(Clone, Debug)]
+pub struct WorkflowSpec {
+    pub name: String,
+    pub components: Vec<ComponentSpec>,
+}
+
+impl WorkflowSpec {
+    pub fn new(name: &str, components: Vec<ComponentSpec>) -> Self {
+        let total: usize = components.iter().map(|c| c.params.len()).sum();
+        assert!(
+            total <= F_MAX,
+            "{name}: joint parameter count {total} exceeds F_MAX={F_MAX}"
+        );
+        WorkflowSpec {
+            name: name.to_string(),
+            components,
+        }
+    }
+
+    /// All parameters, flattened in component order.
+    pub fn params(&self) -> Vec<&ParamDef> {
+        self.components.iter().flat_map(|c| &c.params).collect()
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.components.iter().map(|c| c.params.len()).sum()
+    }
+
+    /// Joint configuration-space size (Table 1 caption numbers).
+    pub fn space_size(&self) -> u64 {
+        self.components.iter().map(|c| c.space_size()).product()
+    }
+
+    /// Indices of configurable components.
+    pub fn configurable(&self) -> Vec<usize> {
+        self.components
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| c.is_configurable())
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Start offset of component `j`'s parameters in the joint vector.
+    pub fn component_offset(&self, j: usize) -> usize {
+        self.components[..j].iter().map(|c| c.params.len()).sum()
+    }
+
+    /// Component `j`'s slice of a joint configuration.
+    pub fn component_slice<'a>(&self, cfg: &'a Config, j: usize) -> &'a [i64] {
+        let off = self.component_offset(j);
+        &cfg.0[off..off + self.components[j].params.len()]
+    }
+
+    /// Uniform random joint configuration (no feasibility filter).
+    pub fn sample(&self, rng: &mut Pcg32) -> Config {
+        Config(
+            self.components
+                .iter()
+                .flat_map(|c| c.sample(rng))
+                .collect(),
+        )
+    }
+
+    /// Rejection-sample a configuration satisfying `feasible` (the
+    /// paper's pools contain only runnable <= 32-node configs).
+    /// Panics after `max_tries` rejections — a sign the filter is
+    /// inconsistent with the space.
+    pub fn sample_feasible(
+        &self,
+        rng: &mut Pcg32,
+        feasible: &dyn Fn(&Config) -> bool,
+        max_tries: usize,
+    ) -> Config {
+        for _ in 0..max_tries {
+            let c = self.sample(rng);
+            if feasible(&c) {
+                return c;
+            }
+        }
+        panic!(
+            "{}: no feasible configuration found in {max_tries} draws",
+            self.name
+        );
+    }
+
+    /// Validate that every value in `cfg` is admissible.
+    pub fn validate(&self, cfg: &Config) -> Result<(), String> {
+        let params = self.params();
+        if cfg.0.len() != params.len() {
+            return Err(format!(
+                "{}: config arity {} != {}",
+                self.name,
+                cfg.0.len(),
+                params.len()
+            ));
+        }
+        for (p, &v) in params.iter().zip(&cfg.0) {
+            if p.index_of(v).is_none() {
+                return Err(format!("{}: {}={} not admissible", self.name, p.name, v));
+            }
+        }
+        Ok(())
+    }
+
+    /// Whole-workflow feature encoding: all params normalized, padded to
+    /// F_MAX (the high-fidelity model's view).
+    pub fn encode_workflow(&self, cfg: &Config) -> [f32; F_MAX] {
+        let mut out = [0.0f32; F_MAX];
+        for (i, (p, &v)) in self.params().iter().zip(&cfg.0).enumerate() {
+            out[i] = p.normalize(v);
+        }
+        out
+    }
+
+    /// Component `j`'s feature encoding of a joint configuration.
+    pub fn encode_component(&self, cfg: &Config, j: usize) -> [f32; F_MAX] {
+        self.components[j].encode(self.component_slice(cfg, j))
+    }
+
+    /// All joint configurations that differ from `cfg` by one step of
+    /// one parameter — GEIST's parameter-graph edges.
+    pub fn neighbors(&self, cfg: &Config) -> Vec<Config> {
+        let params = self.params();
+        let mut out = Vec::new();
+        for (i, p) in params.iter().enumerate() {
+            for nv in p.neighbors(cfg.0[i]) {
+                let mut c = cfg.0.clone();
+                c[i] = nv;
+                out.push(Config(c));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::param::ParamDef;
+
+    fn toy_spec() -> WorkflowSpec {
+        WorkflowSpec::new(
+            "toy",
+            vec![
+                ComponentSpec::new(
+                    "simu",
+                    vec![ParamDef::range("p", 1, 4), ParamDef::list("t", &[1, 2, 4])],
+                ),
+                ComponentSpec::new("anal", vec![ParamDef::range("q", 1, 5)]),
+                ComponentSpec::new("plot", vec![]),
+            ],
+        )
+    }
+
+    #[test]
+    fn sizes_and_offsets() {
+        let s = toy_spec();
+        assert_eq!(s.space_size(), 4 * 3 * 5);
+        assert_eq!(s.n_params(), 3);
+        assert_eq!(s.component_offset(0), 0);
+        assert_eq!(s.component_offset(1), 2);
+        assert_eq!(s.component_offset(2), 3);
+        assert_eq!(s.configurable(), vec![0, 1]);
+    }
+
+    #[test]
+    fn slices_and_encoding() {
+        let s = toy_spec();
+        let c = Config(vec![2, 4, 3]);
+        assert_eq!(s.component_slice(&c, 0), &[2, 4]);
+        assert_eq!(s.component_slice(&c, 1), &[3]);
+        let enc = s.encode_workflow(&c);
+        assert!((enc[0] - 1.0 / 3.0).abs() < 1e-6);
+        assert_eq!(enc[1], 1.0); // t=4 is index 2 of 3
+        assert_eq!(enc[2], 0.5);
+        assert_eq!(enc[3], 0.0); // padding
+        let enc1 = s.encode_component(&c, 1);
+        assert_eq!(enc1[0], 0.5);
+        assert_eq!(enc1[1], 0.0);
+    }
+
+    #[test]
+    fn validation() {
+        let s = toy_spec();
+        assert!(s.validate(&Config(vec![2, 4, 3])).is_ok());
+        assert!(s.validate(&Config(vec![2, 3, 3])).is_err()); // t=3 not in list
+        assert!(s.validate(&Config(vec![2, 4])).is_err()); // arity
+    }
+
+    #[test]
+    fn sampling_feasible() {
+        let s = toy_spec();
+        let mut rng = Pcg32::new(2, 2);
+        let c = s.sample_feasible(&mut rng, &|c: &Config| c.0[0] >= 3, 1000);
+        assert!(c.0[0] >= 3);
+        assert!(s.validate(&c).is_ok());
+    }
+
+    #[test]
+    #[should_panic(expected = "no feasible configuration")]
+    fn infeasible_filter_panics() {
+        let s = toy_spec();
+        let mut rng = Pcg32::new(2, 2);
+        s.sample_feasible(&mut rng, &|_| false, 50);
+    }
+
+    #[test]
+    fn neighbors_change_one_param() {
+        let s = toy_spec();
+        let c = Config(vec![2, 2, 1]);
+        let ns = s.neighbors(&c);
+        // p: 1,3; t: 1,4; q: 2 -> 5 neighbors
+        assert_eq!(ns.len(), 5);
+        for n in &ns {
+            let diff = n.0.iter().zip(&c.0).filter(|(a, b)| a != b).count();
+            assert_eq!(diff, 1);
+            assert!(s.validate(n).is_ok());
+        }
+    }
+}

@@ -1,0 +1,198 @@
+//! The paper's three workflows (Table 1): LV, HS and GP parameter
+//! spaces, exactly as published.
+//!
+//! | Wf | Component   | Parameters                                        |
+//! |----|-------------|---------------------------------------------------|
+//! | LV | LAMMPS      | procs 2..1085, ppn 1..35, tpp 1..4, io 50..400/50 |
+//! |    | Voro++      | procs 2..1085, ppn 1..35, tpp 1..4                |
+//! | HS | HeatTransfer| px 2..32, py 2..32, ppn 1..35, writes 4..32/4,    |
+//! |    |             | buffer 1..40 MB                                   |
+//! |    | StageWrite  | procs 2..1085, ppn 1..35                          |
+//! | GP | GrayScott   | procs 2..1085, ppn 1..35                          |
+//! |    | PDFcalc     | procs 1..512, ppn 1..35                           |
+//! |    | G-Plot      | (fixed, 1 proc)                                   |
+//! |    | P-Plot      | (fixed, 1 proc)                                   |
+
+use super::param::ParamDef;
+use super::space::{ComponentSpec, WorkflowSpec};
+
+/// Workflow identifier used across the experiment harness.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum WorkflowId {
+    Lv,
+    Hs,
+    Gp,
+}
+
+impl WorkflowId {
+    pub const ALL: [WorkflowId; 3] = [WorkflowId::Lv, WorkflowId::Hs, WorkflowId::Gp];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            WorkflowId::Lv => "LV",
+            WorkflowId::Hs => "HS",
+            WorkflowId::Gp => "GP",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<WorkflowId> {
+        match name.to_ascii_uppercase().as_str() {
+            "LV" => Some(WorkflowId::Lv),
+            "HS" => Some(WorkflowId::Hs),
+            "GP" => Some(WorkflowId::Gp),
+            _ => None,
+        }
+    }
+
+    pub fn spec(&self) -> WorkflowSpec {
+        match self {
+            WorkflowId::Lv => lv_spec(),
+            WorkflowId::Hs => hs_spec(),
+            WorkflowId::Gp => gp_spec(),
+        }
+    }
+}
+
+impl std::fmt::Display for WorkflowId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// LV: LAMMPS molecular dynamics + Voro++ tesselation via staging.
+pub fn lv_spec() -> WorkflowSpec {
+    WorkflowSpec::new(
+        "LV",
+        vec![
+            ComponentSpec::new(
+                "LAMMPS",
+                vec![
+                    ParamDef::range("procs", 2, 1085),
+                    ParamDef::range("ppn", 1, 35),
+                    ParamDef::range("tpp", 1, 4),
+                    ParamDef::range_step("io_steps", 50, 400, 50),
+                ],
+            ),
+            ComponentSpec::new(
+                "Voro++",
+                vec![
+                    ParamDef::range("procs", 2, 1085),
+                    ParamDef::range("ppn", 1, 35),
+                    ParamDef::range("tpp", 1, 4),
+                ],
+            ),
+        ],
+    )
+}
+
+/// HS: Heat Transfer mini-app + Stage Write I/O forwarder.
+pub fn hs_spec() -> WorkflowSpec {
+    WorkflowSpec::new(
+        "HS",
+        vec![
+            ComponentSpec::new(
+                "HeatTransfer",
+                vec![
+                    ParamDef::range("px", 2, 32),
+                    ParamDef::range("py", 2, 32),
+                    ParamDef::range("ppn", 1, 35),
+                    ParamDef::range_step("io_writes", 4, 32, 4),
+                    ParamDef::range("buffer_mb", 1, 40),
+                ],
+            ),
+            ComponentSpec::new(
+                "StageWrite",
+                vec![ParamDef::range("procs", 2, 1085), ParamDef::range("ppn", 1, 35)],
+            ),
+        ],
+    )
+}
+
+/// GP: Gray-Scott reaction-diffusion + PDF calculator + two fixed
+/// single-process plotters.
+pub fn gp_spec() -> WorkflowSpec {
+    WorkflowSpec::new(
+        "GP",
+        vec![
+            ComponentSpec::new(
+                "GrayScott",
+                vec![ParamDef::range("procs", 2, 1085), ParamDef::range("ppn", 1, 35)],
+            ),
+            ComponentSpec::new(
+                "PDFcalc",
+                vec![ParamDef::range("procs", 1, 512), ParamDef::range("ppn", 1, 35)],
+            ),
+            ComponentSpec::new("G-Plot", vec![]),
+            ComponentSpec::new("P-Plot", vec![]),
+        ],
+    )
+}
+
+/// Look up a spec by its paper name (LV / HS / GP).
+pub fn spec_by_name(name: &str) -> Option<WorkflowSpec> {
+    WorkflowId::from_name(name).map(|id| id.spec())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lv_space_size_order_of_magnitude() {
+        // Paper: 2.3e10 joint (LAMMPS 6.1e5, Voro 7.6e4). Our literal
+        // Table 1 reading gives the same order of magnitude.
+        let s = lv_spec();
+        let lammps = s.components[0].space_size() as f64;
+        let voro = s.components[1].space_size() as f64;
+        assert!(lammps > 1e5 && lammps < 2e6, "LAMMPS {lammps}");
+        assert!(voro > 5e4 && voro < 5e5, "Voro {voro}");
+        let joint = s.space_size() as f64;
+        assert!(joint > 1e10 && joint < 1e12, "joint {joint}");
+    }
+
+    #[test]
+    fn hs_space_size() {
+        let s = hs_spec();
+        let heat = s.components[0].space_size() as f64;
+        assert!(heat > 1e6 && heat < 2e7, "Heat {heat}"); // paper 5.4e6
+        let stage = s.components[1].space_size() as f64;
+        assert!(stage > 1e4 && stage < 1e5, "Stage {stage}"); // paper 1.9e4
+    }
+
+    #[test]
+    fn gp_space_and_configurables() {
+        let s = gp_spec();
+        assert_eq!(s.configurable(), vec![0, 1]);
+        let gs = s.components[0].space_size() as f64;
+        let pdf = s.components[1].space_size() as f64;
+        assert!(gs > 1e4 && gs < 1e5); // paper 1.9e4 (procs*ppn = 37940)
+        assert!(pdf > 9e3 && pdf < 2e4); // paper 9.0e3
+        assert_eq!(s.components[2].space_size(), 1);
+        // joint ~ 8.5e7 in the paper (feasible counting); literal product:
+        let joint = s.space_size() as f64;
+        assert!(joint > 1e8 && joint < 1e10, "joint {joint}");
+    }
+
+    #[test]
+    fn expert_configs_are_admissible() {
+        // Table 2 expert rows must validate against our spaces.
+        use crate::config::space::Config;
+        let lv = lv_spec();
+        assert!(lv
+            .validate(&Config(vec![288, 18, 2, 400, 288, 18, 2]))
+            .is_ok());
+        let hs = hs_spec();
+        assert!(hs.validate(&Config(vec![32, 17, 34, 4, 20, 560, 35])).is_ok());
+        let gp = gp_spec();
+        assert!(gp.validate(&Config(vec![35, 35, 35, 35])).is_ok());
+    }
+
+    #[test]
+    fn names_roundtrip() {
+        for id in WorkflowId::ALL {
+            assert_eq!(WorkflowId::from_name(id.name()), Some(id));
+        }
+        assert_eq!(WorkflowId::from_name("lv"), Some(WorkflowId::Lv));
+        assert_eq!(WorkflowId::from_name("zz"), None);
+    }
+}

@@ -1,0 +1,398 @@
+//! Campaign runner: repeated tuning runs of one algorithm on one
+//! (workflow, objective, budget) cell, with the paper's metrics
+//! aggregated over repetitions (§7.3 runs each algorithm 100 times and
+//! reports averages).
+
+use std::sync::Arc;
+
+use crate::config::WorkflowId;
+use crate::metrics::{least_number_of_uses, mdape, mdape_top_fraction, recall_score};
+use crate::sim::Objective;
+use crate::surrogate::Scorer;
+use crate::tuner::{
+    ActiveLearning, Alph, Ceal, CealParams, Pool, Problem, RandomSampling, Tuner, TunerOutput,
+};
+use crate::util::rng::Pcg32;
+use crate::util::stats;
+
+use super::expert::expert_config;
+use super::history::{historical_samples, HIST_SAMPLES};
+
+/// Algorithm selector (the paper's comparison set).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Algo {
+    Rs,
+    Al,
+    Geist,
+    Ceal,
+    /// CEAL with free historical component measurements (§7.5).
+    CealHist,
+    Alph,
+    /// ALpH with historical component measurements (§7.5.2).
+    AlphHist,
+}
+
+impl Algo {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algo::Rs => "RS",
+            Algo::Al => "AL",
+            Algo::Geist => "GEIST",
+            Algo::Ceal => "CEAL",
+            Algo::CealHist => "CEAL+hist",
+            Algo::Alph => "ALpH",
+            Algo::AlphHist => "ALpH+hist",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<Algo> {
+        match name.to_ascii_lowercase().as_str() {
+            "rs" => Some(Algo::Rs),
+            "al" => Some(Algo::Al),
+            "geist" => Some(Algo::Geist),
+            "ceal" => Some(Algo::Ceal),
+            "ceal+hist" | "ceal_hist" => Some(Algo::CealHist),
+            "alph" => Some(Algo::Alph),
+            "alph+hist" | "alph_hist" => Some(Algo::AlphHist),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for Algo {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Which scoring backend campaign workers use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScorerKind {
+    Native,
+    /// Load the AOT artifacts in each worker thread.
+    Pjrt,
+}
+
+impl ScorerKind {
+    pub fn build(&self) -> Scorer {
+        match self {
+            ScorerKind::Native => Scorer::Native,
+            ScorerKind::Pjrt => Scorer::pjrt_or_native(),
+        }
+    }
+}
+
+/// One campaign cell.
+#[derive(Clone, Copy, Debug)]
+pub struct Campaign {
+    pub workflow: WorkflowId,
+    pub objective: Objective,
+    /// Training-sample budget m (workflow-run equivalents).
+    pub m: usize,
+    pub reps: usize,
+    pub seed: u64,
+    pub pool_size: usize,
+    pub scorer: ScorerKind,
+    /// Worker threads (1 = sequential).
+    pub threads: usize,
+    /// Override CEAL/ALpH hyper-parameters (Fig. 13 sweeps).
+    pub ceal_params: Option<CealParams>,
+}
+
+impl Campaign {
+    pub fn new(workflow: WorkflowId, objective: Objective, m: usize) -> Campaign {
+        Campaign {
+            workflow,
+            objective,
+            m,
+            reps: 40,
+            seed: 0xCEA1,
+            pool_size: crate::tuner::common::POOL_SIZE,
+            scorer: ScorerKind::Native,
+            threads: default_threads(),
+            ceal_params: None,
+        }
+    }
+
+    pub fn with_reps(mut self, reps: usize) -> Campaign {
+        self.reps = reps;
+        self
+    }
+
+    pub fn with_pool_size(mut self, n: usize) -> Campaign {
+        self.pool_size = n;
+        self
+    }
+
+    pub fn with_scorer(mut self, s: ScorerKind) -> Campaign {
+        self.scorer = s;
+        self
+    }
+
+    pub fn with_threads(mut self, t: usize) -> Campaign {
+        self.threads = t.max(1);
+        self
+    }
+
+    pub fn with_ceal_params(mut self, p: CealParams) -> Campaign {
+        self.ceal_params = Some(p);
+        self
+    }
+}
+
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(16)
+}
+
+/// Per-repetition metrics.
+#[derive(Clone, Debug)]
+pub struct RepResult {
+    /// Ground-truth objective value of the predicted-best config.
+    pub best_value: f64,
+    /// best_value normalized by the pool optimum (paper Figs. 5, 9, 10).
+    pub norm_best: f64,
+    /// Final-model recall at top-1..10 over the pool (Figs. 7, 11).
+    pub recalls: Vec<f64>,
+    /// Final-model MdAPE over all pool configs and the top 2% (Fig. 6).
+    pub mdape_all: f64,
+    pub mdape_top2: f64,
+    /// Collection cost (Σ objective over training runs, §7.2.3).
+    pub cost: f64,
+    pub workflow_runs: usize,
+}
+
+/// Aggregated campaign outcome.
+#[derive(Clone, Debug)]
+pub struct Aggregate {
+    pub algo: Algo,
+    pub campaign_m: usize,
+    pub workflow: WorkflowId,
+    pub objective: Objective,
+    pub reps: Vec<RepResult>,
+    /// Pool (test-set) optimum the normalized plots divide by.
+    pub pool_best: f64,
+    /// Ground-truth objective of the expert configuration.
+    pub expert_value: f64,
+}
+
+impl Aggregate {
+    pub fn mean_best(&self) -> f64 {
+        stats::mean(&self.reps.iter().map(|r| r.best_value).collect::<Vec<_>>())
+    }
+
+    pub fn mean_norm_best(&self) -> f64 {
+        stats::mean(&self.reps.iter().map(|r| r.norm_best).collect::<Vec<_>>())
+    }
+
+    pub fn mean_recall(&self, n: usize) -> f64 {
+        stats::mean(
+            &self
+                .reps
+                .iter()
+                .map(|r| r.recalls[n - 1])
+                .collect::<Vec<_>>(),
+        )
+    }
+
+    pub fn mean_mdape_all(&self) -> f64 {
+        stats::mean(&self.reps.iter().map(|r| r.mdape_all).collect::<Vec<_>>())
+    }
+
+    pub fn mean_mdape_top2(&self) -> f64 {
+        stats::mean(&self.reps.iter().map(|r| r.mdape_top2).collect::<Vec<_>>())
+    }
+
+    pub fn mean_cost(&self) -> f64 {
+        stats::mean(&self.reps.iter().map(|r| r.cost).collect::<Vec<_>>())
+    }
+
+    /// Least number of uses (§7.2.3) from mean cost and mean tuned value.
+    pub fn payoff_runs(&self) -> Option<f64> {
+        least_number_of_uses(self.mean_cost(), self.expert_value, self.mean_best())
+    }
+}
+
+/// Build the tuner for an algorithm (hist variants capture the shared
+/// historical samples).
+fn build_tuner(
+    algo: Algo,
+    prob: &Problem,
+    seed: u64,
+    ceal_params: Option<CealParams>,
+) -> Box<dyn Tuner> {
+    match algo {
+        Algo::Rs => Box::new(RandomSampling),
+        Algo::Al => Box::new(ActiveLearning::default()),
+        Algo::Geist => Box::new(crate::tuner::Geist::default()),
+        Algo::Ceal => Box::new(Ceal::new(ceal_params.unwrap_or(CealParams::no_hist()))),
+        Algo::CealHist => {
+            let hist = Arc::new(historical_samples(prob, HIST_SAMPLES, seed ^ 0x415));
+            Box::new(Ceal::with_historical(
+                ceal_params.unwrap_or(CealParams::with_hist()),
+                hist,
+            ))
+        }
+        Algo::Alph => Box::new(Alph::new(ceal_params.unwrap_or(CealParams::no_hist()))),
+        Algo::AlphHist => {
+            let hist = Arc::new(historical_samples(prob, HIST_SAMPLES, seed ^ 0x415));
+            Box::new(Alph::with_historical(
+                ceal_params.unwrap_or(CealParams::with_hist()),
+                hist,
+            ))
+        }
+    }
+}
+
+fn run_rep(
+    algo: Algo,
+    tuner: &dyn Tuner,
+    prob: &Problem,
+    pool: &Pool,
+    scorer: &Scorer,
+    c: &Campaign,
+    rep: usize,
+) -> RepResult {
+    let mut rng = Pcg32::new(c.seed ^ 0xDEED, (rep as u64) << 8 | algo_stream(algo));
+    let out: TunerOutput = tuner.run(prob, pool, scorer, c.m, &mut rng);
+    // models are log-space: exponentiate to real-scale time predictions
+    let preds = crate::tuner::common::predict_times(&out.model, &pool.feats.workflow, scorer);
+    let recalls: Vec<f64> = (1..=10)
+        .map(|n| recall_score(n, &preds, &pool.truth))
+        .collect();
+    RepResult {
+        best_value: pool.truth[out.best_idx],
+        norm_best: pool.truth[out.best_idx] / pool.best_value(),
+        recalls,
+        mdape_all: mdape(&pool.truth, &preds),
+        mdape_top2: mdape_top_fraction(&pool.truth, &preds, 0.02),
+        cost: out.collection_cost,
+        workflow_runs: out.workflow_runs,
+    }
+}
+
+fn algo_stream(algo: Algo) -> u64 {
+    match algo {
+        Algo::Rs => 1,
+        Algo::Al => 2,
+        Algo::Geist => 3,
+        Algo::Ceal => 4,
+        Algo::CealHist => 5,
+        Algo::Alph => 6,
+        Algo::AlphHist => 7,
+    }
+}
+
+/// Run one algorithm's campaign cell. The pool (the paper's measured
+/// test set) is deterministic in (workflow, objective, seed) and shared
+/// by every algorithm at the same cell.
+pub fn run_campaign(algo: Algo, c: &Campaign) -> Aggregate {
+    let prob = Problem::new(c.workflow, c.objective);
+    let pool = Pool::generate(&prob, c.pool_size, c.seed);
+    let expert_value = c
+        .objective
+        .value(&prob.sim.expected(&expert_config(c.workflow, c.objective)));
+
+    // one tuner per campaign: stateless across reps, and the hist
+    // variants cache their deterministic component models internally
+    let tuner = build_tuner(algo, &prob, c.seed, c.ceal_params);
+    let reps: Vec<RepResult> = if c.threads <= 1 {
+        let scorer = c.scorer.build();
+        (0..c.reps)
+            .map(|rep| run_rep(algo, tuner.as_ref(), &prob, &pool, &scorer, c, rep))
+            .collect()
+    } else {
+        run_reps_parallel(algo, tuner.as_ref(), &prob, &pool, c)
+    };
+
+    Aggregate {
+        algo,
+        campaign_m: c.m,
+        workflow: c.workflow,
+        objective: c.objective,
+        pool_best: pool.best_value(),
+        expert_value,
+        reps,
+    }
+}
+
+fn run_reps_parallel(
+    algo: Algo,
+    tuner: &dyn Tuner,
+    prob: &Problem,
+    pool: &Pool,
+    c: &Campaign,
+) -> Vec<RepResult> {
+    let n_workers = c.threads.min(c.reps.max(1));
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let results: Vec<std::sync::Mutex<Option<RepResult>>> =
+        (0..c.reps).map(|_| std::sync::Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..n_workers {
+            scope.spawn(|| {
+                // one scorer per worker (a PJRT client is thread-local)
+                let scorer = c.scorer.build();
+                loop {
+                    let rep = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    if rep >= c.reps {
+                        break;
+                    }
+                    let r = run_rep(algo, tuner, prob, pool, &scorer, c, rep);
+                    *results[rep].lock().unwrap() = Some(r);
+                }
+            });
+        }
+    });
+    results
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("rep completed"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_campaign(algo: Algo) -> Aggregate {
+        let c = Campaign::new(WorkflowId::Lv, Objective::CompTime, 20)
+            .with_reps(3)
+            .with_pool_size(120)
+            .with_threads(1);
+        run_campaign(algo, &c)
+    }
+
+    #[test]
+    fn campaign_produces_metrics() {
+        let agg = tiny_campaign(Algo::Rs);
+        assert_eq!(agg.reps.len(), 3);
+        assert!(agg.mean_best() >= agg.pool_best);
+        assert!(agg.mean_norm_best() >= 1.0);
+        assert!(agg.mean_recall(1) >= 0.0 && agg.mean_recall(1) <= 1.0);
+        assert!(agg.mean_mdape_all() >= 0.0);
+        assert!(agg.expert_value > 0.0);
+    }
+
+    #[test]
+    fn parallel_equals_sequential() {
+        let base = Campaign::new(WorkflowId::Hs, Objective::ExecTime, 15)
+            .with_reps(4)
+            .with_pool_size(100);
+        let seq = run_campaign(Algo::Ceal, &base.with_threads(1));
+        let par = run_campaign(Algo::Ceal, &base.with_threads(4));
+        for (a, b) in seq.reps.iter().zip(&par.reps) {
+            assert_eq!(a.best_value, b.best_value, "reps must be thread-count invariant");
+            assert_eq!(a.workflow_runs, b.workflow_runs);
+        }
+    }
+
+    #[test]
+    fn all_algorithms_run() {
+        for algo in [Algo::Al, Algo::Geist, Algo::Ceal, Algo::CealHist, Algo::Alph] {
+            let agg = tiny_campaign(algo);
+            assert_eq!(agg.reps.len(), 3, "{algo}");
+            assert!(agg.mean_cost() > 0.0, "{algo}");
+        }
+    }
+}

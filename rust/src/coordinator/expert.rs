@@ -1,0 +1,46 @@
+//! Expert-recommended configurations (paper Table 2) — the baseline the
+//! least-number-of-uses metric measures improvement against.
+
+use crate::config::{Config, WorkflowId};
+use crate::sim::Objective;
+
+/// The Table 2 expert recommendation for (workflow, objective).
+pub fn expert_config(id: WorkflowId, objective: Objective) -> Config {
+    match (id, objective) {
+        (WorkflowId::Lv, Objective::ExecTime) => {
+            Config(vec![288, 18, 2, 400, 288, 18, 2])
+        }
+        (WorkflowId::Lv, Objective::CompTime) => Config(vec![18, 18, 2, 400, 18, 18, 2]),
+        (WorkflowId::Hs, Objective::ExecTime) => {
+            Config(vec![32, 17, 34, 4, 20, 560, 35])
+        }
+        (WorkflowId::Hs, Objective::CompTime) => Config(vec![8, 4, 32, 4, 20, 35, 35]),
+        // Table 2 lists PDF procs = 525, but Table 1 bounds the PDF
+        // calculator at 512 processes — we clamp to the space.
+        (WorkflowId::Gp, Objective::ExecTime) => Config(vec![525, 35, 512, 35]),
+        (WorkflowId::Gp, Objective::CompTime) => Config(vec![35, 35, 35, 35]),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tuner::Problem;
+
+    #[test]
+    fn expert_configs_valid_and_feasible() {
+        for id in WorkflowId::ALL {
+            for obj in Objective::ALL {
+                let prob = Problem::new(id, obj);
+                let cfg = expert_config(id, obj);
+                assert!(
+                    prob.sim.spec.validate(&cfg).is_ok(),
+                    "{id}/{obj}: {cfg} invalid"
+                );
+                assert!(prob.sim.feasible(&cfg), "{id}/{obj}: {cfg} infeasible");
+                let m = prob.sim.expected(&cfg);
+                assert!(obj.value(&m) > 0.0);
+            }
+        }
+    }
+}

@@ -1,0 +1,59 @@
+//! Historical component measurements (paper §7.1): 500 random
+//! configurations per configurable component, measured in isolation.
+//! When an auto-tuner is given these, they are treated as free — the
+//! paper's "component reuse across workflows" scenario (§7.5).
+
+use crate::surrogate::lowfi::ComponentSamples;
+use crate::tuner::Problem;
+use crate::util::rng::Pcg32;
+
+/// Paper's historical sample count per component.
+pub const HIST_SAMPLES: usize = 500;
+
+/// Generate `n` isolated measurements per configurable component,
+/// deterministically in (problem, seed).
+pub fn historical_samples(prob: &Problem, n: usize, seed: u64) -> Vec<ComponentSamples> {
+    let spec = &prob.sim.spec;
+    let mut out = Vec::new();
+    for &comp in &spec.configurable() {
+        let mut rng = Pcg32::new(seed, 0xA15C + comp as u64);
+        let cs = &spec.components[comp];
+        let mut samples = ComponentSamples::default();
+        for _ in 0..n {
+            // historical runs happened on the same <=32-node testbed
+            let cfg = prob.sim.sample_component_feasible(comp, &mut rng);
+            let m = prob.sim.run_component(comp, &cfg, &mut rng);
+            samples.push(cs.encode(&cfg), prob.objective.value(&m));
+        }
+        out.push(samples);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::WorkflowId;
+    use crate::sim::Objective;
+
+    #[test]
+    fn generates_per_component() {
+        let prob = Problem::new(WorkflowId::Gp, Objective::ExecTime);
+        let h = historical_samples(&prob, 30, 1);
+        assert_eq!(h.len(), 2); // GS + PDF configurable
+        for s in &h {
+            assert_eq!(s.len(), 30);
+            assert!(s.y.iter().all(|&y| y > 0.0));
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let prob = Problem::new(WorkflowId::Lv, Objective::CompTime);
+        let a = historical_samples(&prob, 10, 5);
+        let b = historical_samples(&prob, 10, 5);
+        assert_eq!(a[0].y, b[0].y);
+        let c = historical_samples(&prob, 10, 6);
+        assert_ne!(a[0].y, c[0].y);
+    }
+}

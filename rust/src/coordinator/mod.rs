@@ -1,0 +1,11 @@
+//! Campaign coordination: run (algorithm × workflow × objective ×
+//! budget) grids with repetitions, aggregate the paper's metrics, and
+//! manage expert baselines and historical component measurements.
+
+pub mod campaign;
+pub mod expert;
+pub mod history;
+
+pub use campaign::{run_campaign, Aggregate, Algo, Campaign, RepResult, ScorerKind};
+pub use expert::expert_config;
+pub use history::historical_samples;

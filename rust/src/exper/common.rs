@@ -1,0 +1,110 @@
+//! Shared experiment-harness context and helpers.
+
+use std::path::{Path, PathBuf};
+
+use crate::config::WorkflowId;
+use crate::coordinator::{run_campaign, Aggregate, Algo, Campaign, ScorerKind};
+use crate::sim::Objective;
+use crate::tuner::CealParams;
+use crate::util::csv::CsvWriter;
+
+/// Experiment configuration (CLI-controlled).
+#[derive(Clone, Debug)]
+pub struct ExpCtx {
+    pub out_dir: PathBuf,
+    /// Repetitions per campaign cell (paper: 100).
+    pub reps: usize,
+    /// Pool size (paper: 2000).
+    pub pool_size: usize,
+    pub seed: u64,
+    pub threads: usize,
+    pub scorer: ScorerKind,
+}
+
+impl Default for ExpCtx {
+    fn default() -> Self {
+        ExpCtx {
+            out_dir: PathBuf::from("results"),
+            reps: 40,
+            pool_size: crate::tuner::common::POOL_SIZE,
+            seed: 0xCEA1,
+            threads: crate::coordinator::campaign::default_threads(),
+            scorer: ScorerKind::Native,
+        }
+    }
+}
+
+impl ExpCtx {
+    /// Budgets plotted per objective (paper Fig. 5: m doubled from 25;
+    /// the two largest shown are 50/100 for exec and 25/50 for comp).
+    pub fn budgets(&self, objective: Objective) -> [usize; 2] {
+        match objective {
+            Objective::ExecTime => [50, 100],
+            Objective::CompTime => [25, 50],
+        }
+    }
+
+    /// Build a campaign for a cell.
+    pub fn campaign(&self, wf: WorkflowId, obj: Objective, m: usize) -> Campaign {
+        Campaign::new(wf, obj, m)
+            .with_reps(self.reps)
+            .with_pool_size(self.pool_size)
+            .with_scorer(self.scorer)
+            .with_threads(self.threads)
+    }
+
+    /// Run one (algo, workflow, objective, m) cell.
+    pub fn run_cell(&self, algo: Algo, wf: WorkflowId, obj: Objective, m: usize) -> Aggregate {
+        run_campaign(algo, &self.campaign(wf, obj, m))
+    }
+
+    /// Run a cell with overridden CEAL hyper-parameters (Fig. 13).
+    pub fn run_cell_params(
+        &self,
+        algo: Algo,
+        wf: WorkflowId,
+        obj: Objective,
+        m: usize,
+        params: CealParams,
+    ) -> Aggregate {
+        run_campaign(algo, &self.campaign(wf, obj, m).with_ceal_params(params))
+    }
+
+    /// Write a CSV into the output directory.
+    pub fn save_csv(&self, name: &str, csv: &CsvWriter) {
+        let path: &Path = &self.out_dir.join(name);
+        csv.save(path)
+            .unwrap_or_else(|e| panic!("writing {}: {e}", path.display()));
+        println!("  -> wrote {}", path.display());
+    }
+}
+
+/// Header banner for an experiment.
+pub fn banner(title: &str, paper_ref: &str) {
+    println!();
+    println!("==== {title} ====");
+    println!("     (reproduces {paper_ref})");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budgets_per_objective() {
+        let ctx = ExpCtx::default();
+        assert_eq!(ctx.budgets(Objective::ExecTime), [50, 100]);
+        assert_eq!(ctx.budgets(Objective::CompTime), [25, 50]);
+    }
+
+    #[test]
+    fn campaign_carries_ctx() {
+        let mut ctx = ExpCtx::default();
+        ctx.reps = 3;
+        ctx.pool_size = 99;
+        let c = ctx.campaign(WorkflowId::Lv, Objective::ExecTime, 25);
+        assert_eq!(c.reps, 3);
+        assert_eq!(c.pool_size, 99);
+        assert_eq!(c.m, 25);
+    }
+}

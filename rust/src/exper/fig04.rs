@@ -1,0 +1,75 @@
+//! Fig. 4: recall of the *low-fidelity* models (Eqns 1-2) when scoring
+//! 500 random LV configurations, vs random selection.
+
+use crate::config::WorkflowId;
+use crate::coordinator::historical_samples;
+use crate::metrics::recall_score;
+use crate::sim::Objective;
+use crate::surrogate::LowFiModel;
+use crate::tuner::ceal::gbt_params_for;
+use crate::tuner::{Pool, Problem};
+use crate::util::csv::CsvWriter;
+use crate::util::table::{fnum, Table};
+
+use super::common::{banner, ExpCtx};
+
+/// Test-set size used by the paper's Fig. 4.
+pub const FIG4_POOL: usize = 500;
+pub const TOP_NS: [usize; 5] = [5, 10, 15, 20, 25];
+
+pub struct Fig4Row {
+    pub objective: Objective,
+    pub n: usize,
+    pub lowfi_recall: f64,
+    pub random_recall: f64,
+}
+
+pub fn compute(ctx: &ExpCtx) -> Vec<Fig4Row> {
+    let scorer = ctx.scorer.build();
+    let mut out = Vec::new();
+    for obj in Objective::ALL {
+        let prob = Problem::new(WorkflowId::Lv, obj);
+        let pool = Pool::generate(&prob, FIG4_POOL, ctx.seed ^ 0xF14);
+        let hist = historical_samples(&prob, 500, ctx.seed ^ 0x415);
+        let n_feats = prob.n_component_features();
+        let lf = LowFiModel::fit(&hist, &n_feats, obj, &gbt_params_for(500));
+        let scores = lf.score(&pool.feats, &scorer);
+        for n in TOP_NS {
+            out.push(Fig4Row {
+                objective: obj,
+                n,
+                lowfi_recall: recall_score(n, &scores, &pool.truth),
+                // expected recall of uniformly random ranking
+                random_recall: n as f64 / pool.len() as f64,
+            });
+        }
+    }
+    out
+}
+
+pub fn run(ctx: &ExpCtx) {
+    banner(
+        "Figure 4 — low-fidelity model recall on LV",
+        "paper Fig. 4: recall > 30% for top 5..25, far above random",
+    );
+    let rows = compute(ctx);
+    let mut t = Table::new(&["objective", "top-n", "low-fi recall", "random recall"])
+        .align_left(&[0]);
+    let mut csv = CsvWriter::new(&["objective", "n", "lowfi_recall", "random_recall"]);
+    for r in &rows {
+        t.row(&[
+            r.objective.name().into(),
+            r.n.to_string(),
+            fnum(r.lowfi_recall * 100.0, 1) + "%",
+            fnum(r.random_recall * 100.0, 1) + "%",
+        ]);
+        csv.row(&[
+            r.objective.name().into(),
+            r.n.to_string(),
+            format!("{}", r.lowfi_recall),
+            format!("{}", r.random_recall),
+        ]);
+    }
+    print!("{}", t.render());
+    ctx.save_csv("fig04.csv", &csv);
+}

@@ -1,0 +1,56 @@
+//! Fig. 6: prediction accuracy (MdAPE) of the final surrogate models of
+//! RS / AL / CEAL over all pool configurations and over the top 2% —
+//! the mechanism behind CEAL's wins (§7.4.2): comparable error overall,
+//! much lower error on the top configurations.
+
+use crate::config::WorkflowId;
+use crate::coordinator::Algo;
+use crate::sim::Objective;
+use crate::util::csv::CsvWriter;
+use crate::util::table::{fnum, Table};
+
+use super::common::{banner, ExpCtx};
+
+pub const ALGOS: [Algo; 3] = [Algo::Rs, Algo::Al, Algo::Ceal];
+
+pub fn run(ctx: &ExpCtx) {
+    banner(
+        "Figure 6 — model MdAPE: all configs vs top 2%",
+        "paper Fig. 6 / §7.4.2: CEAL much more accurate on the top 2%",
+    );
+    let mut csv = CsvWriter::new(&[
+        "workflow",
+        "objective",
+        "m",
+        "algo",
+        "mdape_all",
+        "mdape_top2",
+    ]);
+    for obj in Objective::ALL {
+        let m = ctx.budgets(obj)[1]; // the largest budget plotted
+        let mut t = Table::new(&[
+            "workflow", "RS all", "RS top2%", "AL all", "AL top2%", "CEAL all", "CEAL top2%",
+        ])
+        .align_left(&[0]);
+        println!("-- objective={} m={m} (MdAPE, lower is better)", obj.name());
+        for wf in WorkflowId::ALL {
+            let mut cells = vec![wf.name().to_string()];
+            for algo in ALGOS {
+                let agg = ctx.run_cell(algo, wf, obj, m);
+                cells.push(fnum(agg.mean_mdape_all() * 100.0, 1) + "%");
+                cells.push(fnum(agg.mean_mdape_top2() * 100.0, 1) + "%");
+                csv.row(&[
+                    wf.name().into(),
+                    obj.name().into(),
+                    m.to_string(),
+                    algo.name().into(),
+                    format!("{}", agg.mean_mdape_all()),
+                    format!("{}", agg.mean_mdape_top2()),
+                ]);
+            }
+            t.row(&cells);
+        }
+        print!("{}", t.render());
+    }
+    ctx.save_csv("fig06.csv", &csv);
+}

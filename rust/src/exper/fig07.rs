@@ -1,0 +1,49 @@
+//! Fig. 7: robustness without historical measurements — recall of the
+//! final models at top-1..10 for RS / GEIST / AL / CEAL.
+
+use crate::config::WorkflowId;
+
+use crate::sim::Objective;
+use crate::util::csv::CsvWriter;
+use crate::util::table::{fnum, Table};
+
+use super::common::{banner, ExpCtx};
+use super::fig05::ALGOS;
+
+pub fn run(ctx: &ExpCtx) {
+    banner(
+        "Figure 7 — recall at top-1..10 w/o historical measurements",
+        "paper Fig. 7: CEAL's top-1 recall dominates (e.g. 76-79% on LV)",
+    );
+    let mut csv = CsvWriter::new(&["workflow", "objective", "m", "algo", "n", "recall"]);
+    for obj in Objective::ALL {
+        let m = ctx.budgets(obj)[1];
+        for wf in WorkflowId::ALL {
+            let mut t = Table::new(&[
+                "algo", "top1", "top2", "top3", "top4", "top5", "top6", "top7", "top8", "top9",
+                "top10",
+            ])
+            .align_left(&[0]);
+            println!("-- workflow={} objective={} m={m}", wf.name(), obj.name());
+            for algo in ALGOS {
+                let agg = ctx.run_cell(algo, wf, obj, m);
+                let mut cells = vec![algo.name().to_string()];
+                for n in 1..=10usize {
+                    let r = agg.mean_recall(n);
+                    cells.push(fnum(r * 100.0, 0) + "%");
+                    csv.row(&[
+                        wf.name().into(),
+                        obj.name().into(),
+                        m.to_string(),
+                        algo.name().into(),
+                        n.to_string(),
+                        format!("{r}"),
+                    ]);
+                }
+                t.row(&cells);
+            }
+            print!("{}", t.render());
+        }
+    }
+    ctx.save_csv("fig07.csv", &csv);
+}

@@ -1,0 +1,47 @@
+//! Fig. 8: practicality without historical measurements — the least
+//! number of workflow runs needed to pay off the auto-tuning cost
+//! (§7.2.3), AL vs CEAL, computer time, m = 50, LV and HS.
+
+use crate::config::WorkflowId;
+use crate::coordinator::Algo;
+use crate::sim::Objective;
+use crate::util::csv::CsvWriter;
+use crate::util::table::{fnum, Table};
+
+use super::common::{banner, ExpCtx};
+
+pub fn run(ctx: &ExpCtx) {
+    banner(
+        "Figure 8 — least number of uses (AL vs CEAL, comp time, m=50)",
+        "paper Fig. 8: CEAL pays off ~40% sooner (864 vs 1444 on LV)",
+    );
+    let m = 50;
+    let mut t = Table::new(&["workflow", "algo", "cost (core-h)", "tuned", "expert", "payoff runs"])
+        .align_left(&[0, 1]);
+    let mut csv = CsvWriter::new(&["workflow", "algo", "cost", "tuned", "expert", "payoff_runs"]);
+    for wf in [WorkflowId::Lv, WorkflowId::Hs] {
+        for algo in [Algo::Al, Algo::Ceal] {
+            let agg = ctx.run_cell(algo, wf, Objective::CompTime, m);
+            let payoff = agg.payoff_runs();
+            let payoff_str = payoff.map(|p| fnum(p, 0)).unwrap_or("never".into());
+            t.row(&[
+                wf.name().into(),
+                algo.name().into(),
+                fnum(agg.mean_cost(), 2),
+                fnum(agg.mean_best(), 3),
+                fnum(agg.expert_value, 3),
+                payoff_str.clone(),
+            ]);
+            csv.row(&[
+                wf.name().into(),
+                algo.name().into(),
+                format!("{}", agg.mean_cost()),
+                format!("{}", agg.mean_best()),
+                format!("{}", agg.expert_value),
+                payoff.map(|p| p.to_string()).unwrap_or_default(),
+            ]);
+        }
+    }
+    print!("{}", t.render());
+    ctx.save_csv("fig08.csv", &csv);
+}

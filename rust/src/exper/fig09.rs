@@ -1,0 +1,56 @@
+//! Fig. 9: effect of historical component measurements on CEAL — with
+//! history the m_R charge disappears, freeing budget for workflow runs.
+
+use crate::config::WorkflowId;
+use crate::coordinator::Algo;
+use crate::sim::Objective;
+use crate::util::csv::CsvWriter;
+use crate::util::table::{fnum, Table};
+
+use super::common::{banner, ExpCtx};
+
+pub fn run(ctx: &ExpCtx) {
+    banner(
+        "Figure 9 — CEAL with vs without historical measurements",
+        "paper Fig. 9: history improves every cell (e.g. LV comp -10% at m=25)",
+    );
+    let mut csv = CsvWriter::new(&[
+        "workflow",
+        "objective",
+        "m",
+        "variant",
+        "norm_best_mean",
+        "best_value_mean",
+    ]);
+    for obj in Objective::ALL {
+        for m in ctx.budgets(obj) {
+            let mut t =
+                Table::new(&["workflow", "CEAL w/o hist", "CEAL w/ hist", "improvement"])
+                    .align_left(&[0]);
+            println!("-- objective={} m={m} (normalized best)", obj.name());
+            for wf in WorkflowId::ALL {
+                let without = ctx.run_cell(Algo::Ceal, wf, obj, m);
+                let with = ctx.run_cell(Algo::CealHist, wf, obj, m);
+                let imp = 1.0 - with.mean_best() / without.mean_best();
+                t.row(&[
+                    wf.name().into(),
+                    fnum(without.mean_norm_best(), 3),
+                    fnum(with.mean_norm_best(), 3),
+                    fnum(imp * 100.0, 1) + "%",
+                ]);
+                for (variant, agg) in [("no_hist", &without), ("hist", &with)] {
+                    csv.row(&[
+                        wf.name().into(),
+                        obj.name().into(),
+                        m.to_string(),
+                        variant.into(),
+                        format!("{}", agg.mean_norm_best()),
+                        format!("{}", agg.mean_best()),
+                    ]);
+                }
+            }
+            print!("{}", t.render());
+        }
+    }
+    ctx.save_csv("fig09.csv", &csv);
+}

@@ -1,0 +1,54 @@
+//! Fig. 10: ALpH vs CEAL (both with historical component measurements)
+//! — function-based component combination vs learned combination.
+
+use crate::config::WorkflowId;
+use crate::coordinator::Algo;
+use crate::sim::Objective;
+use crate::util::csv::CsvWriter;
+use crate::util::table::{fnum, Table};
+
+use super::common::{banner, ExpCtx};
+
+pub fn run(ctx: &ExpCtx) {
+    banner(
+        "Figure 10 — ALpH vs CEAL (with historical measurements)",
+        "paper Fig. 10: CEAL wins every cell (e.g. LV comp -15.1% at m=25)",
+    );
+    let mut csv = CsvWriter::new(&[
+        "workflow",
+        "objective",
+        "m",
+        "algo",
+        "norm_best_mean",
+        "best_value_mean",
+    ]);
+    for obj in Objective::ALL {
+        for m in ctx.budgets(obj) {
+            let mut t = Table::new(&["workflow", "ALpH", "CEAL", "CEAL vs ALpH"]).align_left(&[0]);
+            println!("-- objective={} m={m} (normalized best)", obj.name());
+            for wf in WorkflowId::ALL {
+                let alph = ctx.run_cell(Algo::AlphHist, wf, obj, m);
+                let ceal = ctx.run_cell(Algo::CealHist, wf, obj, m);
+                let imp = 1.0 - ceal.mean_best() / alph.mean_best();
+                t.row(&[
+                    wf.name().into(),
+                    fnum(alph.mean_norm_best(), 3),
+                    fnum(ceal.mean_norm_best(), 3),
+                    fnum(imp * 100.0, 1) + "%",
+                ]);
+                for agg in [&alph, &ceal] {
+                    csv.row(&[
+                        wf.name().into(),
+                        obj.name().into(),
+                        m.to_string(),
+                        agg.algo.name().into(),
+                        format!("{}", agg.mean_norm_best()),
+                        format!("{}", agg.mean_best()),
+                    ]);
+                }
+            }
+            print!("{}", t.render());
+        }
+    }
+    ctx.save_csv("fig10.csv", &csv);
+}

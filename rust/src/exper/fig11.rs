@@ -1,0 +1,48 @@
+//! Fig. 11: robustness with historical measurements — recall at
+//! top-1..10, ALpH vs CEAL.
+
+use crate::config::WorkflowId;
+use crate::coordinator::Algo;
+use crate::sim::Objective;
+use crate::util::csv::CsvWriter;
+use crate::util::table::{fnum, Table};
+
+use super::common::{banner, ExpCtx};
+
+pub fn run(ctx: &ExpCtx) {
+    banner(
+        "Figure 11 — recall with historical measurements (ALpH vs CEAL)",
+        "paper Fig. 11: CEAL always more robust; best-1/2 recalls ≥ 99%",
+    );
+    let mut csv = CsvWriter::new(&["workflow", "objective", "m", "algo", "n", "recall"]);
+    for obj in Objective::ALL {
+        let m = ctx.budgets(obj)[1];
+        for wf in WorkflowId::ALL {
+            let mut t = Table::new(&[
+                "algo", "top1", "top2", "top3", "top4", "top5", "top6", "top7", "top8", "top9",
+                "top10",
+            ])
+            .align_left(&[0]);
+            println!("-- workflow={} objective={} m={m}", wf.name(), obj.name());
+            for algo in [Algo::AlphHist, Algo::CealHist] {
+                let agg = ctx.run_cell(algo, wf, obj, m);
+                let mut cells = vec![algo.name().to_string()];
+                for n in 1..=10usize {
+                    let r = agg.mean_recall(n);
+                    cells.push(fnum(r * 100.0, 0) + "%");
+                    csv.row(&[
+                        wf.name().into(),
+                        obj.name().into(),
+                        m.to_string(),
+                        algo.name().into(),
+                        n.to_string(),
+                        format!("{r}"),
+                    ]);
+                }
+                t.row(&cells);
+            }
+            print!("{}", t.render());
+        }
+    }
+    ctx.save_csv("fig11.csv", &csv);
+}

@@ -1,0 +1,59 @@
+//! Fig. 12: practicality with historical measurements — least number
+//! of uses for ALpH vs CEAL on LV and HS (paper: CEAL recoups its cost
+//! after only 219 runs for LV exec m=50 / 269 for LV comp m=25).
+
+use crate::config::WorkflowId;
+use crate::coordinator::Algo;
+use crate::sim::Objective;
+use crate::util::csv::CsvWriter;
+use crate::util::table::{fnum, Table};
+
+use super::common::{banner, ExpCtx};
+
+pub fn run(ctx: &ExpCtx) {
+    banner(
+        "Figure 12 — least number of uses with historical measurements",
+        "paper Fig. 12 / §7.5.4",
+    );
+    let mut t = Table::new(&[
+        "workflow", "objective", "m", "algo", "cost", "tuned", "expert", "payoff runs",
+    ])
+    .align_left(&[0, 1, 3]);
+    let mut csv = CsvWriter::new(&[
+        "workflow", "objective", "m", "algo", "cost", "tuned", "expert", "payoff_runs",
+    ]);
+    let cells = [
+        (WorkflowId::Lv, Objective::ExecTime, 50),
+        (WorkflowId::Lv, Objective::CompTime, 25),
+        (WorkflowId::Hs, Objective::ExecTime, 50),
+        (WorkflowId::Hs, Objective::CompTime, 25),
+    ];
+    for (wf, obj, m) in cells {
+        for algo in [Algo::AlphHist, Algo::CealHist] {
+            let agg = ctx.run_cell(algo, wf, obj, m);
+            let payoff = agg.payoff_runs();
+            t.row(&[
+                wf.name().into(),
+                obj.name().into(),
+                m.to_string(),
+                algo.name().into(),
+                fnum(agg.mean_cost(), 2),
+                fnum(agg.mean_best(), 3),
+                fnum(agg.expert_value, 3),
+                payoff.map(|p| fnum(p, 0)).unwrap_or("never".into()),
+            ]);
+            csv.row(&[
+                wf.name().into(),
+                obj.name().into(),
+                m.to_string(),
+                algo.name().into(),
+                format!("{}", agg.mean_cost()),
+                format!("{}", agg.mean_best()),
+                format!("{}", agg.expert_value),
+                payoff.map(|p| p.to_string()).unwrap_or_default(),
+            ]);
+        }
+    }
+    print!("{}", t.render());
+    ctx.save_csv("fig12.csv", &csv);
+}

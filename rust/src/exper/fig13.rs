@@ -1,0 +1,133 @@
+//! Fig. 13: hyper-parameter sensitivity on LV computer time with
+//! m = 50 — (a) iterations I, (b) component budget m_R/m, (c) random
+//! bootstrap m_0/m; with and without historical measurements.
+
+use crate::config::WorkflowId;
+use crate::coordinator::Algo;
+use crate::sim::Objective;
+use crate::tuner::CealParams;
+use crate::util::csv::CsvWriter;
+use crate::util::table::{fnum, Table};
+
+use super::common::{banner, ExpCtx};
+
+const WF: WorkflowId = WorkflowId::Lv;
+const OBJ: Objective = Objective::CompTime;
+const M: usize = 50;
+
+pub fn run(ctx: &ExpCtx) {
+    banner(
+        "Figure 13 — CEAL hyper-parameter sensitivity (LV comp, m=50)",
+        "paper Fig. 13: converges after ~3 iterations; flat over wide m_R, m_0 ranges",
+    );
+    let mut csv = CsvWriter::new(&["panel", "variant", "param", "value", "comp_time_core_h"]);
+
+    // (a) iterations I, both variants (paper: w/o hist m_R=0.5m; w/ hist m_R=0)
+    {
+        let mut t = Table::new(&["I", "CEAL w/o hist", "CEAL w/ hist"]);
+        for i in 1..=10usize {
+            let no = ctx.run_cell_params(
+                Algo::Ceal,
+                WF,
+                OBJ,
+                M,
+                CealParams {
+                    iterations: i,
+                    m0_frac: 0.15,
+                    mr_frac: 0.5,
+                },
+            );
+            let with = ctx.run_cell_params(
+                Algo::CealHist,
+                WF,
+                OBJ,
+                M,
+                CealParams {
+                    iterations: i,
+                    m0_frac: 0.3,
+                    mr_frac: 0.0,
+                },
+            );
+            t.row(&[
+                i.to_string(),
+                fnum(no.mean_best(), 3),
+                fnum(with.mean_best(), 3),
+            ]);
+            csv.row(&["a".into(), "no_hist".into(), "I".into(), i.to_string(),
+                format!("{}", no.mean_best())]);
+            csv.row(&["a".into(), "hist".into(), "I".into(), i.to_string(),
+                format!("{}", with.mean_best())]);
+        }
+        println!("-- (a) iterations I");
+        print!("{}", t.render());
+    }
+
+    // (b) m_R / m sweep (only meaningful without history), m0 = 5% m
+    {
+        let mut t = Table::new(&["m_R/m", "CEAL w/o hist"]);
+        let mut frac = 0.05;
+        while frac <= 0.90 + 1e-9 {
+            let agg = ctx.run_cell_params(
+                Algo::Ceal,
+                WF,
+                OBJ,
+                M,
+                CealParams {
+                    iterations: 6,
+                    m0_frac: 0.05,
+                    mr_frac: frac,
+                },
+            );
+            t.row(&[fnum(frac * 100.0, 0) + "%", fnum(agg.mean_best(), 3)]);
+            csv.row(&["b".into(), "no_hist".into(), "mr_frac".into(),
+                format!("{frac:.2}"), format!("{}", agg.mean_best())]);
+            frac += 0.10;
+        }
+        println!("-- (b) m_R / m (I=6, m_0=5% m)");
+        print!("{}", t.render());
+    }
+
+    // (c) m_0 / m sweep, both variants (I=9, m_R=0 paper caption for hist)
+    {
+        let mut t = Table::new(&["m_0/m", "CEAL w/o hist", "CEAL w/ hist"]);
+        let mut frac = 0.05;
+        while frac <= 0.75 + 1e-9 {
+            let no = ctx.run_cell_params(
+                Algo::Ceal,
+                WF,
+                OBJ,
+                M,
+                CealParams {
+                    iterations: 6,
+                    m0_frac: frac,
+                    mr_frac: (1.0 - frac - 0.1).max(0.0).min(0.35),
+                },
+            );
+            let with = ctx.run_cell_params(
+                Algo::CealHist,
+                WF,
+                OBJ,
+                M,
+                CealParams {
+                    iterations: 9,
+                    m0_frac: frac,
+                    mr_frac: 0.0,
+                },
+            );
+            t.row(&[
+                fnum(frac * 100.0, 0) + "%",
+                fnum(no.mean_best(), 3),
+                fnum(with.mean_best(), 3),
+            ]);
+            csv.row(&["c".into(), "no_hist".into(), "m0_frac".into(),
+                format!("{frac:.2}"), format!("{}", no.mean_best())]);
+            csv.row(&["c".into(), "hist".into(), "m0_frac".into(),
+                format!("{frac:.2}"), format!("{}", with.mean_best())]);
+            frac += 0.10;
+        }
+        println!("-- (c) m_0 / m");
+        print!("{}", t.render());
+    }
+
+    ctx.save_csv("fig13.csv", &csv);
+}

@@ -1,0 +1,65 @@
+//! Experiment harness: one module per paper table/figure (§7).  Each
+//! prints the paper-style rows/series to stdout and writes a CSV under
+//! the output directory; EXPERIMENTS.md records paper-vs-measured.
+
+pub mod ablations;
+pub mod common;
+pub mod fig04;
+pub mod fig05;
+pub mod fig06;
+pub mod fig07;
+pub mod fig08;
+pub mod fig09;
+pub mod fig10;
+pub mod fig11;
+pub mod fig12;
+pub mod fig13;
+pub mod table1;
+pub mod table2;
+
+pub use common::ExpCtx;
+
+/// Run every table and figure (the `ceal all` / `make repro` target).
+pub fn run_all(ctx: &ExpCtx) {
+    table1::run(ctx);
+    table2::run(ctx);
+    fig04::run(ctx);
+    fig05::run(ctx);
+    fig06::run(ctx);
+    fig07::run(ctx);
+    fig08::run(ctx);
+    fig09::run(ctx);
+    fig10::run(ctx);
+    fig11::run(ctx);
+    fig12::run(ctx);
+    fig13::run(ctx);
+    ablations::run(ctx);
+}
+
+/// Dispatch a single figure by number.
+pub fn run_fig(n: usize, ctx: &ExpCtx) -> bool {
+    match n {
+        4 => fig04::run(ctx),
+        5 => fig05::run(ctx),
+        6 => fig06::run(ctx),
+        7 => fig07::run(ctx),
+        8 => fig08::run(ctx),
+        9 => fig09::run(ctx),
+        10 => fig10::run(ctx),
+        11 => fig11::run(ctx),
+        12 => fig12::run(ctx),
+        13 => fig13::run(ctx),
+        _ => return false,
+    }
+    true
+}
+
+/// Dispatch a single table by number.
+pub fn run_table(n: usize, ctx: &ExpCtx) -> bool {
+    match n {
+        1 => table1::run(ctx),
+        2 => table2::run(ctx),
+        _ => return false,
+    }
+    true
+}

@@ -1,0 +1,82 @@
+//! Table 1: parameter spaces of the three target workflows.
+
+use crate::config::{ParamValues, WorkflowId};
+use crate::util::table::Table;
+
+use super::common::{banner, ExpCtx};
+use crate::util::csv::CsvWriter;
+
+fn options_string(values: &ParamValues) -> String {
+    match values {
+        ParamValues::Range { lo, hi, step } if *step == 1 => format!("{lo}, {}, ..., {hi}", lo + 1),
+        ParamValues::Range { lo, hi, step } => format!("{lo}, {}, ..., {hi}", lo + step),
+        ParamValues::List(v) => v
+            .iter()
+            .map(|x| x.to_string())
+            .collect::<Vec<_>>()
+            .join(", "),
+    }
+}
+
+pub fn run(ctx: &ExpCtx) {
+    banner("Table 1 — parameter spaces", "paper Tbl. 1 and §7.1 space sizes");
+    let mut t = Table::new(&["Workflow", "Application", "Parameter", "Options", "Count"])
+        .align_left(&[0, 1, 2, 3]);
+    let mut csv = CsvWriter::new(&["workflow", "application", "parameter", "options", "count"]);
+    for id in WorkflowId::ALL {
+        let spec = id.spec();
+        for comp in &spec.components {
+            if comp.params.is_empty() {
+                t.row(&[
+                    id.name().into(),
+                    comp.name.clone(),
+                    "# processes".into(),
+                    "1".into(),
+                    "1".into(),
+                ]);
+                csv.row(&[
+                    id.name().into(),
+                    comp.name.clone(),
+                    "# processes".into(),
+                    "1".into(),
+                    "1".into(),
+                ]);
+                continue;
+            }
+            for p in &comp.params {
+                t.row(&[
+                    id.name().into(),
+                    comp.name.clone(),
+                    p.name.clone(),
+                    options_string(&p.values),
+                    p.count().to_string(),
+                ]);
+                csv.row(&[
+                    id.name().into(),
+                    comp.name.clone(),
+                    p.name.clone(),
+                    options_string(&p.values),
+                    p.count().to_string(),
+                ]);
+            }
+        }
+    }
+    print!("{}", t.render());
+    println!("Joint configuration-space sizes (paper: LV 2.3e10, HS 5.1e10, GP 8.5e7):");
+    for id in WorkflowId::ALL {
+        let spec = id.spec();
+        let comps: Vec<String> = spec
+            .components
+            .iter()
+            .filter(|c| c.is_configurable())
+            .map(|c| format!("{}: {:.1e}", c.name, c.space_size() as f64))
+            .collect();
+        println!(
+            "  {:<3} joint {:.1e}   ({})",
+            id.name(),
+            spec.space_size() as f64,
+            comps.join(", ")
+        );
+    }
+    ctx.save_csv("table1.csv", &csv);
+}

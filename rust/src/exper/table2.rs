@@ -1,0 +1,58 @@
+//! Table 2: best (pool) vs expert-recommended configurations and their
+//! achieved performance, per workflow and objective.
+
+use crate::config::WorkflowId;
+use crate::coordinator::expert_config;
+use crate::sim::Objective;
+use crate::tuner::{Pool, Problem};
+use crate::util::csv::CsvWriter;
+use crate::util::table::{fnum, Table};
+
+use super::common::{banner, ExpCtx};
+
+pub fn run(ctx: &ExpCtx) {
+    banner(
+        "Table 2 — best vs expert configurations",
+        "paper Tbl. 2 (magnitudes from our simulator substitute)",
+    );
+    let mut t = Table::new(&["Wf", "Objective", "Option", "Performance", "Configuration"])
+        .align_left(&[0, 1, 2, 4]);
+    let mut csv = CsvWriter::new(&["workflow", "objective", "option", "value", "unit", "config"]);
+    for id in WorkflowId::ALL {
+        for obj in Objective::ALL {
+            let prob = Problem::new(id, obj);
+            let pool = Pool::generate(&prob, ctx.pool_size, ctx.seed);
+            let best_cfg = &pool.configs[pool.best_idx];
+            let best_val = pool.best_value();
+            let exp_cfg = expert_config(id, obj);
+            let exp_val = obj.value(&prob.sim.expected(&exp_cfg));
+            for (option, val, cfg) in [
+                ("Best", best_val, best_cfg.to_string()),
+                ("Expert", exp_val, exp_cfg.to_string()),
+            ] {
+                t.row(&[
+                    id.name().into(),
+                    obj.name().into(),
+                    option.into(),
+                    format!("{} {}", fnum(val, 3), obj.unit()),
+                    cfg.clone(),
+                ]);
+                csv.row(&[
+                    id.name().into(),
+                    obj.name().into(),
+                    option.into(),
+                    format!("{val}"),
+                    obj.unit().into(),
+                    cfg,
+                ]);
+            }
+        }
+    }
+    print!("{}", t.render());
+    println!(
+        "Paper reference rows: LV exec 27.2/36.8 s, LV comp 3.36/4.15 core-h, \
+         HS exec 6.02/28.0 s, HS comp 0.517/0.894 core-h, GP exec 98.7/102 s, \
+         GP comp 6.95/5.85 core-h (expert better for GP comp)."
+    );
+    ctx.save_csv("table2.csv", &csv);
+}

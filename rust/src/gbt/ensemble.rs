@@ -1,0 +1,267 @@
+//! Flattened oblivious-tree ensembles and the native predictor.
+//!
+//! The flattened layout must match the AOT artifacts bit-for-bit in
+//! semantics (see python/compile/kernels/gbt_predict.py):
+//!
+//! * `feat[t*D + d]` — feature tested by tree `t` at level `d`
+//! * `thr[t*D + d]` — threshold; strict `>` sends the sample right
+//! * `leaves[t*2^D + idx]` — leaf value, `idx = Σ_d (x[f_d] > t_d) << d`
+//!
+//! Padding conventions: unused trees carry `thr = +inf`, `leaves = 0`;
+//! the ensemble bias is folded into tree 0's leaves at flatten time.
+
+use crate::config::F_MAX;
+
+/// Artifact-side maxima (python/compile/kernels/gbt_predict.py).
+pub const TREES_MAX: usize = 64;
+pub const DEPTH_MAX: usize = 6;
+pub const LEAVES_MAX: usize = 1 << DEPTH_MAX;
+
+/// Log-space prediction assigned to padding components in the lowfi
+/// artifact: exp(NEG_PRED) == 0, neutral under max-of-times and sum.
+pub const NEG_PRED: f32 = -1.0e9;
+
+/// A trained oblivious-GBT ensemble (compact, depth = `depth`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Ensemble {
+    pub n_features: usize,
+    pub depth: usize,
+    /// Per-tree level features, `[n_trees * depth]`.
+    pub feat: Vec<u32>,
+    /// Per-tree level thresholds, `[n_trees * depth]`.
+    pub thr: Vec<f32>,
+    /// Per-tree leaf tables, `[n_trees * 2^depth]`.
+    pub leaves: Vec<f32>,
+    /// Additive bias (mean response), applied once per prediction.
+    pub bias: f32,
+}
+
+impl Ensemble {
+    /// A bias-only ensemble (predicts a constant).
+    pub fn constant(n_features: usize, bias: f32) -> Self {
+        Ensemble {
+            n_features,
+            depth: 1,
+            feat: Vec::new(),
+            thr: Vec::new(),
+            leaves: Vec::new(),
+            bias,
+        }
+    }
+
+    pub fn n_trees(&self) -> usize {
+        if self.depth == 0 {
+            0
+        } else {
+            self.feat.len() / self.depth
+        }
+    }
+
+    /// Leaf index of `x` in tree `t` — the kernel's bit-packing rule.
+    #[inline]
+    pub fn leaf_index(&self, t: usize, x: &[f32]) -> usize {
+        let mut idx = 0usize;
+        for d in 0..self.depth {
+            let f = self.feat[t * self.depth + d] as usize;
+            let thr = self.thr[t * self.depth + d];
+            if x[f] > thr {
+                idx |= 1 << d;
+            }
+        }
+        idx
+    }
+
+    /// Predict a single feature vector (length >= n_features).
+    pub fn predict(&self, x: &[f32]) -> f32 {
+        let leaves_w = 1 << self.depth;
+        let mut acc = self.bias;
+        for t in 0..self.n_trees() {
+            acc += self.leaves[t * leaves_w + self.leaf_index(t, x)];
+        }
+        acc
+    }
+
+    /// Predict a batch of F_MAX-padded rows.
+    pub fn predict_batch(&self, xs: &[[f32; F_MAX]]) -> Vec<f32> {
+        xs.iter().map(|x| self.predict(x)).collect()
+    }
+
+    /// Flatten to artifact shape `[TREES_MAX, DEPTH_MAX]` /
+    /// `[TREES_MAX, LEAVES_MAX]`, folding the bias into tree 0.
+    pub fn flatten(&self) -> FlatEnsemble {
+        assert!(
+            self.n_trees() <= TREES_MAX,
+            "{} trees exceed artifact capacity {TREES_MAX}",
+            self.n_trees()
+        );
+        assert!(
+            self.depth <= DEPTH_MAX,
+            "depth {} exceeds artifact depth {DEPTH_MAX}",
+            self.depth
+        );
+        let mut feat = vec![0i32; TREES_MAX * DEPTH_MAX];
+        let mut thr = vec![f32::INFINITY; TREES_MAX * DEPTH_MAX];
+        let mut leaves = vec![0f32; TREES_MAX * LEAVES_MAX];
+        let my_leaves = 1 << self.depth;
+        for t in 0..self.n_trees() {
+            for d in 0..self.depth {
+                feat[t * DEPTH_MAX + d] = self.feat[t * self.depth + d] as i32;
+                thr[t * DEPTH_MAX + d] = self.thr[t * self.depth + d];
+            }
+            // levels beyond self.depth keep +inf thresholds -> bit 0,
+            // so the effective leaf index equals the compact index.
+            for idx in 0..my_leaves {
+                leaves[t * LEAVES_MAX + idx] = self.leaves[t * my_leaves + idx];
+            }
+        }
+        // Fold bias into tree 0 (tree 0 always exists in the artifact:
+        // if the ensemble is empty, it is a pure constant tree).
+        for idx in 0..LEAVES_MAX {
+            if self.n_trees() == 0 {
+                leaves[idx] = self.bias;
+            } else if idx < my_leaves {
+                leaves[idx] += self.bias;
+            }
+        }
+        if self.n_trees() == 0 {
+            // make every input land on a defined leaf value
+            for v in leaves.iter_mut().take(LEAVES_MAX) {
+                *v = self.bias;
+            }
+        }
+        FlatEnsemble { feat, thr, leaves }
+    }
+}
+
+/// Artifact-shaped ensemble tensors (runtime inputs to the HLO).
+#[derive(Clone, Debug, PartialEq)]
+pub struct FlatEnsemble {
+    /// `[TREES_MAX * DEPTH_MAX]` i32
+    pub feat: Vec<i32>,
+    /// `[TREES_MAX * DEPTH_MAX]` f32
+    pub thr: Vec<f32>,
+    /// `[TREES_MAX * LEAVES_MAX]` f32
+    pub leaves: Vec<f32>,
+}
+
+impl FlatEnsemble {
+    /// All-padding ensemble predicting exactly 0 (neutral for a raw,
+    /// non-exponentiated scoring path).
+    pub fn zero() -> Self {
+        FlatEnsemble {
+            feat: vec![0; TREES_MAX * DEPTH_MAX],
+            thr: vec![f32::INFINITY; TREES_MAX * DEPTH_MAX],
+            leaves: vec![0.0; TREES_MAX * LEAVES_MAX],
+        }
+    }
+
+    /// Padding-component ensemble for the lowfi artifact: predicts
+    /// [`NEG_PRED`] so exp(prediction) == 0 (neutral component slot).
+    pub fn neutral_component() -> Self {
+        let mut f = FlatEnsemble::zero();
+        for idx in 0..LEAVES_MAX {
+            f.leaves[idx] = NEG_PRED;
+        }
+        f
+    }
+
+    /// Reference evaluation of the flattened format (mirrors ref.py);
+    /// used to cross-check the PJRT path in integration tests.
+    pub fn predict(&self, x: &[f32]) -> f32 {
+        let mut acc = 0.0f32;
+        for t in 0..TREES_MAX {
+            let mut idx = 0usize;
+            for d in 0..DEPTH_MAX {
+                let f = self.feat[t * DEPTH_MAX + d] as usize;
+                if x[f] > self.thr[t * DEPTH_MAX + d] {
+                    idx |= 1 << d;
+                }
+            }
+            acc += self.leaves[t * LEAVES_MAX + idx];
+        }
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn random_ensemble(rng: &mut Pcg32, trees: usize, depth: usize, nf: usize) -> Ensemble {
+        let leaves_w = 1 << depth;
+        Ensemble {
+            n_features: nf,
+            depth,
+            feat: (0..trees * depth)
+                .map(|_| rng.gen_range(nf as u64) as u32)
+                .collect(),
+            thr: (0..trees * depth).map(|_| rng.f32()).collect(),
+            leaves: (0..trees * leaves_w)
+                .map(|_| rng.normal() as f32)
+                .collect(),
+            bias: 0.7,
+        }
+    }
+
+    #[test]
+    fn constant_predicts_bias() {
+        let e = Ensemble::constant(4, 2.5);
+        assert_eq!(e.predict(&[0.0; 8]), 2.5);
+        assert_eq!(e.n_trees(), 0);
+    }
+
+    #[test]
+    fn leaf_index_bit_packing() {
+        // one tree, depth 2: level 0 on f0@0.5, level 1 on f1@0.5
+        let e = Ensemble {
+            n_features: 2,
+            depth: 2,
+            feat: vec![0, 1],
+            thr: vec![0.5, 0.5],
+            leaves: vec![10.0, 11.0, 12.0, 13.0],
+            bias: 0.0,
+        };
+        assert_eq!(e.predict(&[0.0, 0.0]), 10.0); // 00
+        assert_eq!(e.predict(&[1.0, 0.0]), 11.0); // 01 (bit 0 = level 0)
+        assert_eq!(e.predict(&[0.0, 1.0]), 12.0); // 10
+        assert_eq!(e.predict(&[1.0, 1.0]), 13.0); // 11
+    }
+
+    #[test]
+    fn flatten_preserves_predictions() {
+        let mut rng = Pcg32::new(42, 0);
+        for (trees, depth) in [(0usize, 3usize), (1, 1), (8, 3), (48, 4), (64, 6)] {
+            let e = if trees == 0 {
+                Ensemble::constant(5, 1.25)
+            } else {
+                random_ensemble(&mut rng, trees, depth, 5)
+            };
+            let flat = e.flatten();
+            for _ in 0..50 {
+                let x: Vec<f32> = (0..F_MAX).map(|_| rng.f32()).collect();
+                let want = e.predict(&x);
+                let got = flat.predict(&x);
+                assert!(
+                    (want - got).abs() < 1e-4,
+                    "trees={trees} depth={depth}: {want} vs {got}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn zero_flat_is_neutral() {
+        let z = FlatEnsemble::zero();
+        assert_eq!(z.predict(&[0.3; F_MAX]), 0.0);
+        assert_eq!(z.predict(&[0.9; F_MAX]), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceed artifact capacity")]
+    fn flatten_rejects_oversize() {
+        let mut rng = Pcg32::new(1, 0);
+        let e = random_ensemble(&mut rng, TREES_MAX + 1, 2, 3);
+        e.flatten();
+    }
+}

@@ -1,0 +1,17 @@
+//! Gradient-boosted *oblivious* decision trees — the surrogate-model
+//! family (the paper uses xgboost regressors; see DESIGN.md §2 for the
+//! substitution).
+//!
+//! Oblivious trees apply one shared (feature, threshold) split per
+//! level, so a trained ensemble flattens into three dense tensors
+//! (`features[T,D]`, `thresholds[T,D]`, `leaves[T,2^D]`) that the AOT
+//! Pallas kernel evaluates without re-compilation.  [`train`] fits an
+//! ensemble with second-order histogram split search; [`Ensemble`]
+//! carries the flattened format plus an exact native predictor used for
+//! cross-checking the PJRT path and for multi-threaded campaigns.
+
+pub mod ensemble;
+pub mod train;
+
+pub use ensemble::{Ensemble, FlatEnsemble, DEPTH_MAX, LEAVES_MAX, NEG_PRED, TREES_MAX};
+pub use train::{train, train_log, GbtParams};

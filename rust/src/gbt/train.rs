@@ -1,0 +1,356 @@
+//! Oblivious-GBT training: second-order gradient boosting with
+//! histogram split search, level-shared splits, shrinkage and L2
+//! regularization — the from-scratch xgboost substitute.
+//!
+//! Squared-error objective: gradients `g_i = pred_i - y_i`, hessians
+//! `h_i = 1`.  At every tree level the single (feature, threshold) pair
+//! maximizing the summed split gain across all current leaves is chosen
+//! (the CatBoost-style *oblivious* constraint), which is what makes the
+//! trained model a fixed-shape tensor program.
+
+use super::ensemble::Ensemble;
+use crate::config::F_MAX;
+
+/// Training hyper-parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct GbtParams {
+    pub n_trees: usize,
+    pub depth: usize,
+    pub learning_rate: f64,
+    /// L2 leaf regularization (xgboost lambda).
+    pub lambda: f64,
+    /// Candidate thresholds per feature (quantile bins).
+    pub n_bins: usize,
+    /// Minimum summed hessian per child for a split to count.
+    pub min_child_weight: f64,
+}
+
+impl Default for GbtParams {
+    fn default() -> Self {
+        GbtParams {
+            n_trees: 48,
+            depth: 4,
+            learning_rate: 0.12,
+            lambda: 1.0,
+            n_bins: 32,
+            min_child_weight: 1.0,
+        }
+    }
+}
+
+impl GbtParams {
+    /// Settings tuned for very small sample counts (25-100 workflow
+    /// runs — the paper's budgets).
+    pub fn small_data() -> Self {
+        GbtParams {
+            n_trees: 40,
+            depth: 3,
+            learning_rate: 0.15,
+            lambda: 1.5,
+            n_bins: 16,
+            min_child_weight: 1.0,
+        }
+    }
+}
+
+/// Candidate split thresholds per feature: midpoints between adjacent
+/// quantiles of the observed values.
+fn candidate_thresholds(xs: &[[f32; F_MAX]], f: usize, n_bins: usize) -> Vec<f32> {
+    let mut vals: Vec<f32> = xs.iter().map(|x| x[f]).collect();
+    vals.sort_by(|a, b| a.partial_cmp(b).expect("NaN feature"));
+    vals.dedup();
+    if vals.len() < 2 {
+        return Vec::new();
+    }
+    let n_cand = n_bins.min(vals.len() - 1);
+    let mut out = Vec::with_capacity(n_cand);
+    for i in 0..n_cand {
+        // evenly spaced quantile boundaries over unique values
+        let pos = (i + 1) * (vals.len() - 1) / (n_cand + 1);
+        let pos = pos.min(vals.len() - 2);
+        let mid = 0.5 * (vals[pos] + vals[pos + 1]);
+        out.push(mid);
+    }
+    out.dedup();
+    out
+}
+
+/// Train an oblivious-GBT regressor in LOG space: the model predicts
+/// ln(y), so exp(prediction) is the time estimate.  Times span orders
+/// of magnitude across a configuration space; fitting in log space
+/// stops the squared loss being dominated by the catastrophic configs
+/// and sharpens ranking among the top ones (which is what the paper's
+/// searcher needs).  All y must be positive.
+pub fn train_log(xs: &[[f32; F_MAX]], y: &[f64], n_features: usize, p: &GbtParams) -> Ensemble {
+    assert!(
+        y.iter().all(|&v| v > 0.0),
+        "train_log requires positive targets"
+    );
+    let ln_y: Vec<f64> = y.iter().map(|&v| v.ln()).collect();
+    train(xs, &ln_y, n_features, p)
+}
+
+/// Train an oblivious-GBT regressor on `(xs, y)`.
+///
+/// `n_features` restricts split search to the first `n_features`
+/// columns (the rest are padding).  Targets are typically execution or
+/// computer times; callers may log-transform if desired.
+pub fn train(xs: &[[f32; F_MAX]], y: &[f64], n_features: usize, p: &GbtParams) -> Ensemble {
+    assert_eq!(xs.len(), y.len(), "xs/y length mismatch");
+    assert!(n_features >= 1 && n_features <= F_MAX);
+    let n = xs.len();
+    if n == 0 {
+        return Ensemble::constant(n_features, 0.0);
+    }
+    let bias = y.iter().sum::<f64>() / n as f64;
+    if n == 1 || p.n_trees == 0 {
+        return Ensemble::constant(n_features, bias as f32);
+    }
+
+    let leaves_w = 1usize << p.depth;
+    let mut pred = vec![bias; n];
+    let mut feat_out: Vec<u32> = Vec::with_capacity(p.n_trees * p.depth);
+    let mut thr_out: Vec<f32> = Vec::with_capacity(p.n_trees * p.depth);
+    let mut leaves_out: Vec<f32> = Vec::with_capacity(p.n_trees * leaves_w);
+
+    // Per-feature candidate thresholds are data-determined once.
+    let cands: Vec<Vec<f32>> = (0..n_features)
+        .map(|f| candidate_thresholds(xs, f, p.n_bins))
+        .collect();
+
+    for _tree in 0..p.n_trees {
+        let grad: Vec<f64> = (0..n).map(|i| pred[i] - y[i]).collect();
+        // leaf assignment as we grow levels
+        let mut idx = vec![0usize; n];
+        let mut tree_feat = vec![0u32; p.depth];
+        let mut tree_thr = vec![f32::INFINITY; p.depth];
+
+        for d in 0..p.depth {
+            let n_leaves = 1usize << d;
+            // accumulate per-leaf G, H
+            let mut leaf_g = vec![0.0f64; n_leaves];
+            let mut leaf_h = vec![0.0f64; n_leaves];
+            for i in 0..n {
+                leaf_g[idx[i]] += grad[i];
+                leaf_h[idx[i]] += 1.0;
+            }
+            let parent_score: f64 = (0..n_leaves)
+                .map(|l| leaf_g[l] * leaf_g[l] / (leaf_h[l] + p.lambda))
+                .sum();
+
+            let mut best: Option<(f64, usize, f32)> = None;
+            for f in 0..n_features {
+                for &thr in &cands[f] {
+                    let mut right_g = vec![0.0f64; n_leaves];
+                    let mut right_h = vec![0.0f64; n_leaves];
+                    for i in 0..n {
+                        if xs[i][f] > thr {
+                            right_g[idx[i]] += grad[i];
+                            right_h[idx[i]] += 1.0;
+                        }
+                    }
+                    let mut score = 0.0f64;
+                    let mut valid = false;
+                    for l in 0..n_leaves {
+                        let (gl, hl) = (leaf_g[l] - right_g[l], leaf_h[l] - right_h[l]);
+                        let (gr, hr) = (right_g[l], right_h[l]);
+                        if hl >= p.min_child_weight && hr >= p.min_child_weight {
+                            valid = true;
+                            score += gl * gl / (hl + p.lambda) + gr * gr / (hr + p.lambda);
+                        } else {
+                            // unsplit leaf keeps parent contribution
+                            let g = leaf_g[l];
+                            let h = leaf_h[l];
+                            score += g * g / (h + p.lambda);
+                        }
+                    }
+                    if !valid {
+                        continue;
+                    }
+                    let gain = score - parent_score;
+                    if gain > 1e-12 && best.map(|(bg, _, _)| gain > bg).unwrap_or(true) {
+                        best = Some((gain, f, thr));
+                    }
+                }
+            }
+            match best {
+                Some((_, f, thr)) => {
+                    tree_feat[d] = f as u32;
+                    tree_thr[d] = thr;
+                    for i in 0..n {
+                        if xs[i][f] > thr {
+                            idx[i] |= 1 << d;
+                        }
+                    }
+                }
+                None => {
+                    // no useful split at this level: +inf threshold is a
+                    // structural no-op (everything keeps bit 0)
+                    tree_feat[d] = 0;
+                    tree_thr[d] = f32::INFINITY;
+                }
+            }
+        }
+
+        // leaf weights: w = -lr * G/(H + lambda)
+        let mut leaf_g = vec![0.0f64; leaves_w];
+        let mut leaf_h = vec![0.0f64; leaves_w];
+        for i in 0..n {
+            leaf_g[idx[i]] += grad[i];
+            leaf_h[idx[i]] += 1.0;
+        }
+        let mut leaves = vec![0.0f32; leaves_w];
+        for l in 0..leaves_w {
+            if leaf_h[l] > 0.0 {
+                leaves[l] = (-p.learning_rate * leaf_g[l] / (leaf_h[l] + p.lambda)) as f32;
+            }
+        }
+        for i in 0..n {
+            pred[i] += leaves[idx[i]] as f64;
+        }
+        feat_out.extend_from_slice(&tree_feat);
+        thr_out.extend_from_slice(&tree_thr);
+        leaves_out.extend_from_slice(&leaves);
+    }
+
+    Ensemble {
+        n_features,
+        depth: p.depth,
+        feat: feat_out,
+        thr: thr_out,
+        leaves: leaves_out,
+        bias: bias as f32,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+    use crate::util::stats;
+
+    fn make_data(
+        rng: &mut Pcg32,
+        n: usize,
+        f: impl Fn(&[f32; F_MAX]) -> f64,
+    ) -> (Vec<[f32; F_MAX]>, Vec<f64>) {
+        let xs: Vec<[f32; F_MAX]> = (0..n)
+            .map(|_| {
+                let mut x = [0f32; F_MAX];
+                for v in x.iter_mut() {
+                    *v = rng.f32();
+                }
+                x
+            })
+            .collect();
+        let y: Vec<f64> = xs.iter().map(&f).collect();
+        (xs, y)
+    }
+
+    fn rmse(e: &Ensemble, xs: &[[f32; F_MAX]], y: &[f64]) -> f64 {
+        let se: f64 = xs
+            .iter()
+            .zip(y)
+            .map(|(x, &t)| {
+                let p = e.predict(x) as f64;
+                (p - t) * (p - t)
+            })
+            .sum();
+        (se / y.len() as f64).sqrt()
+    }
+
+    #[test]
+    fn fits_constant() {
+        let xs = vec![[0.5f32; F_MAX]; 10];
+        let y = vec![3.0; 10];
+        let e = train(&xs, &y, 4, &GbtParams::default());
+        assert!((e.predict(&xs[0]) - 3.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn fits_step_function() {
+        let mut rng = Pcg32::new(1, 0);
+        let (xs, y) = make_data(&mut rng, 200, |x| if x[2] > 0.5 { 10.0 } else { 1.0 });
+        let e = train(&xs, &y, 4, &GbtParams::default());
+        assert!(rmse(&e, &xs, &y) < 0.5, "rmse {}", rmse(&e, &xs, &y));
+    }
+
+    #[test]
+    fn fits_additive_nonlinear() {
+        let mut rng = Pcg32::new(2, 0);
+        let f = |x: &[f32; F_MAX]| {
+            5.0 * (x[0] as f64) + 3.0 * ((x[1] as f64) - 0.5).powi(2) + (x[3] as f64).sqrt()
+        };
+        let (xs, y) = make_data(&mut rng, 400, f);
+        let e = train(&xs, &y, 5, &GbtParams::default());
+        let spread = stats::std_dev(&y);
+        let err = rmse(&e, &xs, &y);
+        assert!(err < spread * 0.25, "rmse {err} vs spread {spread}");
+    }
+
+    #[test]
+    fn generalizes_on_holdout() {
+        let mut rng = Pcg32::new(3, 0);
+        let f = |x: &[f32; F_MAX]| 4.0 * (x[0] as f64) * (x[1] as f64) + 2.0 * x[2] as f64;
+        let (xs, y) = make_data(&mut rng, 500, f);
+        let (tx, ty) = make_data(&mut rng, 200, f);
+        let e = train(&xs, &y, 4, &GbtParams::default());
+        let err = rmse(&e, &tx, &ty);
+        let spread = stats::std_dev(&ty);
+        assert!(err < spread * 0.4, "holdout rmse {err} vs spread {spread}");
+    }
+
+    #[test]
+    fn small_sample_budget_works() {
+        // 25 samples, the paper's smallest budget — must not blow up.
+        let mut rng = Pcg32::new(4, 0);
+        let f = |x: &[f32; F_MAX]| 100.0 * x[0] as f64 + 10.0;
+        let (xs, y) = make_data(&mut rng, 25, f);
+        let e = train(&xs, &y, 3, &GbtParams::small_data());
+        // monotone recovery: predictions correlate with x0
+        let lo = e.predict(&{
+            let mut v = [0.5f32; F_MAX];
+            v[0] = 0.05;
+            v
+        });
+        let hi = e.predict(&{
+            let mut v = [0.5f32; F_MAX];
+            v[0] = 0.95;
+            v
+        });
+        assert!(hi > lo + 20.0, "lo {lo} hi {hi}");
+    }
+
+    #[test]
+    fn flattened_matches_native_after_training() {
+        let mut rng = Pcg32::new(5, 0);
+        let f = |x: &[f32; F_MAX]| (x[0] as f64) * 7.0 - (x[1] as f64) * 2.0;
+        let (xs, y) = make_data(&mut rng, 150, f);
+        let e = train(&xs, &y, 4, &GbtParams::default());
+        let flat = e.flatten();
+        for x in xs.iter().take(40) {
+            let a = e.predict(x);
+            let b = flat.predict(x);
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn degenerate_inputs() {
+        // empty
+        let e = train(&[], &[], 2, &GbtParams::default());
+        assert_eq!(e.predict(&[0.0; F_MAX]), 0.0);
+        // single sample
+        let e1 = train(&[[0.1; F_MAX]], &[5.0], 2, &GbtParams::default());
+        assert!((e1.predict(&[0.9; F_MAX]) - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn deterministic() {
+        let mut rng = Pcg32::new(6, 0);
+        let (xs, y) = make_data(&mut rng, 60, |x| x[0] as f64);
+        let a = train(&xs, &y, 2, &GbtParams::default());
+        let b = train(&xs, &y, 2, &GbtParams::default());
+        assert_eq!(a, b);
+    }
+}

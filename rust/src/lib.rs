@@ -1,0 +1,31 @@
+//! # ceal — in-situ workflow auto-tuning via combined component models
+//!
+//! Reproduction of *"In-situ Workflow Auto-tuning via Combining
+//! Performance Models of Component Applications"* (CEAL, cs.DC 2020).
+//!
+//! The crate is the Layer-3 Rust coordinator of a three-layer stack:
+//!
+//! * **L3 (this crate)** — configuration spaces, the in-situ workflow
+//!   simulator substrate, gradient-boosted-tree training, the CEAL
+//!   auto-tuning algorithm and its baselines (RS / AL / GEIST / ALpH),
+//!   metrics, and the experiment harness for every paper table/figure.
+//! * **L2 (python/compile/model.py)** — JAX scoring graphs (ensemble
+//!   inference + Eqn 1/2 low-fidelity combination), AOT-lowered once to
+//!   HLO text in `artifacts/`.
+//! * **L1 (python/compile/kernels/)** — the Pallas oblivious-GBT
+//!   inference kernel those graphs call.
+//!
+//! Python never runs on the tuning path: [`runtime`] loads the HLO
+//! artifacts via PJRT and executes them with trained ensembles passed
+//! as runtime tensors.
+
+pub mod config;
+pub mod coordinator;
+pub mod exper;
+pub mod gbt;
+pub mod metrics;
+pub mod runtime;
+pub mod sim;
+pub mod surrogate;
+pub mod tuner;
+pub mod util;

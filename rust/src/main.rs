@@ -1,0 +1,179 @@
+//! `ceal` — the leader binary: reproduce paper tables/figures, or run a
+//! single tuning campaign.
+//!
+//! ```text
+//! ceal table <1|2>          reproduce a paper table
+//! ceal fig <4..13>          reproduce a paper figure
+//! ceal all                  everything (the `make repro` target)
+//! ceal tune                 one tuning campaign (see flags below)
+//! ceal info                 runtime/artifact diagnostics
+//!
+//! common flags:
+//!   --out DIR         output directory for CSVs        [results]
+//!   --reps N          repetitions per campaign cell    [40]
+//!   --pool N          pool / test-set size             [2000]
+//!   --seed N          root seed                        [0xCEA1]
+//!   --threads N       worker threads                   [#cpus]
+//!   --scorer S        native | pjrt                    [native]
+//! tune flags:
+//!   --workflow W      LV | HS | GP                     [LV]
+//!   --objective O     exec | comp                      [comp]
+//!   --algo A          rs|al|geist|ceal|ceal+hist|alph|alph+hist [ceal]
+//!   --m N             training-sample budget           [50]
+//! ```
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use ceal::config::WorkflowId;
+use ceal::coordinator::{run_campaign, Algo, ScorerKind};
+use ceal::exper::{self, ExpCtx};
+use ceal::sim::Objective;
+use ceal::util::cli::Args;
+use ceal::util::table::fnum;
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn parse_ctx(args: &Args) -> Result<ExpCtx, String> {
+    let mut ctx = ExpCtx::default();
+    ctx.out_dir = PathBuf::from(args.opt_or("out", "results"));
+    ctx.reps = args.opt_usize("reps", ctx.reps)?;
+    ctx.pool_size = args.opt_usize("pool", ctx.pool_size)?;
+    ctx.seed = args.opt_u64("seed", ctx.seed)?;
+    ctx.threads = args.opt_usize("threads", ctx.threads)?;
+    ctx.scorer = match args.opt_or("scorer", "native") {
+        "native" => ScorerKind::Native,
+        "pjrt" => ScorerKind::Pjrt,
+        other => return Err(format!("unknown --scorer '{other}' (native|pjrt)")),
+    };
+    Ok(ctx)
+}
+
+fn run() -> Result<(), String> {
+    let args = Args::parse_env()?;
+    let ctx = parse_ctx(&args)?;
+    match args.subcommand.as_deref() {
+        Some("table") => {
+            let n: usize = args
+                .positionals
+                .first()
+                .ok_or("usage: ceal table <1|2>")?
+                .parse()
+                .map_err(|e| format!("bad table number: {e}"))?;
+            if !exper::run_table(n, &ctx) {
+                return Err(format!("no table {n} (have 1, 2)"));
+            }
+        }
+        Some("fig") => {
+            let n: usize = args
+                .positionals
+                .first()
+                .ok_or("usage: ceal fig <4..13>")?
+                .parse()
+                .map_err(|e| format!("bad figure number: {e}"))?;
+            if !exper::run_fig(n, &ctx) {
+                return Err(format!("no figure {n} (have 4..13)"));
+            }
+        }
+        Some("all") => exper::run_all(&ctx),
+        Some("ablation") => exper::ablations::run(&ctx),
+        Some("tune") => tune(&args, &ctx)?,
+        Some("info") => info(),
+        other => {
+            eprintln!("{}", usage());
+            if let Some(cmd) = other {
+                return Err(format!("unknown subcommand '{cmd}'"));
+            }
+        }
+    }
+    Ok(())
+}
+
+fn tune(args: &Args, ctx: &ExpCtx) -> Result<(), String> {
+    let wf = WorkflowId::from_name(args.opt_or("workflow", "LV"))
+        .ok_or("unknown --workflow (LV|HS|GP)")?;
+    let obj = Objective::from_name(args.opt_or("objective", "comp"))
+        .ok_or("unknown --objective (exec|comp)")?;
+    let algo =
+        Algo::from_name(args.opt_or("algo", "ceal")).ok_or("unknown --algo")?;
+    let m = args.opt_usize("m", 50)?;
+    println!(
+        "tuning {wf} for {obj} with {algo}, m={m}, pool={}, reps={}, scorer={:?}",
+        ctx.pool_size, ctx.reps, ctx.scorer
+    );
+    let mut campaign = ctx.campaign(wf, obj, m);
+    // optional CEAL/ALpH hyper-parameter overrides (Fig. 13 territory)
+    if args.opt("mr").is_some() || args.opt("m0").is_some() || args.opt("iters").is_some() {
+        let base = match algo {
+            Algo::CealHist | Algo::AlphHist => ceal::tuner::CealParams::with_hist(),
+            _ => ceal::tuner::CealParams::no_hist(),
+        };
+        campaign = campaign.with_ceal_params(ceal::tuner::CealParams {
+            iterations: args.opt_usize("iters", base.iterations)?,
+            m0_frac: args.opt_f64("m0", base.m0_frac)?,
+            mr_frac: args.opt_f64("mr", base.mr_frac)?,
+        });
+    }
+    let agg = run_campaign(algo, &campaign);
+    println!(
+        "pool best     : {} {}",
+        fnum(agg.pool_best, 4),
+        obj.unit()
+    );
+    println!(
+        "expert config : {} {}",
+        fnum(agg.expert_value, 4),
+        obj.unit()
+    );
+    println!(
+        "tuned (mean)  : {} {}  (normalized {:.3})",
+        fnum(agg.mean_best(), 4),
+        obj.unit(),
+        agg.mean_norm_best()
+    );
+    println!(
+        "top-1 recall  : {:.0}%   collection cost {} {}",
+        agg.mean_recall(1) * 100.0,
+        fnum(agg.mean_cost(), 3),
+        obj.unit()
+    );
+    match agg.payoff_runs() {
+        Some(p) => println!("pays off after {} workflow runs", fnum(p, 0)),
+        None => println!("does not beat the expert configuration"),
+    }
+    Ok(())
+}
+
+fn info() {
+    println!("ceal {} — CEAL in-situ workflow auto-tuning reproduction", env!("CARGO_PKG_VERSION"));
+    println!("artifacts dir: {}", ceal::runtime::artifacts_dir().display());
+    match ceal::runtime::Runtime::load_default() {
+        Ok(rt) => {
+            println!("PJRT runtime : OK (platform {})", rt.platform());
+            println!("artifact meta: {:?}", rt.meta);
+        }
+        Err(e) => println!("PJRT runtime : unavailable — {e:#}"),
+    }
+    for id in WorkflowId::ALL {
+        let spec = id.spec();
+        println!(
+            "workflow {:<3}: {} components, {} params, space {:.1e}",
+            id.name(),
+            spec.components.len(),
+            spec.n_params(),
+            spec.space_size() as f64
+        );
+    }
+}
+
+fn usage() -> &'static str {
+    "usage: ceal <table N | fig N | all | tune | info> [flags]\n(see `ceal` source header or README for flags)"
+}

@@ -1,0 +1,122 @@
+//! Evaluation metrics (paper §7.2): recall score, median absolute
+//! percentage error, and the least-number-of-uses payoff metric.
+
+use crate::util::stats;
+
+/// Recall score S_r(n) (Eqn 3): the fraction of the model's top-n
+/// configurations that are also in the measured top-n.  Both inputs are
+/// "lower is better" (times); "top" = smallest.
+pub fn recall_score(n: usize, predicted: &[f64], actual: &[f64]) -> f64 {
+    assert_eq!(predicted.len(), actual.len());
+    assert!(n >= 1, "recall needs n >= 1");
+    let n = n.min(predicted.len());
+    let top_pred = stats::bottom_k_indices(predicted, n);
+    let top_act = stats::bottom_k_indices(actual, n);
+    let act_set: std::collections::HashSet<usize> = top_act.into_iter().collect();
+    let hits = top_pred.iter().filter(|i| act_set.contains(i)).count();
+    hits as f64 / n as f64
+}
+
+/// Sum of top-1..3 recalls — the model-switch statistic of Alg. 1
+/// lines 17-19.
+pub fn recall_sum_123(predicted: &[f64], actual: &[f64]) -> f64 {
+    (1..=3).map(|n| recall_score(n, predicted, actual)).sum()
+}
+
+/// Absolute percentage error of one prediction.
+pub fn ape(actual: f64, predicted: f64) -> f64 {
+    ((actual - predicted) / actual).abs()
+}
+
+/// Median APE over a sample set (paper §7.4.2).
+pub fn mdape(actual: &[f64], predicted: &[f64]) -> f64 {
+    assert_eq!(actual.len(), predicted.len());
+    assert!(!actual.is_empty());
+    let apes: Vec<f64> = actual
+        .iter()
+        .zip(predicted)
+        .map(|(&a, &p)| ape(a, p))
+        .collect();
+    stats::median(&apes)
+}
+
+/// MdAPE restricted to the actually-best `frac` fraction of samples
+/// (paper Fig. 6 uses the top 2%).
+pub fn mdape_top_fraction(actual: &[f64], predicted: &[f64], frac: f64) -> f64 {
+    assert!((0.0..=1.0).contains(&frac));
+    let k = ((actual.len() as f64 * frac).ceil() as usize).max(1);
+    let idx = stats::bottom_k_indices(actual, k);
+    let a: Vec<f64> = idx.iter().map(|&i| actual[i]).collect();
+    let p: Vec<f64> = idx.iter().map(|&i| predicted[i]).collect();
+    mdape(&a, &p)
+}
+
+/// Least number of uses (paper §7.2.3): N = c / Δp, where `cost` is the
+/// total collection cost (sum of objective values over all training
+/// runs) and Δp is the per-run improvement of the tuned configuration
+/// over the expert recommendation.  Returns None when the tuned config
+/// is no better than the expert (the auto-tuner never pays off).
+pub fn least_number_of_uses(cost: f64, expert_value: f64, tuned_value: f64) -> Option<f64> {
+    let delta = expert_value - tuned_value;
+    if delta <= 0.0 {
+        None
+    } else {
+        Some(cost / delta)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recall_perfect_and_disjoint() {
+        let actual = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(recall_score(3, &actual, &actual), 1.0);
+        let anti = [5.0, 4.0, 3.0, 2.0, 1.0];
+        assert_eq!(recall_score(2, &anti, &actual), 0.0);
+        // top-3 of anti = {4,3,2 indices} vs actual {0,1,2}: overlap {2}
+        assert!((recall_score(3, &anti, &actual) - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn recall_top1_is_probability_of_best() {
+        let actual = [3.0, 1.0, 2.0];
+        let good = [0.9, 0.1, 0.5];
+        let bad = [0.1, 0.9, 0.5];
+        assert_eq!(recall_score(1, &good, &actual), 1.0);
+        assert_eq!(recall_score(1, &bad, &actual), 0.0);
+    }
+
+    #[test]
+    fn recall_sum_bounds() {
+        let actual = [1.0, 2.0, 3.0, 4.0];
+        let s = recall_sum_123(&actual, &actual);
+        assert!((s - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mdape_basics() {
+        let actual = [100.0, 200.0, 400.0];
+        let pred = [110.0, 180.0, 400.0];
+        // APEs: 0.10, 0.10, 0.0 -> median 0.10
+        assert!((mdape(&actual, &pred) - 0.10).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mdape_top_fraction_restricts() {
+        // best 2 samples predicted perfectly; worst predicted terribly
+        let actual = [1.0, 2.0, 100.0, 200.0];
+        let pred = [1.0, 2.0, 500.0, 900.0];
+        assert_eq!(mdape_top_fraction(&actual, &pred, 0.5), 0.0);
+        assert!(mdape(&actual, &pred) > 1.0);
+    }
+
+    #[test]
+    fn payoff_math() {
+        // paper §7.4.4: cost c, improvement Δp per run
+        let n = least_number_of_uses(864.0 * 0.5, 4.0, 3.5).unwrap();
+        assert!((n - 864.0).abs() < 1e-9);
+        assert!(least_number_of_uses(10.0, 3.0, 3.5).is_none());
+    }
+}

@@ -1,0 +1,92 @@
+//! Gray-Scott reaction-diffusion model (GP's simulation component).
+//!
+//! Parameters (Table 1): `procs` 2..1085, `ppn` 1..35.
+//!
+//! Model: 3-D stencil + reaction over a fixed grid, dumping the U field
+//! every `IO_INTERVAL` steps (GP's dump cadence is not configurable).
+//! Per-step time = compute (∝ cells/proc with memory contention) +
+//! halo surface term + collectives.
+
+use super::SourceProfile;
+use crate::sim::machine::Machine;
+
+/// Grid cells (3-D, 384³ ≈ 56.6 M).
+pub const CELLS: f64 = 384.0 * 384.0 * 384.0;
+/// Total simulation steps.
+pub const N_STEPS: f64 = 1_000.0;
+/// Steps between dumps (fixed by the workflow, not a Table 1 param).
+pub const IO_INTERVAL: f64 = 50.0;
+/// Per-cell-step compute coefficient, proc·s per cell.
+pub const K_COMPUTE: f64 = 1.23e-7;
+/// Halo coefficient, seconds per (cells/proc)^(2/3) per step.
+pub const K_HALO: f64 = 1.1e-6;
+/// Collective coefficient, s·log2(p) per step.
+pub const K_COLLECTIVE: f64 = 8.0e-5;
+/// Memory demand per busy core, GB/s.
+pub const GB_PER_CORE: f64 = 5.0;
+/// Dump serialization bandwidth, GB/s per node.
+pub const SER_BW_GBPS: f64 = 1.5;
+
+/// Bytes per dump (U field, f64).
+pub fn dump_bytes() -> f64 {
+    CELLS * 8.0
+}
+
+/// cfg = [procs, ppn]
+pub fn profile(cfg: &[i64], m: &Machine) -> SourceProfile {
+    let (p, ppn) = (cfg[0], cfg[1]);
+    let pf = p as f64;
+    let nodes = m.nodes_for(p, ppn);
+
+    let cells_per_proc = CELLS / pf;
+    let mem = 1.0 / m.mem_factor(ppn, 1, GB_PER_CORE);
+    let oversub = m.oversub_factor(ppn, 1);
+    let t_compute = K_COMPUTE * cells_per_proc * mem * oversub;
+    let t_halo = K_HALO * cells_per_proc.powf(2.0 / 3.0);
+    let t_step = t_compute + t_halo + K_COLLECTIVE * pf.log2();
+
+    let t_dump = dump_bytes() / (SER_BW_GBPS * 1e9 * nodes as f64);
+
+    SourceProfile {
+        n_chunks: (N_STEPS / IO_INTERVAL) as usize,
+        t_chunk_s: IO_INTERVAL * t_step + t_dump,
+        bytes_per_chunk: dump_bytes(),
+        procs: p,
+        ppn,
+        nodes,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn busy(cfg: &[i64]) -> f64 {
+        let m = Machine::default();
+        let p = profile(cfg, &m);
+        p.n_chunks as f64 * p.t_chunk_s
+    }
+
+    #[test]
+    fn scaling_helps_then_flattens() {
+        let tiny = busy(&[35, 35]);
+        let mid = busy(&[175, 13]);
+        let big = busy(&[525, 35]);
+        assert!(mid < tiny, "{tiny} vs {mid}");
+        assert!(big < mid * 1.2, "{mid} vs {big}");
+    }
+
+    #[test]
+    fn calibration_magnitude() {
+        // Expert-comp config (35, 35): minutes of busy time (Table 2:
+        // 292 s exec at 2 nodes).
+        let small = busy(&[35, 35]);
+        assert!(small > 200.0 && small < 400.0, "small {small}");
+        // Best-comp config (66, 34): ~150-190 s.
+        let mid = busy(&[66, 34]);
+        assert!(mid > 120.0 && mid < 220.0, "mid {mid}");
+        // Best-exec config (175, 13): under the 97 s G-Plot floor.
+        let fast = busy(&[175, 13]);
+        assert!(fast < 95.0, "fast {fast}");
+    }
+}

@@ -1,0 +1,125 @@
+//! Heat Transfer mini-app model (HS's simulation component).
+//!
+//! Parameters (Table 1): `px` 2..32, `py` 2..32 (2-D process grid,
+//! procs = px·py), `ppn` 1..35, `io_writes` 4..32 step 4 (how many full
+//! state snapshots are streamed out), `buffer_mb` 1..40 (ADIOS staging
+//! buffer).
+//!
+//! Model: 5-point stencil over a fixed global grid — per-step time is
+//! memory-bandwidth-bound compute (∝ cells/proc, strong ppn contention)
+//! plus halo exchange proportional to the local perimeter
+//! (favoring square-ish px×py aspect ratios).  Each of the `io_writes`
+//! snapshots pays a staging-write cost whose effective bandwidth grows
+//! with the ADIOS buffer size (small buffers force many synchronous
+//! flushes).
+
+use super::SourceProfile;
+use crate::sim::machine::Machine;
+
+/// Global grid edge (cells); state is GRID² f64 values.
+pub const GRID: f64 = 4096.0;
+/// Total time steps per run.
+pub const N_STEPS: f64 = 200.0;
+/// Per-cell-step compute coefficient, proc·s per cell.
+pub const K_COMPUTE: f64 = 2.4e-7;
+/// Halo-exchange coefficient, seconds per boundary cell per step.
+pub const K_HALO: f64 = 1.6e-6;
+/// Memory demand per busy core, GB/s (stencils are bandwidth-bound).
+pub const GB_PER_CORE: f64 = 6.0;
+/// Buffer half-saturation constant, MB: write bandwidth =
+/// nic · buf/(buf + BUF_HALF_MB).
+pub const BUF_HALF_MB: f64 = 24.0;
+/// Fixed per-write overhead, seconds.
+pub const WRITE_FIXED_S: f64 = 0.05;
+
+/// Snapshot size in bytes.
+pub fn snapshot_bytes() -> f64 {
+    GRID * GRID * 8.0
+}
+
+/// Staging-buffer efficiency factor in (0, 1].
+pub fn buffer_efficiency(buffer_mb: i64) -> f64 {
+    let b = buffer_mb as f64;
+    b / (b + BUF_HALF_MB)
+}
+
+/// Pipeline buffer slots granted by `buffer_mb` (1..4).
+pub fn buffer_slots(buffer_mb: i64) -> usize {
+    ((buffer_mb as f64 / 10.0).ceil() as usize).clamp(1, 4)
+}
+
+/// cfg = [px, py, ppn, io_writes, buffer_mb]
+pub fn profile(cfg: &[i64], m: &Machine) -> SourceProfile {
+    let (px, py, ppn, writes, buf) = (cfg[0], cfg[1], cfg[2], cfg[3], cfg[4]);
+    let procs = px * py;
+    let nodes = m.nodes_for(procs, ppn);
+
+    let cells_per_proc = GRID * GRID / procs as f64;
+    let mem = 1.0 / m.mem_factor(ppn, 1, GB_PER_CORE);
+    let oversub = m.oversub_factor(ppn, 1);
+    let t_compute = K_COMPUTE * cells_per_proc * mem * oversub;
+    // local block perimeter: favor balanced aspect ratios
+    let t_halo = K_HALO * (GRID / px as f64 + GRID / py as f64);
+    let t_step = t_compute + t_halo;
+
+    let steps_per_write = N_STEPS / writes as f64;
+    let write_bw = m.nic_bw_gbps * 1e9 * buffer_efficiency(buf) * nodes as f64;
+    let t_write = snapshot_bytes() / write_bw + WRITE_FIXED_S;
+
+    SourceProfile {
+        n_chunks: writes as usize,
+        t_chunk_s: steps_per_write * t_step + t_write,
+        bytes_per_chunk: snapshot_bytes(),
+        procs,
+        ppn,
+        nodes,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn busy(cfg: &[i64]) -> f64 {
+        let m = Machine::default();
+        let p = profile(cfg, &m);
+        p.n_chunks as f64 * p.t_chunk_s
+    }
+
+    #[test]
+    fn aspect_ratio_matters() {
+        // same procs, skewed vs square decomposition
+        let square = busy(&[16, 16, 16, 8, 20]);
+        let skewed = busy(&[2, 32, 16, 8, 20]); // 64 procs vs 256 -> use same
+        let skewed_same = busy(&[8, 32, 16, 8, 20]);
+        let square_same = busy(&[16, 16, 16, 8, 20]);
+        assert!(square_same < skewed_same, "{square_same} vs {skewed_same}");
+        let _ = (square, skewed);
+    }
+
+    #[test]
+    fn ppn_contention_hurts_stencil() {
+        // same procs spread thin vs packed dense
+        let thin = busy(&[16, 16, 8, 8, 20]); // 32 nodes
+        let dense = busy(&[16, 16, 32, 8, 20]); // 8 nodes
+        assert!(dense > thin, "memory contention: {thin} vs {dense}");
+    }
+
+    #[test]
+    fn buffer_efficiency_monotone() {
+        assert!(buffer_efficiency(1) < buffer_efficiency(20));
+        assert!(buffer_efficiency(20) < buffer_efficiency(40));
+        assert!(buffer_slots(1) == 1);
+        assert!(buffer_slots(40) == 4);
+    }
+
+    #[test]
+    fn calibration_magnitude() {
+        // Best-exec-like config (13, 17, 14, 4, 29): ~4-6 s busy.
+        let best = busy(&[13, 17, 14, 4, 29]);
+        assert!(best > 2.5 && best < 7.0, "best {best}");
+        // Expert-comp config (8, 4, 32, 4, 20): tens of seconds.
+        let small = busy(&[8, 4, 32, 4, 20]);
+        assert!(small > 25.0 && small < 80.0, "small {small}");
+    }
+}

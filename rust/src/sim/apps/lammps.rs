@@ -1,0 +1,120 @@
+//! LAMMPS molecular-dynamics model (LV's simulation component).
+//!
+//! Parameters (Table 1): `procs` 2..1085, `ppn` 1..35, `tpp` 1..4,
+//! `io_steps` 50..400 step 50.  Workload: 16 000 atoms, 2000 timesteps,
+//! dumping positions + velocities every `io_steps` steps over staging.
+//!
+//! Model: per-step time = spatial-decomposition compute (∝ atoms/proc,
+//! hybrid MPI+OpenMP with sublinear thread scaling, memory-bandwidth
+//! contention at high ppn, oversubscription penalty past 36 threads per
+//! node) + communication (logarithmic collectives + halo surface term).
+//! Each dump serializes the frame and pays a per-dump overhead.
+
+use super::{thread_speedup, SourceProfile};
+use crate::sim::machine::Machine;
+
+/// Atoms in the benchmark problem (paper: 16 000).
+pub const N_ATOMS: f64 = 16_000.0;
+/// Total MD timesteps per run.
+pub const N_STEPS: f64 = 2_000.0;
+/// Bytes per atom per frame (3D pos + vel, f64).
+pub const BYTES_PER_ATOM: f64 = 48.0;
+
+/// Per-atom-step work coefficient (proc·s per atom per step).
+pub const K_COMPUTE: f64 = 1.8e-4;
+/// Collective-communication coefficient (s × log2(p) per step).
+pub const K_COLLECTIVE: f64 = 5.0e-4;
+/// Halo-exchange coefficient (s per (atoms/proc)^(2/3) per step).
+pub const K_HALO: f64 = 6.0e-6;
+/// Thread-scaling exponent (LAMMPS OpenMP threads help, sublinearly).
+pub const THREAD_EXP: f64 = 0.75;
+/// Memory-bandwidth demand per busy core, GB/s.
+pub const GB_PER_CORE: f64 = 1.7;
+/// Frame serialization bandwidth, GB/s (gather + pack on ranks).
+pub const SER_BW_GBPS: f64 = 0.5;
+/// Fixed per-dump overhead, seconds (ADIOS open/close + metadata).
+pub const DUMP_FIXED_S: f64 = 0.03;
+
+/// cfg = [procs, ppn, tpp, io_steps]
+pub fn profile(cfg: &[i64], m: &Machine) -> SourceProfile {
+    let (p, ppn, tpp, io) = (cfg[0], cfg[1], cfg[2], cfg[3]);
+    let pf = p as f64;
+
+    let speedup = pf * thread_speedup(tpp, THREAD_EXP);
+    let mem = 1.0 / m.mem_factor(ppn, tpp, GB_PER_CORE);
+    let oversub = m.oversub_factor(ppn, tpp);
+    let t_compute = K_COMPUTE * N_ATOMS / speedup * mem * oversub;
+
+    let t_collective = K_COLLECTIVE * pf.log2();
+    let t_halo = K_HALO * (N_ATOMS / pf).powf(2.0 / 3.0);
+    let t_step = t_compute + t_collective + t_halo;
+
+    let bytes = N_ATOMS * BYTES_PER_ATOM;
+    let t_dump = bytes / (SER_BW_GBPS * 1e9) + DUMP_FIXED_S;
+
+    let n_chunks = (N_STEPS / io as f64).ceil() as usize;
+    SourceProfile {
+        n_chunks,
+        t_chunk_s: io as f64 * t_step + t_dump,
+        bytes_per_chunk: bytes,
+        procs: p,
+        ppn,
+        nodes: m.nodes_for(p, ppn),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn total_busy(cfg: &[i64]) -> f64 {
+        let m = Machine::default();
+        let pr = profile(cfg, &m);
+        pr.n_chunks as f64 * pr.t_chunk_s
+    }
+
+    #[test]
+    fn more_procs_faster_until_comm_dominates() {
+        let small = total_busy(&[16, 16, 1, 200]);
+        let mid = total_busy(&[256, 16, 1, 200]);
+        let large = total_busy(&[1024, 32, 1, 200]);
+        assert!(mid < small, "scaling up should help: {small} -> {mid}");
+        // at 1024 procs the log collective term keeps it from improving
+        // proportionally (16 atoms/proc)
+        assert!(large > mid * 0.5, "comm floor: {mid} -> {large}");
+    }
+
+    #[test]
+    fn oversubscription_hurts() {
+        let ok = total_busy(&[140, 35, 1, 200]); // 35 threads/node
+        let bad = total_busy(&[140, 35, 4, 200]); // 140 threads/node
+        assert!(
+            bad > ok,
+            "4 threads on an oversubscribed node must be slower: {ok} vs {bad}"
+        );
+    }
+
+    #[test]
+    fn io_interval_trades_dumps() {
+        let m = Machine::default();
+        let frequent = profile(&[200, 20, 1, 50], &m);
+        let rare = profile(&[200, 20, 1, 400], &m);
+        assert_eq!(frequent.n_chunks, 40);
+        assert_eq!(rare.n_chunks, 5);
+        let busy_frequent = frequent.n_chunks as f64 * frequent.t_chunk_s;
+        let busy_rare = rare.n_chunks as f64 * rare.t_chunk_s;
+        // more dumps -> more serialization overhead
+        assert!(busy_frequent > busy_rare);
+    }
+
+    #[test]
+    fn calibration_magnitude() {
+        // Best-exec-like config should complete its busy time in tens of
+        // seconds (Table 2: 27.2 s wall-clock for the workflow).
+        let busy = total_busy(&[430, 23, 1, 300]);
+        assert!(busy > 10.0 && busy < 45.0, "busy {busy}");
+        // Expert-comp-like config (18 procs) runs minutes.
+        let busy_small = total_busy(&[18, 18, 2, 400]);
+        assert!(busy_small > 100.0 && busy_small < 400.0, "busy {busy_small}");
+    }
+}

@@ -1,0 +1,65 @@
+//! Per-component performance models — the substitutes for the paper's
+//! real applications (§7.1).  Each module exposes a `profile` function
+//! mapping the component's Table 1 parameters (plus the incoming data
+//! rate for consumers) to a per-chunk processing profile consumed by
+//! the pipeline DES.
+//!
+//! The models are analytic (Amdahl-style scaling, communication terms,
+//! memory-bandwidth contention, CPU oversubscription) with constants
+//! calibrated so Table 2's magnitudes and winners are reproduced.  The
+//! auto-tuner treats them as black boxes, exactly as the paper treats
+//! its applications.
+
+pub mod grayscott;
+pub mod heat;
+pub mod lammps;
+pub mod pdfcalc;
+pub mod plots;
+pub mod stagewrite;
+pub mod voro;
+
+/// Profile of a source stage (simulation): generates `n_chunks` chunks.
+#[derive(Clone, Copy, Debug)]
+pub struct SourceProfile {
+    pub n_chunks: usize,
+    /// Deterministic per-chunk compute + emit time, seconds.
+    pub t_chunk_s: f64,
+    /// Bytes streamed downstream per chunk.
+    pub bytes_per_chunk: f64,
+    pub procs: i64,
+    pub ppn: i64,
+    pub nodes: u64,
+}
+
+/// Profile of a consumer stage (analysis / visualization / writer).
+#[derive(Clone, Copy, Debug)]
+pub struct ConsumerProfile {
+    /// Deterministic per-chunk processing time, seconds.
+    pub t_chunk_s: f64,
+    /// Bytes this stage emits downstream per chunk (0 for sinks).
+    pub bytes_per_chunk_out: f64,
+    pub procs: i64,
+    pub ppn: i64,
+    pub nodes: u64,
+}
+
+/// Thread-scaling efficiency: `tpp^exponent` speedup (exponent < 1
+/// models synchronization + serial fractions; lower = worse threading).
+pub fn thread_speedup(tpp: i64, exponent: f64) -> f64 {
+    (tpp as f64).powf(exponent)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thread_speedup_monotone_sublinear() {
+        let s1 = thread_speedup(1, 0.75);
+        let s2 = thread_speedup(2, 0.75);
+        let s4 = thread_speedup(4, 0.75);
+        assert_eq!(s1, 1.0);
+        assert!(s2 > 1.0 && s2 < 2.0);
+        assert!(s4 > s2 && s4 < 4.0);
+    }
+}

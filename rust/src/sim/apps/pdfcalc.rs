@@ -1,0 +1,65 @@
+//! PDF-calculator model (GP's analysis component): computes per-slice
+//! probability-density histograms of the Gray-Scott U field.
+//!
+//! Parameters (Table 1): `procs` 1..512, `ppn` 1..35.
+//!
+//! Model: per-chunk time = ingest + embarrassingly-parallel histogram
+//! (∝ cells/proc) + a reduction that grows logarithmically with p.
+//! Output (the PDF itself) is tiny.
+
+use super::ConsumerProfile;
+use crate::sim::machine::Machine;
+
+/// Histogram work coefficient, proc·s per cell per chunk.
+pub const K_HIST: f64 = 3.0e-9;
+/// Reduction coefficient, s·log2(p+1) per chunk.
+pub const K_REDUCE: f64 = 8.0e-3;
+/// Ingest bandwidth per node, GB/s.
+pub const INGEST_BW_GBPS: f64 = 2.0;
+/// PDF output bytes per chunk (bins × slices × f64).
+pub const OUT_BYTES: f64 = 1000.0 * 384.0 * 8.0;
+
+/// cfg = [procs, ppn]; `bytes_in` = Gray-Scott dump size.
+pub fn profile(cfg: &[i64], bytes_in: f64, m: &Machine) -> ConsumerProfile {
+    let (p, ppn) = (cfg[0], cfg[1]);
+    let pf = p as f64;
+    let nodes = m.nodes_for(p, ppn);
+
+    let cells = bytes_in / 8.0;
+    let mem = 1.0 / m.mem_factor(ppn, 1, 2.0);
+    let t_hist = K_HIST * cells / pf * mem;
+    let t_reduce = K_REDUCE * (pf + 1.0).log2();
+    let t_ingest = bytes_in / (INGEST_BW_GBPS * 1e9 * nodes as f64);
+
+    ConsumerProfile {
+        t_chunk_s: t_ingest + t_hist + t_reduce,
+        bytes_per_chunk_out: OUT_BYTES,
+        procs: p,
+        ppn,
+        nodes,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::apps::grayscott;
+
+    fn t(cfg: &[i64]) -> f64 {
+        profile(cfg, grayscott::dump_bytes(), &Machine::default()).t_chunk_s
+    }
+
+    #[test]
+    fn parallelism_helps() {
+        assert!(t(&[64, 16]) < t(&[1, 1]));
+    }
+
+    #[test]
+    fn never_dominates_gp() {
+        // PDF should stay well under G-Plot's 4.85 s/chunk at sane sizes.
+        for cfg in [[1, 1], [24, 23], [256, 32], [512, 35]] {
+            let v = t(&cfg);
+            assert!(v < 4.0, "pdf {cfg:?} -> {v}");
+        }
+    }
+}

@@ -1,0 +1,58 @@
+//! G-Plot and P-Plot models (GP's visualization sinks).
+//!
+//! Neither is configurable (Table 1: one process each).  G-Plot renders
+//! every Gray-Scott dump and is GP's hard bottleneck: the paper notes
+//! that running it alone takes 97.0 s, which is why many GP
+//! configurations share nearly identical execution times.  P-Plot
+//! renders the (tiny) PDF output and is fast.
+
+use super::ConsumerProfile;
+use crate::sim::machine::Machine;
+
+/// G-Plot total rendering time across all chunks, seconds (paper: 97.0).
+pub const GPLOT_TOTAL_S: f64 = 97.0;
+/// P-Plot total rendering time across all chunks, seconds.
+pub const PPLOT_TOTAL_S: f64 = 9.0;
+
+/// G-Plot profile for a run of `n_chunks` dumps.
+pub fn gplot_profile(n_chunks: usize, _m: &Machine) -> ConsumerProfile {
+    ConsumerProfile {
+        t_chunk_s: GPLOT_TOTAL_S / n_chunks as f64,
+        bytes_per_chunk_out: 0.0,
+        procs: 1,
+        ppn: 1,
+        nodes: 0, // colocated with the analysis allocation
+    }
+}
+
+/// P-Plot profile for a run of `n_chunks` PDF outputs.
+pub fn pplot_profile(n_chunks: usize, _m: &Machine) -> ConsumerProfile {
+    ConsumerProfile {
+        t_chunk_s: PPLOT_TOTAL_S / n_chunks as f64,
+        bytes_per_chunk_out: 0.0,
+        procs: 1,
+        ppn: 1,
+        nodes: 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gplot_total_is_fixed() {
+        let m = Machine::default();
+        for k in [5usize, 20, 40] {
+            let p = gplot_profile(k, &m);
+            let total = p.t_chunk_s * k as f64;
+            assert!((total - GPLOT_TOTAL_S).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn pplot_much_faster() {
+        let m = Machine::default();
+        assert!(pplot_profile(20, &m).t_chunk_s < gplot_profile(20, &m).t_chunk_s);
+    }
+}

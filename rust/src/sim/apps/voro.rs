@@ -1,0 +1,102 @@
+//! Voro++ Voronoi-tesselation model (LV's analysis component).
+//!
+//! Parameters (Table 1): `procs` 2..1085, `ppn` 1..35, `tpp` 1..4.
+//! Consumes LAMMPS frames from staging; per frame it deserializes,
+//! redistributes particles, computes the tesselation and renders cell
+//! statistics.
+//!
+//! Model: per-chunk time = serial fraction (I/O + merge on rank 0) +
+//! parallel tesselation (∝ atoms·ln(atoms)/procs with weak thread
+//! scaling) + *linear-in-p* redistribution cost: the all-to-all particle
+//! exchange makes large process counts counterproductive — the optimum
+//! sits at a moderate p, which is what makes LV's joint tuning
+//! non-trivial (a big Voro++ allocation wastes nodes AND slows the
+//! pipeline).
+
+use super::{thread_speedup, ConsumerProfile};
+use crate::sim::machine::Machine;
+
+/// Serial per-frame overhead, seconds.
+pub const SERIAL_S: f64 = 0.30;
+/// Parallel tesselation work, proc·seconds per frame (16k atoms).
+pub const W_PARALLEL: f64 = 80.0;
+/// All-to-all redistribution coefficient, seconds per proc per frame.
+pub const K_REDIST: f64 = 0.021;
+/// Thread-scaling exponent (Voro++ threads poorly).
+pub const THREAD_EXP: f64 = 0.30;
+/// Memory demand per busy core, GB/s (tesselation is compute-heavy).
+pub const GB_PER_CORE: f64 = 1.5;
+/// Ingest deserialization bandwidth, GB/s per node.
+pub const INGEST_BW_GBPS: f64 = 1.2;
+
+/// cfg = [procs, ppn, tpp]; `bytes_in` = frame size from the producer.
+pub fn profile(cfg: &[i64], bytes_in: f64, m: &Machine) -> ConsumerProfile {
+    let (p, ppn, tpp) = (cfg[0], cfg[1], cfg[2]);
+    let pf = p as f64;
+    let nodes = m.nodes_for(p, ppn);
+
+    let speedup = pf * thread_speedup(tpp, THREAD_EXP);
+    let mem = 1.0 / m.mem_factor(ppn, tpp, GB_PER_CORE);
+    let oversub = m.oversub_factor(ppn, tpp);
+    let t_parallel = W_PARALLEL / speedup * mem * oversub;
+    let t_redist = K_REDIST * pf;
+    let t_ingest = bytes_in / (INGEST_BW_GBPS * 1e9 * nodes as f64);
+
+    ConsumerProfile {
+        t_chunk_s: SERIAL_S + t_parallel + t_redist + t_ingest,
+        bytes_per_chunk_out: 0.0,
+        procs: p,
+        ppn,
+        nodes,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::apps::lammps;
+
+    fn t(cfg: &[i64]) -> f64 {
+        let m = Machine::default();
+        profile(cfg, lammps::N_ATOMS * lammps::BYTES_PER_ATOM, &m).t_chunk_s
+    }
+
+    #[test]
+    fn u_shaped_in_procs() {
+        let small = t(&[8, 8, 1]);
+        let mid = t(&[88, 10, 1]);
+        let large = t(&[700, 20, 1]);
+        assert!(mid < small, "more procs should help at first: {small} vs {mid}");
+        assert!(
+            large > mid,
+            "redistribution must dominate at large p: {mid} vs {large}"
+        );
+    }
+
+    #[test]
+    fn threads_help_weakly() {
+        // ppn 8 so 4 threads stay under the 36-core node budget
+        let t1 = t(&[64, 8, 1]);
+        let t4 = t(&[64, 8, 4]);
+        assert!(t4 < t1, "threads should help: {t1} vs {t4}");
+        assert!(t4 > t1 * 0.55, "but only weakly (exp 0.3): {t1} vs {t4}");
+    }
+
+    #[test]
+    fn oversubscribed_threads_hurt() {
+        let ok = t(&[64, 16, 1]);
+        let over = t(&[64, 16, 4]); // 64 threads on 36 cores
+        assert!(over > ok, "oversubscription must cost: {ok} vs {over}");
+    }
+
+    #[test]
+    fn calibration_magnitude() {
+        // Best-exec Voro config (88, 10, 4): a frame should take a few
+        // seconds so 7 frames fit under LAMMPS' ~25 s busy time.
+        let best = t(&[88, 10, 4]);
+        assert!(best > 1.0 && best < 4.0, "best {best}");
+        // Expert (288, 18, 2): several times slower per frame.
+        let expert = t(&[288, 18, 2]);
+        assert!(expert > 6.0 && expert < 12.0, "expert {expert}");
+    }
+}

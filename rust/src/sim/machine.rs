@@ -1,0 +1,115 @@
+//! Cluster model: the substitute for the paper's 600-node Broadwell
+//! cluster with Omni-Path interconnect (§7.1). Workflows run with
+//! exclusive access to allocations of up to [`Machine::max_nodes`].
+
+/// Static machine parameters. Defaults mirror the paper's testbed:
+/// 2×18-core E5-2695v4 (36 cores, no hyperthreading), 128 GB DDR4,
+/// 100 Gb/s Omni-Path, and a parallel filesystem shared per allocation.
+#[derive(Clone, Copy, Debug)]
+pub struct Machine {
+    /// Largest allocation a workflow may use (paper: 32).
+    pub max_nodes: u64,
+    /// Physical cores per node (paper: 36).
+    pub cores_per_node: u64,
+    /// Aggregate per-node memory bandwidth, GB/s (DDR4-2400 4ch ×2).
+    pub mem_bw_gbps: f64,
+    /// Per-node network injection bandwidth, GB/s (100 Gb OPA ≈ 12.3).
+    pub nic_bw_gbps: f64,
+    /// Aggregate filesystem write bandwidth, GB/s.
+    pub fs_bw_gbps: f64,
+    /// Per-message network latency, seconds.
+    pub net_latency_s: f64,
+    /// Job launch overhead: fixed + per-node, seconds.
+    pub startup_fixed_s: f64,
+    pub startup_per_node_s: f64,
+}
+
+impl Default for Machine {
+    fn default() -> Self {
+        Machine {
+            max_nodes: 32,
+            cores_per_node: 36,
+            mem_bw_gbps: 120.0,
+            nic_bw_gbps: 12.3,
+            fs_bw_gbps: 6.0,
+            net_latency_s: 2.0e-6,
+            startup_fixed_s: 1.2,
+            startup_per_node_s: 0.02,
+        }
+    }
+}
+
+impl Machine {
+    /// Nodes needed to host `procs` ranks at `ppn` ranks per node.
+    pub fn nodes_for(&self, procs: i64, ppn: i64) -> u64 {
+        assert!(procs > 0 && ppn > 0, "procs/ppn must be positive");
+        ((procs + ppn - 1) / ppn) as u64
+    }
+
+    /// Startup (launch + connection establishment) for an allocation.
+    pub fn startup_s(&self, nodes: u64) -> f64 {
+        self.startup_fixed_s + self.startup_per_node_s * nodes as f64
+    }
+
+    /// Memory-bandwidth contention factor for `ppn` ranks × `tpp`
+    /// threads of a kernel needing `gb_per_core` GB/s per active core:
+    /// 1.0 when the node's bandwidth covers demand, < 1.0 otherwise.
+    pub fn mem_factor(&self, ppn: i64, tpp: i64, gb_per_core: f64) -> f64 {
+        let demand = (ppn * tpp) as f64 * gb_per_core;
+        if demand <= self.mem_bw_gbps {
+            1.0
+        } else {
+            self.mem_bw_gbps / demand
+        }
+    }
+
+    /// CPU oversubscription penalty: running `ppn*tpp` busy threads on
+    /// `cores_per_node` cores. 1.0 when not oversubscribed; grows a bit
+    /// super-linearly with the oversubscription ratio (context-switch
+    /// and cache thrash).
+    pub fn oversub_factor(&self, ppn: i64, tpp: i64) -> f64 {
+        let load = (ppn * tpp) as f64 / self.cores_per_node as f64;
+        if load <= 1.0 {
+            1.0
+        } else {
+            load
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nodes_for_rounds_up() {
+        let m = Machine::default();
+        assert_eq!(m.nodes_for(36, 36), 1);
+        assert_eq!(m.nodes_for(37, 36), 2);
+        assert_eq!(m.nodes_for(430, 23), 19);
+        assert_eq!(m.nodes_for(1, 35), 1);
+    }
+
+    #[test]
+    fn mem_factor_saturates() {
+        let m = Machine::default();
+        assert_eq!(m.mem_factor(4, 1, 2.0), 1.0);
+        let f = m.mem_factor(35, 4, 2.0); // demand 280 GB/s > 120
+        assert!(f < 0.5 && f > 0.3, "{f}");
+    }
+
+    #[test]
+    fn oversub_kicks_in_past_full() {
+        let m = Machine::default();
+        assert_eq!(m.oversub_factor(35, 1), 1.0);
+        assert_eq!(m.oversub_factor(36, 1), 1.0);
+        let f = m.oversub_factor(35, 4); // 140 threads on 36 cores
+        assert!(f > 3.8, "{f}");
+    }
+
+    #[test]
+    fn startup_grows_with_nodes() {
+        let m = Machine::default();
+        assert!(m.startup_s(32) > m.startup_s(1));
+    }
+}

@@ -1,0 +1,136 @@
+//! Measurement and optimization-objective types.
+//!
+//! The paper evaluates two objectives (§7.1): *execution time* — the
+//! longest component end-to-end wall-clock time — and *computer time* —
+//! execution time × nodes × cores-per-node (core-hours).
+
+/// Result of running a workflow (or an isolated component) once.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Measurement {
+    /// Wall-clock seconds (longest component).
+    pub exec_time_s: f64,
+    /// Core-hours consumed: exec_time × nodes × cores_per_node / 3600.
+    pub computer_time_core_h: f64,
+    /// Compute nodes allocated.
+    pub nodes: u64,
+}
+
+impl Measurement {
+    pub fn new(exec_time_s: f64, nodes: u64, cores_per_node: u64) -> Self {
+        Measurement {
+            exec_time_s,
+            computer_time_core_h: exec_time_s * nodes as f64 * cores_per_node as f64
+                / 3600.0,
+            nodes,
+        }
+    }
+}
+
+/// The optimization objective of a tuning campaign.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Objective {
+    /// Minimize wall-clock execution time (bottleneck metric → Eqn 1,
+    /// combine component predictions with `max`).
+    ExecTime,
+    /// Minimize core-hours (aggregate metric → Eqn 2, combine with
+    /// `sum`).
+    CompTime,
+}
+
+impl Objective {
+    pub const ALL: [Objective; 2] = [Objective::ExecTime, Objective::CompTime];
+
+    /// Extract this objective's scalar from a measurement (lower is
+    /// better for both).
+    pub fn value(&self, m: &Measurement) -> f64 {
+        match self {
+            Objective::ExecTime => m.exec_time_s,
+            Objective::CompTime => m.computer_time_core_h,
+        }
+    }
+
+    /// Combination-mode scalar fed to the `lowfi_score` artifact:
+    /// 1.0 selects max (Eqn 1), 0.0 selects sum (Eqn 2).
+    pub fn mode(&self) -> f32 {
+        match self {
+            Objective::ExecTime => 1.0,
+            Objective::CompTime => 0.0,
+        }
+    }
+
+    /// Combine per-component predictions on the native path (must match
+    /// the artifact semantics bit-for-bit in spirit: max vs sum).
+    pub fn combine(&self, parts: &[f64]) -> f64 {
+        match self {
+            Objective::ExecTime => parts.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+            Objective::CompTime => parts.iter().sum(),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Objective::ExecTime => "exec_time",
+            Objective::CompTime => "comp_time",
+        }
+    }
+
+    pub fn unit(&self) -> &'static str {
+        match self {
+            Objective::ExecTime => "s",
+            Objective::CompTime => "core-h",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<Objective> {
+        match name.to_ascii_lowercase().as_str() {
+            "exec" | "exec_time" | "execution" => Some(Objective::ExecTime),
+            "comp" | "comp_time" | "computer" => Some(Objective::CompTime),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for Objective {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn computer_time_formula() {
+        // 100 s on 1 node of 36 cores = 1 core-hour.
+        let m = Measurement::new(100.0, 1, 36);
+        assert!((m.computer_time_core_h - 1.0).abs() < 1e-12);
+        // scales linearly with nodes
+        let m10 = Measurement::new(100.0, 10, 36);
+        assert!((m10.computer_time_core_h - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn objective_extraction_and_mode() {
+        let m = Measurement::new(50.0, 4, 36);
+        assert_eq!(Objective::ExecTime.value(&m), 50.0);
+        assert!((Objective::CompTime.value(&m) - 2.0).abs() < 1e-12);
+        assert_eq!(Objective::ExecTime.mode(), 1.0);
+        assert_eq!(Objective::CompTime.mode(), 0.0);
+    }
+
+    #[test]
+    fn combination_functions() {
+        let parts = [3.0, 7.0, 2.0];
+        assert_eq!(Objective::ExecTime.combine(&parts), 7.0);
+        assert_eq!(Objective::CompTime.combine(&parts), 12.0);
+    }
+
+    #[test]
+    fn names_roundtrip() {
+        for o in Objective::ALL {
+            assert_eq!(Objective::from_name(o.name()), Some(o));
+        }
+        assert_eq!(Objective::from_name("comp"), Some(Objective::CompTime));
+    }
+}

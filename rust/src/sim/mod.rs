@@ -1,0 +1,19 @@
+//! The in-situ workflow simulator substrate — the testbed substitute
+//! (see DESIGN.md §2 for the substitution rationale).
+//!
+//! * [`machine`] — cluster model (nodes, cores, memory/NIC/FS bandwidth)
+//! * [`pipeline`] — streaming DES with staging buffers and backpressure
+//! * [`apps`] — analytic per-component performance models
+//! * [`workflows`] — LV / HS / GP assembly + isolated component runs
+//! * [`measurement`] — measurements and optimization objectives
+
+pub mod apps;
+pub mod machine;
+pub mod measurement;
+pub mod pipeline;
+pub mod workflows;
+
+pub use machine::Machine;
+pub use measurement::{Measurement, Objective};
+pub use pipeline::{Edge, Pipeline, PipelineResult, Stage};
+pub use workflows::WorkflowSim;

@@ -1,0 +1,362 @@
+//! Streaming-pipeline discrete-event model: the in-situ coupling
+//! substrate (ADIOS-style staging) the paper's workflows run on.
+//!
+//! A workflow is a DAG of *stages* (component applications) connected by
+//! *edges* (staging channels with a finite buffer and a per-chunk
+//! transfer time).  `K` data chunks flow from the source stage through
+//! every downstream stage in order.  The model captures the coupling
+//! effects that make in-situ tuning hard (§2.2):
+//!
+//! * **backpressure** — a producer blocks when a channel's buffer is
+//!   full (its next production cannot start until the consumer has
+//!   started draining the chunk `capacity` positions back);
+//! * **starvation** — a consumer idles until a chunk has been produced
+//!   and transferred;
+//! * **rate matching** — steady-state throughput is set by the slowest
+//!   stage, so per-component optima do not compose into a workflow
+//!   optimum.
+//!
+//! Chunks move strictly in order, which lets the schedule be computed by
+//! exact recurrences chunk-by-chunk in topological order — equivalent to
+//! an event-queue simulation of this network but cache-friendly and
+//! allocation-light (this sits on the auto-tuner's data-collection hot
+//! path: every training sample is one simulated run).
+
+/// One component application in the pipeline.
+#[derive(Clone, Debug)]
+pub struct Stage {
+    pub name: String,
+    /// Processing time per chunk (already includes any per-chunk noise).
+    pub t_chunk_s: Vec<f64>,
+    /// Nodes this stage occupies (bookkeeping for computer time).
+    pub nodes: u64,
+}
+
+/// A staging channel between two stages.
+#[derive(Clone, Copy, Debug)]
+pub struct Edge {
+    pub from: usize,
+    pub to: usize,
+    /// Per-chunk transfer time (bytes / effective bandwidth + latency).
+    pub t_transfer_s: f64,
+    /// Buffer capacity in chunks (>= 1). The producer of chunk `k` may
+    /// not start until the consumer has started chunk `k - capacity`.
+    pub capacity: usize,
+}
+
+/// A fully-assembled pipeline ready to simulate.
+#[derive(Clone, Debug)]
+pub struct Pipeline {
+    pub stages: Vec<Stage>,
+    pub edges: Vec<Edge>,
+}
+
+/// Simulation output.
+#[derive(Clone, Debug)]
+pub struct PipelineResult {
+    /// Wall-clock finish time of each stage's last chunk.
+    pub finish_s: Vec<f64>,
+    /// Total time each stage spent blocked on backpressure.
+    pub blocked_s: Vec<f64>,
+    /// Total time each stage spent starved waiting for input.
+    pub starved_s: Vec<f64>,
+}
+
+impl PipelineResult {
+    /// Workflow makespan (longest component wall-clock).
+    pub fn makespan_s(&self) -> f64 {
+        self.finish_s.iter().cloned().fold(0.0, f64::max)
+    }
+}
+
+impl Pipeline {
+    /// Number of chunks (identical across stages; asserted).
+    pub fn n_chunks(&self) -> usize {
+        let k = self.stages[0].t_chunk_s.len();
+        debug_assert!(
+            self.stages.iter().all(|s| s.t_chunk_s.len() == k),
+            "all stages must process the same chunk count"
+        );
+        k
+    }
+
+    /// Topological order of stage indices; panics on cycles (workflow
+    /// DAGs are acyclic by construction).
+    pub fn topo_order(&self) -> Vec<usize> {
+        let n = self.stages.len();
+        let mut indeg = vec![0usize; n];
+        for e in &self.edges {
+            assert!(e.from < n && e.to < n && e.from != e.to, "bad edge");
+            indeg[e.to] += 1;
+        }
+        let mut queue: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+        let mut order = Vec::with_capacity(n);
+        let mut head = 0;
+        while head < queue.len() {
+            let u = queue[head];
+            head += 1;
+            order.push(u);
+            for e in self.edges.iter().filter(|e| e.from == u) {
+                indeg[e.to] -= 1;
+                if indeg[e.to] == 0 {
+                    queue.push(e.to);
+                }
+            }
+        }
+        assert_eq!(order.len(), n, "pipeline graph has a cycle");
+        order
+    }
+
+    /// Run the in-order streaming schedule.
+    pub fn simulate(&self) -> PipelineResult {
+        let n = self.stages.len();
+        let k_chunks = self.n_chunks();
+        let order = self.topo_order();
+        // in/out edge index lists per stage
+        let mut in_edges: Vec<Vec<usize>> = vec![Vec::new(); n];
+        let mut out_edges: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for (i, e) in self.edges.iter().enumerate() {
+            assert!(e.capacity >= 1, "edge capacity must be >= 1");
+            in_edges[e.to].push(i);
+            out_edges[e.from].push(i);
+        }
+
+        // start[u][k]: when stage u begins processing chunk k
+        let mut start = vec![vec![0.0f64; k_chunks]; n];
+        let mut finish = vec![vec![0.0f64; k_chunks]; n];
+        let mut blocked = vec![0.0f64; n];
+        let mut starved = vec![0.0f64; n];
+
+        for k in 0..k_chunks {
+            for &u in &order {
+                let prev_done = if k == 0 { 0.0 } else { finish[u][k - 1] };
+                // Input availability: all in-edges must have delivered
+                // chunk k (producer finish + transfer).
+                let mut ready = prev_done;
+                let mut input_at: f64 = 0.0;
+                for &ei in &in_edges[u] {
+                    let e = &self.edges[ei];
+                    input_at = input_at.max(finish[e.from][k] + e.t_transfer_s);
+                }
+                if !in_edges[u].is_empty() {
+                    starved[u] += (input_at - prev_done).max(0.0);
+                    ready = ready.max(input_at);
+                }
+                // Backpressure: every out-edge needs a free buffer slot.
+                let mut slot_free: f64 = 0.0;
+                for &ei in &out_edges[u] {
+                    let e = &self.edges[ei];
+                    if k >= e.capacity {
+                        slot_free = slot_free.max(start[e.to][k - e.capacity]);
+                    }
+                }
+                blocked[u] += (slot_free - ready).max(0.0);
+                let s = ready.max(slot_free);
+                start[u][k] = s;
+                finish[u][k] = s + self.stages[u].t_chunk_s[k];
+            }
+        }
+
+        PipelineResult {
+            finish_s: (0..n).map(|u| finish[u][k_chunks - 1]).collect(),
+            blocked_s: blocked,
+            starved_s: starved,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chain(t0: f64, t1: f64, k: usize, cap: usize, xfer: f64) -> Pipeline {
+        Pipeline {
+            stages: vec![
+                Stage {
+                    name: "prod".into(),
+                    t_chunk_s: vec![t0; k],
+                    nodes: 1,
+                },
+                Stage {
+                    name: "cons".into(),
+                    t_chunk_s: vec![t1; k],
+                    nodes: 1,
+                },
+            ],
+            edges: vec![Edge {
+                from: 0,
+                to: 1,
+                t_transfer_s: xfer,
+                capacity: cap,
+            }],
+        }
+    }
+
+    #[test]
+    fn consumer_bound_throughput() {
+        // Slow consumer: steady-state rate = consumer rate; producer
+        // blocks on the buffer.
+        let k = 100;
+        let p = chain(1.0, 3.0, k, 2, 0.0);
+        let r = p.simulate();
+        // consumer starts first chunk at t=1, then runs back-to-back
+        let expect = 1.0 + 3.0 * k as f64;
+        assert!((r.makespan_s() - expect).abs() < 1e-9, "{}", r.makespan_s());
+        assert!(r.blocked_s[0] > 0.0, "producer should be backpressured");
+        assert!(r.starved_s[1] <= 1.0 + 1e-9);
+    }
+
+    #[test]
+    fn producer_bound_throughput() {
+        let k = 50;
+        let p = chain(2.0, 0.5, k, 4, 0.1);
+        let r = p.simulate();
+        // producer finishes at 2k; last chunk transfers + processes after
+        let expect = 2.0 * k as f64 + 0.1 + 0.5;
+        assert!((r.makespan_s() - expect).abs() < 1e-9);
+        assert_eq!(r.blocked_s[0], 0.0);
+        assert!(r.starved_s[1] > 0.0, "consumer should starve");
+    }
+
+    #[test]
+    fn buffer_one_serializes_tightly() {
+        // capacity 1: producer can produce chunk k only after consumer
+        // STARTS chunk k-1 -> still pipelined but tighter than cap 4.
+        let k = 40;
+        let tight = chain(1.0, 1.0, k, 1, 0.0).simulate().makespan_s();
+        let loose = chain(1.0, 1.0, k, 8, 0.0).simulate().makespan_s();
+        assert!(tight >= loose - 1e-9);
+        // equal-rate stages: both ~ k+1
+        assert!((loose - (k as f64 + 1.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fan_out_to_two_consumers() {
+        // GS -> {fast, slow}: makespan set by the slow branch.
+        let k = 30;
+        let p = Pipeline {
+            stages: vec![
+                Stage {
+                    name: "src".into(),
+                    t_chunk_s: vec![1.0; k],
+                    nodes: 2,
+                },
+                Stage {
+                    name: "fast".into(),
+                    t_chunk_s: vec![0.2; k],
+                    nodes: 1,
+                },
+                Stage {
+                    name: "slow".into(),
+                    t_chunk_s: vec![2.5; k],
+                    nodes: 1,
+                },
+            ],
+            edges: vec![
+                Edge {
+                    from: 0,
+                    to: 1,
+                    t_transfer_s: 0.0,
+                    capacity: 2,
+                },
+                Edge {
+                    from: 0,
+                    to: 2,
+                    t_transfer_s: 0.0,
+                    capacity: 2,
+                },
+            ],
+        };
+        let r = p.simulate();
+        let expect = 1.0 + 2.5 * k as f64; // slow branch dominates
+        assert!((r.makespan_s() - expect).abs() < 1e-9);
+        assert!(r.blocked_s[0] > 0.0, "src backpressured by slow branch");
+    }
+
+    #[test]
+    fn three_stage_chain_rate_is_bottleneck() {
+        let k = 60;
+        let p = Pipeline {
+            stages: vec![
+                Stage {
+                    name: "a".into(),
+                    t_chunk_s: vec![0.5; k],
+                    nodes: 1,
+                },
+                Stage {
+                    name: "b".into(),
+                    t_chunk_s: vec![1.5; k],
+                    nodes: 1,
+                },
+                Stage {
+                    name: "c".into(),
+                    t_chunk_s: vec![0.25; k],
+                    nodes: 1,
+                },
+            ],
+            edges: vec![
+                Edge {
+                    from: 0,
+                    to: 1,
+                    t_transfer_s: 0.05,
+                    capacity: 3,
+                },
+                Edge {
+                    from: 1,
+                    to: 2,
+                    t_transfer_s: 0.05,
+                    capacity: 3,
+                },
+            ],
+        };
+        let r = p.simulate();
+        // bottleneck stage b: rate 1.5/chunk dominates makespan
+        let lower = 1.5 * k as f64;
+        let upper = lower + 3.0; // fill + drain
+        assert!(r.makespan_s() > lower && r.makespan_s() < upper);
+    }
+
+    #[test]
+    fn per_chunk_noise_accumulates() {
+        let k = 10;
+        let mut p = chain(1.0, 0.1, k, 4, 0.0);
+        p.stages[0].t_chunk_s[3] = 5.0; // one slow chunk
+        let r = p.simulate();
+        let expect = (k - 1) as f64 * 1.0 + 5.0 + 0.1;
+        assert!((r.makespan_s() - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "cycle")]
+    fn cycle_detected() {
+        let p = Pipeline {
+            stages: vec![
+                Stage {
+                    name: "a".into(),
+                    t_chunk_s: vec![1.0],
+                    nodes: 1,
+                },
+                Stage {
+                    name: "b".into(),
+                    t_chunk_s: vec![1.0],
+                    nodes: 1,
+                },
+            ],
+            edges: vec![
+                Edge {
+                    from: 0,
+                    to: 1,
+                    t_transfer_s: 0.0,
+                    capacity: 1,
+                },
+                Edge {
+                    from: 1,
+                    to: 0,
+                    t_transfer_s: 0.0,
+                    capacity: 1,
+                },
+            ],
+        };
+        p.simulate();
+    }
+}

@@ -1,0 +1,139 @@
+//! The low-fidelity workflow model (paper §4): per-component GBT models
+//! combined by a structure-derived function — `max` for execution time
+//! (Eqn 1), `sum` for computer time (Eqn 2).  Unlike ALpH, no workflow
+//! run is needed to build it.
+
+use crate::config::F_MAX;
+use crate::gbt::{train_log, Ensemble, GbtParams};
+use crate::sim::Objective;
+
+use super::scorer::{PoolFeatures, Scorer};
+
+/// Training data for one component model: its own feature encodings and
+/// the objective values measured in *isolated* runs.
+#[derive(Clone, Debug, Default)]
+pub struct ComponentSamples {
+    pub xs: Vec<[f32; F_MAX]>,
+    pub y: Vec<f64>,
+}
+
+impl ComponentSamples {
+    pub fn push(&mut self, x: [f32; F_MAX], y: f64) {
+        self.xs.push(x);
+        self.y.push(y);
+    }
+
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    pub fn extend_from(&mut self, other: &ComponentSamples) {
+        self.xs.extend_from_slice(&other.xs);
+        self.y.extend_from_slice(&other.y);
+    }
+}
+
+/// The combined low-fidelity model M_L (Alg. 1 line 7).
+#[derive(Clone, Debug)]
+pub struct LowFiModel {
+    /// One ensemble per configurable component, in spec order.
+    pub comps: Vec<Ensemble>,
+    pub objective: Objective,
+}
+
+impl LowFiModel {
+    /// Train component models M_j on their samples (Alg. 1 lines 1-6)
+    /// in log space and combine per the objective's function.
+    pub fn fit(
+        samples: &[ComponentSamples],
+        n_features: &[usize],
+        objective: Objective,
+        params: &GbtParams,
+    ) -> LowFiModel {
+        assert_eq!(samples.len(), n_features.len());
+        let comps = samples
+            .iter()
+            .zip(n_features)
+            .map(|(s, &nf)| {
+                if s.is_empty() {
+                    // no data: constant log-time 0 (predicts 1 unit)
+                    crate::gbt::Ensemble::constant(nf.max(1), 0.0)
+                } else {
+                    train_log(&s.xs, &s.y, nf.max(1), params)
+                }
+            })
+            .collect();
+        LowFiModel { comps, objective }
+    }
+
+    /// Score a pool: Score(c) = combine_j M_j(c_j) (Eqns 1-2).
+    pub fn score(&self, feats: &PoolFeatures, scorer: &Scorer) -> Vec<f64> {
+        scorer.lowfi(&self.comps, feats, self.objective)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{lv_spec, Config};
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn fit_and_score_roundtrip() {
+        let spec = lv_spec();
+        let mut rng = Pcg32::new(4, 2);
+        let configs: Vec<Config> = (0..60).map(|_| spec.sample(&mut rng)).collect();
+        let feats = PoolFeatures::encode(&spec, &configs);
+
+        // synthetic component truths: exec_j = 2 + 3*x0 (comp 0), 1 + x1 (comp 1)
+        let mut s0 = ComponentSamples::default();
+        let mut s1 = ComponentSamples::default();
+        for i in 0..40 {
+            let x0 = feats.per_component[0][i];
+            let x1 = feats.per_component[1][i];
+            s0.push(x0, 2.0 + 3.0 * x0[0] as f64);
+            s1.push(x1, 1.0 + x1[1] as f64);
+        }
+        let lf = LowFiModel::fit(
+            &[s0, s1],
+            &[4, 3],
+            Objective::ExecTime,
+            &GbtParams::small_data(),
+        );
+        let scores = lf.score(&feats, &Scorer::Native);
+        assert_eq!(scores.len(), 60);
+        // exec combine = max over exp(log-space predictions)
+        for i in 0..60 {
+            let p0 = (lf.comps[0].predict(&feats.per_component[0][i]) as f64).exp();
+            let p1 = (lf.comps[1].predict(&feats.per_component[1][i]) as f64).exp();
+            assert!((scores[i] - p0.max(p1)).abs() < 1e-6 * p0.max(p1));
+        }
+        // the model should broadly rank big-x0 configs worse
+        let lo_i = (0..60)
+            .min_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap())
+            .unwrap();
+        let hi_i = (0..60)
+            .max_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap())
+            .unwrap();
+        assert!(
+            feats.per_component[0][lo_i][0] < feats.per_component[0][hi_i][0] + 0.3,
+            "ranking should follow the synthetic trend"
+        );
+    }
+
+    #[test]
+    fn empty_samples_give_constant_models() {
+        let lf = LowFiModel::fit(
+            &[ComponentSamples::default(), ComponentSamples::default()],
+            &[4, 3],
+            Objective::CompTime,
+            &GbtParams::small_data(),
+        );
+        assert_eq!(lf.comps.len(), 2);
+        assert_eq!(lf.comps[0].n_trees(), 0);
+    }
+}

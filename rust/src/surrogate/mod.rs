@@ -1,0 +1,9 @@
+//! Surrogate-model layer: the scoring backend (native vs PJRT), pool
+//! feature encodings, and the low-fidelity component-combination model
+//! (paper §4).
+
+pub mod lowfi;
+pub mod scorer;
+
+pub use lowfi::LowFiModel;
+pub use scorer::{PoolFeatures, Scorer};

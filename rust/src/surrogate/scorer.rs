@@ -1,0 +1,204 @@
+//! Scoring backend and pool feature encodings.
+//!
+//! [`Scorer::Pjrt`] executes the AOT artifacts through the PJRT runtime
+//! — the architecture's production hot path (L1 Pallas kernel inside an
+//! L2 JAX graph, loaded by L3 Rust).  [`Scorer::Native`] is the exact
+//! Rust mirror of the same flattened-ensemble semantics; integration
+//! tests pin the two together, and multi-threaded campaigns use it to
+//! avoid per-thread artifact recompilation.
+
+use crate::config::{Config, WorkflowSpec, F_MAX};
+use crate::gbt::Ensemble;
+use crate::runtime::Runtime;
+use crate::sim::Objective;
+
+/// Precomputed feature encodings for a fixed configuration pool.
+#[derive(Clone, Debug)]
+pub struct PoolFeatures {
+    /// Whole-workflow view (high-fidelity model input), one row/config.
+    pub workflow: Vec<[f32; F_MAX]>,
+    /// Per configurable component: that component's view of each config.
+    pub per_component: Vec<Vec<[f32; F_MAX]>>,
+    /// Indices of the configurable components in the workflow spec.
+    pub configurable: Vec<usize>,
+}
+
+impl PoolFeatures {
+    pub fn encode(spec: &WorkflowSpec, configs: &[Config]) -> PoolFeatures {
+        let configurable = spec.configurable();
+        PoolFeatures {
+            workflow: configs.iter().map(|c| spec.encode_workflow(c)).collect(),
+            per_component: configurable
+                .iter()
+                .map(|&j| configs.iter().map(|c| spec.encode_component(c, j)).collect())
+                .collect(),
+            configurable,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.workflow.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.workflow.is_empty()
+    }
+
+    /// Row-subset view (for scoring C_meas etc.).
+    pub fn subset(&self, idx: &[usize]) -> PoolFeatures {
+        PoolFeatures {
+            workflow: idx.iter().map(|&i| self.workflow[i]).collect(),
+            per_component: self
+                .per_component
+                .iter()
+                .map(|v| idx.iter().map(|&i| v[i]).collect())
+                .collect(),
+            configurable: self.configurable.clone(),
+        }
+    }
+}
+
+/// Scoring backend.
+pub enum Scorer {
+    /// Exact Rust evaluation of the flattened-ensemble semantics.
+    Native,
+    /// AOT artifacts over PJRT (the three-layer hot path).
+    Pjrt(Runtime),
+}
+
+impl Scorer {
+    /// Load the PJRT backend, falling back to Native (with a warning on
+    /// stderr) when artifacts are unavailable.
+    pub fn pjrt_or_native() -> Scorer {
+        match Runtime::load_default() {
+            Ok(rt) => Scorer::Pjrt(rt),
+            Err(e) => {
+                eprintln!("warning: PJRT runtime unavailable ({e:#}); using native scorer");
+                Scorer::Native
+            }
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scorer::Native => "native",
+            Scorer::Pjrt(_) => "pjrt",
+        }
+    }
+
+    /// Score rows with a single ensemble (high-fidelity model or one
+    /// component model). Returns f64 for downstream stats.
+    pub fn score(&self, ens: &Ensemble, xs: &[[f32; F_MAX]]) -> Vec<f64> {
+        match self {
+            Scorer::Native => xs.iter().map(|x| ens.predict(x) as f64).collect(),
+            Scorer::Pjrt(rt) => rt
+                .score(&ens.flatten(), xs)
+                .expect("PJRT ensemble scoring failed")
+                .into_iter()
+                .map(|v| v as f64)
+                .collect(),
+        }
+    }
+
+    /// Low-fidelity combined score (Eqns 1-2) over per-component views.
+    /// Component models are log-space: each prediction is exponentiated
+    /// back to a time before the max/sum combination (matching the
+    /// lowfi artifact's semantics).
+    pub fn lowfi(
+        &self,
+        comps: &[Ensemble],
+        feats: &PoolFeatures,
+        objective: Objective,
+    ) -> Vec<f64> {
+        assert_eq!(comps.len(), feats.per_component.len());
+        match self {
+            Scorer::Native => {
+                let per: Vec<Vec<f64>> = comps
+                    .iter()
+                    .zip(&feats.per_component)
+                    .map(|(e, xs)| xs.iter().map(|x| (e.predict(x) as f64).exp()).collect())
+                    .collect();
+                (0..feats.len())
+                    .map(|i| {
+                        let parts: Vec<f64> = per.iter().map(|p| p[i]).collect();
+                        objective.combine(&parts)
+                    })
+                    .collect()
+            }
+            Scorer::Pjrt(rt) => {
+                let packed: Vec<_> = comps
+                    .iter()
+                    .zip(&feats.per_component)
+                    .map(|(e, xs)| (e.flatten(), xs.clone()))
+                    .collect();
+                rt.lowfi_score(&packed, objective.mode())
+                    .expect("PJRT lowfi scoring failed")
+                    .into_iter()
+                    .map(|v| v as f64)
+                    .collect()
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::lv_spec;
+    use crate::gbt::{train, GbtParams};
+    use crate::util::rng::Pcg32;
+
+    fn toy_pool() -> (crate::config::WorkflowSpec, Vec<Config>) {
+        let spec = lv_spec();
+        let mut rng = Pcg32::new(9, 9);
+        let configs: Vec<Config> = (0..40).map(|_| spec.sample(&mut rng)).collect();
+        (spec, configs)
+    }
+
+    #[test]
+    fn encode_shapes() {
+        let (spec, configs) = toy_pool();
+        let f = PoolFeatures::encode(&spec, &configs);
+        assert_eq!(f.len(), 40);
+        assert_eq!(f.per_component.len(), 2);
+        assert_eq!(f.configurable, vec![0, 1]);
+        // workflow view uses 7 features, padding zero
+        assert_eq!(f.workflow[0][7], 0.0);
+    }
+
+    #[test]
+    fn subset_selects_rows() {
+        let (spec, configs) = toy_pool();
+        let f = PoolFeatures::encode(&spec, &configs);
+        let s = f.subset(&[3, 7]);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.workflow[0], f.workflow[3]);
+        assert_eq!(s.per_component[1][1], f.per_component[1][7]);
+    }
+
+    #[test]
+    fn native_lowfi_max_and_sum() {
+        let (spec, configs) = toy_pool();
+        let f = PoolFeatures::encode(&spec, &configs);
+        let mut rng = Pcg32::new(1, 1);
+        // train two tiny component models on synthetic targets
+        let mk = |rng: &mut Pcg32, xs: &Vec<[f32; F_MAX]>| {
+            let y: Vec<f64> = xs.iter().map(|x| 1.0 + x[0] as f64 + rng.f64() * 0.01).collect();
+            train(xs, &y, 4, &GbtParams::small_data())
+        };
+        let comps = vec![
+            mk(&mut rng, &f.per_component[0]),
+            mk(&mut rng, &f.per_component[1]),
+        ];
+        let scorer = Scorer::Native;
+        let mx = scorer.lowfi(&comps, &f, Objective::ExecTime);
+        let sm = scorer.lowfi(&comps, &f, Objective::CompTime);
+        for i in 0..f.len() {
+            // log-space models: combination happens on exp(prediction)
+            let p0 = (comps[0].predict(&f.per_component[0][i]) as f64).exp();
+            let p1 = (comps[1].predict(&f.per_component[1][i]) as f64).exp();
+            assert!((mx[i] - p0.max(p1)).abs() < 1e-6 * p0.max(p1));
+            assert!((sm[i] - (p0 + p1)).abs() < 1e-6 * (p0 + p1));
+        }
+    }
+}

@@ -1,0 +1,123 @@
+//! AL — batch active-learning baseline (§7.3, refs [4, 19]): seed with
+//! random samples, then iteratively measure the configurations the
+//! gradually-refined surrogate predicts to be best.
+
+use std::collections::HashSet;
+
+use super::common::{
+    random_unmeasured, searcher_best, top_unmeasured, train_hifi, Collector, Pool, Problem,
+    Tuner, TunerOutput,
+};
+use crate::surrogate::Scorer;
+use crate::util::rng::Pcg32;
+
+pub struct ActiveLearning {
+    /// Fraction of the budget spent on the random bootstrap batch.
+    pub m0_frac: f64,
+    /// Refinement iterations.
+    pub iterations: usize,
+}
+
+impl Default for ActiveLearning {
+    fn default() -> Self {
+        ActiveLearning {
+            m0_frac: 0.25,
+            iterations: 6,
+        }
+    }
+}
+
+impl Tuner for ActiveLearning {
+    fn name(&self) -> &'static str {
+        "AL"
+    }
+
+    fn run(
+        &self,
+        prob: &Problem,
+        pool: &Pool,
+        scorer: &Scorer,
+        m: usize,
+        rng: &mut Pcg32,
+    ) -> TunerOutput {
+        let mut col = Collector::new(prob, rng.derive_str("collector"));
+        let mut sel_rng = rng.derive_str("select");
+        let m = m.min(pool.len());
+        let m0 = ((m as f64 * self.m0_frac).round() as usize).clamp(1, m);
+        let remaining = m - m0;
+        let iters = self.iterations.min(remaining.max(1));
+        let batch = if iters == 0 { 0 } else { remaining / iters };
+
+        let mut measured: Vec<(usize, f64)> = Vec::with_capacity(m);
+        let mut measured_set: HashSet<usize> = HashSet::with_capacity(m);
+        for i in random_unmeasured(pool, &measured_set, m0, &mut sel_rng) {
+            measured.push((i, col.measure(&pool.configs[i])));
+            measured_set.insert(i);
+        }
+
+        let mut model = train_hifi(prob, pool, &measured);
+        for _ in 0..iters {
+            if batch == 0 {
+                break;
+            }
+            let preds = scorer.score(&model, &pool.feats.workflow);
+            for i in top_unmeasured(&preds, &measured_set, batch) {
+                measured.push((i, col.measure(&pool.configs[i])));
+                measured_set.insert(i);
+            }
+            model = train_hifi(prob, pool, &measured);
+        }
+
+        let best_idx = searcher_best(&model, pool, scorer, &measured);
+        TunerOutput {
+            model,
+            measured,
+            best_idx,
+            collection_cost: col.total_cost(),
+            workflow_runs: col.workflow_runs,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::WorkflowId;
+    use crate::sim::Objective;
+
+    #[test]
+    fn respects_budget_and_improves_sampling() {
+        let prob = Problem::new(WorkflowId::Lv, Objective::CompTime);
+        let pool = Pool::generate(&prob, 200, 11);
+        let mut rng = Pcg32::new(4, 4);
+        let out = ActiveLearning::default().run(&prob, &pool, &Scorer::Native, 50, &mut rng);
+        assert!(out.workflow_runs <= 50, "runs {}", out.workflow_runs);
+        assert!(out.workflow_runs >= 40, "runs {}", out.workflow_runs);
+        // AL concentrates later samples on good configs: the mean truth
+        // of the second half of samples should beat the first half.
+        let half = out.measured.len() / 2;
+        let first: f64 = out.measured[..half]
+            .iter()
+            .map(|&(i, _)| pool.truth[i])
+            .sum::<f64>()
+            / half as f64;
+        let second: f64 = out.measured[half..]
+            .iter()
+            .map(|&(i, _)| pool.truth[i])
+            .sum::<f64>()
+            / (out.measured.len() - half) as f64;
+        assert!(
+            second < first,
+            "active batches should be better than bootstrap: {first} vs {second}"
+        );
+    }
+
+    #[test]
+    fn tiny_budget_does_not_panic() {
+        let prob = Problem::new(WorkflowId::Gp, Objective::ExecTime);
+        let pool = Pool::generate(&prob, 50, 12);
+        let mut rng = Pcg32::new(5, 5);
+        let out = ActiveLearning::default().run(&prob, &pool, &Scorer::Native, 5, &mut rng);
+        assert!(out.workflow_runs <= 5);
+    }
+}

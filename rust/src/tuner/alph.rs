@@ -1,0 +1,226 @@
+//! ALpH — the learned-combiner variant of CEAL (paper §4): instead of
+//! combining component predictions with the structure function
+//! (max/sum), ALpH *trains* a combining model M_0 on tuples
+//! ({P_j(c)}, p) where p is the measured workflow performance — so its
+//! low-fidelity model costs workflow runs to build and retrain, which
+//! is exactly the deficiency §7.5.2 quantifies.
+
+use std::collections::HashSet;
+use std::sync::Arc;
+
+use super::ceal::{gbt_params_for, CealParams};
+use super::common::{
+    random_unmeasured, searcher_best, top_unmeasured, train_hifi, Collector, Pool, Problem,
+    Tuner, TunerOutput,
+};
+use crate::config::F_MAX;
+use crate::gbt::{train_log, Ensemble};
+use crate::metrics::recall_sum_123;
+use crate::surrogate::lowfi::ComponentSamples;
+use crate::surrogate::Scorer;
+use crate::util::rng::Pcg32;
+
+pub struct Alph {
+    pub params: CealParams,
+    pub historical: Option<Arc<Vec<ComponentSamples>>>,
+}
+
+impl Alph {
+    pub fn new(params: CealParams) -> Alph {
+        Alph {
+            params,
+            historical: None,
+        }
+    }
+
+    pub fn with_historical(params: CealParams, hist: Arc<Vec<ComponentSamples>>) -> Alph {
+        Alph {
+            params,
+            historical: Some(hist),
+        }
+    }
+}
+
+/// Component-prediction features for the combiner: row i carries
+/// P_1(c_i)..P_J(c_i), zero-padded to F_MAX.
+fn combiner_features(per_comp_preds: &[Vec<f64>], idx: usize) -> [f32; F_MAX] {
+    let mut x = [0f32; F_MAX];
+    for (j, preds) in per_comp_preds.iter().enumerate() {
+        x[j] = preds[idx] as f32;
+    }
+    x
+}
+
+impl Tuner for Alph {
+    fn name(&self) -> &'static str {
+        "ALpH"
+    }
+
+    fn run(
+        &self,
+        prob: &Problem,
+        pool: &Pool,
+        scorer: &Scorer,
+        m: usize,
+        rng: &mut Pcg32,
+    ) -> TunerOutput {
+        let mut col = Collector::new(prob, rng.derive_str("collector"));
+        let mut sel_rng = rng.derive_str("select");
+        let p = self.params;
+        let m = m.min(pool.len());
+
+        let m_r = if self.historical.is_some() {
+            0
+        } else {
+            (m as f64 * p.mr_frac).round() as usize
+        };
+        let m0 = ((m as f64 * p.m0_frac).round() as usize).clamp(1, m.saturating_sub(m_r));
+        let remaining = m.saturating_sub(m0 + m_r);
+        let iters = p.iterations.clamp(1, remaining.max(1));
+        let m_b = (remaining / iters).max(1);
+
+        // component models (same phase-1 as CEAL)
+        let spec = &prob.sim.spec;
+        let configurable = spec.configurable();
+        let mut samples: Vec<ComponentSamples> = match &self.historical {
+            Some(h) => h.iter().cloned().collect(),
+            None => configurable.iter().map(|_| ComponentSamples::default()).collect(),
+        };
+        for (slot, &comp) in configurable.iter().enumerate() {
+            for _ in 0..m_r {
+                let cfg = prob.sim.sample_component_feasible(comp, &mut sel_rng);
+                let y = col.measure_component(comp, &cfg);
+                samples[slot].push(spec.components[comp].encode(&cfg), y);
+            }
+        }
+        let comp_params = gbt_params_for(samples.iter().map(|s| s.len()).max().unwrap_or(0));
+        let n_feats = prob.n_component_features();
+        let comp_models: Vec<Ensemble> = samples
+            .iter()
+            .zip(&n_feats)
+            .map(|(s, &nf)| {
+                if s.is_empty() {
+                    Ensemble::constant(nf.max(1), 0.0)
+                } else {
+                    train_log(&s.xs, &s.y, nf.max(1), &comp_params)
+                }
+            })
+            .collect();
+        // per-component time predictions over the whole pool (fixed);
+        // component models are log-space -> exponentiate
+        let per_comp_preds: Vec<Vec<f64>> = comp_models
+            .iter()
+            .zip(&pool.feats.per_component)
+            .map(|(e, xs)| {
+                scorer
+                    .score(e, xs)
+                    .into_iter()
+                    .map(f64::exp)
+                    .collect()
+            })
+            .collect();
+        let n_j = per_comp_preds.len();
+
+        // bootstrap: m0 random workflow runs train the combiner M_0
+        let mut measured: Vec<(usize, f64)> = Vec::with_capacity(m);
+        let mut measured_set: HashSet<usize> = HashSet::with_capacity(m);
+        let mut c_meas = random_unmeasured(pool, &measured_set, m0, &mut sel_rng);
+        for &i in &c_meas {
+            measured_set.insert(i);
+        }
+
+        let train_combiner = |measured: &[(usize, f64)]| -> Ensemble {
+            let xs: Vec<[f32; F_MAX]> = measured
+                .iter()
+                .map(|&(i, _)| combiner_features(&per_comp_preds, i))
+                .collect();
+            let y: Vec<f64> = measured.iter().map(|&(_, y)| y).collect();
+            train_log(&xs, &y, n_j.max(1), &gbt_params_for(y.len()))
+        };
+
+        let mut using_hifi = false;
+        let mut hifi: Option<Ensemble> = None;
+        let mut combiner: Option<Ensemble> = None;
+
+        for iter in 0..iters {
+            let batch: Vec<(usize, f64)> = c_meas
+                .iter()
+                .map(|&i| (i, col.measure(&pool.configs[i])))
+                .collect();
+            // switch detection, mirroring CEAL
+            if !using_hifi {
+                if let (Some(h), Some(c0)) = (&hifi, &combiner) {
+                    let actual: Vec<f64> = batch.iter().map(|&(_, y)| y).collect();
+                    let xs: Vec<_> = batch
+                        .iter()
+                        .map(|&(i, _)| pool.feats.workflow[i])
+                        .collect();
+                    let pred_h = scorer.score(h, &xs);
+                    let cx: Vec<[f32; F_MAX]> = batch
+                        .iter()
+                        .map(|&(i, _)| combiner_features(&per_comp_preds, i))
+                        .collect();
+                    let pred_l = scorer.score(c0, &cx);
+                    if recall_sum_123(&pred_h, &actual) >= recall_sum_123(&pred_l, &actual) {
+                        using_hifi = true;
+                    }
+                }
+            }
+            measured.extend_from_slice(&batch);
+            hifi = Some(train_hifi(prob, pool, &measured));
+            combiner = Some(train_combiner(&measured));
+            if iter + 1 < iters {
+                let scores: Vec<f64> = if using_hifi {
+                    scorer.score(hifi.as_ref().unwrap(), &pool.feats.workflow)
+                } else {
+                    let c0 = combiner.as_ref().unwrap();
+                    let cx: Vec<[f32; F_MAX]> = (0..pool.len())
+                        .map(|i| combiner_features(&per_comp_preds, i))
+                        .collect();
+                    scorer.score(c0, &cx)
+                };
+                c_meas = top_unmeasured(&scores, &measured_set, m_b);
+                for &i in &c_meas {
+                    measured_set.insert(i);
+                }
+            }
+        }
+
+        let model = hifi.expect("at least one iteration");
+        let best_idx = searcher_best(&model, pool, scorer, &measured);
+        TunerOutput {
+            model,
+            measured,
+            best_idx,
+            collection_cost: col.total_cost(),
+            workflow_runs: col.workflow_runs,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::WorkflowId;
+    use crate::sim::Objective;
+
+    #[test]
+    fn runs_within_budget() {
+        let prob = Problem::new(WorkflowId::Lv, Objective::CompTime);
+        let pool = Pool::generate(&prob, 200, 41);
+        let mut rng = Pcg32::new(10, 10);
+        let out = Alph::new(CealParams::no_hist()).run(&prob, &pool, &Scorer::Native, 50, &mut rng);
+        let m_r = (50f64 * 0.35).round() as usize;
+        assert!(out.workflow_runs <= 50 - m_r);
+        assert!(out.best_idx < pool.len());
+    }
+
+    #[test]
+    fn combiner_features_padded() {
+        let preds = vec![vec![1.0, 2.0], vec![3.0, 4.0]];
+        let x = combiner_features(&preds, 1);
+        assert_eq!(x[0], 2.0);
+        assert_eq!(x[1], 4.0);
+        assert_eq!(x[2], 0.0);
+    }
+}

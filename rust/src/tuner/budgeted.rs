@@ -1,0 +1,229 @@
+//! Resource-budgeted CEAL — the adaptation the paper sketches in §6:
+//! "If a budget on real resource consumption is preferred, the
+//! algorithm can be adapted to monitor the resource consumption of the
+//! workflow and its component applications."
+//!
+//! Instead of a run-count budget m, [`BudgetedCeal`] is given a budget
+//! in objective units (core-hours or seconds).  It spends a fraction on
+//! component runs (phase 1), a fraction on random bootstrap, and the
+//! rest on low-fidelity-guided batches, stopping a phase as soon as its
+//! allowance is exhausted — so expensive samples shrink later batches
+//! rather than overrunning the allocation.
+
+use std::collections::HashSet;
+
+use super::ceal::gbt_params_for;
+use super::common::{
+    random_unmeasured, searcher_best, top_unmeasured, train_hifi, Collector, Pool, Problem,
+    TunerOutput,
+};
+use crate::metrics::recall_sum_123;
+use crate::surrogate::lowfi::{ComponentSamples, LowFiModel};
+use crate::surrogate::Scorer;
+use crate::util::rng::Pcg32;
+
+/// Cost-budgeted CEAL parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct BudgetedCealParams {
+    /// Fraction of the cost budget for component runs.
+    pub component_frac: f64,
+    /// Fraction of the cost budget for the random bootstrap.
+    pub bootstrap_frac: f64,
+    /// Active-learning batch size (configs per iteration).
+    pub batch: usize,
+}
+
+impl Default for BudgetedCealParams {
+    fn default() -> Self {
+        BudgetedCealParams {
+            component_frac: 0.30,
+            bootstrap_frac: 0.10,
+            batch: 4,
+        }
+    }
+}
+
+pub struct BudgetedCeal {
+    pub params: BudgetedCealParams,
+}
+
+impl BudgetedCeal {
+    pub fn new(params: BudgetedCealParams) -> BudgetedCeal {
+        BudgetedCeal { params }
+    }
+
+    /// Run with a budget expressed in objective units (e.g. core-hours).
+    pub fn run_with_cost_budget(
+        &self,
+        prob: &Problem,
+        pool: &Pool,
+        scorer: &Scorer,
+        cost_budget: f64,
+        rng: &mut Pcg32,
+    ) -> TunerOutput {
+        assert!(cost_budget > 0.0);
+        let p = self.params;
+        let mut col = Collector::new(prob, rng.derive_str("collector"));
+        let mut sel_rng = rng.derive_str("select");
+
+        // Phase 1: component runs until the component allowance is spent.
+        let comp_allowance = cost_budget * p.component_frac;
+        let spec = &prob.sim.spec;
+        let configurable = spec.configurable();
+        let mut samples: Vec<ComponentSamples> =
+            configurable.iter().map(|_| ComponentSamples::default()).collect();
+        'outer: loop {
+            for (slot, &comp) in configurable.iter().enumerate() {
+                if col.component_cost >= comp_allowance {
+                    break 'outer;
+                }
+                let cfg = prob.sim.sample_component_feasible(comp, &mut sel_rng);
+                let y = col.measure_component(comp, &cfg);
+                samples[slot].push(spec.components[comp].encode(&cfg), y);
+            }
+        }
+        let n_feats = prob.n_component_features();
+        let comp_params = gbt_params_for(samples.iter().map(|s| s.len()).max().unwrap_or(0));
+        let lowfi = LowFiModel::fit(&samples, &n_feats, prob.objective, &comp_params);
+        let lowfi_scores = lowfi.score(&pool.feats, scorer);
+
+        // Phase 2: bootstrap + guided batches under the remaining budget.
+        let mut measured: Vec<(usize, f64)> = Vec::new();
+        let mut measured_set: HashSet<usize> = HashSet::new();
+        let boot_allowance = cost_budget * (p.component_frac + p.bootstrap_frac);
+        while col.total_cost() < boot_allowance && measured_set.len() < pool.len() {
+            let i = random_unmeasured(pool, &measured_set, 1, &mut sel_rng)[0];
+            measured.push((i, col.measure(&pool.configs[i])));
+            measured_set.insert(i);
+        }
+
+        let mut using_hifi = false;
+        let mut hifi = if measured.len() >= 2 {
+            Some(train_hifi(prob, pool, &measured))
+        } else {
+            None
+        };
+        while col.total_cost() < cost_budget && measured_set.len() < pool.len() {
+            let scores: Vec<f64> = match (&hifi, using_hifi) {
+                (Some(h), true) => scorer.score(h, &pool.feats.workflow),
+                _ => lowfi_scores.clone(),
+            };
+            let batch_idx =
+                top_unmeasured(&scores, &measured_set, p.batch.min(pool.len()));
+            if batch_idx.is_empty() {
+                break;
+            }
+            let mut batch: Vec<(usize, f64)> = Vec::new();
+            for i in batch_idx {
+                if col.total_cost() >= cost_budget {
+                    break;
+                }
+                batch.push((i, col.measure(&pool.configs[i])));
+                measured_set.insert(i);
+            }
+            if batch.is_empty() {
+                break;
+            }
+            measured.extend_from_slice(&batch);
+            if let Some(h) = &hifi {
+                if !using_hifi {
+                    let actual: Vec<f64> = measured.iter().map(|&(_, y)| y).collect();
+                    let xs: Vec<_> = measured
+                        .iter()
+                        .map(|&(i, _)| pool.feats.workflow[i])
+                        .collect();
+                    let s_h = recall_sum_123(&scorer.score(h, &xs), &actual);
+                    let pred_l: Vec<f64> =
+                        measured.iter().map(|&(i, _)| lowfi_scores[i]).collect();
+                    if s_h >= recall_sum_123(&pred_l, &actual) {
+                        using_hifi = true;
+                    }
+                }
+            }
+            if measured.len() >= 2 {
+                hifi = Some(train_hifi(prob, pool, &measured));
+            }
+        }
+
+        let model = hifi.unwrap_or_else(|| crate::gbt::Ensemble::constant(1, 0.0));
+        let best_idx = searcher_best(&model, pool, scorer, &measured);
+        TunerOutput {
+            model,
+            measured,
+            best_idx,
+            collection_cost: col.total_cost(),
+            workflow_runs: col.workflow_runs,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::WorkflowId;
+    use crate::sim::Objective;
+
+    #[test]
+    fn respects_cost_budget() {
+        let prob = Problem::new(WorkflowId::Lv, Objective::CompTime);
+        let pool = Pool::generate(&prob, 150, 51);
+        let mut rng = Pcg32::new(1, 1);
+        let budget = 400.0; // core-hours
+        let out = BudgetedCeal::new(BudgetedCealParams::default()).run_with_cost_budget(
+            &prob,
+            &pool,
+            &Scorer::Native,
+            budget,
+            &mut rng,
+        );
+        // may overshoot by at most one sample's cost
+        let max_sample = out
+            .measured
+            .iter()
+            .map(|&(_, y)| y)
+            .fold(0.0f64, f64::max)
+            .max(100.0);
+        assert!(
+            out.collection_cost <= budget + max_sample,
+            "cost {} far exceeds budget {budget}",
+            out.collection_cost
+        );
+        assert!(out.workflow_runs >= 1);
+        assert!(out.best_idx < pool.len());
+    }
+
+    #[test]
+    fn bigger_budget_not_worse_on_average() {
+        let prob = Problem::new(WorkflowId::Lv, Objective::CompTime);
+        let pool = Pool::generate(&prob, 200, 52);
+        let tuner = BudgetedCeal::new(BudgetedCealParams::default());
+        let mut small_sum = 0.0;
+        let mut large_sum = 0.0;
+        for rep in 0..6 {
+            let mut r1 = Pcg32::new(60 + rep, 1);
+            let mut r2 = Pcg32::new(60 + rep, 2);
+            let s = tuner.run_with_cost_budget(&prob, &pool, &Scorer::Native, 150.0, &mut r1);
+            let l = tuner.run_with_cost_budget(&prob, &pool, &Scorer::Native, 1200.0, &mut r2);
+            small_sum += pool.truth[s.best_idx];
+            large_sum += pool.truth[l.best_idx];
+        }
+        assert!(
+            large_sum <= small_sum * 1.1,
+            "larger budget should not be clearly worse: {small_sum} vs {large_sum}"
+        );
+    }
+
+    #[test]
+    fn deterministic() {
+        let prob = Problem::new(WorkflowId::Hs, Objective::ExecTime);
+        let pool = Pool::generate(&prob, 100, 53);
+        let tuner = BudgetedCeal::new(BudgetedCealParams::default());
+        let run = |seed| {
+            let mut rng = Pcg32::new(seed, 0);
+            tuner
+                .run_with_cost_budget(&prob, &pool, &Scorer::Native, 60.0, &mut rng)
+                .best_idx
+        };
+        assert_eq!(run(4), run(4));
+    }
+}

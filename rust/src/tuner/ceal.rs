@@ -1,0 +1,348 @@
+//! CEAL — Component-based Ensemble Active Learning (paper Alg. 1).
+//!
+//! Phase 1 (lines 1-7): train per-component models on isolated
+//! component runs (or free historical measurements) and combine them
+//! with the objective's structure function (max/sum) into the
+//! low-fidelity workflow model M_L.
+//!
+//! Phase 2 (lines 8-26): seed with m_0 random workflow runs, then
+//! iterate: measure the batch, check whether the evolving high-fidelity
+//! model M_H has overtaken M_L at ranking (top-1..3 recall sums on the
+//! fresh batch — lines 16-21), train M_H on everything measured, and
+//! pick the next batch as the best-scoring unmeasured pool configs
+//! under whichever model currently wins.
+
+use std::collections::HashSet;
+use std::sync::Arc;
+
+use super::common::{
+    random_unmeasured, searcher_best, top_unmeasured, train_hifi, Collector, Pool, Problem,
+    Tuner, TunerOutput,
+};
+use crate::gbt::GbtParams;
+use crate::metrics::recall_sum_123;
+use crate::surrogate::lowfi::{ComponentSamples, LowFiModel};
+use crate::surrogate::Scorer;
+use crate::util::rng::Pcg32;
+
+/// CEAL hyper-parameters (paper §6 recommendations).
+#[derive(Clone, Copy, Debug)]
+pub struct CealParams {
+    /// Ensemble-active-learning iterations I.
+    pub iterations: usize,
+    /// m_0 = m0_frac · m random bootstrap workflow runs.
+    pub m0_frac: f64,
+    /// m_R = mr_frac · m component-run budget (0 with history).
+    pub mr_frac: f64,
+}
+
+impl CealParams {
+    /// Without historical measurements: m_0 ≈ 10% m, m_R ≈ 35% m
+    /// (inside the paper's stable 20-65% m_R plateau — §7.6 — and the
+    /// best global compromise in our own Fig. 13-style sweeps).
+    pub fn no_hist() -> CealParams {
+        CealParams {
+            iterations: 6,
+            m0_frac: 0.10,
+            mr_frac: 0.35,
+        }
+    }
+
+    /// With historical measurements: m_R = 0, m_0 ≈ 25% m.
+    pub fn with_hist() -> CealParams {
+        CealParams {
+            iterations: 6,
+            m0_frac: 0.25,
+            mr_frac: 0.0,
+        }
+    }
+}
+
+/// The CEAL tuner. `historical` carries pre-existing component
+/// measurements D_hist (Alg. 1 line 4); when present they are free
+/// (not charged against the budget or the collection cost).
+pub struct Ceal {
+    pub params: CealParams,
+    pub historical: Option<Arc<Vec<ComponentSamples>>>,
+    /// Component models trained purely from historical data are
+    /// identical across repetitions — cache them per tuner instance
+    /// (campaigns reuse one instance across reps). §Perf: this removes
+    /// ~150 ms of redundant GBT training per repetition.
+    cached_hist_models: std::sync::OnceLock<Vec<crate::gbt::Ensemble>>,
+}
+
+impl Ceal {
+    pub fn new(params: CealParams) -> Ceal {
+        Ceal {
+            params,
+            historical: None,
+            cached_hist_models: std::sync::OnceLock::new(),
+        }
+    }
+
+    pub fn with_historical(params: CealParams, hist: Arc<Vec<ComponentSamples>>) -> Ceal {
+        Ceal {
+            params,
+            historical: Some(hist),
+            cached_hist_models: std::sync::OnceLock::new(),
+        }
+    }
+
+    /// Collect component samples (lines 1-6): m_r isolated runs of each
+    /// configurable component on random configurations, merged with any
+    /// historical data.
+    fn component_samples(
+        &self,
+        prob: &Problem,
+        m_r: usize,
+        col: &mut Collector,
+        rng: &mut Pcg32,
+    ) -> Vec<ComponentSamples> {
+        let spec = &prob.sim.spec;
+        let configurable = spec.configurable();
+        let mut out: Vec<ComponentSamples> = match &self.historical {
+            Some(h) => {
+                assert_eq!(h.len(), configurable.len(), "historical arity");
+                h.iter().cloned().collect()
+            }
+            None => configurable.iter().map(|_| ComponentSamples::default()).collect(),
+        };
+        for (slot, &comp) in configurable.iter().enumerate() {
+            let cs = &spec.components[comp];
+            for _ in 0..m_r {
+                // feasible on the same <=32-node allocations as the pool
+                let cfg = prob.sim.sample_component_feasible(comp, rng);
+                let y = col.measure_component(comp, &cfg);
+                out[slot].push(cs.encode(&cfg), y);
+            }
+        }
+        out
+    }
+}
+
+/// Pick GBT hyper-parameters by training-set size.
+pub fn gbt_params_for(n: usize) -> GbtParams {
+    if n >= 200 {
+        GbtParams::default()
+    } else {
+        GbtParams::small_data()
+    }
+}
+
+impl Tuner for Ceal {
+    fn name(&self) -> &'static str {
+        "CEAL"
+    }
+
+    fn run(
+        &self,
+        prob: &Problem,
+        pool: &Pool,
+        scorer: &Scorer,
+        m: usize,
+        rng: &mut Pcg32,
+    ) -> TunerOutput {
+        let mut col = Collector::new(prob, rng.derive_str("collector"));
+        let mut sel_rng = rng.derive_str("select");
+        let p = self.params;
+        let m = m.min(pool.len());
+
+        // budget split (line 9): m_R charged only when collecting fresh
+        // component data
+        let m_r = if self.historical.is_some() {
+            0
+        } else {
+            (m as f64 * p.mr_frac).round() as usize
+        };
+        let m0 = ((m as f64 * p.m0_frac).round() as usize).clamp(1, m.saturating_sub(m_r));
+        let remaining = m.saturating_sub(m0 + m_r);
+        let iters = p.iterations.clamp(1, remaining.max(1));
+        let m_b = (remaining / iters).max(1);
+
+        // Phase 1: component models -> low-fidelity M_L (lines 1-7).
+        // Pure-history models are deterministic: train once per tuner.
+        let n_feats = prob.n_component_features();
+        let fit = |samples: &[ComponentSamples]| {
+            let comp_params =
+                gbt_params_for(samples.iter().map(|s| s.len()).max().unwrap_or(0));
+            LowFiModel::fit(samples, &n_feats, prob.objective, &comp_params).comps
+        };
+        let comps = if m_r == 0 && self.historical.is_some() {
+            self.cached_hist_models
+                .get_or_init(|| fit(self.historical.as_ref().unwrap()))
+                .clone()
+        } else {
+            let samples = self.component_samples(prob, m_r, &mut col, &mut sel_rng);
+            fit(&samples)
+        };
+        let lowfi = LowFiModel {
+            comps,
+            objective: prob.objective,
+        };
+        let lowfi_scores = lowfi.score(&pool.feats, scorer);
+
+        // Phase 2 (lines 8-26)
+        let mut measured: Vec<(usize, f64)> = Vec::with_capacity(m);
+        let mut measured_set: HashSet<usize> = HashSet::with_capacity(m);
+        // line 8: m_0 random
+        let mut c_meas = random_unmeasured(pool, &measured_set, m0, &mut sel_rng);
+        for &i in &c_meas {
+            measured_set.insert(i);
+        }
+        // line 11: top m_B by M_L
+        for i in top_unmeasured(&lowfi_scores, &measured_set, m_b) {
+            c_meas.push(i);
+            measured_set.insert(i);
+        }
+
+        let mut using_hifi = false; // M = M_L (line 12)
+        let mut hifi: Option<crate::gbt::Ensemble> = None; // line 13
+
+        for iter in 0..iters {
+            // line 15: run workflow for C_meas
+            let batch: Vec<(usize, f64)> = c_meas
+                .iter()
+                .map(|&i| (i, col.measure(&pool.configs[i])))
+                .collect();
+            // lines 16-21: model switch detection.  We score both models
+            // on everything measured so far *including* the fresh batch
+            // (which is out-of-sample for the current M_H) — a fresh
+            // m_B-sized batch alone is too small for stable top-1..3
+            // recalls at the paper's budgets.
+            measured.extend_from_slice(&batch);
+            if !using_hifi {
+                if let Some(h) = &hifi {
+                    let actual: Vec<f64> = measured.iter().map(|&(_, y)| y).collect();
+                    let xs: Vec<_> = measured
+                        .iter()
+                        .map(|&(i, _)| pool.feats.workflow[i])
+                        .collect();
+                    let pred_h = scorer.score(h, &xs);
+                    let pred_l: Vec<f64> =
+                        measured.iter().map(|&(i, _)| lowfi_scores[i]).collect();
+                    let s_h = recall_sum_123(&pred_h, &actual);
+                    let s_l = recall_sum_123(&pred_l, &actual);
+                    if s_h >= s_l {
+                        using_hifi = true;
+                    }
+                }
+            }
+            // line 22: train/refine M_H on everything measured
+            hifi = Some(train_hifi(prob, pool, &measured));
+            // lines 23-24: score pool with M, select next batch
+            if iter + 1 < iters {
+                let scores: Vec<f64> = if using_hifi {
+                    scorer.score(hifi.as_ref().unwrap(), &pool.feats.workflow)
+                } else {
+                    lowfi_scores.clone()
+                };
+                c_meas = top_unmeasured(&scores, &measured_set, m_b);
+                for &i in &c_meas {
+                    measured_set.insert(i);
+                }
+            }
+        }
+
+        let model = hifi.expect("at least one iteration ran");
+        let best_idx = searcher_best(&model, pool, scorer, &measured);
+        TunerOutput {
+            model,
+            measured,
+            best_idx,
+            collection_cost: col.total_cost(),
+            workflow_runs: col.workflow_runs,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::WorkflowId;
+    use crate::sim::Objective;
+
+    fn problem() -> Problem {
+        Problem::new(WorkflowId::Lv, Objective::CompTime)
+    }
+
+    #[test]
+    fn budget_accounting_without_history() {
+        let prob = problem();
+        let pool = Pool::generate(&prob, 200, 31);
+        let mut rng = Pcg32::new(7, 7);
+        let ceal = Ceal::new(CealParams::no_hist());
+        let m = 50;
+        let out = ceal.run(&prob, &pool, &Scorer::Native, m, &mut rng);
+        // workflow runs = m0 + I*mB <= m - mR
+        let m_r = (m as f64 * 0.35).round() as usize;
+        assert!(
+            out.workflow_runs <= m - m_r,
+            "workflow runs {} exceed {}",
+            out.workflow_runs,
+            m - m_r
+        );
+        assert!(out.workflow_runs >= (m - m_r) / 2);
+        assert!(out.collection_cost > 0.0);
+    }
+
+    #[test]
+    fn with_history_spends_full_budget_on_workflow() {
+        let prob = problem();
+        let pool = Pool::generate(&prob, 200, 32);
+        // fake historical component data from isolated runs
+        let mut rng = Pcg32::new(8, 8);
+        let mut hist = vec![ComponentSamples::default(), ComponentSamples::default()];
+        let mut col = Collector::new(&prob, rng.derive_str("hist"));
+        for (slot, &comp) in prob.sim.spec.configurable().iter().enumerate() {
+            for _ in 0..100 {
+                let cfg = prob.sim.spec.components[comp].sample(&mut rng);
+                let y = col.measure_component(comp, &cfg);
+                hist[slot].push(prob.sim.spec.components[comp].encode(&cfg), y);
+            }
+        }
+        let ceal = Ceal::with_historical(CealParams::with_hist(), Arc::new(hist));
+        let mut rng2 = Pcg32::new(9, 9);
+        let out = ceal.run(&prob, &pool, &Scorer::Native, 25, &mut rng2);
+        assert!(out.workflow_runs >= 20 && out.workflow_runs <= 25,
+            "runs {}", out.workflow_runs);
+    }
+
+    #[test]
+    fn beats_random_sampling_on_average() {
+        // The headline behaviour: with the same small budget CEAL's
+        // tuned configuration should on average beat RS's.
+        let prob = problem();
+        let pool = Pool::generate(&prob, 400, 33);
+        let scorer = Scorer::Native;
+        let reps = 8;
+        let mut ceal_sum = 0.0;
+        let mut rs_sum = 0.0;
+        for rep in 0..reps {
+            let mut r1 = Pcg32::new(100 + rep, 1);
+            let mut r2 = Pcg32::new(100 + rep, 2);
+            let c = Ceal::new(CealParams::no_hist()).run(&prob, &pool, &scorer, 25, &mut r1);
+            let r = super::super::rs::RandomSampling.run(&prob, &pool, &scorer, 25, &mut r2);
+            ceal_sum += pool.truth[c.best_idx];
+            rs_sum += pool.truth[r.best_idx];
+        }
+        assert!(
+            ceal_sum < rs_sum,
+            "CEAL mean {} should beat RS mean {}",
+            ceal_sum / reps as f64,
+            rs_sum / reps as f64
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let prob = problem();
+        let pool = Pool::generate(&prob, 150, 34);
+        let run = |seed| {
+            let mut rng = Pcg32::new(seed, 0);
+            Ceal::new(CealParams::no_hist())
+                .run(&prob, &pool, &Scorer::Native, 25, &mut rng)
+                .best_idx
+        };
+        assert_eq!(run(3), run(3));
+    }
+}

@@ -1,0 +1,382 @@
+//! Shared tuner infrastructure: the tuning problem, the sample pool
+//! C_pool (§5), the collector, and the Tuner trait + searcher.
+
+use std::collections::HashSet;
+
+use crate::config::{Config, WorkflowId, F_MAX};
+use crate::gbt::Ensemble;
+use crate::sim::{Objective, WorkflowSim};
+use crate::surrogate::{PoolFeatures, Scorer};
+use crate::util::rng::Pcg32;
+use crate::util::stats;
+
+/// A tuning problem: one workflow, one optimization objective.
+pub struct Problem {
+    pub sim: WorkflowSim,
+    pub objective: Objective,
+}
+
+impl Problem {
+    pub fn new(id: WorkflowId, objective: Objective) -> Problem {
+        Problem {
+            sim: WorkflowSim::new(id),
+            objective,
+        }
+    }
+
+    /// Number of (real, unpadded) features in the whole-workflow view.
+    pub fn n_workflow_features(&self) -> usize {
+        self.sim.spec.n_params()
+    }
+
+    /// Per configurable component: its own feature count.
+    pub fn n_component_features(&self) -> Vec<usize> {
+        self.sim
+            .spec
+            .configurable()
+            .into_iter()
+            .map(|j| self.sim.spec.components[j].params.len())
+            .collect()
+    }
+}
+
+/// The sample pool C_pool (paper §5): a feasible random subset of the
+/// configuration space from which all training samples are drawn, plus
+/// the noise-free ground truth used as the experiment test set (§7.1
+/// measures all 2000 pool configurations).
+pub struct Pool {
+    pub configs: Vec<Config>,
+    pub feats: PoolFeatures,
+    /// Noise-free objective value per config (the test-set measurement).
+    pub truth: Vec<f64>,
+    /// Index of the best configuration in the pool.
+    pub best_idx: usize,
+    /// Lazily built k-NN parameter graph (GEIST).
+    knn: std::sync::OnceLock<Vec<Vec<usize>>>,
+}
+
+/// Pool size used by the paper (§7.1).
+pub const POOL_SIZE: usize = 2000;
+
+impl Pool {
+    /// Generate a deduplicated feasible pool and measure its ground
+    /// truth.  Deterministic in (problem, seed).
+    pub fn generate(prob: &Problem, size: usize, seed: u64) -> Pool {
+        let mut rng = Pcg32::new(seed, 0x9001);
+        let spec = &prob.sim.spec;
+        let mut seen: HashSet<Config> = HashSet::with_capacity(size * 2);
+        let mut configs = Vec::with_capacity(size);
+        let feasible = |c: &Config| prob.sim.feasible(c);
+        while configs.len() < size {
+            let c = spec.sample_feasible(&mut rng, &feasible, 100_000);
+            if seen.insert(c.clone()) {
+                configs.push(c);
+            }
+        }
+        let feats = PoolFeatures::encode(spec, &configs);
+        let truth: Vec<f64> = configs
+            .iter()
+            .map(|c| prob.objective.value(&prob.sim.expected(c)))
+            .collect();
+        let best_idx = stats::argmin(&truth).expect("non-empty pool");
+        Pool {
+            configs,
+            feats,
+            truth,
+            best_idx,
+            knn: std::sync::OnceLock::new(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.configs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.configs.is_empty()
+    }
+
+    pub fn best_value(&self) -> f64 {
+        self.truth[self.best_idx]
+    }
+
+    /// k-nearest-neighbor graph over normalized workflow features
+    /// (GEIST's parameter graph; built once per pool).
+    pub fn knn_graph(&self, k: usize) -> &Vec<Vec<usize>> {
+        self.knn.get_or_init(|| {
+            let n = self.len();
+            let xs = &self.feats.workflow;
+            let mut graph = Vec::with_capacity(n);
+            for i in 0..n {
+                let mut dists: Vec<(f64, usize)> = (0..n)
+                    .filter(|&j| j != i)
+                    .map(|j| {
+                        let mut d = 0.0f64;
+                        for f in 0..F_MAX {
+                            let diff = (xs[i][f] - xs[j][f]) as f64;
+                            d += diff * diff;
+                        }
+                        (d, j)
+                    })
+                    .collect();
+                dists.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+                graph.push(dists.into_iter().take(k).map(|(_, j)| j).collect());
+            }
+            graph
+        })
+    }
+}
+
+/// The collector (§2.1): runs the simulator and accounts for cost.
+pub struct Collector<'a> {
+    prob: &'a Problem,
+    rng: Pcg32,
+    /// Workflow runs performed.
+    pub workflow_runs: usize,
+    /// Component runs performed (isolated).
+    pub component_runs: usize,
+    /// Σ objective values over workflow training runs.
+    pub workflow_cost: f64,
+    /// Σ objective values over component training runs.
+    pub component_cost: f64,
+}
+
+impl<'a> Collector<'a> {
+    pub fn new(prob: &'a Problem, rng: Pcg32) -> Collector<'a> {
+        Collector {
+            prob,
+            rng,
+            workflow_runs: 0,
+            component_runs: 0,
+            workflow_cost: 0.0,
+            component_cost: 0.0,
+        }
+    }
+
+    /// Run the workflow at `cfg`, returning the measured objective.
+    pub fn measure(&mut self, cfg: &Config) -> f64 {
+        let m = self.prob.sim.run(cfg, &mut self.rng);
+        let y = self.prob.objective.value(&m);
+        self.workflow_runs += 1;
+        self.workflow_cost += y;
+        y
+    }
+
+    /// Run configurable component `comp` (index into the spec) alone.
+    pub fn measure_component(&mut self, comp: usize, comp_cfg: &[i64]) -> f64 {
+        let m = self.prob.sim.run_component(comp, comp_cfg, &mut self.rng);
+        let y = self.prob.objective.value(&m);
+        self.component_runs += 1;
+        self.component_cost += y;
+        y
+    }
+
+    /// Total collection cost (workflow + component runs) — the `c` of
+    /// the least-number-of-uses metric (§7.2.3).
+    pub fn total_cost(&self) -> f64 {
+        self.workflow_cost + self.component_cost
+    }
+
+    pub fn rng(&mut self) -> &mut Pcg32 {
+        &mut self.rng
+    }
+}
+
+/// What a tuner returns.
+pub struct TunerOutput {
+    /// Final high-fidelity surrogate model.
+    pub model: Ensemble,
+    /// Measured workflow samples: (pool index, measured objective).
+    pub measured: Vec<(usize, f64)>,
+    /// Searcher's pick: pool index with the best predicted objective.
+    pub best_idx: usize,
+    /// Total collection cost (incl. component runs unless historical).
+    pub collection_cost: f64,
+    /// Workflow runs actually performed.
+    pub workflow_runs: usize,
+}
+
+/// An auto-tuning algorithm.
+pub trait Tuner: Sync {
+    fn name(&self) -> &'static str;
+
+    /// Run one tuning campaign with a budget of `m` workflow-run
+    /// equivalents, drawing randomness from `rng`.
+    fn run(
+        &self,
+        prob: &Problem,
+        pool: &Pool,
+        scorer: &Scorer,
+        m: usize,
+        rng: &mut Pcg32,
+    ) -> TunerOutput;
+}
+
+/// The searcher (§2.1): best configuration over the pool.  Model
+/// predictions (log-space, exponentiated to times) are used for
+/// unmeasured configurations; where a configuration was actually
+/// measured, the observation replaces the model output — a tuner never
+/// trusts a surrogate over data it already has.
+pub fn searcher_best(
+    model: &Ensemble,
+    pool: &Pool,
+    scorer: &Scorer,
+    measured: &[(usize, f64)],
+) -> usize {
+    let mut scores: Vec<f64> = scorer
+        .score(model, &pool.feats.workflow)
+        .into_iter()
+        .map(f64::exp)
+        .collect();
+    for &(i, y) in measured {
+        scores[i] = y;
+    }
+    stats::argmin(&scores).expect("non-empty pool")
+}
+
+/// Train the workflow (high-fidelity) surrogate on measured samples.
+/// Log-space: the returned ensemble predicts ln(objective); use
+/// [`predict_times`] for real-scale estimates.
+pub fn train_hifi(prob: &Problem, pool: &Pool, measured: &[(usize, f64)]) -> Ensemble {
+    let xs: Vec<[f32; F_MAX]> = measured
+        .iter()
+        .map(|&(i, _)| pool.feats.workflow[i])
+        .collect();
+    let y: Vec<f64> = measured.iter().map(|&(_, y)| y).collect();
+    let params = crate::gbt::GbtParams::small_data();
+    crate::gbt::train_log(&xs, &y, prob.n_workflow_features(), &params)
+}
+
+/// Real-scale time predictions of a log-space model over rows.
+pub fn predict_times(
+    model: &Ensemble,
+    xs: &[[f32; F_MAX]],
+    scorer: &crate::surrogate::Scorer,
+) -> Vec<f64> {
+    scorer.score(model, xs).into_iter().map(f64::exp).collect()
+}
+
+/// Select `k` distinct unmeasured pool indices uniformly at random.
+pub fn random_unmeasured(
+    pool: &Pool,
+    measured: &HashSet<usize>,
+    k: usize,
+    rng: &mut Pcg32,
+) -> Vec<usize> {
+    let available: Vec<usize> = (0..pool.len()).filter(|i| !measured.contains(i)).collect();
+    assert!(available.len() >= k, "pool exhausted");
+    rng.sample_indices(available.len(), k)
+        .into_iter()
+        .map(|i| available[i])
+        .collect()
+}
+
+/// Select the `k` best-scoring unmeasured pool indices (scores are
+/// lower-is-better).
+pub fn top_unmeasured(
+    scores: &[f64],
+    measured: &HashSet<usize>,
+    k: usize,
+) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..scores.len()).filter(|i| !measured.contains(i)).collect();
+    idx.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap().then(a.cmp(&b)));
+    idx.truncate(k);
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_problem() -> Problem {
+        Problem::new(WorkflowId::Lv, Objective::ExecTime)
+    }
+
+    #[test]
+    fn pool_generation_is_feasible_and_deterministic() {
+        let prob = toy_problem();
+        let a = Pool::generate(&prob, 50, 7);
+        let b = Pool::generate(&prob, 50, 7);
+        assert_eq!(a.configs, b.configs);
+        for c in &a.configs {
+            assert!(prob.sim.feasible(c));
+            assert!(prob.sim.spec.validate(c).is_ok());
+        }
+        // dedup
+        let set: HashSet<&Config> = a.configs.iter().collect();
+        assert_eq!(set.len(), 50);
+        assert!(a.best_value() <= stats::quantile(&a.truth, 0.1));
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let prob = toy_problem();
+        let a = Pool::generate(&prob, 30, 1);
+        let b = Pool::generate(&prob, 30, 2);
+        assert_ne!(a.configs, b.configs);
+    }
+
+    #[test]
+    fn knn_graph_shape() {
+        let prob = toy_problem();
+        let pool = Pool::generate(&prob, 40, 3);
+        let g = pool.knn_graph(5);
+        assert_eq!(g.len(), 40);
+        for (i, nbrs) in g.iter().enumerate() {
+            assert_eq!(nbrs.len(), 5);
+            assert!(!nbrs.contains(&i));
+        }
+        // cached: same pointer
+        let g2 = pool.knn_graph(5);
+        assert!(std::ptr::eq(g, g2));
+    }
+
+    #[test]
+    fn collector_accounting() {
+        let prob = toy_problem();
+        let pool = Pool::generate(&prob, 10, 4);
+        let mut col = Collector::new(&prob, Pcg32::new(5, 5));
+        let y = col.measure(&pool.configs[0]);
+        assert!(y > 0.0);
+        let yc = col.measure_component(0, prob.sim.spec.component_slice(&pool.configs[0], 0));
+        assert!(yc > 0.0);
+        assert_eq!(col.workflow_runs, 1);
+        assert_eq!(col.component_runs, 1);
+        assert!((col.total_cost() - y - yc).abs() < 1e-12);
+    }
+
+    #[test]
+    fn selection_helpers() {
+        let prob = toy_problem();
+        let pool = Pool::generate(&prob, 20, 6);
+        let mut measured: HashSet<usize> = [0, 1, 2].into_iter().collect();
+        let mut rng = Pcg32::new(8, 8);
+        let r = random_unmeasured(&pool, &measured, 5, &mut rng);
+        assert_eq!(r.len(), 5);
+        assert!(r.iter().all(|i| !measured.contains(i)));
+
+        let scores: Vec<f64> = (0..20).map(|i| i as f64).collect();
+        let t = top_unmeasured(&scores, &measured, 3);
+        assert_eq!(t, vec![3, 4, 5]);
+        measured.insert(4);
+        let t2 = top_unmeasured(&scores, &measured, 3);
+        assert_eq!(t2, vec![3, 5, 6]);
+    }
+
+    #[test]
+    fn train_and_search() {
+        let prob = toy_problem();
+        let pool = Pool::generate(&prob, 60, 9);
+        // measure 30 configs with the truth (no noise) and check the
+        // searcher lands in a decent region
+        let measured: Vec<(usize, f64)> = (0..30).map(|i| (i, pool.truth[i])).collect();
+        let model = train_hifi(&prob, &pool, &measured);
+        let best = searcher_best(&model, &pool, &Scorer::Native, &measured);
+        let rank = pool
+            .truth
+            .iter()
+            .filter(|&&v| v < pool.truth[best])
+            .count();
+        assert!(rank < 30, "searcher pick should rank near the top, got {rank}");
+    }
+}

@@ -1,0 +1,186 @@
+//! GEIST — parameter-graph semi-supervised active learning (§7.3,
+//! ref [26]): build a neighbor graph over the configuration pool,
+//! propagate "likely top-5%" labels from measured configurations, and
+//! spend each iteration's batch on the unmeasured nodes most likely to
+//! be optimal (plus an exploration remainder).
+
+use std::collections::HashSet;
+
+use super::common::{
+    random_unmeasured, searcher_best, train_hifi, Collector, Pool, Problem, Tuner, TunerOutput,
+};
+use crate::surrogate::Scorer;
+use crate::util::rng::Pcg32;
+use crate::util::stats;
+
+pub struct Geist {
+    pub m0_frac: f64,
+    pub iterations: usize,
+    /// k of the k-NN parameter graph.
+    pub knn: usize,
+    /// Label-propagation damping (weight on neighborhood average).
+    pub alpha: f64,
+    /// Propagation sweeps per iteration.
+    pub sweeps: usize,
+    /// "Optimal" = within this top fraction of measured samples.
+    pub top_frac: f64,
+    /// Fraction of each batch spent on random exploration.
+    pub explore_frac: f64,
+}
+
+impl Default for Geist {
+    fn default() -> Self {
+        Geist {
+            m0_frac: 0.25,
+            iterations: 6,
+            knn: 10,
+            alpha: 0.85,
+            sweeps: 12,
+            top_frac: 0.05,
+            explore_frac: 0.2,
+        }
+    }
+}
+
+impl Geist {
+    /// One label-propagation pass: measured nodes are clamped to their
+    /// labels, unmeasured nodes relax toward their neighborhood mean.
+    fn propagate(
+        &self,
+        pool: &Pool,
+        labels: &[(usize, f64)], // (pool idx, 0/1 label)
+    ) -> Vec<f64> {
+        let graph = pool.knn_graph(self.knn);
+        let n = pool.len();
+        let mut clamped = vec![None; n];
+        for &(i, l) in labels {
+            clamped[i] = Some(l);
+        }
+        let prior = 0.0;
+        let mut score: Vec<f64> = (0..n).map(|i| clamped[i].unwrap_or(prior)).collect();
+        for _ in 0..self.sweeps {
+            let mut next = score.clone();
+            for i in 0..n {
+                if let Some(l) = clamped[i] {
+                    next[i] = l;
+                    continue;
+                }
+                let nbrs = &graph[i];
+                let avg = nbrs.iter().map(|&j| score[j]).sum::<f64>() / nbrs.len() as f64;
+                next[i] = self.alpha * avg + (1.0 - self.alpha) * prior;
+            }
+            score = next;
+        }
+        score
+    }
+}
+
+impl Tuner for Geist {
+    fn name(&self) -> &'static str {
+        "GEIST"
+    }
+
+    fn run(
+        &self,
+        prob: &Problem,
+        pool: &Pool,
+        scorer: &Scorer,
+        m: usize,
+        rng: &mut Pcg32,
+    ) -> TunerOutput {
+        let mut col = Collector::new(prob, rng.derive_str("collector"));
+        let mut sel_rng = rng.derive_str("select");
+        let m = m.min(pool.len());
+        let m0 = ((m as f64 * self.m0_frac).round() as usize).clamp(1, m);
+        let remaining = m - m0;
+        let iters = self.iterations.min(remaining.max(1));
+        let batch = if iters == 0 { 0 } else { remaining / iters };
+
+        let mut measured: Vec<(usize, f64)> = Vec::with_capacity(m);
+        let mut measured_set: HashSet<usize> = HashSet::with_capacity(m);
+        for i in random_unmeasured(pool, &measured_set, m0, &mut sel_rng) {
+            measured.push((i, col.measure(&pool.configs[i])));
+            measured_set.insert(i);
+        }
+
+        for _ in 0..iters {
+            if batch == 0 {
+                break;
+            }
+            // label measured configs: 1 if within the top fraction
+            let ys: Vec<f64> = measured.iter().map(|&(_, y)| y).collect();
+            let k_top = ((ys.len() as f64 * self.top_frac).ceil() as usize).max(1);
+            let top_idx: HashSet<usize> = stats::bottom_k_indices(&ys, k_top)
+                .into_iter()
+                .map(|r| measured[r].0)
+                .collect();
+            let labels: Vec<(usize, f64)> = measured
+                .iter()
+                .map(|&(i, _)| (i, if top_idx.contains(&i) { 1.0 } else { 0.0 }))
+                .collect();
+            let prob_optimal = self.propagate(pool, &labels);
+
+            let n_explore = ((batch as f64 * self.explore_frac).round() as usize).min(batch);
+            let n_exploit = batch - n_explore;
+            // highest probability-of-optimal first (maximize)
+            let neg: Vec<f64> = prob_optimal.iter().map(|&s| -s).collect();
+            for i in super::common::top_unmeasured(&neg, &measured_set, n_exploit) {
+                measured.push((i, col.measure(&pool.configs[i])));
+                measured_set.insert(i);
+            }
+            if n_explore > 0 {
+                for i in random_unmeasured(pool, &measured_set, n_explore, &mut sel_rng) {
+                    measured.push((i, col.measure(&pool.configs[i])));
+                    measured_set.insert(i);
+                }
+            }
+        }
+
+        let model = train_hifi(prob, pool, &measured);
+        let best_idx = searcher_best(&model, pool, scorer, &measured);
+        TunerOutput {
+            model,
+            measured,
+            best_idx,
+            collection_cost: col.total_cost(),
+            workflow_runs: col.workflow_runs,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::WorkflowId;
+    use crate::sim::Objective;
+
+    #[test]
+    fn propagation_spreads_from_labels() {
+        let prob = Problem::new(WorkflowId::Lv, Objective::ExecTime);
+        let pool = Pool::generate(&prob, 100, 21);
+        let g = Geist::default();
+        // label the true best as 1, a bad one as 0
+        let worst = stats::argmax(&pool.truth).unwrap();
+        let labels = vec![(pool.best_idx, 1.0), (worst, 0.0)];
+        let scores = g.propagate(&pool, &labels);
+        assert_eq!(scores[pool.best_idx], 1.0);
+        // neighbors of the best should score higher than neighbors of the worst
+        let gb = &pool.knn_graph(g.knn)[pool.best_idx];
+        let gw = &pool.knn_graph(g.knn)[worst];
+        let avg_b: f64 = gb.iter().map(|&i| scores[i]).sum::<f64>() / gb.len() as f64;
+        let avg_w: f64 = gw.iter().map(|&i| scores[i]).sum::<f64>() / gw.len() as f64;
+        assert!(avg_b > avg_w, "{avg_b} vs {avg_w}");
+    }
+
+    #[test]
+    fn runs_within_budget() {
+        let prob = Problem::new(WorkflowId::Hs, Objective::ExecTime);
+        let pool = Pool::generate(&prob, 150, 22);
+        let mut rng = Pcg32::new(6, 6);
+        let out = Geist::default().run(&prob, &pool, &Scorer::Native, 30, &mut rng);
+        assert!(out.workflow_runs <= 30);
+        assert!(out.workflow_runs >= 24);
+        let set: HashSet<usize> = out.measured.iter().map(|&(i, _)| i).collect();
+        assert_eq!(set.len(), out.measured.len(), "no duplicate measurements");
+    }
+}

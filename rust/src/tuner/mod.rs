@@ -1,0 +1,23 @@
+//! Auto-tuning algorithms: the paper's CEAL (Alg. 1) and its
+//! comparison targets RS, AL, GEIST (§7.3) and ALpH (§4).
+//!
+//! All tuners share the collector/modeler/searcher structure of §2.1:
+//! the *collector* runs the workflow simulator, the *modeler* trains
+//! boosted-tree surrogates on the collected samples, and the *searcher*
+//! picks the pool configuration with the best predicted objective.
+
+pub mod al;
+pub mod alph;
+pub mod budgeted;
+pub mod ceal;
+pub mod common;
+pub mod geist;
+pub mod rs;
+
+pub use al::ActiveLearning;
+pub use alph::Alph;
+pub use budgeted::{BudgetedCeal, BudgetedCealParams};
+pub use ceal::{Ceal, CealParams};
+pub use common::{Collector, Pool, Problem, Tuner, TunerOutput};
+pub use geist::Geist;
+pub use rs::RandomSampling;

@@ -1,0 +1,81 @@
+//! RS — random-sampling baseline (§7.3): spend the whole budget on
+//! uniformly random pool configurations, train once, search.
+
+use std::collections::HashSet;
+
+use super::common::{
+    random_unmeasured, searcher_best, train_hifi, Collector, Pool, Problem, Tuner, TunerOutput,
+};
+use crate::surrogate::Scorer;
+use crate::util::rng::Pcg32;
+
+pub struct RandomSampling;
+
+impl Tuner for RandomSampling {
+    fn name(&self) -> &'static str {
+        "RS"
+    }
+
+    fn run(
+        &self,
+        prob: &Problem,
+        pool: &Pool,
+        scorer: &Scorer,
+        m: usize,
+        rng: &mut Pcg32,
+    ) -> TunerOutput {
+        let mut col = Collector::new(prob, rng.derive_str("collector"));
+        let mut sel_rng = rng.derive_str("select");
+        let measured_set = HashSet::new();
+        let picks = random_unmeasured(pool, &measured_set, m.min(pool.len()), &mut sel_rng);
+        let measured: Vec<(usize, f64)> = picks
+            .into_iter()
+            .map(|i| (i, col.measure(&pool.configs[i])))
+            .collect();
+        let model = train_hifi(prob, pool, &measured);
+        let best_idx = searcher_best(&model, pool, scorer, &measured);
+        TunerOutput {
+            model,
+            measured,
+            best_idx,
+            collection_cost: col.total_cost(),
+            workflow_runs: col.workflow_runs,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::WorkflowId;
+    use crate::sim::Objective;
+
+    #[test]
+    fn uses_exact_budget() {
+        let prob = Problem::new(WorkflowId::Lv, Objective::ExecTime);
+        let pool = Pool::generate(&prob, 100, 1);
+        let mut rng = Pcg32::new(2, 2);
+        let out = RandomSampling.run(&prob, &pool, &Scorer::Native, 25, &mut rng);
+        assert_eq!(out.workflow_runs, 25);
+        assert_eq!(out.measured.len(), 25);
+        assert!(out.collection_cost > 0.0);
+        assert!(out.best_idx < pool.len());
+        // distinct samples
+        let set: std::collections::HashSet<usize> =
+            out.measured.iter().map(|&(i, _)| i).collect();
+        assert_eq!(set.len(), 25);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let prob = Problem::new(WorkflowId::Hs, Objective::CompTime);
+        let pool = Pool::generate(&prob, 80, 3);
+        let run = |seed: u64| {
+            let mut rng = Pcg32::new(seed, 0);
+            RandomSampling
+                .run(&prob, &pool, &Scorer::Native, 20, &mut rng)
+                .best_idx
+        };
+        assert_eq!(run(5), run(5));
+    }
+}

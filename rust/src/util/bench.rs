@@ -1,0 +1,184 @@
+//! Micro-benchmark harness (criterion is not in the offline vendor
+//! set).  Measures wall-clock over warmup + measured iterations and
+//! prints mean / median / p10 / p90 plus optional throughput.  Used by
+//! every target under `rust/benches/`.
+
+use std::time::Instant;
+
+use super::stats;
+
+/// One benchmark measurement summary (seconds per iteration).
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub p10_s: f64,
+    pub p90_s: f64,
+    /// optional items-per-iteration for throughput reporting
+    pub items: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        let mut s = format!(
+            "{:<44} {:>10}/iter  median {:>10}  p10 {:>10}  p90 {:>10}  (n={})",
+            self.name,
+            human_time(self.mean_s),
+            human_time(self.median_s),
+            human_time(self.p10_s),
+            human_time(self.p90_s),
+            self.iters
+        );
+        if let Some(items) = self.items {
+            let rate = items / self.mean_s;
+            s.push_str(&format!("  [{} items/s]", human_rate(rate)));
+        }
+        s
+    }
+}
+
+/// Format seconds with an adaptive unit.
+pub fn human_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{s:.3} s")
+    }
+}
+
+fn human_rate(r: f64) -> String {
+    if r >= 1e6 {
+        format!("{:.2}M", r / 1e6)
+    } else if r >= 1e3 {
+        format!("{:.1}k", r / 1e3)
+    } else {
+        format!("{r:.1}")
+    }
+}
+
+/// Benchmark runner: fixed warmup iterations then `iters` timed runs.
+pub struct Bencher {
+    warmup: usize,
+    iters: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Bencher {
+    pub fn new(warmup: usize, iters: usize) -> Self {
+        Bencher {
+            warmup,
+            iters,
+            results: Vec::new(),
+        }
+    }
+
+    /// From env: CEAL_BENCH_ITERS / CEAL_BENCH_WARMUP override defaults —
+    /// lets CI shrink runs.
+    pub fn from_env(default_warmup: usize, default_iters: usize) -> Self {
+        let get = |k: &str, d: usize| {
+            std::env::var(k)
+                .ok()
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(d)
+        };
+        Bencher::new(
+            get("CEAL_BENCH_WARMUP", default_warmup),
+            get("CEAL_BENCH_ITERS", default_iters),
+        )
+    }
+
+    /// Time `f`, which should return something opaque to keep the work
+    /// observable (black-box by return value).
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchResult {
+        self.bench_with_items(name, None, &mut f)
+    }
+
+    /// Time `f` and report `items`-per-second throughput.
+    pub fn bench_items<T>(
+        &mut self,
+        name: &str,
+        items: f64,
+        mut f: impl FnMut() -> T,
+    ) -> &BenchResult {
+        self.bench_with_items(name, Some(items), &mut f)
+    }
+
+    fn bench_with_items<T>(
+        &mut self,
+        name: &str,
+        items: Option<f64>,
+        f: &mut dyn FnMut() -> T,
+    ) -> &BenchResult {
+        for _ in 0..self.warmup {
+            let out = f();
+            std::hint::black_box(&out);
+        }
+        let mut times = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters.max(1) {
+            let t0 = Instant::now();
+            let out = f();
+            std::hint::black_box(&out);
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        let res = BenchResult {
+            name: name.to_string(),
+            iters: times.len(),
+            mean_s: stats::mean(&times),
+            median_s: stats::median(&times),
+            p10_s: stats::quantile(&times, 0.1),
+            p90_s: stats::quantile(&times, 0.9),
+            items,
+        };
+        println!("{}", res.report());
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bencher::new(1, 5);
+        let r = b
+            .bench("spin", || {
+                let mut acc = 0u64;
+                for i in 0..10_000u64 {
+                    acc = acc.wrapping_add(i * i);
+                }
+                acc
+            })
+            .clone();
+        assert!(r.mean_s > 0.0);
+        assert_eq!(r.iters, 5);
+        assert!(r.p10_s <= r.p90_s);
+    }
+
+    #[test]
+    fn human_time_units() {
+        assert!(human_time(2e-9).contains("ns"));
+        assert!(human_time(2e-6).contains("µs"));
+        assert!(human_time(2e-3).contains("ms"));
+        assert!(human_time(2.0).contains(" s"));
+    }
+
+    #[test]
+    fn throughput_reported() {
+        let mut b = Bencher::new(0, 2);
+        let r = b.bench_items("noop", 100.0, || 1).clone();
+        assert_eq!(r.items, Some(100.0));
+        assert!(r.report().contains("items/s"));
+    }
+}

@@ -1,0 +1,137 @@
+//! Minimal CLI argument parser (no clap in the offline vendor set).
+//!
+//! Grammar: `prog <subcommand> [positionals...] [--key value | --flag]`.
+//! Flags may appear anywhere after the subcommand.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positionals: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from raw arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err("bare '--' not supported".into());
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|nxt| !nxt.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.options.insert(name.to_string(), v);
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(tok);
+            } else {
+                out.positionals.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn parse_env() -> Result<Args, String> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.opt(name).unwrap_or(default)
+    }
+
+    pub fn opt_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| format!("--{name} expects an integer, got '{v}': {e}")),
+        }
+    }
+
+    pub fn opt_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| format!("--{name} expects a number, got '{v}': {e}")),
+        }
+    }
+
+    pub fn opt_u64(&self, name: &str, default: u64) -> Result<u64, String> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| format!("--{name} expects an integer, got '{v}': {e}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse(toks.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_positionals() {
+        let a = parse(&["fig", "5", "--reps", "10"]);
+        assert_eq!(a.subcommand.as_deref(), Some("fig"));
+        assert_eq!(a.positionals, vec!["5"]);
+        assert_eq!(a.opt_usize("reps", 1).unwrap(), 10);
+    }
+
+    #[test]
+    fn key_equals_value_and_flags() {
+        let a = parse(&["tune", "--workflow=LV", "--verbose", "--m", "50"]);
+        assert_eq!(a.opt("workflow"), Some("LV"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.opt_usize("m", 0).unwrap(), 50);
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn flag_before_end() {
+        let a = parse(&["x", "--dry-run", "--out", "results"]);
+        assert!(a.flag("dry-run"));
+        assert_eq!(a.opt("out"), Some("results"));
+    }
+
+    #[test]
+    fn bad_numbers_error() {
+        let a = parse(&["x", "--m", "abc"]);
+        assert!(a.opt_usize("m", 1).is_err());
+        assert!(a.opt_f64("m", 1.0).is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&["x"]);
+        assert_eq!(a.opt_or("out", "results"), "results");
+        assert_eq!(a.opt_f64("sigma", 0.5).unwrap(), 0.5);
+    }
+}

@@ -1,0 +1,108 @@
+//! Tiny CSV writer for experiment outputs under `results/`.
+
+use std::fs;
+use std::io::Write as _;
+use std::path::Path;
+
+/// In-memory CSV table with a fixed header.
+#[derive(Clone, Debug)]
+pub struct CsvWriter {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl CsvWriter {
+    pub fn new(header: &[&str]) -> Self {
+        CsvWriter {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row; must match the header arity.
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row arity {} != header arity {}",
+            cells.len(),
+            self.header.len()
+        );
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Convenience: row of display-able values.
+    pub fn row_display(&mut self, cells: &[&dyn std::fmt::Display]) {
+        let v: Vec<String> = cells.iter().map(|c| c.to_string()).collect();
+        self.row(&v);
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Serialize with RFC-4180 quoting where needed.
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        let emit = |out: &mut String, cells: &[String]| {
+            let encoded: Vec<String> = cells.iter().map(|c| quote(c)).collect();
+            out.push_str(&encoded.join(","));
+            out.push('\n');
+        };
+        emit(&mut out, &self.header);
+        for row in &self.rows {
+            emit(&mut out, row);
+        }
+        out
+    }
+
+    /// Write to a file, creating parent directories.
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(parent) = path.parent() {
+            fs::create_dir_all(parent)?;
+        }
+        let mut f = fs::File::create(path)?;
+        f.write_all(self.to_string().as_bytes())
+    }
+}
+
+fn quote(cell: &str) -> String {
+    if cell.contains([',', '"', '\n']) {
+        format!("\"{}\"", cell.replace('"', "\"\""))
+    } else {
+        cell.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_rows() {
+        let mut w = CsvWriter::new(&["a", "b"]);
+        w.row(&["1".into(), "2".into()]);
+        w.row_display(&[&3.5, &"x"]);
+        assert_eq!(w.to_string(), "a,b\n1,2\n3.5,x\n");
+        assert_eq!(w.len(), 2);
+    }
+
+    #[test]
+    fn quoting() {
+        let mut w = CsvWriter::new(&["v"]);
+        w.row(&["has,comma".into()]);
+        w.row(&["has \"quote\"".into()]);
+        assert_eq!(w.to_string(), "v\n\"has,comma\"\n\"has \"\"quote\"\"\"\n");
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_mismatch_panics() {
+        let mut w = CsvWriter::new(&["a", "b"]);
+        w.row(&["only-one".into()]);
+    }
+}

@@ -1,0 +1,18 @@
+//! Self-built substrates.
+//!
+//! The offline vendor set ships only the `xla` crate's dependency
+//! closure plus `anyhow`/`thiserror`, so the usual ecosystem crates
+//! (`rand`, `serde`, `clap`, `criterion`, `proptest`) are implemented
+//! here at the scale this project needs: a counter-based PCG RNG with
+//! keyed substreams, descriptive statistics, minimal JSON/CSV I/O,
+//! ASCII tables, a CLI argument parser, a micro-benchmark harness and a
+//! property-testing helper.
+
+pub mod bench;
+pub mod cli;
+pub mod csv;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;

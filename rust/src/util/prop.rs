@@ -1,0 +1,96 @@
+//! Property-testing helper (proptest is not in the offline vendor set).
+//!
+//! [`check`] runs a property over `cases` generated inputs from a seeded
+//! [`Pcg32`]; on failure it panics with the case index and the derived
+//! seed so the exact failing input can be replayed:
+//!
+//! ```no_run
+//! use ceal::util::{prop, rng::Pcg32};
+//! prop::check("sorted idempotent", 64, |rng| {
+//!     let mut v: Vec<u32> = (0..rng.gen_range(20)).map(|_| rng.next_u32()).collect();
+//!     v.sort_unstable();
+//!     let w = { let mut w = v.clone(); w.sort_unstable(); w };
+//!     prop::assert_prop(v == w, "double sort changed order")
+//! });
+//! ```
+
+use super::rng::Pcg32;
+
+/// Property outcome: Ok to pass, Err(message) to fail the case.
+pub type PropResult = Result<(), String>;
+
+/// Convenience constructor for property assertions.
+pub fn assert_prop(cond: bool, msg: impl Into<String>) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Assert two f64s are within tolerance.
+pub fn assert_close(a: f64, b: f64, tol: f64, what: &str) -> PropResult {
+    let denom = 1.0f64.max(a.abs()).max(b.abs());
+    if (a - b).abs() / denom <= tol {
+        Ok(())
+    } else {
+        Err(format!("{what}: {a} vs {b} (tol {tol})"))
+    }
+}
+
+/// Run `prop` over `cases` seeded inputs. The RNG handed to each case is
+/// derived from a fixed root and the case index, so failures reproduce.
+pub fn check(name: &str, cases: usize, prop: impl Fn(&mut Pcg32) -> PropResult) {
+    check_seeded(name, 0xCEA1_0001, cases, prop)
+}
+
+/// Like [`check`] with an explicit root seed (replay a failure).
+pub fn check_seeded(
+    name: &str,
+    root_seed: u64,
+    cases: usize,
+    prop: impl Fn(&mut Pcg32) -> PropResult,
+) {
+    let root = Pcg32::new(root_seed, 0);
+    for case in 0..cases {
+        let mut rng = root.derive(case as u64);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed at case {case}/{cases} \
+                 (root_seed={root_seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0usize;
+        let counter = std::cell::Cell::new(0usize);
+        check("count", 10, |_rng| {
+            counter.set(counter.get() + 1);
+            Ok(())
+        });
+        count += counter.get();
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_panics_with_context() {
+        check("fails", 5, |rng| {
+            assert_prop(rng.f64() < 2.0, "impossible")?;
+            Err("always".into())
+        });
+    }
+
+    #[test]
+    fn assert_close_relative() {
+        assert!(assert_close(1000.0, 1000.5, 1e-3, "x").is_ok());
+        assert!(assert_close(1.0, 1.5, 1e-3, "x").is_err());
+    }
+}

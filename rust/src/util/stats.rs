@@ -1,0 +1,141 @@
+//! Descriptive statistics used across metrics, benches and experiments.
+
+/// Arithmetic mean; 0 for an empty slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Unbiased sample standard deviation; 0 when n < 2.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Linear-interpolated quantile, `q` in [0, 1]. Sorts a copy.
+pub fn quantile(xs: &[f64], q: f64) -> f64 {
+    assert!(!xs.is_empty(), "quantile of empty slice");
+    assert!((0.0..=1.0).contains(&q));
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).expect("NaN in quantile input"));
+    let pos = q * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (pos - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+/// Median (0.5 quantile).
+pub fn median(xs: &[f64]) -> f64 {
+    quantile(xs, 0.5)
+}
+
+/// Index of the minimum value (first on ties). None for empty input.
+pub fn argmin(xs: &[f64]) -> Option<usize> {
+    xs.iter()
+        .enumerate()
+        .min_by(|a, b| a.1.partial_cmp(b.1).expect("NaN in argmin"))
+        .map(|(i, _)| i)
+}
+
+/// Index of the maximum value (first on ties). None for empty input.
+pub fn argmax(xs: &[f64]) -> Option<usize> {
+    let mut best: Option<usize> = None;
+    for (i, x) in xs.iter().enumerate() {
+        match best {
+            None => best = Some(i),
+            Some(b) => {
+                if x.partial_cmp(&xs[b]).expect("NaN in argmax") == std::cmp::Ordering::Greater {
+                    best = Some(i);
+                }
+            }
+        }
+    }
+    best
+}
+
+/// Indices of the `k` smallest values, ascending (stable order on ties).
+pub fn bottom_k_indices(xs: &[f64], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..xs.len()).collect();
+    idx.sort_by(|&a, &b| {
+        xs[a]
+            .partial_cmp(&xs[b])
+            .expect("NaN in bottom_k")
+            .then(a.cmp(&b))
+    });
+    idx.truncate(k.min(xs.len()));
+    idx
+}
+
+/// Indices of the `k` largest values, descending (stable order on ties).
+pub fn top_k_indices(xs: &[f64], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..xs.len()).collect();
+    idx.sort_by(|&a, &b| {
+        xs[b]
+            .partial_cmp(&xs[a])
+            .expect("NaN in top_k")
+            .then(a.cmp(&b))
+    });
+    idx.truncate(k.min(xs.len()));
+    idx
+}
+
+/// Rank positions (0 = smallest) of each element.
+pub fn ranks_ascending(xs: &[f64]) -> Vec<usize> {
+    let order = bottom_k_indices(xs, xs.len());
+    let mut ranks = vec![0usize; xs.len()];
+    for (rank, &i) in order.iter().enumerate() {
+        ranks[i] = rank;
+    }
+    ranks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_std() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((std_dev(&xs) - 2.138089935).abs() < 1e-6);
+    }
+
+    #[test]
+    fn quantiles() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert_eq!(quantile(&xs, 1.0), 4.0);
+        assert!((median(&xs) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn argmin_argmax_ties_first() {
+        let xs = [3.0, 1.0, 1.0, 5.0, 5.0];
+        assert_eq!(argmin(&xs), Some(1));
+        assert_eq!(argmax(&xs), Some(3));
+        assert_eq!(argmin(&[]), None);
+    }
+
+    #[test]
+    fn bottom_top_k() {
+        let xs = [5.0, 1.0, 4.0, 2.0, 3.0];
+        assert_eq!(bottom_k_indices(&xs, 3), vec![1, 3, 4]);
+        assert_eq!(top_k_indices(&xs, 2), vec![0, 2]);
+        assert_eq!(bottom_k_indices(&xs, 99).len(), 5);
+    }
+
+    #[test]
+    fn ranks() {
+        let xs = [10.0, 0.0, 5.0];
+        assert_eq!(ranks_ascending(&xs), vec![2, 0, 1]);
+    }
+}

@@ -1,0 +1,135 @@
+//! ASCII table rendering for the experiment harness (paper-style rows
+//! printed to the terminal).
+
+/// Column alignment.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+/// Simple ASCII table with a header row and per-column alignment.
+#[derive(Clone, Debug)]
+pub struct Table {
+    header: Vec<String>,
+    aligns: Vec<Align>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Table {
+            aligns: header
+                .iter()
+                .map(|_| Align::Right)
+                .collect(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Left-align the given column indices (defaults are right-aligned).
+    pub fn align_left(mut self, cols: &[usize]) -> Self {
+        for &c in cols {
+            self.aligns[c] = Align::Left;
+        }
+        self
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "table row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn row_display(&mut self, cells: &[&dyn std::fmt::Display]) {
+        let v: Vec<String> = cells.iter().map(|c| c.to_string()).collect();
+        self.row(&v);
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self.header.len();
+        let mut widths = vec![0usize; ncols];
+        for (i, h) in self.header.iter().enumerate() {
+            widths[i] = h.chars().count();
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.chars().count());
+            }
+        }
+        let sep: String = {
+            let parts: Vec<String> = widths.iter().map(|w| "-".repeat(w + 2)).collect();
+            format!("+{}+", parts.join("+"))
+        };
+        let fmt_row = |cells: &[String]| -> String {
+            let parts: Vec<String> = cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| {
+                    let pad = widths[i] - c.chars().count();
+                    match self.aligns[i] {
+                        Align::Left => format!(" {}{} ", c, " ".repeat(pad)),
+                        Align::Right => format!(" {}{} ", " ".repeat(pad), c),
+                    }
+                })
+                .collect();
+            format!("|{}|", parts.join("|"))
+        };
+        let mut out = String::new();
+        out.push_str(&sep);
+        out.push('\n');
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        out
+    }
+}
+
+/// Format a float with `prec` significant-looking decimals, trimming wide
+/// magnitudes sensibly (used all over the experiment printouts).
+pub fn fnum(x: f64, prec: usize) -> String {
+    if !x.is_finite() {
+        return format!("{x}");
+    }
+    if x != 0.0 && x.abs() < 10f64.powi(-(prec as i32)) {
+        return format!("{x:.2e}");
+    }
+    format!("{x:.prec$}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new(&["name", "val"]).align_left(&[0]);
+        t.row(&["a".into(), "1.5".into()]);
+        t.row(&["longer".into(), "22".into()]);
+        let s = t.render();
+        assert!(s.contains("| name   | val |"), "got:\n{s}");
+        assert!(s.contains("| a      | 1.5 |"), "got:\n{s}");
+        assert!(s.contains("| longer |  22 |"), "got:\n{s}");
+    }
+
+    #[test]
+    fn fnum_formats() {
+        assert_eq!(fnum(3.14159, 2), "3.14");
+        assert_eq!(fnum(0.00001, 3), "1.00e-5");
+        assert_eq!(fnum(f64::INFINITY, 2), "inf");
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_checked() {
+        let mut t = Table::new(&["a"]);
+        t.row(&["x".into(), "y".into()]);
+    }
+}

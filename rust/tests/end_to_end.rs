@@ -1,0 +1,112 @@
+//! End-to-end integration: small-scale campaigns across the whole grid
+//! must run, produce sane aggregates, and reproduce the paper's
+//! *qualitative* orderings (CEAL ≥ RS everywhere; history helps CEAL;
+//! CEAL with history beats ALpH with history).
+
+use ceal::config::WorkflowId;
+use ceal::coordinator::{run_campaign, Algo, Campaign};
+use ceal::exper::{self, ExpCtx};
+use ceal::sim::Objective;
+
+fn quick(wf: WorkflowId, obj: Objective, m: usize, reps: usize) -> Campaign {
+    Campaign::new(wf, obj, m)
+        .with_reps(reps)
+        .with_pool_size(300)
+        .with_threads(2)
+}
+
+#[test]
+fn full_grid_runs_and_aggregates() {
+    for wf in WorkflowId::ALL {
+        for obj in Objective::ALL {
+            let agg = run_campaign(Algo::Ceal, &quick(wf, obj, 20, 3));
+            assert_eq!(agg.reps.len(), 3, "{wf}/{obj}");
+            assert!(agg.mean_norm_best() >= 1.0, "{wf}/{obj}");
+            assert!(agg.mean_norm_best() < 50.0, "{wf}/{obj}: absurd tuning result");
+            assert!(agg.pool_best > 0.0 && agg.expert_value > 0.0);
+            for r in &agg.reps {
+                assert_eq!(r.recalls.len(), 10);
+                assert!(r.mdape_all.is_finite() && r.mdape_top2.is_finite());
+            }
+        }
+    }
+}
+
+#[test]
+fn ceal_beats_rs_on_average() {
+    // paper Fig. 5's coarsest claim, at reduced scale: averaged over the
+    // grid, CEAL's tuned configs beat RS's.
+    let mut ceal_sum = 0.0;
+    let mut rs_sum = 0.0;
+    for wf in WorkflowId::ALL {
+        for obj in Objective::ALL {
+            let ceal = run_campaign(Algo::Ceal, &quick(wf, obj, 25, 6));
+            let rs = run_campaign(Algo::Rs, &quick(wf, obj, 25, 6));
+            ceal_sum += ceal.mean_norm_best();
+            rs_sum += rs.mean_norm_best();
+        }
+    }
+    assert!(
+        ceal_sum < rs_sum,
+        "CEAL mean normalized {ceal_sum} should beat RS {rs_sum}"
+    );
+}
+
+#[test]
+fn history_helps_ceal_and_beats_alph() {
+    // paper §7.5 qualitative claims at reduced scale, LV computer time.
+    let with = run_campaign(Algo::CealHist, &quick(WorkflowId::Lv, Objective::CompTime, 25, 8));
+    let without = run_campaign(Algo::Ceal, &quick(WorkflowId::Lv, Objective::CompTime, 25, 8));
+    let alph = run_campaign(Algo::AlphHist, &quick(WorkflowId::Lv, Objective::CompTime, 25, 8));
+    assert!(
+        with.mean_best() <= without.mean_best() * 1.05,
+        "history should help: {} vs {}",
+        with.mean_best(),
+        without.mean_best()
+    );
+    assert!(
+        with.mean_best() < alph.mean_best(),
+        "CEAL+hist {} should beat ALpH+hist {}",
+        with.mean_best(),
+        alph.mean_best()
+    );
+}
+
+#[test]
+fn experiment_harness_smoke() {
+    // every table/figure must run end-to-end at tiny settings and emit
+    // its CSV
+    let dir = std::env::temp_dir().join(format!("ceal-e2e-{}", std::process::id()));
+    let mut ctx = ExpCtx::default();
+    ctx.out_dir = dir.clone();
+    ctx.reps = 2;
+    ctx.pool_size = 120;
+    ctx.threads = 2;
+    exper::run_table(1, &ctx);
+    exper::run_table(2, &ctx);
+    for fig in [4usize, 5, 8] {
+        assert!(exper::run_fig(fig, &ctx), "fig {fig} missing");
+    }
+    for name in ["table1.csv", "table2.csv", "fig04.csv", "fig05.csv", "fig08.csv"] {
+        let p = dir.join(name);
+        assert!(p.exists(), "{} not written", p.display());
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert!(text.lines().count() > 1, "{name} is empty");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn payoff_metric_end_to_end() {
+    // Fig. 8-style: with history on LV comp time, CEAL should pay off
+    // within a finite number of runs at reduced scale.
+    let agg = run_campaign(Algo::CealHist, &quick(WorkflowId::Lv, Objective::CompTime, 30, 8));
+    if let Some(p) = agg.payoff_runs() {
+        assert!(p > 0.0 && p < 1e7, "payoff {p} out of range");
+    }
+    // cost must include only workflow runs when history is free
+    for r in &agg.reps {
+        assert!(r.cost > 0.0);
+        assert!(r.workflow_runs >= 25, "hist variant should spend budget on workflow runs");
+    }
+}

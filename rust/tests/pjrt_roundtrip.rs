@@ -1,0 +1,164 @@
+//! Integration: the AOT artifacts loaded via PJRT must agree with the
+//! native Rust evaluation of the same flattened ensembles — this pins
+//! the whole L1 (Pallas) / L2 (JAX) / L3 (Rust) stack together.
+//!
+//! Requires `make artifacts` (skipped with a message otherwise).
+
+use ceal::config::{lv_spec, Config, F_MAX};
+use ceal::gbt::{train, GbtParams};
+use ceal::runtime::Runtime;
+use ceal::sim::Objective;
+use ceal::surrogate::{PoolFeatures, Scorer};
+use ceal::util::rng::Pcg32;
+
+fn runtime_or_skip() -> Option<Runtime> {
+    match Runtime::load_default() {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP pjrt tests: {e:#} (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+fn random_rows(rng: &mut Pcg32, n: usize) -> Vec<[f32; F_MAX]> {
+    (0..n)
+        .map(|_| {
+            let mut x = [0f32; F_MAX];
+            for v in x.iter_mut() {
+                *v = rng.f32();
+            }
+            x
+        })
+        .collect()
+}
+
+fn trained_ensemble(rng: &mut Pcg32, n: usize, nf: usize) -> ceal::gbt::Ensemble {
+    let xs = random_rows(rng, n);
+    let y: Vec<f64> = xs
+        .iter()
+        .map(|x| 3.0 * x[0] as f64 - 2.0 * x[1] as f64 + (x[2] as f64).powi(2))
+        .collect();
+    train(&xs, &y, nf, &GbtParams::default())
+}
+
+#[test]
+fn ensemble_scoring_matches_native() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let mut rng = Pcg32::new(100, 0);
+    let ens = trained_ensemble(&mut rng, 300, 4);
+    for n in [1usize, 17, 256, 1000, 2048] {
+        let xs = random_rows(&mut rng, n);
+        let got = rt.score(&ens.flatten(), &xs).unwrap();
+        assert_eq!(got.len(), n);
+        for (i, x) in xs.iter().enumerate() {
+            let want = ens.predict(x);
+            assert!(
+                (got[i] - want).abs() < 1e-3 * (1.0 + want.abs()),
+                "n={n} row {i}: pjrt {} vs native {}",
+                got[i],
+                want
+            );
+        }
+    }
+}
+
+#[test]
+fn oversized_batch_is_slabbed() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let mut rng = Pcg32::new(101, 0);
+    let ens = trained_ensemble(&mut rng, 100, 3);
+    let xs = random_rows(&mut rng, 2048 + 300);
+    let got = rt.score(&ens.flatten(), &xs).unwrap();
+    assert_eq!(got.len(), xs.len());
+    for (i, x) in xs.iter().enumerate().step_by(97) {
+        let want = ens.predict(x);
+        assert!((got[i] - want).abs() < 1e-3 * (1.0 + want.abs()));
+    }
+}
+
+#[test]
+fn lowfi_artifact_matches_native_combination() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let mut rng = Pcg32::new(102, 0);
+    let e0 = trained_ensemble(&mut rng, 200, 4);
+    let e1 = trained_ensemble(&mut rng, 200, 3);
+    let n = 500;
+    let xs0 = random_rows(&mut rng, n);
+    let xs1 = random_rows(&mut rng, n);
+    for (mode, name) in [(1.0f32, "max"), (0.0f32, "sum")] {
+        let got = rt
+            .lowfi_score(
+                &[(e0.flatten(), xs0.clone()), (e1.flatten(), xs1.clone())],
+                mode,
+            )
+            .unwrap();
+        assert_eq!(got.len(), n);
+        for i in (0..n).step_by(31) {
+            // log-space semantics: artifact combines exp(P_j); padding
+            // components contribute exp(NEG_PRED) == 0
+            let p0 = (e0.predict(&xs0[i]) as f64).exp();
+            let p1 = (e1.predict(&xs1[i]) as f64).exp();
+            let want = if mode == 1.0 { p0.max(p1) } else { p0 + p1 };
+            assert!(
+                (got[i] as f64 - want).abs() < 1e-3 * (1.0 + want.abs()),
+                "{name} row {i}: pjrt {} vs native {}",
+                got[i],
+                want
+            );
+        }
+    }
+}
+
+#[test]
+fn scorer_pjrt_equals_scorer_native_on_real_pool() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let spec = lv_spec();
+    let mut rng = Pcg32::new(103, 0);
+    let configs: Vec<Config> = (0..300).map(|_| spec.sample(&mut rng)).collect();
+    let feats = PoolFeatures::encode(&spec, &configs);
+    let ens = trained_ensemble(&mut rng, 150, 7);
+
+    let native = Scorer::Native.score(&ens, &feats.workflow);
+    let pjrt = Scorer::Pjrt(rt).score(&ens, &feats.workflow);
+    for i in 0..configs.len() {
+        assert!(
+            (native[i] - pjrt[i]).abs() < 1e-3 * (1.0 + native[i].abs()),
+            "row {i}: {} vs {}",
+            native[i],
+            pjrt[i]
+        );
+    }
+}
+
+#[test]
+fn scorer_lowfi_pjrt_equals_native() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let spec = lv_spec();
+    let mut rng = Pcg32::new(104, 0);
+    let configs: Vec<Config> = (0..200).map(|_| spec.sample(&mut rng)).collect();
+    let feats = PoolFeatures::encode(&spec, &configs);
+    // component models trained on positive targets (times)
+    let mk = |rng: &mut Pcg32, xs: &Vec<[f32; F_MAX]>, nf: usize| {
+        let y: Vec<f64> = xs.iter().map(|x| 5.0 + 10.0 * x[0] as f64).collect();
+        let _ = rng;
+        train(xs, &y, nf, &GbtParams::small_data())
+    };
+    let comps = vec![
+        mk(&mut rng, &feats.per_component[0], 4),
+        mk(&mut rng, &feats.per_component[1], 3),
+    ];
+    for objective in [Objective::ExecTime, Objective::CompTime] {
+        let native = Scorer::Native.lowfi(&comps, &feats, objective);
+        let pjrt = Scorer::Pjrt(Runtime::load_default().unwrap()).lowfi(&comps, &feats, objective);
+        let _ = &rt;
+        for i in 0..configs.len() {
+            assert!(
+                (native[i] - pjrt[i]).abs() < 1e-3 * (1.0 + native[i].abs()),
+                "{objective} row {i}: {} vs {}",
+                native[i],
+                pjrt[i]
+            );
+        }
+    }
+}

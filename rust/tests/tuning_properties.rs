@@ -1,0 +1,197 @@
+//! Property tests over the coordinator's invariants (budget accounting,
+//! pool/selection state, metric bounds, simulator monotonicities) using
+//! the in-repo property harness (`ceal::util::prop`).
+
+use std::collections::HashSet;
+
+use ceal::config::{Config, WorkflowId};
+use ceal::gbt::{train_log, GbtParams};
+use ceal::metrics::{mdape, recall_score};
+use ceal::sim::Objective;
+use ceal::surrogate::Scorer;
+use ceal::tuner::{
+    ActiveLearning, Alph, Ceal, CealParams, Geist, Pool, Problem, RandomSampling, Tuner,
+};
+use ceal::util::prop::{assert_prop, check};
+use ceal::util::rng::Pcg32;
+
+fn any_problem(rng: &mut Pcg32) -> Problem {
+    let wf = *rng.choose(&WorkflowId::ALL);
+    let obj = *rng.choose(&Objective::ALL);
+    Problem::new(wf, obj)
+}
+
+#[test]
+fn tuners_respect_budget_and_uniqueness() {
+    let tuners: Vec<(&str, Box<dyn Tuner>)> = vec![
+        ("RS", Box::new(RandomSampling)),
+        ("AL", Box::new(ActiveLearning::default())),
+        ("GEIST", Box::new(Geist::default())),
+        ("CEAL", Box::new(Ceal::new(CealParams::no_hist()))),
+        ("ALpH", Box::new(Alph::new(CealParams::no_hist()))),
+    ];
+    check("budget/uniqueness/valid-output", 20, |rng| {
+        let prob = any_problem(rng);
+        let pool = Pool::generate(&prob, 80 + rng.gen_range(80) as usize, rng.next_u64());
+        let m = 10 + rng.gen_range(40) as usize;
+        let (name, tuner) = &tuners[rng.gen_range(tuners.len() as u64) as usize];
+        let mut trng = rng.derive(1);
+        let out = tuner.run(&prob, &pool, &Scorer::Native, m, &mut trng);
+        assert_prop(
+            out.workflow_runs <= m,
+            format!("{name}: {} workflow runs exceed budget {m}", out.workflow_runs),
+        )?;
+        assert_prop(
+            out.measured.len() == out.workflow_runs,
+            format!("{name}: measured len != workflow runs"),
+        )?;
+        let distinct: HashSet<usize> = out.measured.iter().map(|&(i, _)| i).collect();
+        assert_prop(
+            distinct.len() == out.measured.len(),
+            format!("{name}: duplicate pool indices measured"),
+        )?;
+        assert_prop(out.best_idx < pool.len(), format!("{name}: best_idx out of range"))?;
+        assert_prop(
+            out.collection_cost > 0.0 && out.collection_cost.is_finite(),
+            format!("{name}: bad collection cost {}", out.collection_cost),
+        )?;
+        assert_prop(
+            out.measured.iter().all(|&(_, y)| y > 0.0 && y.is_finite()),
+            format!("{name}: non-positive measurement"),
+        )
+    });
+}
+
+#[test]
+fn pool_invariants() {
+    check("pool feasible/dedup/deterministic", 12, |rng| {
+        let prob = any_problem(rng);
+        let seed = rng.next_u64();
+        let n = 40 + rng.gen_range(60) as usize;
+        let a = Pool::generate(&prob, n, seed);
+        let b = Pool::generate(&prob, n, seed);
+        assert_prop(a.configs == b.configs, "pool not deterministic")?;
+        let set: HashSet<&Config> = a.configs.iter().collect();
+        assert_prop(set.len() == n, "pool contains duplicates")?;
+        for c in &a.configs {
+            assert_prop(prob.sim.feasible(c), format!("infeasible pool config {c}"))?;
+            assert_prop(
+                prob.sim.spec.validate(c).is_ok(),
+                format!("invalid pool config {c}"),
+            )?;
+        }
+        let best = a.best_value();
+        assert_prop(a.truth.iter().all(|&v| v >= best), "best_value not minimal")
+    });
+}
+
+#[test]
+fn recall_and_mdape_bounds() {
+    check("metric bounds", 200, |rng| {
+        let n = 3 + rng.gen_range(40) as usize;
+        let actual: Vec<f64> = (0..n).map(|_| 1.0 + rng.f64() * 100.0).collect();
+        let pred: Vec<f64> = (0..n).map(|_| 1.0 + rng.f64() * 100.0).collect();
+        let k = 1 + rng.gen_range(n as u64) as usize;
+        let r = recall_score(k, &pred, &actual);
+        assert_prop((0.0..=1.0).contains(&r), format!("recall {r} out of range"))?;
+        let perfect = recall_score(k, &actual, &actual);
+        assert_prop((perfect - 1.0).abs() < 1e-12, "self-recall must be 1")?;
+        let e = mdape(&actual, &pred);
+        assert_prop(e >= 0.0 && e.is_finite(), format!("mdape {e}"))?;
+        assert_prop(mdape(&actual, &actual) == 0.0, "self-mdape must be 0")
+    });
+}
+
+#[test]
+fn simulator_noise_is_bounded_and_seeded() {
+    check("simulator noise", 15, |rng| {
+        let prob = any_problem(rng);
+        let cfg = {
+            let feasible = |c: &Config| prob.sim.feasible(c);
+            let mut srng = rng.derive(2);
+            prob.sim.spec.sample_feasible(&mut srng, &feasible, 100_000)
+        };
+        let expected = prob.objective.value(&prob.sim.expected(&cfg));
+        assert_prop(expected > 0.0, "expected value must be positive")?;
+        // same seed -> same noisy measurement
+        let mut r1 = Pcg32::new(99, 1);
+        let mut r2 = Pcg32::new(99, 1);
+        let a = prob.objective.value(&prob.sim.run(&cfg, &mut r1));
+        let b = prob.objective.value(&prob.sim.run(&cfg, &mut r2));
+        assert_prop(a == b, "noisy run not reproducible under same seed")?;
+        // noise is multiplicative and small
+        assert_prop(
+            (a / expected - 1.0).abs() < 0.5,
+            format!("noise too large: {a} vs {expected}"),
+        )
+    });
+}
+
+#[test]
+fn flattened_ensembles_match_native_predictor() {
+    check("flatten == native", 30, |rng| {
+        let n = 20 + rng.gen_range(100) as usize;
+        let nf = 1 + rng.gen_range(7) as usize;
+        let xs: Vec<[f32; ceal::config::F_MAX]> = (0..n)
+            .map(|_| {
+                let mut x = [0f32; ceal::config::F_MAX];
+                for v in x.iter_mut().take(nf) {
+                    *v = rng.f32();
+                }
+                x
+            })
+            .collect();
+        let y: Vec<f64> = xs.iter().map(|x| 1.0 + 30.0 * x[0] as f64).collect();
+        let params = GbtParams {
+            n_trees: 1 + rng.gen_range(40) as usize,
+            depth: 1 + rng.gen_range(5) as usize,
+            ..GbtParams::small_data()
+        };
+        let ens = train_log(&xs, &y, nf, &params);
+        let flat = ens.flatten();
+        for x in xs.iter().take(20) {
+            let a = ens.predict(x);
+            let b = flat.predict(x);
+            assert_prop(
+                (a - b).abs() < 1e-4 * (1.0 + a.abs()),
+                format!("flatten mismatch {a} vs {b}"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn objective_combination_matches_artifact_semantics() {
+    check("combine max/sum", 100, |rng| {
+        let j = 1 + rng.gen_range(4) as usize;
+        let parts: Vec<f64> = (0..j).map(|_| rng.f64() * 50.0 + 0.1).collect();
+        let mx = Objective::ExecTime.combine(&parts);
+        let sm = Objective::CompTime.combine(&parts);
+        let want_max = parts.iter().cloned().fold(f64::MIN, f64::max);
+        let want_sum: f64 = parts.iter().sum();
+        assert_prop((mx - want_max).abs() < 1e-12, "max mismatch")?;
+        assert_prop((sm - want_sum).abs() < 1e-12, "sum mismatch")?;
+        // mode scalars match the artifact convention
+        assert_prop(Objective::ExecTime.mode() == 1.0, "exec mode")?;
+        assert_prop(Objective::CompTime.mode() == 0.0, "comp mode")
+    });
+}
+
+/// Failure injection: tuners must survive degenerate setups.
+#[test]
+fn degenerate_setups() {
+    // budget of 1-3 runs on a tiny pool must not panic
+    let prob = Problem::new(WorkflowId::Hs, Objective::ExecTime);
+    let pool = Pool::generate(&prob, 20, 5);
+    for m in [1usize, 2, 3] {
+        let mut rng = Pcg32::new(m as u64, 0);
+        let out = Ceal::new(CealParams::no_hist()).run(&prob, &pool, &Scorer::Native, m, &mut rng);
+        assert!(out.workflow_runs >= 1);
+        assert!(out.best_idx < pool.len());
+    }
+    // budget exceeding the pool saturates instead of panicking
+    let mut rng = Pcg32::new(9, 0);
+    let out = RandomSampling.run(&prob, &pool, &Scorer::Native, 10_000, &mut rng);
+    assert!(out.workflow_runs <= pool.len());
+}
