@@ -1,9 +1,16 @@
 //! GBT training benchmark: the modeler's cost at the paper's budgets
 //! (25-100 workflow samples), at component-history scale (500), and at
 //! pool scale (2000).
+//!
+//! `gbt/train_log/*` is the production histogram engine;
+//! `gbt/train_log_exact/*` (run at the two large sizes) is the
+//! pre-histogram brute-force engine kept as `train_exact`, so the
+//! speedup ratio is measurable in a single run.  Likewise
+//! `gbt/native_predict*` compares the blocked batch predictor against
+//! the row-at-a-time path.
 
 use ceal::config::F_MAX;
-use ceal::gbt::{train_log, GbtParams};
+use ceal::gbt::{train_log, train_log_exact, GbtParams};
 use ceal::util::bench::Bencher;
 use ceal::util::rng::Pcg32;
 
@@ -37,17 +44,31 @@ fn main() {
         b.bench_items(&format!("gbt/train_log/n{n}"), n as f64, || {
             train_log(&xs, &y, 7, &params)
         });
+        // exact-engine baseline at the sizes the histogram engine is
+        // built for (it dominates total campaign time there)
+        if n >= 500 {
+            b.bench_items(&format!("gbt/train_log_exact/n{n}"), n as f64, || {
+                train_log_exact(&xs, &y, 7, &params)
+            });
+        }
     }
-    // prediction throughput of the native mirror
+    // prediction throughput of the native mirror: blocked batch path
+    // vs the row-at-a-time baseline
     let (xs, y) = data(&mut rng, 500);
     let ens = train_log(&xs, &y, 7, &GbtParams::default());
     let (pool, _) = data(&mut rng, 2000);
     b.bench_items("gbt/native_predict/pool2000", 2000.0, || {
         ens.predict_batch(&pool)
     });
+    b.bench_items("gbt/native_predict_rowwise/pool2000", 2000.0, || {
+        pool.iter().map(|x| ens.predict(x)).collect::<Vec<f32>>()
+    });
     let flat = ens.flatten();
     b.bench_items("gbt/flatten", 1.0, || ens.flatten());
     b.bench_items("gbt/flat_predict/pool2000", 2000.0, || {
+        flat.predict_batch(&pool)
+    });
+    b.bench_items("gbt/flat_predict_rowwise/pool2000", 2000.0, || {
         pool.iter().map(|x| flat.predict(x)).collect::<Vec<f32>>()
     });
 }

@@ -38,6 +38,14 @@ fn main() {
     b.bench_items("native/pool2000", 2000.0, || {
         native.score(&ens, &feats.workflow)
     });
+    // row-at-a-time baseline for the blocked batch path above
+    b.bench_items("native/pool2000_rowwise", 2000.0, || {
+        feats
+            .workflow
+            .iter()
+            .map(|x| ens.predict(x) as f64)
+            .collect::<Vec<f64>>()
+    });
     b.bench_items("native/batch256", 256.0, || {
         native.score(&ens, &feats.workflow[..256])
     });

@@ -21,6 +21,11 @@ pub const LEAVES_MAX: usize = 1 << DEPTH_MAX;
 /// artifact: exp(NEG_PRED) == 0, neutral under max-of-times and sum.
 pub const NEG_PRED: f32 = -1.0e9;
 
+/// Row-block width of the batched native predictors: small enough for
+/// a block's feature rows plus leaf indices to stay L1-resident, large
+/// enough to amortize each tree's (feature, threshold) loads.
+pub const PREDICT_BLOCK: usize = 64;
+
 /// A trained oblivious-GBT ensemble (compact, depth = `depth`).
 #[derive(Clone, Debug, PartialEq)]
 pub struct Ensemble {
@@ -82,8 +87,43 @@ impl Ensemble {
     }
 
     /// Predict a batch of F_MAX-padded rows.
+    ///
+    /// Tree-major blocked evaluation: rows are processed in blocks of
+    /// [`PREDICT_BLOCK`], and within a block each tree's per-level
+    /// (feature, threshold) pair is loaded once and applied across the
+    /// whole block — the structure-of-arrays hot path used for
+    /// campaign-scale pool scoring.  Per row, the accumulation order
+    /// (bias, then trees ascending) is identical to [`Self::predict`],
+    /// so results match the row-at-a-time path bit for bit.
     pub fn predict_batch(&self, xs: &[[f32; F_MAX]]) -> Vec<f32> {
-        xs.iter().map(|x| self.predict(x)).collect()
+        let n_trees = self.n_trees();
+        let leaves_w = 1usize << self.depth;
+        let mut out = vec![self.bias; xs.len()];
+        let mut leaf_idx = [0usize; PREDICT_BLOCK];
+        for (rows, acc) in xs
+            .chunks(PREDICT_BLOCK)
+            .zip(out.chunks_mut(PREDICT_BLOCK))
+        {
+            for t in 0..n_trees {
+                let base = t * self.depth;
+                leaf_idx[..rows.len()].fill(0);
+                for d in 0..self.depth {
+                    let f = self.feat[base + d] as usize;
+                    let thr = self.thr[base + d];
+                    let bit = 1usize << d;
+                    for (li, row) in leaf_idx.iter_mut().zip(rows) {
+                        if row[f] > thr {
+                            *li |= bit;
+                        }
+                    }
+                }
+                let leaves = &self.leaves[t * leaves_w..(t + 1) * leaves_w];
+                for (a, &li) in acc.iter_mut().zip(leaf_idx.iter()) {
+                    *a += leaves[li];
+                }
+            }
+        }
+        out
     }
 
     /// Flatten to artifact shape `[TREES_MAX, DEPTH_MAX]` /
@@ -181,6 +221,48 @@ impl FlatEnsemble {
         }
         acc
     }
+
+    /// Batched evaluation of the flattened format, blocked like
+    /// [`Ensemble::predict_batch`].  Trailing padding trees — leaf
+    /// tables that are identically zero — contribute exactly 0 per row
+    /// and are skipped, so each result equals [`Self::predict`] on the
+    /// same row (`==`; only a `-0.0`/`+0.0` sign can differ).
+    pub fn predict_batch(&self, xs: &[[f32; F_MAX]]) -> Vec<f32> {
+        let n_active = (0..TREES_MAX)
+            .rev()
+            .find(|&t| {
+                self.leaves[t * LEAVES_MAX..(t + 1) * LEAVES_MAX]
+                    .iter()
+                    .any(|&v| v != 0.0)
+            })
+            .map_or(0, |t| t + 1);
+        let mut out = vec![0.0f32; xs.len()];
+        let mut leaf_idx = [0usize; PREDICT_BLOCK];
+        for (rows, acc) in xs
+            .chunks(PREDICT_BLOCK)
+            .zip(out.chunks_mut(PREDICT_BLOCK))
+        {
+            for t in 0..n_active {
+                let base = t * DEPTH_MAX;
+                leaf_idx[..rows.len()].fill(0);
+                for d in 0..DEPTH_MAX {
+                    let f = self.feat[base + d] as usize;
+                    let thr = self.thr[base + d];
+                    let bit = 1usize << d;
+                    for (li, row) in leaf_idx.iter_mut().zip(rows) {
+                        if row[f] > thr {
+                            *li |= bit;
+                        }
+                    }
+                }
+                let leaves = &self.leaves[t * LEAVES_MAX..(t + 1) * LEAVES_MAX];
+                for (a, &li) in acc.iter_mut().zip(leaf_idx.iter()) {
+                    *a += leaves[li];
+                }
+            }
+        }
+        out
+    }
 }
 
 #[cfg(test)]
@@ -248,6 +330,55 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn predict_batch_matches_rowwise_across_block_boundaries() {
+        let mut rng = Pcg32::new(77, 0);
+        let e = random_ensemble(&mut rng, 48, 4, 6);
+        let flat = e.flatten();
+        for n in [0usize, 1, PREDICT_BLOCK - 1, PREDICT_BLOCK, PREDICT_BLOCK + 1, 200] {
+            let xs: Vec<[f32; F_MAX]> = (0..n)
+                .map(|_| {
+                    let mut x = [0f32; F_MAX];
+                    for v in x.iter_mut() {
+                        *v = rng.f32();
+                    }
+                    x
+                })
+                .collect();
+            let batch = e.predict_batch(&xs);
+            let flat_batch = flat.predict_batch(&xs);
+            assert_eq!(batch.len(), n);
+            assert_eq!(flat_batch.len(), n);
+            for (i, x) in xs.iter().enumerate() {
+                assert!(
+                    batch[i] == e.predict(x),
+                    "n={n} row {i}: batch {} vs rowwise {}",
+                    batch[i],
+                    e.predict(x)
+                );
+                assert!(
+                    flat_batch[i] == flat.predict(x),
+                    "n={n} row {i}: flat batch {} vs rowwise {}",
+                    flat_batch[i],
+                    flat.predict(x)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn predict_batch_constant_and_zero_ensembles() {
+        let e = Ensemble::constant(3, 2.5);
+        let xs = vec![[0.1f32; F_MAX]; 130];
+        assert!(e.predict_batch(&xs).iter().all(|&v| v == 2.5));
+        // all-padding flat ensemble: every active-tree count is 0
+        let z = FlatEnsemble::zero();
+        assert!(z.predict_batch(&xs).iter().all(|&v| v == 0.0));
+        // constant flatten folds the bias into tree 0
+        let zf = e.flatten();
+        assert!(zf.predict_batch(&xs).iter().all(|&v| v == 2.5));
     }
 
     #[test]

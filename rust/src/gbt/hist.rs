@@ -1,0 +1,248 @@
+//! Feature quantization for histogram-binned GBT training.
+//!
+//! Each feature column is quantized **once** per training call into
+//! `u8` bin codes against its sorted candidate-threshold list.  The
+//! code of a sample is the number of thresholds strictly below its
+//! value, so for candidate cut `k` the right child is exactly
+//! `{i : code(i) > k}` — bit-for-bit the same partition the exact
+//! trainer derives from `x > thr`.  Split search then needs one
+//! O(n·F) histogram pass per tree level plus an O(leaves·F·bins)
+//! scan, instead of rescanning all n samples per candidate.
+
+use crate::config::F_MAX;
+
+/// Hard cap on candidate thresholds per feature: codes live in `u8`
+/// and range over `0..=n_thresholds`, so at most 255 thresholds
+/// (256 bins) are representable.
+pub const MAX_THRESHOLDS: usize = 255;
+
+/// Candidate split thresholds per feature: midpoints between adjacent
+/// quantiles of the observed values, sorted ascending and deduplicated.
+/// Shared by the histogram and exact engines so both search the same
+/// candidate set.
+pub fn candidate_thresholds(xs: &[[f32; F_MAX]], f: usize, n_bins: usize) -> Vec<f32> {
+    let mut vals: Vec<f32> = xs.iter().map(|x| x[f]).collect();
+    vals.sort_by(|a, b| a.partial_cmp(b).expect("NaN feature"));
+    vals.dedup();
+    if vals.len() < 2 {
+        return Vec::new();
+    }
+    let n_cand = n_bins.min(MAX_THRESHOLDS).min(vals.len() - 1);
+    let mut out = Vec::with_capacity(n_cand);
+    for i in 0..n_cand {
+        // evenly spaced quantile boundaries over unique values
+        let pos = (i + 1) * (vals.len() - 1) / (n_cand + 1);
+        let pos = pos.min(vals.len() - 2);
+        let mid = 0.5 * (vals[pos] + vals[pos + 1]);
+        out.push(mid);
+    }
+    out.dedup();
+    out
+}
+
+/// A dataset quantized once for histogram training.
+pub struct BinnedDataset {
+    pub n_rows: usize,
+    pub n_features: usize,
+    /// Sorted candidate thresholds per feature; cut `k` sends a sample
+    /// right iff `x > thresholds[f][k]`.
+    pub thresholds: Vec<Vec<f32>>,
+    /// Feature-major bin codes:
+    /// `codes[f*n_rows + i] = #{k : xs[i][f] > thresholds[f][k]}`.
+    codes: Vec<u8>,
+    /// Per-feature offset into a per-leaf histogram row; feature `f`
+    /// owns slots `offset[f] .. offset[f] + n_bins(f)`.
+    offsets: Vec<usize>,
+    /// Σ_f n_bins(f) — the stride of one leaf's histogram row.
+    pub total_bins: usize,
+}
+
+impl BinnedDataset {
+    /// Quantize the first `n_features` columns of `xs` against at most
+    /// `n_bins` candidate thresholds per feature.
+    pub fn build(xs: &[[f32; F_MAX]], n_features: usize, n_bins: usize) -> BinnedDataset {
+        let n = xs.len();
+        let thresholds: Vec<Vec<f32>> = (0..n_features)
+            .map(|f| candidate_thresholds(xs, f, n_bins))
+            .collect();
+        let mut codes = vec![0u8; n_features * n];
+        for (f, thr) in thresholds.iter().enumerate() {
+            if thr.is_empty() {
+                continue; // all codes stay 0
+            }
+            let col = &mut codes[f * n..(f + 1) * n];
+            for (c, x) in col.iter_mut().zip(xs) {
+                let v = x[f];
+                *c = thr.partition_point(|&t| v > t) as u8;
+            }
+        }
+        let mut offsets = Vec::with_capacity(n_features);
+        let mut total_bins = 0usize;
+        for thr in &thresholds {
+            offsets.push(total_bins);
+            total_bins += thr.len() + 1;
+        }
+        BinnedDataset {
+            n_rows: n,
+            n_features,
+            thresholds,
+            codes,
+            offsets,
+            total_bins,
+        }
+    }
+
+    /// Bin codes of feature `f`, one per row.
+    #[inline]
+    pub fn feature_codes(&self, f: usize) -> &[u8] {
+        &self.codes[f * self.n_rows..(f + 1) * self.n_rows]
+    }
+
+    /// Number of histogram bins of feature `f` (thresholds + 1).
+    #[inline]
+    pub fn n_bins(&self, f: usize) -> usize {
+        self.thresholds[f].len() + 1
+    }
+
+    /// Offset of feature `f`'s bins inside one leaf's histogram row.
+    #[inline]
+    pub fn offset(&self, f: usize) -> usize {
+        self.offsets[f]
+    }
+}
+
+/// Per-level gradient/count histograms: for every (leaf, feature, bin)
+/// the summed gradient and sample count.  Counts double as hessians —
+/// the squared-error objective has `h_i = 1` — so child hessian sums
+/// are exact integers, identical to the exact engine's.
+pub struct LevelHistogram {
+    /// `[n_leaves * total_bins]` summed gradients.
+    pub grad: Vec<f64>,
+    /// `[n_leaves * total_bins]` sample counts.
+    pub count: Vec<u32>,
+}
+
+impl LevelHistogram {
+    pub fn new(n_leaves: usize, total_bins: usize) -> LevelHistogram {
+        LevelHistogram {
+            grad: vec![0.0; n_leaves * total_bins],
+            count: vec![0; n_leaves * total_bins],
+        }
+    }
+
+    /// Accumulate all features in one pass over the samples per
+    /// feature: O(n · F) total, independent of the number of
+    /// candidate thresholds.
+    pub fn fill(&mut self, binned: &BinnedDataset, leaf_of: &[usize], grad: &[f64]) {
+        debug_assert_eq!(leaf_of.len(), binned.n_rows);
+        let stride = binned.total_bins;
+        for f in 0..binned.n_features {
+            let codes = binned.feature_codes(f);
+            let off = binned.offset(f);
+            for i in 0..binned.n_rows {
+                let slot = leaf_of[i] * stride + off + codes[i] as usize;
+                self.grad[slot] += grad[i];
+                self.count[slot] += 1;
+            }
+        }
+    }
+
+    /// Gradient sum of (leaf `l`, feature-offset `off`, bin `b`).
+    #[inline]
+    pub fn grad_at(&self, stride: usize, l: usize, off: usize, b: usize) -> f64 {
+        self.grad[l * stride + off + b]
+    }
+
+    /// Sample count of (leaf `l`, feature-offset `off`, bin `b`).
+    #[inline]
+    pub fn count_at(&self, stride: usize, l: usize, off: usize, b: usize) -> u32 {
+        self.count[l * stride + off + b]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn rows(rng: &mut Pcg32, n: usize) -> Vec<[f32; F_MAX]> {
+        (0..n)
+            .map(|_| {
+                let mut x = [0f32; F_MAX];
+                for v in x.iter_mut() {
+                    *v = rng.f32();
+                }
+                x
+            })
+            .collect()
+    }
+
+    #[test]
+    fn codes_match_threshold_semantics() {
+        let mut rng = Pcg32::new(11, 0);
+        let xs = rows(&mut rng, 300);
+        let b = BinnedDataset::build(&xs, 5, 32);
+        for f in 0..5 {
+            let thr = &b.thresholds[f];
+            let codes = b.feature_codes(f);
+            for (i, x) in xs.iter().enumerate() {
+                let want = thr.iter().filter(|&&t| x[f] > t).count();
+                assert_eq!(codes[i] as usize, want, "f={f} i={i}");
+                // right-child membership of every cut agrees with x > t
+                for (k, &t) in thr.iter().enumerate() {
+                    assert_eq!(codes[i] as usize > k, x[f] > t);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn thresholds_sorted_and_bounded() {
+        let mut rng = Pcg32::new(12, 0);
+        let xs = rows(&mut rng, 500);
+        let b = BinnedDataset::build(&xs, 4, 1000);
+        for f in 0..4 {
+            let thr = &b.thresholds[f];
+            assert!(thr.len() <= MAX_THRESHOLDS);
+            assert!(thr.windows(2).all(|w| w[0] < w[1]), "unsorted thresholds");
+            assert_eq!(b.n_bins(f), thr.len() + 1);
+        }
+        assert_eq!(b.total_bins, (0..4).map(|f| b.n_bins(f)).sum::<usize>());
+    }
+
+    #[test]
+    fn constant_feature_has_no_thresholds() {
+        let xs = vec![[0.25f32; F_MAX]; 50];
+        let b = BinnedDataset::build(&xs, 3, 16);
+        for f in 0..3 {
+            assert!(b.thresholds[f].is_empty());
+            assert!(b.feature_codes(f).iter().all(|&c| c == 0));
+        }
+    }
+
+    #[test]
+    fn histogram_totals_match_leaf_totals() {
+        let mut rng = Pcg32::new(13, 0);
+        let xs = rows(&mut rng, 200);
+        let b = BinnedDataset::build(&xs, 3, 8);
+        let grad: Vec<f64> = (0..200).map(|_| rng.normal()).collect();
+        let leaf_of: Vec<usize> = (0..200).map(|_| rng.gen_range(4) as usize).collect();
+        let mut h = LevelHistogram::new(4, b.total_bins);
+        h.fill(&b, &leaf_of, &grad);
+        for l in 0..4 {
+            let want_cnt = leaf_of.iter().filter(|&&x| x == l).count() as u32;
+            let want_g: f64 = (0..200).filter(|&i| leaf_of[i] == l).map(|i| grad[i]).sum();
+            for f in 0..3 {
+                let off = b.offset(f);
+                let cnt: u32 = (0..b.n_bins(f))
+                    .map(|bi| h.count_at(b.total_bins, l, off, bi))
+                    .sum();
+                let g: f64 = (0..b.n_bins(f))
+                    .map(|bi| h.grad_at(b.total_bins, l, off, bi))
+                    .sum();
+                assert_eq!(cnt, want_cnt, "leaf {l} feature {f}");
+                assert!((g - want_g).abs() < 1e-9, "leaf {l} feature {f}");
+            }
+        }
+    }
+}

@@ -5,13 +5,44 @@
 //! Oblivious trees apply one shared (feature, threshold) split per
 //! level, so a trained ensemble flattens into three dense tensors
 //! (`features[T,D]`, `thresholds[T,D]`, `leaves[T,2^D]`) that the AOT
-//! Pallas kernel evaluates without re-compilation.  [`train`] fits an
-//! ensemble with second-order histogram split search; [`Ensemble`]
-//! carries the flattened format plus an exact native predictor used for
-//! cross-checking the PJRT path and for multi-threaded campaigns.
+//! Pallas kernel evaluates without re-compilation.
+//!
+//! ## Binned training layout
+//!
+//! [`train`] fits an ensemble with second-order **histogram-binned**
+//! split search: [`hist::BinnedDataset`] quantizes every feature column
+//! once into `u8` bin codes against its sorted candidate thresholds
+//! (a sample's code = number of thresholds strictly below its value,
+//! so candidate cut `k`'s right child is exactly `{code > k}` — the
+//! same partition the `x > thr` rule induces).  Each tree level then
+//! accumulates per-(leaf, feature, bin) gradient sums and sample
+//! counts in a single O(n·F) pass ([`hist::LevelHistogram`]) and
+//! scores *all* candidate cuts from bin suffix sums in
+//! O(leaves·F·bins), replacing the pre-histogram engine's full-data
+//! rescan per candidate (O(F·bins·n) per level).  Counts double as
+//! hessian sums (squared error ⇒ `h_i = 1`), so child-weight
+//! constraints and leaf solves are exact integers, identical across
+//! engines.  The brute-force engine survives as [`train_exact`], the
+//! differential-testing oracle and benchmark baseline.
+//!
+//! ## Batched scoring layout
+//!
+//! [`Ensemble`] carries the compact trained model plus the exact
+//! native predictor used for cross-checking the PJRT path and for
+//! multi-threaded campaigns.  `Ensemble::predict_batch` and
+//! `FlatEnsemble::predict_batch` are the cache-friendly hot path:
+//! rows are processed in blocks of [`ensemble::PREDICT_BLOCK`]
+//! (structure-of-arrays leaf-index registers, tree-major sweep) so
+//! each tree's level tensors are loaded once per block instead of
+//! once per row, while per-row results stay equal to the
+//! row-at-a-time predictors.
 
 pub mod ensemble;
+pub mod hist;
 pub mod train;
 
-pub use ensemble::{Ensemble, FlatEnsemble, DEPTH_MAX, LEAVES_MAX, NEG_PRED, TREES_MAX};
-pub use train::{train, train_log, GbtParams};
+pub use ensemble::{
+    Ensemble, FlatEnsemble, DEPTH_MAX, LEAVES_MAX, NEG_PRED, PREDICT_BLOCK, TREES_MAX,
+};
+pub use hist::BinnedDataset;
+pub use train::{train, train_exact, train_log, train_log_exact, GbtParams};

@@ -1,5 +1,5 @@
 //! Oblivious-GBT training: second-order gradient boosting with
-//! histogram split search, level-shared splits, shrinkage and L2
+//! histogram-binned split search, level-shared splits, shrinkage and L2
 //! regularization — the from-scratch xgboost substitute.
 //!
 //! Squared-error objective: gradients `g_i = pred_i - y_i`, hessians
@@ -7,8 +7,22 @@
 //! maximizing the summed split gain across all current leaves is chosen
 //! (the CatBoost-style *oblivious* constraint), which is what makes the
 //! trained model a fixed-shape tensor program.
+//!
+//! Two engines share the same candidate-threshold set and tie-breaks:
+//!
+//! * [`train`] — the production histogram engine.  Features are
+//!   quantized once into `u8` bin codes ([`super::hist`]); each level
+//!   builds per-(leaf, feature) gradient/count histograms in one
+//!   O(n·F) pass and evaluates *every* candidate threshold by scanning
+//!   bin suffix sums in O(leaves·F·bins), so the per-level cost is
+//!   O(n·F + leaves·F·bins) instead of the exact engine's O(F·bins·n).
+//! * [`train_exact`] — the original brute-force engine that rescans all
+//!   samples per candidate.  Kept as the differential-testing oracle
+//!   (`tests/tuning_properties.rs` pins the histogram engine's holdout
+//!   quality against it); both are bit-deterministic for fixed inputs.
 
 use super::ensemble::Ensemble;
+use super::hist::{candidate_thresholds, BinnedDataset, LevelHistogram};
 use crate::config::F_MAX;
 
 /// Training hyper-parameters.
@@ -19,7 +33,8 @@ pub struct GbtParams {
     pub learning_rate: f64,
     /// L2 leaf regularization (xgboost lambda).
     pub lambda: f64,
-    /// Candidate thresholds per feature (quantile bins).
+    /// Candidate thresholds per feature (quantile bins, capped at
+    /// [`super::hist::MAX_THRESHOLDS`]).
     pub n_bins: usize,
     /// Minimum summed hessian per child for a split to count.
     pub min_child_weight: f64,
@@ -53,28 +68,6 @@ impl GbtParams {
     }
 }
 
-/// Candidate split thresholds per feature: midpoints between adjacent
-/// quantiles of the observed values.
-fn candidate_thresholds(xs: &[[f32; F_MAX]], f: usize, n_bins: usize) -> Vec<f32> {
-    let mut vals: Vec<f32> = xs.iter().map(|x| x[f]).collect();
-    vals.sort_by(|a, b| a.partial_cmp(b).expect("NaN feature"));
-    vals.dedup();
-    if vals.len() < 2 {
-        return Vec::new();
-    }
-    let n_cand = n_bins.min(vals.len() - 1);
-    let mut out = Vec::with_capacity(n_cand);
-    for i in 0..n_cand {
-        // evenly spaced quantile boundaries over unique values
-        let pos = (i + 1) * (vals.len() - 1) / (n_cand + 1);
-        let pos = pos.min(vals.len() - 2);
-        let mid = 0.5 * (vals[pos] + vals[pos + 1]);
-        out.push(mid);
-    }
-    out.dedup();
-    out
-}
-
 /// Train an oblivious-GBT regressor in LOG space: the model predicts
 /// ln(y), so exp(prediction) is the time estimate.  Times span orders
 /// of magnitude across a configuration space; fitting in log space
@@ -82,31 +75,226 @@ fn candidate_thresholds(xs: &[[f32; F_MAX]], f: usize, n_bins: usize) -> Vec<f32
 /// and sharpens ranking among the top ones (which is what the paper's
 /// searcher needs).  All y must be positive.
 pub fn train_log(xs: &[[f32; F_MAX]], y: &[f64], n_features: usize, p: &GbtParams) -> Ensemble {
-    assert!(
-        y.iter().all(|&v| v > 0.0),
-        "train_log requires positive targets"
-    );
-    let ln_y: Vec<f64> = y.iter().map(|&v| v.ln()).collect();
-    train(xs, &ln_y, n_features, p)
+    train(xs, &ln_targets(y), n_features, p)
 }
 
-/// Train an oblivious-GBT regressor on `(xs, y)`.
+/// Log-space variant of [`train_exact`] (benchmark baseline).
+pub fn train_log_exact(
+    xs: &[[f32; F_MAX]],
+    y: &[f64],
+    n_features: usize,
+    p: &GbtParams,
+) -> Ensemble {
+    train_exact(xs, &ln_targets(y), n_features, p)
+}
+
+fn ln_targets(y: &[f64]) -> Vec<f64> {
+    assert!(
+        y.iter().all(|&v| v > 0.0),
+        "log-space training requires positive targets"
+    );
+    y.iter().map(|&v| v.ln()).collect()
+}
+
+/// Shared entry validation + degenerate-input handling; returns the
+/// bias and sample count when training should proceed.
+fn prepare(xs: &[[f32; F_MAX]], y: &[f64], n_features: usize, p: &GbtParams) -> Result<f64, Ensemble> {
+    assert_eq!(xs.len(), y.len(), "xs/y length mismatch");
+    assert!(n_features >= 1 && n_features <= F_MAX);
+    let n = xs.len();
+    if n == 0 {
+        return Err(Ensemble::constant(n_features, 0.0));
+    }
+    let bias = y.iter().sum::<f64>() / n as f64;
+    if n == 1 || p.n_trees == 0 {
+        return Err(Ensemble::constant(n_features, bias as f32));
+    }
+    Ok(bias)
+}
+
+/// Train an oblivious-GBT regressor on `(xs, y)` with histogram-binned
+/// split search (the production engine — see module docs).
 ///
 /// `n_features` restricts split search to the first `n_features`
 /// columns (the rest are padding).  Targets are typically execution or
 /// computer times; callers may log-transform if desired.
 pub fn train(xs: &[[f32; F_MAX]], y: &[f64], n_features: usize, p: &GbtParams) -> Ensemble {
-    assert_eq!(xs.len(), y.len(), "xs/y length mismatch");
-    assert!(n_features >= 1 && n_features <= F_MAX);
+    let bias = match prepare(xs, y, n_features, p) {
+        Ok(b) => b,
+        Err(degenerate) => return degenerate,
+    };
     let n = xs.len();
-    if n == 0 {
-        return Ensemble::constant(n_features, 0.0);
-    }
-    let bias = y.iter().sum::<f64>() / n as f64;
-    if n == 1 || p.n_trees == 0 {
-        return Ensemble::constant(n_features, bias as f32);
+    let leaves_w = 1usize << p.depth;
+    let mut pred = vec![bias; n];
+    let mut feat_out: Vec<u32> = Vec::with_capacity(p.n_trees * p.depth);
+    let mut thr_out: Vec<f32> = Vec::with_capacity(p.n_trees * p.depth);
+    let mut leaves_out: Vec<f32> = Vec::with_capacity(p.n_trees * leaves_w);
+
+    // Quantize every feature once; all trees share the bin codes.
+    let binned = BinnedDataset::build(xs, n_features, p.n_bins);
+    // >= n_features: even a constant feature owns one bin.
+    let stride = binned.total_bins;
+    // Scratch reused across levels/trees (peak size: deepest level).
+    let mut hist = LevelHistogram::new(leaves_w, stride);
+    let mut right_g = vec![0.0f64; leaves_w];
+    let mut right_c = vec![0u32; leaves_w];
+    let mut gains: Vec<f64> = Vec::new();
+
+    for _tree in 0..p.n_trees {
+        let grad: Vec<f64> = (0..n).map(|i| pred[i] - y[i]).collect();
+        // leaf assignment as we grow levels
+        let mut idx = vec![0usize; n];
+        let mut tree_feat = vec![0u32; p.depth];
+        let mut tree_thr = vec![f32::INFINITY; p.depth];
+
+        for d in 0..p.depth {
+            let n_leaves = 1usize << d;
+            // per-leaf totals (counts are exact hessian sums)
+            let mut leaf_g = vec![0.0f64; n_leaves];
+            let mut leaf_c = vec![0u32; n_leaves];
+            for i in 0..n {
+                leaf_g[idx[i]] += grad[i];
+                leaf_c[idx[i]] += 1;
+            }
+            let parent_score: f64 = (0..n_leaves)
+                .map(|l| leaf_g[l] * leaf_g[l] / (leaf_c[l] as f64 + p.lambda))
+                .sum();
+
+            // One O(n·F) pass accumulates every candidate's statistics.
+            hist.grad[..n_leaves * stride].iter_mut().for_each(|g| *g = 0.0);
+            hist.count[..n_leaves * stride].iter_mut().for_each(|c| *c = 0);
+            hist.fill(&binned, &idx, &grad);
+
+            let mut best: Option<(f64, usize, usize)> = None; // (gain, f, cut)
+            for f in 0..n_features {
+                let n_thr = binned.thresholds[f].len();
+                if n_thr == 0 {
+                    continue;
+                }
+                let off = binned.offset(f);
+                // Suffix sums over bins: cut k's right child is bins
+                // k+1..=n_thr.  Walk k downward accumulating, record
+                // each cut's gain, then replay upward so the arg-max
+                // tie-break matches the exact engine's ascending scan.
+                right_g[..n_leaves].iter_mut().for_each(|g| *g = 0.0);
+                right_c[..n_leaves].iter_mut().for_each(|c| *c = 0);
+                gains.clear();
+                gains.resize(n_thr, f64::NAN);
+                for k in (0..n_thr).rev() {
+                    let mut score = 0.0f64;
+                    let mut valid = false;
+                    for l in 0..n_leaves {
+                        right_g[l] += hist.grad_at(stride, l, off, k + 1);
+                        right_c[l] += hist.count_at(stride, l, off, k + 1);
+                        let hr = right_c[l] as f64;
+                        let hl = (leaf_c[l] - right_c[l]) as f64;
+                        let gr = right_g[l];
+                        let gl = leaf_g[l] - gr;
+                        if hl >= p.min_child_weight && hr >= p.min_child_weight {
+                            valid = true;
+                            score += gl * gl / (hl + p.lambda) + gr * gr / (hr + p.lambda);
+                        } else {
+                            // unsplit leaf keeps parent contribution
+                            let g = leaf_g[l];
+                            let h = leaf_c[l] as f64;
+                            score += g * g / (h + p.lambda);
+                        }
+                    }
+                    gains[k] = if valid { score - parent_score } else { f64::NAN };
+                }
+                for (k, &gain) in gains.iter().enumerate() {
+                    if gain.is_nan() {
+                        continue;
+                    }
+                    if gain > 1e-12 && best.map(|(bg, _, _)| gain > bg).unwrap_or(true) {
+                        best = Some((gain, f, k));
+                    }
+                }
+            }
+            match best {
+                Some((_, f, k)) => {
+                    tree_feat[d] = f as u32;
+                    tree_thr[d] = binned.thresholds[f][k];
+                    let codes = binned.feature_codes(f);
+                    let cut = k as u8;
+                    for i in 0..n {
+                        if codes[i] > cut {
+                            idx[i] |= 1 << d;
+                        }
+                    }
+                }
+                None => {
+                    // no useful split at this level: +inf threshold is a
+                    // structural no-op (everything keeps bit 0)
+                    tree_feat[d] = 0;
+                    tree_thr[d] = f32::INFINITY;
+                }
+            }
+        }
+
+        finish_tree(
+            p, n, &grad, &idx, leaves_w, &mut pred, &tree_feat, &tree_thr, &mut feat_out,
+            &mut thr_out, &mut leaves_out,
+        );
     }
 
+    Ensemble {
+        n_features,
+        depth: p.depth,
+        feat: feat_out,
+        thr: thr_out,
+        leaves: leaves_out,
+        bias: bias as f32,
+    }
+}
+
+/// Leaf-weight solve + prediction update + tree emission, shared by
+/// both engines so their outputs agree given identical splits.
+#[allow(clippy::too_many_arguments)]
+fn finish_tree(
+    p: &GbtParams,
+    n: usize,
+    grad: &[f64],
+    idx: &[usize],
+    leaves_w: usize,
+    pred: &mut [f64],
+    tree_feat: &[u32],
+    tree_thr: &[f32],
+    feat_out: &mut Vec<u32>,
+    thr_out: &mut Vec<f32>,
+    leaves_out: &mut Vec<f32>,
+) {
+    // leaf weights: w = -lr * G/(H + lambda)
+    let mut leaf_g = vec![0.0f64; leaves_w];
+    let mut leaf_h = vec![0.0f64; leaves_w];
+    for i in 0..n {
+        leaf_g[idx[i]] += grad[i];
+        leaf_h[idx[i]] += 1.0;
+    }
+    let mut leaves = vec![0.0f32; leaves_w];
+    for l in 0..leaves_w {
+        if leaf_h[l] > 0.0 {
+            leaves[l] = (-p.learning_rate * leaf_g[l] / (leaf_h[l] + p.lambda)) as f32;
+        }
+    }
+    for i in 0..n {
+        pred[i] += leaves[idx[i]] as f64;
+    }
+    feat_out.extend_from_slice(tree_feat);
+    thr_out.extend_from_slice(tree_thr);
+    leaves_out.extend_from_slice(&leaves);
+}
+
+/// The pre-histogram brute-force engine: every candidate threshold
+/// rescans all samples (O(F·bins·n) per level).  Same candidate set,
+/// gain formula and tie-breaks as [`train`]; kept as the differential
+/// oracle and benchmark baseline.
+pub fn train_exact(xs: &[[f32; F_MAX]], y: &[f64], n_features: usize, p: &GbtParams) -> Ensemble {
+    let bias = match prepare(xs, y, n_features, p) {
+        Ok(b) => b,
+        Err(degenerate) => return degenerate,
+    };
+    let n = xs.len();
     let leaves_w = 1usize << p.depth;
     let mut pred = vec![bias; n];
     let mut feat_out: Vec<u32> = Vec::with_capacity(p.n_trees * p.depth);
@@ -120,14 +308,12 @@ pub fn train(xs: &[[f32; F_MAX]], y: &[f64], n_features: usize, p: &GbtParams) -
 
     for _tree in 0..p.n_trees {
         let grad: Vec<f64> = (0..n).map(|i| pred[i] - y[i]).collect();
-        // leaf assignment as we grow levels
         let mut idx = vec![0usize; n];
         let mut tree_feat = vec![0u32; p.depth];
         let mut tree_thr = vec![f32::INFINITY; p.depth];
 
         for d in 0..p.depth {
             let n_leaves = 1usize << d;
-            // accumulate per-leaf G, H
             let mut leaf_g = vec![0.0f64; n_leaves];
             let mut leaf_h = vec![0.0f64; n_leaves];
             for i in 0..n {
@@ -184,33 +370,16 @@ pub fn train(xs: &[[f32; F_MAX]], y: &[f64], n_features: usize, p: &GbtParams) -
                     }
                 }
                 None => {
-                    // no useful split at this level: +inf threshold is a
-                    // structural no-op (everything keeps bit 0)
                     tree_feat[d] = 0;
                     tree_thr[d] = f32::INFINITY;
                 }
             }
         }
 
-        // leaf weights: w = -lr * G/(H + lambda)
-        let mut leaf_g = vec![0.0f64; leaves_w];
-        let mut leaf_h = vec![0.0f64; leaves_w];
-        for i in 0..n {
-            leaf_g[idx[i]] += grad[i];
-            leaf_h[idx[i]] += 1.0;
-        }
-        let mut leaves = vec![0.0f32; leaves_w];
-        for l in 0..leaves_w {
-            if leaf_h[l] > 0.0 {
-                leaves[l] = (-p.learning_rate * leaf_g[l] / (leaf_h[l] + p.lambda)) as f32;
-            }
-        }
-        for i in 0..n {
-            pred[i] += leaves[idx[i]] as f64;
-        }
-        feat_out.extend_from_slice(&tree_feat);
-        thr_out.extend_from_slice(&tree_thr);
-        leaves_out.extend_from_slice(&leaves);
+        finish_tree(
+            p, n, &grad, &idx, leaves_w, &mut pred, &tree_feat, &tree_thr, &mut feat_out,
+            &mut thr_out, &mut leaves_out,
+        );
     }
 
     Ensemble {
@@ -337,12 +506,14 @@ mod tests {
 
     #[test]
     fn degenerate_inputs() {
-        // empty
-        let e = train(&[], &[], 2, &GbtParams::default());
-        assert_eq!(e.predict(&[0.0; F_MAX]), 0.0);
-        // single sample
-        let e1 = train(&[[0.1; F_MAX]], &[5.0], 2, &GbtParams::default());
-        assert!((e1.predict(&[0.9; F_MAX]) - 5.0).abs() < 1e-6);
+        for engine in [train as fn(&[[f32; F_MAX]], &[f64], usize, &GbtParams) -> Ensemble, train_exact] {
+            // empty
+            let e = engine(&[], &[], 2, &GbtParams::default());
+            assert_eq!(e.predict(&[0.0; F_MAX]), 0.0);
+            // single sample
+            let e1 = engine(&[[0.1; F_MAX]], &[5.0], 2, &GbtParams::default());
+            assert!((e1.predict(&[0.9; F_MAX]) - 5.0).abs() < 1e-6);
+        }
     }
 
     #[test]
@@ -352,5 +523,41 @@ mod tests {
         let a = train(&xs, &y, 2, &GbtParams::default());
         let b = train(&xs, &y, 2, &GbtParams::default());
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn exact_engine_deterministic() {
+        let mut rng = Pcg32::new(6, 1);
+        let (xs, y) = make_data(&mut rng, 60, |x| x[0] as f64);
+        let a = train_exact(&xs, &y, 2, &GbtParams::default());
+        let b = train_exact(&xs, &y, 2, &GbtParams::default());
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn histogram_engine_tracks_exact_engine() {
+        // Same candidate sets and tie-breaks: in-sample fits of the two
+        // engines must be statistically indistinguishable (they may
+        // pick different near-tied splits only through last-bit f64
+        // rounding differences in the gradient sums).
+        let mut rng = Pcg32::new(7, 0);
+        let f = |x: &[f32; F_MAX]| {
+            20.0 * (x[0] as f64) + 8.0 * (x[1] as f64) * (x[2] as f64)
+                - 5.0 * ((x[3] as f64) - 0.4).powi(2)
+        };
+        for n in [30usize, 120, 400] {
+            let (xs, y) = make_data(&mut rng, n, f);
+            let (tx, ty) = make_data(&mut rng, 150, f);
+            for params in [GbtParams::default(), GbtParams::small_data()] {
+                let h = train(&xs, &y, 5, &params);
+                let e = train_exact(&xs, &y, 5, &params);
+                let (rh, re) = (rmse(&h, &tx, &ty), rmse(&e, &tx, &ty));
+                let spread = stats::std_dev(&ty);
+                assert!(
+                    (rh - re).abs() <= 0.05 * spread + 1e-9,
+                    "n={n}: hist rmse {rh} vs exact rmse {re} (spread {spread})"
+                );
+            }
+        }
     }
 }

@@ -6,14 +6,46 @@
 //! Interchange is HLO **text**: the bundled xla_extension 0.5.1 rejects
 //! jax ≥ 0.5 serialized protos (64-bit instruction ids), while the text
 //! parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! The xla-backed implementation lives in [`pjrt`] behind the `pjrt`
+//! cargo feature (it needs the offline-vendored `xla` crate — see
+//! Cargo.toml).  Without the feature a same-shaped stub [`Runtime`] is
+//! compiled whose `load*` constructors return a descriptive error, so
+//! every caller (`Scorer::pjrt_or_native`, benches, integration tests)
+//! falls back to the exact native scorer instead of failing to build.
 
-use std::path::{Path, PathBuf};
-
-use anyhow::{bail, Context, Result};
+use std::fmt;
+use std::path::PathBuf;
 
 use crate::config::F_MAX;
-use crate::gbt::{FlatEnsemble, DEPTH_MAX, LEAVES_MAX, TREES_MAX};
+use crate::gbt::{DEPTH_MAX, LEAVES_MAX, TREES_MAX};
 use crate::util::json;
+
+/// Runtime-layer error: a single pre-rendered context chain (printed
+/// the same under `{e}` and anyhow-style `{e:#}` call sites).
+#[derive(Debug)]
+pub struct Error(String);
+
+impl Error {
+    pub fn msg(m: impl Into<String>) -> Error {
+        Error(m.into())
+    }
+
+    /// Prefix a context layer, `anyhow::Context`-style.
+    pub fn context(self, ctx: impl fmt::Display) -> Error {
+        Error(format!("{ctx}: {}", self.0))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
 
 /// Artifact-shape manifest (artifacts/meta.json), asserted at load.
 #[derive(Clone, Debug, PartialEq)]
@@ -29,11 +61,11 @@ pub struct Meta {
 
 impl Meta {
     pub fn parse(text: &str) -> Result<Meta> {
-        let v = json::parse(text).map_err(|e| anyhow::anyhow!("meta.json: {e}"))?;
+        let v = json::parse(text).map_err(|e| Error::msg(format!("meta.json: {e}")))?;
         let get = |k: &str| -> Result<usize> {
             v.get(k)
                 .and_then(|x| x.as_usize())
-                .with_context(|| format!("meta.json missing '{k}'"))
+                .ok_or_else(|| Error::msg(format!("meta.json missing '{k}'")))
         };
         Ok(Meta {
             pool_n: get("pool_n")?,
@@ -53,12 +85,12 @@ impl Meta {
             || self.depth != DEPTH_MAX
             || self.leaves != LEAVES_MAX
         {
-            bail!(
+            return Err(Error::msg(format!(
                 "artifact manifest {:?} does not match crate constants \
                  (F_MAX={F_MAX}, TREES_MAX={TREES_MAX}, DEPTH_MAX={DEPTH_MAX}, \
                  LEAVES_MAX={LEAVES_MAX}) — re-run `make artifacts`",
                 self
-            );
+            )));
         }
         Ok(())
     }
@@ -77,173 +109,15 @@ pub fn artifacts_dir() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
 }
 
-/// A loaded, compiled PJRT runtime. One per thread (the underlying
-/// client is not shared across threads); construction compiles the
-/// three artifacts once and scoring then runs with no Python anywhere.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    exec_pool: xla::PjRtLoadedExecutable,
-    exec_small: xla::PjRtLoadedExecutable,
-    exec_lowfi: xla::PjRtLoadedExecutable,
-    pub meta: Meta,
-}
+#[cfg(feature = "pjrt")]
+mod pjrt;
+#[cfg(feature = "pjrt")]
+pub use pjrt::Runtime;
 
-impl Runtime {
-    /// Load from the default artifacts directory.
-    pub fn load_default() -> Result<Runtime> {
-        Runtime::load(&artifacts_dir())
-    }
-
-    /// Load and compile all artifacts under `dir`.
-    pub fn load(dir: &Path) -> Result<Runtime> {
-        let meta_text = std::fs::read_to_string(dir.join("meta.json"))
-            .with_context(|| format!("reading {}/meta.json (run `make artifacts`)", dir.display()))?;
-        let meta = Meta::parse(&meta_text)?;
-        meta.validate()?;
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        let compile = |name: &str| -> Result<xla::PjRtLoadedExecutable> {
-            let path = dir.join(name);
-            let proto = xla::HloModuleProto::from_text_file(&path)
-                .with_context(|| format!("parsing {}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            client
-                .compile(&comp)
-                .with_context(|| format!("compiling {}", path.display()))
-        };
-        Ok(Runtime {
-            exec_pool: compile("ensemble_predict.hlo.txt")?,
-            exec_small: compile("ensemble_predict_small.hlo.txt")?,
-            exec_lowfi: compile("lowfi_score.hlo.txt")?,
-            meta,
-            client,
-        })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Score `xs` with one flattened ensemble via the AOT kernel.
-    /// Batches larger than the pool artifact are processed in slabs.
-    pub fn score(&self, ens: &FlatEnsemble, xs: &[[f32; F_MAX]]) -> Result<Vec<f32>> {
-        let mut out = Vec::with_capacity(xs.len());
-        let mut off = 0;
-        while off < xs.len() {
-            let remaining = xs.len() - off;
-            let (exe, cap) = if remaining <= self.meta.small_n {
-                (&self.exec_small, self.meta.small_n)
-            } else {
-                (&self.exec_pool, self.meta.pool_n)
-            };
-            let take = remaining.min(cap);
-            let scores = self.score_slab(exe, cap, ens, &xs[off..off + take])?;
-            out.extend_from_slice(&scores[..take]);
-            off += take;
-        }
-        Ok(out)
-    }
-
-    fn score_slab(
-        &self,
-        exe: &xla::PjRtLoadedExecutable,
-        cap: usize,
-        ens: &FlatEnsemble,
-        xs: &[[f32; F_MAX]],
-    ) -> Result<Vec<f32>> {
-        let x_lit = pack_features(xs, cap)?;
-        let feat = xla::Literal::vec1(ens.feat.as_slice())
-            .reshape(&[TREES_MAX as i64, DEPTH_MAX as i64])?;
-        let thr = xla::Literal::vec1(ens.thr.as_slice())
-            .reshape(&[TREES_MAX as i64, DEPTH_MAX as i64])?;
-        let leaves = xla::Literal::vec1(ens.leaves.as_slice())
-            .reshape(&[TREES_MAX as i64, LEAVES_MAX as i64])?;
-        let result = exe.execute::<xla::Literal>(&[x_lit, feat, thr, leaves])?[0][0]
-            .to_literal_sync()?;
-        Ok(result.to_tuple1()?.to_vec::<f32>()?)
-    }
-
-    /// Low-fidelity combined score (Eqns 1-2) in one fused execution:
-    /// per-component ensembles + per-component feature views + mode
-    /// (1.0 = max / execution time, 0.0 = sum / computer time).
-    pub fn lowfi_score(
-        &self,
-        comps: &[(FlatEnsemble, Vec<[f32; F_MAX]>)],
-        mode: f32,
-    ) -> Result<Vec<f32>> {
-        let j_max = self.meta.j_max;
-        if comps.is_empty() || comps.len() > j_max {
-            bail!("lowfi_score needs 1..={j_max} components, got {}", comps.len());
-        }
-        let n = comps[0].1.len();
-        if comps.iter().any(|(_, xs)| xs.len() != n) {
-            bail!("lowfi_score: inconsistent pool sizes across components");
-        }
-        let cap = self.meta.pool_n;
-        if n > cap {
-            bail!("lowfi_score: pool of {n} exceeds artifact capacity {cap}");
-        }
-        // xs [J, N, F]; padding slots carry the neutral-component
-        // ensemble (log-space NEG_PRED -> exp == 0)
-        let neutral = FlatEnsemble::neutral_component();
-        let mut xflat = vec![0f32; j_max * cap * F_MAX];
-        let mut feat = vec![0i32; j_max * TREES_MAX * DEPTH_MAX];
-        let mut thr = vec![f32::INFINITY; j_max * TREES_MAX * DEPTH_MAX];
-        let mut leaves = vec![0f32; j_max * TREES_MAX * LEAVES_MAX];
-        for j in comps.len()..j_max {
-            let lb = j * TREES_MAX * LEAVES_MAX;
-            leaves[lb..lb + TREES_MAX * LEAVES_MAX].copy_from_slice(&neutral.leaves);
-        }
-        for (j, (ens, xs)) in comps.iter().enumerate() {
-            for (i, row) in xs.iter().enumerate() {
-                let base = (j * cap + i) * F_MAX;
-                xflat[base..base + F_MAX].copy_from_slice(row);
-            }
-            let fb = j * TREES_MAX * DEPTH_MAX;
-            feat[fb..fb + TREES_MAX * DEPTH_MAX].copy_from_slice(&ens.feat);
-            thr[fb..fb + TREES_MAX * DEPTH_MAX].copy_from_slice(&ens.thr);
-            let lb = j * TREES_MAX * LEAVES_MAX;
-            leaves[lb..lb + TREES_MAX * LEAVES_MAX].copy_from_slice(&ens.leaves);
-        }
-        let xs_lit = xla::Literal::vec1(xflat.as_slice()).reshape(&[
-            j_max as i64,
-            cap as i64,
-            F_MAX as i64,
-        ])?;
-        let feat_lit = xla::Literal::vec1(feat.as_slice()).reshape(&[
-            j_max as i64,
-            TREES_MAX as i64,
-            DEPTH_MAX as i64,
-        ])?;
-        let thr_lit = xla::Literal::vec1(thr.as_slice()).reshape(&[
-            j_max as i64,
-            TREES_MAX as i64,
-            DEPTH_MAX as i64,
-        ])?;
-        let leaves_lit = xla::Literal::vec1(leaves.as_slice()).reshape(&[
-            j_max as i64,
-            TREES_MAX as i64,
-            LEAVES_MAX as i64,
-        ])?;
-        let mode_lit = xla::Literal::scalar(mode);
-        let result = self
-            .exec_lowfi
-            .execute::<xla::Literal>(&[xs_lit, feat_lit, thr_lit, leaves_lit, mode_lit])?[0][0]
-            .to_literal_sync()?;
-        let mut scores = result.to_tuple1()?.to_vec::<f32>()?;
-        scores.truncate(n);
-        Ok(scores)
-    }
-}
-
-/// Pack feature rows into a zero-padded `[cap, F_MAX]` literal.
-fn pack_features(xs: &[[f32; F_MAX]], cap: usize) -> Result<xla::Literal> {
-    assert!(xs.len() <= cap);
-    let mut flat = vec![0f32; cap * F_MAX];
-    for (i, row) in xs.iter().enumerate() {
-        flat[i * F_MAX..(i + 1) * F_MAX].copy_from_slice(row);
-    }
-    Ok(xla::Literal::vec1(flat.as_slice()).reshape(&[cap as i64, F_MAX as i64])?)
-}
+#[cfg(not(feature = "pjrt"))]
+mod stub;
+#[cfg(not(feature = "pjrt"))]
+pub use stub::Runtime;
 
 #[cfg(test)]
 mod tests {
@@ -270,5 +144,19 @@ mod tests {
     fn meta_missing_key_errors() {
         assert!(Meta::parse(r#"{"pool_n": 10}"#).is_err());
         assert!(Meta::parse("not json").is_err());
+    }
+
+    #[test]
+    fn error_context_chains() {
+        let e = Error::msg("inner").context("outer");
+        assert_eq!(format!("{e}"), "outer: inner");
+        assert_eq!(format!("{e:#}"), "outer: inner");
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_runtime_reports_missing_feature() {
+        let err = Runtime::load_default().unwrap_err();
+        assert!(format!("{err}").contains("pjrt"), "{err}");
     }
 }

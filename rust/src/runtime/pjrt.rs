@@ -1,0 +1,196 @@
+//! The xla-backed PJRT runtime (cargo feature `pjrt`).
+//!
+//! Compiles the three HLO-text artifacts once at load; scoring then
+//! runs with no Python anywhere.  One `Runtime` per thread — the
+//! underlying PJRT client is not shared across threads.
+
+use std::path::Path;
+
+use super::{artifacts_dir, Error, Meta, Result};
+use crate::config::F_MAX;
+use crate::gbt::{FlatEnsemble, DEPTH_MAX, LEAVES_MAX, TREES_MAX};
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Error {
+        Error::msg(format!("xla: {e}"))
+    }
+}
+
+/// A loaded, compiled PJRT runtime.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    exec_pool: xla::PjRtLoadedExecutable,
+    exec_small: xla::PjRtLoadedExecutable,
+    exec_lowfi: xla::PjRtLoadedExecutable,
+    pub meta: Meta,
+}
+
+impl Runtime {
+    /// Load from the default artifacts directory.
+    pub fn load_default() -> Result<Runtime> {
+        Runtime::load(&artifacts_dir())
+    }
+
+    /// Load and compile all artifacts under `dir`.
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let meta_path = dir.join("meta.json");
+        let meta_text = std::fs::read_to_string(&meta_path).map_err(|e| {
+            Error::msg(format!(
+                "reading {} (run `make artifacts`): {e}",
+                meta_path.display()
+            ))
+        })?;
+        let meta = Meta::parse(&meta_text)?;
+        meta.validate()?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| Error::msg(format!("creating PJRT CPU client: {e}")))?;
+        let compile = |name: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let path = dir.join(name);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| Error::msg(format!("parsing {}: {e}", path.display())))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client
+                .compile(&comp)
+                .map_err(|e| Error::msg(format!("compiling {}: {e}", path.display())))
+        };
+        Ok(Runtime {
+            exec_pool: compile("ensemble_predict.hlo.txt")?,
+            exec_small: compile("ensemble_predict_small.hlo.txt")?,
+            exec_lowfi: compile("lowfi_score.hlo.txt")?,
+            meta,
+            client,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Score `xs` with one flattened ensemble via the AOT kernel.
+    /// Batches larger than the pool artifact are processed in slabs.
+    pub fn score(&self, ens: &FlatEnsemble, xs: &[[f32; F_MAX]]) -> Result<Vec<f32>> {
+        let mut out = Vec::with_capacity(xs.len());
+        let mut off = 0;
+        while off < xs.len() {
+            let remaining = xs.len() - off;
+            let (exe, cap) = if remaining <= self.meta.small_n {
+                (&self.exec_small, self.meta.small_n)
+            } else {
+                (&self.exec_pool, self.meta.pool_n)
+            };
+            let take = remaining.min(cap);
+            let scores = self.score_slab(exe, cap, ens, &xs[off..off + take])?;
+            out.extend_from_slice(&scores[..take]);
+            off += take;
+        }
+        Ok(out)
+    }
+
+    fn score_slab(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        cap: usize,
+        ens: &FlatEnsemble,
+        xs: &[[f32; F_MAX]],
+    ) -> Result<Vec<f32>> {
+        let x_lit = pack_features(xs, cap)?;
+        let feat = xla::Literal::vec1(ens.feat.as_slice())
+            .reshape(&[TREES_MAX as i64, DEPTH_MAX as i64])?;
+        let thr = xla::Literal::vec1(ens.thr.as_slice())
+            .reshape(&[TREES_MAX as i64, DEPTH_MAX as i64])?;
+        let leaves = xla::Literal::vec1(ens.leaves.as_slice())
+            .reshape(&[TREES_MAX as i64, LEAVES_MAX as i64])?;
+        let result = exe.execute::<xla::Literal>(&[x_lit, feat, thr, leaves])?[0][0]
+            .to_literal_sync()?;
+        Ok(result.to_tuple1()?.to_vec::<f32>()?)
+    }
+
+    /// Low-fidelity combined score (Eqns 1-2) in one fused execution:
+    /// per-component ensembles + borrowed per-component feature views +
+    /// mode (1.0 = max / execution time, 0.0 = sum / computer time).
+    pub fn lowfi_score(
+        &self,
+        comps: &[(FlatEnsemble, &[[f32; F_MAX]])],
+        mode: f32,
+    ) -> Result<Vec<f32>> {
+        let j_max = self.meta.j_max;
+        if comps.is_empty() || comps.len() > j_max {
+            return Err(Error::msg(format!(
+                "lowfi_score needs 1..={j_max} components, got {}",
+                comps.len()
+            )));
+        }
+        let n = comps[0].1.len();
+        if comps.iter().any(|(_, xs)| xs.len() != n) {
+            return Err(Error::msg(
+                "lowfi_score: inconsistent pool sizes across components",
+            ));
+        }
+        let cap = self.meta.pool_n;
+        if n > cap {
+            return Err(Error::msg(format!(
+                "lowfi_score: pool of {n} exceeds artifact capacity {cap}"
+            )));
+        }
+        // xs [J, N, F]; padding slots carry the neutral-component
+        // ensemble (log-space NEG_PRED -> exp == 0)
+        let neutral = FlatEnsemble::neutral_component();
+        let mut xflat = vec![0f32; j_max * cap * F_MAX];
+        let mut feat = vec![0i32; j_max * TREES_MAX * DEPTH_MAX];
+        let mut thr = vec![f32::INFINITY; j_max * TREES_MAX * DEPTH_MAX];
+        let mut leaves = vec![0f32; j_max * TREES_MAX * LEAVES_MAX];
+        for j in comps.len()..j_max {
+            let lb = j * TREES_MAX * LEAVES_MAX;
+            leaves[lb..lb + TREES_MAX * LEAVES_MAX].copy_from_slice(&neutral.leaves);
+        }
+        for (j, (ens, xs)) in comps.iter().enumerate() {
+            for (i, row) in xs.iter().enumerate() {
+                let base = (j * cap + i) * F_MAX;
+                xflat[base..base + F_MAX].copy_from_slice(row);
+            }
+            let fb = j * TREES_MAX * DEPTH_MAX;
+            feat[fb..fb + TREES_MAX * DEPTH_MAX].copy_from_slice(&ens.feat);
+            thr[fb..fb + TREES_MAX * DEPTH_MAX].copy_from_slice(&ens.thr);
+            let lb = j * TREES_MAX * LEAVES_MAX;
+            leaves[lb..lb + TREES_MAX * LEAVES_MAX].copy_from_slice(&ens.leaves);
+        }
+        let xs_lit = xla::Literal::vec1(xflat.as_slice()).reshape(&[
+            j_max as i64,
+            cap as i64,
+            F_MAX as i64,
+        ])?;
+        let feat_lit = xla::Literal::vec1(feat.as_slice()).reshape(&[
+            j_max as i64,
+            TREES_MAX as i64,
+            DEPTH_MAX as i64,
+        ])?;
+        let thr_lit = xla::Literal::vec1(thr.as_slice()).reshape(&[
+            j_max as i64,
+            TREES_MAX as i64,
+            DEPTH_MAX as i64,
+        ])?;
+        let leaves_lit = xla::Literal::vec1(leaves.as_slice()).reshape(&[
+            j_max as i64,
+            TREES_MAX as i64,
+            LEAVES_MAX as i64,
+        ])?;
+        let mode_lit = xla::Literal::scalar(mode);
+        let result = self
+            .exec_lowfi
+            .execute::<xla::Literal>(&[xs_lit, feat_lit, thr_lit, leaves_lit, mode_lit])?[0][0]
+            .to_literal_sync()?;
+        let mut scores = result.to_tuple1()?.to_vec::<f32>()?;
+        scores.truncate(n);
+        Ok(scores)
+    }
+}
+
+/// Pack feature rows into a zero-padded `[cap, F_MAX]` literal.
+fn pack_features(xs: &[[f32; F_MAX]], cap: usize) -> Result<xla::Literal> {
+    assert!(xs.len() <= cap);
+    let mut flat = vec![0f32; cap * F_MAX];
+    for (i, row) in xs.iter().enumerate() {
+        flat[i * F_MAX..(i + 1) * F_MAX].copy_from_slice(row);
+    }
+    Ok(xla::Literal::vec1(flat.as_slice()).reshape(&[cap as i64, F_MAX as i64])?)
+}

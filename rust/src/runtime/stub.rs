@@ -1,0 +1,53 @@
+//! Stub runtime compiled when the `pjrt` feature is off.
+//!
+//! Keeps the exact public surface of [`super::pjrt::Runtime`] so
+//! callers type-check unchanged, but can never be constructed: both
+//! loaders return an error naming the missing feature, which is what
+//! routes `Scorer::pjrt_or_native` (and the benches / integration
+//! tests, which skip on load failure) onto the native scorer.
+
+use std::path::Path;
+
+use super::{Error, Meta, Result};
+use crate::config::F_MAX;
+use crate::gbt::FlatEnsemble;
+
+/// Uninhabited placeholder for the PJRT runtime (see module docs).
+pub struct Runtime {
+    pub meta: Meta,
+    never: std::convert::Infallible,
+}
+
+impl Runtime {
+    /// Always fails: the crate was built without the `pjrt` feature.
+    pub fn load_default() -> Result<Runtime> {
+        Err(Error::msg(
+            "crate built without the `pjrt` feature — enable it (and the \
+             vendored `xla` dependency in Cargo.toml) to load AOT artifacts",
+        ))
+    }
+
+    /// Always fails: the crate was built without the `pjrt` feature.
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        Self::load_default().map_err(|e| e.context(format!("loading {}", dir.display())))
+    }
+
+    pub fn platform(&self) -> String {
+        match self.never {}
+    }
+
+    /// Unreachable (no `Runtime` value can exist); signature mirror of
+    /// the pjrt implementation.
+    pub fn score(&self, _ens: &FlatEnsemble, _xs: &[[f32; F_MAX]]) -> Result<Vec<f32>> {
+        match self.never {}
+    }
+
+    /// Unreachable; signature mirror of the pjrt implementation.
+    pub fn lowfi_score(
+        &self,
+        _comps: &[(FlatEnsemble, &[[f32; F_MAX]])],
+        _mode: f32,
+    ) -> Result<Vec<f32>> {
+        match self.never {}
+    }
+}

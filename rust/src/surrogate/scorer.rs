@@ -90,7 +90,11 @@ impl Scorer {
     /// component model). Returns f64 for downstream stats.
     pub fn score(&self, ens: &Ensemble, xs: &[[f32; F_MAX]]) -> Vec<f64> {
         match self {
-            Scorer::Native => xs.iter().map(|x| ens.predict(x) as f64).collect(),
+            Scorer::Native => ens
+                .predict_batch(xs)
+                .into_iter()
+                .map(|v| v as f64)
+                .collect(),
             Scorer::Pjrt(rt) => rt
                 .score(&ens.flatten(), xs)
                 .expect("PJRT ensemble scoring failed")
@@ -113,23 +117,41 @@ impl Scorer {
         assert_eq!(comps.len(), feats.per_component.len());
         match self {
             Scorer::Native => {
-                let per: Vec<Vec<f64>> = comps
-                    .iter()
-                    .zip(&feats.per_component)
-                    .map(|(e, xs)| xs.iter().map(|x| (e.predict(x) as f64).exp()).collect())
-                    .collect();
-                (0..feats.len())
-                    .map(|i| {
-                        let parts: Vec<f64> = per.iter().map(|p| p[i]).collect();
-                        objective.combine(&parts)
-                    })
-                    .collect()
+                // Fold each component's batched predictions straight
+                // into the combined score — no per-row `parts` vector,
+                // no per-component score matrix.  Matches
+                // `Objective::combine` over exp(prediction): max folds
+                // from -inf, sum folds from 0.
+                let init = match objective {
+                    Objective::ExecTime => f64::NEG_INFINITY,
+                    Objective::CompTime => 0.0,
+                };
+                let mut out = vec![init; feats.len()];
+                for (e, xs) in comps.iter().zip(&feats.per_component) {
+                    // ragged views must fail loudly, not leave `init`
+                    // rows that would read as best-possible scores
+                    assert_eq!(xs.len(), out.len(), "ragged per-component views");
+                    let preds = e.predict_batch(xs);
+                    match objective {
+                        Objective::ExecTime => {
+                            for (o, p) in out.iter_mut().zip(&preds) {
+                                *o = o.max((*p as f64).exp());
+                            }
+                        }
+                        Objective::CompTime => {
+                            for (o, p) in out.iter_mut().zip(&preds) {
+                                *o += (*p as f64).exp();
+                            }
+                        }
+                    }
+                }
+                out
             }
             Scorer::Pjrt(rt) => {
-                let packed: Vec<_> = comps
+                let packed: Vec<(crate::gbt::FlatEnsemble, &[[f32; F_MAX]])> = comps
                     .iter()
                     .zip(&feats.per_component)
-                    .map(|(e, xs)| (e.flatten(), xs.clone()))
+                    .map(|(e, xs)| (e.flatten(), xs.as_slice()))
                     .collect();
                 rt.lowfi_score(&packed, objective.mode())
                     .expect("PJRT lowfi scoring failed")

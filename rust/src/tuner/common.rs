@@ -272,15 +272,31 @@ pub fn random_unmeasured(
 }
 
 /// Select the `k` best-scoring unmeasured pool indices (scores are
-/// lower-is-better).
+/// lower-is-better), in ascending score order with index tie-breaks.
+///
+/// Partial selection: `select_nth_unstable_by` partitions the k best
+/// candidates in O(pool), then only those k are sorted — the typical
+/// call has k (a batch of a few samples) ≪ pool (2000 configs), where
+/// a full sort wastes an O(pool·log pool) pass per iteration.  The
+/// (score, index) comparator is total, so the selected set and its
+/// final order are deterministic regardless of partition internals.
 pub fn top_unmeasured(
     scores: &[f64],
     measured: &HashSet<usize>,
     k: usize,
 ) -> Vec<usize> {
     let mut idx: Vec<usize> = (0..scores.len()).filter(|i| !measured.contains(i)).collect();
-    idx.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap().then(a.cmp(&b)));
-    idx.truncate(k);
+    if k == 0 {
+        idx.clear();
+        return idx;
+    }
+    let by_score_then_index =
+        |a: &usize, b: &usize| scores[*a].partial_cmp(&scores[*b]).unwrap().then(a.cmp(b));
+    if k < idx.len() {
+        idx.select_nth_unstable_by(k - 1, by_score_then_index);
+        idx.truncate(k);
+    }
+    idx.sort_unstable_by(by_score_then_index);
     idx
 }
 
@@ -361,6 +377,17 @@ mod tests {
         measured.insert(4);
         let t2 = top_unmeasured(&scores, &measured, 3);
         assert_eq!(t2, vec![3, 5, 6]);
+    }
+
+    #[test]
+    fn top_unmeasured_tie_break_and_bounds() {
+        let measured: HashSet<usize> = HashSet::new();
+        let scores = vec![1.0, 0.5, 0.5, 0.5, 2.0, 0.1];
+        // ties broken by ascending index, deterministically
+        assert_eq!(top_unmeasured(&scores, &measured, 3), vec![5, 1, 2]);
+        assert_eq!(top_unmeasured(&scores, &measured, 0), Vec::<usize>::new());
+        // k >= available returns everything, still fully sorted
+        assert_eq!(top_unmeasured(&scores, &measured, 99), vec![5, 1, 2, 3, 0, 4]);
     }
 
     #[test]

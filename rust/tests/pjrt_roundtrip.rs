@@ -89,7 +89,7 @@ fn lowfi_artifact_matches_native_combination() {
     for (mode, name) in [(1.0f32, "max"), (0.0f32, "sum")] {
         let got = rt
             .lowfi_score(
-                &[(e0.flatten(), xs0.clone()), (e1.flatten(), xs1.clone())],
+                &[(e0.flatten(), xs0.as_slice()), (e1.flatten(), xs1.as_slice())],
                 mode,
             )
             .unwrap();

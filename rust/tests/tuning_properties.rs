@@ -4,8 +4,8 @@
 
 use std::collections::HashSet;
 
-use ceal::config::{Config, WorkflowId};
-use ceal::gbt::{train_log, GbtParams};
+use ceal::config::{Config, WorkflowId, F_MAX};
+use ceal::gbt::{train, train_exact, train_log, Ensemble, GbtParams};
 use ceal::metrics::{mdape, recall_score};
 use ceal::sim::Objective;
 use ceal::surrogate::Scorer;
@@ -175,6 +175,115 @@ fn objective_combination_matches_artifact_semantics() {
         // mode scalars match the artifact convention
         assert_prop(Objective::ExecTime.mode() == 1.0, "exec mode")?;
         assert_prop(Objective::CompTime.mode() == 0.0, "comp mode")
+    });
+}
+
+fn random_rows(rng: &mut Pcg32, n: usize, nf: usize) -> Vec<[f32; F_MAX]> {
+    (0..n)
+        .map(|_| {
+            let mut x = [0f32; F_MAX];
+            for v in x.iter_mut().take(nf) {
+                *v = rng.f32();
+            }
+            x
+        })
+        .collect()
+}
+
+/// Differential test for the histogram training engine: same candidate
+/// thresholds, gain formula and tie-breaks as `train_exact`, so holdout
+/// RMSE must agree within a small fraction of the target spread (the
+/// engines can only diverge through last-bit f64 rounding of gradient
+/// sums flipping a near-tied split).
+#[test]
+fn histogram_trainer_matches_exact_holdout_rmse() {
+    check("hist-vs-exact holdout rmse", 8, |rng| {
+        let n = 60 + rng.gen_range(240) as usize;
+        let nf = 2 + rng.gen_range(6) as usize; // 2..=7 real features
+        let w: Vec<f64> = (0..nf).map(|_| rng.uniform(-10.0, 10.0)).collect();
+        let q: Vec<f64> = (0..nf).map(|_| rng.uniform(0.0, 5.0)).collect();
+        let truth = |x: &[f32; F_MAX]| {
+            let mut v = 30.0;
+            for f in 0..nf {
+                v += w[f] * x[f] as f64 + q[f] * ((x[f] as f64) - 0.5).powi(2);
+            }
+            v
+        };
+        let xs = random_rows(rng, n, nf);
+        let y: Vec<f64> = xs.iter().map(&truth).collect();
+        let tx = random_rows(rng, 150, nf);
+        let ty: Vec<f64> = tx.iter().map(&truth).collect();
+        let params = GbtParams {
+            n_trees: 8 + rng.gen_range(40) as usize,
+            depth: 2 + rng.gen_range(4) as usize,
+            ..GbtParams::default()
+        };
+        let hist = train(&xs, &y, nf, &params);
+        let exact = train_exact(&xs, &y, nf, &params);
+        let rmse = |m: &Ensemble| {
+            let se: f64 = tx
+                .iter()
+                .zip(&ty)
+                .map(|(x, &t)| {
+                    let d = m.predict(x) as f64 - t;
+                    d * d
+                })
+                .sum();
+            (se / ty.len() as f64).sqrt()
+        };
+        let (rh, re) = (rmse(&hist), rmse(&exact));
+        let spread = ceal::util::stats::std_dev(&ty);
+        assert_prop(
+            (rh - re).abs() <= 0.05 * spread + 1e-9,
+            format!("n={n} nf={nf}: hist rmse {rh} vs exact rmse {re} (spread {spread})"),
+        )
+    });
+}
+
+/// The blocked batched predictors must equal the row-at-a-time
+/// predictors exactly, on arbitrary (not just trained) ensembles and
+/// across block-boundary batch sizes.
+#[test]
+fn batched_prediction_equals_rowwise() {
+    check("predict_batch == predict", 25, |rng| {
+        let trees = 1 + rng.gen_range(64) as usize; // 1..=TREES_MAX
+        let depth = 1 + rng.gen_range(6) as usize; // 1..=DEPTH_MAX
+        let nf = 1 + rng.gen_range(8) as usize;
+        let leaves_w = 1usize << depth;
+        let ens = Ensemble {
+            n_features: nf,
+            depth,
+            feat: (0..trees * depth)
+                .map(|_| rng.gen_range(nf as u64) as u32)
+                .collect(),
+            thr: (0..trees * depth).map(|_| rng.f32()).collect(),
+            leaves: (0..trees * leaves_w)
+                .map(|_| rng.normal() as f32)
+                .collect(),
+            bias: rng.normal() as f32,
+        };
+        let n = 1 + rng.gen_range(300) as usize;
+        let xs = random_rows(rng, n, F_MAX);
+        let batch = ens.predict_batch(&xs);
+        let flat = ens.flatten();
+        let flat_batch = flat.predict_batch(&xs);
+        assert_prop(
+            batch.len() == n && flat_batch.len() == n,
+            "batched output length mismatch",
+        )?;
+        for (i, x) in xs.iter().enumerate() {
+            let row = ens.predict(x);
+            assert_prop(
+                batch[i] == row,
+                format!("row {i}/{n}: batch {} vs rowwise {row}", batch[i]),
+            )?;
+            let flat_row = flat.predict(x);
+            assert_prop(
+                flat_batch[i] == flat_row,
+                format!("row {i}/{n}: flat batch {} vs rowwise {flat_row}", flat_batch[i]),
+            )?;
+        }
+        Ok(())
     });
 }
 
