@@ -1,9 +1,21 @@
 //! Simulator throughput: workflow runs per second (the collector's
 //! cost driver), the pipeline DES in isolation, and pool generation
 //! (2000-config test sets with ground truth).
+//!
+//! Before/after rows for the allocation-free hot path sit side by side:
+//! `pipeline_only` builds the reference `Pipeline` and simulates with
+//! full matrices (the old path), `noisy_run`/`expected_run` drive the
+//! structure+workspace path with an explicitly cold workspace per call
+//! (isolating the allocation overhead), and `*_reused` thread one warm
+//! workspace through every call like a collector does (the tuner-facing
+//! `run()`/`expected()` wrappers also run warm, via a per-thread
+//! scratch workspace).  `pool/cached_lookup` measures a PoolCache hit
+//! against `pool/generate2000_with_truth` (a miss / the old
+//! per-algorithm cost).
 
 use ceal::config::WorkflowId;
-use ceal::sim::Objective;
+use ceal::coordinator::poolcache::PoolCache;
+use ceal::sim::{Objective, SimWorkspace};
 use ceal::tuner::{Pool, Problem};
 use ceal::util::bench::Bencher;
 use ceal::util::rng::Pcg32;
@@ -21,13 +33,29 @@ fn main() {
         let mut i = 0usize;
         b.bench_items(&format!("sim/{}/noisy_run", id.name()), 1.0, || {
             i = (i + 1) % cfgs.len();
-            prob.sim.run(&cfgs[i], &mut run_rng)
+            prob.sim
+                .run_with(&cfgs[i], &mut run_rng, &mut SimWorkspace::new())
+        });
+        let mut reuse_rng = Pcg32::new(2, 0);
+        let mut ws = SimWorkspace::new();
+        let mut ir = 0usize;
+        b.bench_items(&format!("sim/{}/noisy_run_reused", id.name()), 1.0, || {
+            ir = (ir + 1) % cfgs.len();
+            prob.sim.run_with(&cfgs[ir], &mut reuse_rng, &mut ws)
         });
         let mut j = 0usize;
         b.bench_items(&format!("sim/{}/expected_run", id.name()), 1.0, || {
             j = (j + 1) % cfgs.len();
-            prob.sim.expected(&cfgs[j])
+            prob.sim.expected_with(&cfgs[j], &mut SimWorkspace::new())
         });
+        let mut wse = SimWorkspace::new();
+        let mut je = 0usize;
+        b.bench_items(&format!("sim/{}/expected_run_reused", id.name()), 1.0, || {
+            je = (je + 1) % cfgs.len();
+            prob.sim.expected_with(&cfgs[je], &mut wse)
+        });
+        // reference path: per-run Pipeline construction + full-matrix
+        // simulate — the pre-workspace baseline
         let mut k = 0usize;
         b.bench_items(&format!("sim/{}/pipeline_only", id.name()), 1.0, || {
             k = (k + 1) % cfgs.len();
@@ -38,5 +66,17 @@ fn main() {
     let mut bslow = Bencher::from_env(1, 5);
     bslow.bench_items("pool/generate2000_with_truth", 2000.0, || {
         Pool::generate(&prob, 2000, 7)
+    });
+    let threads = ceal::coordinator::campaign::default_threads();
+    bslow.bench_items(
+        &format!("pool/generate2000_par{threads}"),
+        2000.0,
+        || Pool::generate_par(&prob, 2000, 7, threads),
+    );
+    let cache = PoolCache::new();
+    cache.get_or_generate(&prob, 2000, 7, threads); // warm the cell
+    let mut bfast = Bencher::from_env(3, 30);
+    bfast.bench_items("pool/cached_lookup", 2000.0, || {
+        cache.get_or_generate(&prob, 2000, 7, threads)
     });
 }

@@ -119,6 +119,11 @@ impl Campaign {
         self
     }
 
+    pub fn with_seed(mut self, seed: u64) -> Campaign {
+        self.seed = seed;
+        self
+    }
+
     pub fn with_pool_size(mut self, n: usize) -> Campaign {
         self.pool_size = n;
         self
@@ -286,11 +291,18 @@ fn algo_stream(algo: Algo) -> u64 {
 }
 
 /// Run one algorithm's campaign cell. The pool (the paper's measured
-/// test set) is deterministic in (workflow, objective, seed) and shared
-/// by every algorithm at the same cell.
+/// test set) is deterministic in (workflow, objective, pool_size, seed)
+/// and **shared by every algorithm at the same cell** through the
+/// process-wide [`PoolCache`](super::PoolCache): the first algorithm to
+/// reach a cell generates it (ground truth measured across this
+/// campaign's worker threads), every later one reuses the same
+/// `Arc<Pool>`.  Pools are immutable after generation — tuners receive
+/// `&Pool` and must never mutate it; that contract is what makes the
+/// sharing sound across the repetition worker threads of concurrent
+/// campaigns.
 pub fn run_campaign(algo: Algo, c: &Campaign) -> Aggregate {
     let prob = Problem::new(c.workflow, c.objective);
-    let pool = Pool::generate(&prob, c.pool_size, c.seed);
+    let pool = super::poolcache::shared_pool(&prob, c.pool_size, c.seed, c.threads);
     let expert_value = c
         .objective
         .value(&prob.sim.expected(&expert_config(c.workflow, c.objective)));
@@ -394,5 +406,33 @@ mod tests {
             assert_eq!(agg.reps.len(), 3, "{algo}");
             assert!(agg.mean_cost() > 0.0, "{algo}");
         }
+    }
+
+    #[test]
+    fn pool_built_once_across_algorithms() {
+        use crate::coordinator::{PoolCache, PoolKey};
+        use crate::tuner::Problem;
+        // a seed no other test uses, so the global cache entry is ours
+        let c = Campaign::new(WorkflowId::Hs, Objective::CompTime, 10)
+            .with_reps(2)
+            .with_pool_size(60)
+            .with_threads(1);
+        let mut c = c;
+        c.seed = 0xB111_7001;
+        let key = PoolKey::for_problem(&Problem::new(c.workflow, c.objective), c.pool_size, c.seed);
+        assert_eq!(PoolCache::global().hit_count(&key), None);
+        run_campaign(Algo::Rs, &c);
+        assert_eq!(
+            PoolCache::global().hit_count(&key),
+            Some(0),
+            "first algorithm generates the cell"
+        );
+        run_campaign(Algo::Al, &c);
+        run_campaign(Algo::Ceal, &c);
+        assert_eq!(
+            PoolCache::global().hit_count(&key),
+            Some(2),
+            "later algorithms at the same cell must reuse the cached pool"
+        );
     }
 }

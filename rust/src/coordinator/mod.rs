@@ -1,11 +1,14 @@
 //! Campaign coordination: run (algorithm × workflow × objective ×
-//! budget) grids with repetitions, aggregate the paper's metrics, and
-//! manage expert baselines and historical component measurements.
+//! budget) grids with repetitions, aggregate the paper's metrics,
+//! share ground-truth pools across cells, and manage expert baselines
+//! and historical component measurements.
 
 pub mod campaign;
 pub mod expert;
 pub mod history;
+pub mod poolcache;
 
 pub use campaign::{run_campaign, Aggregate, Algo, Campaign, RepResult, ScorerKind};
 pub use expert::expert_config;
 pub use history::historical_samples;
+pub use poolcache::{shared_pool, PoolCache, PoolKey};

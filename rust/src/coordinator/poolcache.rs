@@ -1,0 +1,203 @@
+//! Cross-campaign pool cache.
+//!
+//! Building a pool is the most expensive fixed cost of a campaign cell:
+//! `pool_size` (paper: 2000) noise-free simulator runs just to establish
+//! the ground-truth test set.  The pool is fully determined by
+//! (workflow, objective, pool_size, seed) — so when an experiment suite
+//! runs seven algorithms over the same cell (as every `exper/fig*.rs`
+//! grid does), regenerating it per algorithm multiplies that cost by
+//! seven for bit-identical results.
+//!
+//! [`PoolCache`] memoizes generated pools as `Arc<Pool>` keyed by
+//! [`PoolKey`].  **Sharing contract:** pools are immutable after
+//! generation — tuners receive `&Pool` and must never mutate it; the
+//! lazily built per-`k` kNN graphs are the only interior state (see
+//! [`Pool::knn_graph`]).  Ground-truth measurement inside a miss is
+//! parallelized across the requesting campaign's worker threads via
+//! [`Pool::generate_par`] and is thread-count invariant.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::config::WorkflowId;
+use crate::sim::Objective;
+use crate::tuner::{Pool, Problem};
+
+/// Cache key for a pool cell.  Valid only for problems built by
+/// `Problem::new` on the default [`Machine`](crate::sim::Machine):
+/// pool ground truth also depends on the (publicly mutable) machine and
+/// spec fields of `WorkflowSim`, which the key deliberately does not
+/// capture — problems with a customized machine or spec must bypass the
+/// cache via [`Pool::generate_par`] (enforced by a debug assertion in
+/// [`PoolCache::get_or_generate`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct PoolKey {
+    pub workflow: WorkflowId,
+    pub objective: Objective,
+    pub pool_size: usize,
+    pub seed: u64,
+}
+
+impl PoolKey {
+    pub fn for_problem(prob: &Problem, pool_size: usize, seed: u64) -> PoolKey {
+        PoolKey {
+            workflow: prob.sim.id,
+            objective: prob.objective,
+            pool_size,
+            seed,
+        }
+    }
+}
+
+/// One cell's slot: the pool is built through the `OnceLock` *outside*
+/// the cache-wide map lock, so distinct cells generate concurrently, a
+/// panicking generation poisons nothing (the slot just stays empty),
+/// and a cell is still built at most once (`OnceLock::get_or_init`
+/// blocks duplicate initializers).
+#[derive(Default)]
+struct Slot {
+    pool: OnceLock<Arc<Pool>>,
+    hits: AtomicUsize,
+}
+
+/// Memoized pool store; see the module docs for the sharing contract.
+#[derive(Default)]
+pub struct PoolCache {
+    map: Mutex<HashMap<PoolKey, Arc<Slot>>>,
+}
+
+impl PoolCache {
+    pub fn new() -> PoolCache {
+        PoolCache::default()
+    }
+
+    /// The process-wide cache used by
+    /// [`run_campaign`](crate::coordinator::run_campaign) and the
+    /// experiment harness.
+    pub fn global() -> &'static PoolCache {
+        static GLOBAL: OnceLock<PoolCache> = OnceLock::new();
+        GLOBAL.get_or_init(PoolCache::new)
+    }
+
+    /// Return the cached pool for the cell, generating (and storing) it
+    /// on first request.  The map lock is only held to fetch the cell's
+    /// slot; generation runs outside it.
+    pub fn get_or_generate(
+        &self,
+        prob: &Problem,
+        pool_size: usize,
+        seed: u64,
+        threads: usize,
+    ) -> Arc<Pool> {
+        debug_assert!(
+            prob.sim.machine == crate::sim::Machine::default(),
+            "PoolCache keys don't capture a customized Machine — use Pool::generate_par directly"
+        );
+        let key = PoolKey::for_problem(prob, pool_size, seed);
+        let slot = {
+            let mut map = self.map.lock().unwrap();
+            Arc::clone(map.entry(key).or_default())
+        };
+        let mut built = false;
+        let pool = slot.pool.get_or_init(|| {
+            built = true;
+            Arc::new(Pool::generate_par(prob, pool_size, seed, threads))
+        });
+        if !built {
+            // served from cache — including racers that blocked on the
+            // builder inside get_or_init
+            slot.hits.fetch_add(1, Ordering::Relaxed);
+        }
+        Arc::clone(pool)
+    }
+
+    /// How many times `key` was served from cache (None = never built).
+    /// Test/diagnostic instrumentation for the "pool built exactly once
+    /// per cell" invariant.
+    pub fn hit_count(&self, key: &PoolKey) -> Option<usize> {
+        let slot = self.map.lock().unwrap().get(key).map(Arc::clone)?;
+        slot.pool.get()?;
+        Some(slot.hits.load(Ordering::Relaxed))
+    }
+
+    /// Number of distinct cells generated so far.
+    pub fn len(&self) -> usize {
+        self.map
+            .lock()
+            .unwrap()
+            .values()
+            .filter(|s| s.pool.get().is_some())
+            .count()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop every cached pool (memory reclamation between suites).
+    pub fn clear(&self) {
+        self.map.lock().unwrap().clear();
+    }
+}
+
+/// Convenience: fetch a shared pool from the process-wide cache.
+pub fn shared_pool(prob: &Problem, pool_size: usize, seed: u64, threads: usize) -> Arc<Pool> {
+    PoolCache::global().get_or_generate(prob, pool_size, seed, threads)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn prob() -> Problem {
+        Problem::new(WorkflowId::Lv, Objective::CompTime)
+    }
+
+    /// Cached pools must be indistinguishable from fresh generation —
+    /// configs, ground truth (bitwise) and best index.
+    #[test]
+    fn pool_cache_returns_identical_pool() {
+        let cache = PoolCache::new();
+        let p = prob();
+        let cached = cache.get_or_generate(&p, 50, 0xCAFE, 2);
+        let fresh = Pool::generate(&p, 50, 0xCAFE);
+        assert_eq!(cached.configs, fresh.configs);
+        assert_eq!(cached.truth, fresh.truth);
+        assert_eq!(cached.best_idx, fresh.best_idx);
+    }
+
+    #[test]
+    fn second_lookup_hits_and_shares() {
+        let cache = PoolCache::new();
+        let p = prob();
+        let key = PoolKey::for_problem(&p, 40, 7);
+        assert_eq!(cache.hit_count(&key), None);
+        let a = cache.get_or_generate(&p, 40, 7, 1);
+        assert_eq!(cache.hit_count(&key), Some(0));
+        let b = cache.get_or_generate(&p, 40, 7, 4);
+        assert_eq!(cache.hit_count(&key), Some(1));
+        assert!(Arc::ptr_eq(&a, &b), "hit must share the same pool");
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn distinct_cells_do_not_collide() {
+        let cache = PoolCache::new();
+        let p = prob();
+        let exec = Problem::new(WorkflowId::Lv, Objective::ExecTime);
+        let a = cache.get_or_generate(&p, 30, 1, 1);
+        let b = cache.get_or_generate(&exec, 30, 1, 1);
+        let c = cache.get_or_generate(&p, 30, 2, 1);
+        let d = cache.get_or_generate(&p, 31, 1, 1);
+        assert_eq!(cache.len(), 4);
+        // same configs for same (workflow, size, seed), different truth
+        // per objective
+        assert_eq!(a.configs, b.configs);
+        assert_ne!(a.truth, b.truth);
+        assert!(!Arc::ptr_eq(&a, &c));
+        assert!(!Arc::ptr_eq(&a, &d));
+        cache.clear();
+        assert!(cache.is_empty());
+    }
+}

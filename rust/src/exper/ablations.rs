@@ -19,7 +19,7 @@ use crate::sim::Objective;
 use crate::surrogate::lowfi::LowFiModel;
 use crate::surrogate::Scorer;
 use crate::tuner::ceal::gbt_params_for;
-use crate::tuner::{BudgetedCeal, BudgetedCealParams, Ceal, CealParams, Pool, Problem, Tuner};
+use crate::tuner::{BudgetedCeal, BudgetedCealParams, Ceal, CealParams, Problem, Tuner};
 use crate::util::csv::CsvWriter;
 use crate::util::rng::Pcg32;
 use crate::util::stats;
@@ -44,7 +44,7 @@ pub fn run(ctx: &ExpCtx) {
 fn switch_policy(ctx: &ExpCtx, csv: &mut CsvWriter) {
     println!("-- switch policy (LV comp, m=50, normalized best)");
     let prob = Problem::new(WorkflowId::Lv, Objective::CompTime);
-    let pool = Pool::generate(&prob, ctx.pool_size, ctx.seed);
+    let pool = ctx.shared_pool(&prob, ctx.pool_size, ctx.seed);
     let scorer = ctx.scorer.build();
     let mut t = Table::new(&["variant", "normalized best"]).align_left(&[0]);
     for (name, params) in [
@@ -91,7 +91,7 @@ fn switch_policy(ctx: &ExpCtx, csv: &mut CsvWriter) {
 fn budget_mode(ctx: &ExpCtx, csv: &mut CsvWriter) {
     println!("-- budget mode (LV comp): run-count m=50 vs equal cost budget");
     let prob = Problem::new(WorkflowId::Lv, Objective::CompTime);
-    let pool = Pool::generate(&prob, ctx.pool_size, ctx.seed);
+    let pool = ctx.shared_pool(&prob, ctx.pool_size, ctx.seed);
     let scorer = ctx.scorer.build();
     // measure run-count CEAL's average spend, then grant the budgeted
     // variant the same amount
@@ -151,7 +151,7 @@ fn combination_function(ctx: &ExpCtx, csv: &mut CsvWriter) {
     for wf in WorkflowId::ALL {
         for obj in Objective::ALL {
             let prob = Problem::new(wf, obj);
-            let pool = Pool::generate(&prob, 500, ctx.seed ^ 0xAB4);
+            let pool = ctx.shared_pool(&prob, 500, ctx.seed ^ 0xAB4);
             let hist = historical_samples(&prob, 500, ctx.seed ^ 0x415);
             let nf = prob.n_component_features();
             let lf = LowFiModel::fit(&hist, &nf, obj, &gbt_params_for(500));

@@ -1,11 +1,12 @@
 //! Shared experiment-harness context and helpers.
 
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use crate::config::WorkflowId;
-use crate::coordinator::{run_campaign, Aggregate, Algo, Campaign, ScorerKind};
+use crate::coordinator::{run_campaign, shared_pool, Aggregate, Algo, Campaign, ScorerKind};
 use crate::sim::Objective;
-use crate::tuner::CealParams;
+use crate::tuner::{CealParams, Pool, Problem};
 use crate::util::csv::CsvWriter;
 
 /// Experiment configuration (CLI-controlled).
@@ -44,9 +45,13 @@ impl ExpCtx {
         }
     }
 
-    /// Build a campaign for a cell.
+    /// Build a campaign for a cell.  Carries this context's seed so
+    /// `--seed` reaches campaign cells and their pool-cache key matches
+    /// the non-campaign consumers of the same cell (table2, fig04,
+    /// ablations).
     pub fn campaign(&self, wf: WorkflowId, obj: Objective, m: usize) -> Campaign {
         Campaign::new(wf, obj, m)
+            .with_seed(self.seed)
             .with_reps(self.reps)
             .with_pool_size(self.pool_size)
             .with_scorer(self.scorer)
@@ -56,6 +61,14 @@ impl ExpCtx {
     /// Run one (algo, workflow, objective, m) cell.
     pub fn run_cell(&self, algo: Algo, wf: WorkflowId, obj: Objective, m: usize) -> Aggregate {
         run_campaign(algo, &self.campaign(wf, obj, m))
+    }
+
+    /// Fetch a ground-truth pool from the process-wide cache (built on
+    /// first use with this context's worker threads, then shared with
+    /// every campaign/figure at the same cell).  Pools are immutable —
+    /// see the sharing contract on [`crate::coordinator::PoolCache`].
+    pub fn shared_pool(&self, prob: &Problem, size: usize, seed: u64) -> Arc<Pool> {
+        shared_pool(prob, size, seed, self.threads)
     }
 
     /// Run a cell with overridden CEAL hyper-parameters (Fig. 13).

@@ -7,7 +7,7 @@ use crate::metrics::recall_score;
 use crate::sim::Objective;
 use crate::surrogate::LowFiModel;
 use crate::tuner::ceal::gbt_params_for;
-use crate::tuner::{Pool, Problem};
+use crate::tuner::Problem;
 use crate::util::csv::CsvWriter;
 use crate::util::table::{fnum, Table};
 
@@ -29,7 +29,7 @@ pub fn compute(ctx: &ExpCtx) -> Vec<Fig4Row> {
     let mut out = Vec::new();
     for obj in Objective::ALL {
         let prob = Problem::new(WorkflowId::Lv, obj);
-        let pool = Pool::generate(&prob, FIG4_POOL, ctx.seed ^ 0xF14);
+        let pool = ctx.shared_pool(&prob, FIG4_POOL, ctx.seed ^ 0xF14);
         let hist = historical_samples(&prob, 500, ctx.seed ^ 0x415);
         let n_feats = prob.n_component_features();
         let lf = LowFiModel::fit(&hist, &n_feats, obj, &gbt_params_for(500));

@@ -4,7 +4,7 @@
 use crate::config::WorkflowId;
 use crate::coordinator::expert_config;
 use crate::sim::Objective;
-use crate::tuner::{Pool, Problem};
+use crate::tuner::Problem;
 use crate::util::csv::CsvWriter;
 use crate::util::table::{fnum, Table};
 
@@ -21,7 +21,9 @@ pub fn run(ctx: &ExpCtx) {
     for id in WorkflowId::ALL {
         for obj in Objective::ALL {
             let prob = Problem::new(id, obj);
-            let pool = Pool::generate(&prob, ctx.pool_size, ctx.seed);
+            // same cell key as every campaign at this (wf, obj, seed):
+            // the cache makes this table free after any figure ran
+            let pool = ctx.shared_pool(&prob, ctx.pool_size, ctx.seed);
             let best_cfg = &pool.configs[pool.best_idx];
             let best_val = pool.best_value();
             let exp_cfg = expert_config(id, obj);

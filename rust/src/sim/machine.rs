@@ -5,7 +5,7 @@
 /// Static machine parameters. Defaults mirror the paper's testbed:
 /// 2×18-core E5-2695v4 (36 cores, no hyperthreading), 128 GB DDR4,
 /// 100 Gb/s Omni-Path, and a parallel filesystem shared per allocation.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Machine {
     /// Largest allocation a workflow may use (paper: 32).
     pub max_nodes: u64,

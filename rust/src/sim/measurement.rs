@@ -3,6 +3,11 @@
 //! The paper evaluates two objectives (§7.1): *execution time* — the
 //! longest component end-to-end wall-clock time — and *computer time* —
 //! execution time × nodes × cores-per-node (core-hours).
+//!
+//! [`Measurement`] is `Copy` by design: the collector's hot path
+//! ([`WorkflowSim::run_with`](crate::sim::WorkflowSim::run_with) through
+//! a reused [`SimWorkspace`](crate::sim::SimWorkspace)) returns it by
+//! value with no heap traffic.
 
 /// Result of running a workflow (or an isolated component) once.
 #[derive(Clone, Copy, Debug, PartialEq)]

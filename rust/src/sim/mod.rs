@@ -2,7 +2,9 @@
 //! (see DESIGN.md §2 for the substitution rationale).
 //!
 //! * [`machine`] — cluster model (nodes, cores, memory/NIC/FS bandwidth)
-//! * [`pipeline`] — streaming DES with staging buffers and backpressure
+//! * [`pipeline`] — streaming DES with staging buffers and backpressure,
+//!   split into an immutable [`PipelineStructure`] and a reusable
+//!   [`SimWorkspace`] so the measurement hot path is allocation-free
 //! * [`apps`] — analytic per-component performance models
 //! * [`workflows`] — LV / HS / GP assembly + isolated component runs
 //! * [`measurement`] — measurements and optimization objectives
@@ -15,5 +17,5 @@ pub mod workflows;
 
 pub use machine::Machine;
 pub use measurement::{Measurement, Objective};
-pub use pipeline::{Edge, Pipeline, PipelineResult, Stage};
+pub use pipeline::{Edge, Pipeline, PipelineResult, PipelineStructure, SimWorkspace, Stage};
 pub use workflows::WorkflowSim;

@@ -18,11 +18,51 @@
 //!
 //! Chunks move strictly in order, which lets the schedule be computed by
 //! exact recurrences chunk-by-chunk in topological order — equivalent to
-//! an event-queue simulation of this network but cache-friendly and
-//! allocation-light (this sits on the auto-tuner's data-collection hot
-//! path: every training sample is one simulated run).
+//! an event-queue simulation of this network.
+//!
+//! # Structure / workspace split (the collector's hot path)
+//!
+//! Every training sample the auto-tuner collects is one simulated run,
+//! and every experiment cell measures a whole pool of configurations —
+//! so this file keeps the measurement path *allocation-free*:
+//!
+//! * [`PipelineStructure`] is the immutable per-workflow topology
+//!   (stage names as `&'static str`, edge endpoints, topological order,
+//!   in/out edge index lists).  It is built once per
+//!   [`WorkflowSim`](crate::sim::WorkflowSim) and shared by every run.
+//! * [`SimWorkspace`] owns every buffer a run needs: per-stage chunk
+//!   times, per-edge transfer times and capacities, and the schedule
+//!   arrays.  A collector reuses one workspace across all of its runs;
+//!   after the first run warms the buffer capacities, `fill` + simulate
+//!   performs **zero heap allocations**.
+//!
+//! The start/finish matrices of the naive recurrence are `n × K`; the
+//! recurrence only ever looks back `capacity` chunks (backpressure) and
+//! one chunk (the stage's own previous finish), so the workspace keeps a
+//! **rolling window** of `max(capacity) + 1` columns indexed by
+//! `k % window` — O(n·K) time, O(n·cap) memory.
+//!
+//! # Steady-state fast path
+//!
+//! Noise-free runs ([`WorkflowSim::expected`](crate::sim::WorkflowSim))
+//! have constant per-stage chunk times, and a constant-time pipeline
+//! reaches a periodic regime after a warmup transient: every stage's
+//! start time advances by the same period `P` (the slowest stage's
+//! effective rate) each chunk.  [`PipelineStructure::simulate`] detects
+//! this — all per-stage start deltas equal for `window` consecutive
+//! chunks — and extrapolates the remaining chunks in closed form
+//! (`start += remaining · P`, likewise the per-chunk blocked/starved
+//! increments), turning O(K) chunk iterations into O(warmup).  The fast
+//! path is differentially pinned against the exact recurrence by
+//! property tests below; runs with per-chunk noise always take the
+//! exact recurrence and match the reference implementation bit-for-bit.
+//!
+//! [`Pipeline`] + [`Pipeline::simulate`] remain as the allocation-heavy
+//! *reference implementation*: built per run, simulated with full
+//! `n × K` matrices.  Tests pin the workspace path against it, and the
+//! benches keep it as the before/after baseline.
 
-/// One component application in the pipeline.
+/// One component application in the pipeline (reference representation).
 #[derive(Clone, Debug)]
 pub struct Stage {
     pub name: String,
@@ -44,7 +84,9 @@ pub struct Edge {
     pub capacity: usize,
 }
 
-/// A fully-assembled pipeline ready to simulate.
+/// A fully-assembled pipeline — the *reference* representation used by
+/// differential tests and the benches' baseline rows.  The measurement
+/// hot path uses [`PipelineStructure`] + [`SimWorkspace`] instead.
 #[derive(Clone, Debug)]
 pub struct Pipeline {
     pub stages: Vec<Stage>,
@@ -107,7 +149,9 @@ impl Pipeline {
         order
     }
 
-    /// Run the in-order streaming schedule.
+    /// Run the in-order streaming schedule (reference implementation:
+    /// allocates full `n × K` matrices; the hot path is
+    /// [`PipelineStructure::simulate`]).
     pub fn simulate(&self) -> PipelineResult {
         let n = self.stages.len();
         let k_chunks = self.n_chunks();
@@ -165,9 +209,341 @@ impl Pipeline {
     }
 }
 
+/// Immutable pipeline topology: everything about a workflow's shape that
+/// does not depend on the configuration being simulated.  Built once per
+/// [`WorkflowSim`](crate::sim::WorkflowSim); every run shares it.
+#[derive(Clone, Debug)]
+pub struct PipelineStructure {
+    names: Vec<&'static str>,
+    /// Edge endpoints (from, to), in channel order — the same order
+    /// `fill` writes transfer times and capacities.
+    edges: Vec<(usize, usize)>,
+    topo: Vec<usize>,
+    in_edges: Vec<Vec<usize>>,
+    out_edges: Vec<Vec<usize>>,
+}
+
+/// Relative tolerance for steady-state period detection: deltas are
+/// float-recomputed each chunk and wobble in the last bits even once the
+/// schedule is exactly periodic.
+const STEADY_EPS: f64 = 1e-9;
+
+#[inline]
+fn steady_eq(a: f64, b: f64) -> bool {
+    // NaN (uninitialized previous period) compares unequal.
+    (a - b).abs() <= STEADY_EPS * a.abs().max(b.abs()).max(1.0)
+}
+
+impl PipelineStructure {
+    /// Assemble a topology from stage names and edge endpoint pairs;
+    /// panics on cycles (workflow DAGs are acyclic by construction).
+    pub fn new(names: Vec<&'static str>, edges: Vec<(usize, usize)>) -> PipelineStructure {
+        let n = names.len();
+        let mut indeg = vec![0usize; n];
+        for &(from, to) in &edges {
+            assert!(from < n && to < n && from != to, "bad edge");
+            indeg[to] += 1;
+        }
+        let mut topo: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+        let mut head = 0;
+        while head < topo.len() {
+            let u = topo[head];
+            head += 1;
+            for &(from, to) in &edges {
+                if from == u {
+                    indeg[to] -= 1;
+                    if indeg[to] == 0 {
+                        topo.push(to);
+                    }
+                }
+            }
+        }
+        assert_eq!(topo.len(), n, "pipeline graph has a cycle");
+        let mut in_edges: Vec<Vec<usize>> = vec![Vec::new(); n];
+        let mut out_edges: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for (i, &(from, to)) in edges.iter().enumerate() {
+            in_edges[to].push(i);
+            out_edges[from].push(i);
+        }
+        PipelineStructure {
+            names,
+            edges,
+            topo,
+            in_edges,
+            out_edges,
+        }
+    }
+
+    pub fn n_stages(&self) -> usize {
+        self.names.len()
+    }
+
+    pub fn n_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    pub fn stage_name(&self, u: usize) -> &'static str {
+        self.names[u]
+    }
+
+    /// Run the streaming schedule over a prepared workspace.  Reads the
+    /// chunk times / edge parameters set since [`SimWorkspace::begin`],
+    /// leaves finish/blocked/starved accounting in the workspace, and
+    /// performs no heap allocation once the workspace buffers have
+    /// reached their high-water capacity.
+    pub fn simulate(&self, ws: &mut SimWorkspace) {
+        let n = self.n_stages();
+        assert_eq!(ws.n_stages, n, "workspace prepared for a different structure");
+        let kc = ws.n_chunks;
+        assert!(kc >= 1, "pipeline needs at least one chunk");
+        let w = ws.capacity.iter().copied().max().unwrap_or(1) + 1;
+        ws.window = w;
+        reset(&mut ws.start, n * w);
+        reset(&mut ws.finish, n * w);
+        reset(&mut ws.finish_last, n);
+        reset(&mut ws.blocked, n);
+        reset(&mut ws.starved, n);
+        ws.fast_path = false;
+
+        // Periodicity detection only pays off (and is only exact enough)
+        // for constant chunk times; noisy runs take the full recurrence.
+        let detect = ws.uniform && kc > w + 1;
+        if detect {
+            reset(&mut ws.blocked_base, n);
+            reset(&mut ws.starved_base, n);
+        }
+        let mut stable_run = 0usize;
+        let mut period = f64::NAN;
+
+        for k in 0..kc {
+            let col = k % w;
+            if detect {
+                ws.blocked_base.copy_from_slice(&ws.blocked);
+                ws.starved_base.copy_from_slice(&ws.starved);
+            }
+            for &u in &self.topo {
+                let prev_done = if k == 0 {
+                    0.0
+                } else {
+                    ws.finish[u * w + (k - 1) % w]
+                };
+                // Input availability: all in-edges must have delivered
+                // chunk k (producer finish + transfer).
+                let mut ready = prev_done;
+                let mut input_at: f64 = 0.0;
+                for &ei in &self.in_edges[u] {
+                    let from = self.edges[ei].0;
+                    input_at = input_at.max(ws.finish[from * w + col] + ws.t_transfer[ei]);
+                }
+                if !self.in_edges[u].is_empty() {
+                    ws.starved[u] += (input_at - prev_done).max(0.0);
+                    ready = ready.max(input_at);
+                }
+                // Backpressure: every out-edge needs a free buffer slot.
+                let mut slot_free: f64 = 0.0;
+                for &ei in &self.out_edges[u] {
+                    let cap = ws.capacity[ei];
+                    if k >= cap {
+                        let to = self.edges[ei].1;
+                        slot_free = slot_free.max(ws.start[to * w + (k - cap) % w]);
+                    }
+                }
+                ws.blocked[u] += (slot_free - ready).max(0.0);
+                let s = ready.max(slot_free);
+                ws.start[u * w + col] = s;
+                let t = if ws.uniform {
+                    ws.t_base[u]
+                } else {
+                    ws.t_chunk[u * kc + k]
+                };
+                ws.finish[u * w + col] = s + t;
+            }
+
+            if detect && k >= 1 {
+                let pcol = (k - 1) % w;
+                let p = ws.start[col] - ws.start[pcol];
+                let mut stable = steady_eq(p, period);
+                if stable {
+                    for u in 1..n {
+                        let d = ws.start[u * w + col] - ws.start[u * w + pcol];
+                        if !steady_eq(d, p) {
+                            stable = false;
+                            break;
+                        }
+                    }
+                }
+                stable_run = if stable { stable_run + 1 } else { 0 };
+                period = p;
+                // The recurrence looks back at most `w - 1` chunks, so
+                // once every stage has advanced by the same period for a
+                // full window the regime is provably periodic: close the
+                // remaining chunks in one step.
+                if stable_run >= w && k + 1 < kc {
+                    let rem = (kc - 1 - k) as f64;
+                    for u in 0..n {
+                        ws.finish_last[u] = ws.start[u * w + col] + rem * p + ws.t_base[u];
+                        ws.blocked[u] += rem * (ws.blocked[u] - ws.blocked_base[u]);
+                        ws.starved[u] += rem * (ws.starved[u] - ws.starved_base[u]);
+                    }
+                    ws.fast_path = true;
+                    return;
+                }
+            }
+        }
+
+        let last = (kc - 1) % w;
+        for u in 0..n {
+            ws.finish_last[u] = ws.finish[u * w + last];
+        }
+    }
+}
+
+/// `v.clear()` + `v.resize(n, 0.0)`: zero-fill without giving back the
+/// allocation, so a warmed workspace never reallocates.
+#[inline]
+fn reset(v: &mut Vec<f64>, n: usize) {
+    v.clear();
+    v.resize(n, 0.0);
+}
+
+/// Reusable simulation state: per-run pipeline parameters plus every
+/// schedule buffer.  One workspace per collector; reusing it across runs
+/// is what makes the measurement path allocation-free.
+#[derive(Clone, Debug, Default)]
+pub struct SimWorkspace {
+    n_stages: usize,
+    n_chunks: usize,
+    window: usize,
+    /// True while all stages have constant per-chunk times (`t_base`);
+    /// flips to false when noise materializes `t_chunk`.
+    uniform: bool,
+    /// Per-stage constant chunk time (always filled).
+    t_base: Vec<f64>,
+    /// Row-major `n_stages × n_chunks` per-chunk times (noisy runs).
+    t_chunk: Vec<f64>,
+    /// Per-edge transfer time, in structure edge order.
+    t_transfer: Vec<f64>,
+    /// Per-edge buffer capacity (>= 1), in structure edge order.
+    capacity: Vec<usize>,
+    /// Rolling schedule windows, `n_stages × window`, column `k % window`.
+    start: Vec<f64>,
+    finish: Vec<f64>,
+    /// Outputs of the last simulate call.
+    finish_last: Vec<f64>,
+    blocked: Vec<f64>,
+    starved: Vec<f64>,
+    /// Per-chunk increment scratch for steady-state extrapolation.
+    blocked_base: Vec<f64>,
+    starved_base: Vec<f64>,
+    fast_path: bool,
+}
+
+impl SimWorkspace {
+    pub fn new() -> SimWorkspace {
+        SimWorkspace::default()
+    }
+
+    /// Start describing a run of `structure` with `n_chunks` chunks.
+    /// Stage times default to 0 and must be set via
+    /// [`set_stage_time`](Self::set_stage_time); edges default to
+    /// (0 transfer, capacity 1) and are set via [`set_edge`](Self::set_edge).
+    pub fn begin(&mut self, structure: &PipelineStructure, n_chunks: usize) {
+        assert!(n_chunks >= 1, "pipeline needs at least one chunk");
+        self.n_stages = structure.n_stages();
+        self.n_chunks = n_chunks;
+        self.uniform = true;
+        reset(&mut self.t_base, self.n_stages);
+        reset(&mut self.t_transfer, structure.n_edges());
+        self.capacity.clear();
+        self.capacity.resize(structure.n_edges(), 1);
+    }
+
+    /// Constant per-chunk processing time of stage `u`.
+    pub fn set_stage_time(&mut self, u: usize, t_chunk_s: f64) {
+        self.t_base[u] = t_chunk_s;
+    }
+
+    pub fn stage_time(&self, u: usize) -> f64 {
+        self.t_base[u]
+    }
+
+    /// Transfer time and buffer capacity of edge `ei` (structure order).
+    pub fn set_edge(&mut self, ei: usize, t_transfer_s: f64, capacity: usize) {
+        assert!(capacity >= 1, "edge capacity must be >= 1");
+        self.t_transfer[ei] = t_transfer_s;
+        self.capacity[ei] = capacity;
+    }
+
+    /// Switch to per-chunk times, materialized from the constant stage
+    /// times; individual chunks are then adjusted via
+    /// [`scale_chunk`](Self::scale_chunk) / [`set_chunk_time`](Self::set_chunk_time).
+    pub fn make_per_chunk(&mut self) {
+        self.t_chunk.clear();
+        for u in 0..self.n_stages {
+            let t = self.t_base[u];
+            self.t_chunk.resize(self.t_chunk.len() + self.n_chunks, t);
+        }
+        self.uniform = false;
+    }
+
+    /// Multiply stage `u`'s chunk `k` time by `factor` (noise).
+    pub fn scale_chunk(&mut self, u: usize, k: usize, factor: f64) {
+        debug_assert!(!self.uniform, "call make_per_chunk first");
+        self.t_chunk[u * self.n_chunks + k] *= factor;
+    }
+
+    /// Set stage `u`'s chunk `k` time outright.
+    pub fn set_chunk_time(&mut self, u: usize, k: usize, t: f64) {
+        debug_assert!(!self.uniform, "call make_per_chunk first");
+        self.t_chunk[u * self.n_chunks + k] = t;
+    }
+
+    pub fn n_chunks(&self) -> usize {
+        self.n_chunks
+    }
+
+    /// Workflow makespan of the last simulate (longest component).
+    pub fn makespan_s(&self) -> f64 {
+        self.finish_last.iter().cloned().fold(0.0, f64::max)
+    }
+
+    /// Wall-clock finish time of each stage's last chunk.
+    pub fn finish_s(&self) -> &[f64] {
+        &self.finish_last
+    }
+
+    /// Total time each stage spent blocked on backpressure.
+    pub fn blocked_s(&self) -> &[f64] {
+        &self.blocked
+    }
+
+    /// Total time each stage spent starved waiting for input.
+    pub fn starved_s(&self) -> &[f64] {
+        &self.starved
+    }
+
+    /// Whether the last simulate closed out via steady-state
+    /// extrapolation rather than iterating every chunk.
+    pub fn took_fast_path(&self) -> bool {
+        self.fast_path
+    }
+
+    /// Allocate a [`PipelineResult`] from the last simulate (tests and
+    /// diagnostics; the hot path reads the slice accessors instead).
+    pub fn result(&self) -> PipelineResult {
+        PipelineResult {
+            finish_s: self.finish_last.clone(),
+            blocked_s: self.blocked.clone(),
+            starved_s: self.starved.clone(),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::prop::{assert_close, assert_prop, check};
+    use crate::util::rng::Pcg32;
 
     fn chain(t0: f64, t1: f64, k: usize, cap: usize, xfer: f64) -> Pipeline {
         Pipeline {
@@ -358,5 +734,174 @@ mod tests {
             ],
         };
         p.simulate();
+    }
+
+    #[test]
+    #[should_panic(expected = "cycle")]
+    fn structure_cycle_detected() {
+        PipelineStructure::new(vec!["a", "b"], vec![(0, 1), (1, 0)]);
+    }
+
+    // ----- structure/workspace differential tests -----
+
+    const NAMES: [&str; 6] = ["s0", "s1", "s2", "s3", "s4", "s5"];
+
+    /// Random DAG: a spanning tree (each stage u >= 1 consumes from a
+    /// random earlier stage — chains and fan-outs), plus a few extra
+    /// forward edges so fan-*in* merges (multiple in-edges per stage)
+    /// are exercised too; random capacities and transfer times.
+    fn random_topology(rng: &mut Pcg32) -> (usize, Vec<(usize, usize)>, Vec<(f64, usize)>) {
+        let n = 2 + rng.gen_range(4) as usize;
+        let mut edges = Vec::new();
+        let mut params = Vec::new();
+        for to in 1..n {
+            let from = rng.gen_range(to as u64) as usize;
+            edges.push((from, to));
+            params.push((rng.f64() * 0.2, 1 + rng.gen_range(4) as usize));
+        }
+        for _ in 0..rng.gen_range(3) {
+            // forward edges keep the graph acyclic; duplicates of a tree
+            // edge are allowed (parallel channels with their own buffer)
+            let to = 1 + rng.gen_range(n as u64 - 1) as usize;
+            let from = rng.gen_range(to as u64) as usize;
+            edges.push((from, to));
+            params.push((rng.f64() * 0.2, 1 + rng.gen_range(4) as usize));
+        }
+        (n, edges, params)
+    }
+
+    fn reference_pipeline(
+        edges: &[(usize, usize)],
+        params: &[(f64, usize)],
+        times: &[Vec<f64>],
+    ) -> Pipeline {
+        Pipeline {
+            stages: times
+                .iter()
+                .enumerate()
+                .map(|(u, t)| Stage {
+                    name: NAMES[u].to_string(),
+                    t_chunk_s: t.clone(),
+                    nodes: 1,
+                })
+                .collect(),
+            edges: edges
+                .iter()
+                .zip(params)
+                .map(|(&(from, to), &(xfer, cap))| Edge {
+                    from,
+                    to,
+                    t_transfer_s: xfer,
+                    capacity: cap,
+                })
+                .collect(),
+        }
+    }
+
+    /// The workspace recurrence must equal the reference implementation
+    /// *bitwise* on arbitrary per-chunk times (the noisy-run hot path),
+    /// blocked/starved accounting included, with the workspace reused
+    /// across cases.
+    #[test]
+    fn simulate_workspace_equals_reference() {
+        let shared_ws = std::cell::RefCell::new(SimWorkspace::new());
+        check("workspace == reference (per-chunk times)", 60, |rng| {
+            let mut ws = shared_ws.borrow_mut();
+            let (n, edges, params) = random_topology(rng);
+            let kc = 1 + rng.gen_range(60) as usize;
+            let times: Vec<Vec<f64>> = (0..n)
+                .map(|_| (0..kc).map(|_| 0.05 + rng.f64() * 2.0).collect())
+                .collect();
+            let reference = reference_pipeline(&edges, &params, &times).simulate();
+
+            let st = PipelineStructure::new(NAMES[..n].to_vec(), edges);
+            ws.begin(&st, kc);
+            for (ei, &(xfer, cap)) in params.iter().enumerate() {
+                ws.set_edge(ei, xfer, cap);
+            }
+            ws.make_per_chunk();
+            for (u, row) in times.iter().enumerate() {
+                for (k, &t) in row.iter().enumerate() {
+                    ws.set_chunk_time(u, k, t);
+                }
+            }
+            st.simulate(&mut ws);
+            assert_prop(!ws.took_fast_path(), "noisy runs must not extrapolate")?;
+            for u in 0..n {
+                assert_prop(
+                    ws.finish_s()[u] == reference.finish_s[u],
+                    format!("finish[{u}]: {} vs {}", ws.finish_s()[u], reference.finish_s[u]),
+                )?;
+                assert_prop(
+                    ws.blocked_s()[u] == reference.blocked_s[u],
+                    format!("blocked[{u}]: {} vs {}", ws.blocked_s()[u], reference.blocked_s[u]),
+                )?;
+                assert_prop(
+                    ws.starved_s()[u] == reference.starved_s[u],
+                    format!("starved[{u}]: {} vs {}", ws.starved_s()[u], reference.starved_s[u]),
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    /// The steady-state fast path (constant chunk times) is pinned
+    /// against the exact recurrence within extrapolation tolerance.
+    #[test]
+    fn steady_state_fast_path_matches_recurrence() {
+        let shared_ws = std::cell::RefCell::new(SimWorkspace::new());
+        check("steady-state extrapolation == recurrence", 60, |rng| {
+            let mut ws = shared_ws.borrow_mut();
+            let (n, edges, params) = random_topology(rng);
+            let kc = 2 + rng.gen_range(200) as usize;
+            let times: Vec<Vec<f64>> = (0..n)
+                .map(|_| vec![0.05 + rng.f64() * 2.0; kc])
+                .collect();
+            let reference = reference_pipeline(&edges, &params, &times).simulate();
+
+            let st = PipelineStructure::new(NAMES[..n].to_vec(), edges);
+            ws.begin(&st, kc);
+            for (u, row) in times.iter().enumerate() {
+                ws.set_stage_time(u, row[0]);
+            }
+            for (ei, &(xfer, cap)) in params.iter().enumerate() {
+                ws.set_edge(ei, xfer, cap);
+            }
+            st.simulate(&mut ws);
+            for u in 0..n {
+                assert_close(ws.finish_s()[u], reference.finish_s[u], 1e-6, "finish")?;
+                assert_close(ws.blocked_s()[u], reference.blocked_s[u], 1e-6, "blocked")?;
+                assert_close(ws.starved_s()[u], reference.starved_s[u], 1e-6, "starved")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fast_path_triggers_on_long_uniform_chain() {
+        let st = PipelineStructure::new(vec!["a", "b"], vec![(0, 1)]);
+        let mut ws = SimWorkspace::new();
+        let kc = 500;
+        ws.begin(&st, kc);
+        ws.set_stage_time(0, 1.0);
+        ws.set_stage_time(1, 3.0);
+        ws.set_edge(0, 0.0, 2);
+        st.simulate(&mut ws);
+        assert!(ws.took_fast_path(), "long constant chain should extrapolate");
+        // consumer-bound: 1 + 3k (see consumer_bound_throughput)
+        let expect = 1.0 + 3.0 * kc as f64;
+        assert!(
+            (ws.makespan_s() - expect).abs() < 1e-6 * expect,
+            "{} vs {expect}",
+            ws.makespan_s()
+        );
+        // workspace reuse: a second, different run on the same buffers
+        ws.begin(&st, 10);
+        ws.set_stage_time(0, 2.0);
+        ws.set_stage_time(1, 0.5);
+        ws.set_edge(0, 0.1, 4);
+        st.simulate(&mut ws);
+        let expect2 = 2.0 * 10.0 + 0.1 + 0.5;
+        assert!((ws.makespan_s() - expect2).abs() < 1e-9, "{}", ws.makespan_s());
     }
 }

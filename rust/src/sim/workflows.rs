@@ -1,11 +1,20 @@
 //! Workflow assembly: LV / HS / GP wired onto the pipeline DES, plus
 //! isolated component runs (the collector for component-model training)
 //! and the feasibility rule (allocations ≤ 32 nodes, §7.1).
+//!
+//! The measurement hot path is allocation-free: each [`WorkflowSim`]
+//! precomputes its immutable [`PipelineStructure`] once, and
+//! [`fill_pipeline`](WorkflowSim::fill_pipeline) writes a run's
+//! parameters into a caller-owned [`SimWorkspace`].  Collectors hold one
+//! workspace and thread it through [`run_with`](WorkflowSim::run_with) /
+//! [`expected_with`](WorkflowSim::expected_with); the argument-free
+//! [`run`](WorkflowSim::run) / [`expected`](WorkflowSim::expected)
+//! wrappers build a throwaway workspace for one-off calls.
 
 use super::apps::{grayscott, heat, lammps, pdfcalc, plots, stagewrite};
 use super::machine::Machine;
 use super::measurement::Measurement;
-use super::pipeline::{Edge, Pipeline, Stage};
+use super::pipeline::{Edge, Pipeline, PipelineStructure, SimWorkspace, Stage};
 use crate::config::{Config, WorkflowId, WorkflowSpec};
 use crate::util::rng::Pcg32;
 
@@ -28,21 +37,39 @@ pub struct WorkflowSim {
     pub spec: WorkflowSpec,
     pub machine: Machine,
     pub noise_sigma: f64,
+    /// Immutable topology shared by every run of this workflow.
+    structure: PipelineStructure,
 }
 
 impl WorkflowSim {
     pub fn new(id: WorkflowId) -> Self {
+        let structure = match id {
+            WorkflowId::Lv => PipelineStructure::new(vec!["LAMMPS", "Voro++"], vec![(0, 1)]),
+            WorkflowId::Hs => {
+                PipelineStructure::new(vec!["HeatTransfer", "StageWrite"], vec![(0, 1)])
+            }
+            WorkflowId::Gp => PipelineStructure::new(
+                vec!["GrayScott", "PDFcalc", "G-Plot", "P-Plot"],
+                vec![(0, 1), (0, 2), (1, 3)],
+            ),
+        };
         WorkflowSim {
             id,
             spec: id.spec(),
             machine: Machine::default(),
             noise_sigma: DEFAULT_NOISE_SIGMA,
+            structure,
         }
     }
 
     pub fn with_noise(mut self, sigma: f64) -> Self {
         self.noise_sigma = sigma;
         self
+    }
+
+    /// The workflow's immutable pipeline topology.
+    pub fn structure(&self) -> &PipelineStructure {
+        &self.structure
     }
 
     /// Total nodes a configuration allocates (sum over components; the
@@ -100,7 +127,68 @@ impl WorkflowSim {
         panic!("{}: no feasible config for component {j}", self.id);
     }
 
-    /// Assemble the deterministic pipeline for `cfg`.
+    /// Write the deterministic pipeline parameters for `cfg` into `ws`
+    /// (stage chunk times, edge transfer times, buffer capacities) —
+    /// zero allocations once the workspace is warmed.
+    pub fn fill_pipeline(&self, cfg: &Config, ws: &mut SimWorkspace) {
+        let m = &self.machine;
+        match self.id {
+            WorkflowId::Lv => {
+                let lp = lammps::profile(self.spec.component_slice(cfg, 0), m);
+                let vp =
+                    voro::profile(self.spec.component_slice(cfg, 1), lp.bytes_per_chunk, m);
+                let xfer = transfer_time(m, lp.bytes_per_chunk, lp.nodes, vp.nodes, 1);
+                ws.begin(&self.structure, lp.n_chunks);
+                ws.set_stage_time(0, lp.t_chunk_s);
+                ws.set_stage_time(1, vp.t_chunk_s);
+                ws.set_edge(0, xfer, DEFAULT_BUFFER_SLOTS);
+            }
+            WorkflowId::Hs => {
+                let hcfg = self.spec.component_slice(cfg, 0);
+                let hp = heat::profile(hcfg, m);
+                let sp = stagewrite::profile(
+                    self.spec.component_slice(cfg, 1),
+                    hp.bytes_per_chunk,
+                    m,
+                );
+                let xfer = transfer_time(m, hp.bytes_per_chunk, hp.nodes, sp.nodes, 1)
+                    / heat::buffer_efficiency(hcfg[4]);
+                ws.begin(&self.structure, hp.n_chunks);
+                ws.set_stage_time(0, hp.t_chunk_s);
+                ws.set_stage_time(1, sp.t_chunk_s);
+                ws.set_edge(0, xfer, heat::buffer_slots(hcfg[4]));
+            }
+            WorkflowId::Gp => {
+                let gp = grayscott::profile(self.spec.component_slice(cfg, 0), m);
+                let pp = pdfcalc::profile(
+                    self.spec.component_slice(cfg, 1),
+                    gp.bytes_per_chunk,
+                    m,
+                );
+                let k = gp.n_chunks;
+                let gplot = plots::gplot_profile(k, m);
+                let pplot = plots::pplot_profile(k, m);
+                // Gray-Scott fans out to PDF and G-Plot: its NIC is shared.
+                let xfer_pdf =
+                    transfer_time(m, gp.bytes_per_chunk, gp.nodes, pp.nodes, 2);
+                let xfer_gplot = transfer_time(m, gp.bytes_per_chunk, gp.nodes, 1, 2);
+                let xfer_pplot = transfer_time(m, pp.bytes_per_chunk_out, pp.nodes, 1, 1);
+                ws.begin(&self.structure, k);
+                ws.set_stage_time(0, gp.t_chunk_s);
+                ws.set_stage_time(1, pp.t_chunk_s);
+                ws.set_stage_time(2, gplot.t_chunk_s);
+                ws.set_stage_time(3, pplot.t_chunk_s);
+                ws.set_edge(0, xfer_pdf, DEFAULT_BUFFER_SLOTS);
+                ws.set_edge(1, xfer_gplot, DEFAULT_BUFFER_SLOTS);
+                ws.set_edge(2, xfer_pplot, DEFAULT_BUFFER_SLOTS);
+            }
+        }
+    }
+
+    /// Assemble the deterministic pipeline for `cfg` — the reference
+    /// (allocation-heavy) counterpart of
+    /// [`fill_pipeline`](Self::fill_pipeline), kept for differential
+    /// tests and the benches' before/after baseline.
     pub fn build_pipeline(&self, cfg: &Config) -> Pipeline {
         let m = &self.machine;
         match self.id {
@@ -194,23 +282,40 @@ impl WorkflowSim {
         }
     }
 
-    /// One noisy in-situ run: the collector's "run the workflow with
-    /// configuration c and measure" (§2.1).
-    pub fn run(&self, cfg: &Config, rng: &mut Pcg32) -> Measurement {
-        let mut pipeline = self.build_pipeline(cfg);
-        self.apply_noise(&mut pipeline, rng);
+    /// One noisy in-situ run through a caller-owned workspace — the
+    /// collector's "run the workflow with configuration c and measure"
+    /// (§2.1).  Allocation-free once `ws` is warmed.
+    pub fn run_with(&self, cfg: &Config, rng: &mut Pcg32, ws: &mut SimWorkspace) -> Measurement {
+        self.fill_pipeline(cfg, ws);
+        self.apply_noise_ws(ws, rng);
         let nodes = self.nodes(cfg);
-        let exec = pipeline.simulate().makespan_s() + self.machine.startup_s(nodes);
+        self.structure.simulate(ws);
+        let exec = ws.makespan_s() + self.machine.startup_s(nodes);
         Measurement::new(exec, nodes, self.machine.cores_per_node)
+    }
+
+    /// Noise-free run through a caller-owned workspace (ground-truth
+    /// expectation; constant chunk times take the steady-state fast
+    /// path).
+    pub fn expected_with(&self, cfg: &Config, ws: &mut SimWorkspace) -> Measurement {
+        self.fill_pipeline(cfg, ws);
+        let nodes = self.nodes(cfg);
+        self.structure.simulate(ws);
+        let exec = ws.makespan_s() + self.machine.startup_s(nodes);
+        Measurement::new(exec, nodes, self.machine.cores_per_node)
+    }
+
+    /// One noisy in-situ run (convenience wrapper over a per-thread
+    /// scratch workspace; collectors hold their own and use
+    /// [`run_with`](Self::run_with)).
+    pub fn run(&self, cfg: &Config, rng: &mut Pcg32) -> Measurement {
+        SCRATCH.with(|ws| self.run_with(cfg, rng, &mut ws.borrow_mut()))
     }
 
     /// Noise-free run (ground-truth expectation; used by experiments to
     /// rank pool configurations reproducibly).
     pub fn expected(&self, cfg: &Config) -> Measurement {
-        let pipeline = self.build_pipeline(cfg);
-        let nodes = self.nodes(cfg);
-        let exec = pipeline.simulate().makespan_s() + self.machine.startup_s(nodes);
-        Measurement::new(exec, nodes, self.machine.cores_per_node)
+        SCRATCH.with(|ws| self.expected_with(cfg, &mut ws.borrow_mut()))
     }
 
     /// One noisy *isolated* run of configurable component `j` with its
@@ -259,7 +364,28 @@ impl WorkflowSim {
         Measurement::new(exec, nodes.max(1), m.cores_per_node)
     }
 
-    fn apply_noise(&self, pipeline: &mut Pipeline, rng: &mut Pcg32) {
+    /// Per-chunk multiplicative noise on a filled workspace: one run
+    /// factor per stage, one chunk factor per chunk.  Draw order and
+    /// arithmetic match [`apply_noise`](Self::apply_noise) exactly, so
+    /// workspace runs reproduce the reference path bit-for-bit.
+    fn apply_noise_ws(&self, ws: &mut SimWorkspace, rng: &mut Pcg32) {
+        if self.noise_sigma <= 0.0 {
+            return;
+        }
+        ws.make_per_chunk();
+        let kc = ws.n_chunks();
+        for u in 0..self.structure.n_stages() {
+            let run_factor = rng.lognormal_factor(self.noise_sigma);
+            for k in 0..kc {
+                ws.scale_chunk(u, k, run_factor * rng.lognormal_factor(self.noise_sigma * 0.5));
+            }
+        }
+    }
+
+    /// Reference-path noise application (differential tests pin
+    /// [`run_with`](Self::run_with) against `build_pipeline` +
+    /// `apply_noise` + `simulate` with the same RNG).
+    pub fn apply_noise(&self, pipeline: &mut Pipeline, rng: &mut Pcg32) {
         if self.noise_sigma <= 0.0 {
             return;
         }
@@ -273,6 +399,14 @@ impl WorkflowSim {
 }
 
 use super::apps::voro;
+
+std::thread_local! {
+    /// Per-thread scratch workspace backing the argument-free
+    /// [`WorkflowSim::run`] / [`WorkflowSim::expected`] wrappers, so
+    /// even one-off calls stop allocating once the thread is warm.
+    static SCRATCH: std::cell::RefCell<SimWorkspace> =
+        std::cell::RefCell::new(SimWorkspace::new());
+}
 
 fn stage(name: &str, t_chunk: f64, k: usize, nodes: u64) -> Stage {
     Stage {
@@ -296,6 +430,7 @@ fn transfer_time(m: &Machine, bytes: f64, nodes_from: u64, nodes_to: u64, out_de
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::prop::{assert_close, assert_prop, check};
 
     fn lv_cfg(v: &[i64]) -> Config {
         Config(v.to_vec())
@@ -432,5 +567,63 @@ mod tests {
             wf.exec_time_s,
             lam_busy
         );
+    }
+
+    /// Noisy workspace runs must reproduce the reference path
+    /// (build_pipeline + apply_noise + simulate) bit-for-bit, with one
+    /// workspace reused across every workflow and case.
+    #[test]
+    fn run_with_matches_reference_bitwise() {
+        let shared_ws = std::cell::RefCell::new(SimWorkspace::new());
+        check("run_with == reference", 24, |rng| {
+            let mut ws = shared_ws.borrow_mut();
+            let id = *rng.choose(&WorkflowId::ALL);
+            let sim = WorkflowSim::new(id);
+            let feasible = |c: &Config| sim.feasible(c);
+            let mut srng = rng.derive(1);
+            let cfg = sim.spec.sample_feasible(&mut srng, &feasible, 100_000);
+
+            let mut rng_ref = rng.derive(2);
+            let mut rng_ws = rng_ref.clone();
+            let mut pipeline = sim.build_pipeline(&cfg);
+            sim.apply_noise(&mut pipeline, &mut rng_ref);
+            let reference = pipeline.simulate();
+            let nodes = sim.nodes(&cfg);
+            let exec_ref = reference.makespan_s() + sim.machine.startup_s(nodes);
+
+            let m = sim.run_with(&cfg, &mut rng_ws, &mut ws);
+            assert_prop(
+                m.exec_time_s == exec_ref,
+                format!("{id}: exec {} vs reference {exec_ref}", m.exec_time_s),
+            )?;
+            for u in 0..sim.structure().n_stages() {
+                assert_prop(
+                    ws.blocked_s()[u] == reference.blocked_s[u]
+                        && ws.starved_s()[u] == reference.starved_s[u],
+                    format!("{id}: stage {u} blocked/starved accounting diverged"),
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    /// Noise-free workspace runs (steady-state fast path eligible) stay
+    /// within extrapolation tolerance of the reference recurrence.
+    #[test]
+    fn expected_with_matches_reference() {
+        let shared_ws = std::cell::RefCell::new(SimWorkspace::new());
+        check("expected_with == reference", 24, |rng| {
+            let mut ws = shared_ws.borrow_mut();
+            let id = *rng.choose(&WorkflowId::ALL);
+            let sim = WorkflowSim::new(id).with_noise(0.0);
+            let feasible = |c: &Config| sim.feasible(c);
+            let mut srng = rng.derive(1);
+            let cfg = sim.spec.sample_feasible(&mut srng, &feasible, 100_000);
+            let nodes = sim.nodes(&cfg);
+            let exec_ref =
+                sim.build_pipeline(&cfg).simulate().makespan_s() + sim.machine.startup_s(nodes);
+            let m = sim.expected_with(&cfg, &mut ws);
+            assert_close(m.exec_time_s, exec_ref, 1e-6, &format!("{id} expected"))
+        });
     }
 }

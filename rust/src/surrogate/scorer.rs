@@ -21,6 +21,9 @@ pub struct PoolFeatures {
     pub per_component: Vec<Vec<[f32; F_MAX]>>,
     /// Indices of the configurable components in the workflow spec.
     pub configurable: Vec<usize>,
+    /// Real (unpadded) feature count of the workflow view — lanes
+    /// `n_workflow..F_MAX` are zero padding in every row.
+    pub n_workflow: usize,
 }
 
 impl PoolFeatures {
@@ -33,6 +36,7 @@ impl PoolFeatures {
                 .map(|&j| configs.iter().map(|c| spec.encode_component(c, j)).collect())
                 .collect(),
             configurable,
+            n_workflow: spec.n_params(),
         }
     }
 
@@ -54,6 +58,7 @@ impl PoolFeatures {
                 .map(|v| idx.iter().map(|&i| v[i]).collect())
                 .collect(),
             configurable: self.configurable.clone(),
+            n_workflow: self.n_workflow,
         }
     }
 }

@@ -1,11 +1,11 @@
 //! Shared tuner infrastructure: the tuning problem, the sample pool
 //! C_pool (§5), the collector, and the Tuner trait + searcher.
 
-use std::collections::HashSet;
+use std::collections::{HashMap, HashSet};
 
 use crate::config::{Config, WorkflowId, F_MAX};
 use crate::gbt::Ensemble;
-use crate::sim::{Objective, WorkflowSim};
+use crate::sim::{Objective, SimWorkspace, WorkflowSim};
 use crate::surrogate::{PoolFeatures, Scorer};
 use crate::util::rng::Pcg32;
 use crate::util::stats;
@@ -44,6 +44,10 @@ impl Problem {
 /// configuration space from which all training samples are drawn, plus
 /// the noise-free ground truth used as the experiment test set (§7.1
 /// measures all 2000 pool configurations).
+///
+/// Pools are immutable once generated and may be shared (`Arc<Pool>`)
+/// across every algorithm and repetition of a campaign cell — see
+/// [`crate::coordinator::PoolCache`].  Tuners must never mutate a pool.
 pub struct Pool {
     pub configs: Vec<Config>,
     pub feats: PoolFeatures,
@@ -51,9 +55,15 @@ pub struct Pool {
     pub truth: Vec<f64>,
     /// Index of the best configuration in the pool.
     pub best_idx: usize,
-    /// Lazily built k-NN parameter graph (GEIST).
-    knn: std::sync::OnceLock<Vec<Vec<usize>>>,
+    /// Lazily built k-NN parameter graphs (GEIST), one per requested
+    /// `k` — pools are shared across algorithms, so callers may
+    /// legitimately disagree on `k`.  Per-k `OnceLock` slots keep the
+    /// O(n²) build outside the map lock (same pattern as the pool
+    /// cache), so readers of other `k`s never block on a build.
+    knn: std::sync::Mutex<HashMap<usize, std::sync::Arc<KnnSlot>>>,
 }
+
+type KnnSlot = std::sync::OnceLock<std::sync::Arc<Vec<Vec<usize>>>>;
 
 /// Pool size used by the paper (§7.1).
 pub const POOL_SIZE: usize = 2000;
@@ -62,6 +72,15 @@ impl Pool {
     /// Generate a deduplicated feasible pool and measure its ground
     /// truth.  Deterministic in (problem, seed).
     pub fn generate(prob: &Problem, size: usize, seed: u64) -> Pool {
+        Pool::generate_par(prob, size, seed, 1)
+    }
+
+    /// [`generate`](Self::generate) with the ground-truth measurement
+    /// (`size` noise-free simulator runs — the dominant cost) spread
+    /// across `threads` workers.  The result is identical for every
+    /// thread count: configuration sampling stays sequential, and each
+    /// config's expected measurement is deterministic.
+    pub fn generate_par(prob: &Problem, size: usize, seed: u64, threads: usize) -> Pool {
         let mut rng = Pcg32::new(seed, 0x9001);
         let spec = &prob.sim.spec;
         let mut seen: HashSet<Config> = HashSet::with_capacity(size * 2);
@@ -74,17 +93,14 @@ impl Pool {
             }
         }
         let feats = PoolFeatures::encode(spec, &configs);
-        let truth: Vec<f64> = configs
-            .iter()
-            .map(|c| prob.objective.value(&prob.sim.expected(c)))
-            .collect();
+        let truth = measure_truth(prob, &configs, threads);
         let best_idx = stats::argmin(&truth).expect("non-empty pool");
         Pool {
             configs,
             feats,
             truth,
             best_idx,
-            knn: std::sync::OnceLock::new(),
+            knn: std::sync::Mutex::new(HashMap::new()),
         }
     }
 
@@ -101,36 +117,92 @@ impl Pool {
     }
 
     /// k-nearest-neighbor graph over normalized workflow features
-    /// (GEIST's parameter graph; built once per pool).
-    pub fn knn_graph(&self, k: usize) -> &Vec<Vec<usize>> {
-        self.knn.get_or_init(|| {
-            let n = self.len();
-            let xs = &self.feats.workflow;
-            let mut graph = Vec::with_capacity(n);
-            for i in 0..n {
-                let mut dists: Vec<(f64, usize)> = (0..n)
-                    .filter(|&j| j != i)
-                    .map(|j| {
-                        let mut d = 0.0f64;
-                        for f in 0..F_MAX {
-                            let diff = (xs[i][f] - xs[j][f]) as f64;
-                            d += diff * diff;
-                        }
-                        (d, j)
-                    })
-                    .collect();
-                dists.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
-                graph.push(dists.into_iter().take(k).map(|(_, j)| j).collect());
+    /// (GEIST's parameter graph; built once per pool and `k`, then
+    /// shared — pools themselves are shared across algorithms).
+    ///
+    /// Distances accumulate only over the spec's real feature count —
+    /// the padded lanes up to `F_MAX` are zero for every row, so the
+    /// neighbor sets are unchanged — and each row uses
+    /// `select_nth_unstable` partial selection (then sorts only the `k`
+    /// kept) instead of fully sorting all `n` candidates.  Ties break by
+    /// ascending index, matching the old stable full sort.
+    pub fn knn_graph(&self, k: usize) -> std::sync::Arc<Vec<Vec<usize>>> {
+        let slot = {
+            let mut cache = self.knn.lock().unwrap();
+            std::sync::Arc::clone(cache.entry(k).or_default())
+        };
+        std::sync::Arc::clone(slot.get_or_init(|| std::sync::Arc::new(self.build_knn(k))))
+    }
+
+    /// One O(n²) graph build; see [`knn_graph`](Self::knn_graph).
+    fn build_knn(&self, k: usize) -> Vec<Vec<usize>> {
+        let n = self.len();
+        let nf = self.feats.n_workflow.min(F_MAX);
+        let xs = &self.feats.workflow;
+        let by_dist_then_index = |a: &(f64, usize), b: &(f64, usize)| {
+            a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1))
+        };
+        let mut graph = Vec::with_capacity(n);
+        let mut dists: Vec<(f64, usize)> = Vec::with_capacity(n.saturating_sub(1));
+        for i in 0..n {
+            dists.clear();
+            for j in 0..n {
+                if j == i {
+                    continue;
+                }
+                let mut d = 0.0f64;
+                for f in 0..nf {
+                    let diff = (xs[i][f] - xs[j][f]) as f64;
+                    d += diff * diff;
+                }
+                dists.push((d, j));
             }
-            graph
-        })
+            let keep = k.min(dists.len());
+            if keep > 0 && keep < dists.len() {
+                dists.select_nth_unstable_by(keep - 1, by_dist_then_index);
+            }
+            let kept = &mut dists[..keep];
+            kept.sort_unstable_by(by_dist_then_index);
+            graph.push(kept.iter().map(|&(_, j)| j).collect());
+        }
+        graph
     }
 }
 
+/// Noise-free ground truth for every config, optionally parallelized.
+/// Each worker owns one reusable simulator workspace, so the whole
+/// sweep performs O(threads) allocations regardless of pool size.
+fn measure_truth(prob: &Problem, configs: &[Config], threads: usize) -> Vec<f64> {
+    let value = |c: &Config, ws: &mut SimWorkspace| {
+        prob.objective.value(&prob.sim.expected_with(c, ws))
+    };
+    let threads = threads.clamp(1, configs.len().max(1));
+    if threads <= 1 {
+        let mut ws = SimWorkspace::new();
+        return configs.iter().map(|c| value(c, &mut ws)).collect();
+    }
+    let mut truth = vec![0.0f64; configs.len()];
+    let chunk = (configs.len() + threads - 1) / threads;
+    std::thread::scope(|scope| {
+        for (out, cfgs) in truth.chunks_mut(chunk).zip(configs.chunks(chunk)) {
+            scope.spawn(move || {
+                let mut ws = SimWorkspace::new();
+                for (o, c) in out.iter_mut().zip(cfgs) {
+                    *o = value(c, &mut ws);
+                }
+            });
+        }
+    });
+    truth
+}
+
 /// The collector (§2.1): runs the simulator and accounts for cost.
+/// Owns one [`SimWorkspace`] reused across all of its runs, so the
+/// per-sample measurement path allocates nothing after the first run.
 pub struct Collector<'a> {
     prob: &'a Problem,
     rng: Pcg32,
+    ws: SimWorkspace,
     /// Workflow runs performed.
     pub workflow_runs: usize,
     /// Component runs performed (isolated).
@@ -146,6 +218,7 @@ impl<'a> Collector<'a> {
         Collector {
             prob,
             rng,
+            ws: SimWorkspace::new(),
             workflow_runs: 0,
             component_runs: 0,
             workflow_cost: 0.0,
@@ -155,7 +228,7 @@ impl<'a> Collector<'a> {
 
     /// Run the workflow at `cfg`, returning the measured objective.
     pub fn measure(&mut self, cfg: &Config) -> f64 {
-        let m = self.prob.sim.run(cfg, &mut self.rng);
+        let m = self.prob.sim.run_with(cfg, &mut self.rng, &mut self.ws);
         let y = self.prob.objective.value(&m);
         self.workflow_runs += 1;
         self.workflow_cost += y;
@@ -257,18 +330,51 @@ pub fn predict_times(
 }
 
 /// Select `k` distinct unmeasured pool indices uniformly at random.
+///
+/// Draws the same picks (same RNG consumption) as the old
+/// "materialize the `available` vector, then `sample_indices`"
+/// implementation, but without the pool-sized allocation:
+/// [`Pcg32::sample_indices_sparse`] produces `k` distinct positions
+/// over the *virtual* array of unmeasured indices with O(k)
+/// bookkeeping, and a single scan of the index range maps each
+/// position to the corresponding unmeasured index.  O(pool) time,
+/// O(k) memory.
 pub fn random_unmeasured(
     pool: &Pool,
     measured: &HashSet<usize>,
     k: usize,
     rng: &mut Pcg32,
 ) -> Vec<usize> {
-    let available: Vec<usize> = (0..pool.len()).filter(|i| !measured.contains(i)).collect();
-    assert!(available.len() >= k, "pool exhausted");
-    rng.sample_indices(available.len(), k)
-        .into_iter()
-        .map(|i| available[i])
-        .collect()
+    debug_assert!(measured.iter().all(|&i| i < pool.len()));
+    let n_avail = pool.len() - measured.len();
+    assert!(n_avail >= k, "pool exhausted");
+    let positions = rng.sample_indices_sparse(n_avail, k);
+    // Map virtual positions (ranks among unmeasured indices) to pool
+    // indices in one pass, preserving draw order in the output.
+    let mut order: Vec<(usize, usize)> = positions
+        .iter()
+        .enumerate()
+        .map(|(slot, &p)| (p, slot))
+        .collect();
+    order.sort_unstable();
+    let mut out = vec![0usize; k];
+    let mut oi = 0;
+    let mut rank = 0;
+    for idx in 0..pool.len() {
+        if oi == order.len() {
+            break;
+        }
+        if measured.contains(&idx) {
+            continue;
+        }
+        if order[oi].0 == rank {
+            out[order[oi].1] = idx;
+            oi += 1;
+        }
+        rank += 1;
+    }
+    debug_assert_eq!(oi, order.len(), "every sampled rank must resolve");
+    out
 }
 
 /// Select the `k` best-scoring unmeasured pool indices (scores are
@@ -342,9 +448,59 @@ mod tests {
             assert_eq!(nbrs.len(), 5);
             assert!(!nbrs.contains(&i));
         }
-        // cached: same pointer
+        // cached: same graph shared, per k
         let g2 = pool.knn_graph(5);
-        assert!(std::ptr::eq(g, g2));
+        assert!(std::sync::Arc::ptr_eq(&g, &g2));
+        let g3 = pool.knn_graph(3);
+        assert_eq!(g3[0].len(), 3, "different k builds its own graph");
+        assert!(std::sync::Arc::ptr_eq(&g, &pool.knn_graph(5)));
+    }
+
+    /// The partial-selection kNN over real features must equal the old
+    /// full sort over all F_MAX padded lanes, neighbor order included.
+    #[test]
+    fn knn_graph_equals_full_sort_reference() {
+        for (wf, seed, k) in [
+            (WorkflowId::Lv, 13u64, 5usize),
+            (WorkflowId::Hs, 14, 10),
+            (WorkflowId::Gp, 15, 7),
+        ] {
+            let prob = Problem::new(wf, Objective::ExecTime);
+            let pool = Pool::generate(&prob, 60, seed);
+            let xs = &pool.feats.workflow;
+            let reference: Vec<Vec<usize>> = (0..pool.len())
+                .map(|i| {
+                    let mut dists: Vec<(f64, usize)> = (0..pool.len())
+                        .filter(|&j| j != i)
+                        .map(|j| {
+                            let mut d = 0.0f64;
+                            for f in 0..F_MAX {
+                                let diff = (xs[i][f] - xs[j][f]) as f64;
+                                d += diff * diff;
+                            }
+                            (d, j)
+                        })
+                        .collect();
+                    dists.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+                    dists.into_iter().take(k).map(|(_, j)| j).collect()
+                })
+                .collect();
+            assert_eq!(&*pool.knn_graph(k), &reference, "{wf} k={k}");
+        }
+    }
+
+    /// Parallel ground-truth measurement must be invisible: bit-identical
+    /// pools for any worker count.
+    #[test]
+    fn generate_par_equals_serial() {
+        let prob = toy_problem();
+        let serial = Pool::generate(&prob, 60, 17);
+        for threads in [2usize, 3, 7] {
+            let par = Pool::generate_par(&prob, 60, 17, threads);
+            assert_eq!(serial.configs, par.configs, "threads={threads}");
+            assert_eq!(serial.truth, par.truth, "threads={threads}");
+            assert_eq!(serial.best_idx, par.best_idx, "threads={threads}");
+        }
     }
 
     #[test]
@@ -377,6 +533,51 @@ mod tests {
         measured.insert(4);
         let t2 = top_unmeasured(&scores, &measured, 3);
         assert_eq!(t2, vec![3, 5, 6]);
+    }
+
+    /// The sparse-Fisher-Yates `random_unmeasured` must keep the picks
+    /// of the old materialize-then-`sample_indices` implementation for
+    /// every seed — selection changes would silently reshuffle every
+    /// downstream campaign.
+    #[test]
+    fn random_unmeasured_keeps_existing_picks() {
+        fn reference(
+            pool: &Pool,
+            measured: &HashSet<usize>,
+            k: usize,
+            rng: &mut Pcg32,
+        ) -> Vec<usize> {
+            let available: Vec<usize> =
+                (0..pool.len()).filter(|i| !measured.contains(i)).collect();
+            assert!(available.len() >= k, "pool exhausted");
+            rng.sample_indices(available.len(), k)
+                .into_iter()
+                .map(|i| available[i])
+                .collect()
+        }
+
+        let prob = toy_problem();
+        let pool = Pool::generate(&prob, 50, 18);
+        crate::util::prop::check("random_unmeasured picks", 40, |rng| {
+            let n_meas = rng.gen_range(30) as usize;
+            let measured: HashSet<usize> = (0..n_meas)
+                .map(|_| rng.gen_range(pool.len() as u64) as usize)
+                .collect();
+            let k = rng.gen_range((pool.len() - measured.len()) as u64 + 1) as usize;
+            let mut r1 = rng.derive(1);
+            let mut r2 = r1.clone();
+            let new = random_unmeasured(&pool, &measured, k, &mut r1);
+            let old = reference(&pool, &measured, k, &mut r2);
+            crate::util::prop::assert_prop(
+                new == old,
+                format!("picks diverged: {new:?} vs {old:?}"),
+            )?;
+            // both must have consumed the same amount of randomness
+            crate::util::prop::assert_prop(
+                r1.next_u64() == r2.next_u64(),
+                "RNG consumption diverged",
+            )
+        });
     }
 
     #[test]

@@ -165,8 +165,9 @@ mod tests {
         let scores = g.propagate(&pool, &labels);
         assert_eq!(scores[pool.best_idx], 1.0);
         // neighbors of the best should score higher than neighbors of the worst
-        let gb = &pool.knn_graph(g.knn)[pool.best_idx];
-        let gw = &pool.knn_graph(g.knn)[worst];
+        let graph = pool.knn_graph(g.knn);
+        let gb = &graph[pool.best_idx];
+        let gw = &graph[worst];
         let avg_b: f64 = gb.iter().map(|&i| scores[i]).sum::<f64>() / gb.len() as f64;
         let avg_w: f64 = gw.iter().map(|&i| scores[i]).sum::<f64>() / gw.len() as f64;
         assert!(avg_b > avg_w, "{avg_b} vs {avg_w}");

@@ -157,6 +157,29 @@ impl Pcg32 {
         idx
     }
 
+    /// [`sample_indices`](Self::sample_indices) with O(k) bookkeeping
+    /// instead of materializing the `n`-element index array: the swaps
+    /// of the virtual array are tracked sparsely.  Same draw sequence,
+    /// same result, for callers where `k ≪ n` (pinned by a test below).
+    pub fn sample_indices_sparse(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "cannot sample {k} from {n}");
+        // swaps[p] = value currently at virtual position p (positions
+        // absent from the map still hold their own index).
+        let mut swaps: std::collections::HashMap<usize, usize> =
+            std::collections::HashMap::with_capacity(2 * k);
+        let mut out = Vec::with_capacity(k);
+        for i in 0..k {
+            let j = i + self.gen_range((n - i) as u64) as usize;
+            let vi = *swaps.get(&i).unwrap_or(&i);
+            let vj = *swaps.get(&j).unwrap_or(&j);
+            swaps.insert(j, vi);
+            // position i is never revisited (later draws touch j >= i+1),
+            // so vj is this slot's final value
+            out.push(vj);
+        }
+        out
+    }
+
     /// Pick one element uniformly.
     pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
         assert!(!xs.is_empty());
@@ -252,6 +275,26 @@ mod tests {
         sorted.dedup();
         assert_eq!(sorted.len(), 30);
         assert!(idx.iter().all(|&i| i < 100));
+    }
+
+    #[test]
+    fn sample_indices_sparse_matches_dense() {
+        // the sparse variant must stay draw-for-draw identical to the
+        // dense one — other modules rely on the shared RNG stream
+        let mut root = Pcg32::new(44, 4);
+        for _ in 0..50 {
+            let n = 1 + root.gen_range(200) as usize;
+            let k = root.gen_range(n as u64 + 1) as usize;
+            let mut dense_rng = root.derive(n as u64 ^ (k as u64) << 32);
+            let mut sparse_rng = dense_rng.clone();
+            assert_eq!(
+                dense_rng.sample_indices(n, k),
+                sparse_rng.sample_indices_sparse(n, k),
+                "n={n} k={k}"
+            );
+            // identical RNG consumption too
+            assert_eq!(dense_rng.next_u64(), sparse_rng.next_u64(), "n={n} k={k}");
+        }
     }
 
     #[test]

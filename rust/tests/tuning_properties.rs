@@ -7,7 +7,7 @@ use std::collections::HashSet;
 use ceal::config::{Config, WorkflowId, F_MAX};
 use ceal::gbt::{train, train_exact, train_log, Ensemble, GbtParams};
 use ceal::metrics::{mdape, recall_score};
-use ceal::sim::Objective;
+use ceal::sim::{Objective, SimWorkspace};
 use ceal::surrogate::Scorer;
 use ceal::tuner::{
     ActiveLearning, Alph, Ceal, CealParams, Geist, Pool, Problem, RandomSampling, Tuner,
@@ -82,6 +82,56 @@ fn pool_invariants() {
         }
         let best = a.best_value();
         assert_prop(a.truth.iter().all(|&v| v >= best), "best_value not minimal")
+    });
+}
+
+/// Reusing one simulator workspace across runs (the collector's hot
+/// path) must be observationally identical to a fresh workspace per
+/// call, for noisy and noise-free runs alike.
+#[test]
+fn workspace_reuse_is_invisible() {
+    check("reused workspace == fresh workspace", 12, |rng| {
+        let prob = any_problem(rng);
+        let feasible = |c: &Config| prob.sim.feasible(c);
+        let mut cfg_rng = rng.derive(3);
+        let cfgs: Vec<Config> = (0..5)
+            .map(|_| prob.sim.spec.sample_feasible(&mut cfg_rng, &feasible, 100_000))
+            .collect();
+        let mut ws = SimWorkspace::new();
+        let mut r_reused = rng.derive(4);
+        let mut r_fresh = r_reused.clone();
+        for cfg in &cfgs {
+            let reused = prob.sim.run_with(cfg, &mut r_reused, &mut ws);
+            let fresh = prob.sim.run_with(cfg, &mut r_fresh, &mut SimWorkspace::new());
+            assert_prop(
+                reused == fresh,
+                format!("noisy run diverged: {reused:?} vs {fresh:?}"),
+            )?;
+            let e_reused = prob.sim.expected_with(cfg, &mut ws);
+            let e_fresh = prob.sim.expected(cfg);
+            assert_prop(
+                e_reused == e_fresh,
+                format!("expected run diverged: {e_reused:?} vs {e_fresh:?}"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+/// Pool ground truth is measured in parallel on cache misses; the
+/// result must be bit-identical for every worker count.
+#[test]
+fn pool_parallel_truth_matches_serial() {
+    check("generate_par == generate", 6, |rng| {
+        let prob = any_problem(rng);
+        let seed = rng.next_u64();
+        let n = 30 + rng.gen_range(50) as usize;
+        let serial = Pool::generate(&prob, n, seed);
+        let threads = 2 + rng.gen_range(6) as usize;
+        let par = Pool::generate_par(&prob, n, seed, threads);
+        assert_prop(serial.configs == par.configs, "configs diverged")?;
+        assert_prop(serial.truth == par.truth, "truth diverged")?;
+        assert_prop(serial.best_idx == par.best_idx, "best_idx diverged")
     });
 }
 
