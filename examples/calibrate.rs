@@ -7,18 +7,18 @@ fn main() {
     println!("voro t1(64,16,1)={:.3} t4(64,16,4)={:.3}", v(&[64,16,1]), v(&[64,16,4]));
     let gs = |cfg: &[i64]| { let p = grayscott::profile(cfg, &m); p.n_chunks as f64 * p.t_chunk_s };
     println!("gs busy(35,35)={:.1} (66,34)={:.1} (175,13)={:.1} (525,35)={:.1}", gs(&[35,35]), gs(&[66,34]), gs(&[175,13]), gs(&[525,35]));
-    let lv = WorkflowSim::new(WorkflowId::Lv).with_noise(0.0);
+    let lv = WorkflowSim::new(WorkflowId::LV).with_noise(0.0);
     let e = |s: &WorkflowSim, c: &[i64]| s.expected(&Config(c.to_vec()));
     let b = e(&lv, &[430,23,1,300,88,10,4]); let x = e(&lv, &[288,18,2,400,288,18,2]);
     println!("LV exec best={:.1}s({}n {:.2}ch) expert={:.1}s({}n {:.2}ch)", b.exec_time_s, b.nodes, b.computer_time_core_h, x.exec_time_s, x.nodes, x.computer_time_core_h);
     let bc = e(&lv, &[175,35,2,400,38,29,3]); let xc = e(&lv, &[18,18,2,400,18,18,2]);
     println!("LV comp best={:.2}ch({:.0}s {}n) expert={:.2}ch({:.0}s {}n)", bc.computer_time_core_h, bc.exec_time_s, bc.nodes, xc.computer_time_core_h, xc.exec_time_s, xc.nodes);
-    let hs = WorkflowSim::new(WorkflowId::Hs).with_noise(0.0);
+    let hs = WorkflowSim::new(WorkflowId::HS).with_noise(0.0);
     let hb = e(&hs, &[13,17,14,4,29,19,3]); let hx = e(&hs, &[32,17,34,4,20,560,35]);
     println!("HS exec best={:.2}s({:.3}ch {}n) expert={:.2}s({:.3}ch {}n)", hb.exec_time_s, hb.computer_time_core_h, hb.nodes, hx.exec_time_s, hx.computer_time_core_h, hx.nodes);
     let hbc = e(&hs, &[5,25,35,4,3,5,3]); let hxc = e(&hs, &[8,4,32,4,20,35,35]);
     println!("HS comp best={:.3}ch({:.0}s {}n) expert={:.3}ch({:.0}s {}n)", hbc.computer_time_core_h, hbc.exec_time_s, hbc.nodes, hxc.computer_time_core_h, hxc.exec_time_s, hxc.nodes);
-    let gp = WorkflowSim::new(WorkflowId::Gp).with_noise(0.0);
+    let gp = WorkflowSim::new(WorkflowId::GP).with_noise(0.0);
     let gb = e(&gp, &[175,13,24,23]); let gx = e(&gp, &[525,35,525,35]);
     println!("GP exec best={:.1}s({}n) expert={:.1}s({}n)", gb.exec_time_s, gb.nodes, gx.exec_time_s, gx.nodes);
     let gbc = e(&gp, &[66,34,41,22]); let gxc = e(&gp, &[35,35,35,35]);

@@ -14,7 +14,7 @@ use ceal::util::rng::Pcg32;
 fn main() {
     // A tuning problem: workflow LV (LAMMPS + Voro++), minimize
     // computer time (core-hours).
-    let prob = Problem::new(WorkflowId::Lv, Objective::CompTime);
+    let prob = Problem::new(WorkflowId::LV, Objective::CompTime);
 
     // Run the simulator once at an arbitrary configuration.
     let cfg = ceal::config::Config(vec![128, 16, 2, 200, 64, 16, 2]);

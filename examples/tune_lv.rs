@@ -42,7 +42,7 @@ fn main() {
         for algo in [Algo::Rs, Algo::Geist, Algo::Al, Algo::Ceal] {
             // PJRT scorer on a single worker: the compiled artifacts are
             // reused across all repetitions.
-            let campaign = Campaign::new(WorkflowId::Lv, objective, m)
+            let campaign = Campaign::new(WorkflowId::LV, objective, m)
                 .with_reps(reps)
                 .with_scorer(ScorerKind::Pjrt)
                 .with_threads(1);

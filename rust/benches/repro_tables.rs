@@ -16,6 +16,16 @@ fn quick_ctx() -> ExpCtx {
     ctx
 }
 
+/// One reduced campaign cell (CEAL + RS) on a registry scenario —
+/// keeps BENCH rows tracking the non-paper workflows end to end.
+fn scenario_cell(wf: ceal::config::WorkflowId, ctx: &ExpCtx) {
+    use ceal::coordinator::Algo;
+    use ceal::sim::Objective;
+    for algo in [Algo::Ceal, Algo::Rs] {
+        ctx.run_cell(algo, wf, Objective::ExecTime, 20);
+    }
+}
+
 /// Silence the experiment's stdout chatter while timing it.
 fn main() {
     let ctx = quick_ctx();
@@ -32,5 +42,11 @@ fn main() {
     b.bench("repro/fig11", || exper::fig11::run(&ctx));
     b.bench("repro/fig12", || exper::fig12::run(&ctx));
     b.bench("repro/fig13", || exper::fig13::run(&ctx));
+    b.bench("repro/scenario_ch5", || {
+        scenario_cell(ceal::config::WorkflowId::CH5, &ctx)
+    });
+    b.bench("repro/scenario_dm4", || {
+        scenario_cell(ceal::config::WorkflowId::DM4, &ctx)
+    });
     println!("\n(reduced settings: reps=3, pool=400 — `ceal all` runs the full versions)");
 }

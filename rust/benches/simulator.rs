@@ -22,7 +22,8 @@ use ceal::util::rng::Pcg32;
 
 fn main() {
     let mut b = Bencher::from_env(3, 30);
-    for id in WorkflowId::ALL {
+    // every registered workflow: the paper trio + CH5/DM4 scenarios
+    for id in ceal::sim::WorkflowRegistry::global().ids() {
         let prob = Problem::new(id, Objective::ExecTime);
         let mut rng = Pcg32::new(1, 0);
         let feasible = |c: &ceal::config::Config| prob.sim.feasible(c);
@@ -62,7 +63,7 @@ fn main() {
             prob.sim.build_pipeline(&cfgs[k]).simulate()
         });
     }
-    let prob = Problem::new(WorkflowId::Lv, Objective::CompTime);
+    let prob = Problem::new(WorkflowId::LV, Objective::CompTime);
     let mut bslow = Bencher::from_env(1, 5);
     bslow.bench_items("pool/generate2000_with_truth", 2000.0, || {
         Pool::generate(&prob, 2000, 7)

@@ -12,7 +12,7 @@ use ceal::util::bench::Bencher;
 use ceal::util::rng::Pcg32;
 
 fn main() {
-    let prob = Problem::new(WorkflowId::Lv, Objective::CompTime);
+    let prob = Problem::new(WorkflowId::LV, Objective::CompTime);
     let pool = Pool::generate(&prob, 2000, 0xCEA1);
     pool.knn_graph(10); // prebuild GEIST's graph, as campaigns do
     let scorer = Scorer::Native;
@@ -31,5 +31,24 @@ fn main() {
             let mut rng = Pcg32::new(0xBEEF ^ rep, 0);
             tuner.run(&prob, &pool, &scorer, 50, &mut rng)
         });
+    }
+
+    // Registry-added scenario cells (CEAL vs RS) so new-workflow wiring
+    // shows up in every bench run: the CH5 deep chain and DM4 diamond.
+    for id in [WorkflowId::CH5, WorkflowId::DM4] {
+        let prob = Problem::new(id, Objective::ExecTime);
+        let pool = Pool::generate(&prob, 1000, 0xCEA1);
+        let pair: Vec<(&str, Box<dyn Tuner>)> = vec![
+            ("RS", Box::new(RandomSampling)),
+            ("CEAL", Box::new(Ceal::new(CealParams::no_hist()))),
+        ];
+        for (name, tuner) in &pair {
+            let mut rep = 0u64;
+            b.bench(&format!("tuner/{name}/{id}_m30_pool1000"), || {
+                rep += 1;
+                let mut rng = Pcg32::new(0xBEEF ^ rep, 1);
+                tuner.run(&prob, &pool, &scorer, 30, &mut rng)
+            });
+        }
     }
 }

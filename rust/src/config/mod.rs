@@ -8,5 +8,5 @@ pub mod space;
 pub mod spaces;
 
 pub use param::{ParamDef, ParamValues};
-pub use space::{ComponentSpec, Config, WorkflowSpec, F_MAX};
+pub use space::{ComponentSpec, Config, InfeasibleSpace, WorkflowSpec, F_MAX};
 pub use spaces::{gp_spec, hs_spec, lv_spec, spec_by_name, WorkflowId};

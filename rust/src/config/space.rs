@@ -33,6 +33,37 @@ impl std::fmt::Display for Config {
     }
 }
 
+/// A feasibility rejection-sampler exhausted its budget: the scope's
+/// slice of the configuration space admits no runnable configuration
+/// under the active filter (typically the machine's allocation cap).
+/// Registered workflows can legitimately have tight feasibility, so
+/// both the joint sampler ([`WorkflowSpec::try_sample_feasible`]) and
+/// the per-component sampler
+/// ([`WorkflowSim::sample_component_feasible`]) surface this one
+/// matchable error instead of panicking deep inside a campaign.
+///
+/// [`WorkflowSim::sample_component_feasible`]: crate::sim::WorkflowSim::sample_component_feasible
+#[derive(Clone, Debug)]
+pub struct InfeasibleSpace {
+    /// The workflow (space) being sampled.
+    pub workflow: String,
+    /// What was being sampled ("component 2 (Feature)" or "joint space").
+    pub scope: String,
+    pub tries: usize,
+}
+
+impl std::fmt::Display for InfeasibleSpace {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}: no feasible configuration for {} in {} draws",
+            self.workflow, self.scope, self.tries
+        )
+    }
+}
+
+impl std::error::Error for InfeasibleSpace {}
+
 /// One component application's configurable view.
 #[derive(Clone, Debug)]
 pub struct ComponentSpec {
@@ -149,24 +180,39 @@ impl WorkflowSpec {
 
     /// Rejection-sample a configuration satisfying `feasible` (the
     /// paper's pools contain only runnable <= 32-node configs).
-    /// Panics after `max_tries` rejections — a sign the filter is
-    /// inconsistent with the space.
+    /// Errors after `max_tries` rejections — a sign the filter is
+    /// inconsistent with the space (registered workflows can have
+    /// arbitrarily tight feasibility).
+    pub fn try_sample_feasible(
+        &self,
+        rng: &mut Pcg32,
+        feasible: &dyn Fn(&Config) -> bool,
+        max_tries: usize,
+    ) -> Result<Config, InfeasibleSpace> {
+        for _ in 0..max_tries {
+            let c = self.sample(rng);
+            if feasible(&c) {
+                return Ok(c);
+            }
+        }
+        Err(InfeasibleSpace {
+            workflow: self.name.clone(),
+            scope: "joint space".to_string(),
+            tries: max_tries,
+        })
+    }
+
+    /// [`try_sample_feasible`](Self::try_sample_feasible), panicking on
+    /// exhaustion (legacy convenience for callers with known-good
+    /// spaces).
     pub fn sample_feasible(
         &self,
         rng: &mut Pcg32,
         feasible: &dyn Fn(&Config) -> bool,
         max_tries: usize,
     ) -> Config {
-        for _ in 0..max_tries {
-            let c = self.sample(rng);
-            if feasible(&c) {
-                return c;
-            }
-        }
-        panic!(
-            "{}: no feasible configuration found in {max_tries} draws",
-            self.name
-        );
+        self.try_sample_feasible(rng, feasible, max_tries)
+            .unwrap_or_else(|e| panic!("{e}"))
     }
 
     /// Validate that every value in `cfg` is admissible.

@@ -1,6 +1,16 @@
 //! The paper's three workflows (Table 1): LV, HS and GP parameter
 //! spaces, exactly as published.
 //!
+//! These spaces are the Table-1 *data* only — **one registry instance
+//! among several**.  Workflow identity, topology, profiles and
+//! everything behavioural live in the declarative tables under
+//! [`crate::sim::defs`], which zip these specs with profile/allocation
+//! rules and register them in the process-wide
+//! [`WorkflowRegistry`](crate::sim::WorkflowRegistry) next to the
+//! synthetic scenario families (CH5, DM4).  [`WorkflowId`] is a thin
+//! alias over a registered name; resolving one goes through the
+//! registry, never through a hardcoded branch.
+//!
 //! | Wf | Component   | Parameters                                        |
 //! |----|-------------|---------------------------------------------------|
 //! | LV | LAMMPS      | procs 2..1085, ppn 1..35, tpp 1..4, io 50..400/50 |
@@ -16,48 +26,7 @@
 use super::param::ParamDef;
 use super::space::{ComponentSpec, WorkflowSpec};
 
-/// Workflow identifier used across the experiment harness.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
-pub enum WorkflowId {
-    Lv,
-    Hs,
-    Gp,
-}
-
-impl WorkflowId {
-    pub const ALL: [WorkflowId; 3] = [WorkflowId::Lv, WorkflowId::Hs, WorkflowId::Gp];
-
-    pub fn name(&self) -> &'static str {
-        match self {
-            WorkflowId::Lv => "LV",
-            WorkflowId::Hs => "HS",
-            WorkflowId::Gp => "GP",
-        }
-    }
-
-    pub fn from_name(name: &str) -> Option<WorkflowId> {
-        match name.to_ascii_uppercase().as_str() {
-            "LV" => Some(WorkflowId::Lv),
-            "HS" => Some(WorkflowId::Hs),
-            "GP" => Some(WorkflowId::Gp),
-            _ => None,
-        }
-    }
-
-    pub fn spec(&self) -> WorkflowSpec {
-        match self {
-            WorkflowId::Lv => lv_spec(),
-            WorkflowId::Hs => hs_spec(),
-            WorkflowId::Gp => gp_spec(),
-        }
-    }
-}
-
-impl std::fmt::Display for WorkflowId {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        f.write_str(self.name())
-    }
-}
+pub use crate::sim::registry::WorkflowId;
 
 /// LV: LAMMPS molecular dynamics + Voro++ tesselation via staging.
 pub fn lv_spec() -> WorkflowSpec {
@@ -128,7 +97,8 @@ pub fn gp_spec() -> WorkflowSpec {
     )
 }
 
-/// Look up a spec by its paper name (LV / HS / GP).
+/// Look up any *registered* workflow's spec by name (LV / HS / GP /
+/// CH5 / DM4 / anything registered later), via the registry.
 pub fn spec_by_name(name: &str) -> Option<WorkflowSpec> {
     WorkflowId::from_name(name).map(|id| id.spec())
 }
@@ -188,11 +158,17 @@ mod tests {
     }
 
     #[test]
-    fn names_roundtrip() {
+    fn names_resolve_through_the_registry() {
         for id in WorkflowId::ALL {
             assert_eq!(WorkflowId::from_name(id.name()), Some(id));
+            // specs resolve through the registry, matching the Table 1
+            // data above for the paper trio
+            assert_eq!(spec_by_name(id.name()).unwrap().name, id.name());
         }
-        assert_eq!(WorkflowId::from_name("lv"), Some(WorkflowId::Lv));
+        assert_eq!(WorkflowId::from_name("lv"), Some(WorkflowId::LV));
         assert_eq!(WorkflowId::from_name("zz"), None);
+        // registered synthetic scenarios resolve too
+        assert!(spec_by_name("CH5").is_some());
+        assert!(spec_by_name("dm4").is_some());
     }
 }

@@ -368,7 +368,7 @@ mod tests {
     use super::*;
 
     fn tiny_campaign(algo: Algo) -> Aggregate {
-        let c = Campaign::new(WorkflowId::Lv, Objective::CompTime, 20)
+        let c = Campaign::new(WorkflowId::LV, Objective::CompTime, 20)
             .with_reps(3)
             .with_pool_size(120)
             .with_threads(1);
@@ -388,7 +388,7 @@ mod tests {
 
     #[test]
     fn parallel_equals_sequential() {
-        let base = Campaign::new(WorkflowId::Hs, Objective::ExecTime, 15)
+        let base = Campaign::new(WorkflowId::HS, Objective::ExecTime, 15)
             .with_reps(4)
             .with_pool_size(100);
         let seq = run_campaign(Algo::Ceal, &base.with_threads(1));
@@ -413,7 +413,7 @@ mod tests {
         use crate::coordinator::{PoolCache, PoolKey};
         use crate::tuner::Problem;
         // a seed no other test uses, so the global cache entry is ours
-        let c = Campaign::new(WorkflowId::Hs, Objective::CompTime, 10)
+        let c = Campaign::new(WorkflowId::HS, Objective::CompTime, 10)
             .with_reps(2)
             .with_pool_size(60)
             .with_threads(1);

@@ -1,35 +1,33 @@
-//! Expert-recommended configurations (paper Table 2) — the baseline the
-//! least-number-of-uses metric measures improvement against.
+//! Expert-recommended configurations — the baseline the
+//! least-number-of-uses metric measures improvement against.  Resolved
+//! through the workflow registry: each [`WorkflowDef`] table carries
+//! its per-objective expert pick (paper Table 2 for the LV/HS/GP trio;
+//! hand-picked mid-range configurations for synthetic scenarios).
+//!
+//! [`WorkflowDef`]: crate::sim::WorkflowDef
 
 use crate::config::{Config, WorkflowId};
 use crate::sim::Objective;
 
-/// The Table 2 expert recommendation for (workflow, objective).
+/// The registered expert recommendation for (workflow, objective).
 pub fn expert_config(id: WorkflowId, objective: Objective) -> Config {
-    match (id, objective) {
-        (WorkflowId::Lv, Objective::ExecTime) => {
-            Config(vec![288, 18, 2, 400, 288, 18, 2])
-        }
-        (WorkflowId::Lv, Objective::CompTime) => Config(vec![18, 18, 2, 400, 18, 18, 2]),
-        (WorkflowId::Hs, Objective::ExecTime) => {
-            Config(vec![32, 17, 34, 4, 20, 560, 35])
-        }
-        (WorkflowId::Hs, Objective::CompTime) => Config(vec![8, 4, 32, 4, 20, 35, 35]),
-        // Table 2 lists PDF procs = 525, but Table 1 bounds the PDF
-        // calculator at 512 processes — we clamp to the space.
-        (WorkflowId::Gp, Objective::ExecTime) => Config(vec![525, 35, 512, 35]),
-        (WorkflowId::Gp, Objective::CompTime) => Config(vec![35, 35, 35, 35]),
-    }
+    let def = id.def();
+    Config(match objective {
+        Objective::ExecTime => def.expert_exec.clone(),
+        Objective::CompTime => def.expert_comp.clone(),
+    })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sim::WorkflowRegistry;
     use crate::tuner::Problem;
 
     #[test]
     fn expert_configs_valid_and_feasible() {
-        for id in WorkflowId::ALL {
+        // every *registered* workflow, not just the paper trio
+        for id in WorkflowRegistry::global().ids() {
             for obj in Objective::ALL {
                 let prob = Problem::new(id, obj);
                 let cfg = expert_config(id, obj);

@@ -21,7 +21,13 @@ pub fn historical_samples(prob: &Problem, n: usize, seed: u64) -> Vec<ComponentS
         let mut samples = ComponentSamples::default();
         for _ in 0..n {
             // historical runs happened on the same <=32-node testbed
-            let cfg = prob.sim.sample_component_feasible(comp, &mut rng);
+            let cfg = match prob.sim.sample_component_feasible(comp, &mut rng) {
+                Ok(c) => c,
+                Err(e) => {
+                    eprintln!("warning: {e}; historical set truncated at {}", samples.len());
+                    break;
+                }
+            };
             let m = prob.sim.run_component(comp, &cfg, &mut rng);
             samples.push(cs.encode(&cfg), prob.objective.value(&m));
         }
@@ -38,7 +44,7 @@ mod tests {
 
     #[test]
     fn generates_per_component() {
-        let prob = Problem::new(WorkflowId::Gp, Objective::ExecTime);
+        let prob = Problem::new(WorkflowId::GP, Objective::ExecTime);
         let h = historical_samples(&prob, 30, 1);
         assert_eq!(h.len(), 2); // GS + PDF configurable
         for s in &h {
@@ -49,7 +55,7 @@ mod tests {
 
     #[test]
     fn deterministic() {
-        let prob = Problem::new(WorkflowId::Lv, Objective::CompTime);
+        let prob = Problem::new(WorkflowId::LV, Objective::CompTime);
         let a = historical_samples(&prob, 10, 5);
         let b = historical_samples(&prob, 10, 5);
         assert_eq!(a[0].y, b[0].y);

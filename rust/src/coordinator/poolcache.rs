@@ -24,8 +24,11 @@ use crate::config::WorkflowId;
 use crate::sim::Objective;
 use crate::tuner::{Pool, Problem};
 
-/// Cache key for a pool cell.  Valid only for problems built by
-/// `Problem::new` on the default [`Machine`](crate::sim::Machine):
+/// Cache key for a pool cell, keyed by the workflow's *registry name*
+/// (a [`WorkflowId`] is a thin alias over one) — any registered
+/// workflow, built-in or user-added, caches the same way.  Valid only
+/// for problems built by `Problem::new` on the default
+/// [`Machine`](crate::sim::Machine):
 /// pool ground truth also depends on the (publicly mutable) machine and
 /// spec fields of `WorkflowSim`, which the key deliberately does not
 /// capture — problems with a customized machine or spec must bypass the
@@ -112,6 +115,37 @@ impl PoolCache {
         Arc::clone(pool)
     }
 
+    /// Fallible counterpart of [`get_or_generate`](Self::get_or_generate):
+    /// a workflow whose space admits no feasible configuration surfaces
+    /// as an `Err` instead of panicking inside the campaign (the CLI
+    /// pre-flights pools through this before `run_campaign`).  On a
+    /// lost publication race the duplicate build is dropped — the
+    /// strict build-once guarantee stays with `get_or_generate`, whose
+    /// `OnceLock` initializer blocks duplicates.
+    pub fn try_get_or_generate(
+        &self,
+        prob: &Problem,
+        pool_size: usize,
+        seed: u64,
+        threads: usize,
+    ) -> Result<Arc<Pool>, crate::sim::InfeasibleSpace> {
+        debug_assert!(
+            prob.sim.machine == crate::sim::Machine::default(),
+            "PoolCache keys don't capture a customized Machine — use Pool::generate_par directly"
+        );
+        let key = PoolKey::for_problem(prob, pool_size, seed);
+        let slot = {
+            let mut map = self.map.lock().unwrap();
+            Arc::clone(map.entry(key).or_default())
+        };
+        if let Some(pool) = slot.pool.get() {
+            slot.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(Arc::clone(pool));
+        }
+        let fresh = Arc::new(Pool::try_generate_par(prob, pool_size, seed, threads)?);
+        Ok(Arc::clone(slot.pool.get_or_init(|| fresh)))
+    }
+
     /// How many times `key` was served from cache (None = never built).
     /// Test/diagnostic instrumentation for the "pool built exactly once
     /// per cell" invariant.
@@ -151,7 +185,7 @@ mod tests {
     use super::*;
 
     fn prob() -> Problem {
-        Problem::new(WorkflowId::Lv, Objective::CompTime)
+        Problem::new(WorkflowId::LV, Objective::CompTime)
     }
 
     /// Cached pools must be indistinguishable from fresh generation —
@@ -185,7 +219,7 @@ mod tests {
     fn distinct_cells_do_not_collide() {
         let cache = PoolCache::new();
         let p = prob();
-        let exec = Problem::new(WorkflowId::Lv, Objective::ExecTime);
+        let exec = Problem::new(WorkflowId::LV, Objective::ExecTime);
         let a = cache.get_or_generate(&p, 30, 1, 1);
         let b = cache.get_or_generate(&exec, 30, 1, 1);
         let c = cache.get_or_generate(&p, 30, 2, 1);

@@ -43,7 +43,7 @@ pub fn run(ctx: &ExpCtx) {
 /// emulate "never switch" with iterations=1 variants handled inline.
 fn switch_policy(ctx: &ExpCtx, csv: &mut CsvWriter) {
     println!("-- switch policy (LV comp, m=50, normalized best)");
-    let prob = Problem::new(WorkflowId::Lv, Objective::CompTime);
+    let prob = Problem::new(WorkflowId::LV, Objective::CompTime);
     let pool = ctx.shared_pool(&prob, ctx.pool_size, ctx.seed);
     let scorer = ctx.scorer.build();
     let mut t = Table::new(&["variant", "normalized best"]).align_left(&[0]);
@@ -90,7 +90,7 @@ fn switch_policy(ctx: &ExpCtx, csv: &mut CsvWriter) {
 
 fn budget_mode(ctx: &ExpCtx, csv: &mut CsvWriter) {
     println!("-- budget mode (LV comp): run-count m=50 vs equal cost budget");
-    let prob = Problem::new(WorkflowId::Lv, Objective::CompTime);
+    let prob = Problem::new(WorkflowId::LV, Objective::CompTime);
     let pool = ctx.shared_pool(&prob, ctx.pool_size, ctx.seed);
     let scorer = ctx.scorer.build();
     // measure run-count CEAL's average spend, then grant the budgeted

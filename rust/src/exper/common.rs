@@ -115,7 +115,7 @@ mod tests {
         let mut ctx = ExpCtx::default();
         ctx.reps = 3;
         ctx.pool_size = 99;
-        let c = ctx.campaign(WorkflowId::Lv, Objective::ExecTime, 25);
+        let c = ctx.campaign(WorkflowId::LV, Objective::ExecTime, 25);
         assert_eq!(c.reps, 3);
         assert_eq!(c.pool_size, 99);
         assert_eq!(c.m, 25);

@@ -28,7 +28,7 @@ pub fn compute(ctx: &ExpCtx) -> Vec<Fig4Row> {
     let scorer = ctx.scorer.build();
     let mut out = Vec::new();
     for obj in Objective::ALL {
-        let prob = Problem::new(WorkflowId::Lv, obj);
+        let prob = Problem::new(WorkflowId::LV, obj);
         let pool = ctx.shared_pool(&prob, FIG4_POOL, ctx.seed ^ 0xF14);
         let hist = historical_samples(&prob, 500, ctx.seed ^ 0x415);
         let n_feats = prob.n_component_features();

@@ -19,7 +19,7 @@ pub fn run(ctx: &ExpCtx) {
     let mut t = Table::new(&["workflow", "algo", "cost (core-h)", "tuned", "expert", "payoff runs"])
         .align_left(&[0, 1]);
     let mut csv = CsvWriter::new(&["workflow", "algo", "cost", "tuned", "expert", "payoff_runs"]);
-    for wf in [WorkflowId::Lv, WorkflowId::Hs] {
+    for wf in [WorkflowId::LV, WorkflowId::HS] {
         for algo in [Algo::Al, Algo::Ceal] {
             let agg = ctx.run_cell(algo, wf, Objective::CompTime, m);
             let payoff = agg.payoff_runs();

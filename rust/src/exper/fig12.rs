@@ -23,10 +23,10 @@ pub fn run(ctx: &ExpCtx) {
         "workflow", "objective", "m", "algo", "cost", "tuned", "expert", "payoff_runs",
     ]);
     let cells = [
-        (WorkflowId::Lv, Objective::ExecTime, 50),
-        (WorkflowId::Lv, Objective::CompTime, 25),
-        (WorkflowId::Hs, Objective::ExecTime, 50),
-        (WorkflowId::Hs, Objective::CompTime, 25),
+        (WorkflowId::LV, Objective::ExecTime, 50),
+        (WorkflowId::LV, Objective::CompTime, 25),
+        (WorkflowId::HS, Objective::ExecTime, 50),
+        (WorkflowId::HS, Objective::CompTime, 25),
     ];
     for (wf, obj, m) in cells {
         for algo in [Algo::AlphHist, Algo::CealHist] {

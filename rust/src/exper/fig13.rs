@@ -11,7 +11,7 @@ use crate::util::table::{fnum, Table};
 
 use super::common::{banner, ExpCtx};
 
-const WF: WorkflowId = WorkflowId::Lv;
+const WF: WorkflowId = WorkflowId::LV;
 const OBJ: Objective = Objective::CompTime;
 const M: usize = 50;
 

@@ -19,6 +19,19 @@
 //! artifacts via PJRT and executes them with trained ensembles passed
 //! as runtime tensors.
 
+// Clippy runs as a tier-1 CI gate (`-D warnings`).  These idioms are
+// deliberate across the simulator/GBT/tuner numeric code: index-driven
+// loops mirror the paper's recurrences over several parallel arrays,
+// and ceiling divisions / precise float literals / wide profile
+// signatures keep hot-path arithmetic explicit.  Anything else is held
+// to the gate.
+#![allow(
+    clippy::needless_range_loop,
+    clippy::manual_div_ceil,
+    clippy::too_many_arguments,
+    clippy::excessive_precision
+)]
+
 pub mod config;
 pub mod coordinator;
 pub mod exper;

@@ -16,7 +16,7 @@
 //!   --threads N       worker threads                   [#cpus]
 //!   --scorer S        native | pjrt                    [native]
 //! tune flags:
-//!   --workflow W      LV | HS | GP                     [LV]
+//!   --workflow W      any registered workflow (see `ceal info`) [LV]
 //!   --objective O     exec | comp                      [comp]
 //!   --algo A          rs|al|geist|ceal|ceal+hist|alph|alph+hist [ceal]
 //!   --m N             training-sample budget           [50]
@@ -28,7 +28,7 @@ use std::process::ExitCode;
 use ceal::config::WorkflowId;
 use ceal::coordinator::{run_campaign, Algo, ScorerKind};
 use ceal::exper::{self, ExpCtx};
-use ceal::sim::Objective;
+use ceal::sim::{Objective, WorkflowRegistry};
 use ceal::util::cli::Args;
 use ceal::util::table::fnum;
 
@@ -98,8 +98,13 @@ fn run() -> Result<(), String> {
 }
 
 fn tune(args: &Args, ctx: &ExpCtx) -> Result<(), String> {
-    let wf = WorkflowId::from_name(args.opt_or("workflow", "LV"))
-        .ok_or("unknown --workflow (LV|HS|GP)")?;
+    let wf_name = args.opt_or("workflow", "LV");
+    let wf = WorkflowId::from_name(wf_name).ok_or_else(|| {
+        format!(
+            "unknown --workflow '{wf_name}' (registered: {})",
+            WorkflowRegistry::global().names().join(" | ")
+        )
+    })?;
     let obj = Objective::from_name(args.opt_or("objective", "comp"))
         .ok_or("unknown --objective (exec|comp)")?;
     let algo =
@@ -109,6 +114,18 @@ fn tune(args: &Args, ctx: &ExpCtx) -> Result<(), String> {
         "tuning {wf} for {obj} with {algo}, m={m}, pool={}, reps={}, scorer={:?}",
         ctx.pool_size, ctx.reps, ctx.scorer
     );
+    // Pre-flight the cell's pool fallibly: a registered workflow whose
+    // space admits no feasible configuration errors out here instead of
+    // panicking inside the campaign (the cache hands the same pool to
+    // run_campaign below).
+    ceal::coordinator::PoolCache::global()
+        .try_get_or_generate(
+            &ceal::tuner::Problem::new(wf, obj),
+            ctx.pool_size,
+            ctx.seed,
+            ctx.threads,
+        )
+        .map_err(|e| format!("cannot tune {wf}: {e}"))?;
     let mut campaign = ctx.campaign(wf, obj, m);
     // optional CEAL/ALpH hyper-parameter overrides (Fig. 13 territory)
     if args.opt("mr").is_some() || args.opt("m0").is_some() || args.opt("iters").is_some() {
@@ -162,15 +179,29 @@ fn info() {
         }
         Err(e) => println!("PJRT runtime : unavailable — {e:#}"),
     }
-    for id in WorkflowId::ALL {
-        let spec = id.spec();
+    let reg = WorkflowRegistry::global();
+    println!("workflow registry ({} registered):", reg.len());
+    for def in reg.defs() {
+        let spec = def.spec();
+        let comps: Vec<&str> = def.components.iter().map(|c| c.stage_name).collect();
+        let edges: Vec<String> = def
+            .edges
+            .iter()
+            .map(|e| {
+                format!(
+                    "{}->{}",
+                    def.components[e.from].stage_name, def.components[e.to].stage_name
+                )
+            })
+            .collect();
         println!(
-            "workflow {:<3}: {} components, {} params, space {:.1e}",
-            id.name(),
-            spec.components.len(),
+            "  {:<4} {} params, space {:.1e}",
+            def.name,
             spec.n_params(),
             spec.space_size() as f64
         );
+        println!("       components: {}", comps.join(", "));
+        println!("       edges     : {}", edges.join(", "));
     }
 }
 

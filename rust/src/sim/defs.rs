@@ -1,0 +1,643 @@
+//! Built-in workflow definition tables.
+//!
+//! The paper trio (LV / HS / GP) wires the analytic component models
+//! under [`apps`](super::apps) onto the Table 1 parameter spaces from
+//! [`config::spaces`](crate::config::spaces); the synthetic scenario
+//! families (CH5 / DM4) are self-contained — spec, profiles, and
+//! topology all declared here.  Each definition is one table entry;
+//! nothing else in the codebase names these workflows.
+//!
+//! Adding a workflow = writing one more `WorkflowDef` (see the
+//! repository README, "Adding a workflow") and registering it.
+
+use super::apps::{grayscott, heat, lammps, pdfcalc, plots, stagewrite, voro};
+use super::apps::{ConsumerProfile, SourceProfile};
+use super::machine::Machine;
+use super::registry::{
+    BufferRule, ComponentDef, EdgeDef, IsoRun, StageProfile, Upstream, WorkflowDef,
+};
+use crate::config::{gp_spec, hs_spec, lv_spec, ComponentSpec, ParamDef};
+
+/// Canonical chunk counts for isolated consumer runs (the producer's
+/// cadence is not part of a consumer's own configuration — this is
+/// precisely the approximation that keeps component models low-fidelity).
+pub const ISO_CHUNKS_VORO: usize = 8;
+pub const ISO_CHUNKS_STAGEWRITE: usize = 8;
+pub const ISO_CHUNKS_PDF: usize = 10;
+pub const ISO_CHUNKS_CH5: usize = 8;
+pub const ISO_CHUNKS_DM4: usize = 8;
+
+/// Every definition the global registry pre-registers.
+pub(crate) fn builtin_defs() -> Vec<WorkflowDef> {
+    vec![lv_def(), hs_def(), gp_def(), ch5_def(), dm4_def()]
+}
+
+fn source(p: SourceProfile) -> StageProfile {
+    StageProfile {
+        t_chunk_s: p.t_chunk_s,
+        n_chunks: p.n_chunks,
+        bytes_out: p.bytes_per_chunk,
+        nodes: p.nodes,
+    }
+}
+
+fn consumer(p: ConsumerProfile) -> StageProfile {
+    StageProfile {
+        t_chunk_s: p.t_chunk_s,
+        n_chunks: 0,
+        bytes_out: p.bytes_per_chunk_out,
+        nodes: p.nodes,
+    }
+}
+
+/// Allocation rule for the common `[procs, ppn, ...]` parameter prefix.
+fn nodes_procs_ppn(cfg: &[i64], m: &Machine) -> u64 {
+    m.nodes_for(cfg[0], cfg[1])
+}
+
+/// Allocation rule for HS's 2-D grid prefix `[px, py, ppn, ...]`.
+fn nodes_grid_ppn(cfg: &[i64], m: &Machine) -> u64 {
+    m.nodes_for(cfg[0] * cfg[1], cfg[2])
+}
+
+/// Fixed components that colocate with another allocation.
+fn nodes_colocated(_cfg: &[i64], _m: &Machine) -> u64 {
+    0
+}
+
+// ---------------------------------------------------------------- LV --
+
+fn lammps_profile(cfg: &[i64], _up: Upstream, m: &Machine) -> StageProfile {
+    source(lammps::profile(cfg, m))
+}
+
+fn voro_profile(cfg: &[i64], up: Upstream, m: &Machine) -> StageProfile {
+    consumer(voro::profile(cfg, up.bytes, m))
+}
+
+/// LV: LAMMPS molecular dynamics streaming frames to Voro++.
+pub fn lv_def() -> WorkflowDef {
+    let mut specs = lv_spec().components.into_iter();
+    WorkflowDef {
+        name: "LV",
+        components: vec![
+            ComponentDef {
+                spec: specs.next().unwrap(),
+                stage_name: "LAMMPS",
+                profile: lammps_profile,
+                nodes: nodes_procs_ppn,
+                iso: IsoRun::Source,
+            },
+            ComponentDef {
+                spec: specs.next().unwrap(),
+                stage_name: "Voro++",
+                profile: voro_profile,
+                nodes: nodes_procs_ppn,
+                iso: IsoRun::Consumer {
+                    bytes: lammps::N_ATOMS * lammps::BYTES_PER_ATOM,
+                    chunks: ISO_CHUNKS_VORO,
+                },
+            },
+        ],
+        edges: vec![EdgeDef::staged(0, 1)],
+        expert_exec: vec![288, 18, 2, 400, 288, 18, 2],
+        expert_comp: vec![18, 18, 2, 400, 18, 18, 2],
+    }
+}
+
+// ---------------------------------------------------------------- HS --
+
+fn heat_profile(cfg: &[i64], _up: Upstream, m: &Machine) -> StageProfile {
+    source(heat::profile(cfg, m))
+}
+
+fn stagewrite_profile(cfg: &[i64], up: Upstream, m: &Machine) -> StageProfile {
+    consumer(stagewrite::profile(cfg, up.bytes, m))
+}
+
+/// HS's staging channel: depth and efficiency follow the Heat Transfer
+/// `buffer_mb` parameter (index 4 of the producer's slice).
+fn hs_buffer_rule(h: &[i64]) -> BufferRule {
+    BufferRule {
+        xfer_divisor: heat::buffer_efficiency(h[4]),
+        capacity: heat::buffer_slots(h[4]),
+    }
+}
+
+/// HS: Heat Transfer snapshots forwarded to Stage Write.
+pub fn hs_def() -> WorkflowDef {
+    let mut specs = hs_spec().components.into_iter();
+    WorkflowDef {
+        name: "HS",
+        components: vec![
+            ComponentDef {
+                spec: specs.next().unwrap(),
+                stage_name: "HeatTransfer",
+                profile: heat_profile,
+                nodes: nodes_grid_ppn,
+                iso: IsoRun::Source,
+            },
+            ComponentDef {
+                spec: specs.next().unwrap(),
+                stage_name: "StageWrite",
+                profile: stagewrite_profile,
+                nodes: nodes_procs_ppn,
+                iso: IsoRun::Consumer {
+                    bytes: heat::snapshot_bytes(),
+                    chunks: ISO_CHUNKS_STAGEWRITE,
+                },
+            },
+        ],
+        edges: vec![EdgeDef {
+            from: 0,
+            to: 1,
+            buffer: hs_buffer_rule,
+        }],
+        expert_exec: vec![32, 17, 34, 4, 20, 560, 35],
+        expert_comp: vec![8, 4, 32, 4, 20, 35, 35],
+    }
+}
+
+// ---------------------------------------------------------------- GP --
+
+fn grayscott_profile(cfg: &[i64], _up: Upstream, m: &Machine) -> StageProfile {
+    source(grayscott::profile(cfg, m))
+}
+
+fn pdfcalc_profile(cfg: &[i64], up: Upstream, m: &Machine) -> StageProfile {
+    consumer(pdfcalc::profile(cfg, up.bytes, m))
+}
+
+fn gplot_profile(_cfg: &[i64], up: Upstream, m: &Machine) -> StageProfile {
+    consumer(plots::gplot_profile(up.n_chunks, m))
+}
+
+fn pplot_profile(_cfg: &[i64], up: Upstream, m: &Machine) -> StageProfile {
+    consumer(plots::pplot_profile(up.n_chunks, m))
+}
+
+/// GP: Gray-Scott fanning out to the PDF calculator and G-Plot (shared
+/// producer NIC), with P-Plot rendering the PDF output.
+pub fn gp_def() -> WorkflowDef {
+    let mut specs = gp_spec().components.into_iter();
+    WorkflowDef {
+        name: "GP",
+        components: vec![
+            ComponentDef {
+                spec: specs.next().unwrap(),
+                stage_name: "GrayScott",
+                profile: grayscott_profile,
+                nodes: nodes_procs_ppn,
+                iso: IsoRun::Source,
+            },
+            ComponentDef {
+                spec: specs.next().unwrap(),
+                stage_name: "PDFcalc",
+                profile: pdfcalc_profile,
+                nodes: nodes_procs_ppn,
+                iso: IsoRun::Consumer {
+                    bytes: grayscott::dump_bytes(),
+                    chunks: ISO_CHUNKS_PDF,
+                },
+            },
+            ComponentDef {
+                spec: specs.next().unwrap(),
+                stage_name: "G-Plot",
+                profile: gplot_profile,
+                nodes: nodes_colocated,
+                iso: IsoRun::Consumer { bytes: 0.0, chunks: 1 },
+            },
+            ComponentDef {
+                spec: specs.next().unwrap(),
+                stage_name: "P-Plot",
+                profile: pplot_profile,
+                nodes: nodes_colocated,
+                iso: IsoRun::Consumer { bytes: 0.0, chunks: 1 },
+            },
+        ],
+        edges: vec![
+            EdgeDef::staged(0, 1),
+            EdgeDef::staged(0, 2),
+            EdgeDef::staged(1, 3),
+        ],
+        // Table 2 lists PDF procs = 525, but Table 1 bounds the PDF
+        // calculator at 512 processes — clamped to the space.
+        expert_exec: vec![525, 35, 512, 35],
+        expert_comp: vec![35, 35, 35, 35],
+    }
+}
+
+// --------------------------------------------------------------- CH5 --
+//
+// Synthetic 5-stage deep analysis chain:
+//
+//   ChainSim -> Filter -> Feature -> Reduce -> Archive
+//
+// ChainSim dumps frames on a tunable cadence; Filter thins them to 25%;
+// Feature — the interesting mid-stage — pays a redistribution cost
+// linear in its process count, so its optimum sits at a moderate
+// allocation; Reduce collapses features with a log-cost reduction; the
+// fixed Archive writer colocates and adds a small throughput floor.
+
+pub const CH5_STEPS: f64 = 800.0;
+/// Bytes per ChainSim frame (~240 MB).
+pub const CH5_BYTES: f64 = 2.4e8;
+const CH5_FILTER_KEEP: f64 = 0.25;
+const CH5_FEATURE_KEEP: f64 = 0.5;
+/// Archive's total fixed write time across a run, seconds.
+pub const CH5_ARCHIVE_TOTAL_S: f64 = 6.0;
+const CH5_REDUCE_PPN: i64 = 18;
+
+fn ch5_spec_components() -> Vec<ComponentSpec> {
+    vec![
+        ComponentSpec::new(
+            "ChainSim",
+            vec![
+                ParamDef::range("procs", 2, 512),
+                ParamDef::range("ppn", 1, 35),
+                ParamDef::range_step("io_steps", 20, 200, 20),
+            ],
+        ),
+        ComponentSpec::new(
+            "Filter",
+            vec![ParamDef::range("procs", 1, 256), ParamDef::range("ppn", 1, 35)],
+        ),
+        ComponentSpec::new(
+            "Feature",
+            vec![ParamDef::range("procs", 1, 512), ParamDef::range("ppn", 1, 35)],
+        ),
+        ComponentSpec::new("Reduce", vec![ParamDef::range("procs", 1, 128)]),
+        ComponentSpec::new("Archive", vec![]),
+    ]
+}
+
+/// cfg = [procs, ppn, io_steps]
+fn ch5_source(cfg: &[i64], _up: Upstream, m: &Machine) -> StageProfile {
+    let (p, ppn, io) = (cfg[0], cfg[1], cfg[2]);
+    let pf = p as f64;
+    let mem = 1.0 / m.mem_factor(ppn, 1, 4.0);
+    let oversub = m.oversub_factor(ppn, 1);
+    let t_step = 0.09 * mem * oversub / pf + 2.4e-4 * pf.log2() + 1.2e-3;
+    let nodes = m.nodes_for(p, ppn);
+    let t_dump = CH5_BYTES / (1.5e9 * nodes as f64);
+    StageProfile {
+        t_chunk_s: io as f64 * t_step + t_dump,
+        n_chunks: (CH5_STEPS / io as f64).ceil() as usize,
+        bytes_out: CH5_BYTES,
+        nodes,
+    }
+}
+
+/// cfg = [procs, ppn]
+fn ch5_filter(cfg: &[i64], up: Upstream, m: &Machine) -> StageProfile {
+    let (q, ppn) = (cfg[0], cfg[1]);
+    let nodes = m.nodes_for(q, ppn);
+    let mem = 1.0 / m.mem_factor(ppn, 1, 2.0);
+    let t_ingest = up.bytes / (2.0e9 * nodes as f64);
+    StageProfile {
+        t_chunk_s: 0.05 + 7.0 / q as f64 * mem * m.oversub_factor(ppn, 1) + t_ingest,
+        n_chunks: 0,
+        bytes_out: up.bytes * CH5_FILTER_KEEP,
+        nodes,
+    }
+}
+
+/// cfg = [procs, ppn] — U-shaped in procs: the all-to-all feature
+/// redistribution makes large allocations counterproductive.
+fn ch5_feature(cfg: &[i64], up: Upstream, m: &Machine) -> StageProfile {
+    let (r, ppn) = (cfg[0], cfg[1]);
+    let rf = r as f64;
+    let nodes = m.nodes_for(r, ppn);
+    let mem = 1.0 / m.mem_factor(ppn, 1, 2.5);
+    let t_ingest = up.bytes / (2.0e9 * nodes as f64);
+    StageProfile {
+        t_chunk_s: 0.12
+            + 16.0 / rf * mem * m.oversub_factor(ppn, 1)
+            + 0.0045 * rf
+            + t_ingest,
+        n_chunks: 0,
+        bytes_out: up.bytes * CH5_FEATURE_KEEP,
+        nodes,
+    }
+}
+
+/// cfg = [procs] (fixed ppn — Reduce is launched dense).
+fn ch5_reduce(cfg: &[i64], up: Upstream, m: &Machine) -> StageProfile {
+    let s = cfg[0];
+    let sf = s as f64;
+    let nodes = m.nodes_for(s, CH5_REDUCE_PPN);
+    let t_ingest = up.bytes / (2.0e9 * nodes as f64);
+    StageProfile {
+        t_chunk_s: 0.04 + 5.0 / sf + 0.012 * (sf + 1.0).log2() + t_ingest,
+        n_chunks: 0,
+        bytes_out: 2.0e6,
+        nodes,
+    }
+}
+
+fn ch5_reduce_nodes(cfg: &[i64], m: &Machine) -> u64 {
+    m.nodes_for(cfg[0], CH5_REDUCE_PPN)
+}
+
+/// Fixed single-process writer: total time is constant per run.
+fn ch5_archive(_cfg: &[i64], up: Upstream, _m: &Machine) -> StageProfile {
+    StageProfile {
+        t_chunk_s: CH5_ARCHIVE_TOTAL_S / up.n_chunks as f64,
+        n_chunks: 0,
+        bytes_out: 0.0,
+        nodes: 0,
+    }
+}
+
+/// CH5: the synthetic deep analysis chain, declared in pure data.
+pub fn ch5_def() -> WorkflowDef {
+    let mut specs = ch5_spec_components().into_iter();
+    WorkflowDef {
+        name: "CH5",
+        components: vec![
+            ComponentDef {
+                spec: specs.next().unwrap(),
+                stage_name: "ChainSim",
+                profile: ch5_source,
+                nodes: nodes_procs_ppn,
+                iso: IsoRun::Source,
+            },
+            ComponentDef {
+                spec: specs.next().unwrap(),
+                stage_name: "Filter",
+                profile: ch5_filter,
+                nodes: nodes_procs_ppn,
+                iso: IsoRun::Consumer {
+                    bytes: CH5_BYTES,
+                    chunks: ISO_CHUNKS_CH5,
+                },
+            },
+            ComponentDef {
+                spec: specs.next().unwrap(),
+                stage_name: "Feature",
+                profile: ch5_feature,
+                nodes: nodes_procs_ppn,
+                iso: IsoRun::Consumer {
+                    bytes: CH5_BYTES * CH5_FILTER_KEEP,
+                    chunks: ISO_CHUNKS_CH5,
+                },
+            },
+            ComponentDef {
+                spec: specs.next().unwrap(),
+                stage_name: "Reduce",
+                profile: ch5_reduce,
+                nodes: ch5_reduce_nodes,
+                iso: IsoRun::Consumer {
+                    bytes: CH5_BYTES * CH5_FILTER_KEEP * CH5_FEATURE_KEEP,
+                    chunks: ISO_CHUNKS_CH5,
+                },
+            },
+            ComponentDef {
+                spec: specs.next().unwrap(),
+                stage_name: "Archive",
+                profile: ch5_archive,
+                nodes: nodes_colocated,
+                iso: IsoRun::Consumer { bytes: 0.0, chunks: 1 },
+            },
+        ],
+        edges: vec![
+            EdgeDef::staged(0, 1),
+            EdgeDef::staged(1, 2),
+            EdgeDef::staged(2, 3),
+            EdgeDef::staged(3, 4),
+        ],
+        expert_exec: vec![256, 18, 60, 64, 18, 64, 18, 32],
+        expert_comp: vec![32, 32, 200, 8, 32, 32, 32, 8],
+    }
+}
+
+// --------------------------------------------------------------- DM4 --
+//
+// Synthetic diamond with a shared-NIC producer:
+//
+//   DiamondSim -> StatA ---\
+//        \------> RenderB --> Merge
+//
+// The source fans out to both analyses (its NIC bandwidth is split —
+// the generic out-degree rule), and Merge fans in, starting a chunk
+// only once both branches have delivered it.
+
+pub const DM4_STEPS: f64 = 600.0;
+/// Bytes per DiamondSim frame (~320 MB).
+pub const DM4_BYTES: f64 = 3.2e8;
+const DM4_STAT_OUT: f64 = 4.0e6;
+const DM4_RENDER_OUT: f64 = 8.0e6;
+const DM4_MERGE_PPN: i64 = 18;
+
+fn dm4_spec_components() -> Vec<ComponentSpec> {
+    vec![
+        ComponentSpec::new(
+            "DiamondSim",
+            vec![
+                ParamDef::range("procs", 2, 512),
+                ParamDef::range("ppn", 1, 35),
+                ParamDef::range_step("io_steps", 10, 100, 10),
+            ],
+        ),
+        ComponentSpec::new(
+            "StatA",
+            vec![ParamDef::range("procs", 1, 256), ParamDef::range("ppn", 1, 35)],
+        ),
+        ComponentSpec::new(
+            "RenderB",
+            vec![ParamDef::range("procs", 1, 256), ParamDef::range("ppn", 1, 35)],
+        ),
+        ComponentSpec::new("Merge", vec![ParamDef::range("procs", 1, 64)]),
+    ]
+}
+
+/// cfg = [procs, ppn, io_steps]
+fn dm4_source(cfg: &[i64], _up: Upstream, m: &Machine) -> StageProfile {
+    let (p, ppn, io) = (cfg[0], cfg[1], cfg[2]);
+    let pf = p as f64;
+    let mem = 1.0 / m.mem_factor(ppn, 1, 4.5);
+    let t_step = 0.075 * mem * m.oversub_factor(ppn, 1) / pf + 3.0e-4 * pf.log2() + 1.0e-3;
+    let nodes = m.nodes_for(p, ppn);
+    let t_dump = DM4_BYTES / (1.2e9 * nodes as f64);
+    StageProfile {
+        t_chunk_s: io as f64 * t_step + t_dump,
+        n_chunks: (DM4_STEPS / io as f64).ceil() as usize,
+        bytes_out: DM4_BYTES,
+        nodes,
+    }
+}
+
+/// cfg = [procs, ppn] — U-shaped statistics pass.
+fn dm4_stat(cfg: &[i64], up: Upstream, m: &Machine) -> StageProfile {
+    let (q, ppn) = (cfg[0], cfg[1]);
+    let qf = q as f64;
+    let nodes = m.nodes_for(q, ppn);
+    let mem = 1.0 / m.mem_factor(ppn, 1, 2.0);
+    let t_ingest = up.bytes / (2.0e9 * nodes as f64);
+    StageProfile {
+        t_chunk_s: 0.06 + 6.0 / qf * mem * m.oversub_factor(ppn, 1) + 0.003 * qf + t_ingest,
+        n_chunks: 0,
+        bytes_out: DM4_STAT_OUT,
+        nodes,
+    }
+}
+
+/// cfg = [procs, ppn] — rendering scales sublinearly (serial compositing).
+fn dm4_render(cfg: &[i64], up: Upstream, m: &Machine) -> StageProfile {
+    let (q, ppn) = (cfg[0], cfg[1]);
+    let qf = q as f64;
+    let nodes = m.nodes_for(q, ppn);
+    let mem = 1.0 / m.mem_factor(ppn, 1, 1.5);
+    let t_ingest = up.bytes / (1.5e9 * nodes as f64);
+    StageProfile {
+        t_chunk_s: 0.3 + 9.0 / qf.powf(0.62) * mem * m.oversub_factor(ppn, 1) + t_ingest,
+        n_chunks: 0,
+        bytes_out: DM4_RENDER_OUT,
+        nodes,
+    }
+}
+
+/// cfg = [procs] (fixed ppn) — fan-in join of both branches.
+fn dm4_merge(cfg: &[i64], up: Upstream, m: &Machine) -> StageProfile {
+    let s = cfg[0];
+    let sf = s as f64;
+    let nodes = m.nodes_for(s, DM4_MERGE_PPN);
+    let t_ingest = up.bytes / (2.0e9 * nodes as f64);
+    StageProfile {
+        t_chunk_s: 0.05 + 1.5 / sf + 0.01 * (sf + 1.0).log2() + t_ingest,
+        n_chunks: 0,
+        bytes_out: 0.0,
+        nodes,
+    }
+}
+
+fn dm4_merge_nodes(cfg: &[i64], m: &Machine) -> u64 {
+    m.nodes_for(cfg[0], DM4_MERGE_PPN)
+}
+
+/// DM4: the synthetic diamond, declared in pure data.
+pub fn dm4_def() -> WorkflowDef {
+    let mut specs = dm4_spec_components().into_iter();
+    WorkflowDef {
+        name: "DM4",
+        components: vec![
+            ComponentDef {
+                spec: specs.next().unwrap(),
+                stage_name: "DiamondSim",
+                profile: dm4_source,
+                nodes: nodes_procs_ppn,
+                iso: IsoRun::Source,
+            },
+            ComponentDef {
+                spec: specs.next().unwrap(),
+                stage_name: "StatA",
+                profile: dm4_stat,
+                nodes: nodes_procs_ppn,
+                iso: IsoRun::Consumer {
+                    bytes: DM4_BYTES,
+                    chunks: ISO_CHUNKS_DM4,
+                },
+            },
+            ComponentDef {
+                spec: specs.next().unwrap(),
+                stage_name: "RenderB",
+                profile: dm4_render,
+                nodes: nodes_procs_ppn,
+                iso: IsoRun::Consumer {
+                    bytes: DM4_BYTES,
+                    chunks: ISO_CHUNKS_DM4,
+                },
+            },
+            ComponentDef {
+                spec: specs.next().unwrap(),
+                stage_name: "Merge",
+                profile: dm4_merge,
+                nodes: dm4_merge_nodes,
+                iso: IsoRun::Consumer {
+                    bytes: DM4_STAT_OUT + DM4_RENDER_OUT,
+                    chunks: ISO_CHUNKS_DM4,
+                },
+            },
+        ],
+        edges: vec![
+            EdgeDef::staged(0, 1),
+            EdgeDef::staged(0, 2),
+            EdgeDef::staged(1, 3),
+            EdgeDef::staged(2, 3),
+        ],
+        expert_exec: vec![128, 16, 50, 64, 16, 32, 16, 16],
+        expert_comp: vec![16, 32, 100, 8, 32, 8, 32, 4],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Config, WorkflowId};
+    use crate::sim::WorkflowSim;
+
+    #[test]
+    fn ch5_is_a_five_stage_chain() {
+        let def = ch5_def();
+        assert_eq!(def.components.len(), 5);
+        assert_eq!(def.edges.len(), 4);
+        assert!(def.validate().is_ok(), "{:?}", def.validate());
+        assert_eq!(def.n_params(), 8);
+        let sim = WorkflowSim::new(WorkflowId::CH5).with_noise(0.0);
+        // a mid-range configuration completes in sane time
+        let m = sim.expected(&Config(def.expert_exec.clone()));
+        assert!(
+            m.exec_time_s > CH5_ARCHIVE_TOTAL_S && m.exec_time_s < 300.0,
+            "exec {}",
+            m.exec_time_s
+        );
+        // starving the Filter of processes must slow the whole chain
+        let starved = sim.expected(&Config(vec![256, 18, 60, 1, 18, 64, 18, 32]));
+        assert!(
+            starved.exec_time_s > 2.0 * m.exec_time_s,
+            "starved {} vs {}",
+            starved.exec_time_s,
+            m.exec_time_s
+        );
+        // the mid-stage is U-shaped: a huge Feature allocation is worse
+        // than a moderate one
+        let moderate = sim.expected(&Config(vec![256, 32, 60, 64, 32, 64, 32, 32]));
+        let huge = sim.expected(&Config(vec![256, 32, 60, 64, 32, 512, 32, 32]));
+        assert!(
+            huge.exec_time_s > moderate.exec_time_s,
+            "feature redistribution: {} vs {}",
+            moderate.exec_time_s,
+            huge.exec_time_s
+        );
+    }
+
+    #[test]
+    fn dm4_diamond_fans_out_and_in() {
+        let def = dm4_def();
+        assert_eq!(def.components.len(), 4);
+        assert_eq!(def.edges.len(), 4);
+        assert!(def.validate().is_ok(), "{:?}", def.validate());
+        assert_eq!(def.n_params(), 8);
+        let sim = WorkflowSim::new(WorkflowId::DM4).with_noise(0.0);
+        let base = sim.expected(&Config(def.expert_exec.clone()));
+        assert!(base.exec_time_s > 1.0 && base.exec_time_s < 400.0, "{}", base.exec_time_s);
+        // Merge waits on the slower branch: crippling RenderB must
+        // dominate the makespan even with a fast StatA
+        let slow_render = sim.expected(&Config(vec![128, 16, 50, 64, 16, 1, 16, 16]));
+        assert!(
+            slow_render.exec_time_s > 1.5 * base.exec_time_s,
+            "fan-in join: {} vs {}",
+            slow_render.exec_time_s,
+            base.exec_time_s
+        );
+    }
+
+    #[test]
+    fn builtin_tables_match_table1_specs() {
+        // the trio's defs derive their spaces from config::spaces —
+        // Table 1 stays the single source of truth
+        assert_eq!(lv_def().spec().space_size(), lv_spec().space_size());
+        assert_eq!(hs_def().spec().space_size(), hs_spec().space_size());
+        assert_eq!(gp_def().spec().space_size(), gp_spec().space_size());
+    }
+}

@@ -6,16 +6,27 @@
 //!   split into an immutable [`PipelineStructure`] and a reusable
 //!   [`SimWorkspace`] so the measurement hot path is allocation-free
 //! * [`apps`] — analytic per-component performance models
-//! * [`workflows`] — LV / HS / GP assembly + isolated component runs
+//! * [`registry`] — declarative workflow tables ([`WorkflowDef`]) and
+//!   the process-wide string-keyed [`WorkflowRegistry`]
+//! * [`defs`] — the built-in tables: the paper trio (LV / HS / GP) and
+//!   the synthetic scenario families (CH5 / DM4)
+//! * [`workflows`] — generic table-driven simulation + isolated
+//!   component runs
 //! * [`measurement`] — measurements and optimization objectives
 
 pub mod apps;
+pub mod defs;
 pub mod machine;
 pub mod measurement;
 pub mod pipeline;
+pub mod registry;
 pub mod workflows;
 
 pub use machine::Machine;
 pub use measurement::{Measurement, Objective};
 pub use pipeline::{Edge, Pipeline, PipelineResult, PipelineStructure, SimWorkspace, Stage};
-pub use workflows::WorkflowSim;
+pub use registry::{
+    BufferRule, ComponentDef, EdgeDef, IsoRun, StageProfile, Upstream, WorkflowDef, WorkflowId,
+    WorkflowRegistry,
+};
+pub use workflows::{InfeasibleSpace, WorkflowSim};

@@ -1,0 +1,585 @@
+//! Data-driven workflow registry: workflows are *declared* as tables,
+//! not coded as branches.
+//!
+//! The paper's method (Alg. 1, Eqns 1-2) is workflow-structure-generic —
+//! per-component models combined over a DAG — so the simulator should
+//! be, too.  A [`WorkflowDef`] describes one workflow as pure data:
+//!
+//! * one [`ComponentDef`] per component application — its parameter
+//!   space ([`ComponentSpec`]), a profile function mapping a parameter
+//!   slice (plus the upstream data rate) to a per-chunk
+//!   [`StageProfile`], a node-allocation rule, and how the component is
+//!   run *in isolation* for component-model training ([`IsoRun`]);
+//! * DAG edges ([`EdgeDef`]) carrying staging-buffer rules
+//!   ([`BufferRule`]) derived from the producer's configuration.
+//!
+//! From that table alone, [`WorkflowSim`](crate::sim::WorkflowSim)
+//! derives everything the auto-tuners consume: the pipeline topology,
+//! `fill_pipeline`/`build_pipeline`, node accounting, feasibility,
+//! isolated component runs, and the joint
+//! [`WorkflowSpec`](crate::config::WorkflowSpec).
+//!
+//! The process-wide [`WorkflowRegistry`] is string-keyed: a
+//! [`WorkflowId`] is a thin alias over a registered name.  The paper
+//! trio (LV / HS / GP, Table 1) and the synthetic scenario families
+//! (CH5 / DM4) are registered at startup from
+//! [`defs`](crate::sim::defs); new scenarios register one more table
+//! entry and flow untouched through pool generation, the low-fidelity
+//! structure function, every tuner, campaigns, and the CLI.
+
+use std::sync::{Arc, Mutex, OnceLock};
+
+use super::machine::Machine;
+use crate::config::{ComponentSpec, WorkflowSpec, F_MAX};
+
+/// Upper bound on stages per workflow: lets the simulation hot path
+/// keep per-stage profile scratch on the stack (no per-run allocation).
+pub const MAX_STAGES: usize = 8;
+
+/// Default buffer slots for ADIOS staging channels whose depth is not a
+/// tunable parameter.
+pub const DEFAULT_BUFFER_SLOTS: usize = 4;
+
+/// Workflow identifier: a thin, `Copy` alias over a registry name.
+/// Equality/hashing are by name, so it keys pool caches and campaign
+/// cells exactly as the old enum did.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct WorkflowId(&'static str);
+
+impl WorkflowId {
+    /// The paper trio (Table 1).  Experiments that reproduce paper
+    /// figures iterate these; the registry may hold more — see
+    /// [`WorkflowRegistry::ids`].
+    pub const ALL: [WorkflowId; 3] = [WorkflowId::LV, WorkflowId::HS, WorkflowId::GP];
+
+    /// LAMMPS + Voro++ via staging.
+    pub const LV: WorkflowId = WorkflowId("LV");
+    /// Heat Transfer + Stage Write.
+    pub const HS: WorkflowId = WorkflowId("HS");
+    /// Gray-Scott + PDF calc + two plotters.
+    pub const GP: WorkflowId = WorkflowId("GP");
+    /// Synthetic 5-stage deep analysis chain.
+    pub const CH5: WorkflowId = WorkflowId("CH5");
+    /// Synthetic diamond fan-out/fan-in with a shared-NIC producer.
+    pub const DM4: WorkflowId = WorkflowId("DM4");
+
+    pub fn name(&self) -> &'static str {
+        self.0
+    }
+
+    /// Resolve a registered workflow by name (case-insensitive).
+    pub fn from_name(name: &str) -> Option<WorkflowId> {
+        WorkflowRegistry::global().resolve(name)
+    }
+
+    /// The workflow's registered definition table.
+    pub fn def(&self) -> Arc<WorkflowDef> {
+        WorkflowRegistry::global().get(*self).unwrap_or_else(|| {
+            panic!(
+                "workflow '{}' is not registered (registered: {})",
+                self.0,
+                WorkflowRegistry::global().names().join(", ")
+            )
+        })
+    }
+
+    /// The workflow's joint parameter space, derived from its table.
+    pub fn spec(&self) -> WorkflowSpec {
+        self.def().spec()
+    }
+}
+
+impl std::fmt::Display for WorkflowId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.0)
+    }
+}
+
+/// Unified per-chunk processing profile of one stage, as computed by a
+/// [`ProfileFn`] from the component's parameter slice.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StageProfile {
+    /// Deterministic per-chunk processing time, seconds.
+    pub t_chunk_s: f64,
+    /// Chunks this stage *generates*.  Only the workflow's source sets
+    /// this (> 0); consumers leave it 0 and inherit the run's count.
+    pub n_chunks: usize,
+    /// Bytes streamed downstream per chunk (0 for sinks).
+    pub bytes_out: f64,
+    /// Nodes the stage occupies (0 = colocated with another allocation).
+    pub nodes: u64,
+}
+
+/// Upstream context handed to a [`ProfileFn`]: the aggregate incoming
+/// bytes per chunk (summed over in-edges) and the run's chunk count
+/// (0 when profiling the source itself, which defines it).
+#[derive(Clone, Copy, Debug)]
+pub struct Upstream {
+    pub bytes: f64,
+    pub n_chunks: usize,
+}
+
+/// Per-component profile rule: parameter slice + upstream context +
+/// machine → per-chunk profile.
+pub type ProfileFn = fn(&[i64], Upstream, &Machine) -> StageProfile;
+
+/// Per-component node-allocation rule: parameter slice + machine →
+/// nodes charged against the allocation budget.
+pub type NodesFn = fn(&[i64], &Machine) -> u64;
+
+/// How a component runs *in isolation* for component-model training
+/// (Alg. 1 lines 1-6).
+#[derive(Clone, Copy, Debug)]
+pub enum IsoRun {
+    /// Sources derive their own chunk count from the configuration and
+    /// run against a sink that never blocks.
+    Source,
+    /// Consumers run fed from staged input that never starves: `bytes`
+    /// per chunk for `chunks` canonical chunks.  The producer's cadence
+    /// is not part of a consumer's own configuration — precisely the
+    /// approximation that keeps component models low-fidelity.
+    Consumer { bytes: f64, chunks: usize },
+}
+
+/// Staging-buffer behaviour of one edge, derived from the *producer's*
+/// parameter slice by a [`BufferRuleFn`].
+#[derive(Clone, Copy, Debug)]
+pub struct BufferRule {
+    /// The raw transfer time is divided by this efficiency factor
+    /// (1.0 = no modifier; HS divides by its ADIOS buffer efficiency).
+    pub xfer_divisor: f64,
+    /// Buffer capacity in chunks (>= 1).
+    pub capacity: usize,
+}
+
+impl Default for BufferRule {
+    fn default() -> Self {
+        BufferRule {
+            xfer_divisor: 1.0,
+            capacity: DEFAULT_BUFFER_SLOTS,
+        }
+    }
+}
+
+/// Edge buffer rule: producer parameter slice → buffer behaviour.
+pub type BufferRuleFn = fn(&[i64]) -> BufferRule;
+
+fn default_buffer_rule(_producer_cfg: &[i64]) -> BufferRule {
+    BufferRule::default()
+}
+
+/// One component application's table entry.
+#[derive(Clone, Debug)]
+pub struct ComponentDef {
+    /// Parameter space (name + Table-1-style parameter list; may be
+    /// empty for fixed components like GP's plotters).
+    pub spec: ComponentSpec,
+    /// Stage label used by the pipeline topology and reports.  Must
+    /// match `spec.name` (validated at registration); kept separately
+    /// because topology labels are `&'static str`.
+    pub stage_name: &'static str,
+    pub profile: ProfileFn,
+    pub nodes: NodesFn,
+    pub iso: IsoRun,
+}
+
+/// One staging channel's table entry.  Components must be listed in
+/// topological order, so edges always point forward (`from < to`) —
+/// which also makes every definition trivially acyclic.
+#[derive(Clone, Copy, Debug)]
+pub struct EdgeDef {
+    pub from: usize,
+    pub to: usize,
+    /// Buffer rule evaluated on the producer's parameter slice.
+    pub buffer: BufferRuleFn,
+}
+
+impl EdgeDef {
+    /// A plain staging channel: default depth, no transfer modifier.
+    pub fn staged(from: usize, to: usize) -> EdgeDef {
+        EdgeDef {
+            from,
+            to,
+            buffer: default_buffer_rule,
+        }
+    }
+}
+
+/// A complete declarative workflow definition.
+#[derive(Clone, Debug)]
+pub struct WorkflowDef {
+    pub name: &'static str,
+    /// Components in topological order; component 0 is the source.
+    pub components: Vec<ComponentDef>,
+    /// DAG edges in channel order (forward-pointing; validated).
+    pub edges: Vec<EdgeDef>,
+    /// Reference (expert) configuration per objective — the baseline
+    /// campaigns measure improvement against (paper Table 2 for the
+    /// trio; hand-picked mid-range configurations for synthetic
+    /// scenarios).
+    pub expert_exec: Vec<i64>,
+    pub expert_comp: Vec<i64>,
+}
+
+impl WorkflowDef {
+    pub fn id(&self) -> WorkflowId {
+        WorkflowId(self.name)
+    }
+
+    /// The joint parameter space this table induces.
+    pub fn spec(&self) -> WorkflowSpec {
+        WorkflowSpec::new(
+            self.name,
+            self.components.iter().map(|c| c.spec.clone()).collect(),
+        )
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.components.iter().map(|c| c.spec.params.len()).sum()
+    }
+
+    /// Structural validation — every invariant the generic simulation
+    /// path relies on.  Registration refuses invalid tables.
+    pub fn validate(&self) -> Result<(), String> {
+        let n = self.components.len();
+        if self.name.is_empty() || !self.name.chars().all(|c| c.is_ascii_alphanumeric()) {
+            return Err(format!(
+                "workflow name '{}' must be non-empty ASCII alphanumeric",
+                self.name
+            ));
+        }
+        if n == 0 || n > MAX_STAGES {
+            return Err(format!(
+                "{}: {} components (must be 1..={MAX_STAGES})",
+                self.name, n
+            ));
+        }
+        for c in &self.components {
+            if c.stage_name != c.spec.name {
+                return Err(format!(
+                    "{}: stage name '{}' != component spec name '{}'",
+                    self.name, c.stage_name, c.spec.name
+                ));
+            }
+        }
+        let total = self.n_params();
+        if total > F_MAX {
+            return Err(format!(
+                "{}: {total} joint parameters exceed F_MAX={F_MAX}",
+                self.name
+            ));
+        }
+        // Edges: forward-pointing (topological listing ⇒ acyclic),
+        // in-range, and exactly one root — component 0, the source
+        // that defines the run's chunk count.
+        let mut indeg = vec![0usize; n];
+        for e in &self.edges {
+            if e.to >= n || e.from >= e.to {
+                return Err(format!(
+                    "{}: edge {}->{} must point forward within {} components",
+                    self.name, e.from, e.to, n
+                ));
+            }
+            indeg[e.to] += 1;
+        }
+        let roots: Vec<usize> = (0..n).filter(|&u| indeg[u] == 0).collect();
+        if roots != [0] {
+            return Err(format!(
+                "{}: components {roots:?} have no in-edge; exactly component 0 \
+                 must be the (single) source",
+                self.name
+            ));
+        }
+        // Expert configurations: correct arity, admissible values,
+        // feasible on the default machine, with sane buffer rules.
+        let m = Machine::default();
+        for (label, cfg) in [("expert_exec", &self.expert_exec), ("expert_comp", &self.expert_comp)]
+        {
+            if cfg.len() != total {
+                return Err(format!(
+                    "{}: {label} arity {} != {total} joint parameters",
+                    self.name,
+                    cfg.len()
+                ));
+            }
+            let mut off = 0;
+            let mut nodes = 0u64;
+            for c in &self.components {
+                let slice = &cfg[off..off + c.spec.params.len()];
+                for (p, &v) in c.spec.params.iter().zip(slice) {
+                    if p.index_of(v).is_none() {
+                        return Err(format!(
+                            "{}: {label} {}={v} not admissible for {}",
+                            self.name, p.name, c.spec.name
+                        ));
+                    }
+                }
+                nodes += (c.nodes)(slice, &m);
+                off += c.spec.params.len();
+            }
+            if nodes > m.max_nodes {
+                return Err(format!(
+                    "{}: {label} allocates {nodes} nodes (> {} cap)",
+                    self.name, m.max_nodes
+                ));
+            }
+            for e in &self.edges {
+                let poff: usize = self.components[..e.from]
+                    .iter()
+                    .map(|c| c.spec.params.len())
+                    .sum();
+                let pslice = &cfg[poff..poff + self.components[e.from].spec.params.len()];
+                self.check_buffer_rule(e, pslice)?;
+            }
+        }
+        // Buffer rules must hold across the producer's whole space, not
+        // just the expert picks: probe a fixed-seed random sample of
+        // producer configurations per edge, so a rule that misbehaves
+        // on some admissible value fails at registration instead of
+        // panicking deep inside pool generation.
+        let mut rng = crate::util::rng::Pcg32::new(0xB0F4_0001, 17);
+        for e in &self.edges {
+            let producer = &self.components[e.from].spec;
+            for _ in 0..64 {
+                let slice = producer.sample(&mut rng);
+                self.check_buffer_rule(e, &slice)?;
+            }
+        }
+        Ok(())
+    }
+
+    fn check_buffer_rule(&self, e: &EdgeDef, producer_cfg: &[i64]) -> Result<(), String> {
+        let rule = (e.buffer)(producer_cfg);
+        if rule.capacity < 1 || rule.xfer_divisor.is_nan() || rule.xfer_divisor <= 0.0 {
+            return Err(format!(
+                "{}: edge {}->{} buffer rule gave capacity {} / divisor {} \
+                 for producer config {producer_cfg:?}",
+                self.name, e.from, e.to, rule.capacity, rule.xfer_divisor
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Process-wide, string-keyed store of workflow definitions.  Built-in
+/// tables register on first use; callers may [`register`] more at any
+/// time (e.g. test scenarios) — names are unique, case-insensitively.
+///
+/// [`register`]: WorkflowRegistry::register
+pub struct WorkflowRegistry {
+    defs: Mutex<Vec<Arc<WorkflowDef>>>,
+}
+
+impl WorkflowRegistry {
+    /// The process-wide registry, with the built-in definitions from
+    /// [`defs`](crate::sim::defs) pre-registered.
+    pub fn global() -> &'static WorkflowRegistry {
+        static GLOBAL: OnceLock<WorkflowRegistry> = OnceLock::new();
+        GLOBAL.get_or_init(|| {
+            let reg = WorkflowRegistry {
+                defs: Mutex::new(Vec::new()),
+            };
+            for def in super::defs::builtin_defs() {
+                reg.register(def).expect("built-in workflow table invalid");
+            }
+            reg
+        })
+    }
+
+    /// An empty registry (tests).
+    pub fn empty() -> WorkflowRegistry {
+        WorkflowRegistry {
+            defs: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Validate and add a definition; returns its id.  Dynamic names
+    /// can be made `'static` with `Box::leak` — registry entries live
+    /// for the process anyway.
+    pub fn register(&self, def: WorkflowDef) -> Result<WorkflowId, String> {
+        def.validate()?;
+        let mut defs = self.defs.lock().unwrap();
+        if defs.iter().any(|d| d.name.eq_ignore_ascii_case(def.name)) {
+            return Err(format!("workflow '{}' is already registered", def.name));
+        }
+        let id = def.id();
+        defs.push(Arc::new(def));
+        Ok(id)
+    }
+
+    /// Case-insensitive name lookup.
+    pub fn resolve(&self, name: &str) -> Option<WorkflowId> {
+        self.defs
+            .lock()
+            .unwrap()
+            .iter()
+            .find(|d| d.name.eq_ignore_ascii_case(name))
+            .map(|d| d.id())
+    }
+
+    pub fn get(&self, id: WorkflowId) -> Option<Arc<WorkflowDef>> {
+        self.defs
+            .lock()
+            .unwrap()
+            .iter()
+            .find(|d| d.name.eq_ignore_ascii_case(id.0))
+            .map(Arc::clone)
+    }
+
+    /// Registered ids, in registration order.
+    pub fn ids(&self) -> Vec<WorkflowId> {
+        self.defs.lock().unwrap().iter().map(|d| d.id()).collect()
+    }
+
+    /// Registered names, in registration order.
+    pub fn names(&self) -> Vec<&'static str> {
+        self.defs.lock().unwrap().iter().map(|d| d.name).collect()
+    }
+
+    /// Snapshot of every registered definition.
+    pub fn defs(&self) -> Vec<Arc<WorkflowDef>> {
+        self.defs.lock().unwrap().iter().map(Arc::clone).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.defs.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Config, ParamDef};
+    use crate::sim::WorkflowSim;
+    use crate::util::rng::Pcg32;
+
+    fn toy_component(name: &'static str, params: Vec<ParamDef>) -> ComponentDef {
+        fn profile(_: &[i64], up: Upstream, _: &Machine) -> StageProfile {
+            StageProfile {
+                t_chunk_s: 1.0,
+                n_chunks: if up.n_chunks == 0 { 4 } else { 0 },
+                bytes_out: 1.0,
+                nodes: 1,
+            }
+        }
+        fn nodes(_: &[i64], _: &Machine) -> u64 {
+            1
+        }
+        ComponentDef {
+            spec: ComponentSpec::new(name, params),
+            stage_name: name,
+            profile,
+            nodes,
+            iso: IsoRun::Source,
+        }
+    }
+
+    fn toy_def() -> WorkflowDef {
+        WorkflowDef {
+            name: "TOY",
+            components: vec![
+                toy_component("a", vec![ParamDef::range("p", 1, 4)]),
+                toy_component("b", vec![ParamDef::range("q", 1, 4)]),
+            ],
+            edges: vec![EdgeDef::staged(0, 1)],
+            expert_exec: vec![2, 2],
+            expert_comp: vec![1, 1],
+        }
+    }
+
+    #[test]
+    fn register_resolve_and_lookup() {
+        let reg = WorkflowRegistry::empty();
+        assert!(reg.is_empty());
+        let id = reg.register(toy_def()).unwrap();
+        assert_eq!(id.name(), "TOY");
+        assert_eq!(reg.resolve("toy"), Some(id));
+        assert_eq!(reg.resolve("nope"), None);
+        assert_eq!(reg.names(), vec!["TOY"]);
+        assert!(reg.get(id).is_some());
+        // duplicate names are refused, case-insensitively
+        let mut dup = toy_def();
+        dup.name = "Toy";
+        assert!(reg.register(dup).unwrap_err().contains("already registered"));
+    }
+
+    #[test]
+    fn validation_rejects_bad_tables() {
+        // backward edge (cycle under the topological-listing rule)
+        let mut d = toy_def();
+        d.edges = vec![EdgeDef::staged(0, 1), EdgeDef { from: 1, to: 0, buffer: |_| BufferRule::default() }];
+        assert!(d.validate().unwrap_err().contains("forward"));
+        // two roots
+        let mut d = toy_def();
+        d.edges.clear();
+        assert!(d.validate().unwrap_err().contains("source"));
+        // expert arity mismatch
+        let mut d = toy_def();
+        d.expert_exec = vec![2];
+        assert!(d.validate().unwrap_err().contains("arity"));
+        // inadmissible expert value
+        let mut d = toy_def();
+        d.expert_comp = vec![9, 1];
+        assert!(d.validate().unwrap_err().contains("not admissible"));
+        // stage name / spec name mismatch
+        let mut d = toy_def();
+        d.components[0].stage_name = "wrong";
+        assert!(d.validate().unwrap_err().contains("spec name"));
+        // a sane table passes
+        assert!(toy_def().validate().is_ok());
+    }
+
+    #[test]
+    fn global_registry_has_builtins() {
+        let reg = WorkflowRegistry::global();
+        for id in [WorkflowId::LV, WorkflowId::HS, WorkflowId::GP, WorkflowId::CH5, WorkflowId::DM4]
+        {
+            assert!(reg.get(id).is_some(), "{id} missing from global registry");
+            assert_eq!(WorkflowId::from_name(id.name()), Some(id));
+        }
+        assert_eq!(WorkflowId::from_name("ch5"), Some(WorkflowId::CH5));
+        assert_eq!(WorkflowId::from_name("zz"), None);
+    }
+
+    /// Satellite invariants: every registered workflow has acyclic
+    /// (forward) edges, a single source, spec arity matching its
+    /// components, valid+feasible expert configurations, and at least
+    /// one feasible configuration (joint and per configurable
+    /// component).
+    #[test]
+    fn registered_workflows_satisfy_invariants() {
+        for def in WorkflowRegistry::global().defs() {
+            assert!(def.validate().is_ok(), "{}: {:?}", def.name, def.validate());
+            let spec = def.spec();
+            assert_eq!(
+                spec.n_params(),
+                def.n_params(),
+                "{}: spec arity diverged from table",
+                def.name
+            );
+            let sim = WorkflowSim::new(def.id());
+            let mut rng = Pcg32::new(0xFEA5, 7);
+            let feasible = |c: &Config| sim.feasible(c);
+            let cfg = sim
+                .spec
+                .try_sample_feasible(&mut rng, &feasible, 100_000)
+                .unwrap_or_else(|e| panic!("{}: {e}", def.name));
+            assert!(sim.feasible(&cfg) && sim.spec.validate(&cfg).is_ok());
+            for &j in &sim.spec.configurable() {
+                let comp_cfg = sim
+                    .sample_component_feasible(j, &mut rng)
+                    .unwrap_or_else(|e| panic!("{}: {e}", def.name));
+                assert!(sim.component_feasible(j, &comp_cfg));
+            }
+            for cfg in [&def.expert_exec, &def.expert_comp] {
+                let cfg = Config(cfg.clone());
+                assert!(sim.spec.validate(&cfg).is_ok(), "{}: expert invalid", def.name);
+                assert!(sim.feasible(&cfg), "{}: expert infeasible", def.name);
+            }
+        }
+    }
+}

@@ -1,63 +1,85 @@
-//! Workflow assembly: LV / HS / GP wired onto the pipeline DES, plus
-//! isolated component runs (the collector for component-model training)
-//! and the feasibility rule (allocations ≤ 32 nodes, §7.1).
+//! Generic workflow simulation over registry tables: any registered
+//! [`WorkflowDef`] is wired onto the pipeline DES by a single
+//! topology-driven loop — no per-workflow branches anywhere on the
+//! simulation path.  Also hosts isolated component runs (the collector
+//! for component-model training) and the feasibility rule
+//! (allocations ≤ 32 nodes, §7.1).
 //!
 //! The measurement hot path is allocation-free: each [`WorkflowSim`]
-//! precomputes its immutable [`PipelineStructure`] once, and
+//! precomputes its immutable [`PipelineStructure`] once, per-stage
+//! profile scratch lives on the stack (bounded by
+//! [`MAX_STAGES`](super::registry::MAX_STAGES)), and
 //! [`fill_pipeline`](WorkflowSim::fill_pipeline) writes a run's
 //! parameters into a caller-owned [`SimWorkspace`].  Collectors hold one
 //! workspace and thread it through [`run_with`](WorkflowSim::run_with) /
 //! [`expected_with`](WorkflowSim::expected_with); the argument-free
 //! [`run`](WorkflowSim::run) / [`expected`](WorkflowSim::expected)
 //! wrappers build a throwaway workspace for one-off calls.
+//!
+//! [`build_pipeline`](WorkflowSim::build_pipeline) derives from the
+//! *same* table walk as `fill_pipeline` (they share
+//! [`profiles_for`](WorkflowSim::profiles_for)'s output), and remains
+//! the allocation-heavy reference path for differential tests and the
+//! benches' before/after baseline.
 
-use super::apps::{grayscott, heat, lammps, pdfcalc, plots, stagewrite};
+use std::sync::Arc;
+
 use super::machine::Machine;
 use super::measurement::Measurement;
 use super::pipeline::{Edge, Pipeline, PipelineStructure, SimWorkspace, Stage};
-use crate::config::{Config, WorkflowId, WorkflowSpec};
+use super::registry::{IsoRun, StageProfile, Upstream, WorkflowDef, WorkflowId, MAX_STAGES};
+use crate::config::{Config, WorkflowSpec};
 use crate::util::rng::Pcg32;
 
-/// Default buffer slots for ADIOS staging channels whose depth is not a
-/// tunable parameter (LV and GP edges).
-pub const DEFAULT_BUFFER_SLOTS: usize = 4;
+pub use super::registry::DEFAULT_BUFFER_SLOTS;
+
 /// Default run-to-run noise (lognormal sigma on per-chunk times).
 pub const DEFAULT_NOISE_SIGMA: f64 = 0.03;
-/// Canonical chunk counts for isolated consumer runs (the producer's
-/// cadence is not part of a consumer's own configuration — this is
-/// precisely the approximation that keeps component models low-fidelity).
-pub const ISO_CHUNKS_VORO: usize = 8;
-pub const ISO_CHUNKS_STAGEWRITE: usize = 8;
-pub const ISO_CHUNKS_PDF: usize = 10;
 
-/// The in-situ workflow simulator: the collector's backend.
+/// Rejection budget for feasibility samplers.
+pub const FEASIBLE_SAMPLE_TRIES: usize = 100_000;
+
+pub use crate::config::InfeasibleSpace;
+
+/// The in-situ workflow simulator: the collector's backend, generic
+/// over any registered workflow table.
 #[derive(Clone, Debug)]
 pub struct WorkflowSim {
     pub id: WorkflowId,
     pub spec: WorkflowSpec,
     pub machine: Machine,
     pub noise_sigma: f64,
+    /// The declarative table everything below derives from.
+    def: Arc<WorkflowDef>,
     /// Immutable topology shared by every run of this workflow.
     structure: PipelineStructure,
 }
 
 impl WorkflowSim {
+    /// Build the simulator for a registered workflow.
     pub fn new(id: WorkflowId) -> Self {
-        let structure = match id {
-            WorkflowId::Lv => PipelineStructure::new(vec!["LAMMPS", "Voro++"], vec![(0, 1)]),
-            WorkflowId::Hs => {
-                PipelineStructure::new(vec!["HeatTransfer", "StageWrite"], vec![(0, 1)])
-            }
-            WorkflowId::Gp => PipelineStructure::new(
-                vec!["GrayScott", "PDFcalc", "G-Plot", "P-Plot"],
-                vec![(0, 1), (0, 2), (1, 3)],
-            ),
-        };
+        WorkflowSim::from_def(id.def())
+    }
+
+    /// Build the simulator directly from a definition table (useful for
+    /// tables not (yet) in the global registry).  Panics on invalid
+    /// tables — `profiles_for`'s forward walk relies on every invariant
+    /// [`WorkflowDef::validate`] checks, so an unvalidated table must
+    /// not reach the simulation path.
+    pub fn from_def(def: Arc<WorkflowDef>) -> Self {
+        def.validate()
+            .unwrap_or_else(|e| panic!("invalid workflow table: {e}"));
+        let structure = PipelineStructure::new(
+            def.components.iter().map(|c| c.stage_name).collect(),
+            def.edges.iter().map(|e| (e.from, e.to)).collect(),
+        );
+        let spec = def.spec();
         WorkflowSim {
-            id,
-            spec: id.spec(),
+            id: def.id(),
+            spec,
             machine: Machine::default(),
             noise_sigma: DEFAULT_NOISE_SIGMA,
+            def,
             structure,
         }
     }
@@ -67,32 +89,25 @@ impl WorkflowSim {
         self
     }
 
+    /// The workflow's definition table.
+    pub fn def(&self) -> &Arc<WorkflowDef> {
+        &self.def
+    }
+
     /// The workflow's immutable pipeline topology.
     pub fn structure(&self) -> &PipelineStructure {
         &self.structure
     }
 
-    /// Total nodes a configuration allocates (sum over components; the
-    /// plotters colocate with the analysis allocation).
+    /// Total nodes a configuration allocates: the sum of every
+    /// component's node-allocation rule (colocated components
+    /// contribute 0).
     pub fn nodes(&self, cfg: &Config) -> u64 {
-        match self.id {
-            WorkflowId::Lv => {
-                let l = self.spec.component_slice(cfg, 0);
-                let v = self.spec.component_slice(cfg, 1);
-                self.machine.nodes_for(l[0], l[1]) + self.machine.nodes_for(v[0], v[1])
-            }
-            WorkflowId::Hs => {
-                let h = self.spec.component_slice(cfg, 0);
-                let s = self.spec.component_slice(cfg, 1);
-                self.machine.nodes_for(h[0] * h[1], h[2])
-                    + self.machine.nodes_for(s[0], s[1])
-            }
-            WorkflowId::Gp => {
-                let g = self.spec.component_slice(cfg, 0);
-                let p = self.spec.component_slice(cfg, 1);
-                self.machine.nodes_for(g[0], g[1]) + self.machine.nodes_for(p[0], p[1])
-            }
+        let mut total = 0u64;
+        for (j, c) in self.def.components.iter().enumerate() {
+            total += (c.nodes)(self.spec.component_slice(cfg, j), &self.machine);
         }
+        total
     }
 
     /// The paper's pools contain only runnable configurations:
@@ -103,10 +118,7 @@ impl WorkflowSim {
 
     /// Nodes an *isolated* run of configurable component `j` allocates.
     pub fn component_nodes(&self, j: usize, comp_cfg: &[i64]) -> u64 {
-        match (self.id, j) {
-            (WorkflowId::Hs, 0) => self.machine.nodes_for(comp_cfg[0] * comp_cfg[1], comp_cfg[2]),
-            _ => self.machine.nodes_for(comp_cfg[0], comp_cfg[1]),
-        }
+        (self.def.components[j].nodes)(comp_cfg, &self.machine)
     }
 
     /// Isolated component runs are subject to the same allocation cap
@@ -116,169 +128,122 @@ impl WorkflowSim {
     }
 
     /// Rejection-sample a feasible configuration for component `j`.
-    pub fn sample_component_feasible(&self, j: usize, rng: &mut Pcg32) -> Vec<i64> {
+    pub fn sample_component_feasible(
+        &self,
+        j: usize,
+        rng: &mut Pcg32,
+    ) -> Result<Vec<i64>, InfeasibleSpace> {
         let cs = &self.spec.components[j];
-        for _ in 0..100_000 {
+        for _ in 0..FEASIBLE_SAMPLE_TRIES {
             let cfg = cs.sample(rng);
             if self.component_feasible(j, &cfg) {
-                return cfg;
+                return Ok(cfg);
             }
         }
-        panic!("{}: no feasible config for component {j}", self.id);
+        Err(InfeasibleSpace {
+            workflow: self.id.name().to_string(),
+            scope: format!("component {j} ({})", cs.name),
+            tries: FEASIBLE_SAMPLE_TRIES,
+        })
+    }
+
+    /// Evaluate every component's profile for `cfg`, walking the table
+    /// in (topological) component order: each consumer sees the summed
+    /// `bytes_out` of its in-edge producers and the source's chunk
+    /// count.  Returns the per-stage profiles and the run's chunk
+    /// count.  Stack-only — the hot path allocates nothing here.
+    fn profiles_for(&self, cfg: &Config) -> ([StageProfile; MAX_STAGES], usize) {
+        let mut profiles = [StageProfile::default(); MAX_STAGES];
+        let n = self.def.components.len();
+        debug_assert!(n <= MAX_STAGES);
+        let mut k = 0usize;
+        for (u, comp) in self.def.components.iter().enumerate() {
+            let mut bytes_in = 0.0f64;
+            for e in &self.def.edges {
+                if e.to == u {
+                    bytes_in += profiles[e.from].bytes_out;
+                }
+            }
+            let p = (comp.profile)(
+                self.spec.component_slice(cfg, u),
+                Upstream {
+                    bytes: bytes_in,
+                    n_chunks: k,
+                },
+                &self.machine,
+            );
+            if u == 0 {
+                k = p.n_chunks;
+                // Hard assert (not debug): campaigns run in release, and
+                // a 0-chunk source would otherwise silently poison pool
+                // ground truth with inf/NaN downstream chunk times.
+                assert!(k >= 1, "{}: source profile must define n_chunks >= 1", self.id);
+            }
+            profiles[u] = p;
+        }
+        (profiles, k)
+    }
+
+    /// One edge's pipeline parameters (transfer time, buffer capacity):
+    /// staging transfer time over the producer's NIC — split across its
+    /// concurrent out-streams, with out-degree read straight off the
+    /// table's DAG — divided by the edge's buffer efficiency, plus the
+    /// buffer depth, both from the table's per-edge rule.
+    fn edge_params(&self, cfg: &Config, profiles: &[StageProfile], ei: usize) -> (f64, usize) {
+        let e = &self.def.edges[ei];
+        let out_degree = self.def.edges.iter().filter(|o| o.from == e.from).count() as u64;
+        let rule = (e.buffer)(self.spec.component_slice(cfg, e.from));
+        let xfer = transfer_time(
+            &self.machine,
+            profiles[e.from].bytes_out,
+            profiles[e.from].nodes,
+            profiles[e.to].nodes,
+            out_degree,
+        ) / rule.xfer_divisor;
+        (xfer, rule.capacity)
     }
 
     /// Write the deterministic pipeline parameters for `cfg` into `ws`
     /// (stage chunk times, edge transfer times, buffer capacities) —
     /// zero allocations once the workspace is warmed.
     pub fn fill_pipeline(&self, cfg: &Config, ws: &mut SimWorkspace) {
-        let m = &self.machine;
-        match self.id {
-            WorkflowId::Lv => {
-                let lp = lammps::profile(self.spec.component_slice(cfg, 0), m);
-                let vp =
-                    voro::profile(self.spec.component_slice(cfg, 1), lp.bytes_per_chunk, m);
-                let xfer = transfer_time(m, lp.bytes_per_chunk, lp.nodes, vp.nodes, 1);
-                ws.begin(&self.structure, lp.n_chunks);
-                ws.set_stage_time(0, lp.t_chunk_s);
-                ws.set_stage_time(1, vp.t_chunk_s);
-                ws.set_edge(0, xfer, DEFAULT_BUFFER_SLOTS);
-            }
-            WorkflowId::Hs => {
-                let hcfg = self.spec.component_slice(cfg, 0);
-                let hp = heat::profile(hcfg, m);
-                let sp = stagewrite::profile(
-                    self.spec.component_slice(cfg, 1),
-                    hp.bytes_per_chunk,
-                    m,
-                );
-                let xfer = transfer_time(m, hp.bytes_per_chunk, hp.nodes, sp.nodes, 1)
-                    / heat::buffer_efficiency(hcfg[4]);
-                ws.begin(&self.structure, hp.n_chunks);
-                ws.set_stage_time(0, hp.t_chunk_s);
-                ws.set_stage_time(1, sp.t_chunk_s);
-                ws.set_edge(0, xfer, heat::buffer_slots(hcfg[4]));
-            }
-            WorkflowId::Gp => {
-                let gp = grayscott::profile(self.spec.component_slice(cfg, 0), m);
-                let pp = pdfcalc::profile(
-                    self.spec.component_slice(cfg, 1),
-                    gp.bytes_per_chunk,
-                    m,
-                );
-                let k = gp.n_chunks;
-                let gplot = plots::gplot_profile(k, m);
-                let pplot = plots::pplot_profile(k, m);
-                // Gray-Scott fans out to PDF and G-Plot: its NIC is shared.
-                let xfer_pdf =
-                    transfer_time(m, gp.bytes_per_chunk, gp.nodes, pp.nodes, 2);
-                let xfer_gplot = transfer_time(m, gp.bytes_per_chunk, gp.nodes, 1, 2);
-                let xfer_pplot = transfer_time(m, pp.bytes_per_chunk_out, pp.nodes, 1, 1);
-                ws.begin(&self.structure, k);
-                ws.set_stage_time(0, gp.t_chunk_s);
-                ws.set_stage_time(1, pp.t_chunk_s);
-                ws.set_stage_time(2, gplot.t_chunk_s);
-                ws.set_stage_time(3, pplot.t_chunk_s);
-                ws.set_edge(0, xfer_pdf, DEFAULT_BUFFER_SLOTS);
-                ws.set_edge(1, xfer_gplot, DEFAULT_BUFFER_SLOTS);
-                ws.set_edge(2, xfer_pplot, DEFAULT_BUFFER_SLOTS);
-            }
+        let (profiles, k) = self.profiles_for(cfg);
+        ws.begin(&self.structure, k);
+        for u in 0..self.def.components.len() {
+            ws.set_stage_time(u, profiles[u].t_chunk_s);
+        }
+        for ei in 0..self.def.edges.len() {
+            let (xfer, capacity) = self.edge_params(cfg, &profiles, ei);
+            ws.set_edge(ei, xfer, capacity);
         }
     }
 
     /// Assemble the deterministic pipeline for `cfg` — the reference
     /// (allocation-heavy) counterpart of
-    /// [`fill_pipeline`](Self::fill_pipeline), kept for differential
-    /// tests and the benches' before/after baseline.
+    /// [`fill_pipeline`](Self::fill_pipeline), derived from the *same*
+    /// table walk; kept for differential tests and the benches'
+    /// before/after baseline.
     pub fn build_pipeline(&self, cfg: &Config) -> Pipeline {
-        let m = &self.machine;
-        match self.id {
-            WorkflowId::Lv => {
-                let lp = lammps::profile(self.spec.component_slice(cfg, 0), m);
-                let vp =
-                    voro::profile(self.spec.component_slice(cfg, 1), lp.bytes_per_chunk, m);
-                let k = lp.n_chunks;
-                let xfer = transfer_time(m, lp.bytes_per_chunk, lp.nodes, vp.nodes, 1);
-                Pipeline {
-                    stages: vec![
-                        stage("LAMMPS", lp.t_chunk_s, k, lp.nodes),
-                        stage("Voro++", vp.t_chunk_s, k, vp.nodes),
-                    ],
-                    edges: vec![Edge {
-                        from: 0,
-                        to: 1,
+        let (profiles, k) = self.profiles_for(cfg);
+        Pipeline {
+            stages: self
+                .def
+                .components
+                .iter()
+                .enumerate()
+                .map(|(u, c)| stage(c.stage_name, profiles[u].t_chunk_s, k, profiles[u].nodes))
+                .collect(),
+            edges: (0..self.def.edges.len())
+                .map(|ei| {
+                    let (xfer, capacity) = self.edge_params(cfg, &profiles, ei);
+                    Edge {
+                        from: self.def.edges[ei].from,
+                        to: self.def.edges[ei].to,
                         t_transfer_s: xfer,
-                        capacity: DEFAULT_BUFFER_SLOTS,
-                    }],
-                }
-            }
-            WorkflowId::Hs => {
-                let hcfg = self.spec.component_slice(cfg, 0);
-                let hp = heat::profile(hcfg, m);
-                let sp = stagewrite::profile(
-                    self.spec.component_slice(cfg, 1),
-                    hp.bytes_per_chunk,
-                    m,
-                );
-                let k = hp.n_chunks;
-                let xfer = transfer_time(m, hp.bytes_per_chunk, hp.nodes, sp.nodes, 1)
-                    / heat::buffer_efficiency(hcfg[4]);
-                Pipeline {
-                    stages: vec![
-                        stage("HeatTransfer", hp.t_chunk_s, k, hp.nodes),
-                        stage("StageWrite", sp.t_chunk_s, k, sp.nodes),
-                    ],
-                    edges: vec![Edge {
-                        from: 0,
-                        to: 1,
-                        t_transfer_s: xfer,
-                        capacity: heat::buffer_slots(hcfg[4]),
-                    }],
-                }
-            }
-            WorkflowId::Gp => {
-                let gp = grayscott::profile(self.spec.component_slice(cfg, 0), m);
-                let pp = pdfcalc::profile(
-                    self.spec.component_slice(cfg, 1),
-                    gp.bytes_per_chunk,
-                    m,
-                );
-                let k = gp.n_chunks;
-                let gplot = plots::gplot_profile(k, m);
-                let pplot = plots::pplot_profile(k, m);
-                // Gray-Scott fans out to PDF and G-Plot: its NIC is shared.
-                let xfer_pdf =
-                    transfer_time(m, gp.bytes_per_chunk, gp.nodes, pp.nodes, 2);
-                let xfer_gplot = transfer_time(m, gp.bytes_per_chunk, gp.nodes, 1, 2);
-                let xfer_pplot = transfer_time(m, pp.bytes_per_chunk_out, pp.nodes, 1, 1);
-                Pipeline {
-                    stages: vec![
-                        stage("GrayScott", gp.t_chunk_s, k, gp.nodes),
-                        stage("PDFcalc", pp.t_chunk_s, k, pp.nodes),
-                        stage("G-Plot", gplot.t_chunk_s, k, gplot.nodes),
-                        stage("P-Plot", pplot.t_chunk_s, k, pplot.nodes),
-                    ],
-                    edges: vec![
-                        Edge {
-                            from: 0,
-                            to: 1,
-                            t_transfer_s: xfer_pdf,
-                            capacity: DEFAULT_BUFFER_SLOTS,
-                        },
-                        Edge {
-                            from: 0,
-                            to: 2,
-                            t_transfer_s: xfer_gplot,
-                            capacity: DEFAULT_BUFFER_SLOTS,
-                        },
-                        Edge {
-                            from: 1,
-                            to: 3,
-                            t_transfer_s: xfer_pplot,
-                            capacity: DEFAULT_BUFFER_SLOTS,
-                        },
-                    ],
-                }
-            }
+                        capacity,
+                    }
+                })
+                .collect(),
         }
     }
 
@@ -320,40 +285,40 @@ impl WorkflowSim {
 
     /// One noisy *isolated* run of configurable component `j` with its
     /// own parameter slice — the collector for component-model training
-    /// (Alg. 1 lines 1-6). Sources run with a sink that never blocks;
-    /// consumers run fed from staged input that never starves.
+    /// (Alg. 1 lines 1-6).  The table's [`IsoRun`] entry says how:
+    /// sources run with a sink that never blocks; consumers run fed
+    /// from staged input that never starves.
     pub fn run_component(&self, j: usize, comp_cfg: &[i64], rng: &mut Pcg32) -> Measurement {
+        let comp = &self.def.components[j];
+        assert!(
+            comp.spec.is_configurable(),
+            "{}: component {j} is not configurable",
+            self.id
+        );
         let m = &self.machine;
-        let (t_chunk, k, nodes) = match (self.id, j) {
-            (WorkflowId::Lv, 0) => {
-                let p = lammps::profile(comp_cfg, m);
-                (p.t_chunk_s, p.n_chunks, p.nodes)
-            }
-            (WorkflowId::Lv, 1) => {
-                let p = voro::profile(
+        let (t_chunk, k, nodes) = match comp.iso {
+            IsoRun::Source => {
+                let p = (comp.profile)(
                     comp_cfg,
-                    lammps::N_ATOMS * lammps::BYTES_PER_ATOM,
+                    Upstream {
+                        bytes: 0.0,
+                        n_chunks: 0,
+                    },
                     m,
                 );
-                (p.t_chunk_s, ISO_CHUNKS_VORO, p.nodes)
-            }
-            (WorkflowId::Hs, 0) => {
-                let p = heat::profile(comp_cfg, m);
                 (p.t_chunk_s, p.n_chunks, p.nodes)
             }
-            (WorkflowId::Hs, 1) => {
-                let p = stagewrite::profile(comp_cfg, heat::snapshot_bytes(), m);
-                (p.t_chunk_s, ISO_CHUNKS_STAGEWRITE, p.nodes)
+            IsoRun::Consumer { bytes, chunks } => {
+                let p = (comp.profile)(
+                    comp_cfg,
+                    Upstream {
+                        bytes,
+                        n_chunks: chunks,
+                    },
+                    m,
+                );
+                (p.t_chunk_s, chunks, p.nodes)
             }
-            (WorkflowId::Gp, 0) => {
-                let p = grayscott::profile(comp_cfg, m);
-                (p.t_chunk_s, p.n_chunks, p.nodes)
-            }
-            (WorkflowId::Gp, 1) => {
-                let p = pdfcalc::profile(comp_cfg, grayscott::dump_bytes(), m);
-                (p.t_chunk_s, ISO_CHUNKS_PDF, p.nodes)
-            }
-            (id, j) => panic!("{id}: component {j} is not configurable"),
         };
         let run_factor = rng.lognormal_factor(self.noise_sigma);
         let mut busy = 0.0;
@@ -398,8 +363,6 @@ impl WorkflowSim {
     }
 }
 
-use super::apps::voro;
-
 std::thread_local! {
     /// Per-thread scratch workspace backing the argument-free
     /// [`WorkflowSim::run`] / [`WorkflowSim::expected`] wrappers, so
@@ -430,6 +393,7 @@ fn transfer_time(m: &Machine, bytes: f64, nodes_from: u64, nodes_to: u64, out_de
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sim::WorkflowRegistry;
     use crate::util::prop::{assert_close, assert_prop, check};
 
     fn lv_cfg(v: &[i64]) -> Config {
@@ -438,7 +402,7 @@ mod tests {
 
     #[test]
     fn nodes_and_feasibility() {
-        let sim = WorkflowSim::new(WorkflowId::Lv);
+        let sim = WorkflowSim::new(WorkflowId::LV);
         let best_exec = lv_cfg(&[430, 23, 1, 300, 88, 10, 4]);
         assert_eq!(sim.nodes(&best_exec), 19 + 9);
         assert!(sim.feasible(&best_exec));
@@ -448,7 +412,7 @@ mod tests {
 
     #[test]
     fn lv_best_exec_beats_expert() {
-        let sim = WorkflowSim::new(WorkflowId::Lv).with_noise(0.0);
+        let sim = WorkflowSim::new(WorkflowId::LV).with_noise(0.0);
         let best = sim.expected(&lv_cfg(&[430, 23, 1, 300, 88, 10, 4]));
         let expert = sim.expected(&lv_cfg(&[288, 18, 2, 400, 288, 18, 2]));
         assert!(
@@ -464,7 +428,7 @@ mod tests {
 
     #[test]
     fn lv_comp_time_favors_packed_small_allocations() {
-        let sim = WorkflowSim::new(WorkflowId::Lv).with_noise(0.0);
+        let sim = WorkflowSim::new(WorkflowId::LV).with_noise(0.0);
         let best = sim.expected(&lv_cfg(&[175, 35, 2, 400, 38, 29, 3]));
         let expert = sim.expected(&lv_cfg(&[18, 18, 2, 400, 18, 18, 2]));
         assert!(
@@ -477,7 +441,7 @@ mod tests {
 
     #[test]
     fn hs_expert_writer_storm_is_slow() {
-        let sim = WorkflowSim::new(WorkflowId::Hs).with_noise(0.0);
+        let sim = WorkflowSim::new(WorkflowId::HS).with_noise(0.0);
         let best = sim.expected(&Config(vec![13, 17, 14, 4, 29, 19, 3]));
         let expert = sim.expected(&Config(vec![32, 17, 34, 4, 20, 560, 35]));
         assert!(best.exec_time_s < 12.0, "best {}", best.exec_time_s);
@@ -491,7 +455,7 @@ mod tests {
 
     #[test]
     fn gp_execution_floor_is_gplot() {
-        let sim = WorkflowSim::new(WorkflowId::Gp).with_noise(0.0);
+        let sim = WorkflowSim::new(WorkflowId::GP).with_noise(0.0);
         // A large, fast Gray-Scott allocation: G-Plot dominates at ~97 s.
         let fast = sim.expected(&Config(vec![525, 35, 128, 32]));
         assert!(
@@ -507,7 +471,7 @@ mod tests {
     #[test]
     fn gp_expert_comp_time_is_competitive() {
         // Paper: experts do well on GP computer time (5.85 vs 6.95).
-        let sim = WorkflowSim::new(WorkflowId::Gp).with_noise(0.0);
+        let sim = WorkflowSim::new(WorkflowId::GP).with_noise(0.0);
         let expert = sim.expected(&Config(vec![35, 35, 35, 35]));
         let big = sim.expected(&Config(vec![525, 35, 128, 32]));
         assert!(
@@ -520,7 +484,7 @@ mod tests {
 
     #[test]
     fn noise_perturbs_but_preserves_ranking() {
-        let sim = WorkflowSim::new(WorkflowId::Lv);
+        let sim = WorkflowSim::new(WorkflowId::LV);
         let cfg = lv_cfg(&[430, 23, 1, 300, 88, 10, 4]);
         let mut rng = Pcg32::new(11, 0);
         let a = sim.run(&cfg, &mut rng);
@@ -534,7 +498,7 @@ mod tests {
 
     #[test]
     fn isolated_component_runs() {
-        let sim = WorkflowSim::new(WorkflowId::Lv);
+        let sim = WorkflowSim::new(WorkflowId::LV);
         let mut rng = Pcg32::new(3, 0);
         let lam = sim.run_component(0, &[430, 23, 1, 300], &mut rng);
         let vor = sim.run_component(1, &[88, 10, 4], &mut rng);
@@ -546,20 +510,32 @@ mod tests {
     #[test]
     #[should_panic(expected = "not configurable")]
     fn isolated_plot_panics() {
-        let sim = WorkflowSim::new(WorkflowId::Gp);
+        let sim = WorkflowSim::new(WorkflowId::GP);
         let mut rng = Pcg32::new(3, 0);
         sim.run_component(2, &[], &mut rng);
+    }
+
+    #[test]
+    fn infeasible_component_space_returns_error() {
+        // shrink the machine so no allocation fits: the sampler must
+        // surface an error, not panic
+        let mut sim = WorkflowSim::new(WorkflowId::LV);
+        sim.machine.max_nodes = 0;
+        let mut rng = Pcg32::new(5, 5);
+        let err = sim.sample_component_feasible(0, &mut rng).unwrap_err();
+        assert!(err.to_string().contains("no feasible configuration"), "{err}");
+        assert_eq!(err.workflow, "LV");
     }
 
     #[test]
     fn coupling_differs_from_isolated_max() {
         // The in-situ exec time exceeds the max of isolated busy times
         // when rates mismatch (backpressure) — the paper's core premise.
-        let sim = WorkflowSim::new(WorkflowId::Lv).with_noise(0.0);
+        let sim = WorkflowSim::new(WorkflowId::LV).with_noise(0.0);
         // slow Voro (few procs) against fast LAMMPS
         let cfg = lv_cfg(&[430, 23, 1, 50, 8, 8, 1]);
         let wf = sim.expected(&cfg);
-        let lam = lammps::profile(&[430, 23, 1, 50], &sim.machine);
+        let lam = super::super::apps::lammps::profile(&[430, 23, 1, 50], &sim.machine);
         let lam_busy = lam.n_chunks as f64 * lam.t_chunk_s;
         assert!(
             wf.exec_time_s > lam_busy * 1.5,
@@ -571,13 +547,15 @@ mod tests {
 
     /// Noisy workspace runs must reproduce the reference path
     /// (build_pipeline + apply_noise + simulate) bit-for-bit, with one
-    /// workspace reused across every workflow and case.
+    /// workspace reused across *every registered workflow* (CH5 / DM4
+    /// included) and case.
     #[test]
     fn run_with_matches_reference_bitwise() {
+        let ids = WorkflowRegistry::global().ids();
         let shared_ws = std::cell::RefCell::new(SimWorkspace::new());
-        check("run_with == reference", 24, |rng| {
+        check("run_with == reference", 40, |rng| {
             let mut ws = shared_ws.borrow_mut();
-            let id = *rng.choose(&WorkflowId::ALL);
+            let id = *rng.choose(&ids);
             let sim = WorkflowSim::new(id);
             let feasible = |c: &Config| sim.feasible(c);
             let mut srng = rng.derive(1);
@@ -608,13 +586,15 @@ mod tests {
     }
 
     /// Noise-free workspace runs (steady-state fast path eligible) stay
-    /// within extrapolation tolerance of the reference recurrence.
+    /// within extrapolation tolerance of the reference recurrence, for
+    /// every registered workflow.
     #[test]
     fn expected_with_matches_reference() {
+        let ids = WorkflowRegistry::global().ids();
         let shared_ws = std::cell::RefCell::new(SimWorkspace::new());
-        check("expected_with == reference", 24, |rng| {
+        check("expected_with == reference", 40, |rng| {
             let mut ws = shared_ws.borrow_mut();
-            let id = *rng.choose(&WorkflowId::ALL);
+            let id = *rng.choose(&ids);
             let sim = WorkflowSim::new(id).with_noise(0.0);
             let feasible = |c: &Config| sim.feasible(c);
             let mut srng = rng.derive(1);

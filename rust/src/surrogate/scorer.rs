@@ -63,7 +63,9 @@ impl PoolFeatures {
     }
 }
 
-/// Scoring backend.
+/// Scoring backend.  (The PJRT variant carries a whole runtime; the
+/// enum is built once per worker, so the size asymmetry is fine.)
+#[allow(clippy::large_enum_variant)]
 pub enum Scorer {
     /// Exact Rust evaluation of the flattened-ensemble semantics.
     Native,

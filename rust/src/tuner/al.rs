@@ -87,7 +87,7 @@ mod tests {
 
     #[test]
     fn respects_budget_and_improves_sampling() {
-        let prob = Problem::new(WorkflowId::Lv, Objective::CompTime);
+        let prob = Problem::new(WorkflowId::LV, Objective::CompTime);
         let pool = Pool::generate(&prob, 200, 11);
         let mut rng = Pcg32::new(4, 4);
         let out = ActiveLearning::default().run(&prob, &pool, &Scorer::Native, 50, &mut rng);
@@ -114,7 +114,7 @@ mod tests {
 
     #[test]
     fn tiny_budget_does_not_panic() {
-        let prob = Problem::new(WorkflowId::Gp, Objective::ExecTime);
+        let prob = Problem::new(WorkflowId::GP, Objective::ExecTime);
         let pool = Pool::generate(&prob, 50, 12);
         let mut rng = Pcg32::new(5, 5);
         let out = ActiveLearning::default().run(&prob, &pool, &Scorer::Native, 5, &mut rng);

@@ -88,9 +88,13 @@ impl Tuner for Alph {
         };
         for (slot, &comp) in configurable.iter().enumerate() {
             for _ in 0..m_r {
-                let cfg = prob.sim.sample_component_feasible(comp, &mut sel_rng);
-                let y = col.measure_component(comp, &cfg);
-                samples[slot].push(spec.components[comp].encode(&cfg), y);
+                match col.measure_component_sampled(comp, &mut sel_rng) {
+                    Ok((cfg, y)) => samples[slot].push(spec.components[comp].encode(&cfg), y),
+                    Err(e) => {
+                        eprintln!("warning: {e}; skipping its isolated runs");
+                        break;
+                    }
+                }
             }
         }
         let comp_params = gbt_params_for(samples.iter().map(|s| s.len()).max().unwrap_or(0));
@@ -206,7 +210,7 @@ mod tests {
 
     #[test]
     fn runs_within_budget() {
-        let prob = Problem::new(WorkflowId::Lv, Objective::CompTime);
+        let prob = Problem::new(WorkflowId::LV, Objective::CompTime);
         let pool = Pool::generate(&prob, 200, 41);
         let mut rng = Pcg32::new(10, 10);
         let out = Alph::new(CealParams::no_hist()).run(&prob, &pool, &Scorer::Native, 50, &mut rng);

@@ -72,14 +72,32 @@ impl BudgetedCeal {
         let configurable = spec.configurable();
         let mut samples: Vec<ComponentSamples> =
             configurable.iter().map(|_| ComponentSamples::default()).collect();
+        // An infeasible component skips only itself (matching CEAL /
+        // ALpH); the loop ends when the allowance is spent or every
+        // component is exhausted.
+        let mut exhausted = vec![false; configurable.len()];
         'outer: loop {
+            let mut progressed = false;
             for (slot, &comp) in configurable.iter().enumerate() {
+                if exhausted[slot] {
+                    continue;
+                }
                 if col.component_cost >= comp_allowance {
                     break 'outer;
                 }
-                let cfg = prob.sim.sample_component_feasible(comp, &mut sel_rng);
-                let y = col.measure_component(comp, &cfg);
-                samples[slot].push(spec.components[comp].encode(&cfg), y);
+                match col.measure_component_sampled(comp, &mut sel_rng) {
+                    Ok((cfg, y)) => {
+                        samples[slot].push(spec.components[comp].encode(&cfg), y);
+                        progressed = true;
+                    }
+                    Err(e) => {
+                        eprintln!("warning: {e}; skipping its isolated runs");
+                        exhausted[slot] = true;
+                    }
+                }
+            }
+            if !progressed {
+                break;
             }
         }
         let n_feats = prob.n_component_features();
@@ -165,7 +183,7 @@ mod tests {
 
     #[test]
     fn respects_cost_budget() {
-        let prob = Problem::new(WorkflowId::Lv, Objective::CompTime);
+        let prob = Problem::new(WorkflowId::LV, Objective::CompTime);
         let pool = Pool::generate(&prob, 150, 51);
         let mut rng = Pcg32::new(1, 1);
         let budget = 400.0; // core-hours
@@ -194,7 +212,7 @@ mod tests {
 
     #[test]
     fn bigger_budget_not_worse_on_average() {
-        let prob = Problem::new(WorkflowId::Lv, Objective::CompTime);
+        let prob = Problem::new(WorkflowId::LV, Objective::CompTime);
         let pool = Pool::generate(&prob, 200, 52);
         let tuner = BudgetedCeal::new(BudgetedCealParams::default());
         let mut small_sum = 0.0;
@@ -215,7 +233,7 @@ mod tests {
 
     #[test]
     fn deterministic() {
-        let prob = Problem::new(WorkflowId::Hs, Objective::ExecTime);
+        let prob = Problem::new(WorkflowId::HS, Objective::ExecTime);
         let pool = Pool::generate(&prob, 100, 53);
         let tuner = BudgetedCeal::new(BudgetedCealParams::default());
         let run = |seed| {

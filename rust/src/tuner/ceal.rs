@@ -111,9 +111,16 @@ impl Ceal {
             let cs = &spec.components[comp];
             for _ in 0..m_r {
                 // feasible on the same <=32-node allocations as the pool
-                let cfg = prob.sim.sample_component_feasible(comp, rng);
-                let y = col.measure_component(comp, &cfg);
-                out[slot].push(cs.encode(&cfg), y);
+                match col.measure_component_sampled(comp, rng) {
+                    Ok((cfg, y)) => out[slot].push(cs.encode(&cfg), y),
+                    Err(e) => {
+                        // an over-tight component space: train on what
+                        // we have (empty -> constant model) instead of
+                        // aborting the campaign
+                        eprintln!("warning: {e}; skipping its isolated runs");
+                        break;
+                    }
+                }
             }
         }
         out
@@ -262,7 +269,7 @@ mod tests {
     use crate::sim::Objective;
 
     fn problem() -> Problem {
-        Problem::new(WorkflowId::Lv, Objective::CompTime)
+        Problem::new(WorkflowId::LV, Objective::CompTime)
     }
 
     #[test]

@@ -75,19 +75,36 @@ impl Pool {
         Pool::generate_par(prob, size, seed, 1)
     }
 
+    /// [`try_generate_par`](Self::try_generate_par), panicking when the
+    /// workflow's space admits no feasible configurations (legacy
+    /// convenience — the paper trio and built-in scenarios are
+    /// known-good).
+    pub fn generate_par(prob: &Problem, size: usize, seed: u64, threads: usize) -> Pool {
+        Pool::try_generate_par(prob, size, seed, threads)
+            .unwrap_or_else(|e| panic!("pool generation failed: {e}"))
+    }
+
     /// [`generate`](Self::generate) with the ground-truth measurement
     /// (`size` noise-free simulator runs — the dominant cost) spread
     /// across `threads` workers.  The result is identical for every
     /// thread count: configuration sampling stays sequential, and each
-    /// config's expected measurement is deterministic.
-    pub fn generate_par(prob: &Problem, size: usize, seed: u64, threads: usize) -> Pool {
+    /// config's expected measurement is deterministic.  Errors (instead
+    /// of panicking) when feasibility sampling exhausts its rejection
+    /// budget — newly registered workflows can have arbitrarily tight
+    /// feasibility.
+    pub fn try_generate_par(
+        prob: &Problem,
+        size: usize,
+        seed: u64,
+        threads: usize,
+    ) -> Result<Pool, crate::sim::InfeasibleSpace> {
         let mut rng = Pcg32::new(seed, 0x9001);
         let spec = &prob.sim.spec;
         let mut seen: HashSet<Config> = HashSet::with_capacity(size * 2);
         let mut configs = Vec::with_capacity(size);
         let feasible = |c: &Config| prob.sim.feasible(c);
         while configs.len() < size {
-            let c = spec.sample_feasible(&mut rng, &feasible, 100_000);
+            let c = spec.try_sample_feasible(&mut rng, &feasible, 100_000)?;
             if seen.insert(c.clone()) {
                 configs.push(c);
             }
@@ -95,13 +112,13 @@ impl Pool {
         let feats = PoolFeatures::encode(spec, &configs);
         let truth = measure_truth(prob, &configs, threads);
         let best_idx = stats::argmin(&truth).expect("non-empty pool");
-        Pool {
+        Ok(Pool {
             configs,
             feats,
             truth,
             best_idx,
             knn: std::sync::Mutex::new(HashMap::new()),
-        }
+        })
     }
 
     pub fn len(&self) -> usize {
@@ -242,6 +259,21 @@ impl<'a> Collector<'a> {
         self.component_runs += 1;
         self.component_cost += y;
         y
+    }
+
+    /// Sample a feasible configuration for component `comp` (drawing
+    /// from `sel_rng`, keeping selection and measurement RNG streams
+    /// separate) and run it in isolation.  A component whose slice of
+    /// the space admits no runnable allocation surfaces as an error —
+    /// not a panic — without consuming any measurement budget.
+    pub fn measure_component_sampled(
+        &mut self,
+        comp: usize,
+        sel_rng: &mut Pcg32,
+    ) -> Result<(Vec<i64>, f64), crate::sim::InfeasibleSpace> {
+        let cfg = self.prob.sim.sample_component_feasible(comp, sel_rng)?;
+        let y = self.measure_component(comp, &cfg);
+        Ok((cfg, y))
     }
 
     /// Total collection cost (workflow + component runs) — the `c` of
@@ -411,7 +443,7 @@ mod tests {
     use super::*;
 
     fn toy_problem() -> Problem {
-        Problem::new(WorkflowId::Lv, Objective::ExecTime)
+        Problem::new(WorkflowId::LV, Objective::ExecTime)
     }
 
     #[test]
@@ -461,9 +493,9 @@ mod tests {
     #[test]
     fn knn_graph_equals_full_sort_reference() {
         for (wf, seed, k) in [
-            (WorkflowId::Lv, 13u64, 5usize),
-            (WorkflowId::Hs, 14, 10),
-            (WorkflowId::Gp, 15, 7),
+            (WorkflowId::LV, 13u64, 5usize),
+            (WorkflowId::HS, 14, 10),
+            (WorkflowId::GP, 15, 7),
         ] {
             let prob = Problem::new(wf, Objective::ExecTime);
             let pool = Pool::generate(&prob, 60, seed);

@@ -156,7 +156,7 @@ mod tests {
 
     #[test]
     fn propagation_spreads_from_labels() {
-        let prob = Problem::new(WorkflowId::Lv, Objective::ExecTime);
+        let prob = Problem::new(WorkflowId::LV, Objective::ExecTime);
         let pool = Pool::generate(&prob, 100, 21);
         let g = Geist::default();
         // label the true best as 1, a bad one as 0
@@ -175,7 +175,7 @@ mod tests {
 
     #[test]
     fn runs_within_budget() {
-        let prob = Problem::new(WorkflowId::Hs, Objective::ExecTime);
+        let prob = Problem::new(WorkflowId::HS, Objective::ExecTime);
         let pool = Pool::generate(&prob, 150, 22);
         let mut rng = Pcg32::new(6, 6);
         let out = Geist::default().run(&prob, &pool, &Scorer::Native, 30, &mut rng);

@@ -52,7 +52,7 @@ mod tests {
 
     #[test]
     fn uses_exact_budget() {
-        let prob = Problem::new(WorkflowId::Lv, Objective::ExecTime);
+        let prob = Problem::new(WorkflowId::LV, Objective::ExecTime);
         let pool = Pool::generate(&prob, 100, 1);
         let mut rng = Pcg32::new(2, 2);
         let out = RandomSampling.run(&prob, &pool, &Scorer::Native, 25, &mut rng);
@@ -68,7 +68,7 @@ mod tests {
 
     #[test]
     fn deterministic_given_seed() {
-        let prob = Problem::new(WorkflowId::Hs, Objective::CompTime);
+        let prob = Problem::new(WorkflowId::HS, Objective::CompTime);
         let pool = Pool::generate(&prob, 80, 3);
         let run = |seed: u64| {
             let mut rng = Pcg32::new(seed, 0);

@@ -32,6 +32,31 @@ fn full_grid_runs_and_aggregates() {
     }
 }
 
+/// The registry-added synthetic scenarios (CH5 chain, DM4 diamond)
+/// flow untouched through pool generation, campaigns and metrics —
+/// and CEAL's component-model advantage carries over to them.
+#[test]
+fn new_scenarios_run_full_campaigns_and_ceal_beats_rs() {
+    let mut ceal_sum = 0.0;
+    let mut rs_sum = 0.0;
+    for wf in [WorkflowId::CH5, WorkflowId::DM4] {
+        for obj in Objective::ALL {
+            let ceal = run_campaign(Algo::Ceal, &quick(wf, obj, 25, 6));
+            let rs = run_campaign(Algo::Rs, &quick(wf, obj, 25, 6));
+            assert_eq!(ceal.reps.len(), 6, "{wf}/{obj}");
+            assert!(ceal.mean_norm_best() >= 1.0, "{wf}/{obj}");
+            assert!(ceal.mean_norm_best() < 50.0, "{wf}/{obj}: absurd tuning result");
+            assert!(ceal.pool_best > 0.0 && ceal.expert_value > 0.0, "{wf}/{obj}");
+            ceal_sum += ceal.mean_norm_best();
+            rs_sum += rs.mean_norm_best();
+        }
+    }
+    assert!(
+        ceal_sum < rs_sum,
+        "CEAL mean normalized {ceal_sum} should beat RS {rs_sum} on CH5/DM4"
+    );
+}
+
 #[test]
 fn ceal_beats_rs_on_average() {
     // paper Fig. 5's coarsest claim, at reduced scale: averaged over the
@@ -55,9 +80,9 @@ fn ceal_beats_rs_on_average() {
 #[test]
 fn history_helps_ceal_and_beats_alph() {
     // paper §7.5 qualitative claims at reduced scale, LV computer time.
-    let with = run_campaign(Algo::CealHist, &quick(WorkflowId::Lv, Objective::CompTime, 25, 8));
-    let without = run_campaign(Algo::Ceal, &quick(WorkflowId::Lv, Objective::CompTime, 25, 8));
-    let alph = run_campaign(Algo::AlphHist, &quick(WorkflowId::Lv, Objective::CompTime, 25, 8));
+    let with = run_campaign(Algo::CealHist, &quick(WorkflowId::LV, Objective::CompTime, 25, 8));
+    let without = run_campaign(Algo::Ceal, &quick(WorkflowId::LV, Objective::CompTime, 25, 8));
+    let alph = run_campaign(Algo::AlphHist, &quick(WorkflowId::LV, Objective::CompTime, 25, 8));
     assert!(
         with.mean_best() <= without.mean_best() * 1.05,
         "history should help: {} vs {}",
@@ -100,7 +125,7 @@ fn experiment_harness_smoke() {
 fn payoff_metric_end_to_end() {
     // Fig. 8-style: with history on LV comp time, CEAL should pay off
     // within a finite number of runs at reduced scale.
-    let agg = run_campaign(Algo::CealHist, &quick(WorkflowId::Lv, Objective::CompTime, 30, 8));
+    let agg = run_campaign(Algo::CealHist, &quick(WorkflowId::LV, Objective::CompTime, 30, 8));
     if let Some(p) = agg.payoff_runs() {
         assert!(p > 0.0 && p < 1e7, "payoff {p} out of range");
     }

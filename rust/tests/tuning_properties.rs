@@ -15,8 +15,12 @@ use ceal::tuner::{
 use ceal::util::prop::{assert_prop, check};
 use ceal::util::rng::Pcg32;
 
+/// A random problem over *every registered* workflow — the paper trio
+/// plus the synthetic scenario families (CH5 / DM4), so all tuner
+/// invariants hold for registry-added scenarios too.
 fn any_problem(rng: &mut Pcg32) -> Problem {
-    let wf = *rng.choose(&WorkflowId::ALL);
+    let ids = ceal::sim::WorkflowRegistry::global().ids();
+    let wf = *rng.choose(&ids);
     let obj = *rng.choose(&Objective::ALL);
     Problem::new(wf, obj)
 }
@@ -341,7 +345,7 @@ fn batched_prediction_equals_rowwise() {
 #[test]
 fn degenerate_setups() {
     // budget of 1-3 runs on a tiny pool must not panic
-    let prob = Problem::new(WorkflowId::Hs, Objective::ExecTime);
+    let prob = Problem::new(WorkflowId::HS, Objective::ExecTime);
     let pool = Pool::generate(&prob, 20, 5);
     for m in [1usize, 2, 3] {
         let mut rng = Pcg32::new(m as u64, 0);
