@@ -71,4 +71,16 @@ fn main() {
     b.bench_items("gbt/flat_predict_rowwise/pool2000", 2000.0, || {
         pool.iter().map(|x| flat.predict(x)).collect::<Vec<f32>>()
     });
+
+    // Thread-sweep rows: the same pool-scale training call at pinned
+    // fork-join widths, so the scaling curve is measurable in one run
+    // (outputs are bit-identical across the sweep by contract).
+    let (sx, sy) = data(&mut rng, 2000);
+    for t in [1usize, 4, 8] {
+        ceal::util::parallel::with_threads(t, || {
+            b.bench_items(&format!("gbt/train_log/n2000_t{t}"), 2000.0, || {
+                train_log(&sx, &sy, 7, &GbtParams::default())
+            });
+        });
+    }
 }

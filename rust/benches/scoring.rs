@@ -53,6 +53,17 @@ fn main() {
         native.lowfi(&[comp0.clone(), comp1.clone()], &feats, Objective::CompTime)
     });
 
+    // Thread-sweep rows: artifact-shaped full-pool scoring at pinned
+    // fork-join widths (bit-identical outputs across the sweep).
+    let flat = ens.flatten();
+    for t in [1usize, 4, 8] {
+        ceal::util::parallel::with_threads(t, || {
+            b.bench_items(&format!("scoring/flat_predict/pool2000_t{t}"), 2000.0, || {
+                flat.predict_batch(&feats.workflow)
+            });
+        });
+    }
+
     match Runtime::load_default() {
         Ok(rt) => {
             let pjrt = Scorer::Pjrt(rt);

@@ -33,6 +33,23 @@ fn main() {
         });
     }
 
+    // Thread-sweep rows: one CEAL cell at pinned fork-join widths —
+    // the inner loop (GBT training, pool scoring, batch measurement)
+    // is what scales; results are bit-identical across the sweep.
+    let sweep_prob = Problem::new(WorkflowId::LV, Objective::CompTime);
+    let sweep_pool = Pool::generate(&sweep_prob, 1000, 0xCEA1);
+    for t in [1usize, 4, 8] {
+        ceal::util::parallel::with_threads(t, || {
+            let tuner = Ceal::new(CealParams::no_hist());
+            let mut rep = 0u64;
+            b.bench(&format!("tuner/CEAL/LV_m30_pool1000_t{t}"), || {
+                rep += 1;
+                let mut rng = Pcg32::new(0xFADE ^ rep, 0);
+                tuner.run(&sweep_prob, &sweep_pool, &scorer, 30, &mut rng)
+            });
+        });
+    }
+
     // Registry-added scenario cells (CEAL vs RS) so new-workflow wiring
     // shows up in every bench run: the CH5 deep chain and DM4 diamond.
     for id in [WorkflowId::CH5, WorkflowId::DM4] {

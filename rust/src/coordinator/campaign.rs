@@ -145,11 +145,11 @@ impl Campaign {
     }
 }
 
+/// Default campaign worker width: `CEAL_THREADS` when set, else the
+/// hardware parallelism (see [`crate::util::parallel::default_threads`];
+/// the CLI's `--threads` takes precedence over both).
 pub fn default_threads() -> usize {
-    std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(4)
-        .min(16)
+    crate::util::parallel::default_threads()
 }
 
 /// Per-repetition metrics.
@@ -330,6 +330,37 @@ pub fn run_campaign(algo: Algo, c: &Campaign) -> Aggregate {
     }
 }
 
+std::thread_local! {
+    /// Per-worker scorer cache for parallel repetitions: a PJRT client
+    /// is thread-local and expensive to build, and pool workers are
+    /// persistent, so each worker builds a scorer once per kind and
+    /// reuses it across every repetition (and campaign) it executes.
+    static REP_SCORER: std::cell::RefCell<Option<(ScorerKind, std::rc::Rc<Scorer>)>> =
+        const { std::cell::RefCell::new(None) };
+}
+
+fn with_thread_scorer<R>(kind: ScorerKind, f: impl FnOnce(&Scorer) -> R) -> R {
+    let scorer = REP_SCORER.with(|cache| {
+        let mut cache = cache.borrow_mut();
+        match &*cache {
+            Some((k, s)) if *k == kind => std::rc::Rc::clone(s),
+            _ => {
+                let s = std::rc::Rc::new(kind.build());
+                *cache = Some((kind, std::rc::Rc::clone(&s)));
+                s
+            }
+        }
+    });
+    f(&scorer)
+}
+
+/// Repetitions fan out as one task each on the process-wide worker
+/// pool ([`crate::util::parallel`]).  Nested use is the point: a rep's
+/// own GBT training, pool scoring and batch measurements fork inner
+/// jobs on the same pool, so campaigns with fewer reps than cores no
+/// longer strand the remaining cores.  Each rep derives its RNG from
+/// (campaign seed, rep, algo) exactly as the sequential path does, and
+/// results land in per-rep slots — bit-identical for any worker count.
 fn run_reps_parallel(
     algo: Algo,
     tuner: &dyn Tuner,
@@ -337,30 +368,11 @@ fn run_reps_parallel(
     pool: &Pool,
     c: &Campaign,
 ) -> Vec<RepResult> {
-    let n_workers = c.threads.min(c.reps.max(1));
-    let next = std::sync::atomic::AtomicUsize::new(0);
-    let results: Vec<std::sync::Mutex<Option<RepResult>>> =
-        (0..c.reps).map(|_| std::sync::Mutex::new(None)).collect();
-    std::thread::scope(|scope| {
-        for _ in 0..n_workers {
-            scope.spawn(|| {
-                // one scorer per worker (a PJRT client is thread-local)
-                let scorer = c.scorer.build();
-                loop {
-                    let rep = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                    if rep >= c.reps {
-                        break;
-                    }
-                    let r = run_rep(algo, tuner, prob, pool, &scorer, c, rep);
-                    *results[rep].lock().unwrap() = Some(r);
-                }
-            });
-        }
-    });
-    results
-        .into_iter()
-        .map(|m| m.into_inner().unwrap().expect("rep completed"))
-        .collect()
+    crate::util::parallel::map_indexed(c.threads, c.reps, |rep| {
+        with_thread_scorer(c.scorer, |scorer| {
+            run_rep(algo, tuner, prob, pool, scorer, c, rep)
+        })
+    })
 }
 
 #[cfg(test)]

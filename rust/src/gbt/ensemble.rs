@@ -11,6 +11,7 @@
 //! the ensemble bias is folded into tree 0's leaves at flatten time.
 
 use crate::config::F_MAX;
+use crate::util::parallel;
 
 /// Artifact-side maxima (python/compile/kernels/gbt_predict.py).
 pub const TREES_MAX: usize = 64;
@@ -25,6 +26,20 @@ pub const NEG_PRED: f32 = -1.0e9;
 /// a block's feature rows plus leaf indices to stay L1-resident, large
 /// enough to amortize each tree's (feature, threshold) loads.
 pub const PREDICT_BLOCK: usize = 64;
+
+/// Below this many rows `predict_batch` stays row-at-a-time: no block
+/// buffers, no fork-join hand-off — the per-batch single-config path
+/// of the tuners' inner loops must not pay batch-dispatch setup.
+pub const PREDICT_SMALL: usize = 16;
+
+/// Rows needed before `predict_batch` shards row blocks across the
+/// worker pool (below it one thread saturates the memory system).
+const PREDICT_PAR_ROWS: usize = 512;
+
+/// Rows per parallel task — a multiple of [`PREDICT_BLOCK`], fixed so
+/// chunk boundaries (and therefore results) never depend on the
+/// worker count.
+const PREDICT_CHUNK: usize = 128;
 
 /// A trained oblivious-GBT ensemble (compact, depth = `depth`).
 #[derive(Clone, Debug, PartialEq)]
@@ -92,17 +107,39 @@ impl Ensemble {
     /// [`PREDICT_BLOCK`], and within a block each tree's per-level
     /// (feature, threshold) pair is loaded once and applied across the
     /// whole block — the structure-of-arrays hot path used for
-    /// campaign-scale pool scoring.  Per row, the accumulation order
-    /// (bias, then trees ascending) is identical to [`Self::predict`],
-    /// so results match the row-at-a-time path bit for bit.
+    /// campaign-scale pool scoring.  Pool-sized batches additionally
+    /// shard fixed [`PREDICT_CHUNK`]-row chunks across the worker pool
+    /// (each chunk has one writer), while batches under
+    /// [`PREDICT_SMALL`] skip block and dispatch setup entirely.  Per
+    /// row, the accumulation order (bias, then trees ascending) is
+    /// identical to [`Self::predict`] on every path, so results match
+    /// the row-at-a-time predictor bit for bit at any batch size and
+    /// worker count.
     pub fn predict_batch(&self, xs: &[[f32; F_MAX]]) -> Vec<f32> {
+        let n = xs.len();
+        if n < PREDICT_SMALL {
+            // small-batch fast path: single-config scoring calls
+            return xs.iter().map(|x| self.predict(x)).collect();
+        }
+        let mut out = vec![self.bias; n];
+        let width = parallel::width_for(n, PREDICT_PAR_ROWS);
+        parallel::for_each_chunk_mut(width, PREDICT_CHUNK, &mut out, |ci, acc| {
+            let start = ci * PREDICT_CHUNK;
+            self.predict_blocked(&xs[start..start + acc.len()], acc);
+        });
+        out
+    }
+
+    /// Tree-major blocked evaluation of `rows_all` into `acc_all`
+    /// (pre-seeded with the bias) — the kernel [`Self::predict_batch`]
+    /// runs per chunk.
+    fn predict_blocked(&self, rows_all: &[[f32; F_MAX]], acc_all: &mut [f32]) {
         let n_trees = self.n_trees();
         let leaves_w = 1usize << self.depth;
-        let mut out = vec![self.bias; xs.len()];
         let mut leaf_idx = [0usize; PREDICT_BLOCK];
-        for (rows, acc) in xs
+        for (rows, acc) in rows_all
             .chunks(PREDICT_BLOCK)
-            .zip(out.chunks_mut(PREDICT_BLOCK))
+            .zip(acc_all.chunks_mut(PREDICT_BLOCK))
         {
             for t in 0..n_trees {
                 let base = t * self.depth;
@@ -123,7 +160,6 @@ impl Ensemble {
                 }
             }
         }
-        out
     }
 
     /// Flatten to artifact shape `[TREES_MAX, DEPTH_MAX]` /
@@ -223,11 +259,18 @@ impl FlatEnsemble {
     }
 
     /// Batched evaluation of the flattened format, blocked like
-    /// [`Ensemble::predict_batch`].  Trailing padding trees — leaf
-    /// tables that are identically zero — contribute exactly 0 per row
-    /// and are skipped, so each result equals [`Self::predict`] on the
-    /// same row (`==`; only a `-0.0`/`+0.0` sign can differ).
+    /// [`Ensemble::predict_batch`] and sharded across the worker pool
+    /// at pool scale (batches under [`PREDICT_SMALL`] go row-at-a-time
+    /// with no dispatch setup).  Trailing padding trees — leaf tables
+    /// that are identically zero — contribute exactly 0 per row and
+    /// are skipped on the blocked path, so each result equals
+    /// [`Self::predict`] on the same row (`==`; only a `-0.0`/`+0.0`
+    /// sign can differ) at any batch size and worker count.
     pub fn predict_batch(&self, xs: &[[f32; F_MAX]]) -> Vec<f32> {
+        let n = xs.len();
+        if n < PREDICT_SMALL {
+            return xs.iter().map(|x| self.predict(x)).collect();
+        }
         let n_active = (0..TREES_MAX)
             .rev()
             .find(|&t| {
@@ -236,11 +279,22 @@ impl FlatEnsemble {
                     .any(|&v| v != 0.0)
             })
             .map_or(0, |t| t + 1);
-        let mut out = vec![0.0f32; xs.len()];
+        let mut out = vec![0.0f32; n];
+        let width = parallel::width_for(n, PREDICT_PAR_ROWS);
+        parallel::for_each_chunk_mut(width, PREDICT_CHUNK, &mut out, |ci, acc| {
+            let start = ci * PREDICT_CHUNK;
+            self.predict_blocked(n_active, &xs[start..start + acc.len()], acc);
+        });
+        out
+    }
+
+    /// Blocked kernel of [`Self::predict_batch`], evaluating the first
+    /// `n_active` trees of `rows_all` into zero-seeded `acc_all`.
+    fn predict_blocked(&self, n_active: usize, rows_all: &[[f32; F_MAX]], acc_all: &mut [f32]) {
         let mut leaf_idx = [0usize; PREDICT_BLOCK];
-        for (rows, acc) in xs
+        for (rows, acc) in rows_all
             .chunks(PREDICT_BLOCK)
-            .zip(out.chunks_mut(PREDICT_BLOCK))
+            .zip(acc_all.chunks_mut(PREDICT_BLOCK))
         {
             for t in 0..n_active {
                 let base = t * DEPTH_MAX;
@@ -261,7 +315,6 @@ impl FlatEnsemble {
                 }
             }
         }
-        out
     }
 }
 

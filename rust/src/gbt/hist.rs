@@ -10,11 +10,18 @@
 //! scan, instead of rescanning all n samples per candidate.
 
 use crate::config::F_MAX;
+use crate::util::parallel;
 
 /// Hard cap on candidate thresholds per feature: codes live in `u8`
 /// and range over `0..=n_thresholds`, so at most 255 thresholds
 /// (256 bins) are representable.
 pub const MAX_THRESHOLDS: usize = 255;
+
+/// Quantization / histogram passes dispatch to the worker pool only
+/// when the pass touches at least this many (row, feature) cells —
+/// below it (the paper's 25-100-sample training sets) the fork-join
+/// hand-off costs more than it saves and the code runs inline.
+pub(crate) const PAR_MIN_CELLS: usize = 4096;
 
 /// Candidate split thresholds per feature: midpoints between adjacent
 /// quantiles of the observed values, sorted ascending and deduplicated.
@@ -60,22 +67,28 @@ pub struct BinnedDataset {
 impl BinnedDataset {
     /// Quantize the first `n_features` columns of `xs` against at most
     /// `n_bins` candidate thresholds per feature.
+    ///
+    /// Features quantize independently, so the pass forks one task per
+    /// feature across the worker pool (each task sorts its candidate
+    /// quantiles and writes its own `codes[f*n .. (f+1)*n]` column —
+    /// single writer per slot, bit-identical for any worker count).
     pub fn build(xs: &[[f32; F_MAX]], n_features: usize, n_bins: usize) -> BinnedDataset {
         let n = xs.len();
-        let thresholds: Vec<Vec<f32>> = (0..n_features)
-            .map(|f| candidate_thresholds(xs, f, n_bins))
-            .collect();
+        let width = parallel::width_for(n * n_features, PAR_MIN_CELLS);
         let mut codes = vec![0u8; n_features * n];
-        for (f, thr) in thresholds.iter().enumerate() {
-            if thr.is_empty() {
-                continue; // all codes stay 0
+        let cp = parallel::SendPtr::new(codes.as_mut_ptr());
+        let thresholds: Vec<Vec<f32>> = parallel::map_indexed(width, n_features, |f| {
+            let thr = candidate_thresholds(xs, f, n_bins);
+            if !thr.is_empty() {
+                // SAFETY: column f is exclusive to this task.
+                let col = unsafe { std::slice::from_raw_parts_mut(cp.get().add(f * n), n) };
+                for (c, x) in col.iter_mut().zip(xs) {
+                    let v = x[f];
+                    *c = thr.partition_point(|&t| v > t) as u8;
+                }
             }
-            let col = &mut codes[f * n..(f + 1) * n];
-            for (c, x) in col.iter_mut().zip(xs) {
-                let v = x[f];
-                *c = thr.partition_point(|&t| v > t) as u8;
-            }
-        }
+            thr
+        });
         let mut offsets = Vec::with_capacity(n_features);
         let mut total_bins = 0usize;
         for thr in &thresholds {
@@ -130,21 +143,93 @@ impl LevelHistogram {
         }
     }
 
-    /// Accumulate all features in one pass over the samples per
-    /// feature: O(n · F) total, independent of the number of
-    /// candidate thresholds.
-    pub fn fill(&mut self, binned: &BinnedDataset, leaf_of: &[usize], grad: &[f64]) {
-        debug_assert_eq!(leaf_of.len(), binned.n_rows);
+    /// Zero and re-accumulate all features for leaves `0..n_leaves` in
+    /// one pass over the samples per feature: O(n · F) total,
+    /// independent of the number of candidate thresholds.
+    ///
+    /// The pass **partitions features across workers** (`width`-wide
+    /// fork-join on the process pool): feature `f` owns the histogram
+    /// columns `{leaf * stride + offset(f) + bin}`, so every
+    /// (leaf, feature, bin) cell has exactly one writer, no merge step
+    /// exists, and the result is bit-identical for every worker count.
+    pub fn fill(
+        &mut self,
+        binned: &BinnedDataset,
+        leaf_of: &[usize],
+        grad: &[f64],
+        n_leaves: usize,
+        width: usize,
+    ) {
+        self.fill_scan(binned, leaf_of, grad, n_leaves, width, |_, _| ());
+    }
+
+    /// [`fill`](Self::fill) fused with a per-feature post-pass: after
+    /// feature `f`'s columns are filled, `scan(f, view)` runs *inside
+    /// the same task* (split search, in the trainer), and the results
+    /// are collected in feature order.  One fork-join per tree level
+    /// instead of two.
+    pub fn fill_scan<R: Send>(
+        &mut self,
+        binned: &BinnedDataset,
+        leaf_of: &[usize],
+        grad: &[f64],
+        n_leaves: usize,
+        width: usize,
+        scan: impl for<'v> Fn(usize, FeatureHist<'v>) -> R + Sync,
+    ) -> Vec<R> {
+        // Real asserts, not debug: the fill writes through raw pointers
+        // (one writer per cell), so caller mistakes must stay a panic —
+        // as they were under the old bounds-checked indexing — never an
+        // out-of-bounds write in release builds.
+        assert_eq!(leaf_of.len(), binned.n_rows, "leaf_of length mismatch");
+        assert!(
+            n_leaves * binned.total_bins <= self.grad.len()
+                && n_leaves * binned.total_bins <= self.count.len(),
+            "histogram sized for fewer than {n_leaves} leaves"
+        );
+        assert!(
+            leaf_of.iter().all(|&l| l < n_leaves),
+            "leaf index out of range"
+        );
         let stride = binned.total_bins;
-        for f in 0..binned.n_features {
-            let codes = binned.feature_codes(f);
+        let gp = parallel::SendPtr::new(self.grad.as_mut_ptr());
+        let cp = parallel::SendPtr::new(self.count.as_mut_ptr());
+        parallel::map_indexed(width, binned.n_features, move |f| {
             let off = binned.offset(f);
-            for i in 0..binned.n_rows {
-                let slot = leaf_of[i] * stride + off + codes[i] as usize;
-                self.grad[slot] += grad[i];
-                self.count[slot] += 1;
+            let nb = binned.n_bins(f);
+            let codes = binned.feature_codes(f);
+            // SAFETY: feature `f` owns slots {l*stride + off + b} for
+            // b < nb; the per-feature slot ranges are pairwise disjoint,
+            // so this task is the only writer of every cell it touches.
+            unsafe {
+                let g = gp.get();
+                let c = cp.get();
+                for l in 0..n_leaves {
+                    let base = l * stride + off;
+                    for b in 0..nb {
+                        *g.add(base + b) = 0.0;
+                        *c.add(base + b) = 0;
+                    }
+                }
+                for (i, &leaf) in leaf_of.iter().enumerate() {
+                    let slot = leaf * stride + off + codes[i] as usize;
+                    *g.add(slot) += grad[i];
+                    *c.add(slot) += 1;
+                }
             }
-        }
+            scan(
+                f,
+                FeatureHist {
+                    grad: gp,
+                    count: cp,
+                    stride,
+                    off,
+                    n_leaves,
+                    n_bins: nb,
+                    _hist: std::marker::PhantomData,
+                },
+            )
+        })
     }
 
     /// Gradient sum of (leaf `l`, feature-offset `off`, bin `b`).
@@ -157,6 +242,43 @@ impl LevelHistogram {
     #[inline]
     pub fn count_at(&self, stride: usize, l: usize, off: usize, b: usize) -> u32 {
         self.count[l * stride + off + b]
+    }
+}
+
+/// Read-only view of one feature's freshly filled histogram columns,
+/// handed to the [`LevelHistogram::fill_scan`] callback.  Only valid
+/// for the feature whose task created it: other features' columns may
+/// still be written concurrently by their own tasks.  The lifetime
+/// ties the view to the histogram borrow (and, via the callback's
+/// higher-ranked bound, keeps it from escaping its task), so safe
+/// code cannot read through it after the histogram is gone.
+pub struct FeatureHist<'a> {
+    grad: parallel::SendPtr<f64>,
+    count: parallel::SendPtr<u32>,
+    stride: usize,
+    off: usize,
+    n_leaves: usize,
+    n_bins: usize,
+    _hist: std::marker::PhantomData<&'a LevelHistogram>,
+}
+
+impl FeatureHist<'_> {
+    /// Summed gradient of (leaf `l`, bin `b`) of this view's feature.
+    #[inline]
+    pub fn grad(&self, l: usize, b: usize) -> f64 {
+        assert!(l < self.n_leaves && b < self.n_bins, "FeatureHist read out of range");
+        // SAFETY: (l, b) is in range (asserted), so the slot is inside
+        // this feature's range, which the creating task owns
+        // exclusively (see `fill_scan`).
+        unsafe { *self.grad.get().add(l * self.stride + self.off + b) }
+    }
+
+    /// Sample count of (leaf `l`, bin `b`) of this view's feature.
+    #[inline]
+    pub fn count(&self, l: usize, b: usize) -> u32 {
+        assert!(l < self.n_leaves && b < self.n_bins, "FeatureHist read out of range");
+        // SAFETY: as for `grad`.
+        unsafe { *self.count.get().add(l * self.stride + self.off + b) }
     }
 }
 
@@ -228,7 +350,7 @@ mod tests {
         let grad: Vec<f64> = (0..200).map(|_| rng.normal()).collect();
         let leaf_of: Vec<usize> = (0..200).map(|_| rng.gen_range(4) as usize).collect();
         let mut h = LevelHistogram::new(4, b.total_bins);
-        h.fill(&b, &leaf_of, &grad);
+        h.fill(&b, &leaf_of, &grad, 4, 1);
         for l in 0..4 {
             let want_cnt = leaf_of.iter().filter(|&&x| x == l).count() as u32;
             let want_g: f64 = (0..200).filter(|&i| leaf_of[i] == l).map(|i| grad[i]).sum();
@@ -243,6 +365,28 @@ mod tests {
                 assert_eq!(cnt, want_cnt, "leaf {l} feature {f}");
                 assert!((g - want_g).abs() < 1e-9, "leaf {l} feature {f}");
             }
+        }
+    }
+
+    /// The per-feature parallel fill must be bit-identical to the
+    /// sequential pass for any worker count (single writer per cell).
+    #[test]
+    fn fill_is_thread_count_invariant() {
+        let mut rng = Pcg32::new(14, 0);
+        let xs = rows(&mut rng, 400);
+        let b = BinnedDataset::build(&xs, 6, 16);
+        let grad: Vec<f64> = (0..400).map(|_| rng.normal()).collect();
+        let leaf_of: Vec<usize> = (0..400).map(|_| rng.gen_range(8) as usize).collect();
+        let mut reference = LevelHistogram::new(8, b.total_bins);
+        reference.fill(&b, &leaf_of, &grad, 8, 1);
+        for width in [2usize, 5, 8] {
+            let mut h = LevelHistogram::new(8, b.total_bins);
+            h.fill(&b, &leaf_of, &grad, 8, width);
+            assert_eq!(h.count, reference.count, "width {width}");
+            assert!(
+                h.grad.iter().zip(&reference.grad).all(|(a, r)| a == r),
+                "gradients diverged at width {width}"
+            );
         }
     }
 }

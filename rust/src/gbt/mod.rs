@@ -35,14 +35,20 @@
 //! (structure-of-arrays leaf-index registers, tree-major sweep) so
 //! each tree's level tensors are loaded once per block instead of
 //! once per row, while per-row results stay equal to the
-//! row-at-a-time predictors.
+//! row-at-a-time predictors.  Pool-sized batches shard fixed row
+//! chunks across the process worker pool (bit-identical for any
+//! worker count); batches under [`ensemble::PREDICT_SMALL`] skip the
+//! block/dispatch setup entirely.  Training parallelizes the same
+//! way: one task per feature per tree level, single writer per
+//! histogram cell, ordered split reduction.
 
 pub mod ensemble;
 pub mod hist;
 pub mod train;
 
 pub use ensemble::{
-    Ensemble, FlatEnsemble, DEPTH_MAX, LEAVES_MAX, NEG_PRED, PREDICT_BLOCK, TREES_MAX,
+    Ensemble, FlatEnsemble, DEPTH_MAX, LEAVES_MAX, NEG_PRED, PREDICT_BLOCK, PREDICT_SMALL,
+    TREES_MAX,
 };
 pub use hist::BinnedDataset;
 pub use train::{train, train_exact, train_log, train_log_exact, GbtParams};

@@ -16,14 +16,21 @@
 //!   O(n·F) pass and evaluates *every* candidate threshold by scanning
 //!   bin suffix sums in O(leaves·F·bins), so the per-level cost is
 //!   O(n·F + leaves·F·bins) instead of the exact engine's O(F·bins·n).
+//!   On large training sets the per-level histogram+scan pass forks
+//!   one task per feature across the process-wide worker pool
+//!   ([`crate::util::parallel`]): each (leaf, feature, bin) cell has a
+//!   single writer and the best-split arg-max reduces in feature
+//!   order, so the trained ensemble is **bit-identical for every
+//!   worker count** (pinned by `tests/parallel_invariance.rs`).
 //! * [`train_exact`] — the original brute-force engine that rescans all
 //!   samples per candidate.  Kept as the differential-testing oracle
 //!   (`tests/tuning_properties.rs` pins the histogram engine's holdout
 //!   quality against it); both are bit-deterministic for fixed inputs.
 
 use super::ensemble::Ensemble;
-use super::hist::{candidate_thresholds, BinnedDataset, LevelHistogram};
+use super::hist::{candidate_thresholds, BinnedDataset, FeatureHist, LevelHistogram, PAR_MIN_CELLS};
 use crate::config::F_MAX;
+use crate::util::parallel;
 
 /// Training hyper-parameters.
 #[derive(Clone, Copy, Debug)]
@@ -136,77 +143,36 @@ pub fn train(xs: &[[f32; F_MAX]], y: &[f64], n_features: usize, p: &GbtParams) -
     let stride = binned.total_bins;
     // Scratch reused across levels/trees (peak size: deepest level).
     let mut hist = LevelHistogram::new(leaves_w, stride);
-    let mut right_g = vec![0.0f64; leaves_w];
-    let mut right_c = vec![0u32; leaves_w];
-    let mut gains: Vec<f64> = Vec::new();
+    // Fork-join width for the per-level histogram+scan job; task
+    // boundaries (one per feature) never depend on it, so the trained
+    // ensemble is bit-identical for every worker count.
+    let width = parallel::width_for(n * n_features, PAR_MIN_CELLS);
+    let mut grad = vec![0.0f64; n];
+    let mut idx = vec![0usize; n];
 
     for _tree in 0..p.n_trees {
-        let grad: Vec<f64> = (0..n).map(|i| pred[i] - y[i]).collect();
+        build_gradient(&mut grad, &pred, y, width);
         // leaf assignment as we grow levels
-        let mut idx = vec![0usize; n];
+        idx.iter_mut().for_each(|v| *v = 0);
         let mut tree_feat = vec![0u32; p.depth];
         let mut tree_thr = vec![f32::INFINITY; p.depth];
 
         for d in 0..p.depth {
             let n_leaves = 1usize << d;
-            // per-leaf totals (counts are exact hessian sums)
-            let mut leaf_g = vec![0.0f64; n_leaves];
-            let mut leaf_c = vec![0u32; n_leaves];
-            for i in 0..n {
-                leaf_g[idx[i]] += grad[i];
-                leaf_c[idx[i]] += 1;
-            }
-            let parent_score: f64 = (0..n_leaves)
-                .map(|l| leaf_g[l] * leaf_g[l] / (leaf_c[l] as f64 + p.lambda))
-                .sum();
-
-            // One O(n·F) pass accumulates every candidate's statistics.
-            hist.grad[..n_leaves * stride].iter_mut().for_each(|g| *g = 0.0);
-            hist.count[..n_leaves * stride].iter_mut().for_each(|c| *c = 0);
-            hist.fill(&binned, &idx, &grad);
-
+            // One fused fork-join per level: each feature's task zeroes
+            // and refills its own histogram columns (one writer per
+            // (leaf, feature, bin) cell — no merge), then scans its own
+            // candidate cuts, returning its best (gain, cut).
+            let best_per_f = hist.fill_scan(&binned, &idx, &grad, n_leaves, width, |f, h| {
+                scan_feature(&binned, p, n_leaves, f, &h)
+            });
+            // Ordered reduction, ascending f with strict `>`: identical
+            // arg-max tie-breaks to the sequential and exact engines,
+            // regardless of which worker scanned which feature.
             let mut best: Option<(f64, usize, usize)> = None; // (gain, f, cut)
-            for f in 0..n_features {
-                let n_thr = binned.thresholds[f].len();
-                if n_thr == 0 {
-                    continue;
-                }
-                let off = binned.offset(f);
-                // Suffix sums over bins: cut k's right child is bins
-                // k+1..=n_thr.  Walk k downward accumulating, record
-                // each cut's gain, then replay upward so the arg-max
-                // tie-break matches the exact engine's ascending scan.
-                right_g[..n_leaves].iter_mut().for_each(|g| *g = 0.0);
-                right_c[..n_leaves].iter_mut().for_each(|c| *c = 0);
-                gains.clear();
-                gains.resize(n_thr, f64::NAN);
-                for k in (0..n_thr).rev() {
-                    let mut score = 0.0f64;
-                    let mut valid = false;
-                    for l in 0..n_leaves {
-                        right_g[l] += hist.grad_at(stride, l, off, k + 1);
-                        right_c[l] += hist.count_at(stride, l, off, k + 1);
-                        let hr = right_c[l] as f64;
-                        let hl = (leaf_c[l] - right_c[l]) as f64;
-                        let gr = right_g[l];
-                        let gl = leaf_g[l] - gr;
-                        if hl >= p.min_child_weight && hr >= p.min_child_weight {
-                            valid = true;
-                            score += gl * gl / (hl + p.lambda) + gr * gr / (hr + p.lambda);
-                        } else {
-                            // unsplit leaf keeps parent contribution
-                            let g = leaf_g[l];
-                            let h = leaf_c[l] as f64;
-                            score += g * g / (h + p.lambda);
-                        }
-                    }
-                    gains[k] = if valid { score - parent_score } else { f64::NAN };
-                }
-                for (k, &gain) in gains.iter().enumerate() {
-                    if gain.is_nan() {
-                        continue;
-                    }
-                    if gain > 1e-12 && best.map(|(bg, _, _)| gain > bg).unwrap_or(true) {
+            for (f, bf) in best_per_f.iter().enumerate() {
+                if let Some((gain, k)) = *bf {
+                    if best.map(|(bg, _, _)| gain > bg).unwrap_or(true) {
                         best = Some((gain, f, k));
                     }
                 }
@@ -217,9 +183,9 @@ pub fn train(xs: &[[f32; F_MAX]], y: &[f64], n_features: usize, p: &GbtParams) -
                     tree_thr[d] = binned.thresholds[f][k];
                     let codes = binned.feature_codes(f);
                     let cut = k as u8;
-                    for i in 0..n {
-                        if codes[i] > cut {
-                            idx[i] |= 1 << d;
+                    for (v, &c) in idx.iter_mut().zip(codes) {
+                        if c > cut {
+                            *v |= 1 << d;
                         }
                     }
                 }
@@ -246,6 +212,117 @@ pub fn train(xs: &[[f32; F_MAX]], y: &[f64], n_features: usize, p: &GbtParams) -
         leaves: leaves_out,
         bias: bias as f32,
     }
+}
+
+/// `grad[i] = pred[i] - y[i]`, element-wise over fixed 1024-element
+/// chunks — the chunk layout depends only on `n`, so the pass is
+/// bit-identical for every worker count.
+fn build_gradient(grad: &mut [f64], pred: &[f64], y: &[f64], width: usize) {
+    const CHUNK: usize = 1024;
+    parallel::for_each_chunk_mut(width, CHUNK, grad, |ci, out| {
+        let base = ci * CHUNK;
+        for (k, g) in out.iter_mut().enumerate() {
+            *g = pred[base + k] - y[base + k];
+        }
+    });
+}
+
+/// Per-worker split-scan scratch (leaf totals + suffix sums): pool
+/// workers are persistent, so the per-level feature tasks allocate
+/// nothing once their worker is warm, matching the old engine's
+/// hoisted scratch.
+#[derive(Default)]
+struct ScanScratch {
+    leaf_g: Vec<f64>,
+    leaf_c: Vec<u32>,
+    right_g: Vec<f64>,
+    right_c: Vec<u32>,
+}
+
+std::thread_local! {
+    static SCAN_SCRATCH: std::cell::RefCell<ScanScratch> =
+        std::cell::RefCell::new(ScanScratch::default());
+}
+
+/// Best (gain, cut) of feature `f` at one tree level, from its freshly
+/// filled histogram columns (runs inside that feature's fill task).
+///
+/// Per-leaf gradient/count totals are recovered from the feature's own
+/// bins — every feature's bins partition the rows, so the counts are
+/// the exact row counts and the scan needs no cross-feature state.
+/// Cuts are walked descending while the suffix sums accumulate; `>=`
+/// keeps the lowest cut among exact ties, matching the exact engine's
+/// ascending strict-`>` scan.
+fn scan_feature(
+    binned: &BinnedDataset,
+    p: &GbtParams,
+    n_leaves: usize,
+    f: usize,
+    h: &FeatureHist<'_>,
+) -> Option<(f64, usize)> {
+    let n_thr = binned.thresholds[f].len();
+    if n_thr == 0 {
+        return None;
+    }
+    SCAN_SCRATCH.with(|scratch| {
+        let mut scratch = scratch.borrow_mut();
+        let ScanScratch {
+            leaf_g,
+            leaf_c,
+            right_g,
+            right_c,
+        } = &mut *scratch;
+        leaf_g.clear();
+        leaf_g.resize(n_leaves, 0.0);
+        leaf_c.clear();
+        leaf_c.resize(n_leaves, 0);
+        right_g.clear();
+        right_g.resize(n_leaves, 0.0);
+        right_c.clear();
+        right_c.resize(n_leaves, 0);
+        let mut parent_score = 0.0f64;
+        for l in 0..n_leaves {
+            let mut g = 0.0f64;
+            let mut c = 0u32;
+            for b in 0..=n_thr {
+                g += h.grad(l, b);
+                c += h.count(l, b);
+            }
+            leaf_g[l] = g;
+            leaf_c[l] = c;
+            parent_score += g * g / (c as f64 + p.lambda);
+        }
+        let mut best: Option<(f64, usize)> = None;
+        for k in (0..n_thr).rev() {
+            let mut score = 0.0f64;
+            let mut valid = false;
+            for l in 0..n_leaves {
+                right_g[l] += h.grad(l, k + 1);
+                right_c[l] += h.count(l, k + 1);
+                let hr = right_c[l] as f64;
+                let hl = (leaf_c[l] - right_c[l]) as f64;
+                let gr = right_g[l];
+                let gl = leaf_g[l] - gr;
+                if hl >= p.min_child_weight && hr >= p.min_child_weight {
+                    valid = true;
+                    score += gl * gl / (hl + p.lambda) + gr * gr / (hr + p.lambda);
+                } else {
+                    // unsplit leaf keeps parent contribution
+                    let g = leaf_g[l];
+                    let hp = leaf_c[l] as f64;
+                    score += g * g / (hp + p.lambda);
+                }
+            }
+            if !valid {
+                continue;
+            }
+            let gain = score - parent_score;
+            if gain > 1e-12 && best.map(|(bg, _)| gain >= bg).unwrap_or(true) {
+                best = Some((gain, k));
+            }
+        }
+        best
+    })
 }
 
 /// Leaf-weight solve + prediction update + tree emission, shared by
@@ -539,7 +616,8 @@ mod tests {
         // Same candidate sets and tie-breaks: in-sample fits of the two
         // engines must be statistically indistinguishable (they may
         // pick different near-tied splits only through last-bit f64
-        // rounding differences in the gradient sums).
+        // rounding of the gradient sums — the histogram engine folds
+        // leaf totals in bin order, the exact engine in row order).
         let mut rng = Pcg32::new(7, 0);
         let f = |x: &[f32; F_MAX]| {
             20.0 * (x[0] as f64) + 8.0 * (x[1] as f64) * (x[2] as f64)

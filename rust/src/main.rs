@@ -13,7 +13,7 @@
 //!   --reps N          repetitions per campaign cell    [40]
 //!   --pool N          pool / test-set size             [2000]
 //!   --seed N          root seed                        [0xCEA1]
-//!   --threads N       worker threads                   [#cpus]
+//!   --threads N       worker threads ($CEAL_THREADS)   [#cpus]
 //!   --scorer S        native | pjrt                    [native]
 //! tune flags:
 //!   --workflow W      any registered workflow (see `ceal info`) [LV]
@@ -49,6 +49,11 @@ fn parse_ctx(args: &Args) -> Result<ExpCtx, String> {
     ctx.pool_size = args.opt_usize("pool", ctx.pool_size)?;
     ctx.seed = args.opt_u64("seed", ctx.seed)?;
     ctx.threads = args.opt_usize("threads", ctx.threads)?;
+    // Precedence: --threads > CEAL_THREADS > available parallelism.
+    // The default already folds the env var in, so installing the
+    // resolved value makes every inner fork-join (GBT training, pool
+    // scoring, batch measurement) agree with the campaign width.
+    ceal::util::parallel::set_threads(ctx.threads);
     ctx.scorer = match args.opt_or("scorer", "native") {
         "native" => ScorerKind::Native,
         "pjrt" => ScorerKind::Pjrt,

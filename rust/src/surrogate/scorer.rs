@@ -95,6 +95,11 @@ impl Scorer {
 
     /// Score rows with a single ensemble (high-fidelity model or one
     /// component model). Returns f64 for downstream stats.
+    ///
+    /// The native path rides `Ensemble::predict_batch`: pool-sized row
+    /// batches shard across the process worker pool (bit-identical for
+    /// any worker count), while small batches — the tuners' per-config
+    /// calls — skip the dispatch entirely.
     pub fn score(&self, ens: &Ensemble, xs: &[[f32; F_MAX]]) -> Vec<f64> {
         match self {
             Scorer::Native => ens
@@ -114,7 +119,10 @@ impl Scorer {
     /// Low-fidelity combined score (Eqns 1-2) over per-component views.
     /// Component models are log-space: each prediction is exponentiated
     /// back to a time before the max/sum combination (matching the
-    /// lowfi artifact's semantics).
+    /// lowfi artifact's semantics).  Each component's batched
+    /// predictions parallelize row-wise like [`score`](Self::score);
+    /// the cheap exp/combine fold stays sequential in row order, so the
+    /// combined scores are bit-identical for any worker count.
     pub fn lowfi(
         &self,
         comps: &[Ensemble],

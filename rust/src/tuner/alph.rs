@@ -147,10 +147,9 @@ impl Tuner for Alph {
         let mut combiner: Option<Ensemble> = None;
 
         for iter in 0..iters {
-            let batch: Vec<(usize, f64)> = c_meas
-                .iter()
-                .map(|&i| (i, col.measure(&pool.configs[i])))
-                .collect();
+            // batch measurement fans across the worker pool, same as
+            // CEAL (bit-identical for any worker count)
+            let batch = col.measure_pool_batch(pool, &c_meas);
             // switch detection, mirroring CEAL
             if !using_hifi {
                 if let (Some(h), Some(c0)) = (&hifi, &combiner) {

@@ -122,12 +122,16 @@ impl BudgetedCeal {
             None
         };
         while col.total_cost() < cost_budget && measured_set.len() < pool.len() {
-            let scores: Vec<f64> = match (&hifi, using_hifi) {
-                (Some(h), true) => scorer.score(h, &pool.feats.workflow),
-                _ => lowfi_scores.clone(),
+            // M_L's pool scores are borrowed, not cloned, per round
+            let hifi_scores;
+            let scores: &[f64] = match (&hifi, using_hifi) {
+                (Some(h), true) => {
+                    hifi_scores = scorer.score(h, &pool.feats.workflow);
+                    &hifi_scores
+                }
+                _ => &lowfi_scores,
             };
-            let batch_idx =
-                top_unmeasured(&scores, &measured_set, p.batch.min(pool.len()));
+            let batch_idx = top_unmeasured(scores, &measured_set, p.batch.min(pool.len()));
             if batch_idx.is_empty() {
                 break;
             }

@@ -205,28 +205,32 @@ impl Tuner for Ceal {
         let mut using_hifi = false; // M = M_L (line 12)
         let mut hifi: Option<crate::gbt::Ensemble> = None; // line 13
 
+        // Switch-detection state, extended incrementally with each
+        // fresh batch instead of re-gathered over all measured rows
+        // every iteration (M_L's scores are fixed; only M_H's
+        // predictions must be recomputed — the model retrains).
+        let mut actual: Vec<f64> = Vec::with_capacity(m);
+        let mut xs_meas: Vec<[f32; crate::config::F_MAX]> = Vec::with_capacity(m);
+        let mut pred_l: Vec<f64> = Vec::with_capacity(m);
+
         for iter in 0..iters {
-            // line 15: run workflow for C_meas
-            let batch: Vec<(usize, f64)> = c_meas
-                .iter()
-                .map(|&i| (i, col.measure(&pool.configs[i])))
-                .collect();
+            // line 15: run workflow for C_meas, fanned across the
+            // worker pool (bit-identical for any worker count)
+            let batch = col.measure_pool_batch(pool, &c_meas);
+            measured.extend_from_slice(&batch);
             // lines 16-21: model switch detection.  We score both models
             // on everything measured so far *including* the fresh batch
             // (which is out-of-sample for the current M_H) — a fresh
             // m_B-sized batch alone is too small for stable top-1..3
             // recalls at the paper's budgets.
-            measured.extend_from_slice(&batch);
             if !using_hifi {
+                for &(i, y) in &batch {
+                    actual.push(y);
+                    xs_meas.push(pool.feats.workflow[i]);
+                    pred_l.push(lowfi_scores[i]);
+                }
                 if let Some(h) = &hifi {
-                    let actual: Vec<f64> = measured.iter().map(|&(_, y)| y).collect();
-                    let xs: Vec<_> = measured
-                        .iter()
-                        .map(|&(i, _)| pool.feats.workflow[i])
-                        .collect();
-                    let pred_h = scorer.score(h, &xs);
-                    let pred_l: Vec<f64> =
-                        measured.iter().map(|&(i, _)| lowfi_scores[i]).collect();
+                    let pred_h = scorer.score(h, &xs_meas);
                     let s_h = recall_sum_123(&pred_h, &actual);
                     let s_l = recall_sum_123(&pred_l, &actual);
                     if s_h >= s_l {
@@ -236,14 +240,17 @@ impl Tuner for Ceal {
             }
             // line 22: train/refine M_H on everything measured
             hifi = Some(train_hifi(prob, pool, &measured));
-            // lines 23-24: score pool with M, select next batch
+            // lines 23-24: score pool with M, select next batch.  M_L's
+            // pool scores are borrowed, not cloned, per iteration.
             if iter + 1 < iters {
-                let scores: Vec<f64> = if using_hifi {
-                    scorer.score(hifi.as_ref().unwrap(), &pool.feats.workflow)
+                let hifi_scores;
+                let scores: &[f64] = if using_hifi {
+                    hifi_scores = scorer.score(hifi.as_ref().unwrap(), &pool.feats.workflow);
+                    &hifi_scores
                 } else {
-                    lowfi_scores.clone()
+                    &lowfi_scores
                 };
-                c_meas = top_unmeasured(&scores, &measured_set, m_b);
+                c_meas = top_unmeasured(scores, &measured_set, m_b);
                 for &i in &c_meas {
                     measured_set.insert(i);
                 }

@@ -152,62 +152,73 @@ impl Pool {
     }
 
     /// One O(n²) graph build; see [`knn_graph`](Self::knn_graph).
+    /// Rows are independent, so the build fans fixed 32-row chunks
+    /// across the worker pool (each chunk task reuses its worker's
+    /// persistent distance scratch); neighbor lists are bit-identical
+    /// for any worker count.
     fn build_knn(&self, k: usize) -> Vec<Vec<usize>> {
+        const ROWS: usize = 32;
+        /// Pool rows needed before the build dispatches to the pool.
+        const KNN_PAR_MIN: usize = 256;
+        std::thread_local! {
+            static KNN_SCRATCH: std::cell::RefCell<Vec<(f64, usize)>> =
+                const { std::cell::RefCell::new(Vec::new()) };
+        }
         let n = self.len();
         let nf = self.feats.n_workflow.min(F_MAX);
         let xs = &self.feats.workflow;
         let by_dist_then_index = |a: &(f64, usize), b: &(f64, usize)| {
             a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1))
         };
-        let mut graph = Vec::with_capacity(n);
-        let mut dists: Vec<(f64, usize)> = Vec::with_capacity(n.saturating_sub(1));
-        for i in 0..n {
-            dists.clear();
-            for j in 0..n {
-                if j == i {
-                    continue;
+        let width = crate::util::parallel::width_for(n, KNN_PAR_MIN);
+        let mut graph: Vec<Vec<usize>> = vec![Vec::new(); n];
+        crate::util::parallel::for_each_chunk_mut(width, ROWS, &mut graph, |ci, rows| {
+            KNN_SCRATCH.with(|scratch| {
+                let mut dists = scratch.borrow_mut();
+                for (row_off, slot) in rows.iter_mut().enumerate() {
+                    let i = ci * ROWS + row_off;
+                    dists.clear();
+                    for j in 0..n {
+                        if j == i {
+                            continue;
+                        }
+                        let mut d = 0.0f64;
+                        for f in 0..nf {
+                            let diff = (xs[i][f] - xs[j][f]) as f64;
+                            d += diff * diff;
+                        }
+                        dists.push((d, j));
+                    }
+                    let keep = k.min(dists.len());
+                    if keep > 0 && keep < dists.len() {
+                        dists.select_nth_unstable_by(keep - 1, by_dist_then_index);
+                    }
+                    let kept = &mut dists[..keep];
+                    kept.sort_unstable_by(by_dist_then_index);
+                    *slot = kept.iter().map(|&(_, j)| j).collect();
                 }
-                let mut d = 0.0f64;
-                for f in 0..nf {
-                    let diff = (xs[i][f] - xs[j][f]) as f64;
-                    d += diff * diff;
-                }
-                dists.push((d, j));
-            }
-            let keep = k.min(dists.len());
-            if keep > 0 && keep < dists.len() {
-                dists.select_nth_unstable_by(keep - 1, by_dist_then_index);
-            }
-            let kept = &mut dists[..keep];
-            kept.sort_unstable_by(by_dist_then_index);
-            graph.push(kept.iter().map(|&(_, j)| j).collect());
-        }
+            });
+        });
         graph
     }
 }
 
-/// Noise-free ground truth for every config, optionally parallelized.
-/// Each worker owns one reusable simulator workspace, so the whole
-/// sweep performs O(threads) allocations regardless of pool size.
+/// Noise-free ground truth for every config, fanned across the
+/// process-wide worker pool in fixed 64-config chunks (boundaries
+/// independent of the worker count).  Each chunk task owns one
+/// reusable simulator workspace, so the sweep performs O(n/64)
+/// allocations regardless of pool size, and every config's expected
+/// measurement is deterministic — the result is bit-identical for any
+/// `threads`.
 fn measure_truth(prob: &Problem, configs: &[Config], threads: usize) -> Vec<f64> {
-    let value = |c: &Config, ws: &mut SimWorkspace| {
-        prob.objective.value(&prob.sim.expected_with(c, ws))
-    };
+    const CHUNK: usize = 64;
     let threads = threads.clamp(1, configs.len().max(1));
-    if threads <= 1 {
-        let mut ws = SimWorkspace::new();
-        return configs.iter().map(|c| value(c, &mut ws)).collect();
-    }
     let mut truth = vec![0.0f64; configs.len()];
-    let chunk = (configs.len() + threads - 1) / threads;
-    std::thread::scope(|scope| {
-        for (out, cfgs) in truth.chunks_mut(chunk).zip(configs.chunks(chunk)) {
-            scope.spawn(move || {
-                let mut ws = SimWorkspace::new();
-                for (o, c) in out.iter_mut().zip(cfgs) {
-                    *o = value(c, &mut ws);
-                }
-            });
+    crate::util::parallel::for_each_chunk_mut(threads, CHUNK, &mut truth, |ci, out| {
+        let mut ws = SimWorkspace::new();
+        for (k, o) in out.iter_mut().enumerate() {
+            let c = &configs[ci * CHUNK + k];
+            *o = prob.objective.value(&prob.sim.expected_with(c, &mut ws));
         }
     });
     truth
@@ -259,6 +270,46 @@ impl<'a> Collector<'a> {
         self.component_runs += 1;
         self.component_cost += y;
         y
+    }
+
+    /// Measure a batch of pool configurations (CEAL's Alg. 1 line-15
+    /// `C_meas` batch), fanning the noisy simulator runs across the
+    /// process-wide worker pool — one task per configuration.
+    ///
+    /// Determinism: every slot draws from its own child RNG derived
+    /// from the collector stream's current state and the slot index,
+    /// the main stream then advances exactly once, and cost accounting
+    /// folds in slot order after the join — so the returned pairs (and
+    /// all collector state) are bit-identical for every worker count,
+    /// including one.  A batch of zero or one goes through
+    /// [`measure`](Self::measure) directly (no dispatch setup).
+    pub fn measure_pool_batch(&mut self, pool: &Pool, idxs: &[usize]) -> Vec<(usize, f64)> {
+        if idxs.len() <= 1 {
+            return idxs
+                .iter()
+                .map(|&i| (i, self.measure(&pool.configs[i])))
+                .collect();
+        }
+        let rngs: Vec<Pcg32> = (0..idxs.len())
+            .map(|t| self.rng.derive(t as u64))
+            .collect();
+        self.rng.next_u64();
+        let prob = self.prob;
+        let mut ys = vec![0.0f64; idxs.len()];
+        let width = crate::util::parallel::current_threads();
+        crate::util::parallel::for_each_chunk_mut(width, 1, &mut ys, |slot, out| {
+            let mut rng = rngs[slot].clone();
+            let cfg = &pool.configs[idxs[slot]];
+            // `sim.run` rides the simulator's per-thread scratch
+            // workspace, so the fan-out allocates nothing once the
+            // pool workers are warm.
+            out[0] = prob.objective.value(&prob.sim.run(cfg, &mut rng));
+        });
+        for &y in &ys {
+            self.workflow_runs += 1;
+            self.workflow_cost += y;
+        }
+        idxs.iter().copied().zip(ys).collect()
     }
 
     /// Sample a feasible configuration for component `comp` (drawing

@@ -2,16 +2,18 @@
 //!
 //! The offline vendor set ships only the `xla` crate's dependency
 //! closure plus `anyhow`/`thiserror`, so the usual ecosystem crates
-//! (`rand`, `serde`, `clap`, `criterion`, `proptest`) are implemented
-//! here at the scale this project needs: a counter-based PCG RNG with
-//! keyed substreams, descriptive statistics, minimal JSON/CSV I/O,
-//! ASCII tables, a CLI argument parser, a micro-benchmark harness and a
-//! property-testing helper.
+//! (`rand`, `serde`, `clap`, `criterion`, `proptest`, `rayon`) are
+//! implemented here at the scale this project needs: a counter-based
+//! PCG RNG with keyed substreams, descriptive statistics, minimal
+//! JSON/CSV I/O, ASCII tables, a CLI argument parser, a micro-benchmark
+//! harness, a property-testing helper, and a deterministic fork-join
+//! worker pool ([`parallel`]).
 
 pub mod bench;
 pub mod cli;
 pub mod csv;
 pub mod json;
+pub mod parallel;
 pub mod prop;
 pub mod rng;
 pub mod stats;

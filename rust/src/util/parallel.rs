@@ -1,0 +1,520 @@
+//! Zero-dependency process-wide fork-join worker pool.
+//!
+//! One set of persistent workers serves every parallel hot path in the
+//! crate — GBT training ([`crate::gbt::train`]), batched ensemble
+//! scoring (`predict_batch`), pool ground-truth measurement, the CEAL
+//! inner loop's batch measurements, and campaign repetitions — so
+//! nested parallelism composes instead of oversubscribing: an outer
+//! fork-join (campaign reps) and the inner fork-joins issued from
+//! inside its tasks (model training, pool scoring) all draw from the
+//! same workers, and reps < cores no longer strands cores.
+//!
+//! ## Determinism: the ordered-reduction argument
+//!
+//! Every entry point obeys one contract — **bitwise thread-count
+//! invariance**: the result is byte-identical for any worker count,
+//! including one.  The construction is uniform:
+//!
+//! 1. Work is split into tasks whose *boundaries depend only on the
+//!    input* (a fixed chunk size, one task per feature, one task per
+//!    repetition) — never on the worker count.  Scheduling decides
+//!    only *when* a task runs, not *what* it computes.
+//! 2. Each task writes exclusively to its own output slot(s) — a
+//!    disjoint chunk of a result buffer, one feature's histogram
+//!    columns, one repetition's row.  No cell has two writers, so no
+//!    merge step exists that could reorder floating-point reductions.
+//! 3. Any cross-task reduction (folding costs, picking the best
+//!    split) happens *after* the join, sequentially, in task-index
+//!    order — the same order a single thread would produce.
+//!
+//! Under this contract a data race is impossible by construction and
+//! the parallel result equals the sequential one bit for bit, which is
+//! what `tests/parallel_invariance.rs` pins for threads ∈ {1, 2, 5, 8}.
+//!
+//! ## Sizing
+//!
+//! The worker pool itself is sized once from the hardware
+//! ([`hardware_threads`], capped at 16).  How many workers may join a
+//! given fork-join is the *width* passed per call; hot paths default it
+//! to [`current_threads`], which resolves, in precedence order:
+//! `--threads N` (the CLI calls [`set_threads`]) > the `CEAL_THREADS`
+//! environment variable > `available_parallelism`.  [`with_threads`]
+//! scopes an override for tests and benches.
+//!
+//! ## Nesting and deadlock-freedom
+//!
+//! `run` called from inside a pool task pushes a new job and the
+//! calling task participates in it; idle workers help, busy workers
+//! don't.  A waiting caller only ever waits on tasks of its *own* job,
+//! and tasks only wait on jobs strictly below them, so the wait graph
+//! is acyclic.  In the degenerate case (all workers busy) the caller
+//! simply executes all of its tasks itself.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+// ---------------------------------------------------------------------------
+// Width selection
+// ---------------------------------------------------------------------------
+
+/// Usable hardware parallelism, capped at 16 (the coordinator's
+/// historical ceiling — beyond it the simulator's memory traffic, not
+/// compute, dominates).
+pub fn hardware_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(16)
+}
+
+/// Default fork-join width: the `CEAL_THREADS` environment variable
+/// when set to a positive integer, otherwise [`hardware_threads`].
+/// Resolved once per process.
+pub fn default_threads() -> usize {
+    static DEFAULT: OnceLock<usize> = OnceLock::new();
+    *DEFAULT.get_or_init(|| {
+        std::env::var("CEAL_THREADS")
+            .ok()
+            .and_then(|v| v.trim().parse::<usize>().ok())
+            .filter(|&n| n >= 1)
+            .unwrap_or_else(hardware_threads)
+    })
+}
+
+/// Process-wide width override; 0 = unset (fall back to
+/// [`default_threads`]).
+static OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// Effective fork-join width for hot paths that take no explicit
+/// width: the [`set_threads`]/[`with_threads`] override when present,
+/// else [`default_threads`].
+pub fn current_threads() -> usize {
+    match OVERRIDE.load(Ordering::Relaxed) {
+        0 => default_threads(),
+        n => n,
+    }
+}
+
+/// Install a process-wide width (the CLI's `--threads`).  Passing 0
+/// clears the override.
+pub fn set_threads(n: usize) {
+    OVERRIDE.store(n, Ordering::Relaxed);
+}
+
+/// Run `f` with [`current_threads`] pinned to `n`, restoring the
+/// previous override afterwards.  Results never depend on the width
+/// (see the module docs), so concurrent `with_threads` scopes from
+/// different threads can only perturb performance, not outputs —
+/// which is why the invariance tests may run under a parallel test
+/// harness.
+pub fn with_threads<R>(n: usize, f: impl FnOnce() -> R) -> R {
+    struct Restore(usize);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            OVERRIDE.store(self.0, Ordering::Relaxed);
+        }
+    }
+    let _restore = Restore(OVERRIDE.swap(n, Ordering::Relaxed));
+    f()
+}
+
+// ---------------------------------------------------------------------------
+// Shared-pointer building block
+// ---------------------------------------------------------------------------
+
+/// A raw pointer that asserts `Send + Sync` so disjoint-slot writers
+/// can share one output buffer across tasks.  Crate-internal building
+/// block: every use site must guarantee that concurrent tasks touch
+/// non-overlapping elements.
+pub struct SendPtr<T>(*mut T);
+
+impl<T> SendPtr<T> {
+    pub fn new(p: *mut T) -> SendPtr<T> {
+        SendPtr(p)
+    }
+
+    pub fn get(&self) -> *mut T {
+        self.0
+    }
+}
+
+impl<T> Clone for SendPtr<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T> Copy for SendPtr<T> {}
+// SAFETY: callers uphold the disjoint-writes contract documented above.
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+// ---------------------------------------------------------------------------
+// The pool
+// ---------------------------------------------------------------------------
+
+/// One fork-join in flight.  Workers claim task indices from `next`;
+/// `pending` counts unfinished tasks; the submitting caller blocks on
+/// `done_cv` until the last task signals.
+struct Job {
+    /// Lifetime-erased pointer to the caller's task closure.  Valid for
+    /// the whole job: `ThreadPool::run` does not return (or unwind)
+    /// before `pending` reaches zero, i.e. before the last dereference.
+    task: *const (dyn Fn(usize) + Sync),
+    n_tasks: usize,
+    /// Next unclaimed task index (monotone; may run past `n_tasks`).
+    next: AtomicUsize,
+    /// Tasks not yet finished executing.
+    pending: AtomicUsize,
+    /// How many pool workers may join (the caller participates on top
+    /// of these, so a width-`w` job has `w - 1` helper slots).
+    max_helpers: usize,
+    helpers: AtomicUsize,
+    state: Mutex<JobState>,
+    done_cv: Condvar,
+}
+
+struct JobState {
+    finished: bool,
+    /// First captured panic payload, re-thrown by the caller.
+    panic: Option<Box<dyn std::any::Any + Send>>,
+}
+
+// SAFETY: `task` is only dereferenced while the job is in flight (see
+// the field docs); all other fields are sync primitives.
+unsafe impl Send for Job {}
+unsafe impl Sync for Job {}
+
+/// Erase the task reference's lifetime for storage in a [`Job`].
+fn erase<'a>(task: &'a (dyn Fn(usize) + Sync + 'a)) -> *const (dyn Fn(usize) + Sync) {
+    let ptr: *const (dyn Fn(usize) + Sync + 'a) = task;
+    // SAFETY: `ThreadPool::run` joins the job (pending == 0) before
+    // returning, so the pointee outlives every dereference even though
+    // the stored type claims 'static.
+    unsafe {
+        std::mem::transmute::<*const (dyn Fn(usize) + Sync + 'a), *const (dyn Fn(usize) + Sync)>(
+            ptr,
+        )
+    }
+}
+
+struct Shared {
+    /// Jobs with unclaimed tasks, oldest first.
+    queue: Mutex<Vec<Arc<Job>>>,
+    /// Signalled when a job is pushed.
+    ready: Condvar,
+}
+
+/// Persistent fork-join worker pool; see the module docs.  Use the
+/// process-wide instance via [`pool`] (or the free-function wrappers).
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: usize,
+}
+
+impl ThreadPool {
+    fn with_workers(n: usize) -> ThreadPool {
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(Vec::new()),
+            ready: Condvar::new(),
+        });
+        for w in 0..n {
+            let sh = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name(format!("ceal-par-{w}"))
+                .spawn(move || worker_loop(&sh))
+                .expect("spawn pool worker");
+        }
+        ThreadPool { shared, workers: n }
+    }
+
+    /// Number of persistent workers (the caller of a job participates
+    /// on top of these).
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Fork-join: run `task(0..n_tasks)` across at most `width` threads
+    /// (the caller plus up to `width - 1` pool workers) and return when
+    /// every task has finished.  A panicking task is captured and
+    /// re-thrown here after the join, so borrowed task state is never
+    /// observed after an unwind.  `width <= 1` (or an empty pool)
+    /// executes inline, in index order — the reference the parallel
+    /// schedule is bit-equal to.
+    pub fn run(&self, width: usize, n_tasks: usize, task: &(dyn Fn(usize) + Sync)) {
+        if n_tasks == 0 {
+            return;
+        }
+        let width = width.clamp(1, n_tasks);
+        if width == 1 || self.workers == 0 {
+            for i in 0..n_tasks {
+                task(i);
+            }
+            return;
+        }
+        let job = Arc::new(Job {
+            task: erase(task),
+            n_tasks,
+            next: AtomicUsize::new(0),
+            pending: AtomicUsize::new(n_tasks),
+            max_helpers: width - 1,
+            helpers: AtomicUsize::new(0),
+            state: Mutex::new(JobState {
+                finished: false,
+                panic: None,
+            }),
+            done_cv: Condvar::new(),
+        });
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.push(Arc::clone(&job));
+        }
+        self.shared.ready.notify_all();
+        // The caller is a full participant — in the degenerate case
+        // (every worker busy) it executes all tasks itself.
+        execute_tasks(&job);
+        let panic = {
+            let mut st = job.state.lock().unwrap();
+            while !st.finished {
+                st = job.done_cv.wait(st).unwrap();
+            }
+            st.panic.take()
+        };
+        // Drop our queue entry if no worker pruned it already.
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            if let Some(pos) = q.iter().position(|j| Arc::ptr_eq(j, &job)) {
+                q.remove(pos);
+            }
+        }
+        if let Some(payload) = panic {
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+/// Claim-and-execute loop shared by the caller and helpers.
+fn execute_tasks(job: &Job) {
+    loop {
+        let i = job.next.fetch_add(1, Ordering::Relaxed);
+        if i >= job.n_tasks {
+            break;
+        }
+        // SAFETY: the job is in flight (we hold an unfinished task).
+        let task = unsafe { &*job.task };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| task(i)));
+        if let Err(payload) = result {
+            let mut st = job.state.lock().unwrap();
+            if st.panic.is_none() {
+                st.panic = Some(payload);
+            }
+        }
+        // AcqRel: the final decrement acquires every earlier task's
+        // writes, so the caller's join observes all output slots.
+        if job.pending.fetch_sub(1, Ordering::AcqRel) == 1 {
+            let mut st = job.state.lock().unwrap();
+            st.finished = true;
+            job.done_cv.notify_all();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                q.retain(|j| j.next.load(Ordering::Relaxed) < j.n_tasks);
+                let open = q
+                    .iter()
+                    .find(|j| j.helpers.load(Ordering::Relaxed) < j.max_helpers);
+                if let Some(j) = open {
+                    j.helpers.fetch_add(1, Ordering::Relaxed);
+                    break Arc::clone(j);
+                }
+                q = shared.ready.wait(q).unwrap();
+            }
+        };
+        execute_tasks(&job);
+    }
+}
+
+/// The process-wide pool, spawned on first use with
+/// `hardware_threads() - 1` workers (the submitting thread supplies
+/// the last lane of any job).
+pub fn pool() -> &'static ThreadPool {
+    static POOL: OnceLock<ThreadPool> = OnceLock::new();
+    POOL.get_or_init(|| ThreadPool::with_workers(hardware_threads().saturating_sub(1)))
+}
+
+// ---------------------------------------------------------------------------
+// Fork-join helpers (the shapes the hot paths actually use)
+// ---------------------------------------------------------------------------
+
+/// Gate helper shared by the hot paths: the requested fork-join width
+/// when the pass touches at least `gate` work items, else 1 (inline).
+/// Centralized so every site resolves width the same way.
+pub fn width_for(items: usize, gate: usize) -> usize {
+    if items >= gate {
+        current_threads()
+    } else {
+        1
+    }
+}
+
+/// [`ThreadPool::run`] on the process-wide pool.  Serial calls
+/// (`width <= 1` or a single task) execute inline without touching —
+/// or lazily spawning — the pool, so fully sequential runs never pay
+/// for idle worker threads.
+pub fn run(width: usize, n_tasks: usize, task: &(dyn Fn(usize) + Sync)) {
+    if width <= 1 || n_tasks <= 1 {
+        for i in 0..n_tasks {
+            task(i);
+        }
+        return;
+    }
+    pool().run(width, n_tasks, task);
+}
+
+/// Ordered chunk map: split `out` into fixed-size chunks (boundaries
+/// depend only on `chunk`, never on `width`) and run
+/// `f(chunk_index, out_chunk)` across the pool.  Each chunk has exactly
+/// one writer, so the result is bit-identical for every width.
+pub fn for_each_chunk_mut<T: Send>(
+    width: usize,
+    chunk: usize,
+    out: &mut [T],
+    f: impl Fn(usize, &mut [T]) + Sync,
+) {
+    let n = out.len();
+    if n == 0 {
+        return;
+    }
+    let chunk = chunk.max(1);
+    let n_chunks = (n + chunk - 1) / chunk;
+    let ptr = SendPtr::new(out.as_mut_ptr());
+    run(width, n_chunks, &move |ci| {
+        let start = ci * chunk;
+        let len = chunk.min(n - start);
+        // SAFETY: chunk `ci` owns elements [start, start + len), and
+        // chunks are pairwise disjoint.
+        let slice = unsafe { std::slice::from_raw_parts_mut(ptr.get().add(start), len) };
+        f(ci, slice);
+    });
+}
+
+/// Ordered parallel map: `out[i] = f(i)` with one task per index; the
+/// returned vector is in index order regardless of schedule.  Slots
+/// are `Option<R>` internally, so if a task panics (re-thrown after
+/// the join) every already-computed result still drops normally —
+/// nothing leaks on the unwind path.
+pub fn map_indexed<R: Send>(width: usize, n: usize, f: impl Fn(usize) -> R + Sync) -> Vec<R> {
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let ptr = SendPtr::new(out.as_mut_ptr());
+    run(width, n, &move |i| {
+        // SAFETY: slot `i` is written exactly once, by task `i`; the
+        // overwritten value is the `None` it was initialized with.
+        unsafe {
+            *ptr.get().add(i) = Some(f(i));
+        }
+    });
+    out.into_iter()
+        .map(|slot| slot.expect("every map_indexed slot is written by its task"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_executes_each_task_exactly_once() {
+        for width in [1usize, 2, 5, 8] {
+            let hits: Vec<AtomicUsize> = (0..97).map(|_| AtomicUsize::new(0)).collect();
+            run(width, hits.len(), &|i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1, "task {i} at width {width}");
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_map_writes_disjoint_slots() {
+        for width in [1usize, 3, 8] {
+            let mut out = vec![0usize; 1000];
+            for_each_chunk_mut(width, 64, &mut out, |ci, chunk| {
+                for (k, v) in chunk.iter_mut().enumerate() {
+                    *v = ci * 64 + k;
+                }
+            });
+            let want: Vec<usize> = (0..1000).collect();
+            assert_eq!(out, want, "width {width}");
+        }
+    }
+
+    #[test]
+    fn map_indexed_preserves_order() {
+        for width in [1usize, 2, 7] {
+            let got = map_indexed(width, 321, |i| i * i);
+            let want: Vec<usize> = (0..321).map(|i| i * i).collect();
+            assert_eq!(got, want, "width {width}");
+        }
+    }
+
+    #[test]
+    fn map_indexed_handles_empty_and_single() {
+        assert_eq!(map_indexed(4, 0, |i| i), Vec::<usize>::new());
+        assert_eq!(map_indexed(4, 1, |i| i + 10), vec![10]);
+    }
+
+    #[test]
+    fn nested_fork_join_completes() {
+        // Outer tasks each fork an inner job on the same pool; the sums
+        // must come out exact for any schedule.
+        let totals: Vec<AtomicUsize> = (0..6).map(|_| AtomicUsize::new(0)).collect();
+        run(4, totals.len(), &|outer| {
+            run(4, 50, &|inner| {
+                totals[outer].fetch_add(inner + 1, Ordering::Relaxed);
+            });
+        });
+        let want = (1..=50).sum::<usize>();
+        for (i, t) in totals.iter().enumerate() {
+            assert_eq!(t.load(Ordering::Relaxed), want, "outer task {i}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "boom from task")]
+    fn task_panic_propagates_to_caller() {
+        run(4, 16, &|i| {
+            if i == 7 {
+                panic!("boom from task {i}");
+            }
+        });
+    }
+
+    #[test]
+    fn pool_survives_a_panicked_job() {
+        let caught = std::panic::catch_unwind(|| {
+            run(4, 8, &|i| {
+                if i % 2 == 0 {
+                    panic!("transient");
+                }
+            });
+        });
+        assert!(caught.is_err());
+        // the pool still works afterwards
+        let got = map_indexed(4, 100, |i| i + 1);
+        assert_eq!(got.iter().sum::<usize>(), (1..=100).sum::<usize>());
+    }
+
+    #[test]
+    fn with_threads_overrides_and_restores() {
+        let before = current_threads();
+        let inside = with_threads(3, current_threads);
+        assert_eq!(inside, 3);
+        assert_eq!(current_threads(), before);
+        assert!(current_threads() >= 1);
+    }
+}

@@ -1,0 +1,170 @@
+//! Bitwise thread-count invariance of every parallelized path.
+//!
+//! The worker-pool contract (`ceal::util::parallel` module docs) is
+//! that task boundaries depend only on the input and every output slot
+//! has a single writer, so results are byte-identical for any
+//! fork-join width.  These tests pin that for the four hot paths the
+//! pool drives — GBT training, batched scoring, pool generation, and a
+//! full CEAL run — across widths {1, 2, 5, 8}, plus the nested case
+//! (a parallel campaign whose reps use the inner pool).
+//!
+//! `with_threads` scopes a process-global override; concurrent tests
+//! can only perturb which width actually executes, never the outputs,
+//! so the assertions hold under the parallel test harness.
+
+use ceal::config::{WorkflowId, F_MAX};
+use ceal::coordinator::{run_campaign, Algo, Campaign};
+use ceal::gbt::{train, train_log, GbtParams};
+use ceal::sim::Objective;
+use ceal::surrogate::Scorer;
+use ceal::tuner::{Ceal, CealParams, Pool, Problem};
+use ceal::util::parallel::with_threads;
+use ceal::util::rng::Pcg32;
+
+const SWEEP: [usize; 4] = [1, 2, 5, 8];
+
+fn rows(rng: &mut Pcg32, n: usize) -> Vec<[f32; F_MAX]> {
+    (0..n)
+        .map(|_| {
+            let mut x = [0f32; F_MAX];
+            for v in x.iter_mut() {
+                *v = rng.f32();
+            }
+            x
+        })
+        .collect()
+}
+
+#[test]
+fn train_is_thread_count_invariant() {
+    let mut rng = Pcg32::new(0x7A11, 0);
+    // large enough to cross every parallel gate in the trainer
+    let xs = rows(&mut rng, 900);
+    let y: Vec<f64> = xs
+        .iter()
+        .map(|x| 5.0 + 40.0 * x[0] as f64 + 10.0 * (x[1] as f64) * (x[2] as f64))
+        .collect();
+    let reference = with_threads(1, || train(&xs, &y, 7, &GbtParams::default()));
+    let reference_log = with_threads(1, || train_log(&xs, &y, 7, &GbtParams::default()));
+    for t in SWEEP {
+        let got = with_threads(t, || train(&xs, &y, 7, &GbtParams::default()));
+        assert_eq!(reference, got, "train diverged at {t} threads");
+        let got_log = with_threads(t, || train_log(&xs, &y, 7, &GbtParams::default()));
+        assert_eq!(reference_log, got_log, "train_log diverged at {t} threads");
+    }
+}
+
+#[test]
+fn predict_batch_is_thread_count_invariant() {
+    let mut rng = Pcg32::new(0x7A12, 0);
+    let xs = rows(&mut rng, 500);
+    let y: Vec<f64> = xs.iter().map(|x| 1.0 + 30.0 * x[0] as f64).collect();
+    let ens = train_log(&xs, &y, 6, &GbtParams::default());
+    let flat = ens.flatten();
+    let batch = rows(&mut rng, 2000);
+    let reference = with_threads(1, || ens.predict_batch(&batch));
+    let flat_reference = with_threads(1, || flat.predict_batch(&batch));
+    for t in SWEEP {
+        let got = with_threads(t, || ens.predict_batch(&batch));
+        assert_eq!(reference, got, "predict_batch diverged at {t} threads");
+        let flat_got = with_threads(t, || flat.predict_batch(&batch));
+        assert_eq!(
+            flat_reference, flat_got,
+            "flat predict_batch diverged at {t} threads"
+        );
+    }
+}
+
+#[test]
+fn pool_generation_is_thread_count_invariant() {
+    let prob = Problem::new(WorkflowId::LV, Objective::ExecTime);
+    let reference = with_threads(1, || Pool::generate_par(&prob, 150, 0x9A11, 1));
+    for t in SWEEP {
+        let got = with_threads(t, || Pool::generate_par(&prob, 150, 0x9A11, t));
+        assert_eq!(reference.configs, got.configs, "configs diverged at {t} threads");
+        assert_eq!(reference.truth, got.truth, "truth diverged at {t} threads");
+        assert_eq!(reference.best_idx, got.best_idx, "best_idx diverged at {t} threads");
+    }
+}
+
+/// A full CEAL run — batch measurement, low-fidelity scoring, GBT
+/// retraining and full-pool selection every iteration — must be
+/// bit-identical at any width: same measurements (values included),
+/// same trained model, same pick, same accounted cost.
+#[test]
+fn ceal_run_is_thread_count_invariant() {
+    let prob = Problem::new(WorkflowId::HS, Objective::CompTime);
+    let pool = Pool::generate(&prob, 400, 0x9A12);
+    let run_at = |t: usize| {
+        with_threads(t, || {
+            let mut rng = Pcg32::new(0xAB, 3);
+            Ceal::new(CealParams::no_hist()).run(&prob, &pool, &Scorer::Native, 30, &mut rng)
+        })
+    };
+    let reference = run_at(1);
+    for t in SWEEP {
+        let got = run_at(t);
+        assert_eq!(
+            reference.measured, got.measured,
+            "measurements diverged at {t} threads"
+        );
+        assert_eq!(reference.best_idx, got.best_idx, "pick diverged at {t} threads");
+        assert_eq!(reference.model, got.model, "model diverged at {t} threads");
+        assert_eq!(
+            reference.collection_cost, got.collection_cost,
+            "cost diverged at {t} threads"
+        );
+        assert_eq!(reference.workflow_runs, got.workflow_runs);
+    }
+}
+
+/// Nested use: campaign repetitions fan out on the pool while each
+/// rep's training/scoring/measurement forks inner jobs beneath them —
+/// `parallel_equals_sequential`, with the inner pool active.
+#[test]
+fn nested_campaign_reps_equal_sequential() {
+    let base = Campaign::new(WorkflowId::LV, Objective::CompTime, 20)
+        .with_reps(5)
+        .with_pool_size(200)
+        .with_seed(0xC0FE_D00D);
+    let seq = run_campaign(Algo::Ceal, &base.with_threads(1));
+    for t in [2usize, 4, 8] {
+        let par = run_campaign(Algo::Ceal, &base.with_threads(t));
+        assert_eq!(seq.reps.len(), par.reps.len());
+        for (rep, (a, b)) in seq.reps.iter().zip(&par.reps).enumerate() {
+            assert_eq!(a.best_value, b.best_value, "rep {rep} at {t} threads");
+            assert_eq!(a.workflow_runs, b.workflow_runs, "rep {rep} at {t} threads");
+            assert_eq!(a.cost, b.cost, "rep {rep} at {t} threads");
+            assert_eq!(a.recalls, b.recalls, "rep {rep} at {t} threads");
+            assert_eq!(a.mdape_all, b.mdape_all, "rep {rep} at {t} threads");
+        }
+    }
+}
+
+/// The collector's fan-out batch measurement keeps its determinism
+/// promises: same results at any width, accounting folded in slot
+/// order, and later draws from the main stream unaffected by width.
+#[test]
+fn measure_pool_batch_is_thread_count_invariant() {
+    use ceal::tuner::Collector;
+    let prob = Problem::new(WorkflowId::GP, Objective::ExecTime);
+    let pool = Pool::generate(&prob, 60, 0x9A13);
+    let idxs: Vec<usize> = (0..12).collect();
+    let run_at = |t: usize| {
+        with_threads(t, || {
+            let mut col = Collector::new(&prob, Pcg32::new(0x51, 7));
+            let batch = col.measure_pool_batch(&pool, &idxs);
+            // a follow-up single measurement must also be unaffected
+            let follow = col.measure(&pool.configs[40]);
+            (batch, follow, col.total_cost(), col.workflow_runs)
+        })
+    };
+    let reference = run_at(1);
+    for t in SWEEP {
+        let got = run_at(t);
+        assert_eq!(reference.0, got.0, "batch diverged at {t} threads");
+        assert_eq!(reference.1, got.1, "follow-up draw diverged at {t} threads");
+        assert_eq!(reference.2, got.2, "cost diverged at {t} threads");
+        assert_eq!(reference.3, got.3);
+    }
+}
