@@ -1,0 +1,68 @@
+//! Embedding the tuner: an *external* driver that owns the measurement
+//! loop — the ask/tell inversion the session API exists for.
+//!
+//! Nothing here uses `drive()` or the simulator-backed `Collector`
+//! evaluator: the driver decides how each requested measurement is
+//! performed (here the simulator stands in for a real batch scheduler
+//! or workflow runner) and feeds the observed values back.
+//!
+//! Run with: `cargo run --release --example external_driver`
+
+use ceal::config::WorkflowId;
+use ceal::sim::Objective;
+use ceal::surrogate::Scorer;
+use ceal::tuner::{
+    Ceal, CealParams, MeasurementRequest, MeasurementResult, Pool, Problem, Tuner,
+};
+use ceal::util::rng::Pcg32;
+
+fn main() {
+    let prob = Problem::new(WorkflowId::LV, Objective::CompTime);
+    let pool = Pool::generate(&prob, 300, 7);
+    let scorer = Scorer::Native;
+    let tuner = Ceal::new(CealParams::no_hist());
+
+    // ---- the 20-line ask/tell loop an embedder writes ----
+    let mut rng = Pcg32::new(42, 0);
+    let mut measure_rng = Pcg32::new(42, 1); // the *driver's* noise source
+    let mut session = tuner.session(&prob, &pool, &scorer, 30, &mut rng);
+    loop {
+        let batch = session.ask();
+        if batch.is_empty() {
+            break; // budget spent
+        }
+        let results: Vec<MeasurementResult> = batch
+            .requests
+            .iter()
+            .map(|req| {
+                // launch on your infrastructure; the simulator stands in
+                let value = match req {
+                    MeasurementRequest::Workflow { config, .. } => {
+                        prob.objective.value(&prob.sim.run(config, &mut measure_rng))
+                    }
+                    MeasurementRequest::Component { comp, config } => prob
+                        .objective
+                        .value(&prob.sim.run_component(*comp, config, &mut measure_rng)),
+                };
+                MeasurementResult { value }
+            })
+            .collect();
+        session.tell(&results);
+        println!(
+            "[{}] told {} results (runs {}, cost {:.1})",
+            session.state().phase,
+            results.len(),
+            session.state().workflow_runs,
+            session.state().collection_cost,
+        );
+    }
+    let out = session.finish();
+    // ------------------------------------------------------
+
+    println!(
+        "tuned config {} -> true objective {:.3} (pool best {:.3})",
+        pool.configs[out.best_idx],
+        pool.truth[out.best_idx],
+        pool.best_value(),
+    );
+}

@@ -50,6 +50,30 @@ fn main() {
         });
     }
 
+    // Ask/tell driver overhead: the frozen monolithic reference loop
+    // vs drive(session, Collector) at the same cell — bit-identical
+    // outputs, so any wall-clock gap is pure session machinery.
+    {
+        use ceal::tuner::{drive, legacy, Collector};
+        let tuner = Ceal::new(CealParams::no_hist());
+        let mut rep = 0u64;
+        b.bench("tuner/CEAL/LV_m30_pool1000_monolithic", || {
+            rep += 1;
+            let mut rng = Pcg32::new(0xD1CE ^ rep, 0);
+            legacy::run_ceal(&tuner, &sweep_prob, &sweep_pool, &scorer, 30, &mut rng)
+        });
+        let mut rep = 0u64;
+        b.bench("tuner/CEAL/LV_m30_pool1000_session", || {
+            rep += 1;
+            let mut rng = Pcg32::new(0xD1CE ^ rep, 0);
+            let mut col = Collector::new(&sweep_prob, rng.derive_str("collector"));
+            drive(
+                tuner.session(&sweep_prob, &sweep_pool, &scorer, 30, &mut rng),
+                &mut col,
+            )
+        });
+    }
+
     // Registry-added scenario cells (CEAL vs RS) so new-workflow wiring
     // shows up in every bench run: the CH5 deep chain and DM4 diamond.
     for id in [WorkflowId::CH5, WorkflowId::DM4] {

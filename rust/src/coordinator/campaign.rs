@@ -10,7 +10,8 @@ use crate::metrics::{least_number_of_uses, mdape, mdape_top_fraction, recall_sco
 use crate::sim::Objective;
 use crate::surrogate::Scorer;
 use crate::tuner::{
-    ActiveLearning, Alph, Ceal, CealParams, Pool, Problem, RandomSampling, Tuner, TunerOutput,
+    drive, ActiveLearning, Alph, Ceal, CealParams, Collector, Pool, Problem, RandomSampling,
+    Tuner, TunerOutput,
 };
 use crate::util::rng::Pcg32;
 use crate::util::stats;
@@ -33,6 +34,23 @@ pub enum Algo {
 }
 
 impl Algo {
+    /// Every registered algorithm, in roster order (`ceal info` and
+    /// the `--algo` error message print this).
+    pub const ALL: [Algo; 7] = [
+        Algo::Rs,
+        Algo::Al,
+        Algo::Geist,
+        Algo::Ceal,
+        Algo::CealHist,
+        Algo::Alph,
+        Algo::AlphHist,
+    ];
+
+    /// Roster names, for CLI listings and error messages.
+    pub fn names() -> Vec<&'static str> {
+        Algo::ALL.iter().map(|a| a.name()).collect()
+    }
+
     pub fn name(&self) -> &'static str {
         match self {
             Algo::Rs => "RS",
@@ -78,6 +96,23 @@ impl ScorerKind {
         match self {
             ScorerKind::Native => Scorer::Native,
             ScorerKind::Pjrt => Scorer::pjrt_or_native(),
+        }
+    }
+
+    /// Stable name, round-tripped through `--scorer` and the session
+    /// trace header (replay must score with the recorded backend).
+    pub fn name(&self) -> &'static str {
+        match self {
+            ScorerKind::Native => "native",
+            ScorerKind::Pjrt => "pjrt",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<ScorerKind> {
+        match name.to_ascii_lowercase().as_str() {
+            "native" => Some(ScorerKind::Native),
+            "pjrt" => Some(ScorerKind::Pjrt),
+            _ => None,
         }
     }
 }
@@ -221,8 +256,10 @@ impl Aggregate {
 }
 
 /// Build the tuner for an algorithm (hist variants capture the shared
-/// historical samples).
-fn build_tuner(
+/// historical samples).  Public so the CLI's single-session
+/// record/replay path constructs exactly the tuner a campaign cell
+/// would.
+pub fn tuner_for(
     algo: Algo,
     prob: &Problem,
     seed: u64,
@@ -251,6 +288,16 @@ fn build_tuner(
     }
 }
 
+/// The RNG stream of one repetition: (campaign seed, rep, algorithm)
+/// fully determine it.  Public so the CLI's `--record`/`--replay`
+/// single-session path (rep 0) reproduces campaign cells exactly.
+pub fn session_rng(seed: u64, algo: Algo, rep: usize) -> Pcg32 {
+    Pcg32::new(seed ^ 0xDEED, (rep as u64) << 8 | algo_stream(algo))
+}
+
+/// One repetition: open an ask/tell session and drive it generically
+/// against the simulator-backed collector — campaigns are just another
+/// session driver now, same loop as any external embedder.
 fn run_rep(
     algo: Algo,
     tuner: &dyn Tuner,
@@ -260,8 +307,9 @@ fn run_rep(
     c: &Campaign,
     rep: usize,
 ) -> RepResult {
-    let mut rng = Pcg32::new(c.seed ^ 0xDEED, (rep as u64) << 8 | algo_stream(algo));
-    let out: TunerOutput = tuner.run(prob, pool, scorer, c.m, &mut rng);
+    let mut rng = session_rng(c.seed, algo, rep);
+    let mut col = Collector::new(prob, rng.derive_str("collector"));
+    let out: TunerOutput = drive(tuner.session(prob, pool, scorer, c.m, &mut rng), &mut col);
     // models are log-space: exponentiate to real-scale time predictions
     let preds = crate::tuner::common::predict_times(&out.model, &pool.feats.workflow, scorer);
     let recalls: Vec<f64> = (1..=10)
@@ -309,7 +357,7 @@ pub fn run_campaign(algo: Algo, c: &Campaign) -> Aggregate {
 
     // one tuner per campaign: stateless across reps, and the hist
     // variants cache their deterministic component models internally
-    let tuner = build_tuner(algo, &prob, c.seed, c.ceal_params);
+    let tuner = tuner_for(algo, &prob, c.seed, c.ceal_params);
     let reps: Vec<RepResult> = if c.threads <= 1 {
         let scorer = c.scorer.build();
         (0..c.reps)

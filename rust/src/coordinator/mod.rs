@@ -8,7 +8,9 @@ pub mod expert;
 pub mod history;
 pub mod poolcache;
 
-pub use campaign::{run_campaign, Aggregate, Algo, Campaign, RepResult, ScorerKind};
+pub use campaign::{
+    run_campaign, session_rng, tuner_for, Aggregate, Algo, Campaign, RepResult, ScorerKind,
+};
 pub use expert::expert_config;
 pub use history::historical_samples;
 pub use poolcache::{shared_pool, PoolCache, PoolKey};

@@ -18,18 +18,27 @@
 //! tune flags:
 //!   --workflow W      any registered workflow (see `ceal info`) [LV]
 //!   --objective O     exec | comp                      [comp]
-//!   --algo A          rs|al|geist|ceal|ceal+hist|alph|alph+hist [ceal]
+//!   --algo A          any registered algorithm (see `ceal info`) [ceal]
 //!   --m N             training-sample budget           [50]
+//!   --record PATH     run ONE session (campaign rep 0) and record its
+//!                     measurement stream to a versioned JSONL trace
+//!   --replay PATH     re-run a recorded session from its trace alone
+//!                     (no simulator measurements; settings come from
+//!                     the trace header)
 //! ```
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::process::ExitCode;
 
 use ceal::config::WorkflowId;
-use ceal::coordinator::{run_campaign, Algo, ScorerKind};
+use ceal::coordinator::{run_campaign, session_rng, tuner_for, Algo, PoolCache, ScorerKind};
 use ceal::exper::{self, ExpCtx};
 use ceal::sim::{Objective, WorkflowRegistry};
+use ceal::tuner::{
+    drive, Collector, Pool, Problem, TraceHeader, TraceRecorder, TraceReplayer, TunerOutput,
+};
 use ceal::util::cli::Args;
+use ceal::util::csv::CsvWriter;
 use ceal::util::table::fnum;
 
 fn main() -> ExitCode {
@@ -54,11 +63,9 @@ fn parse_ctx(args: &Args) -> Result<ExpCtx, String> {
     // resolved value makes every inner fork-join (GBT training, pool
     // scoring, batch measurement) agree with the campaign width.
     ceal::util::parallel::set_threads(ctx.threads);
-    ctx.scorer = match args.opt_or("scorer", "native") {
-        "native" => ScorerKind::Native,
-        "pjrt" => ScorerKind::Pjrt,
-        other => return Err(format!("unknown --scorer '{other}' (native|pjrt)")),
-    };
+    let scorer_name = args.opt_or("scorer", "native");
+    ctx.scorer = ScorerKind::from_name(scorer_name)
+        .ok_or_else(|| format!("unknown --scorer '{scorer_name}' (native|pjrt)"))?;
     Ok(ctx)
 }
 
@@ -102,7 +109,26 @@ fn run() -> Result<(), String> {
     Ok(())
 }
 
+/// Optional CEAL/ALpH hyper-parameter overrides (Fig. 13 territory).
+fn ceal_overrides(args: &Args, algo: Algo) -> Result<Option<ceal::tuner::CealParams>, String> {
+    if args.opt("mr").is_none() && args.opt("m0").is_none() && args.opt("iters").is_none() {
+        return Ok(None);
+    }
+    let base = match algo {
+        Algo::CealHist | Algo::AlphHist => ceal::tuner::CealParams::with_hist(),
+        _ => ceal::tuner::CealParams::no_hist(),
+    };
+    Ok(Some(ceal::tuner::CealParams {
+        iterations: args.opt_usize("iters", base.iterations)?,
+        m0_frac: args.opt_f64("m0", base.m0_frac)?,
+        mr_frac: args.opt_f64("mr", base.mr_frac)?,
+    }))
+}
+
 fn tune(args: &Args, ctx: &ExpCtx) -> Result<(), String> {
+    if let Some(path) = args.opt_path("replay") {
+        return replay_session(args, ctx, &path);
+    }
     let wf_name = args.opt_or("workflow", "LV");
     let wf = WorkflowId::from_name(wf_name).ok_or_else(|| {
         format!(
@@ -112,9 +138,30 @@ fn tune(args: &Args, ctx: &ExpCtx) -> Result<(), String> {
     })?;
     let obj = Objective::from_name(args.opt_or("objective", "comp"))
         .ok_or("unknown --objective (exec|comp)")?;
-    let algo =
-        Algo::from_name(args.opt_or("algo", "ceal")).ok_or("unknown --algo")?;
+    let algo_name = args.opt_or("algo", "ceal");
+    let algo = Algo::from_name(algo_name).ok_or_else(|| {
+        format!(
+            "unknown --algo '{algo_name}' (registered: {})",
+            Algo::names().join(" | ")
+        )
+    })?;
     let m = args.opt_usize("m", 50)?;
+    let overrides = ceal_overrides(args, algo)?;
+
+    if let Some(path) = args.opt_path("record") {
+        let header = TraceHeader {
+            algo: algo.name().into(),
+            workflow: wf.name().into(),
+            objective: obj.name().into(),
+            m,
+            pool_size: ctx.pool_size,
+            seed: ctx.seed,
+            scorer: ctx.scorer.name().into(),
+            ceal_params: overrides,
+        };
+        return run_single_session(ctx, &header, Some(path.as_path()), None);
+    }
+
     println!(
         "tuning {wf} for {obj} with {algo}, m={m}, pool={}, reps={}, scorer={:?}",
         ctx.pool_size, ctx.reps, ctx.scorer
@@ -123,26 +170,17 @@ fn tune(args: &Args, ctx: &ExpCtx) -> Result<(), String> {
     // space admits no feasible configuration errors out here instead of
     // panicking inside the campaign (the cache hands the same pool to
     // run_campaign below).
-    ceal::coordinator::PoolCache::global()
+    PoolCache::global()
         .try_get_or_generate(
-            &ceal::tuner::Problem::new(wf, obj),
+            &Problem::new(wf, obj),
             ctx.pool_size,
             ctx.seed,
             ctx.threads,
         )
         .map_err(|e| format!("cannot tune {wf}: {e}"))?;
     let mut campaign = ctx.campaign(wf, obj, m);
-    // optional CEAL/ALpH hyper-parameter overrides (Fig. 13 territory)
-    if args.opt("mr").is_some() || args.opt("m0").is_some() || args.opt("iters").is_some() {
-        let base = match algo {
-            Algo::CealHist | Algo::AlphHist => ceal::tuner::CealParams::with_hist(),
-            _ => ceal::tuner::CealParams::no_hist(),
-        };
-        campaign = campaign.with_ceal_params(ceal::tuner::CealParams {
-            iterations: args.opt_usize("iters", base.iterations)?,
-            m0_frac: args.opt_f64("m0", base.m0_frac)?,
-            mr_frac: args.opt_f64("mr", base.mr_frac)?,
-        });
+    if let Some(p) = overrides {
+        campaign = campaign.with_ceal_params(p);
     }
     let agg = run_campaign(algo, &campaign);
     println!(
@@ -171,6 +209,164 @@ fn tune(args: &Args, ctx: &ExpCtx) -> Result<(), String> {
         Some(p) => println!("pays off after {} workflow runs", fnum(p, 0)),
         None => println!("does not beat the expert configuration"),
     }
+    Ok(())
+}
+
+/// `ceal tune --replay`: every session setting comes from the trace
+/// header, so flags that would contradict it are rejected rather than
+/// silently ignored.
+fn replay_session(args: &Args, ctx: &ExpCtx, path: &Path) -> Result<(), String> {
+    let pinned = [
+        "workflow", "objective", "algo", "m", "seed", "pool", "scorer", "mr", "m0", "iters",
+        "record",
+    ];
+    for flag in pinned {
+        if args.opt(flag).is_some() {
+            return Err(format!(
+                "--{flag} conflicts with --replay: the trace header pins the session settings"
+            ));
+        }
+    }
+    let replayer = TraceReplayer::load(path)?;
+    let header = replayer.header.clone();
+    run_single_session(ctx, &header, None, Some(replayer))
+}
+
+/// Run exactly one tuning session (campaign rep 0 of the header's
+/// cell), either live against the simulator collector (optionally
+/// recording the measurement stream) or replayed from a trace.
+fn run_single_session(
+    ctx: &ExpCtx,
+    header: &TraceHeader,
+    record_to: Option<&Path>,
+    replay_from: Option<TraceReplayer>,
+) -> Result<(), String> {
+    let wf = WorkflowId::from_name(&header.workflow).ok_or_else(|| {
+        format!(
+            "trace workflow '{}' is not registered (registered: {})",
+            header.workflow,
+            WorkflowRegistry::global().names().join(" | ")
+        )
+    })?;
+    let obj = Objective::from_name(&header.objective)
+        .ok_or_else(|| format!("trace objective '{}' unknown", header.objective))?;
+    let algo = Algo::from_name(&header.algo).ok_or_else(|| {
+        format!(
+            "trace algorithm '{}' is not registered (registered: {})",
+            header.algo,
+            Algo::names().join(" | ")
+        )
+    })?;
+    let prob = Problem::new(wf, obj);
+    // The pool regenerates deterministically from the header — replay
+    // needs it for selection/feature state, not for measurements.
+    let pool = PoolCache::global()
+        .try_get_or_generate(&prob, header.pool_size, header.seed, ctx.threads)
+        .map_err(|e| format!("cannot build pool for {wf}: {e}"))?;
+    // the header pins the scoring backend: replay must score with the
+    // backend the session was recorded under
+    let scorer = ScorerKind::from_name(&header.scorer)
+        .ok_or_else(|| format!("trace scorer '{}' unknown (native|pjrt)", header.scorer))?
+        .build();
+    let tuner = tuner_for(algo, &prob, header.seed, header.ceal_params);
+    let mut rng = session_rng(header.seed, algo, 0);
+    let mut col = Collector::new(&prob, rng.derive_str("collector"));
+    let session = tuner.session(&prob, &pool, &scorer, header.m, &mut rng);
+
+    let (out, provenance) = match replay_from {
+        Some(mut replayer) => {
+            let out = drive(session, &mut replayer);
+            if replayer.remaining() > 0 {
+                return Err(format!(
+                    "replay left {} unconsumed batches — the trace does not match this build",
+                    replayer.remaining()
+                ));
+            }
+            let n = replayer.batches().len();
+            (out, format!("replayed {n} batches from trace"))
+        }
+        None => {
+            let path = record_to.expect("live sessions are recorded");
+            let file = std::fs::File::create(path)
+                .map_err(|e| format!("cannot create {}: {e}", path.display()))?;
+            let mut recorder =
+                TraceRecorder::new(&mut col, std::io::BufWriter::new(file), header)
+                    .map_err(|e| format!("cannot write trace header: {e}"))?;
+            let out = drive(session, &mut recorder);
+            let n = recorder.batches_written();
+            recorder
+                .finish()
+                .map_err(|e| format!("trace write failed: {e}"))?;
+            (out, format!("recorded {n} batches to {}", path.display()))
+        }
+    };
+    report_session(ctx, header, obj, &pool, &out, &provenance)
+}
+
+/// Print the single-session outcome and write `session_best.csv` —
+/// the file the CI record→replay round-trip compares byte-for-byte.
+fn report_session(
+    ctx: &ExpCtx,
+    header: &TraceHeader,
+    obj: Objective,
+    pool: &Pool,
+    out: &TunerOutput,
+    provenance: &str,
+) -> Result<(), String> {
+    let best_cfg = &pool.configs[out.best_idx];
+    let best_truth = pool.truth[out.best_idx];
+    println!(
+        "session: {} on {} ({}), m={}, pool={}, seed={}",
+        header.algo, header.workflow, header.objective, header.m, header.pool_size, header.seed
+    );
+    println!("{provenance}");
+    println!(
+        "best idx {}  config {}  truth {} {}",
+        out.best_idx,
+        best_cfg,
+        fnum(best_truth, 4),
+        obj.unit()
+    );
+    println!(
+        "measured {} workflow runs, collection cost {} {}",
+        out.workflow_runs,
+        fnum(out.collection_cost, 3),
+        obj.unit()
+    );
+    let mut w = CsvWriter::new(&[
+        "algo",
+        "workflow",
+        "objective",
+        "m",
+        "pool",
+        "seed",
+        "best_idx",
+        "best_config",
+        "best_truth",
+        "collection_cost",
+        "workflow_runs",
+        "measured",
+    ]);
+    // float cells use shortest-round-trip formatting, so a bitwise
+    // identical session yields a byte-identical CSV
+    w.row(&[
+        header.algo.clone(),
+        header.workflow.clone(),
+        header.objective.clone(),
+        header.m.to_string(),
+        header.pool_size.to_string(),
+        header.seed.to_string(),
+        out.best_idx.to_string(),
+        best_cfg.to_string(),
+        best_truth.to_string(),
+        out.collection_cost.to_string(),
+        out.workflow_runs.to_string(),
+        out.measured.len().to_string(),
+    ]);
+    let path = ctx.out_dir.join("session_best.csv");
+    w.save(&path)
+        .map_err(|e| format!("cannot write {}: {e}", path.display()))?;
+    println!("best CSV -> {}", path.display());
     Ok(())
 }
 
@@ -208,6 +404,9 @@ fn info() {
         println!("       components: {}", comps.join(", "));
         println!("       edges     : {}", edges.join(", "));
     }
+    println!("algorithm roster ({} registered):", Algo::ALL.len());
+    println!("  {}", Algo::names().join(" | "));
+    println!("  (+ budgeted CEAL via the library API: BudgetedCeal::run_with_cost_budget)");
 }
 
 fn usage() -> &'static str {

@@ -6,6 +6,12 @@
 //! Rust mirror of the same flattened-ensemble semantics; integration
 //! tests pin the two together, and multi-threaded campaigns use it to
 //! avoid per-thread artifact recompilation.
+//!
+//! Since the ask/tell redesign the scorer is *session state*: a
+//! [`crate::tuner::TunerSession`] captures its `&Scorer` at creation
+//! and every model evaluation (selection scoring, switch detection,
+//! the final searcher pass) happens inside the session — evaluators
+//! and external drivers never see it.
 
 use crate::config::{Config, WorkflowSpec, F_MAX};
 use crate::gbt::Ensemble;
@@ -114,6 +120,13 @@ impl Scorer {
                 .map(|v| v as f64)
                 .collect(),
         }
+    }
+
+    /// Real-scale (exponentiated) predictions of a log-space model:
+    /// [`score`](Self::score) mapped through `exp`, the form every
+    /// searcher/metric consumer wants.
+    pub fn score_times(&self, ens: &Ensemble, xs: &[[f32; F_MAX]]) -> Vec<f64> {
+        self.score(ens, xs).into_iter().map(f64::exp).collect()
     }
 
     /// Low-fidelity combined score (Eqns 1-2) over per-component views.

@@ -1,13 +1,19 @@
 //! AL — batch active-learning baseline (§7.3, refs [4, 19]): seed with
 //! random samples, then iteratively measure the configurations the
 //! gradually-refined surrogate predicts to be best.
-
-use std::collections::HashSet;
+//!
+//! Session shape: one sequential bootstrap batch, then `iterations`
+//! sequential refinement batches (the surrogate refits after every
+//! told batch).
 
 use super::common::{
-    random_unmeasured, searcher_best, top_unmeasured, train_hifi, Collector, Pool, Problem,
-    Tuner, TunerOutput,
+    random_unmeasured, searcher_best, top_unmeasured, train_hifi, Pool, Problem, Tuner,
+    TunerOutput,
 };
+use super::session::{
+    MeasurementBatch, MeasurementResult, SessionCore, SessionState, TunerSession,
+};
+use crate::gbt::Ensemble;
 use crate::surrogate::Scorer;
 use crate::util::rng::Pcg32;
 
@@ -32,50 +38,110 @@ impl Tuner for ActiveLearning {
         "AL"
     }
 
-    fn run(
-        &self,
-        prob: &Problem,
-        pool: &Pool,
-        scorer: &Scorer,
+    fn session<'a>(
+        &'a self,
+        prob: &'a Problem,
+        pool: &'a Pool,
+        scorer: &'a Scorer,
         m: usize,
         rng: &mut Pcg32,
-    ) -> TunerOutput {
-        let mut col = Collector::new(prob, rng.derive_str("collector"));
-        let mut sel_rng = rng.derive_str("select");
+    ) -> Box<dyn TunerSession + 'a> {
         let m = m.min(pool.len());
         let m0 = ((m as f64 * self.m0_frac).round() as usize).clamp(1, m);
         let remaining = m - m0;
         let iters = self.iterations.min(remaining.max(1));
         let batch = if iters == 0 { 0 } else { remaining / iters };
+        Box::new(AlSession {
+            core: SessionCore::new(prob, pool, scorer, rng),
+            m0,
+            iters,
+            batch,
+            iter: 0,
+            bootstrapped: false,
+            pending: Vec::new(),
+            model: None,
+        })
+    }
+}
 
-        let mut measured: Vec<(usize, f64)> = Vec::with_capacity(m);
-        let mut measured_set: HashSet<usize> = HashSet::with_capacity(m);
-        for i in random_unmeasured(pool, &measured_set, m0, &mut sel_rng) {
-            measured.push((i, col.measure(&pool.configs[i])));
-            measured_set.insert(i);
-        }
+struct AlSession<'a> {
+    core: SessionCore<'a>,
+    m0: usize,
+    iters: usize,
+    batch: usize,
+    /// Refinement batches completed so far.
+    iter: usize,
+    bootstrapped: bool,
+    pending: Vec<usize>,
+    model: Option<Ensemble>,
+}
 
-        let mut model = train_hifi(prob, pool, &measured);
-        for _ in 0..iters {
-            if batch == 0 {
-                break;
-            }
-            let preds = scorer.score(&model, &pool.feats.workflow);
-            for i in top_unmeasured(&preds, &measured_set, batch) {
-                measured.push((i, col.measure(&pool.configs[i])));
-                measured_set.insert(i);
-            }
-            model = train_hifi(prob, pool, &measured);
-        }
+impl AlSession<'_> {
+    fn done(&self) -> bool {
+        self.bootstrapped && (self.batch == 0 || self.iter >= self.iters)
+    }
+}
 
-        let best_idx = searcher_best(&model, pool, scorer, &measured);
-        TunerOutput {
-            model,
-            measured,
-            best_idx,
-            collection_cost: col.total_cost(),
-            workflow_runs: col.workflow_runs,
+impl TunerSession for AlSession<'_> {
+    fn name(&self) -> &'static str {
+        "AL"
+    }
+
+    fn ask(&mut self) -> MeasurementBatch {
+        assert!(self.pending.is_empty(), "ask() with results outstanding");
+        if self.done() {
+            return MeasurementBatch::empty();
         }
+        self.core.asked_batches += 1;
+        let picks = if !self.bootstrapped {
+            random_unmeasured(
+                self.core.pool,
+                &self.core.measured_set,
+                self.m0,
+                &mut self.core.sel_rng,
+            )
+        } else {
+            let model = self.model.as_ref().expect("model trained at bootstrap");
+            let preds = self.core.scorer.score(model, &self.core.pool.feats.workflow);
+            top_unmeasured(&preds, &self.core.measured_set, self.batch)
+        };
+        let reqs = self.core.take_workflow_picks(&picks);
+        self.pending = picks;
+        MeasurementBatch::sequential(reqs)
+    }
+
+    fn tell(&mut self, results: &[MeasurementResult]) {
+        let picks = std::mem::take(&mut self.pending);
+        assert_eq!(results.len(), picks.len(), "tell() arity mismatch");
+        self.core.told_batches += 1;
+        for (&i, r) in picks.iter().zip(results) {
+            self.core.record_workflow(i, r.value);
+        }
+        if self.bootstrapped {
+            self.iter += 1;
+        } else {
+            self.bootstrapped = true;
+        }
+        self.model = Some(train_hifi(self.core.prob, self.core.pool, &self.core.measured));
+        self.core.refit();
+    }
+
+    fn state(&self) -> SessionState {
+        let phase = if self.done() {
+            "done"
+        } else if !self.bootstrapped {
+            "bootstrap"
+        } else {
+            "refine"
+        };
+        self.core.state(phase, self.done(), None)
+    }
+
+    fn finish(self: Box<Self>) -> TunerOutput {
+        let model = self.model.expect("finish() before the session completed");
+        let core = self.core;
+        let best_idx = searcher_best(&model, core.pool, core.scorer, &core.measured);
+        core.into_output(model, best_idx)
     }
 }
 
@@ -119,5 +185,29 @@ mod tests {
         let mut rng = Pcg32::new(5, 5);
         let out = ActiveLearning::default().run(&prob, &pool, &Scorer::Native, 5, &mut rng);
         assert!(out.workflow_runs <= 5);
+    }
+
+    #[test]
+    fn session_refits_every_batch() {
+        let prob = Problem::new(WorkflowId::LV, Objective::CompTime);
+        let pool = Pool::generate(&prob, 120, 13);
+        let mut rng = Pcg32::new(8, 8);
+        let tuner = ActiveLearning::default();
+        let mut session = tuner.session(&prob, &pool, &Scorer::Native, 30, &mut rng);
+        let mut col = super::super::Collector::new(&prob, Pcg32::new(9, 9));
+        let mut batches = 0usize;
+        loop {
+            let batch = session.ask();
+            if batch.is_empty() {
+                break;
+            }
+            batches += 1;
+            let results = super::super::session::Evaluator::evaluate(&mut col, &batch);
+            session.tell(&results);
+            assert_eq!(session.state().model_refits, batches);
+        }
+        // bootstrap + 6 refinement iterations
+        assert_eq!(batches, 7);
+        assert!(session.state().done);
     }
 }

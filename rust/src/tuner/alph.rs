@@ -4,14 +4,22 @@
 //! ({P_j(c)}, p) where p is the measured workflow performance — so its
 //! low-fidelity model costs workflow runs to build and retrain, which
 //! is exactly the deficiency §7.5.2 quantifies.
+//!
+//! Session shape mirrors CEAL's: one sequential component batch (when
+//! m_R > 0), then one fan-out `C_meas` batch per iteration; both the
+//! high-fidelity model and the combiner retrain after every told
+//! batch.
 
-use std::collections::HashSet;
 use std::sync::Arc;
 
 use super::ceal::{gbt_params_for, CealParams};
 use super::common::{
-    random_unmeasured, searcher_best, top_unmeasured, train_hifi, Collector, Pool, Problem,
-    Tuner, TunerOutput,
+    random_unmeasured, searcher_best, top_unmeasured, train_hifi, Pool, Problem, Tuner,
+    TunerOutput,
+};
+use super::session::{
+    sample_component_requests, DiagSink, MeasurementBatch, MeasurementRequest, MeasurementResult,
+    SessionCore, SessionState, TunerSession,
 };
 use crate::config::F_MAX;
 use crate::gbt::{train_log, Ensemble};
@@ -42,8 +50,9 @@ impl Alph {
 }
 
 /// Component-prediction features for the combiner: row i carries
-/// P_1(c_i)..P_J(c_i), zero-padded to F_MAX.
-fn combiner_features(per_comp_preds: &[Vec<f64>], idx: usize) -> [f32; F_MAX] {
+/// P_1(c_i)..P_J(c_i), zero-padded to F_MAX.  (Crate-visible so the
+/// frozen [`super::legacy`] reference path shares the encoding.)
+pub(crate) fn combiner_features(per_comp_preds: &[Vec<f64>], idx: usize) -> [f32; F_MAX] {
     let mut x = [0f32; F_MAX];
     for (j, preds) in per_comp_preds.iter().enumerate() {
         x[j] = preds[idx] as f32;
@@ -56,19 +65,16 @@ impl Tuner for Alph {
         "ALpH"
     }
 
-    fn run(
-        &self,
-        prob: &Problem,
-        pool: &Pool,
-        scorer: &Scorer,
+    fn session<'a>(
+        &'a self,
+        prob: &'a Problem,
+        pool: &'a Pool,
+        scorer: &'a Scorer,
         m: usize,
         rng: &mut Pcg32,
-    ) -> TunerOutput {
-        let mut col = Collector::new(prob, rng.derive_str("collector"));
-        let mut sel_rng = rng.derive_str("select");
+    ) -> Box<dyn TunerSession + 'a> {
         let p = self.params;
         let m = m.min(pool.len());
-
         let m_r = if self.historical.is_some() {
             0
         } else {
@@ -78,28 +84,87 @@ impl Tuner for Alph {
         let remaining = m.saturating_sub(m0 + m_r);
         let iters = p.iterations.clamp(1, remaining.max(1));
         let m_b = (remaining / iters).max(1);
+        Box::new(AlphSession {
+            tuner: self,
+            core: SessionCore::new(prob, pool, scorer, rng),
+            m_r,
+            m0,
+            iters,
+            m_b,
+            samples: Vec::new(),
+            per_comp_preds: Vec::new(),
+            using_hifi: false,
+            hifi: None,
+            combiner: None,
+            c_meas: Vec::new(),
+            iter: 0,
+            phase: Phase::Components,
+            pending: Pending::None,
+        })
+    }
+}
 
-        // component models (same phase-1 as CEAL)
-        let spec = &prob.sim.spec;
-        let configurable = spec.configurable();
-        let mut samples: Vec<ComponentSamples> = match &self.historical {
-            Some(h) => h.iter().cloned().collect(),
-            None => configurable.iter().map(|_| ComponentSamples::default()).collect(),
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Phase {
+    Components,
+    Workflow,
+    Done,
+}
+
+enum Pending {
+    None,
+    Components(Vec<(usize, [f32; F_MAX])>),
+    Batch(Vec<usize>),
+}
+
+struct AlphSession<'a> {
+    tuner: &'a Alph,
+    core: SessionCore<'a>,
+    m_r: usize,
+    m0: usize,
+    iters: usize,
+    m_b: usize,
+    samples: Vec<ComponentSamples>,
+    /// Per-component time predictions over the whole pool (fixed after
+    /// phase 1; component models are log-space → exponentiated).
+    per_comp_preds: Vec<Vec<f64>>,
+    using_hifi: bool,
+    hifi: Option<Ensemble>,
+    combiner: Option<Ensemble>,
+    c_meas: Vec<usize>,
+    iter: usize,
+    phase: Phase,
+    pending: Pending,
+}
+
+impl AlphSession<'_> {
+    /// Phase-1 sampling, identical to CEAL's — the shared
+    /// [`sample_component_requests`] protocol.
+    fn sample_components(&mut self) -> Vec<MeasurementRequest> {
+        let mut slots = Vec::new();
+        let reqs = sample_component_requests(
+            &mut self.core,
+            self.tuner.historical.as_ref(),
+            self.m_r,
+            &mut self.samples,
+            &mut slots,
+        );
+        self.pending = if reqs.is_empty() {
+            Pending::None
+        } else {
+            Pending::Components(slots)
         };
-        for (slot, &comp) in configurable.iter().enumerate() {
-            for _ in 0..m_r {
-                match col.measure_component_sampled(comp, &mut sel_rng) {
-                    Ok((cfg, y)) => samples[slot].push(spec.components[comp].encode(&cfg), y),
-                    Err(e) => {
-                        eprintln!("warning: {e}; skipping its isolated runs");
-                        break;
-                    }
-                }
-            }
-        }
-        let comp_params = gbt_params_for(samples.iter().map(|s| s.len()).max().unwrap_or(0));
+        reqs
+    }
+
+    /// Close phase 1: fit component models, precompute the combiner's
+    /// pool features, and draw the m_0 random bootstrap batch.
+    fn open_workflow_phase(&mut self) {
+        let (prob, pool, scorer) = (self.core.prob, self.core.pool, self.core.scorer);
+        let comp_params = gbt_params_for(self.samples.iter().map(|s| s.len()).max().unwrap_or(0));
         let n_feats = prob.n_component_features();
-        let comp_models: Vec<Ensemble> = samples
+        let comp_models: Vec<Ensemble> = self
+            .samples
             .iter()
             .zip(&n_feats)
             .map(|(s, &nf)| {
@@ -110,94 +175,166 @@ impl Tuner for Alph {
                 }
             })
             .collect();
-        // per-component time predictions over the whole pool (fixed);
-        // component models are log-space -> exponentiate
-        let per_comp_preds: Vec<Vec<f64>> = comp_models
+        self.per_comp_preds = comp_models
             .iter()
             .zip(&pool.feats.per_component)
-            .map(|(e, xs)| {
-                scorer
-                    .score(e, xs)
-                    .into_iter()
-                    .map(f64::exp)
-                    .collect()
-            })
+            .map(|(e, xs)| scorer.score(e, xs).into_iter().map(f64::exp).collect())
             .collect();
-        let n_j = per_comp_preds.len();
+        self.core.refit();
 
         // bootstrap: m0 random workflow runs train the combiner M_0
-        let mut measured: Vec<(usize, f64)> = Vec::with_capacity(m);
-        let mut measured_set: HashSet<usize> = HashSet::with_capacity(m);
-        let mut c_meas = random_unmeasured(pool, &measured_set, m0, &mut sel_rng);
+        let c_meas = random_unmeasured(
+            pool,
+            &self.core.measured_set,
+            self.m0,
+            &mut self.core.sel_rng,
+        );
         for &i in &c_meas {
-            measured_set.insert(i);
+            self.core.measured_set.insert(i);
         }
+        self.c_meas = c_meas;
+        self.phase = Phase::Workflow;
+    }
 
-        let train_combiner = |measured: &[(usize, f64)]| -> Ensemble {
-            let xs: Vec<[f32; F_MAX]> = measured
-                .iter()
-                .map(|&(i, _)| combiner_features(&per_comp_preds, i))
-                .collect();
-            let y: Vec<f64> = measured.iter().map(|&(_, y)| y).collect();
-            train_log(&xs, &y, n_j.max(1), &gbt_params_for(y.len()))
+    fn train_combiner(&self) -> Ensemble {
+        let n_j = self.per_comp_preds.len();
+        let xs: Vec<[f32; F_MAX]> = self
+            .core
+            .measured
+            .iter()
+            .map(|&(i, _)| combiner_features(&self.per_comp_preds, i))
+            .collect();
+        let y: Vec<f64> = self.core.measured.iter().map(|&(_, y)| y).collect();
+        train_log(&xs, &y, n_j.max(1), &gbt_params_for(y.len()))
+    }
+
+    fn absorb_batch(&mut self, idxs: Vec<usize>, results: &[MeasurementResult]) {
+        let (prob, pool, scorer) = (self.core.prob, self.core.pool, self.core.scorer);
+        // switch detection, mirroring CEAL but on the fresh batch only
+        // — and *before* the fresh rows join the training set, exactly
+        // as the monolithic loop ordered it
+        if !self.using_hifi {
+            if let (Some(h), Some(c0)) = (&self.hifi, &self.combiner) {
+                let actual: Vec<f64> = results.iter().map(|r| r.value).collect();
+                let xs: Vec<_> = idxs.iter().map(|&i| pool.feats.workflow[i]).collect();
+                let pred_h = scorer.score(h, &xs);
+                let cx: Vec<[f32; F_MAX]> = idxs
+                    .iter()
+                    .map(|&i| combiner_features(&self.per_comp_preds, i))
+                    .collect();
+                let pred_l = scorer.score(c0, &cx);
+                if recall_sum_123(&pred_h, &actual) >= recall_sum_123(&pred_l, &actual) {
+                    self.using_hifi = true;
+                }
+            }
+        }
+        for (&i, r) in idxs.iter().zip(results) {
+            self.core.record_workflow(i, r.value);
+        }
+        self.hifi = Some(train_hifi(prob, pool, &self.core.measured));
+        self.core.refit();
+        self.combiner = Some(self.train_combiner());
+        self.core.refit();
+        self.iter += 1;
+        if self.iter < self.iters {
+            let scores: Vec<f64> = if self.using_hifi {
+                scorer.score(self.hifi.as_ref().unwrap(), &pool.feats.workflow)
+            } else {
+                let c0 = self.combiner.as_ref().unwrap();
+                let cx: Vec<[f32; F_MAX]> = (0..pool.len())
+                    .map(|i| combiner_features(&self.per_comp_preds, i))
+                    .collect();
+                scorer.score(c0, &cx)
+            };
+            self.c_meas = top_unmeasured(&scores, &self.core.measured_set, self.m_b);
+            for &i in &self.c_meas {
+                self.core.measured_set.insert(i);
+            }
+        } else {
+            self.phase = Phase::Done;
+        }
+    }
+}
+
+impl TunerSession for AlphSession<'_> {
+    fn name(&self) -> &'static str {
+        "ALpH"
+    }
+
+    fn ask(&mut self) -> MeasurementBatch {
+        assert!(
+            matches!(self.pending, Pending::None),
+            "ask() with results outstanding"
+        );
+        if self.phase == Phase::Components {
+            let reqs = self.sample_components();
+            if reqs.is_empty() {
+                self.open_workflow_phase();
+            } else {
+                self.core.asked_batches += 1;
+                return MeasurementBatch::sequential(reqs);
+            }
+        }
+        if self.phase == Phase::Done || self.c_meas.is_empty() {
+            self.phase = Phase::Done;
+            return MeasurementBatch::empty();
+        }
+        self.core.asked_batches += 1;
+        let reqs: Vec<MeasurementRequest> = self
+            .c_meas
+            .iter()
+            .map(|&i| self.core.workflow_request(i))
+            .collect();
+        self.pending = Pending::Batch(std::mem::take(&mut self.c_meas));
+        MeasurementBatch::fan_out(reqs)
+    }
+
+    fn tell(&mut self, results: &[MeasurementResult]) {
+        self.core.told_batches += 1;
+        match std::mem::replace(&mut self.pending, Pending::None) {
+            Pending::None => panic!("tell() without an outstanding batch"),
+            Pending::Components(slots) => {
+                assert_eq!(results.len(), slots.len(), "tell() arity mismatch");
+                for ((slot, x), r) in slots.into_iter().zip(results) {
+                    self.samples[slot].push(x, r.value);
+                    self.core.record_component(r.value);
+                }
+                self.open_workflow_phase();
+            }
+            Pending::Batch(idxs) => {
+                assert_eq!(results.len(), idxs.len(), "tell() arity mismatch");
+                self.absorb_batch(idxs, results);
+            }
+        }
+    }
+
+    fn state(&self) -> SessionState {
+        let (phase, done) = match self.phase {
+            Phase::Components => ("components", false),
+            Phase::Workflow => ("refine", false),
+            Phase::Done => ("done", true),
         };
+        let using = if self.per_comp_preds.is_empty() {
+            None
+        } else {
+            Some(self.using_hifi)
+        };
+        self.core.state(phase, done, using)
+    }
 
-        let mut using_hifi = false;
-        let mut hifi: Option<Ensemble> = None;
-        let mut combiner: Option<Ensemble> = None;
+    fn finish(self: Box<Self>) -> TunerOutput {
+        let model = self.hifi.expect("finish() before any iteration was told");
+        let core = self.core;
+        let best_idx = searcher_best(&model, core.pool, core.scorer, &core.measured);
+        core.into_output(model, best_idx)
+    }
 
-        for iter in 0..iters {
-            // batch measurement fans across the worker pool, same as
-            // CEAL (bit-identical for any worker count)
-            let batch = col.measure_pool_batch(pool, &c_meas);
-            // switch detection, mirroring CEAL
-            if !using_hifi {
-                if let (Some(h), Some(c0)) = (&hifi, &combiner) {
-                    let actual: Vec<f64> = batch.iter().map(|&(_, y)| y).collect();
-                    let xs: Vec<_> = batch
-                        .iter()
-                        .map(|&(i, _)| pool.feats.workflow[i])
-                        .collect();
-                    let pred_h = scorer.score(h, &xs);
-                    let cx: Vec<[f32; F_MAX]> = batch
-                        .iter()
-                        .map(|&(i, _)| combiner_features(&per_comp_preds, i))
-                        .collect();
-                    let pred_l = scorer.score(c0, &cx);
-                    if recall_sum_123(&pred_h, &actual) >= recall_sum_123(&pred_l, &actual) {
-                        using_hifi = true;
-                    }
-                }
-            }
-            measured.extend_from_slice(&batch);
-            hifi = Some(train_hifi(prob, pool, &measured));
-            combiner = Some(train_combiner(&measured));
-            if iter + 1 < iters {
-                let scores: Vec<f64> = if using_hifi {
-                    scorer.score(hifi.as_ref().unwrap(), &pool.feats.workflow)
-                } else {
-                    let c0 = combiner.as_ref().unwrap();
-                    let cx: Vec<[f32; F_MAX]> = (0..pool.len())
-                        .map(|i| combiner_features(&per_comp_preds, i))
-                        .collect();
-                    scorer.score(c0, &cx)
-                };
-                c_meas = top_unmeasured(&scores, &measured_set, m_b);
-                for &i in &c_meas {
-                    measured_set.insert(i);
-                }
-            }
-        }
+    fn set_diag_sink(&mut self, sink: DiagSink) {
+        self.core.diag.set_sink(sink);
+    }
 
-        let model = hifi.expect("at least one iteration");
-        let best_idx = searcher_best(&model, pool, scorer, &measured);
-        TunerOutput {
-            model,
-            measured,
-            best_idx,
-            collection_cost: col.total_cost(),
-            workflow_runs: col.workflow_runs,
-        }
+    fn diagnostics(&self) -> &[String] {
+        self.core.diag.captured()
     }
 }
 

@@ -9,14 +9,24 @@
 //! rest on low-fidelity-guided batches, stopping a phase as soon as its
 //! allowance is exhausted — so expensive samples shrink later batches
 //! rather than overrunning the allocation.
-
-use std::collections::HashSet;
+//!
+//! Session shape: because every stopping decision depends on the
+//! *observed* cost of the previous sample, the session asks one
+//! measurement at a time (each `tell` updates the spend before the
+//! next `ask` re-checks its phase allowance) — the faithful stepwise
+//! form of the monolithic per-sample loop.
 
 use super::ceal::gbt_params_for;
 use super::common::{
     random_unmeasured, searcher_best, top_unmeasured, train_hifi, Collector, Pool, Problem,
     TunerOutput,
 };
+use super::session::{
+    drive, DiagSink, MeasurementBatch, MeasurementRequest, MeasurementResult, SessionCore,
+    SessionState, TunerSession,
+};
+use crate::config::F_MAX;
+use crate::gbt::Ensemble;
 use crate::metrics::recall_sum_123;
 use crate::surrogate::lowfi::{ComponentSamples, LowFiModel};
 use crate::surrogate::Scorer;
@@ -52,7 +62,44 @@ impl BudgetedCeal {
         BudgetedCeal { params }
     }
 
-    /// Run with a budget expressed in objective units (e.g. core-hours).
+    /// Open an ask/tell session with a budget expressed in objective
+    /// units (e.g. core-hours).  The cost-budgeted algorithm is not a
+    /// [`super::Tuner`] — its budget is a float, not a run count — but
+    /// its session drives identically.
+    pub fn session_with_cost_budget<'a>(
+        &'a self,
+        prob: &'a Problem,
+        pool: &'a Pool,
+        scorer: &'a Scorer,
+        cost_budget: f64,
+        rng: &mut Pcg32,
+    ) -> Box<dyn TunerSession + 'a> {
+        assert!(cost_budget > 0.0);
+        let p = self.params;
+        let configurable = prob.sim.spec.configurable();
+        let n_comp = configurable.len();
+        Box::new(BudgetedSession {
+            core: SessionCore::new(prob, pool, scorer, rng),
+            params: p,
+            cost_budget,
+            comp_allowance: cost_budget * p.component_frac,
+            boot_allowance: cost_budget * (p.component_frac + p.bootstrap_frac),
+            configurable,
+            exhausted: vec![false; n_comp],
+            cursor: 0,
+            progressed: false,
+            samples: (0..n_comp).map(|_| ComponentSamples::default()).collect(),
+            lowfi_scores: Vec::new(),
+            using_hifi: false,
+            hifi: None,
+            round: None,
+            phase: Phase::Components,
+            pending: Pending::None,
+        })
+    }
+
+    /// Run with a cost budget against the simulator:
+    /// `drive(session, Collector)`.
     pub fn run_with_cost_budget(
         &self,
         prob: &Problem,
@@ -61,121 +108,284 @@ impl BudgetedCeal {
         cost_budget: f64,
         rng: &mut Pcg32,
     ) -> TunerOutput {
-        assert!(cost_budget > 0.0);
-        let p = self.params;
         let mut col = Collector::new(prob, rng.derive_str("collector"));
-        let mut sel_rng = rng.derive_str("select");
+        drive(
+            self.session_with_cost_budget(prob, pool, scorer, cost_budget, rng),
+            &mut col,
+        )
+    }
+}
 
-        // Phase 1: component runs until the component allowance is spent.
-        let comp_allowance = cost_budget * p.component_frac;
-        let spec = &prob.sim.spec;
-        let configurable = spec.configurable();
-        let mut samples: Vec<ComponentSamples> =
-            configurable.iter().map(|_| ComponentSamples::default()).collect();
-        // An infeasible component skips only itself (matching CEAL /
-        // ALpH); the loop ends when the allowance is spent or every
-        // component is exhausted.
-        let mut exhausted = vec![false; configurable.len()];
-        'outer: loop {
-            let mut progressed = false;
-            for (slot, &comp) in configurable.iter().enumerate() {
-                if exhausted[slot] {
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Phase {
+    Components,
+    Bootstrap,
+    Guided,
+    Done,
+}
+
+enum Pending {
+    None,
+    /// (configurable slot, encoded component features).
+    Component(usize, [f32; F_MAX]),
+    Workflow(usize),
+}
+
+/// One guided round: the selected batch and how far it got before the
+/// budget intervened.
+struct Round {
+    batch_idx: Vec<usize>,
+    pos: usize,
+    taken: usize,
+}
+
+struct BudgetedSession<'a> {
+    core: SessionCore<'a>,
+    params: BudgetedCealParams,
+    cost_budget: f64,
+    comp_allowance: f64,
+    boot_allowance: f64,
+    configurable: Vec<usize>,
+    exhausted: Vec<bool>,
+    /// Round-robin position within the current component pass.
+    cursor: usize,
+    /// Did the current pass collect at least one sample?
+    progressed: bool,
+    samples: Vec<ComponentSamples>,
+    lowfi_scores: Vec<f64>,
+    using_hifi: bool,
+    hifi: Option<Ensemble>,
+    round: Option<Round>,
+    phase: Phase,
+    pending: Pending,
+}
+
+impl BudgetedSession<'_> {
+    /// The legacy round-robin component loop, suspended at each
+    /// measurement: returns the next component request, or `None` once
+    /// the allowance is spent or no component can progress.
+    fn next_component_request(&mut self) -> Option<MeasurementRequest> {
+        loop {
+            while self.cursor < self.configurable.len() {
+                let slot = self.cursor;
+                if self.exhausted[slot] {
+                    self.cursor += 1;
                     continue;
                 }
-                if col.component_cost >= comp_allowance {
-                    break 'outer;
+                if self.core.component_cost() >= self.comp_allowance {
+                    return None; // `break 'outer`
                 }
-                match col.measure_component_sampled(comp, &mut sel_rng) {
-                    Ok((cfg, y)) => {
-                        samples[slot].push(spec.components[comp].encode(&cfg), y);
-                        progressed = true;
+                let comp = self.configurable[slot];
+                self.cursor += 1;
+                match self
+                    .core
+                    .prob
+                    .sim
+                    .sample_component_feasible(comp, &mut self.core.sel_rng)
+                {
+                    Ok(cfg) => {
+                        self.progressed = true;
+                        let x = self.core.prob.sim.spec.components[comp].encode(&cfg);
+                        self.pending = Pending::Component(slot, x);
+                        return Some(MeasurementRequest::Component { comp, config: cfg });
                     }
                     Err(e) => {
-                        eprintln!("warning: {e}; skipping its isolated runs");
-                        exhausted[slot] = true;
+                        // an infeasible component skips only itself
+                        self.core
+                            .diag
+                            .warn(format!("{e}; skipping its isolated runs"));
+                        self.exhausted[slot] = true;
                     }
                 }
             }
-            if !progressed {
-                break;
+            if !self.progressed {
+                return None;
             }
+            self.progressed = false;
+            self.cursor = 0;
         }
+    }
+
+    /// Close phase 1: fit M_L on whatever was collected.
+    fn open_bootstrap(&mut self) {
+        let prob = self.core.prob;
         let n_feats = prob.n_component_features();
-        let comp_params = gbt_params_for(samples.iter().map(|s| s.len()).max().unwrap_or(0));
-        let lowfi = LowFiModel::fit(&samples, &n_feats, prob.objective, &comp_params);
-        let lowfi_scores = lowfi.score(&pool.feats, scorer);
+        let comp_params = gbt_params_for(self.samples.iter().map(|s| s.len()).max().unwrap_or(0));
+        let lowfi = LowFiModel::fit(&self.samples, &n_feats, prob.objective, &comp_params);
+        self.lowfi_scores = lowfi.score(&self.core.pool.feats, self.core.scorer);
+        self.core.refit();
+        self.phase = Phase::Bootstrap;
+    }
 
-        // Phase 2: bootstrap + guided batches under the remaining budget.
-        let mut measured: Vec<(usize, f64)> = Vec::new();
-        let mut measured_set: HashSet<usize> = HashSet::new();
-        let boot_allowance = cost_budget * (p.component_frac + p.bootstrap_frac);
-        while col.total_cost() < boot_allowance && measured_set.len() < pool.len() {
-            let i = random_unmeasured(pool, &measured_set, 1, &mut sel_rng)[0];
-            measured.push((i, col.measure(&pool.configs[i])));
-            measured_set.insert(i);
+    /// Post-round processing: switch detection over everything
+    /// measured, then retrain M_H (both exactly as the monolithic loop
+    /// ordered them).
+    fn post_round(&mut self) {
+        let (prob, pool, scorer) = (self.core.prob, self.core.pool, self.core.scorer);
+        if let Some(h) = &self.hifi {
+            if !self.using_hifi {
+                let actual: Vec<f64> = self.core.measured.iter().map(|&(_, y)| y).collect();
+                let xs: Vec<_> = self
+                    .core
+                    .measured
+                    .iter()
+                    .map(|&(i, _)| pool.feats.workflow[i])
+                    .collect();
+                let s_h = recall_sum_123(&scorer.score(h, &xs), &actual);
+                let pred_l: Vec<f64> = self
+                    .core
+                    .measured
+                    .iter()
+                    .map(|&(i, _)| self.lowfi_scores[i])
+                    .collect();
+                if s_h >= recall_sum_123(&pred_l, &actual) {
+                    self.using_hifi = true;
+                }
+            }
         }
+        if self.core.measured.len() >= 2 {
+            self.hifi = Some(train_hifi(prob, pool, &self.core.measured));
+            self.core.refit();
+        }
+    }
+}
 
-        let mut using_hifi = false;
-        let mut hifi = if measured.len() >= 2 {
-            Some(train_hifi(prob, pool, &measured))
-        } else {
-            None
-        };
-        while col.total_cost() < cost_budget && measured_set.len() < pool.len() {
-            // M_L's pool scores are borrowed, not cloned, per round
-            let hifi_scores;
-            let scores: &[f64] = match (&hifi, using_hifi) {
-                (Some(h), true) => {
-                    hifi_scores = scorer.score(h, &pool.feats.workflow);
-                    &hifi_scores
+impl TunerSession for BudgetedSession<'_> {
+    fn name(&self) -> &'static str {
+        "budgeted-CEAL"
+    }
+
+    fn ask(&mut self) -> MeasurementBatch {
+        assert!(
+            matches!(self.pending, Pending::None),
+            "ask() with results outstanding"
+        );
+        loop {
+            match self.phase {
+                Phase::Components => {
+                    if let Some(req) = self.next_component_request() {
+                        self.core.asked_batches += 1;
+                        return MeasurementBatch::sequential(vec![req]);
+                    }
+                    self.open_bootstrap();
                 }
-                _ => &lowfi_scores,
-            };
-            let batch_idx = top_unmeasured(scores, &measured_set, p.batch.min(pool.len()));
-            if batch_idx.is_empty() {
-                break;
-            }
-            let mut batch: Vec<(usize, f64)> = Vec::new();
-            for i in batch_idx {
-                if col.total_cost() >= cost_budget {
-                    break;
+                Phase::Bootstrap => {
+                    let pool = self.core.pool;
+                    if self.core.total_cost() < self.boot_allowance
+                        && self.core.measured_set.len() < pool.len()
+                    {
+                        let set = &self.core.measured_set;
+                        let i = random_unmeasured(pool, set, 1, &mut self.core.sel_rng)[0];
+                        self.core.measured_set.insert(i);
+                        self.pending = Pending::Workflow(i);
+                        self.core.asked_batches += 1;
+                        return MeasurementBatch::sequential(vec![self.core.workflow_request(i)]);
+                    }
+                    // bootstrap over: initial M_H when trainable
+                    if self.core.measured.len() >= 2 {
+                        self.hifi = Some(train_hifi(self.core.prob, pool, &self.core.measured));
+                        self.core.refit();
+                    }
+                    self.phase = Phase::Guided;
                 }
-                batch.push((i, col.measure(&pool.configs[i])));
-                measured_set.insert(i);
-            }
-            if batch.is_empty() {
-                break;
-            }
-            measured.extend_from_slice(&batch);
-            if let Some(h) = &hifi {
-                if !using_hifi {
-                    let actual: Vec<f64> = measured.iter().map(|&(_, y)| y).collect();
-                    let xs: Vec<_> = measured
-                        .iter()
-                        .map(|&(i, _)| pool.feats.workflow[i])
-                        .collect();
-                    let s_h = recall_sum_123(&scorer.score(h, &xs), &actual);
-                    let pred_l: Vec<f64> =
-                        measured.iter().map(|&(i, _)| lowfi_scores[i]).collect();
-                    if s_h >= recall_sum_123(&pred_l, &actual) {
-                        using_hifi = true;
+                Phase::Guided => {
+                    if let Some(round) = &mut self.round {
+                        if round.pos < round.batch_idx.len()
+                            && self.core.total_cost() < self.cost_budget
+                        {
+                            let i = round.batch_idx[round.pos];
+                            round.pos += 1;
+                            round.taken += 1;
+                            self.core.measured_set.insert(i);
+                            self.pending = Pending::Workflow(i);
+                            self.core.asked_batches += 1;
+                            let req = self.core.workflow_request(i);
+                            return MeasurementBatch::sequential(vec![req]);
+                        }
+                        // round finished (batch exhausted or budget hit)
+                        let taken = self.round.take().map(|r| r.taken).unwrap_or(0);
+                        if taken == 0 {
+                            self.phase = Phase::Done;
+                            continue;
+                        }
+                        self.post_round();
+                    } else {
+                        if self.core.total_cost() >= self.cost_budget
+                            || self.core.measured_set.len() >= self.core.pool.len()
+                        {
+                            self.phase = Phase::Done;
+                            continue;
+                        }
+                        // M_L's pool scores are borrowed, not cloned
+                        let hifi_scores;
+                        let scores: &[f64] = match (&self.hifi, self.using_hifi) {
+                            (Some(h), true) => {
+                                hifi_scores =
+                                    self.core.scorer.score(h, &self.core.pool.feats.workflow);
+                                &hifi_scores
+                            }
+                            _ => &self.lowfi_scores,
+                        };
+                        let batch_idx = top_unmeasured(
+                            scores,
+                            &self.core.measured_set,
+                            self.params.batch.min(self.core.pool.len()),
+                        );
+                        if batch_idx.is_empty() {
+                            self.phase = Phase::Done;
+                            continue;
+                        }
+                        self.round = Some(Round { batch_idx, pos: 0, taken: 0 });
                     }
                 }
-            }
-            if measured.len() >= 2 {
-                hifi = Some(train_hifi(prob, pool, &measured));
+                Phase::Done => return MeasurementBatch::empty(),
             }
         }
+    }
 
-        let model = hifi.unwrap_or_else(|| crate::gbt::Ensemble::constant(1, 0.0));
-        let best_idx = searcher_best(&model, pool, scorer, &measured);
-        TunerOutput {
-            model,
-            measured,
-            best_idx,
-            collection_cost: col.total_cost(),
-            workflow_runs: col.workflow_runs,
+    fn tell(&mut self, results: &[MeasurementResult]) {
+        assert_eq!(results.len(), 1, "tell() arity mismatch");
+        self.core.told_batches += 1;
+        match std::mem::replace(&mut self.pending, Pending::None) {
+            Pending::None => panic!("tell() without an outstanding batch"),
+            Pending::Component(slot, x) => {
+                self.samples[slot].push(x, results[0].value);
+                self.core.record_component(results[0].value);
+            }
+            Pending::Workflow(i) => {
+                self.core.record_workflow(i, results[0].value);
+            }
         }
+    }
+
+    fn state(&self) -> SessionState {
+        let (phase, done) = match self.phase {
+            Phase::Components => ("components", false),
+            Phase::Bootstrap => ("bootstrap", false),
+            Phase::Guided => ("guided", false),
+            Phase::Done => ("done", true),
+        };
+        let using = if self.lowfi_scores.is_empty() {
+            None
+        } else {
+            Some(self.using_hifi)
+        };
+        self.core.state(phase, done, using)
+    }
+
+    fn finish(self: Box<Self>) -> TunerOutput {
+        let model = self.hifi.unwrap_or_else(|| Ensemble::constant(1, 0.0));
+        let core = self.core;
+        let best_idx = searcher_best(&model, core.pool, core.scorer, &core.measured);
+        core.into_output(model, best_idx)
+    }
+
+    fn set_diag_sink(&mut self, sink: DiagSink) {
+        self.core.diag.set_sink(sink);
+    }
+
+    fn diagnostics(&self) -> &[String] {
+        self.core.diag.captured()
     }
 }
 
@@ -247,5 +457,37 @@ mod tests {
                 .best_idx
         };
         assert_eq!(run(4), run(4));
+    }
+
+    /// The budget gate reacts to every told value: each ask carries
+    /// exactly one request, and the session stops within one sample of
+    /// the budget even when the driver feeds values it chooses.
+    #[test]
+    fn single_request_batches_and_stepwise_stop() {
+        let prob = Problem::new(WorkflowId::LV, Objective::CompTime);
+        let pool = Pool::generate(&prob, 80, 54);
+        let tuner = BudgetedCeal::new(BudgetedCealParams::default());
+        let mut rng = Pcg32::new(2, 2);
+        let mut session =
+            tuner.session_with_cost_budget(&prob, &pool, &Scorer::Native, 100.0, &mut rng);
+        let mut spent = 0.0;
+        loop {
+            let batch = session.ask();
+            if batch.is_empty() {
+                break;
+            }
+            assert_eq!(batch.len(), 1, "budgeted sessions step one sample at a time");
+            // a synthetic driver: every measurement costs 9 units
+            spent += 9.0;
+            session.tell(&[MeasurementResult { value: 9.0 }]);
+        }
+        let st = session.state();
+        assert!(st.done);
+        assert!((st.collection_cost - spent).abs() < 1e-9);
+        // budget 100 at 9/sample: the session must stop within one
+        // sample past the ceiling
+        assert!(spent <= 100.0 + 9.0, "spent {spent}");
+        let out = session.finish();
+        assert!(out.best_idx < pool.len());
     }
 }

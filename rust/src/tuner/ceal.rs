@@ -11,22 +11,33 @@
 //! fresh batch — lines 16-21), train M_H on everything measured, and
 //! pick the next batch as the best-scoring unmeasured pool configs
 //! under whichever model currently wins.
+//!
+//! Session shape: one sequential batch of isolated component runs
+//! (phase 1; absent with historical data), then one *fan-out* batch
+//! per ensemble-active-learning iteration — the `C_meas` fan-out of
+//! Alg. 1 line 15 survives the ask/tell split as a
+//! [`BatchMode::FanOut`](super::session::BatchMode::FanOut) batch, so
+//! evaluators can run the whole batch concurrently.
 
-use std::collections::HashSet;
 use std::sync::Arc;
 
 use super::common::{
-    random_unmeasured, searcher_best, top_unmeasured, train_hifi, Collector, Pool, Problem,
-    Tuner, TunerOutput,
+    random_unmeasured, searcher_best, top_unmeasured, train_hifi, Pool, Problem, Tuner,
+    TunerOutput,
 };
-use crate::gbt::GbtParams;
+use super::session::{
+    sample_component_requests, DiagSink, MeasurementBatch, MeasurementRequest, MeasurementResult,
+    SessionCore, SessionState, TunerSession,
+};
+use crate::config::F_MAX;
+use crate::gbt::{Ensemble, GbtParams};
 use crate::metrics::recall_sum_123;
 use crate::surrogate::lowfi::{ComponentSamples, LowFiModel};
 use crate::surrogate::Scorer;
 use crate::util::rng::Pcg32;
 
 /// CEAL hyper-parameters (paper §6 recommendations).
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct CealParams {
     /// Ensemble-active-learning iterations I.
     pub iterations: usize,
@@ -68,7 +79,7 @@ pub struct Ceal {
     /// identical across repetitions — cache them per tuner instance
     /// (campaigns reuse one instance across reps). §Perf: this removes
     /// ~150 ms of redundant GBT training per repetition.
-    cached_hist_models: std::sync::OnceLock<Vec<crate::gbt::Ensemble>>,
+    cached_hist_models: std::sync::OnceLock<Vec<Ensemble>>,
 }
 
 impl Ceal {
@@ -87,44 +98,6 @@ impl Ceal {
             cached_hist_models: std::sync::OnceLock::new(),
         }
     }
-
-    /// Collect component samples (lines 1-6): m_r isolated runs of each
-    /// configurable component on random configurations, merged with any
-    /// historical data.
-    fn component_samples(
-        &self,
-        prob: &Problem,
-        m_r: usize,
-        col: &mut Collector,
-        rng: &mut Pcg32,
-    ) -> Vec<ComponentSamples> {
-        let spec = &prob.sim.spec;
-        let configurable = spec.configurable();
-        let mut out: Vec<ComponentSamples> = match &self.historical {
-            Some(h) => {
-                assert_eq!(h.len(), configurable.len(), "historical arity");
-                h.iter().cloned().collect()
-            }
-            None => configurable.iter().map(|_| ComponentSamples::default()).collect(),
-        };
-        for (slot, &comp) in configurable.iter().enumerate() {
-            let cs = &spec.components[comp];
-            for _ in 0..m_r {
-                // feasible on the same <=32-node allocations as the pool
-                match col.measure_component_sampled(comp, rng) {
-                    Ok((cfg, y)) => out[slot].push(cs.encode(&cfg), y),
-                    Err(e) => {
-                        // an over-tight component space: train on what
-                        // we have (empty -> constant model) instead of
-                        // aborting the campaign
-                        eprintln!("warning: {e}; skipping its isolated runs");
-                        break;
-                    }
-                }
-            }
-        }
-        out
-    }
 }
 
 /// Pick GBT hyper-parameters by training-set size.
@@ -141,19 +114,16 @@ impl Tuner for Ceal {
         "CEAL"
     }
 
-    fn run(
-        &self,
-        prob: &Problem,
-        pool: &Pool,
-        scorer: &Scorer,
+    fn session<'a>(
+        &'a self,
+        prob: &'a Problem,
+        pool: &'a Pool,
+        scorer: &'a Scorer,
         m: usize,
         rng: &mut Pcg32,
-    ) -> TunerOutput {
-        let mut col = Collector::new(prob, rng.derive_str("collector"));
-        let mut sel_rng = rng.derive_str("select");
+    ) -> Box<dyn TunerSession + 'a> {
         let p = self.params;
         let m = m.min(pool.len());
-
         // budget split (line 9): m_R charged only when collecting fresh
         // component data
         let m_r = if self.historical.is_some() {
@@ -165,107 +135,275 @@ impl Tuner for Ceal {
         let remaining = m.saturating_sub(m0 + m_r);
         let iters = p.iterations.clamp(1, remaining.max(1));
         let m_b = (remaining / iters).max(1);
+        Box::new(CealSession {
+            tuner: self,
+            core: SessionCore::new(prob, pool, scorer, rng),
+            m_r,
+            m0,
+            iters,
+            m_b,
+            samples: Vec::new(),
+            lowfi_scores: Vec::new(),
+            using_hifi: false,
+            hifi: None,
+            actual: Vec::new(),
+            xs_meas: Vec::new(),
+            pred_l: Vec::new(),
+            c_meas: Vec::new(),
+            iter: 0,
+            phase: Phase::Components,
+            pending: Pending::None,
+        })
+    }
+}
 
-        // Phase 1: component models -> low-fidelity M_L (lines 1-7).
-        // Pure-history models are deterministic: train once per tuner.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Phase {
+    /// Isolated component runs (Alg. 1 lines 1-6); skipped when m_R=0.
+    Components,
+    /// Ensemble active learning (lines 8-26).
+    Workflow,
+    Done,
+}
+
+enum Pending {
+    None,
+    /// Per request: (configurable slot, encoded component features).
+    Components(Vec<(usize, [f32; F_MAX])>),
+    /// Pool indices of the in-flight `C_meas` fan-out.
+    Batch(Vec<usize>),
+}
+
+struct CealSession<'a> {
+    tuner: &'a Ceal,
+    core: SessionCore<'a>,
+    m_r: usize,
+    m0: usize,
+    iters: usize,
+    m_b: usize,
+    /// Fresh component samples (merged with history at initialization).
+    samples: Vec<ComponentSamples>,
+    /// M_L's pool scores; empty until phase 1 closes.
+    lowfi_scores: Vec<f64>,
+    using_hifi: bool,
+    hifi: Option<Ensemble>,
+    /// Switch-detection state, extended incrementally with each fresh
+    /// batch instead of re-gathered over all measured rows every
+    /// iteration (M_L's scores are fixed; only M_H's predictions must
+    /// be recomputed — the model retrains).
+    actual: Vec<f64>,
+    xs_meas: Vec<[f32; F_MAX]>,
+    pred_l: Vec<f64>,
+    c_meas: Vec<usize>,
+    iter: usize,
+    phase: Phase,
+    pending: Pending,
+}
+
+impl CealSession<'_> {
+    /// Phase-1 sampling (lines 1-6): one sequential batch of isolated
+    /// component runs via the shared
+    /// [`sample_component_requests`] protocol.
+    fn sample_components(&mut self) -> Vec<MeasurementRequest> {
+        let mut slots = Vec::new();
+        let reqs = sample_component_requests(
+            &mut self.core,
+            self.tuner.historical.as_ref(),
+            self.m_r,
+            &mut self.samples,
+            &mut slots,
+        );
+        self.pending = if reqs.is_empty() {
+            Pending::None
+        } else {
+            Pending::Components(slots)
+        };
+        reqs
+    }
+
+    /// Close phase 1: fit the component models, combine into M_L,
+    /// score the pool, and select the first `C_meas` (lines 7-11).
+    fn open_workflow_phase(&mut self) {
+        let prob = self.core.prob;
         let n_feats = prob.n_component_features();
         let fit = |samples: &[ComponentSamples]| {
-            let comp_params =
-                gbt_params_for(samples.iter().map(|s| s.len()).max().unwrap_or(0));
+            let comp_params = gbt_params_for(samples.iter().map(|s| s.len()).max().unwrap_or(0));
             LowFiModel::fit(samples, &n_feats, prob.objective, &comp_params).comps
         };
-        let comps = if m_r == 0 && self.historical.is_some() {
-            self.cached_hist_models
-                .get_or_init(|| fit(self.historical.as_ref().unwrap()))
+        // Pure-history models are deterministic: train once per tuner.
+        let comps = if self.m_r == 0 && self.tuner.historical.is_some() {
+            self.tuner
+                .cached_hist_models
+                .get_or_init(|| fit(self.tuner.historical.as_ref().unwrap()))
                 .clone()
         } else {
-            let samples = self.component_samples(prob, m_r, &mut col, &mut sel_rng);
-            fit(&samples)
+            fit(&self.samples)
         };
         let lowfi = LowFiModel {
             comps,
             objective: prob.objective,
         };
-        let lowfi_scores = lowfi.score(&pool.feats, scorer);
+        self.lowfi_scores = lowfi.score(&self.core.pool.feats, self.core.scorer);
+        self.core.refit();
 
-        // Phase 2 (lines 8-26)
-        let mut measured: Vec<(usize, f64)> = Vec::with_capacity(m);
-        let mut measured_set: HashSet<usize> = HashSet::with_capacity(m);
         // line 8: m_0 random
-        let mut c_meas = random_unmeasured(pool, &measured_set, m0, &mut sel_rng);
+        let mut c_meas = random_unmeasured(
+            self.core.pool,
+            &self.core.measured_set,
+            self.m0,
+            &mut self.core.sel_rng,
+        );
         for &i in &c_meas {
-            measured_set.insert(i);
+            self.core.measured_set.insert(i);
         }
         // line 11: top m_B by M_L
-        for i in top_unmeasured(&lowfi_scores, &measured_set, m_b) {
+        for i in top_unmeasured(&self.lowfi_scores, &self.core.measured_set, self.m_b) {
             c_meas.push(i);
-            measured_set.insert(i);
+            self.core.measured_set.insert(i);
         }
+        self.c_meas = c_meas;
+        self.phase = Phase::Workflow;
+    }
 
-        let mut using_hifi = false; // M = M_L (line 12)
-        let mut hifi: Option<crate::gbt::Ensemble> = None; // line 13
-
-        // Switch-detection state, extended incrementally with each
-        // fresh batch instead of re-gathered over all measured rows
-        // every iteration (M_L's scores are fixed; only M_H's
-        // predictions must be recomputed — the model retrains).
-        let mut actual: Vec<f64> = Vec::with_capacity(m);
-        let mut xs_meas: Vec<[f32; crate::config::F_MAX]> = Vec::with_capacity(m);
-        let mut pred_l: Vec<f64> = Vec::with_capacity(m);
-
-        for iter in 0..iters {
-            // line 15: run workflow for C_meas, fanned across the
-            // worker pool (bit-identical for any worker count)
-            let batch = col.measure_pool_batch(pool, &c_meas);
-            measured.extend_from_slice(&batch);
-            // lines 16-21: model switch detection.  We score both models
-            // on everything measured so far *including* the fresh batch
-            // (which is out-of-sample for the current M_H) — a fresh
-            // m_B-sized batch alone is too small for stable top-1..3
-            // recalls at the paper's budgets.
-            if !using_hifi {
-                for &(i, y) in &batch {
-                    actual.push(y);
-                    xs_meas.push(pool.feats.workflow[i]);
-                    pred_l.push(lowfi_scores[i]);
-                }
-                if let Some(h) = &hifi {
-                    let pred_h = scorer.score(h, &xs_meas);
-                    let s_h = recall_sum_123(&pred_h, &actual);
-                    let s_l = recall_sum_123(&pred_l, &actual);
-                    if s_h >= s_l {
-                        using_hifi = true;
-                    }
-                }
+    /// The in-flight `C_meas` was measured (line 15 happened): run the
+    /// post-batch half of the loop body — switch detection (lines
+    /// 16-21), M_H refit (line 22) and next-batch selection (lines
+    /// 23-24).
+    fn absorb_batch(&mut self, idxs: Vec<usize>, results: &[MeasurementResult]) {
+        let (prob, pool, scorer) = (self.core.prob, self.core.pool, self.core.scorer);
+        for (&i, r) in idxs.iter().zip(results) {
+            self.core.record_workflow(i, r.value);
+        }
+        // lines 16-21: model switch detection.  Both models score
+        // everything measured so far *including* the fresh batch
+        // (which is out-of-sample for the current M_H) — a fresh
+        // m_B-sized batch alone is too small for stable top-1..3
+        // recalls at the paper's budgets.
+        if !self.using_hifi {
+            for (&i, r) in idxs.iter().zip(results) {
+                self.actual.push(r.value);
+                self.xs_meas.push(pool.feats.workflow[i]);
+                self.pred_l.push(self.lowfi_scores[i]);
             }
-            // line 22: train/refine M_H on everything measured
-            hifi = Some(train_hifi(prob, pool, &measured));
-            // lines 23-24: score pool with M, select next batch.  M_L's
-            // pool scores are borrowed, not cloned, per iteration.
-            if iter + 1 < iters {
-                let hifi_scores;
-                let scores: &[f64] = if using_hifi {
-                    hifi_scores = scorer.score(hifi.as_ref().unwrap(), &pool.feats.workflow);
-                    &hifi_scores
-                } else {
-                    &lowfi_scores
-                };
-                c_meas = top_unmeasured(scores, &measured_set, m_b);
-                for &i in &c_meas {
-                    measured_set.insert(i);
+            if let Some(h) = &self.hifi {
+                let pred_h = scorer.score(h, &self.xs_meas);
+                let s_h = recall_sum_123(&pred_h, &self.actual);
+                let s_l = recall_sum_123(&self.pred_l, &self.actual);
+                if s_h >= s_l {
+                    self.using_hifi = true;
                 }
             }
         }
-
-        let model = hifi.expect("at least one iteration ran");
-        let best_idx = searcher_best(&model, pool, scorer, &measured);
-        TunerOutput {
-            model,
-            measured,
-            best_idx,
-            collection_cost: col.total_cost(),
-            workflow_runs: col.workflow_runs,
+        // line 22: train/refine M_H on everything measured
+        self.hifi = Some(train_hifi(prob, pool, &self.core.measured));
+        self.core.refit();
+        self.iter += 1;
+        // lines 23-24: score pool with M, select next batch.  M_L's
+        // pool scores are borrowed, not cloned, per iteration.
+        if self.iter < self.iters {
+            let hifi_scores;
+            let scores: &[f64] = if self.using_hifi {
+                hifi_scores = scorer.score(self.hifi.as_ref().unwrap(), &pool.feats.workflow);
+                &hifi_scores
+            } else {
+                &self.lowfi_scores
+            };
+            self.c_meas = top_unmeasured(scores, &self.core.measured_set, self.m_b);
+            for &i in &self.c_meas {
+                self.core.measured_set.insert(i);
+            }
+        } else {
+            self.phase = Phase::Done;
         }
+    }
+}
+
+impl TunerSession for CealSession<'_> {
+    fn name(&self) -> &'static str {
+        "CEAL"
+    }
+
+    fn ask(&mut self) -> MeasurementBatch {
+        assert!(
+            matches!(self.pending, Pending::None),
+            "ask() with results outstanding"
+        );
+        if self.phase == Phase::Components {
+            let reqs = self.sample_components();
+            if reqs.is_empty() {
+                // m_R = 0 (or every component space infeasible): no
+                // isolated runs to charge — straight to phase 2.
+                self.open_workflow_phase();
+            } else {
+                self.core.asked_batches += 1;
+                return MeasurementBatch::sequential(reqs);
+            }
+        }
+        if self.phase == Phase::Done || self.c_meas.is_empty() {
+            // an exhausted pool leaves nothing to select: the
+            // monolithic loop idled through its remaining iterations
+            // with empty batches (same output; retraining on unchanged
+            // data is a fixed point), the session just stops
+            self.phase = Phase::Done;
+            return MeasurementBatch::empty();
+        }
+        // line 15: the C_meas fan-out
+        self.core.asked_batches += 1;
+        let reqs: Vec<MeasurementRequest> = self
+            .c_meas
+            .iter()
+            .map(|&i| self.core.workflow_request(i))
+            .collect();
+        self.pending = Pending::Batch(std::mem::take(&mut self.c_meas));
+        MeasurementBatch::fan_out(reqs)
+    }
+
+    fn tell(&mut self, results: &[MeasurementResult]) {
+        self.core.told_batches += 1;
+        match std::mem::replace(&mut self.pending, Pending::None) {
+            Pending::None => panic!("tell() without an outstanding batch"),
+            Pending::Components(slots) => {
+                assert_eq!(results.len(), slots.len(), "tell() arity mismatch");
+                for ((slot, x), r) in slots.into_iter().zip(results) {
+                    self.samples[slot].push(x, r.value);
+                    self.core.record_component(r.value);
+                }
+                self.open_workflow_phase();
+            }
+            Pending::Batch(idxs) => {
+                assert_eq!(results.len(), idxs.len(), "tell() arity mismatch");
+                self.absorb_batch(idxs, results);
+            }
+        }
+    }
+
+    fn state(&self) -> SessionState {
+        let (phase, done) = match self.phase {
+            Phase::Components => ("components", false),
+            Phase::Workflow => ("refine", false),
+            Phase::Done => ("done", true),
+        };
+        let using = if self.lowfi_scores.is_empty() {
+            None
+        } else {
+            Some(self.using_hifi)
+        };
+        self.core.state(phase, done, using)
+    }
+
+    fn finish(self: Box<Self>) -> TunerOutput {
+        let model = self.hifi.expect("finish() before any iteration was told");
+        let core = self.core;
+        let best_idx = searcher_best(&model, core.pool, core.scorer, &core.measured);
+        core.into_output(model, best_idx)
+    }
+
+    fn set_diag_sink(&mut self, sink: DiagSink) {
+        self.core.diag.set_sink(sink);
+    }
+
+    fn diagnostics(&self) -> &[String] {
+        self.core.diag.captured()
     }
 }
 
@@ -274,6 +412,7 @@ mod tests {
     use super::*;
     use crate::config::WorkflowId;
     use crate::sim::Objective;
+    use crate::tuner::Collector;
 
     fn problem() -> Problem {
         Problem::new(WorkflowId::LV, Objective::CompTime)
@@ -358,5 +497,55 @@ mod tests {
                 .best_idx
         };
         assert_eq!(run(3), run(3));
+    }
+
+    /// The session exposes CEAL's structure: a sequential component
+    /// batch first, then fan-out C_meas batches, with the switch state
+    /// visible through `state()`.
+    #[test]
+    fn session_phases_and_fan_out() {
+        use super::super::session::{BatchMode, Evaluator};
+        let prob = problem();
+        let pool = Pool::generate(&prob, 150, 35);
+        let tuner = Ceal::new(CealParams::no_hist());
+        let mut rng = Pcg32::new(11, 11);
+        let mut session = tuner.session(&prob, &pool, &Scorer::Native, 30, &mut rng);
+        let mut col = Collector::new(&prob, Pcg32::new(12, 12));
+        assert_eq!(session.state().phase, "components");
+        let first = session.ask();
+        assert_eq!(first.mode, BatchMode::Sequential);
+        assert!(first
+            .requests
+            .iter()
+            .all(|r| matches!(r, MeasurementRequest::Component { .. })));
+        session.tell(&col.evaluate(&first));
+        assert_eq!(session.state().phase, "refine");
+        assert_eq!(session.state().using_hifi, Some(false));
+        loop {
+            let batch = session.ask();
+            if batch.is_empty() {
+                break;
+            }
+            assert_eq!(batch.mode, BatchMode::FanOut);
+            session.tell(&col.evaluate(&batch));
+        }
+        let st = session.state();
+        assert!(st.done);
+        assert!(st.component_runs > 0);
+        assert!(st.workflow_runs > 0);
+        let out = session.finish();
+        assert!(out.best_idx < pool.len());
+    }
+
+    #[test]
+    #[should_panic(expected = "results outstanding")]
+    fn ask_twice_panics() {
+        let prob = problem();
+        let pool = Pool::generate(&prob, 60, 36);
+        let tuner = Ceal::new(CealParams::no_hist());
+        let mut rng = Pcg32::new(13, 13);
+        let mut session = tuner.session(&prob, &pool, &Scorer::Native, 15, &mut rng);
+        let _ = session.ask();
+        let _ = session.ask();
     }
 }

@@ -1,5 +1,7 @@
 //! Shared tuner infrastructure: the tuning problem, the sample pool
-//! C_pool (§5), the collector, and the Tuner trait + searcher.
+//! C_pool (§5), the collector (the canonical session
+//! [`Evaluator`](super::session::Evaluator)), and the Tuner trait +
+//! searcher.
 
 use std::collections::{HashMap, HashSet};
 
@@ -273,43 +275,53 @@ impl<'a> Collector<'a> {
     }
 
     /// Measure a batch of pool configurations (CEAL's Alg. 1 line-15
-    /// `C_meas` batch), fanning the noisy simulator runs across the
-    /// process-wide worker pool — one task per configuration.
+    /// `C_meas` batch); see [`measure_config_batch`](Self::measure_config_batch).
+    pub fn measure_pool_batch(&mut self, pool: &Pool, idxs: &[usize]) -> Vec<(usize, f64)> {
+        let cfgs: Vec<&Config> = idxs.iter().map(|&i| &pool.configs[i]).collect();
+        idxs.iter()
+            .copied()
+            .zip(self.measure_config_batch(&cfgs))
+            .collect()
+    }
+
+    /// Measure a batch of explicit configurations, fanning the noisy
+    /// simulator runs across the process-wide worker pool — one task
+    /// per configuration.  This is the [`BatchMode::FanOut`] leg of
+    /// the session [`Evaluator`] contract.
     ///
     /// Determinism: every slot draws from its own child RNG derived
     /// from the collector stream's current state and the slot index,
     /// the main stream then advances exactly once, and cost accounting
-    /// folds in slot order after the join — so the returned pairs (and
+    /// folds in slot order after the join — so the returned values (and
     /// all collector state) are bit-identical for every worker count,
     /// including one.  A batch of zero or one goes through
     /// [`measure`](Self::measure) directly (no dispatch setup).
-    pub fn measure_pool_batch(&mut self, pool: &Pool, idxs: &[usize]) -> Vec<(usize, f64)> {
-        if idxs.len() <= 1 {
-            return idxs
-                .iter()
-                .map(|&i| (i, self.measure(&pool.configs[i])))
-                .collect();
+    ///
+    /// [`BatchMode::FanOut`]: super::session::BatchMode::FanOut
+    /// [`Evaluator`]: super::session::Evaluator
+    pub fn measure_config_batch(&mut self, cfgs: &[&Config]) -> Vec<f64> {
+        if cfgs.len() <= 1 {
+            return cfgs.iter().map(|c| self.measure(c)).collect();
         }
-        let rngs: Vec<Pcg32> = (0..idxs.len())
+        let rngs: Vec<Pcg32> = (0..cfgs.len())
             .map(|t| self.rng.derive(t as u64))
             .collect();
         self.rng.next_u64();
         let prob = self.prob;
-        let mut ys = vec![0.0f64; idxs.len()];
+        let mut ys = vec![0.0f64; cfgs.len()];
         let width = crate::util::parallel::current_threads();
         crate::util::parallel::for_each_chunk_mut(width, 1, &mut ys, |slot, out| {
             let mut rng = rngs[slot].clone();
-            let cfg = &pool.configs[idxs[slot]];
             // `sim.run` rides the simulator's per-thread scratch
             // workspace, so the fan-out allocates nothing once the
             // pool workers are warm.
-            out[0] = prob.objective.value(&prob.sim.run(cfg, &mut rng));
+            out[0] = prob.objective.value(&prob.sim.run(cfgs[slot], &mut rng));
         });
         for &y in &ys {
             self.workflow_runs += 1;
             self.workflow_cost += y;
         }
-        idxs.iter().copied().zip(ys).collect()
+        ys
     }
 
     /// Sample a feasible configuration for component `comp` (drawing
@@ -353,11 +365,35 @@ pub struct TunerOutput {
 }
 
 /// An auto-tuning algorithm.
+///
+/// The required surface is [`session`](Self::session): an algorithm is
+/// a factory for ask/tell [`TunerSession`]s (its loop split at every
+/// measurement).  [`run`](Self::run) is the provided synchronous
+/// convenience — the thin generic driver [`drive`] over the
+/// simulator-backed [`Collector`] — and is bit-identical to the
+/// pre-session monolithic loops (pinned against [`super::legacy`] by
+/// `tests/session_equivalence.rs`).
+///
+/// [`TunerSession`]: super::session::TunerSession
+/// [`drive`]: super::session::drive
 pub trait Tuner: Sync {
     fn name(&self) -> &'static str;
 
-    /// Run one tuning campaign with a budget of `m` workflow-run
-    /// equivalents, drawing randomness from `rng`.
+    /// Open one tuning session with a budget of `m` workflow-run
+    /// equivalents.  `rng` seeds the session's selection stream (it is
+    /// not advanced; children are derived from its current state, so
+    /// the caller's stream stays aligned with the monolithic API).
+    fn session<'a>(
+        &'a self,
+        prob: &'a Problem,
+        pool: &'a Pool,
+        scorer: &'a Scorer,
+        m: usize,
+        rng: &mut Pcg32,
+    ) -> Box<dyn super::session::TunerSession + 'a>;
+
+    /// Run one tuning campaign to completion against the simulator:
+    /// `drive(session, Collector)`.
     fn run(
         &self,
         prob: &Problem,
@@ -365,7 +401,10 @@ pub trait Tuner: Sync {
         scorer: &Scorer,
         m: usize,
         rng: &mut Pcg32,
-    ) -> TunerOutput;
+    ) -> TunerOutput {
+        let mut col = Collector::new(prob, rng.derive_str("collector"));
+        super::session::drive(self.session(prob, pool, scorer, m, rng), &mut col)
+    }
 }
 
 /// The searcher (§2.1): best configuration over the pool.  Model
@@ -379,11 +418,7 @@ pub fn searcher_best(
     scorer: &Scorer,
     measured: &[(usize, f64)],
 ) -> usize {
-    let mut scores: Vec<f64> = scorer
-        .score(model, &pool.feats.workflow)
-        .into_iter()
-        .map(f64::exp)
-        .collect();
+    let mut scores: Vec<f64> = scorer.score_times(model, &pool.feats.workflow);
     for &(i, y) in measured {
         scores[i] = y;
     }
@@ -403,13 +438,14 @@ pub fn train_hifi(prob: &Problem, pool: &Pool, measured: &[(usize, f64)]) -> Ens
     crate::gbt::train_log(&xs, &y, prob.n_workflow_features(), &params)
 }
 
-/// Real-scale time predictions of a log-space model over rows.
+/// Real-scale time predictions of a log-space model over rows
+/// (convenience alias for [`Scorer::score_times`]).
 pub fn predict_times(
     model: &Ensemble,
     xs: &[[f32; F_MAX]],
     scorer: &crate::surrogate::Scorer,
 ) -> Vec<f64> {
-    scorer.score(model, xs).into_iter().map(f64::exp).collect()
+    scorer.score_times(model, xs)
 }
 
 /// Select `k` distinct unmeasured pool indices uniformly at random.

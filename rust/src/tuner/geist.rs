@@ -3,11 +3,20 @@
 //! propagate "likely top-5%" labels from measured configurations, and
 //! spend each iteration's batch on the unmeasured nodes most likely to
 //! be optimal (plus an exploration remainder).
+//!
+//! Session shape: one sequential bootstrap batch, then one sequential
+//! batch per iteration combining the exploit picks (label propagation)
+//! and the exploration remainder; the surrogate trains once at
+//! `finish`, exactly like the monolithic loop did.
 
 use std::collections::HashSet;
 
 use super::common::{
-    random_unmeasured, searcher_best, train_hifi, Collector, Pool, Problem, Tuner, TunerOutput,
+    random_unmeasured, searcher_best, top_unmeasured, train_hifi, Pool, Problem, Tuner,
+    TunerOutput,
+};
+use super::session::{
+    MeasurementBatch, MeasurementResult, SessionCore, SessionState, TunerSession,
 };
 use crate::surrogate::Scorer;
 use crate::util::rng::Pcg32;
@@ -45,7 +54,9 @@ impl Default for Geist {
 impl Geist {
     /// One label-propagation pass: measured nodes are clamped to their
     /// labels, unmeasured nodes relax toward their neighborhood mean.
-    fn propagate(
+    /// (Crate-visible so the frozen [`super::legacy`] reference path
+    /// shares the exact propagation arithmetic.)
+    pub(crate) fn propagate(
         &self,
         pool: &Pool,
         labels: &[(usize, f64)], // (pool idx, 0/1 label)
@@ -80,71 +91,147 @@ impl Tuner for Geist {
         "GEIST"
     }
 
-    fn run(
-        &self,
-        prob: &Problem,
-        pool: &Pool,
-        scorer: &Scorer,
+    fn session<'a>(
+        &'a self,
+        prob: &'a Problem,
+        pool: &'a Pool,
+        scorer: &'a Scorer,
         m: usize,
         rng: &mut Pcg32,
-    ) -> TunerOutput {
-        let mut col = Collector::new(prob, rng.derive_str("collector"));
-        let mut sel_rng = rng.derive_str("select");
+    ) -> Box<dyn TunerSession + 'a> {
         let m = m.min(pool.len());
         let m0 = ((m as f64 * self.m0_frac).round() as usize).clamp(1, m);
         let remaining = m - m0;
         let iters = self.iterations.min(remaining.max(1));
         let batch = if iters == 0 { 0 } else { remaining / iters };
+        Box::new(GeistSession {
+            tuner: self,
+            core: SessionCore::new(prob, pool, scorer, rng),
+            m0,
+            iters,
+            batch,
+            iter: 0,
+            bootstrapped: false,
+            pending: Vec::new(),
+        })
+    }
+}
 
-        let mut measured: Vec<(usize, f64)> = Vec::with_capacity(m);
-        let mut measured_set: HashSet<usize> = HashSet::with_capacity(m);
-        for i in random_unmeasured(pool, &measured_set, m0, &mut sel_rng) {
-            measured.push((i, col.measure(&pool.configs[i])));
-            measured_set.insert(i);
+struct GeistSession<'a> {
+    tuner: &'a Geist,
+    core: SessionCore<'a>,
+    m0: usize,
+    iters: usize,
+    batch: usize,
+    iter: usize,
+    bootstrapped: bool,
+    pending: Vec<usize>,
+}
+
+impl GeistSession<'_> {
+    fn done(&self) -> bool {
+        self.bootstrapped && (self.batch == 0 || self.iter >= self.iters)
+    }
+
+    /// One iteration's picks: exploit (label propagation over the k-NN
+    /// graph) then explore (uniform over the unmeasured remainder) —
+    /// the exploit picks join the measured set before the exploration
+    /// draw, exactly as the monolithic loop interleaved them.
+    fn iteration_picks(&mut self) -> Vec<usize> {
+        let t = self.tuner;
+        let pool = self.core.pool;
+        // label measured configs: 1 if within the top fraction
+        let ys: Vec<f64> = self.core.measured.iter().map(|&(_, y)| y).collect();
+        let k_top = ((ys.len() as f64 * t.top_frac).ceil() as usize).max(1);
+        let top_idx: HashSet<usize> = stats::bottom_k_indices(&ys, k_top)
+            .into_iter()
+            .map(|r| self.core.measured[r].0)
+            .collect();
+        let labels: Vec<(usize, f64)> = self
+            .core
+            .measured
+            .iter()
+            .map(|&(i, _)| (i, if top_idx.contains(&i) { 1.0 } else { 0.0 }))
+            .collect();
+        let prob_optimal = t.propagate(pool, &labels);
+
+        let n_explore = ((self.batch as f64 * t.explore_frac).round() as usize).min(self.batch);
+        let n_exploit = self.batch - n_explore;
+        // highest probability-of-optimal first (maximize)
+        let neg: Vec<f64> = prob_optimal.iter().map(|&s| -s).collect();
+        let mut picks = top_unmeasured(&neg, &self.core.measured_set, n_exploit);
+        for &i in &picks {
+            self.core.measured_set.insert(i);
         }
-
-        for _ in 0..iters {
-            if batch == 0 {
-                break;
-            }
-            // label measured configs: 1 if within the top fraction
-            let ys: Vec<f64> = measured.iter().map(|&(_, y)| y).collect();
-            let k_top = ((ys.len() as f64 * self.top_frac).ceil() as usize).max(1);
-            let top_idx: HashSet<usize> = stats::bottom_k_indices(&ys, k_top)
-                .into_iter()
-                .map(|r| measured[r].0)
-                .collect();
-            let labels: Vec<(usize, f64)> = measured
-                .iter()
-                .map(|&(i, _)| (i, if top_idx.contains(&i) { 1.0 } else { 0.0 }))
-                .collect();
-            let prob_optimal = self.propagate(pool, &labels);
-
-            let n_explore = ((batch as f64 * self.explore_frac).round() as usize).min(batch);
-            let n_exploit = batch - n_explore;
-            // highest probability-of-optimal first (maximize)
-            let neg: Vec<f64> = prob_optimal.iter().map(|&s| -s).collect();
-            for i in super::common::top_unmeasured(&neg, &measured_set, n_exploit) {
-                measured.push((i, col.measure(&pool.configs[i])));
-                measured_set.insert(i);
-            }
-            if n_explore > 0 {
-                for i in random_unmeasured(pool, &measured_set, n_explore, &mut sel_rng) {
-                    measured.push((i, col.measure(&pool.configs[i])));
-                    measured_set.insert(i);
-                }
-            }
+        if n_explore > 0 {
+            picks.extend(random_unmeasured(
+                pool,
+                &self.core.measured_set,
+                n_explore,
+                &mut self.core.sel_rng,
+            ));
         }
+        picks
+    }
+}
 
-        let model = train_hifi(prob, pool, &measured);
-        let best_idx = searcher_best(&model, pool, scorer, &measured);
-        TunerOutput {
-            model,
-            measured,
-            best_idx,
-            collection_cost: col.total_cost(),
-            workflow_runs: col.workflow_runs,
+impl TunerSession for GeistSession<'_> {
+    fn name(&self) -> &'static str {
+        "GEIST"
+    }
+
+    fn ask(&mut self) -> MeasurementBatch {
+        assert!(self.pending.is_empty(), "ask() with results outstanding");
+        if self.done() {
+            return MeasurementBatch::empty();
         }
+        self.core.asked_batches += 1;
+        let picks = if !self.bootstrapped {
+            random_unmeasured(
+                self.core.pool,
+                &self.core.measured_set,
+                self.m0,
+                &mut self.core.sel_rng,
+            )
+        } else {
+            self.iteration_picks()
+        };
+        let reqs = self.core.take_workflow_picks(&picks);
+        self.pending = picks;
+        MeasurementBatch::sequential(reqs)
+    }
+
+    fn tell(&mut self, results: &[MeasurementResult]) {
+        let picks = std::mem::take(&mut self.pending);
+        assert_eq!(results.len(), picks.len(), "tell() arity mismatch");
+        self.core.told_batches += 1;
+        for (&i, r) in picks.iter().zip(results) {
+            self.core.record_workflow(i, r.value);
+        }
+        if self.bootstrapped {
+            self.iter += 1;
+        } else {
+            self.bootstrapped = true;
+        }
+    }
+
+    fn state(&self) -> SessionState {
+        let phase = if self.done() {
+            "done"
+        } else if !self.bootstrapped {
+            "bootstrap"
+        } else {
+            "propagate"
+        };
+        self.core.state(phase, self.done(), None)
+    }
+
+    fn finish(self: Box<Self>) -> TunerOutput {
+        assert!(self.done(), "finish() before the session completed");
+        let core = self.core;
+        let model = train_hifi(core.prob, core.pool, &core.measured);
+        let best_idx = searcher_best(&model, core.pool, core.scorer, &core.measured);
+        core.into_output(model, best_idx)
     }
 }
 

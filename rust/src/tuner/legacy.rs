@@ -1,0 +1,597 @@
+//! The frozen pre-session monolithic tuning loops — the documented
+//! reference path for the ask/tell redesign, kept the same way
+//! `gbt::train_exact` and the simulator's `build_pipeline`/`simulate`
+//! reference paths are kept: `tests/session_equivalence.rs` pins every
+//! algorithm's session port bit-for-bit against these bodies, and
+//! `benches/tuners.rs` runs one side-by-side row to show the driver
+//! adds no measurable overhead.
+//!
+//! Nothing in the production path calls into this module.  The bodies
+//! are verbatim copies of the pre-redesign `Tuner::run`
+//! implementations (including their `eprintln!` warnings — the session
+//! ports route the same messages through the
+//! [`DiagSink`](super::session::DiagSink) instead).
+
+use std::collections::HashSet;
+
+use crate::config::F_MAX;
+use crate::gbt::Ensemble;
+use crate::metrics::recall_sum_123;
+use crate::surrogate::lowfi::{ComponentSamples, LowFiModel};
+use crate::surrogate::Scorer;
+use crate::util::rng::Pcg32;
+
+use super::alph::{combiner_features, Alph};
+use super::budgeted::BudgetedCeal;
+use super::ceal::{gbt_params_for, Ceal};
+use super::common::{
+    random_unmeasured, searcher_best, top_unmeasured, train_hifi, Collector, Pool, Problem,
+    TunerOutput,
+};
+use super::{ActiveLearning, Geist};
+
+/// RS reference: spend the whole budget on random configurations,
+/// train once, search.
+pub fn run_rs(
+    prob: &Problem,
+    pool: &Pool,
+    scorer: &Scorer,
+    m: usize,
+    rng: &mut Pcg32,
+) -> TunerOutput {
+    let mut col = Collector::new(prob, rng.derive_str("collector"));
+    let mut sel_rng = rng.derive_str("select");
+    let measured_set = HashSet::new();
+    let picks = random_unmeasured(pool, &measured_set, m.min(pool.len()), &mut sel_rng);
+    let measured: Vec<(usize, f64)> = picks
+        .into_iter()
+        .map(|i| (i, col.measure(&pool.configs[i])))
+        .collect();
+    let model = train_hifi(prob, pool, &measured);
+    let best_idx = searcher_best(&model, pool, scorer, &measured);
+    TunerOutput {
+        model,
+        measured,
+        best_idx,
+        collection_cost: col.total_cost(),
+        workflow_runs: col.workflow_runs,
+    }
+}
+
+/// AL reference: random bootstrap, then iterative best-predicted
+/// batches.
+pub fn run_al(
+    t: &ActiveLearning,
+    prob: &Problem,
+    pool: &Pool,
+    scorer: &Scorer,
+    m: usize,
+    rng: &mut Pcg32,
+) -> TunerOutput {
+    let mut col = Collector::new(prob, rng.derive_str("collector"));
+    let mut sel_rng = rng.derive_str("select");
+    let m = m.min(pool.len());
+    let m0 = ((m as f64 * t.m0_frac).round() as usize).clamp(1, m);
+    let remaining = m - m0;
+    let iters = t.iterations.min(remaining.max(1));
+    let batch = if iters == 0 { 0 } else { remaining / iters };
+
+    let mut measured: Vec<(usize, f64)> = Vec::with_capacity(m);
+    let mut measured_set: HashSet<usize> = HashSet::with_capacity(m);
+    for i in random_unmeasured(pool, &measured_set, m0, &mut sel_rng) {
+        measured.push((i, col.measure(&pool.configs[i])));
+        measured_set.insert(i);
+    }
+
+    let mut model = train_hifi(prob, pool, &measured);
+    for _ in 0..iters {
+        if batch == 0 {
+            break;
+        }
+        let preds = scorer.score(&model, &pool.feats.workflow);
+        for i in top_unmeasured(&preds, &measured_set, batch) {
+            measured.push((i, col.measure(&pool.configs[i])));
+            measured_set.insert(i);
+        }
+        model = train_hifi(prob, pool, &measured);
+    }
+
+    let best_idx = searcher_best(&model, pool, scorer, &measured);
+    TunerOutput {
+        model,
+        measured,
+        best_idx,
+        collection_cost: col.total_cost(),
+        workflow_runs: col.workflow_runs,
+    }
+}
+
+/// GEIST reference: label propagation over the pool's k-NN parameter
+/// graph, exploit + explore batches.
+pub fn run_geist(
+    t: &Geist,
+    prob: &Problem,
+    pool: &Pool,
+    scorer: &Scorer,
+    m: usize,
+    rng: &mut Pcg32,
+) -> TunerOutput {
+    let mut col = Collector::new(prob, rng.derive_str("collector"));
+    let mut sel_rng = rng.derive_str("select");
+    let m = m.min(pool.len());
+    let m0 = ((m as f64 * t.m0_frac).round() as usize).clamp(1, m);
+    let remaining = m - m0;
+    let iters = t.iterations.min(remaining.max(1));
+    let batch = if iters == 0 { 0 } else { remaining / iters };
+
+    let mut measured: Vec<(usize, f64)> = Vec::with_capacity(m);
+    let mut measured_set: HashSet<usize> = HashSet::with_capacity(m);
+    for i in random_unmeasured(pool, &measured_set, m0, &mut sel_rng) {
+        measured.push((i, col.measure(&pool.configs[i])));
+        measured_set.insert(i);
+    }
+
+    for _ in 0..iters {
+        if batch == 0 {
+            break;
+        }
+        // label measured configs: 1 if within the top fraction
+        let ys: Vec<f64> = measured.iter().map(|&(_, y)| y).collect();
+        let k_top = ((ys.len() as f64 * t.top_frac).ceil() as usize).max(1);
+        let top_idx: HashSet<usize> = crate::util::stats::bottom_k_indices(&ys, k_top)
+            .into_iter()
+            .map(|r| measured[r].0)
+            .collect();
+        let labels: Vec<(usize, f64)> = measured
+            .iter()
+            .map(|&(i, _)| (i, if top_idx.contains(&i) { 1.0 } else { 0.0 }))
+            .collect();
+        let prob_optimal = t.propagate(pool, &labels);
+
+        let n_explore = ((batch as f64 * t.explore_frac).round() as usize).min(batch);
+        let n_exploit = batch - n_explore;
+        // highest probability-of-optimal first (maximize)
+        let neg: Vec<f64> = prob_optimal.iter().map(|&s| -s).collect();
+        for i in top_unmeasured(&neg, &measured_set, n_exploit) {
+            measured.push((i, col.measure(&pool.configs[i])));
+            measured_set.insert(i);
+        }
+        if n_explore > 0 {
+            for i in random_unmeasured(pool, &measured_set, n_explore, &mut sel_rng) {
+                measured.push((i, col.measure(&pool.configs[i])));
+                measured_set.insert(i);
+            }
+        }
+    }
+
+    let model = train_hifi(prob, pool, &measured);
+    let best_idx = searcher_best(&model, pool, scorer, &measured);
+    TunerOutput {
+        model,
+        measured,
+        best_idx,
+        collection_cost: col.total_cost(),
+        workflow_runs: col.workflow_runs,
+    }
+}
+
+/// CEAL's phase-1 component collection (Alg. 1 lines 1-6), verbatim.
+fn ceal_component_samples(
+    t: &Ceal,
+    prob: &Problem,
+    m_r: usize,
+    col: &mut Collector,
+    rng: &mut Pcg32,
+) -> Vec<ComponentSamples> {
+    let spec = &prob.sim.spec;
+    let configurable = spec.configurable();
+    let mut out: Vec<ComponentSamples> = match &t.historical {
+        Some(h) => {
+            assert_eq!(h.len(), configurable.len(), "historical arity");
+            h.iter().cloned().collect()
+        }
+        None => configurable
+            .iter()
+            .map(|_| ComponentSamples::default())
+            .collect(),
+    };
+    for (slot, &comp) in configurable.iter().enumerate() {
+        let cs = &spec.components[comp];
+        for _ in 0..m_r {
+            // feasible on the same <=32-node allocations as the pool
+            match col.measure_component_sampled(comp, rng) {
+                Ok((cfg, y)) => out[slot].push(cs.encode(&cfg), y),
+                Err(e) => {
+                    // an over-tight component space: train on what
+                    // we have (empty -> constant model) instead of
+                    // aborting the campaign
+                    eprintln!("warning: {e}; skipping its isolated runs");
+                    break;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// CEAL reference (paper Alg. 1): component models -> low-fidelity
+/// M_L, then ensemble active learning with switch detection.
+pub fn run_ceal(
+    t: &Ceal,
+    prob: &Problem,
+    pool: &Pool,
+    scorer: &Scorer,
+    m: usize,
+    rng: &mut Pcg32,
+) -> TunerOutput {
+    let mut col = Collector::new(prob, rng.derive_str("collector"));
+    let mut sel_rng = rng.derive_str("select");
+    let p = t.params;
+    let m = m.min(pool.len());
+
+    // budget split (line 9): m_R charged only when collecting fresh
+    // component data
+    let m_r = if t.historical.is_some() {
+        0
+    } else {
+        (m as f64 * p.mr_frac).round() as usize
+    };
+    let m0 = ((m as f64 * p.m0_frac).round() as usize).clamp(1, m.saturating_sub(m_r));
+    let remaining = m.saturating_sub(m0 + m_r);
+    let iters = p.iterations.clamp(1, remaining.max(1));
+    let m_b = (remaining / iters).max(1);
+
+    // Phase 1: component models -> low-fidelity M_L (lines 1-7).
+    // (The instance-level historical-model cache is a per-tuner
+    // memoization of exactly this fit; recomputing it here is
+    // result-identical.)
+    let n_feats = prob.n_component_features();
+    let fit = |samples: &[ComponentSamples]| {
+        let comp_params = gbt_params_for(samples.iter().map(|s| s.len()).max().unwrap_or(0));
+        LowFiModel::fit(samples, &n_feats, prob.objective, &comp_params).comps
+    };
+    let comps = if m_r == 0 && t.historical.is_some() {
+        fit(t.historical.as_ref().unwrap())
+    } else {
+        let samples = ceal_component_samples(t, prob, m_r, &mut col, &mut sel_rng);
+        fit(&samples)
+    };
+    let lowfi = LowFiModel {
+        comps,
+        objective: prob.objective,
+    };
+    let lowfi_scores = lowfi.score(&pool.feats, scorer);
+
+    // Phase 2 (lines 8-26)
+    let mut measured: Vec<(usize, f64)> = Vec::with_capacity(m);
+    let mut measured_set: HashSet<usize> = HashSet::with_capacity(m);
+    // line 8: m_0 random
+    let mut c_meas = random_unmeasured(pool, &measured_set, m0, &mut sel_rng);
+    for &i in &c_meas {
+        measured_set.insert(i);
+    }
+    // line 11: top m_B by M_L
+    for i in top_unmeasured(&lowfi_scores, &measured_set, m_b) {
+        c_meas.push(i);
+        measured_set.insert(i);
+    }
+
+    let mut using_hifi = false; // M = M_L (line 12)
+    let mut hifi: Option<Ensemble> = None; // line 13
+
+    let mut actual: Vec<f64> = Vec::with_capacity(m);
+    let mut xs_meas: Vec<[f32; F_MAX]> = Vec::with_capacity(m);
+    let mut pred_l: Vec<f64> = Vec::with_capacity(m);
+
+    for iter in 0..iters {
+        // line 15: run workflow for C_meas
+        let batch = col.measure_pool_batch(pool, &c_meas);
+        measured.extend_from_slice(&batch);
+        // lines 16-21: model switch detection
+        if !using_hifi {
+            for &(i, y) in &batch {
+                actual.push(y);
+                xs_meas.push(pool.feats.workflow[i]);
+                pred_l.push(lowfi_scores[i]);
+            }
+            if let Some(h) = &hifi {
+                let pred_h = scorer.score(h, &xs_meas);
+                let s_h = recall_sum_123(&pred_h, &actual);
+                let s_l = recall_sum_123(&pred_l, &actual);
+                if s_h >= s_l {
+                    using_hifi = true;
+                }
+            }
+        }
+        // line 22: train/refine M_H on everything measured
+        hifi = Some(train_hifi(prob, pool, &measured));
+        // lines 23-24: score pool with M, select next batch
+        if iter + 1 < iters {
+            let hifi_scores;
+            let scores: &[f64] = if using_hifi {
+                hifi_scores = scorer.score(hifi.as_ref().unwrap(), &pool.feats.workflow);
+                &hifi_scores
+            } else {
+                &lowfi_scores
+            };
+            c_meas = top_unmeasured(scores, &measured_set, m_b);
+            for &i in &c_meas {
+                measured_set.insert(i);
+            }
+        }
+    }
+
+    let model = hifi.expect("at least one iteration ran");
+    let best_idx = searcher_best(&model, pool, scorer, &measured);
+    TunerOutput {
+        model,
+        measured,
+        best_idx,
+        collection_cost: col.total_cost(),
+        workflow_runs: col.workflow_runs,
+    }
+}
+
+/// ALpH reference (§4): component models feed a *trained* combiner
+/// M_0 instead of the structure function.
+pub fn run_alph(
+    t: &Alph,
+    prob: &Problem,
+    pool: &Pool,
+    scorer: &Scorer,
+    m: usize,
+    rng: &mut Pcg32,
+) -> TunerOutput {
+    use crate::gbt::train_log;
+
+    let mut col = Collector::new(prob, rng.derive_str("collector"));
+    let mut sel_rng = rng.derive_str("select");
+    let p = t.params;
+    let m = m.min(pool.len());
+
+    let m_r = if t.historical.is_some() {
+        0
+    } else {
+        (m as f64 * p.mr_frac).round() as usize
+    };
+    let m0 = ((m as f64 * p.m0_frac).round() as usize).clamp(1, m.saturating_sub(m_r));
+    let remaining = m.saturating_sub(m0 + m_r);
+    let iters = p.iterations.clamp(1, remaining.max(1));
+    let m_b = (remaining / iters).max(1);
+
+    // component models (same phase-1 as CEAL)
+    let spec = &prob.sim.spec;
+    let configurable = spec.configurable();
+    let mut samples: Vec<ComponentSamples> = match &t.historical {
+        Some(h) => h.iter().cloned().collect(),
+        None => configurable
+            .iter()
+            .map(|_| ComponentSamples::default())
+            .collect(),
+    };
+    for (slot, &comp) in configurable.iter().enumerate() {
+        for _ in 0..m_r {
+            match col.measure_component_sampled(comp, &mut sel_rng) {
+                Ok((cfg, y)) => samples[slot].push(spec.components[comp].encode(&cfg), y),
+                Err(e) => {
+                    eprintln!("warning: {e}; skipping its isolated runs");
+                    break;
+                }
+            }
+        }
+    }
+    let comp_params = gbt_params_for(samples.iter().map(|s| s.len()).max().unwrap_or(0));
+    let n_feats = prob.n_component_features();
+    let comp_models: Vec<Ensemble> = samples
+        .iter()
+        .zip(&n_feats)
+        .map(|(s, &nf)| {
+            if s.is_empty() {
+                Ensemble::constant(nf.max(1), 0.0)
+            } else {
+                train_log(&s.xs, &s.y, nf.max(1), &comp_params)
+            }
+        })
+        .collect();
+    // per-component time predictions over the whole pool (fixed);
+    // component models are log-space -> exponentiate
+    let per_comp_preds: Vec<Vec<f64>> = comp_models
+        .iter()
+        .zip(&pool.feats.per_component)
+        .map(|(e, xs)| scorer.score(e, xs).into_iter().map(f64::exp).collect())
+        .collect();
+    let n_j = per_comp_preds.len();
+
+    // bootstrap: m0 random workflow runs train the combiner M_0
+    let mut measured: Vec<(usize, f64)> = Vec::with_capacity(m);
+    let mut measured_set: HashSet<usize> = HashSet::with_capacity(m);
+    let mut c_meas = random_unmeasured(pool, &measured_set, m0, &mut sel_rng);
+    for &i in &c_meas {
+        measured_set.insert(i);
+    }
+
+    let train_combiner = |measured: &[(usize, f64)]| -> Ensemble {
+        let xs: Vec<[f32; F_MAX]> = measured
+            .iter()
+            .map(|&(i, _)| combiner_features(&per_comp_preds, i))
+            .collect();
+        let y: Vec<f64> = measured.iter().map(|&(_, y)| y).collect();
+        train_log(&xs, &y, n_j.max(1), &gbt_params_for(y.len()))
+    };
+
+    let mut using_hifi = false;
+    let mut hifi: Option<Ensemble> = None;
+    let mut combiner: Option<Ensemble> = None;
+
+    for iter in 0..iters {
+        let batch = col.measure_pool_batch(pool, &c_meas);
+        // switch detection, mirroring CEAL (fresh batch only)
+        if !using_hifi {
+            if let (Some(h), Some(c0)) = (&hifi, &combiner) {
+                let actual: Vec<f64> = batch.iter().map(|&(_, y)| y).collect();
+                let xs: Vec<_> = batch.iter().map(|&(i, _)| pool.feats.workflow[i]).collect();
+                let pred_h = scorer.score(h, &xs);
+                let cx: Vec<[f32; F_MAX]> = batch
+                    .iter()
+                    .map(|&(i, _)| combiner_features(&per_comp_preds, i))
+                    .collect();
+                let pred_l = scorer.score(c0, &cx);
+                if recall_sum_123(&pred_h, &actual) >= recall_sum_123(&pred_l, &actual) {
+                    using_hifi = true;
+                }
+            }
+        }
+        measured.extend_from_slice(&batch);
+        hifi = Some(train_hifi(prob, pool, &measured));
+        combiner = Some(train_combiner(&measured));
+        if iter + 1 < iters {
+            let scores: Vec<f64> = if using_hifi {
+                scorer.score(hifi.as_ref().unwrap(), &pool.feats.workflow)
+            } else {
+                let c0 = combiner.as_ref().unwrap();
+                let cx: Vec<[f32; F_MAX]> = (0..pool.len())
+                    .map(|i| combiner_features(&per_comp_preds, i))
+                    .collect();
+                scorer.score(c0, &cx)
+            };
+            c_meas = top_unmeasured(&scores, &measured_set, m_b);
+            for &i in &c_meas {
+                measured_set.insert(i);
+            }
+        }
+    }
+
+    let model = hifi.expect("at least one iteration");
+    let best_idx = searcher_best(&model, pool, scorer, &measured);
+    TunerOutput {
+        model,
+        measured,
+        best_idx,
+        collection_cost: col.total_cost(),
+        workflow_runs: col.workflow_runs,
+    }
+}
+
+/// Budgeted-CEAL reference (§6 adaptation): cost-budgeted phases with
+/// per-sample stopping.
+pub fn run_budgeted(
+    t: &BudgetedCeal,
+    prob: &Problem,
+    pool: &Pool,
+    scorer: &Scorer,
+    cost_budget: f64,
+    rng: &mut Pcg32,
+) -> TunerOutput {
+    assert!(cost_budget > 0.0);
+    let p = t.params;
+    let mut col = Collector::new(prob, rng.derive_str("collector"));
+    let mut sel_rng = rng.derive_str("select");
+
+    // Phase 1: component runs until the component allowance is spent.
+    let comp_allowance = cost_budget * p.component_frac;
+    let spec = &prob.sim.spec;
+    let configurable = spec.configurable();
+    let mut samples: Vec<ComponentSamples> = configurable
+        .iter()
+        .map(|_| ComponentSamples::default())
+        .collect();
+    let mut exhausted = vec![false; configurable.len()];
+    'outer: loop {
+        let mut progressed = false;
+        for (slot, &comp) in configurable.iter().enumerate() {
+            if exhausted[slot] {
+                continue;
+            }
+            if col.component_cost >= comp_allowance {
+                break 'outer;
+            }
+            match col.measure_component_sampled(comp, &mut sel_rng) {
+                Ok((cfg, y)) => {
+                    samples[slot].push(spec.components[comp].encode(&cfg), y);
+                    progressed = true;
+                }
+                Err(e) => {
+                    eprintln!("warning: {e}; skipping its isolated runs");
+                    exhausted[slot] = true;
+                }
+            }
+        }
+        if !progressed {
+            break;
+        }
+    }
+    let n_feats = prob.n_component_features();
+    let comp_params = gbt_params_for(samples.iter().map(|s| s.len()).max().unwrap_or(0));
+    let lowfi = LowFiModel::fit(&samples, &n_feats, prob.objective, &comp_params);
+    let lowfi_scores = lowfi.score(&pool.feats, scorer);
+
+    // Phase 2: bootstrap + guided batches under the remaining budget.
+    let mut measured: Vec<(usize, f64)> = Vec::new();
+    let mut measured_set: HashSet<usize> = HashSet::new();
+    let boot_allowance = cost_budget * (p.component_frac + p.bootstrap_frac);
+    while col.total_cost() < boot_allowance && measured_set.len() < pool.len() {
+        let i = random_unmeasured(pool, &measured_set, 1, &mut sel_rng)[0];
+        measured.push((i, col.measure(&pool.configs[i])));
+        measured_set.insert(i);
+    }
+
+    let mut using_hifi = false;
+    let mut hifi = if measured.len() >= 2 {
+        Some(train_hifi(prob, pool, &measured))
+    } else {
+        None
+    };
+    while col.total_cost() < cost_budget && measured_set.len() < pool.len() {
+        let hifi_scores;
+        let scores: &[f64] = match (&hifi, using_hifi) {
+            (Some(h), true) => {
+                hifi_scores = scorer.score(h, &pool.feats.workflow);
+                &hifi_scores
+            }
+            _ => &lowfi_scores,
+        };
+        let batch_idx = top_unmeasured(scores, &measured_set, p.batch.min(pool.len()));
+        if batch_idx.is_empty() {
+            break;
+        }
+        let mut batch: Vec<(usize, f64)> = Vec::new();
+        for i in batch_idx {
+            if col.total_cost() >= cost_budget {
+                break;
+            }
+            batch.push((i, col.measure(&pool.configs[i])));
+            measured_set.insert(i);
+        }
+        if batch.is_empty() {
+            break;
+        }
+        measured.extend_from_slice(&batch);
+        if let Some(h) = &hifi {
+            if !using_hifi {
+                let actual: Vec<f64> = measured.iter().map(|&(_, y)| y).collect();
+                let xs: Vec<_> = measured
+                    .iter()
+                    .map(|&(i, _)| pool.feats.workflow[i])
+                    .collect();
+                let s_h = recall_sum_123(&scorer.score(h, &xs), &actual);
+                let pred_l: Vec<f64> = measured.iter().map(|&(i, _)| lowfi_scores[i]).collect();
+                if s_h >= recall_sum_123(&pred_l, &actual) {
+                    using_hifi = true;
+                }
+            }
+        }
+        if measured.len() >= 2 {
+            hifi = Some(train_hifi(prob, pool, &measured));
+        }
+    }
+
+    let model = hifi.unwrap_or_else(|| Ensemble::constant(1, 0.0));
+    let best_idx = searcher_best(&model, pool, scorer, &measured);
+    TunerOutput {
+        model,
+        measured,
+        best_idx,
+        collection_cost: col.total_cost(),
+        workflow_runs: col.workflow_runs,
+    }
+}

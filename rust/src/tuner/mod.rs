@@ -1,10 +1,21 @@
 //! Auto-tuning algorithms: the paper's CEAL (Alg. 1) and its
-//! comparison targets RS, AL, GEIST (§7.3) and ALpH (§4).
+//! comparison targets RS, AL, GEIST (§7.3) and ALpH (§4), plus the
+//! §6 cost-budgeted CEAL adaptation.
 //!
 //! All tuners share the collector/modeler/searcher structure of §2.1:
-//! the *collector* runs the workflow simulator, the *modeler* trains
+//! the *collector* performs measurements, the *modeler* trains
 //! boosted-tree surrogates on the collected samples, and the *searcher*
 //! picks the pool configuration with the best predicted objective.
+//!
+//! Since the ask/tell redesign the collector is *pluggable*: every
+//! algorithm is implemented as a stepwise [`TunerSession`]
+//! (ask for a [`MeasurementBatch`], tell the results back) behind the
+//! [`Evaluator`] boundary, of which the simulator-backed [`Collector`]
+//! is one implementation and the record/replay [`trace`] evaluators
+//! are another.  [`Tuner::run`] survives as the thin generic driver
+//! [`drive`]`(session, Collector)`; the pre-redesign monolithic loops
+//! are frozen in [`legacy`] and pinned bit-for-bit by
+//! `tests/session_equivalence.rs`.
 
 pub mod al;
 pub mod alph;
@@ -12,7 +23,10 @@ pub mod budgeted;
 pub mod ceal;
 pub mod common;
 pub mod geist;
+pub mod legacy;
 pub mod rs;
+pub mod session;
+pub mod trace;
 
 pub use al::ActiveLearning;
 pub use alph::Alph;
@@ -21,3 +35,8 @@ pub use ceal::{Ceal, CealParams};
 pub use common::{Collector, Pool, Problem, Tuner, TunerOutput};
 pub use geist::Geist;
 pub use rs::RandomSampling;
+pub use session::{
+    drive, BatchMode, DiagSink, Evaluator, MeasurementBatch, MeasurementRequest,
+    MeasurementResult, SessionState, TunerSession,
+};
+pub use trace::{TraceHeader, TraceRecorder, TraceReplayer, TRACE_VERSION};

@@ -1,10 +1,13 @@
 //! RS — random-sampling baseline (§7.3): spend the whole budget on
 //! uniformly random pool configurations, train once, search.
-
-use std::collections::HashSet;
+//!
+//! Session shape: one sequential batch of `m` random picks, then done.
 
 use super::common::{
-    random_unmeasured, searcher_best, train_hifi, Collector, Pool, Problem, Tuner, TunerOutput,
+    random_unmeasured, searcher_best, train_hifi, Pool, Problem, Tuner, TunerOutput,
+};
+use super::session::{
+    MeasurementBatch, MeasurementResult, SessionCore, SessionState, TunerSession,
 };
 use crate::surrogate::Scorer;
 use crate::util::rng::Pcg32;
@@ -16,31 +19,74 @@ impl Tuner for RandomSampling {
         "RS"
     }
 
-    fn run(
-        &self,
-        prob: &Problem,
-        pool: &Pool,
-        scorer: &Scorer,
+    fn session<'a>(
+        &'a self,
+        prob: &'a Problem,
+        pool: &'a Pool,
+        scorer: &'a Scorer,
         m: usize,
         rng: &mut Pcg32,
-    ) -> TunerOutput {
-        let mut col = Collector::new(prob, rng.derive_str("collector"));
-        let mut sel_rng = rng.derive_str("select");
-        let measured_set = HashSet::new();
-        let picks = random_unmeasured(pool, &measured_set, m.min(pool.len()), &mut sel_rng);
-        let measured: Vec<(usize, f64)> = picks
-            .into_iter()
-            .map(|i| (i, col.measure(&pool.configs[i])))
-            .collect();
-        let model = train_hifi(prob, pool, &measured);
-        let best_idx = searcher_best(&model, pool, scorer, &measured);
-        TunerOutput {
-            model,
-            measured,
-            best_idx,
-            collection_cost: col.total_cost(),
-            workflow_runs: col.workflow_runs,
+    ) -> Box<dyn TunerSession + 'a> {
+        Box::new(RsSession {
+            core: SessionCore::new(prob, pool, scorer, rng),
+            m: m.min(pool.len()),
+            pending: Vec::new(),
+            done: false,
+        })
+    }
+}
+
+struct RsSession<'a> {
+    core: SessionCore<'a>,
+    m: usize,
+    /// Pool indices of the in-flight batch (empty when none).
+    pending: Vec<usize>,
+    done: bool,
+}
+
+impl TunerSession for RsSession<'_> {
+    fn name(&self) -> &'static str {
+        "RS"
+    }
+
+    fn ask(&mut self) -> MeasurementBatch {
+        assert!(self.pending.is_empty(), "ask() with results outstanding");
+        if self.done {
+            return MeasurementBatch::empty();
         }
+        self.core.asked_batches += 1;
+        let picks = random_unmeasured(
+            self.core.pool,
+            &self.core.measured_set,
+            self.m,
+            &mut self.core.sel_rng,
+        );
+        let reqs = self.core.take_workflow_picks(&picks);
+        self.pending = picks;
+        MeasurementBatch::sequential(reqs)
+    }
+
+    fn tell(&mut self, results: &[MeasurementResult]) {
+        let picks = std::mem::take(&mut self.pending);
+        assert_eq!(results.len(), picks.len(), "tell() arity mismatch");
+        self.core.told_batches += 1;
+        for (&i, r) in picks.iter().zip(results) {
+            self.core.record_workflow(i, r.value);
+        }
+        self.done = true;
+    }
+
+    fn state(&self) -> SessionState {
+        let phase = if self.done { "done" } else { "sample" };
+        self.core.state(phase, self.done, None)
+    }
+
+    fn finish(self: Box<Self>) -> TunerOutput {
+        assert!(self.done, "finish() before the session completed");
+        let core = self.core;
+        let model = train_hifi(core.prob, core.pool, &core.measured);
+        let best_idx = searcher_best(&model, core.pool, core.scorer, &core.measured);
+        core.into_output(model, best_idx)
     }
 }
 
@@ -77,5 +123,28 @@ mod tests {
                 .best_idx
         };
         assert_eq!(run(5), run(5));
+    }
+
+    #[test]
+    fn session_state_reports_progress() {
+        let prob = Problem::new(WorkflowId::LV, Objective::ExecTime);
+        let pool = Pool::generate(&prob, 40, 4);
+        let mut rng = Pcg32::new(6, 6);
+        let mut session = RandomSampling.session(&prob, &pool, &Scorer::Native, 10, &mut rng);
+        assert_eq!(session.state().phase, "sample");
+        assert!(!session.state().done);
+        let batch = session.ask();
+        assert_eq!(batch.len(), 10);
+        let results: Vec<MeasurementResult> = (0..10)
+            .map(|k| MeasurementResult { value: 1.0 + k as f64 })
+            .collect();
+        session.tell(&results);
+        let st = session.state();
+        assert!(st.done);
+        assert_eq!(st.workflow_runs, 10);
+        assert!((st.collection_cost - (10.0 + 45.0)).abs() < 1e-12);
+        assert!(session.ask().is_empty());
+        let out = session.finish();
+        assert_eq!(out.workflow_runs, 10);
     }
 }

@@ -1,0 +1,541 @@
+//! Ask/tell tuning sessions: the inversion-of-control boundary that
+//! lets a driver *outside* this crate own the measurement loop.
+//!
+//! The monolithic `Tuner::run(prob, pool, scorer, m, rng)` could only
+//! pull measurements synchronously from the simulator-backed
+//! [`Collector`].  A [`TunerSession`] instead *asks* for a batch of
+//! measurements ([`MeasurementRequest`]s), the caller performs them —
+//! on the simulator, a batch scheduler, a workflow runner, anything —
+//! and *tells* the observed values back.  [`drive`] is the trivial
+//! driver loop; the simulator path is `drive(session, &mut Collector)`
+//! and is bit-identical to the pre-session monolithic loops (pinned by
+//! `tests/session_equivalence.rs` against [`super::legacy`]).
+//!
+//! # Determinism contract (mirrors the thread-invariance contract)
+//!
+//! A session's behaviour is a pure function of its construction
+//! arguments and the told measurement values.  For an [`Evaluator`] to
+//! reproduce the simulator campaigns bit-for-bit it must:
+//!
+//! * answer every request of a batch, in request order;
+//! * honour [`MeasurementBatch::mode`]: a [`BatchMode::Sequential`]
+//!   batch consumes the evaluator's noise stream one request at a time
+//!   in order, while a [`BatchMode::FanOut`] batch (CEAL/ALpH's
+//!   `C_meas` fan-out, Alg. 1 line 15) draws each slot from an
+//!   independent child stream derived from (stream state, slot index)
+//!   — see [`Collector::measure_config_batch`];
+//! * never reorder, drop, coalesce or split batches.
+//!
+//! External drivers that measure on real systems have no noise stream
+//! to keep in sync; for them the contract degenerates to "answer in
+//! order".  Record/replay ([`super::trace`]) verifies the contract: a
+//! replayed session re-issues exactly the recorded requests.
+
+use std::collections::HashSet;
+
+use crate::config::{Config, F_MAX};
+use crate::gbt::Ensemble;
+use crate::surrogate::lowfi::ComponentSamples;
+use crate::surrogate::Scorer;
+use crate::util::rng::Pcg32;
+
+use super::common::{Collector, Pool, Problem, TunerOutput};
+
+/// One measurement a session needs performed.
+#[derive(Clone, Debug, PartialEq)]
+pub enum MeasurementRequest {
+    /// Run the whole workflow at a pool configuration.  `pool_idx`
+    /// identifies the configuration to the session (and to replay);
+    /// `config` carries the concrete parameter values so an external
+    /// driver needs no pool access to launch the run.
+    Workflow { pool_idx: usize, config: Config },
+    /// Run configurable component `comp` (index into the workflow
+    /// spec) in isolation at `config` (the component's own values).
+    Component { comp: usize, config: Vec<i64> },
+}
+
+/// The result of one [`MeasurementRequest`]: the measured objective
+/// value (seconds or core-hours, per the problem's objective).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MeasurementResult {
+    pub value: f64,
+}
+
+/// How an evaluator must consume its randomness across a batch — part
+/// of the determinism contract (module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BatchMode {
+    /// Measure one request after another on a single noise stream.
+    Sequential,
+    /// Measure every request on an independent derived stream (the
+    /// worker-pool fan-out of CEAL/ALpH batches).  Fan-out batches
+    /// carry workflow requests only.
+    FanOut,
+}
+
+/// A batch of measurements requested by one [`TunerSession::ask`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct MeasurementBatch {
+    pub mode: BatchMode,
+    pub requests: Vec<MeasurementRequest>,
+}
+
+impl MeasurementBatch {
+    pub fn sequential(requests: Vec<MeasurementRequest>) -> MeasurementBatch {
+        MeasurementBatch {
+            mode: BatchMode::Sequential,
+            requests,
+        }
+    }
+
+    pub fn fan_out(requests: Vec<MeasurementRequest>) -> MeasurementBatch {
+        MeasurementBatch {
+            mode: BatchMode::FanOut,
+            requests,
+        }
+    }
+
+    /// The empty batch: the session has nothing left to measure.
+    pub fn empty() -> MeasurementBatch {
+        MeasurementBatch::sequential(Vec::new())
+    }
+
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+}
+
+/// Where a session routes library warnings (e.g. "component space
+/// admits no feasible configuration") instead of printing them
+/// unconditionally: the embedding caller chooses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum DiagSink {
+    /// Print `warning: …` to stderr as they occur (the CLI default and
+    /// the pre-session behaviour).
+    #[default]
+    Stderr,
+    /// Discard warnings.
+    Silent,
+    /// Collect warnings for [`TunerSession::diagnostics`].
+    Capture,
+}
+
+/// A session-owned warning sink (see [`DiagSink`]).
+#[derive(Debug, Default)]
+pub(crate) struct Diagnostics {
+    sink: DiagSink,
+    captured: Vec<String>,
+}
+
+impl Diagnostics {
+    pub(crate) fn warn(&mut self, msg: String) {
+        match self.sink {
+            DiagSink::Stderr => eprintln!("warning: {msg}"),
+            DiagSink::Silent => {}
+            DiagSink::Capture => self.captured.push(msg),
+        }
+    }
+
+    pub(crate) fn set_sink(&mut self, sink: DiagSink) {
+        self.sink = sink;
+    }
+
+    pub(crate) fn captured(&self) -> &[String] {
+        &self.captured
+    }
+}
+
+/// A progress snapshot of a session (informational; nothing in the
+/// tuning path reads it back).
+#[derive(Clone, Debug)]
+pub struct SessionState {
+    /// Current phase name ("components", "bootstrap", "refine", …).
+    pub phase: &'static str,
+    /// True once `ask` will only ever return the empty batch.
+    pub done: bool,
+    /// Batches asked / told so far.
+    pub asked_batches: usize,
+    pub told_batches: usize,
+    /// Individual measurements performed so far.
+    pub workflow_runs: usize,
+    pub component_runs: usize,
+    /// Σ objective over told measurements (budget accounting).
+    pub collection_cost: f64,
+    /// Surrogate (re)fits performed so far.
+    pub model_refits: usize,
+    /// CEAL-family switch detection: `Some(true)` once the
+    /// high-fidelity model has overtaken the low-fidelity one.
+    pub using_hifi: Option<bool>,
+}
+
+/// A stepwise tuning algorithm: ask for measurements, accept results,
+/// repeat until the budget is spent, then finish into a
+/// [`TunerOutput`].
+///
+/// Lifecycle: `ask` → (caller measures) → `tell`, strictly
+/// alternating; an empty `ask` batch means the session is complete and
+/// `finish` may be called.  Results passed to `tell` must answer the
+/// immediately preceding batch, in request order.
+pub trait TunerSession {
+    fn name(&self) -> &'static str;
+
+    /// Next batch of measurements the session needs; empty when the
+    /// session is complete.  Panics if the previous batch has not been
+    /// told yet.
+    fn ask(&mut self) -> MeasurementBatch;
+
+    /// Report the results of the last asked batch, in request order.
+    fn tell(&mut self, results: &[MeasurementResult]);
+
+    /// Progress snapshot (budget accounting, refits, switch state).
+    fn state(&self) -> SessionState;
+
+    /// Consume the session into the tuner's output.  Panics if called
+    /// before the session measured enough to produce a model (i.e.
+    /// before `ask` first returned the empty batch).
+    fn finish(self: Box<Self>) -> TunerOutput;
+
+    /// Route warnings (default: stderr, matching the monolithic API).
+    fn set_diag_sink(&mut self, sink: DiagSink) {
+        let _ = sink;
+    }
+
+    /// Warnings captured so far (only under [`DiagSink::Capture`]).
+    fn diagnostics(&self) -> &[String] {
+        &[]
+    }
+}
+
+/// Anything that can perform a session's measurement batches.  The
+/// simulator-backed [`Collector`] is the canonical implementation; a
+/// [`super::trace::TraceReplayer`] replays a recorded stream; external
+/// embedders implement it over their own launch infrastructure.
+pub trait Evaluator {
+    /// Perform every request of `batch`, returning results in request
+    /// order (see the module-level determinism contract).
+    fn evaluate(&mut self, batch: &MeasurementBatch) -> Vec<MeasurementResult>;
+}
+
+impl Evaluator for Collector<'_> {
+    fn evaluate(&mut self, batch: &MeasurementBatch) -> Vec<MeasurementResult> {
+        match batch.mode {
+            BatchMode::Sequential => batch
+                .requests
+                .iter()
+                .map(|req| {
+                    let value = match req {
+                        MeasurementRequest::Workflow { config, .. } => self.measure(config),
+                        MeasurementRequest::Component { comp, config } => {
+                            self.measure_component(*comp, config)
+                        }
+                    };
+                    MeasurementResult { value }
+                })
+                .collect(),
+            BatchMode::FanOut => {
+                let cfgs: Vec<&Config> = batch
+                    .requests
+                    .iter()
+                    .map(|req| match req {
+                        MeasurementRequest::Workflow { config, .. } => config,
+                        MeasurementRequest::Component { .. } => {
+                            panic!("fan-out batches carry workflow requests only")
+                        }
+                    })
+                    .collect();
+                self.measure_config_batch(&cfgs)
+                    .into_iter()
+                    .map(|value| MeasurementResult { value })
+                    .collect()
+            }
+        }
+    }
+}
+
+/// The generic driver: the whole of the old monolithic `Tuner::run`,
+/// now decoupled from *what* performs the measurements.
+pub fn drive(
+    mut session: Box<dyn TunerSession + '_>,
+    evaluator: &mut dyn Evaluator,
+) -> TunerOutput {
+    loop {
+        let batch = session.ask();
+        if batch.is_empty() {
+            break;
+        }
+        let results = evaluator.evaluate(&batch);
+        assert_eq!(
+            results.len(),
+            batch.len(),
+            "evaluator must answer every request of a batch"
+        );
+        session.tell(&results);
+    }
+    session.finish()
+}
+
+/// State shared by every built-in session: problem/pool/scorer
+/// references, the selection RNG stream, the measured set, and the
+/// budget accounting that used to live on the [`Collector`].
+///
+/// Accounting is bit-compatible with the collector's: workflow and
+/// component costs accumulate in told order into separate sums, and
+/// `total_cost` adds the two — exactly the float operations of the
+/// monolithic path, so session-produced `collection_cost` matches the
+/// legacy output bitwise.
+pub(crate) struct SessionCore<'a> {
+    pub(crate) prob: &'a Problem,
+    pub(crate) pool: &'a Pool,
+    pub(crate) scorer: &'a Scorer,
+    /// Selection stream, derived exactly as the monolithic loops did.
+    pub(crate) sel_rng: Pcg32,
+    pub(crate) measured: Vec<(usize, f64)>,
+    pub(crate) measured_set: HashSet<usize>,
+    pub(crate) workflow_runs: usize,
+    pub(crate) component_runs: usize,
+    workflow_cost: f64,
+    component_cost: f64,
+    pub(crate) model_refits: usize,
+    pub(crate) asked_batches: usize,
+    pub(crate) told_batches: usize,
+    pub(crate) diag: Diagnostics,
+}
+
+impl<'a> SessionCore<'a> {
+    pub(crate) fn new(
+        prob: &'a Problem,
+        pool: &'a Pool,
+        scorer: &'a Scorer,
+        rng: &mut Pcg32,
+    ) -> SessionCore<'a> {
+        SessionCore {
+            prob,
+            pool,
+            scorer,
+            sel_rng: rng.derive_str("select"),
+            measured: Vec::new(),
+            measured_set: HashSet::new(),
+            workflow_runs: 0,
+            component_runs: 0,
+            workflow_cost: 0.0,
+            component_cost: 0.0,
+            model_refits: 0,
+            asked_batches: 0,
+            told_batches: 0,
+            diag: Diagnostics::default(),
+        }
+    }
+
+    /// Build a workflow request for pool index `i`.
+    pub(crate) fn workflow_request(&self, i: usize) -> MeasurementRequest {
+        MeasurementRequest::Workflow {
+            pool_idx: i,
+            config: self.pool.configs[i].clone(),
+        }
+    }
+
+    /// Requests for a slate of pool picks, marking each as measured
+    /// (every emitted request *will* be measured, so marking at emit
+    /// time is equivalent to the monolithic insert-after-measure).
+    pub(crate) fn take_workflow_picks(&mut self, picks: &[usize]) -> Vec<MeasurementRequest> {
+        for &i in picks {
+            self.measured_set.insert(i);
+        }
+        picks.iter().map(|&i| self.workflow_request(i)).collect()
+    }
+
+    /// Account one told workflow measurement.
+    pub(crate) fn record_workflow(&mut self, i: usize, y: f64) {
+        self.measured.push((i, y));
+        self.workflow_runs += 1;
+        self.workflow_cost += y;
+    }
+
+    /// Account one told component measurement.
+    pub(crate) fn record_component(&mut self, y: f64) {
+        self.component_runs += 1;
+        self.component_cost += y;
+    }
+
+    pub(crate) fn component_cost(&self) -> f64 {
+        self.component_cost
+    }
+
+    pub(crate) fn total_cost(&self) -> f64 {
+        self.workflow_cost + self.component_cost
+    }
+
+    pub(crate) fn refit(&mut self) {
+        self.model_refits += 1;
+    }
+
+    pub(crate) fn state(
+        &self,
+        phase: &'static str,
+        done: bool,
+        using_hifi: Option<bool>,
+    ) -> SessionState {
+        SessionState {
+            phase,
+            done,
+            asked_batches: self.asked_batches,
+            told_batches: self.told_batches,
+            workflow_runs: self.workflow_runs,
+            component_runs: self.component_runs,
+            collection_cost: self.total_cost(),
+            model_refits: self.model_refits,
+            using_hifi,
+        }
+    }
+
+    /// Finish into the tuner output (searcher already ran → `best_idx`).
+    pub(crate) fn into_output(self, model: Ensemble, best_idx: usize) -> TunerOutput {
+        TunerOutput {
+            model,
+            measured: self.measured,
+            best_idx,
+            collection_cost: self.workflow_cost + self.component_cost,
+            workflow_runs: self.workflow_runs,
+        }
+    }
+}
+
+/// Phase-1 component sampling shared by the CEAL-family sessions
+/// (Alg. 1 lines 1-6): reset `samples` to the historical data (or
+/// empties), pre-draw every component's isolated configurations from
+/// the selection stream — legal because the selection and measurement
+/// streams are independent, so both draw orders match the monolithic
+/// interleaving — and return the measurement requests; `slots` records
+/// each request's (configurable slot, encoded features) for `tell`.
+/// An infeasible component space degrades to a warning on the
+/// session's diagnostics sink and skips only that component (it trains
+/// on whatever it has; empty → constant model).
+pub(crate) fn sample_component_requests(
+    core: &mut SessionCore<'_>,
+    historical: Option<&std::sync::Arc<Vec<ComponentSamples>>>,
+    m_r: usize,
+    samples: &mut Vec<ComponentSamples>,
+    slots: &mut Vec<(usize, [f32; F_MAX])>,
+) -> Vec<MeasurementRequest> {
+    let spec = &core.prob.sim.spec;
+    let configurable = spec.configurable();
+    *samples = match historical {
+        Some(h) => {
+            assert_eq!(h.len(), configurable.len(), "historical arity");
+            h.iter().cloned().collect()
+        }
+        None => configurable
+            .iter()
+            .map(|_| ComponentSamples::default())
+            .collect(),
+    };
+    slots.clear();
+    let mut reqs = Vec::new();
+    for (slot, &comp) in configurable.iter().enumerate() {
+        let cs = &spec.components[comp];
+        for _ in 0..m_r {
+            // feasible on the same <=32-node allocations as the pool
+            match core.prob.sim.sample_component_feasible(comp, &mut core.sel_rng) {
+                Ok(cfg) => {
+                    slots.push((slot, cs.encode(&cfg)));
+                    reqs.push(MeasurementRequest::Component { comp, config: cfg });
+                }
+                Err(e) => {
+                    // an over-tight component space: train on what we
+                    // have instead of aborting the campaign
+                    core.diag.warn(format!("{e}; skipping its isolated runs"));
+                    break;
+                }
+            }
+        }
+    }
+    reqs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::WorkflowId;
+    use crate::sim::Objective;
+
+    #[test]
+    fn batch_constructors() {
+        let b = MeasurementBatch::empty();
+        assert!(b.is_empty());
+        assert_eq!(b.mode, BatchMode::Sequential);
+        let r = MeasurementRequest::Component {
+            comp: 0,
+            config: vec![1, 2],
+        };
+        let f = MeasurementBatch::fan_out(vec![]);
+        assert_eq!(f.mode, BatchMode::FanOut);
+        let s = MeasurementBatch::sequential(vec![r.clone()]);
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.requests[0], r);
+    }
+
+    #[test]
+    fn diagnostics_sinks() {
+        let mut d = Diagnostics::default();
+        d.set_sink(DiagSink::Silent);
+        d.warn("dropped".into());
+        assert!(d.captured().is_empty());
+        d.set_sink(DiagSink::Capture);
+        d.warn("kept".into());
+        assert_eq!(d.captured(), ["kept"]);
+    }
+
+    /// The collector evaluator must consume its RNG exactly like the
+    /// direct measure / measure_pool_batch calls it replaces.
+    #[test]
+    fn collector_evaluator_matches_direct_calls() {
+        let prob = Problem::new(WorkflowId::LV, Objective::CompTime);
+        let pool = Pool::generate(&prob, 20, 3);
+        let seed_rng = Pcg32::new(11, 0);
+
+        // sequential: workflow + component requests
+        let mut direct = Collector::new(&prob, seed_rng.clone());
+        let d0 = direct.measure(&pool.configs[2]);
+        let d1 = direct.measure_component(0, prob.sim.spec.component_slice(&pool.configs[2], 0));
+        let mut via = Collector::new(&prob, seed_rng.clone());
+        let batch = MeasurementBatch::sequential(vec![
+            MeasurementRequest::Workflow {
+                pool_idx: 2,
+                config: pool.configs[2].clone(),
+            },
+            MeasurementRequest::Component {
+                comp: 0,
+                config: prob.sim.spec.component_slice(&pool.configs[2], 0).to_vec(),
+            },
+        ]);
+        let res = via.evaluate(&batch);
+        assert_eq!(res.len(), 2);
+        assert_eq!(res[0].value, d0);
+        assert_eq!(res[1].value, d1);
+        assert_eq!(via.total_cost(), direct.total_cost());
+
+        // fan-out: must match measure_pool_batch draw-for-draw
+        let idxs = [4usize, 7, 9];
+        let mut direct = Collector::new(&prob, seed_rng.clone());
+        let want = direct.measure_pool_batch(&pool, &idxs);
+        let mut via = Collector::new(&prob, seed_rng.clone());
+        let batch = MeasurementBatch::fan_out(
+            idxs.iter()
+                .map(|&i| MeasurementRequest::Workflow {
+                    pool_idx: i,
+                    config: pool.configs[i].clone(),
+                })
+                .collect(),
+        );
+        let res = via.evaluate(&batch);
+        for (r, (_, y)) in res.iter().zip(&want) {
+            assert_eq!(r.value, *y);
+        }
+        assert_eq!(via.workflow_runs, direct.workflow_runs);
+        assert_eq!(via.total_cost(), direct.total_cost());
+    }
+}

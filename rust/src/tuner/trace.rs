@@ -1,0 +1,508 @@
+//! Record/replay of session measurement streams — the
+//! [`Evaluator`](super::session::Evaluator) pair that turns any tuning
+//! session into a reproducible artifact with zero new dependencies.
+//!
+//! A trace is a versioned JSON-lines file: one header line, then one
+//! line per measurement batch carrying the requests and the observed
+//! values.  [`TraceRecorder`] wraps a live evaluator and logs every
+//! batch it answers; [`TraceReplayer`] serves a recorded stream back,
+//! *verifying* that the session re-issues exactly the recorded
+//! requests — so a successful replay certifies the session's
+//! determinism contract, pins its behaviour bit-for-bit without a
+//! simulator, and doubles as the snapshot/resume substrate for
+//! `ceal tune --record/--replay` (replaying a trace reconstructs the
+//! session's full internal state from the measurement history alone).
+//!
+//! Format (version 1):
+//!
+//! ```text
+//! {"algo":"CEAL","format":"ceal-session-trace","m":10,"objective":"comp_time","pool":150,"scorer":"native","seed":"52897","version":1,"workflow":"CH5"}
+//! {"batch":0,"mode":"seq","reqs":[{"cfg":[430,8],"comp":0}],"ys":[12.5]}
+//! {"batch":1,"mode":"fanout","reqs":[{"pool":3},{"pool":17}],"ys":[101.25,99.5]}
+//! ```
+//!
+//! Numbers round-trip exactly (shortest-round-trip float formatting on
+//! write, strtod on read); the seed is a string because u64 seeds can
+//! exceed f64's integer range.  A trace whose `version` differs from
+//! [`TRACE_VERSION`] is rejected up front with a clear error rather
+//! than replayed into garbage.
+
+use std::io::Write;
+use std::path::Path;
+
+use crate::util::json::{self, Json};
+
+use super::ceal::CealParams;
+use super::session::{BatchMode, Evaluator, MeasurementBatch, MeasurementRequest, MeasurementResult};
+
+/// The trace format version this build writes and reads.
+pub const TRACE_VERSION: u64 = 1;
+
+const TRACE_FORMAT: &str = "ceal-session-trace";
+
+/// Trace metadata: everything needed to reconstruct the recorded
+/// session (the pool is regenerated deterministically from
+/// (workflow, objective, pool, seed); the session RNG from
+/// (seed, algo)).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceHeader {
+    pub algo: String,
+    pub workflow: String,
+    pub objective: String,
+    /// Training-sample budget m of the recorded session.
+    pub m: usize,
+    pub pool_size: usize,
+    pub seed: u64,
+    /// Scoring backend the session ran with ("native" | "pjrt") —
+    /// replay must use the same backend or the searcher/selection
+    /// passes could diverge from the recorded run.
+    pub scorer: String,
+    /// CEAL/ALpH hyper-parameter overrides active at record time
+    /// (`--iters/--m0/--mr`); `None` means the algorithm defaults.
+    pub ceal_params: Option<CealParams>,
+}
+
+impl TraceHeader {
+    fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("format", Json::Str(TRACE_FORMAT.into())),
+            ("version", Json::Num(TRACE_VERSION as f64)),
+            ("algo", Json::Str(self.algo.clone())),
+            ("workflow", Json::Str(self.workflow.clone())),
+            ("objective", Json::Str(self.objective.clone())),
+            ("m", Json::Num(self.m as f64)),
+            ("pool", Json::Num(self.pool_size as f64)),
+            ("seed", Json::Str(self.seed.to_string())),
+            ("scorer", Json::Str(self.scorer.clone())),
+        ];
+        if let Some(p) = self.ceal_params {
+            pairs.push((
+                "params",
+                Json::obj(vec![
+                    ("iterations", Json::Num(p.iterations as f64)),
+                    ("m0_frac", Json::Num(p.m0_frac)),
+                    ("mr_frac", Json::Num(p.mr_frac)),
+                ]),
+            ));
+        }
+        Json::obj(pairs)
+    }
+
+    fn from_json(v: &Json) -> Result<TraceHeader, String> {
+        let str_field = |k: &str| -> Result<String, String> {
+            v.get(k)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| format!("trace header missing string field '{k}'"))
+        };
+        let num_field = |k: &str| -> Result<usize, String> {
+            v.get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| format!("trace header missing numeric field '{k}'"))
+        };
+        let seed: u64 = str_field("seed")?
+            .parse()
+            .map_err(|e| format!("bad trace seed: {e}"))?;
+        let ceal_params = match v.get("params") {
+            None => None,
+            Some(p) => Some(CealParams {
+                iterations: p
+                    .get("iterations")
+                    .and_then(Json::as_usize)
+                    .ok_or("bad params.iterations")?,
+                m0_frac: p.get("m0_frac").and_then(Json::as_f64).ok_or("bad params.m0_frac")?,
+                mr_frac: p.get("mr_frac").and_then(Json::as_f64).ok_or("bad params.mr_frac")?,
+            }),
+        };
+        Ok(TraceHeader {
+            algo: str_field("algo")?,
+            workflow: str_field("workflow")?,
+            objective: str_field("objective")?,
+            m: num_field("m")?,
+            pool_size: num_field("pool")?,
+            seed,
+            scorer: str_field("scorer")?,
+            ceal_params,
+        })
+    }
+}
+
+fn mode_name(mode: BatchMode) -> &'static str {
+    match mode {
+        BatchMode::Sequential => "seq",
+        BatchMode::FanOut => "fanout",
+    }
+}
+
+fn request_json(req: &MeasurementRequest) -> Json {
+    match req {
+        MeasurementRequest::Workflow { pool_idx, .. } => {
+            Json::obj(vec![("pool", Json::Num(*pool_idx as f64))])
+        }
+        MeasurementRequest::Component { comp, config } => Json::obj(vec![
+            ("comp", Json::Num(*comp as f64)),
+            (
+                "cfg",
+                Json::Arr(config.iter().map(|&x| Json::Num(x as f64)).collect()),
+            ),
+        ]),
+    }
+}
+
+/// An [`Evaluator`] decorator that answers batches through `inner` and
+/// appends each (requests, results) pair to a JSON-lines sink.
+///
+/// IO errors do not interrupt the tuning run (the `Evaluator` contract
+/// has no error channel); the first one is held and surfaced by
+/// [`finish`](Self::finish), and writing stops after it.
+pub struct TraceRecorder<'e, W: Write> {
+    inner: &'e mut dyn Evaluator,
+    out: W,
+    batches: u64,
+    error: Option<std::io::Error>,
+}
+
+impl<'e, W: Write> TraceRecorder<'e, W> {
+    /// Wrap `inner`, writing the header line immediately.
+    pub fn new(
+        inner: &'e mut dyn Evaluator,
+        mut out: W,
+        header: &TraceHeader,
+    ) -> std::io::Result<TraceRecorder<'e, W>> {
+        let mut line = header.to_json().compact();
+        line.push('\n');
+        out.write_all(line.as_bytes())?;
+        Ok(TraceRecorder {
+            inner,
+            out,
+            batches: 0,
+            error: None,
+        })
+    }
+
+    /// Batches recorded so far.
+    pub fn batches_written(&self) -> u64 {
+        self.batches
+    }
+
+    /// Flush and return the sink, or the first write error.
+    pub fn finish(mut self) -> std::io::Result<W> {
+        if let Some(e) = self.error.take() {
+            return Err(e);
+        }
+        self.out.flush()?;
+        Ok(self.out)
+    }
+}
+
+impl<W: Write> Evaluator for TraceRecorder<'_, W> {
+    fn evaluate(&mut self, batch: &MeasurementBatch) -> Vec<MeasurementResult> {
+        let results = self.inner.evaluate(batch);
+        if self.error.is_none() {
+            let line = Json::obj(vec![
+                ("batch", Json::Num(self.batches as f64)),
+                ("mode", Json::Str(mode_name(batch.mode).into())),
+                (
+                    "reqs",
+                    Json::Arr(batch.requests.iter().map(request_json).collect()),
+                ),
+                (
+                    "ys",
+                    Json::arr_f64(&results.iter().map(|r| r.value).collect::<Vec<_>>()),
+                ),
+            ]);
+            let mut text = line.compact();
+            text.push('\n');
+            if let Err(e) = self.out.write_all(text.as_bytes()) {
+                self.error = Some(e);
+            }
+        }
+        self.batches += 1;
+        results
+    }
+}
+
+/// A request as recorded in a trace (workflow requests are identified
+/// by pool index alone — the pool regenerates deterministically from
+/// the header, so configurations are not duplicated into the file).
+#[derive(Clone, Debug, PartialEq)]
+pub enum RecordedRequest {
+    Workflow { pool_idx: usize },
+    Component { comp: usize, config: Vec<i64> },
+}
+
+impl RecordedRequest {
+    /// Does a live request match this recorded one?
+    fn matches(&self, req: &MeasurementRequest) -> bool {
+        match (self, req) {
+            (
+                RecordedRequest::Workflow { pool_idx },
+                MeasurementRequest::Workflow { pool_idx: live, .. },
+            ) => pool_idx == live,
+            (
+                RecordedRequest::Component { comp, config },
+                MeasurementRequest::Component {
+                    comp: live_comp,
+                    config: live_cfg,
+                },
+            ) => comp == live_comp && config == live_cfg,
+            _ => false,
+        }
+    }
+}
+
+/// One recorded measurement batch.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RecordedBatch {
+    pub mode: BatchMode,
+    pub requests: Vec<RecordedRequest>,
+    pub values: Vec<f64>,
+}
+
+/// Replays a recorded measurement stream as an [`Evaluator`],
+/// verifying batch-by-batch that the session issues exactly the
+/// recorded requests.  A divergence means the trace belongs to a
+/// different (seed, algorithm, build) and panics with the offending
+/// batch rather than silently answering the wrong question.
+pub struct TraceReplayer {
+    pub header: TraceHeader,
+    batches: Vec<RecordedBatch>,
+    pos: usize,
+}
+
+impl TraceReplayer {
+    /// Parse a whole trace document.
+    pub fn parse(text: &str) -> Result<TraceReplayer, String> {
+        let mut lines = text.lines().enumerate().filter(|(_, l)| !l.trim().is_empty());
+        let (_, first) = lines.next().ok_or("empty trace file")?;
+        let head = json::parse(first).map_err(|e| format!("trace header: {e}"))?;
+        match head.get("format").and_then(Json::as_str) {
+            Some(TRACE_FORMAT) => {}
+            _ => return Err(format!("not a {TRACE_FORMAT} file")),
+        }
+        let version = head
+            .get("version")
+            .and_then(Json::as_f64)
+            .ok_or("trace header missing 'version'")? as u64;
+        if version != TRACE_VERSION {
+            return Err(format!(
+                "unsupported session-trace version {version} (this build reads version \
+                 {TRACE_VERSION}); re-record the trace with this binary"
+            ));
+        }
+        let header = TraceHeader::from_json(&head)?;
+        let mut batches = Vec::new();
+        for (lineno, line) in lines {
+            let v = json::parse(line).map_err(|e| format!("trace line {}: {e}", lineno + 1))?;
+            batches.push(Self::parse_batch(&v, lineno + 1)?);
+        }
+        Ok(TraceReplayer {
+            header,
+            batches,
+            pos: 0,
+        })
+    }
+
+    fn parse_batch(v: &Json, lineno: usize) -> Result<RecordedBatch, String> {
+        let mode = match v.get("mode").and_then(Json::as_str) {
+            Some("seq") => BatchMode::Sequential,
+            Some("fanout") => BatchMode::FanOut,
+            other => return Err(format!("trace line {lineno}: bad mode {other:?}")),
+        };
+        let reqs = v
+            .get("reqs")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| format!("trace line {lineno}: missing 'reqs'"))?;
+        let mut requests = Vec::with_capacity(reqs.len());
+        for r in reqs {
+            if let Some(idx) = r.get("pool").and_then(Json::as_usize) {
+                requests.push(RecordedRequest::Workflow { pool_idx: idx });
+            } else if let Some(comp) = r.get("comp").and_then(Json::as_usize) {
+                let cfg = r
+                    .get("cfg")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| format!("trace line {lineno}: component request missing 'cfg'"))?
+                    .iter()
+                    .map(|x| x.as_f64().map(|f| f as i64))
+                    .collect::<Option<Vec<i64>>>()
+                    .ok_or_else(|| format!("trace line {lineno}: non-numeric 'cfg'"))?;
+                requests.push(RecordedRequest::Component { comp, config: cfg });
+            } else {
+                return Err(format!("trace line {lineno}: unrecognized request {r:?}"));
+            }
+        }
+        let values: Vec<f64> = v
+            .get("ys")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| format!("trace line {lineno}: missing 'ys'"))?
+            .iter()
+            .map(|x| x.as_f64())
+            .collect::<Option<Vec<f64>>>()
+            .ok_or_else(|| format!("trace line {lineno}: non-numeric 'ys'"))?;
+        if values.len() != requests.len() {
+            return Err(format!(
+                "trace line {lineno}: {} requests but {} values",
+                requests.len(),
+                values.len()
+            ));
+        }
+        Ok(RecordedBatch {
+            mode,
+            requests,
+            values,
+        })
+    }
+
+    /// Load a trace from disk.
+    pub fn load(path: &Path) -> Result<TraceReplayer, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("cannot read trace {}: {e}", path.display()))?;
+        TraceReplayer::parse(&text)
+    }
+
+    /// The recorded batches (for inspection and format tests).
+    pub fn batches(&self) -> &[RecordedBatch] {
+        &self.batches
+    }
+
+    /// Batches not yet served.  A clean replay ends at zero; a
+    /// remainder means the replayed session diverged from (or was
+    /// shorter than) the recorded one.
+    pub fn remaining(&self) -> usize {
+        self.batches.len() - self.pos
+    }
+}
+
+impl Evaluator for TraceReplayer {
+    fn evaluate(&mut self, batch: &MeasurementBatch) -> Vec<MeasurementResult> {
+        let rec = self.batches.get(self.pos).unwrap_or_else(|| {
+            panic!(
+                "trace exhausted: session asked batch {} but the trace holds {} \
+                 (seed/algorithm/build mismatch?)",
+                self.pos,
+                self.batches.len()
+            )
+        });
+        assert_eq!(
+            rec.mode, batch.mode,
+            "replay divergence at batch {}: batch mode changed",
+            self.pos
+        );
+        assert_eq!(
+            rec.requests.len(),
+            batch.len(),
+            "replay divergence at batch {}: batch size changed",
+            self.pos
+        );
+        for (k, (recorded, live)) in rec.requests.iter().zip(&batch.requests).enumerate() {
+            assert!(
+                recorded.matches(live),
+                "replay divergence at batch {} request {k}: recorded {recorded:?}, \
+                 session asked {live:?}",
+                self.pos
+            );
+        }
+        self.pos += 1;
+        rec.values
+            .iter()
+            .map(|&value| MeasurementResult { value })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn header() -> TraceHeader {
+        TraceHeader {
+            algo: "CEAL".into(),
+            workflow: "LV".into(),
+            objective: "comp_time".into(),
+            m: 10,
+            pool_size: 100,
+            seed: 0xCEA1,
+            scorer: "native".into(),
+            ceal_params: None,
+        }
+    }
+
+    struct Fixed(f64);
+    impl Evaluator for Fixed {
+        fn evaluate(&mut self, batch: &MeasurementBatch) -> Vec<MeasurementResult> {
+            batch
+                .requests
+                .iter()
+                .map(|_| MeasurementResult { value: self.0 })
+                .collect()
+        }
+    }
+
+    fn wf_req(i: usize) -> MeasurementRequest {
+        MeasurementRequest::Workflow {
+            pool_idx: i,
+            config: crate::config::Config(vec![]),
+        }
+    }
+
+    #[test]
+    fn record_then_replay_roundtrips() {
+        let mut inner = Fixed(2.25);
+        let mut buf: Vec<u8> = Vec::new();
+        let mut rec = TraceRecorder::new(&mut inner, &mut buf, &header()).unwrap();
+        let b0 = MeasurementBatch::sequential(vec![MeasurementRequest::Component {
+            comp: 1,
+            config: vec![4, 8],
+        }]);
+        let b1 = MeasurementBatch::fan_out(vec![wf_req(3), wf_req(17)]);
+        let r0 = rec.evaluate(&b0);
+        let r1 = rec.evaluate(&b1);
+        assert_eq!(rec.batches_written(), 2);
+        rec.finish().unwrap();
+
+        let text = String::from_utf8(buf).unwrap();
+        let mut rep = TraceReplayer::parse(&text).unwrap();
+        assert_eq!(rep.header, header());
+        assert_eq!(rep.batches().len(), 2);
+        assert_eq!(rep.evaluate(&b0), r0);
+        assert_eq!(rep.evaluate(&b1), r1);
+        assert_eq!(rep.remaining(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "replay divergence")]
+    fn replay_rejects_diverging_requests() {
+        let mut inner = Fixed(1.0);
+        let mut buf: Vec<u8> = Vec::new();
+        let mut rec = TraceRecorder::new(&mut inner, &mut buf, &header()).unwrap();
+        rec.evaluate(&MeasurementBatch::fan_out(vec![wf_req(3)]));
+        rec.finish().unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        let mut rep = TraceReplayer::parse(&text).unwrap();
+        rep.evaluate(&MeasurementBatch::fan_out(vec![wf_req(4)]));
+    }
+
+    #[test]
+    fn header_with_params_roundtrips() {
+        let mut h = header();
+        h.ceal_params = Some(CealParams {
+            iterations: 4,
+            m0_frac: 0.125,
+            mr_frac: 0.25,
+        });
+        let parsed = TraceHeader::from_json(&json::parse(&h.to_json().compact()).unwrap()).unwrap();
+        assert_eq!(parsed, h);
+    }
+
+    #[test]
+    fn wrong_format_and_version_are_rejected() {
+        assert!(TraceReplayer::parse("{\"hello\": 1}")
+            .unwrap_err()
+            .contains("not a ceal-session-trace"));
+        let mut h = header().to_json().compact();
+        h = h.replace("\"version\":1", "\"version\":2");
+        let err = TraceReplayer::parse(&h).unwrap_err();
+        assert!(err.contains("version 2"), "{err}");
+        assert!(err.contains("re-record"), "{err}");
+    }
+}

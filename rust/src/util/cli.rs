@@ -79,6 +79,11 @@ impl Args {
         }
     }
 
+    /// Path-valued option (`--record trace.jsonl`), `None` when absent.
+    pub fn opt_path(&self, name: &str) -> Option<std::path::PathBuf> {
+        self.opt(name).map(std::path::PathBuf::from)
+    }
+
     pub fn opt_u64(&self, name: &str, default: u64) -> Result<u64, String> {
         match self.opt(name) {
             None => Ok(default),
@@ -126,6 +131,16 @@ mod tests {
         let a = parse(&["x", "--m", "abc"]);
         assert!(a.opt_usize("m", 1).is_err());
         assert!(a.opt_f64("m", 1.0).is_err());
+    }
+
+    #[test]
+    fn path_options() {
+        let a = parse(&["tune", "--record", "t.jsonl"]);
+        assert_eq!(
+            a.opt_path("record"),
+            Some(std::path::PathBuf::from("t.jsonl"))
+        );
+        assert_eq!(a.opt_path("replay"), None);
     }
 
     #[test]

@@ -68,6 +68,44 @@ impl Json {
         out
     }
 
+    /// Serialize on one line with no whitespace — the JSON-lines form
+    /// used by the session trace files.  Numbers round-trip exactly:
+    /// integral values print as integers, everything else through
+    /// Rust's shortest-round-trip float formatting.
+    pub fn compact(&self) -> String {
+        let mut out = String::new();
+        self.write_compact(&mut out);
+        out
+    }
+
+    fn write_compact(&self, out: &mut String) {
+        match self {
+            Json::Null | Json::Bool(_) | Json::Num(_) | Json::Str(_) => self.write(out, 0),
+            Json::Arr(a) => {
+                out.push('[');
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.write_compact(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_escaped(out, k);
+                    out.push(':');
+                    v.write_compact(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+
     fn write(&self, out: &mut String, indent: usize) {
         let pad = "  ".repeat(indent);
         let pad1 = "  ".repeat(indent + 1);
@@ -371,6 +409,21 @@ mod tests {
         let v = parse(text).unwrap();
         let reparsed = parse(&v.pretty()).unwrap();
         assert_eq!(v, reparsed);
+    }
+
+    #[test]
+    fn compact_roundtrips_and_is_one_line() {
+        let v = Json::obj(vec![
+            ("ys", Json::arr_f64(&[1.5, 3.0, -0.0625])),
+            ("mode", Json::Str("seq".into())),
+            ("batch", Json::Num(0.0)),
+        ]);
+        let text = v.compact();
+        assert!(!text.contains('\n'));
+        assert!(!text.contains(' '));
+        assert_eq!(parse(&text).unwrap(), v);
+        // key order is BTreeMap-alphabetical, so the encoding is stable
+        assert_eq!(text, r#"{"batch":0,"mode":"seq","ys":[1.5,3,-0.0625]}"#);
     }
 
     #[test]

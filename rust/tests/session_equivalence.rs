@@ -1,0 +1,305 @@
+//! Equivalence pinning for the ask/tell redesign: every algorithm,
+//! driven stepwise through `drive(session, Collector)`, must produce a
+//! `TunerOutput` bit-identical to the frozen monolithic reference
+//! loops in `ceal::tuner::legacy` — measured set, searcher pick, cost
+//! accounting and final-model predictions alike — across the paper
+//! trio and the registry-added scenarios.  Also pins replay == record
+//! for the trace evaluator and the session diagnostics sink.
+
+use std::sync::Arc;
+
+use ceal::config::WorkflowId;
+use ceal::coordinator::historical_samples;
+use ceal::sim::Objective;
+use ceal::surrogate::Scorer;
+use ceal::tuner::{
+    drive, legacy, ActiveLearning, Alph, BudgetedCeal, BudgetedCealParams, Ceal, CealParams,
+    Collector, DiagSink, Evaluator, Geist, Pool, Problem, RandomSampling, TraceHeader,
+    TraceRecorder, TraceReplayer, Tuner, TunerOutput,
+};
+use ceal::util::rng::Pcg32;
+
+/// The full bit-identity check: the measured trajectory, the searcher
+/// pick, the accounting, and the final model's predictions over the
+/// whole pool.
+fn assert_outputs_identical(label: &str, a: &TunerOutput, b: &TunerOutput, pool: &Pool) {
+    assert_eq!(a.measured, b.measured, "{label}: measured trajectories diverge");
+    assert_eq!(a.best_idx, b.best_idx, "{label}: searcher picks diverge");
+    assert_eq!(
+        a.collection_cost.to_bits(),
+        b.collection_cost.to_bits(),
+        "{label}: collection cost diverges ({} vs {})",
+        a.collection_cost,
+        b.collection_cost
+    );
+    assert_eq!(a.workflow_runs, b.workflow_runs, "{label}: run counts diverge");
+    // trained ensembles compare structurally (trees, thresholds, leaf
+    // values) — stronger than prediction equality
+    assert_eq!(a.model, b.model, "{label}: final models diverge");
+    let scorer = Scorer::Native;
+    let pa = scorer.score(&a.model, &pool.feats.workflow);
+    let pb = scorer.score(&b.model, &pool.feats.workflow);
+    for (i, (x, y)) in pa.iter().zip(&pb).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{label}: model predictions diverge at pool row {i}"
+        );
+    }
+}
+
+/// The five pinned cells: paper trio + the synthetic registry
+/// scenarios, alternating objectives so both max- and sum-combined
+/// low-fidelity models are exercised.
+fn cells() -> Vec<(WorkflowId, Objective)> {
+    vec![
+        (WorkflowId::LV, Objective::CompTime),
+        (WorkflowId::HS, Objective::ExecTime),
+        (WorkflowId::GP, Objective::CompTime),
+        (WorkflowId::CH5, Objective::ExecTime),
+        (WorkflowId::DM4, Objective::ExecTime),
+    ]
+}
+
+#[test]
+fn every_algorithm_matches_legacy_on_every_workflow() {
+    let scorer = Scorer::Native;
+    let m = 20;
+    for (k, (wf, obj)) in cells().into_iter().enumerate() {
+        let prob = Problem::new(wf, obj);
+        let pool = Pool::generate(&prob, 120, 0x5E55 + k as u64);
+        let seed = 0xA11C + k as u64;
+        let pair = |stream: u64| (Pcg32::new(seed, stream), Pcg32::new(seed, stream));
+
+        // RS
+        let (mut r1, mut r2) = pair(1);
+        let old = legacy::run_rs(&prob, &pool, &scorer, m, &mut r1);
+        let new = RandomSampling.run(&prob, &pool, &scorer, m, &mut r2);
+        assert_outputs_identical(&format!("RS/{wf}"), &old, &new, &pool);
+
+        // AL
+        let al = ActiveLearning::default();
+        let (mut r1, mut r2) = pair(2);
+        let old = legacy::run_al(&al, &prob, &pool, &scorer, m, &mut r1);
+        let new = al.run(&prob, &pool, &scorer, m, &mut r2);
+        assert_outputs_identical(&format!("AL/{wf}"), &old, &new, &pool);
+
+        // GEIST
+        let geist = Geist::default();
+        let (mut r1, mut r2) = pair(3);
+        let old = legacy::run_geist(&geist, &prob, &pool, &scorer, m, &mut r1);
+        let new = geist.run(&prob, &pool, &scorer, m, &mut r2);
+        assert_outputs_identical(&format!("GEIST/{wf}"), &old, &new, &pool);
+
+        // CEAL (fresh component runs)
+        let ceal = Ceal::new(CealParams::no_hist());
+        let (mut r1, mut r2) = pair(4);
+        let old = legacy::run_ceal(&ceal, &prob, &pool, &scorer, m, &mut r1);
+        let new = ceal.run(&prob, &pool, &scorer, m, &mut r2);
+        assert_outputs_identical(&format!("CEAL/{wf}"), &old, &new, &pool);
+
+        // CEAL + historical component measurements
+        let hist = Arc::new(historical_samples(&prob, 60, seed ^ 0x415));
+        let ceal_h = Ceal::with_historical(CealParams::with_hist(), Arc::clone(&hist));
+        let (mut r1, mut r2) = pair(5);
+        let old = legacy::run_ceal(&ceal_h, &prob, &pool, &scorer, m, &mut r1);
+        let new = ceal_h.run(&prob, &pool, &scorer, m, &mut r2);
+        assert_outputs_identical(&format!("CEAL+hist/{wf}"), &old, &new, &pool);
+
+        // ALpH (and its hist variant shares the same loop body)
+        let alph = Alph::new(CealParams::no_hist());
+        let (mut r1, mut r2) = pair(6);
+        let old = legacy::run_alph(&alph, &prob, &pool, &scorer, m, &mut r1);
+        let new = alph.run(&prob, &pool, &scorer, m, &mut r2);
+        assert_outputs_identical(&format!("ALpH/{wf}"), &old, &new, &pool);
+
+        let alph_h = Alph::with_historical(CealParams::with_hist(), hist);
+        let (mut r1, mut r2) = pair(7);
+        let old = legacy::run_alph(&alph_h, &prob, &pool, &scorer, m, &mut r1);
+        let new = alph_h.run(&prob, &pool, &scorer, m, &mut r2);
+        assert_outputs_identical(&format!("ALpH+hist/{wf}"), &old, &new, &pool);
+
+        // budgeted CEAL (cost budget in objective units)
+        let budgeted = BudgetedCeal::new(BudgetedCealParams::default());
+        let budget = 60.0 * prob.objective.value(&prob.sim.expected(&pool.configs[0])).max(1.0);
+        let (mut r1, mut r2) = pair(8);
+        let old = legacy::run_budgeted(&budgeted, &prob, &pool, &scorer, budget, &mut r1);
+        let new = budgeted.run_with_cost_budget(&prob, &pool, &scorer, budget, &mut r2);
+        assert_outputs_identical(&format!("budgeted/{wf}"), &old, &new, &pool);
+    }
+}
+
+/// Replay must reproduce a recorded session exactly: identical output,
+/// every recorded batch consumed, no simulator involved the second
+/// time.
+#[test]
+fn replay_equals_record() {
+    for (tuner, stream) in [
+        (
+            Box::new(Ceal::new(CealParams::no_hist())) as Box<dyn Tuner>,
+            21u64,
+        ),
+        (Box::new(Geist::default()) as Box<dyn Tuner>, 22),
+    ] {
+        let prob = Problem::new(WorkflowId::LV, Objective::CompTime);
+        let pool = Pool::generate(&prob, 100, 77);
+        let scorer = Scorer::Native;
+        let m = 18;
+        let header = TraceHeader {
+            algo: tuner.name().into(),
+            workflow: "LV".into(),
+            objective: "comp_time".into(),
+            m,
+            pool_size: 100,
+            seed: 77,
+            scorer: "native".into(),
+            ceal_params: None,
+        };
+
+        // record against the simulator collector
+        let mut rng = Pcg32::new(77, stream);
+        let mut col = Collector::new(&prob, rng.derive_str("collector"));
+        let mut buf: Vec<u8> = Vec::new();
+        let mut recorder = TraceRecorder::new(&mut col, &mut buf, &header).unwrap();
+        let recorded = drive(
+            tuner.session(&prob, &pool, &scorer, m, &mut rng),
+            &mut recorder,
+        );
+        recorder.finish().unwrap();
+
+        // replay from the trace alone
+        let text = String::from_utf8(buf).unwrap();
+        let mut replayer = TraceReplayer::parse(&text).unwrap();
+        assert_eq!(replayer.header.algo, tuner.name());
+        let mut rng2 = Pcg32::new(77, stream);
+        let replayed = drive(
+            tuner.session(&prob, &pool, &scorer, m, &mut rng2),
+            &mut replayer,
+        );
+        assert_eq!(replayer.remaining(), 0, "{}: unconsumed batches", tuner.name());
+        assert_outputs_identical(
+            &format!("replay/{}", tuner.name()),
+            &recorded,
+            &replayed,
+            &pool,
+        );
+
+        // and the recorded path itself equals a plain simulator run
+        let mut rng3 = Pcg32::new(77, stream);
+        let direct = tuner.run(&prob, &pool, &scorer, m, &mut rng3);
+        assert_outputs_identical(
+            &format!("record/{}", tuner.name()),
+            &direct,
+            &recorded,
+            &pool,
+        );
+    }
+}
+
+/// A problem whose pool was generated on the real machine but whose
+/// component spaces were made infeasible afterwards: sessions must
+/// *surface* the warning on the chosen sink instead of printing it.
+fn infeasible_component_problem() -> (Problem, Pool) {
+    let prob = Problem::new(WorkflowId::LV, Objective::CompTime);
+    let pool = Pool::generate(&prob, 80, 909);
+    let mut prob = prob;
+    // no allocation fits any more: every isolated-run sample errors,
+    // while workflow measurements (which never re-check feasibility)
+    // still run
+    prob.sim.machine.max_nodes = 0;
+    (prob, pool)
+}
+
+#[test]
+fn infeasible_warnings_are_captured_not_printed() {
+    let (prob, pool) = infeasible_component_problem();
+    let scorer = Scorer::Native;
+
+    // CEAL session with a capturing sink
+    let tuner = Ceal::new(CealParams::no_hist());
+    let mut rng = Pcg32::new(5, 5);
+    let mut session = tuner.session(&prob, &pool, &scorer, 15, &mut rng);
+    session.set_diag_sink(DiagSink::Capture);
+    let mut col = Collector::new(&prob, Pcg32::new(6, 6));
+    loop {
+        let batch = session.ask();
+        if batch.is_empty() {
+            break;
+        }
+        let results = col.evaluate(&batch);
+        session.tell(&results);
+    }
+    let diags = session.diagnostics();
+    assert!(!diags.is_empty(), "infeasible spaces must surface a warning");
+    assert!(
+        diags[0].contains("no feasible configuration"),
+        "warning should carry the cause: {}",
+        diags[0]
+    );
+    assert!(
+        diags[0].contains("skipping its isolated runs"),
+        "warning should carry the consequence: {}",
+        diags[0]
+    );
+    // the campaign still completes on workflow data alone
+    let out = session.finish();
+    assert!(out.best_idx < pool.len());
+    assert!(out.workflow_runs > 0);
+
+    // silent sink: nothing captured, session still completes
+    let mut rng = Pcg32::new(7, 7);
+    let mut session = tuner.session(&prob, &pool, &scorer, 15, &mut rng);
+    session.set_diag_sink(DiagSink::Silent);
+    let mut col = Collector::new(&prob, Pcg32::new(8, 8));
+    loop {
+        let batch = session.ask();
+        if batch.is_empty() {
+            break;
+        }
+        let results = col.evaluate(&batch);
+        session.tell(&results);
+    }
+    assert!(session.diagnostics().is_empty(), "silent sink must not capture");
+
+    // budgeted CEAL surfaces the same warnings through its sink
+    let budgeted = BudgetedCeal::new(BudgetedCealParams::default());
+    let mut rng = Pcg32::new(9, 9);
+    let mut session = budgeted.session_with_cost_budget(&prob, &pool, &scorer, 200.0, &mut rng);
+    session.set_diag_sink(DiagSink::Capture);
+    let mut col = Collector::new(&prob, Pcg32::new(10, 10));
+    loop {
+        let batch = session.ask();
+        if batch.is_empty() {
+            break;
+        }
+        let results = col.evaluate(&batch);
+        session.tell(&results);
+    }
+    // one warning per configurable component (each skips only itself)
+    assert_eq!(
+        session.diagnostics().len(),
+        prob.sim.spec.configurable().len(),
+        "budgeted: one warning per infeasible component"
+    );
+}
+
+/// The ALpH session shares CEAL's phase-1; its warnings route through
+/// the same sink.
+#[test]
+fn alph_warnings_are_captured() {
+    let (prob, pool) = infeasible_component_problem();
+    let tuner = Alph::new(CealParams::no_hist());
+    let mut rng = Pcg32::new(11, 11);
+    let mut session = tuner.session(&prob, &pool, &Scorer::Native, 15, &mut rng);
+    session.set_diag_sink(DiagSink::Capture);
+    let mut col = Collector::new(&prob, Pcg32::new(12, 12));
+    loop {
+        let batch = session.ask();
+        if batch.is_empty() {
+            break;
+        }
+        let results = col.evaluate(&batch);
+        session.tell(&results);
+    }
+    assert!(!session.diagnostics().is_empty());
+}

@@ -1,0 +1,113 @@
+//! Trace-format stability tests: a checked-in version-1 fixture must
+//! keep replaying on every future build, and a trace written by a
+//! *newer* format version must be rejected with a clear error instead
+//! of being replayed into garbage results.
+
+use std::path::PathBuf;
+
+use ceal::config::Config;
+use ceal::tuner::trace::RecordedRequest;
+use ceal::tuner::{
+    BatchMode, Evaluator, MeasurementBatch, MeasurementRequest, TraceReplayer, TRACE_VERSION,
+};
+
+fn fixture_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/session_trace_v1.jsonl")
+}
+
+fn fixture_text() -> String {
+    std::fs::read_to_string(fixture_path()).expect("fixture readable")
+}
+
+/// Rebuild live requests from a recorded batch (workflow requests
+/// match on pool index alone; the carried config is driver payload).
+fn live_requests(rec: &[RecordedRequest]) -> Vec<MeasurementRequest> {
+    rec.iter()
+        .map(|r| match r {
+            RecordedRequest::Workflow { pool_idx } => MeasurementRequest::Workflow {
+                pool_idx: *pool_idx,
+                config: Config(vec![]),
+            },
+            RecordedRequest::Component { comp, config } => MeasurementRequest::Component {
+                comp: *comp,
+                config: config.clone(),
+            },
+        })
+        .collect()
+}
+
+#[test]
+fn checked_in_v1_fixture_replays() {
+    assert_eq!(TRACE_VERSION, 1, "bump the fixture alongside the version");
+    let mut rep = TraceReplayer::load(&fixture_path()).expect("fixture parses");
+    assert_eq!(rep.header.algo, "CEAL");
+    assert_eq!(rep.header.workflow, "LV");
+    assert_eq!(rep.header.objective, "comp_time");
+    assert_eq!(rep.header.m, 4);
+    assert_eq!(rep.header.pool_size, 50);
+    assert_eq!(rep.header.seed, 51905);
+    assert_eq!(rep.header.scorer, "native");
+    assert_eq!(rep.header.ceal_params, None);
+    assert_eq!(rep.batches().len(), 3);
+    assert_eq!(rep.batches()[0].mode, BatchMode::Sequential);
+    assert_eq!(rep.batches()[1].mode, BatchMode::FanOut);
+    assert_eq!(
+        rep.batches()[0].requests[0],
+        RecordedRequest::Component {
+            comp: 0,
+            config: vec![430, 8, 2, 50],
+        }
+    );
+
+    // serve every batch back and check the recorded values survive the
+    // round-trip exactly (integral and fractional alike)
+    let recorded: Vec<_> = rep.batches().to_vec();
+    for batch in &recorded {
+        let live = MeasurementBatch {
+            mode: batch.mode,
+            requests: live_requests(&batch.requests),
+        };
+        let results = rep.evaluate(&live);
+        let values: Vec<f64> = results.iter().map(|r| r.value).collect();
+        assert_eq!(values, batch.values);
+    }
+    assert_eq!(rep.remaining(), 0);
+    assert_eq!(recorded[2].values, [97.0625]);
+}
+
+#[test]
+fn bumped_version_is_rejected_with_clear_error() {
+    let newer = fixture_text().replace("\"version\":1", "\"version\":2");
+    assert_ne!(newer, fixture_text(), "replacement must hit");
+    let err = TraceReplayer::parse(&newer).unwrap_err();
+    assert!(err.contains("version 2"), "error names the trace version: {err}");
+    assert!(
+        err.contains("version 1") && err.contains("re-record"),
+        "error tells the user what to do: {err}"
+    );
+}
+
+#[test]
+fn non_trace_files_are_rejected() {
+    assert!(TraceReplayer::parse("").is_err());
+    let err = TraceReplayer::parse("{\"workflow\": \"LV\"}").unwrap_err();
+    assert!(err.contains("ceal-session-trace"), "{err}");
+    // a truncated/corrupt batch line is a parse error, not garbage
+    let garbled = format!("{}{}", fixture_text(), "{\"batch\":3,\"mode\":\"seq\"\n");
+    assert!(TraceReplayer::parse(&garbled).is_err());
+}
+
+#[test]
+#[should_panic(expected = "trace exhausted")]
+fn over_reading_a_trace_panics() {
+    let mut rep = TraceReplayer::load(&fixture_path()).unwrap();
+    let recorded: Vec<_> = rep.batches().to_vec();
+    for batch in &recorded {
+        let live = MeasurementBatch {
+            mode: batch.mode,
+            requests: live_requests(&batch.requests),
+        };
+        rep.evaluate(&live);
+    }
+    rep.evaluate(&MeasurementBatch::sequential(vec![]));
+}
