@@ -74,6 +74,26 @@ fn main() {
         });
     }
 
+    // Fault-injected CEAL at the sweep cell: retry/backoff, the
+    // outlier gate and the injector's per-request fate derivation all
+    // sit on the measurement path, so their overhead vs the clean
+    // session row above is the cost of fault tolerance.
+    {
+        use ceal::tuner::{drive, Collector, FailurePolicy, FaultInjector, FaultPlan};
+        let tuner = Ceal::new(CealParams::no_hist());
+        let mut rep = 0u64;
+        b.bench("tuner/CEAL/LV_m30_pool1000_faults20", || {
+            rep += 1;
+            let mut rng = Pcg32::new(0xD1CE ^ rep, 0);
+            let mut col = Collector::new(&sweep_prob, rng.derive_str("collector"));
+            let mut session = tuner.session(&sweep_prob, &sweep_pool, &scorer, 30, &mut rng);
+            session.set_failure_policy(FailurePolicy::fault_tolerant());
+            let mut injector =
+                FaultInjector::new(&mut col, FaultPlan::transient(0.2, 0.05), 7 ^ rep);
+            drive(session, &mut injector)
+        });
+    }
+
     // Registry-added scenario cells (CEAL vs RS) so new-workflow wiring
     // shows up in every bench run: the CH5 deep chain and DM4 diamond.
     for id in [WorkflowId::CH5, WorkflowId::DM4] {

@@ -10,8 +10,8 @@ use crate::metrics::{least_number_of_uses, mdape, mdape_top_fraction, recall_sco
 use crate::sim::Objective;
 use crate::surrogate::Scorer;
 use crate::tuner::{
-    drive, ActiveLearning, Alph, Ceal, CealParams, Collector, Pool, Problem, RandomSampling,
-    Tuner, TunerOutput,
+    drive, ActiveLearning, Alph, Ceal, CealParams, Collector, FailurePolicy, FaultInjector,
+    FaultSpec, Pool, Problem, RandomSampling, Tuner, TunerOutput,
 };
 use crate::util::rng::Pcg32;
 use crate::util::stats;
@@ -132,6 +132,12 @@ pub struct Campaign {
     pub threads: usize,
     /// Override CEAL/ALpH hyper-parameters (Fig. 13 sweeps).
     pub ceal_params: Option<CealParams>,
+    /// Inject deterministic measurement faults into every repetition
+    /// (robustness studies).  Each rep gets its own schedule stream via
+    /// [`FaultSpec::seed_for_rep`], so rep-level parallelism cannot
+    /// reorder fault schedules, and sessions run with
+    /// [`FailurePolicy::fault_tolerant`].
+    pub faults: Option<FaultSpec>,
 }
 
 impl Campaign {
@@ -146,6 +152,7 @@ impl Campaign {
             scorer: ScorerKind::Native,
             threads: default_threads(),
             ceal_params: None,
+            faults: None,
         }
     }
 
@@ -178,6 +185,11 @@ impl Campaign {
         self.ceal_params = Some(p);
         self
     }
+
+    pub fn with_faults(mut self, spec: FaultSpec) -> Campaign {
+        self.faults = Some(spec);
+        self
+    }
 }
 
 /// Default campaign worker width: `CEAL_THREADS` when set, else the
@@ -199,9 +211,13 @@ pub struct RepResult {
     /// Final-model MdAPE over all pool configs and the top 2% (Fig. 6).
     pub mdape_all: f64,
     pub mdape_top2: f64,
-    /// Collection cost (Σ objective over training runs, §7.2.3).
+    /// Collection cost (Σ objective over training runs, §7.2.3),
+    /// including retry/backoff charges for failed attempts.
     pub cost: f64,
     pub workflow_runs: usize,
+    /// Measurement attempts that failed or timed out (0 without
+    /// fault injection).
+    pub failed_runs: usize,
 }
 
 /// Aggregated campaign outcome.
@@ -309,7 +325,15 @@ fn run_rep(
 ) -> RepResult {
     let mut rng = session_rng(c.seed, algo, rep);
     let mut col = Collector::new(prob, rng.derive_str("collector"));
-    let out: TunerOutput = drive(tuner.session(prob, pool, scorer, c.m, &mut rng), &mut col);
+    let mut session = tuner.session(prob, pool, scorer, c.m, &mut rng);
+    let out: TunerOutput = match &c.faults {
+        Some(spec) if !spec.plan.is_none() => {
+            session.set_failure_policy(FailurePolicy::fault_tolerant());
+            let mut injector = FaultInjector::new(&mut col, spec.plan, spec.seed_for_rep(rep));
+            drive(session, &mut injector)
+        }
+        _ => drive(session, &mut col),
+    };
     // models are log-space: exponentiate to real-scale time predictions
     let preds = crate::tuner::common::predict_times(&out.model, &pool.feats.workflow, scorer);
     let recalls: Vec<f64> = (1..=10)
@@ -323,6 +347,7 @@ fn run_rep(
         mdape_top2: mdape_top_fraction(&pool.truth, &preds, 0.02),
         cost: out.collection_cost,
         workflow_runs: out.workflow_runs,
+        failed_runs: out.failed_runs,
     }
 }
 
@@ -457,6 +482,31 @@ mod tests {
             assert_eq!(a.best_value, b.best_value, "reps must be thread-count invariant");
             assert_eq!(a.workflow_runs, b.workflow_runs);
         }
+    }
+
+    /// Fault schedules are per-rep streams, so faulted campaigns stay
+    /// bit-identical across worker counts — the thread-invariance
+    /// guarantee survives fault injection.
+    #[test]
+    fn faulted_campaign_is_thread_invariant() {
+        use crate::tuner::FaultPlan;
+        let base = Campaign::new(WorkflowId::LV, Objective::CompTime, 15)
+            .with_reps(4)
+            .with_pool_size(100)
+            .with_faults(FaultSpec {
+                plan: FaultPlan::transient(0.2, 0.05),
+                seed: 7,
+            });
+        let seq = run_campaign(Algo::Ceal, &base.with_threads(1));
+        let par = run_campaign(Algo::Ceal, &base.with_threads(4));
+        let mut any_failed = false;
+        for (a, b) in seq.reps.iter().zip(&par.reps) {
+            assert_eq!(a.best_value, b.best_value, "thread-count invariant");
+            assert_eq!(a.cost, b.cost);
+            assert_eq!(a.failed_runs, b.failed_runs);
+            any_failed |= a.failed_runs > 0;
+        }
+        assert!(any_failed, "a 20% fault rate should hit at least one attempt");
     }
 
     #[test]

@@ -14,6 +14,7 @@ pub mod fig10;
 pub mod fig11;
 pub mod fig12;
 pub mod fig13;
+pub mod robustness;
 pub mod table1;
 pub mod table2;
 
@@ -34,6 +35,7 @@ pub fn run_all(ctx: &ExpCtx) {
     fig12::run(ctx);
     fig13::run(ctx);
     ablations::run(ctx);
+    robustness::run(ctx);
 }
 
 /// Dispatch a single figure by number.

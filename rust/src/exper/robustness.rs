@@ -1,0 +1,95 @@
+//! Robustness sweep: tuned-quality degradation under measurement
+//! faults.  Every registered algorithm runs the LV/comp-time cell
+//! under increasing failure rates (crash/transport + timeout + the
+//! plan's light straggler/corruption tail — see
+//! [`FaultPlan::transient`]), with the fault-tolerant failure policy
+//! armed.  The headline artifact `robustness_degradation.csv` plots
+//! normalized tuned quality and collection cost (including retry
+//! charges) against the fault rate.
+//!
+//! Not a paper figure: the paper assumes reliable measurements; this
+//! sweep characterizes how gracefully each algorithm degrades when
+//! that assumption breaks.
+
+use crate::config::WorkflowId;
+use crate::coordinator::Algo;
+use crate::sim::Objective;
+use crate::tuner::{FaultPlan, FaultSpec};
+use crate::util::csv::CsvWriter;
+use crate::util::stats;
+use crate::util::table::{fnum, Table};
+
+use super::common::{banner, ExpCtx};
+
+/// Failure probabilities swept (timeouts ride along at a quarter of
+/// each rate, matching the CLI's transient plan shape).
+pub const FAIL_RATES: [f64; 5] = [0.0, 0.05, 0.1, 0.2, 0.3];
+
+pub fn run(ctx: &ExpCtx) {
+    banner(
+        "Robustness — tuned quality vs measurement-failure rate",
+        "fault-tolerance study (no paper counterpart)",
+    );
+    let (wf, obj, m) = (WorkflowId::LV, Objective::CompTime, 25);
+    let mut t = Table::new(&[
+        "algo", "p_fail", "norm best", "cost", "failed/rep", "recall@1",
+    ])
+    .align_left(&[0]);
+    let mut csv = CsvWriter::new(&[
+        "workflow",
+        "objective",
+        "m",
+        "algo",
+        "p_fail",
+        "p_timeout",
+        "norm_best",
+        "cost",
+        "failed_runs_mean",
+        "recall1",
+        "mdape_all",
+    ]);
+    for algo in Algo::ALL {
+        for rate in FAIL_RATES {
+            let p_timeout = rate / 4.0;
+            let mut campaign = ctx.campaign(wf, obj, m);
+            if rate > 0.0 {
+                campaign = campaign.with_faults(FaultSpec {
+                    plan: FaultPlan::transient(rate, p_timeout),
+                    // decouple the fault schedule from every other
+                    // seed consumer at this cell
+                    seed: ctx.seed ^ 0xFA17,
+                });
+            }
+            let agg = crate::coordinator::run_campaign(algo, &campaign);
+            let failed_mean = stats::mean(
+                &agg.reps
+                    .iter()
+                    .map(|r| r.failed_runs as f64)
+                    .collect::<Vec<_>>(),
+            );
+            t.row(&[
+                algo.name().into(),
+                fnum(rate, 2),
+                fnum(agg.mean_norm_best(), 3),
+                fnum(agg.mean_cost(), 2),
+                fnum(failed_mean, 1),
+                fnum(agg.mean_recall(1), 2),
+            ]);
+            csv.row(&[
+                wf.name().into(),
+                obj.name().into(),
+                m.to_string(),
+                algo.name().into(),
+                rate.to_string(),
+                p_timeout.to_string(),
+                format!("{}", agg.mean_norm_best()),
+                format!("{}", agg.mean_cost()),
+                format!("{failed_mean}"),
+                format!("{}", agg.mean_recall(1)),
+                format!("{}", agg.mean_mdape_all()),
+            ]);
+        }
+    }
+    print!("{}", t.render());
+    ctx.save_csv("robustness_degradation.csv", &csv);
+}

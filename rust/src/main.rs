@@ -25,7 +25,13 @@
 //!   --replay PATH     re-run a recorded session from its trace alone
 //!                     (no simulator measurements; settings come from
 //!                     the trace header)
+//!   --faults F,T,S    inject deterministic measurement faults:
+//!                     failure probability F, timeout probability T,
+//!                     schedule seed S (see README "Failure semantics")
 //! ```
+//!
+//! `ceal robustness` runs the quality-vs-failure-rate degradation
+//! sweep (all algorithms under increasing fault rates).
 
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
@@ -35,7 +41,8 @@ use ceal::coordinator::{run_campaign, session_rng, tuner_for, Algo, PoolCache, S
 use ceal::exper::{self, ExpCtx};
 use ceal::sim::{Objective, WorkflowRegistry};
 use ceal::tuner::{
-    drive, Collector, Pool, Problem, TraceHeader, TraceRecorder, TraceReplayer, TunerOutput,
+    drive, Collector, FailurePolicy, FaultInjector, FaultPlan, FaultSpec, Pool, Problem,
+    TraceHeader, TraceRecorder, TraceReplayer, TunerOutput,
 };
 use ceal::util::cli::Args;
 use ceal::util::csv::CsvWriter;
@@ -97,6 +104,7 @@ fn run() -> Result<(), String> {
         }
         Some("all") => exper::run_all(&ctx),
         Some("ablation") => exper::ablations::run(&ctx),
+        Some("robustness") => exper::robustness::run(&ctx),
         Some("tune") => tune(&args, &ctx)?,
         Some("info") => info(),
         other => {
@@ -125,6 +133,38 @@ fn ceal_overrides(args: &Args, algo: Algo) -> Result<Option<ceal::tuner::CealPar
     }))
 }
 
+/// `--faults p_fail,p_timeout,seed`: the CLI's transient fault plan
+/// (crashes/transport losses at `p_fail`, timeouts at `p_timeout`,
+/// plus the plan's light straggler/corruption tail), scheduled by a
+/// dedicated seed so fault schedules and session RNG never alias.
+fn parse_faults(args: &Args) -> Result<Option<FaultSpec>, String> {
+    let Some(spec) = args.opt("faults") else {
+        return Ok(None);
+    };
+    let parts: Vec<&str> = spec.split(',').collect();
+    if parts.len() != 3 {
+        return Err(format!(
+            "--faults wants p_fail,p_timeout,seed (got '{spec}')"
+        ));
+    }
+    let p_fail: f64 = parts[0]
+        .parse()
+        .map_err(|e| format!("bad --faults p_fail '{}': {e}", parts[0]))?;
+    let p_timeout: f64 = parts[1]
+        .parse()
+        .map_err(|e| format!("bad --faults p_timeout '{}': {e}", parts[1]))?;
+    let seed: u64 = parts[2]
+        .parse()
+        .map_err(|e| format!("bad --faults seed '{}': {e}", parts[2]))?;
+    if !(0.0..=1.0).contains(&p_fail) || !(0.0..=1.0).contains(&p_timeout) {
+        return Err("--faults probabilities must be within [0,1]".into());
+    }
+    Ok(Some(FaultSpec {
+        plan: FaultPlan::transient(p_fail, p_timeout),
+        seed,
+    }))
+}
+
 fn tune(args: &Args, ctx: &ExpCtx) -> Result<(), String> {
     if let Some(path) = args.opt_path("replay") {
         return replay_session(args, ctx, &path);
@@ -147,6 +187,7 @@ fn tune(args: &Args, ctx: &ExpCtx) -> Result<(), String> {
     })?;
     let m = args.opt_usize("m", 50)?;
     let overrides = ceal_overrides(args, algo)?;
+    let faults = parse_faults(args)?;
 
     if let Some(path) = args.opt_path("record") {
         let header = TraceHeader {
@@ -158,6 +199,7 @@ fn tune(args: &Args, ctx: &ExpCtx) -> Result<(), String> {
             seed: ctx.seed,
             scorer: ctx.scorer.name().into(),
             ceal_params: overrides,
+            faults,
         };
         return run_single_session(ctx, &header, Some(path.as_path()), None);
     }
@@ -166,6 +208,12 @@ fn tune(args: &Args, ctx: &ExpCtx) -> Result<(), String> {
         "tuning {wf} for {obj} with {algo}, m={m}, pool={}, reps={}, scorer={:?}",
         ctx.pool_size, ctx.reps, ctx.scorer
     );
+    if let Some(spec) = &faults {
+        println!(
+            "fault injection: p_fail={} p_timeout={} schedule seed {}",
+            spec.plan.p_fail, spec.plan.p_timeout, spec.seed
+        );
+    }
     // Pre-flight the cell's pool fallibly: a registered workflow whose
     // space admits no feasible configuration errors out here instead of
     // panicking inside the campaign (the cache hands the same pool to
@@ -181,6 +229,9 @@ fn tune(args: &Args, ctx: &ExpCtx) -> Result<(), String> {
     let mut campaign = ctx.campaign(wf, obj, m);
     if let Some(p) = overrides {
         campaign = campaign.with_ceal_params(p);
+    }
+    if let Some(spec) = faults {
+        campaign = campaign.with_faults(spec);
     }
     let agg = run_campaign(algo, &campaign);
     println!(
@@ -209,6 +260,35 @@ fn tune(args: &Args, ctx: &ExpCtx) -> Result<(), String> {
         Some(p) => println!("pays off after {} workflow runs", fnum(p, 0)),
         None => println!("does not beat the expert configuration"),
     }
+    let failed: usize = agg.reps.iter().map(|r| r.failed_runs).sum();
+    if failed > 0 {
+        println!("failed attempts: {failed} across {} reps", agg.reps.len());
+    }
+    // Per-rep CSV with shortest-round-trip floats: two identical
+    // invocations yield byte-identical files, which is what the CI
+    // fault-determinism cell compares.
+    let mut w = CsvWriter::new(&[
+        "rep",
+        "best_value",
+        "norm_best",
+        "cost",
+        "workflow_runs",
+        "failed_runs",
+    ]);
+    for (rep, r) in agg.reps.iter().enumerate() {
+        w.row(&[
+            rep.to_string(),
+            r.best_value.to_string(),
+            r.norm_best.to_string(),
+            r.cost.to_string(),
+            r.workflow_runs.to_string(),
+            r.failed_runs.to_string(),
+        ]);
+    }
+    let path = ctx.out_dir.join("tune_reps.csv");
+    w.save(&path)
+        .map_err(|e| format!("cannot write {}: {e}", path.display()))?;
+    println!("per-rep CSV -> {}", path.display());
     Ok(())
 }
 
@@ -218,7 +298,7 @@ fn tune(args: &Args, ctx: &ExpCtx) -> Result<(), String> {
 fn replay_session(args: &Args, ctx: &ExpCtx, path: &Path) -> Result<(), String> {
     let pinned = [
         "workflow", "objective", "algo", "m", "seed", "pool", "scorer", "mr", "m0", "iters",
-        "record",
+        "record", "faults",
     ];
     for flag in pinned {
         if args.opt(flag).is_some() {
@@ -227,7 +307,9 @@ fn replay_session(args: &Args, ctx: &ExpCtx, path: &Path) -> Result<(), String> 
             ));
         }
     }
-    let replayer = TraceReplayer::load(path)?;
+    // TraceError carries the structured load failure (bad version,
+    // malformed line, not a trace); its Display is the user message
+    let replayer = TraceReplayer::load(path).map_err(|e| e.to_string())?;
     let header = replayer.header.clone();
     run_single_session(ctx, &header, None, Some(replayer))
 }
@@ -271,11 +353,19 @@ fn run_single_session(
     let tuner = tuner_for(algo, &prob, header.seed, header.ceal_params);
     let mut rng = session_rng(header.seed, algo, 0);
     let mut col = Collector::new(&prob, rng.derive_str("collector"));
-    let session = tuner.session(&prob, &pool, &scorer, header.m, &mut rng);
+    let mut session = tuner.session(&prob, &pool, &scorer, header.m, &mut rng);
+    if header.faults.is_some() {
+        // the measurement stream carries failures (live injection or a
+        // recorded faulted trace): arm the failure-handling policy
+        session.set_failure_policy(FailurePolicy::fault_tolerant());
+    }
 
     let (out, provenance) = match replay_from {
         Some(mut replayer) => {
             let out = drive(session, &mut replayer);
+            if let Some(e) = replayer.error() {
+                return Err(e.to_string());
+            }
             if replayer.remaining() > 0 {
                 return Err(format!(
                     "replay left {} unconsumed batches — the trace does not match this build",
@@ -287,20 +377,43 @@ fn run_single_session(
         }
         None => {
             let path = record_to.expect("live sessions are recorded");
-            let file = std::fs::File::create(path)
-                .map_err(|e| format!("cannot create {}: {e}", path.display()))?;
-            let mut recorder =
-                TraceRecorder::new(&mut col, std::io::BufWriter::new(file), header)
-                    .map_err(|e| format!("cannot write trace header: {e}"))?;
-            let out = drive(session, &mut recorder);
-            let n = recorder.batches_written();
-            recorder
-                .finish()
-                .map_err(|e| format!("trace write failed: {e}"))?;
+            // composition order matters: the recorder wraps the
+            // injector, so the trace captures the *post-fault* stream
+            // and replays reproduce the faulted run bit-exactly.  This
+            // session is campaign rep 0, so the schedule seed matches
+            // the campaign's rep-0 fault stream.
+            let (out, n) = match &header.faults {
+                Some(spec) => {
+                    let mut injector =
+                        FaultInjector::new(&mut col, spec.plan, spec.seed_for_rep(0));
+                    record_run(&mut injector, session, path, header)?
+                }
+                None => record_run(&mut col, session, path, header)?,
+            };
             (out, format!("recorded {n} batches to {}", path.display()))
         }
     };
     report_session(ctx, header, obj, &pool, &out, &provenance)
+}
+
+/// Drive one live session through a [`TraceRecorder`] wrapping `live`,
+/// returning the output and the number of batches written.
+fn record_run(
+    live: &mut dyn ceal::tuner::Evaluator,
+    session: Box<dyn ceal::tuner::TunerSession + '_>,
+    path: &Path,
+    header: &TraceHeader,
+) -> Result<(TunerOutput, u64), String> {
+    let file = std::fs::File::create(path)
+        .map_err(|e| format!("cannot create {}: {e}", path.display()))?;
+    let mut recorder = TraceRecorder::new(live, std::io::BufWriter::new(file), header)
+        .map_err(|e| format!("cannot write trace header: {e}"))?;
+    let out = drive(session, &mut recorder);
+    let n = recorder.batches_written();
+    recorder
+        .finish()
+        .map_err(|e| format!("trace write failed: {e}"))?;
+    Ok((out, n))
 }
 
 /// Print the single-session outcome and write `session_best.csv` —
@@ -345,6 +458,7 @@ fn report_session(
         "best_truth",
         "collection_cost",
         "workflow_runs",
+        "failed_runs",
         "measured",
     ]);
     // float cells use shortest-round-trip formatting, so a bitwise
@@ -361,6 +475,7 @@ fn report_session(
         best_truth.to_string(),
         out.collection_cost.to_string(),
         out.workflow_runs.to_string(),
+        out.failed_runs.to_string(),
         out.measured.len().to_string(),
     ]);
     let path = ctx.out_dir.join("session_best.csv");
@@ -410,5 +525,5 @@ fn info() {
 }
 
 fn usage() -> &'static str {
-    "usage: ceal <table N | fig N | all | tune | info> [flags]\n(see `ceal` source header or README for flags)"
+    "usage: ceal <table N | fig N | all | robustness | tune | info> [flags]\n(see `ceal` source header or README for flags)"
 }

@@ -31,6 +31,99 @@ impl Measurement {
     }
 }
 
+/// Why a measurement attempt produced no usable reading.
+///
+/// The taxonomy follows the in-situ deployment failure modes the
+/// simulator's fault layer ([`crate::tuner::faults`]) injects: the run
+/// itself can die, the reading can be lost between the workflow and
+/// the tuner, or a reading can arrive but be recognisably wrong.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum FailureKind {
+    /// The workflow (or isolated component) run crashed before
+    /// producing a reading.
+    Crash,
+    /// The run finished but its reading was lost in transport (e.g. a
+    /// staging/daemon hop dropped it).
+    Transport,
+    /// A reading arrived but was detected as corrupted and discarded
+    /// by the evaluator itself (silent corruption that survives
+    /// delivery is instead handled by the sessions' outlier gate).
+    CorruptedReading,
+}
+
+impl FailureKind {
+    /// Stable short name (used by the v2 session-trace format).
+    pub fn name(&self) -> &'static str {
+        match self {
+            FailureKind::Crash => "crash",
+            FailureKind::Transport => "transport",
+            FailureKind::CorruptedReading => "corrupt",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<FailureKind> {
+        match name {
+            "crash" => Some(FailureKind::Crash),
+            "transport" => Some(FailureKind::Transport),
+            "corrupt" => Some(FailureKind::CorruptedReading),
+            _ => None,
+        }
+    }
+}
+
+/// The outcome of one measurement attempt: a usable objective value,
+/// a failure, or a deadline miss.  Sessions treat [`Failed`] and
+/// [`TimedOut`] identically for retry purposes but account them
+/// separately in traces (a timeout's wall-clock charge is real spent
+/// time, not an estimate).
+///
+/// [`Failed`]: MeasurementOutcome::Failed
+/// [`TimedOut`]: MeasurementOutcome::TimedOut
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum MeasurementOutcome {
+    /// The attempt delivered a reading (possibly noisy or silently
+    /// corrupted — delivery says nothing about trustworthiness).
+    Ok(f64),
+    /// The attempt produced no reading.
+    Failed(FailureKind),
+    /// The attempt exceeded its deadline and was abandoned.
+    TimedOut,
+}
+
+impl MeasurementOutcome {
+    /// The delivered value, if any.
+    pub fn value(&self) -> Option<f64> {
+        match self {
+            MeasurementOutcome::Ok(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn is_ok(&self) -> bool {
+        matches!(self, MeasurementOutcome::Ok(_))
+    }
+
+    /// Stable short name for trace serialization; `None` for [`Ok`]
+    /// outcomes (they serialize as their numeric value).
+    ///
+    /// [`Ok`]: MeasurementOutcome::Ok
+    pub fn fault_name(&self) -> Option<&'static str> {
+        match self {
+            MeasurementOutcome::Ok(_) => None,
+            MeasurementOutcome::Failed(k) => Some(k.name()),
+            MeasurementOutcome::TimedOut => Some("timeout"),
+        }
+    }
+
+    /// Inverse of [`fault_name`](Self::fault_name) for trace parsing.
+    pub fn from_fault_name(name: &str) -> Option<MeasurementOutcome> {
+        if name == "timeout" {
+            return Some(MeasurementOutcome::TimedOut);
+        }
+        FailureKind::from_name(name).map(MeasurementOutcome::Failed)
+    }
+}
+
 /// The optimization objective of a tuning campaign.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Objective {
@@ -137,5 +230,26 @@ mod tests {
             assert_eq!(Objective::from_name(o.name()), Some(o));
         }
         assert_eq!(Objective::from_name("comp"), Some(Objective::CompTime));
+    }
+
+    #[test]
+    fn outcome_accessors_and_fault_names() {
+        let ok = MeasurementOutcome::Ok(4.25);
+        assert!(ok.is_ok());
+        assert_eq!(ok.value(), Some(4.25));
+        assert_eq!(ok.fault_name(), None);
+
+        for outcome in [
+            MeasurementOutcome::Failed(FailureKind::Crash),
+            MeasurementOutcome::Failed(FailureKind::Transport),
+            MeasurementOutcome::Failed(FailureKind::CorruptedReading),
+            MeasurementOutcome::TimedOut,
+        ] {
+            assert!(!outcome.is_ok());
+            assert_eq!(outcome.value(), None);
+            let name = outcome.fault_name().expect("non-ok outcomes have names");
+            assert_eq!(MeasurementOutcome::from_fault_name(name), Some(outcome));
+        }
+        assert_eq!(MeasurementOutcome::from_fault_name("nope"), None);
     }
 }

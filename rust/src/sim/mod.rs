@@ -23,7 +23,7 @@ pub mod registry;
 pub mod workflows;
 
 pub use machine::Machine;
-pub use measurement::{Measurement, Objective};
+pub use measurement::{FailureKind, Measurement, MeasurementOutcome, Objective};
 pub use pipeline::{Edge, Pipeline, PipelineResult, PipelineStructure, SimWorkspace, Stage};
 pub use registry::{
     BufferRule, ComponentDef, EdgeDef, IsoRun, StageProfile, Upstream, WorkflowDef, WorkflowId,

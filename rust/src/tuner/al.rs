@@ -4,14 +4,18 @@
 //!
 //! Session shape: one sequential bootstrap batch, then `iterations`
 //! sequential refinement batches (the surrogate refits after every
-//! told batch).
+//! told batch).  Failed measurements are retried within the logical
+//! batch (the iteration does not advance and the surrogate does not
+//! refit until the batch is resolved); permanently lost picks are
+//! skipped, and the batch closes on whatever was delivered.
 
 use super::common::{
     random_unmeasured, searcher_best, top_unmeasured, train_hifi, Pool, Problem, Tuner,
     TunerOutput,
 };
 use super::session::{
-    MeasurementBatch, MeasurementResult, SessionCore, SessionState, TunerSession,
+    triage_results, FailurePolicy, MeasurementBatch, MeasurementResult, SessionCore,
+    SessionState, TunerSession,
 };
 use crate::gbt::Ensemble;
 use crate::surrogate::Scorer;
@@ -59,6 +63,9 @@ impl Tuner for ActiveLearning {
             iter: 0,
             bootstrapped: false,
             pending: Vec::new(),
+            retry: Vec::new(),
+            in_gate: false,
+            forced_done: false,
             model: None,
         })
     }
@@ -72,13 +79,45 @@ struct AlSession<'a> {
     /// Refinement batches completed so far.
     iter: usize,
     bootstrapped: bool,
-    pending: Vec<usize>,
+    /// In-flight (pool index, attempt) pairs.
+    pending: Vec<(usize, usize)>,
+    /// Failed picks with attempt budget left, re-asked next batch.
+    retry: Vec<(usize, usize)>,
+    /// True while the in-flight batch re-measures gate-flagged points.
+    in_gate: bool,
+    /// Set when the pool runs dry before the iteration budget does.
+    forced_done: bool,
     model: Option<Ensemble>,
 }
 
 impl AlSession<'_> {
     fn done(&self) -> bool {
-        self.bootstrapped && (self.batch == 0 || self.iter >= self.iters)
+        self.forced_done || (self.bootstrapped && (self.batch == 0 || self.iter >= self.iters))
+    }
+
+    fn issue(&mut self, picks: Vec<(usize, usize)>) -> MeasurementBatch {
+        self.core.asked_batches += 1;
+        let reqs = picks
+            .iter()
+            .map(|&(i, _)| self.core.workflow_request(i))
+            .collect();
+        self.pending = picks;
+        MeasurementBatch::sequential(reqs)
+    }
+
+    /// The logical batch is fully resolved: advance the iteration and
+    /// refit on everything delivered so far.
+    fn close_batch(&mut self) {
+        if self.bootstrapped {
+            self.iter += 1;
+        } else {
+            self.bootstrapped = true;
+        }
+        let rows = self.core.train_measured();
+        if !rows.is_empty() {
+            self.model = Some(train_hifi(self.core.prob, self.core.pool, &rows));
+        }
+        self.core.refit();
     }
 }
 
@@ -89,41 +128,85 @@ impl TunerSession for AlSession<'_> {
 
     fn ask(&mut self) -> MeasurementBatch {
         assert!(self.pending.is_empty(), "ask() with results outstanding");
+        if !self.retry.is_empty() {
+            let retry = std::mem::take(&mut self.retry);
+            return self.issue(retry);
+        }
         if self.done() {
             return MeasurementBatch::empty();
         }
-        self.core.asked_batches += 1;
+        self.in_gate = false;
+        let avail = self.core.pool.len() - self.core.measured_set.len();
         let picks = if !self.bootstrapped {
-            random_unmeasured(
-                self.core.pool,
-                &self.core.measured_set,
-                self.m0,
-                &mut self.core.sel_rng,
-            )
+            let k = self.m0.min(avail);
+            random_unmeasured(self.core.pool, &self.core.measured_set, k, &mut self.core.sel_rng)
         } else {
-            let model = self.model.as_ref().expect("model trained at bootstrap");
-            let preds = self.core.scorer.score(model, &self.core.pool.feats.workflow);
-            top_unmeasured(&preds, &self.core.measured_set, self.batch)
+            match self.model.as_ref() {
+                Some(model) => {
+                    let preds = self.core.scorer.score(model, &self.core.pool.feats.workflow);
+                    top_unmeasured(&preds, &self.core.measured_set, self.batch)
+                }
+                // every bootstrap attempt failed: refine blind
+                None => {
+                    let k = self.batch.min(avail);
+                    random_unmeasured(
+                        self.core.pool,
+                        &self.core.measured_set,
+                        k,
+                        &mut self.core.sel_rng,
+                    )
+                }
+            }
         };
-        let reqs = self.core.take_workflow_picks(&picks);
-        self.pending = picks;
-        MeasurementBatch::sequential(reqs)
+        if picks.is_empty() {
+            self.forced_done = true;
+            return MeasurementBatch::empty();
+        }
+        for &i in &picks {
+            self.core.measured_set.insert(i);
+        }
+        self.issue(picks.into_iter().map(|i| (i, 0)).collect())
     }
 
     fn tell(&mut self, results: &[MeasurementResult]) {
-        let picks = std::mem::take(&mut self.pending);
-        assert_eq!(results.len(), picks.len(), "tell() arity mismatch");
+        let pending = std::mem::take(&mut self.pending);
         self.core.told_batches += 1;
-        for (&i, r) in picks.iter().zip(results) {
-            self.core.record_workflow(i, r.value);
+        let max_retries = self.core.policy.max_retries;
+        let in_gate = self.in_gate;
+        let core = &mut self.core;
+        let (ok, retry) = triage_results(pending, results, max_retries, |&i, att| {
+            core.charge_failed_workflow(i, att)
+        });
+        for (i, y) in ok {
+            if in_gate {
+                self.core.replace_workflow(i, y);
+            } else {
+                self.core.record_workflow(i, y);
+            }
         }
-        if self.bootstrapped {
-            self.iter += 1;
+        self.retry = retry;
+        if !self.retry.is_empty() {
+            return; // batch unresolved: re-ask the failures first
+        }
+        if !self.in_gate {
+            // resolved work batch: give flagged readings their
+            // re-measure before closing the iteration
+            let flagged = self.core.outlier_remeasure_picks();
+            if !flagged.is_empty() {
+                self.in_gate = true;
+                self.retry = flagged.into_iter().map(|i| (i, 0)).collect();
+                return;
+            }
+            self.close_batch();
         } else {
-            self.bootstrapped = true;
+            let flagged = self.core.outlier_remeasure_picks();
+            if !flagged.is_empty() {
+                self.retry = flagged.into_iter().map(|i| (i, 0)).collect();
+                return;
+            }
+            self.in_gate = false;
+            self.close_batch();
         }
-        self.model = Some(train_hifi(self.core.prob, self.core.pool, &self.core.measured));
-        self.core.refit();
     }
 
     fn state(&self) -> SessionState {
@@ -138,10 +221,17 @@ impl TunerSession for AlSession<'_> {
     }
 
     fn finish(self: Box<Self>) -> TunerOutput {
-        let model = self.model.expect("finish() before the session completed");
+        // a total measurement blackout leaves no model: fall back to a
+        // constant so the session still yields a valid output
+        let model = self.model.unwrap_or_else(|| Ensemble::constant(1, 0.0));
         let core = self.core;
-        let best_idx = searcher_best(&model, core.pool, core.scorer, &core.measured);
+        let rows = core.train_measured();
+        let best_idx = searcher_best(&model, core.pool, core.scorer, &rows);
         core.into_output(model, best_idx)
+    }
+
+    fn set_failure_policy(&mut self, policy: FailurePolicy) {
+        self.core.policy = policy;
     }
 }
 

@@ -18,8 +18,8 @@ use super::common::{
     TunerOutput,
 };
 use super::session::{
-    sample_component_requests, DiagSink, MeasurementBatch, MeasurementRequest, MeasurementResult,
-    SessionCore, SessionState, TunerSession,
+    sample_component_requests, triage_results, DiagSink, FailurePolicy, MeasurementBatch,
+    MeasurementRequest, MeasurementResult, SessionCore, SessionState, TunerSession,
 };
 use crate::config::F_MAX;
 use crate::gbt::{train_log, Ensemble};
@@ -100,6 +100,11 @@ impl Tuner for Alph {
             iter: 0,
             phase: Phase::Components,
             pending: Pending::None,
+            comps_sampled: false,
+            comp_retry: Vec::new(),
+            batch_retry: Vec::new(),
+            gate_q: Vec::new(),
+            round_ok: Vec::new(),
         })
     }
 }
@@ -111,10 +116,20 @@ enum Phase {
     Done,
 }
 
+/// An in-flight isolated component run (see the CEAL counterpart).
+struct CompAttempt {
+    slot: usize,
+    x: [f32; F_MAX],
+    req: MeasurementRequest,
+}
+
 enum Pending {
     None,
-    Components(Vec<(usize, [f32; F_MAX])>),
-    Batch(Vec<usize>),
+    Components(Vec<(CompAttempt, usize)>),
+    /// (pool index, attempt) of the in-flight `C_meas` fan-out.
+    Batch(Vec<(usize, usize)>),
+    /// Outlier-gate re-measures (sequential).
+    Gate(Vec<(usize, usize)>),
 }
 
 struct AlphSession<'a> {
@@ -135,12 +150,20 @@ struct AlphSession<'a> {
     iter: usize,
     phase: Phase,
     pending: Pending,
+    comps_sampled: bool,
+    comp_retry: Vec<(CompAttempt, usize)>,
+    batch_retry: Vec<(usize, usize)>,
+    /// Outlier re-measures queued for the next sequential batch.
+    gate_q: Vec<(usize, usize)>,
+    /// Delivered readings of the in-flight round, in told order.
+    round_ok: Vec<(usize, f64)>,
 }
 
 impl AlphSession<'_> {
     /// Phase-1 sampling, identical to CEAL's — the shared
     /// [`sample_component_requests`] protocol.
     fn sample_components(&mut self) -> Vec<MeasurementRequest> {
+        self.comps_sampled = true;
         let mut slots = Vec::new();
         let reqs = sample_component_requests(
             &mut self.core,
@@ -152,7 +175,13 @@ impl AlphSession<'_> {
         self.pending = if reqs.is_empty() {
             Pending::None
         } else {
-            Pending::Components(slots)
+            Pending::Components(
+                slots
+                    .into_iter()
+                    .zip(&reqs)
+                    .map(|((slot, x), req)| (CompAttempt { slot, x, req: req.clone() }, 0))
+                    .collect(),
+            )
         };
         reqs
     }
@@ -196,31 +225,31 @@ impl AlphSession<'_> {
         self.phase = Phase::Workflow;
     }
 
-    fn train_combiner(&self) -> Ensemble {
+    fn train_combiner(&self, rows: &[(usize, f64)]) -> Ensemble {
         let n_j = self.per_comp_preds.len();
-        let xs: Vec<[f32; F_MAX]> = self
-            .core
-            .measured
+        let xs: Vec<[f32; F_MAX]> = rows
             .iter()
             .map(|&(i, _)| combiner_features(&self.per_comp_preds, i))
             .collect();
-        let y: Vec<f64> = self.core.measured.iter().map(|&(_, y)| y).collect();
+        let y: Vec<f64> = rows.iter().map(|&(_, y)| y).collect();
         train_log(&xs, &y, n_j.max(1), &gbt_params_for(y.len()))
     }
 
-    fn absorb_batch(&mut self, idxs: Vec<usize>, results: &[MeasurementResult]) {
-        let (prob, pool, scorer) = (self.core.prob, self.core.pool, self.core.scorer);
-        // switch detection, mirroring CEAL but on the fresh batch only
-        // — and *before* the fresh rows join the training set, exactly
-        // as the monolithic loop ordered it
-        if !self.using_hifi {
+    /// The round's deliveries are all in: run switch detection —
+    /// mirroring CEAL but on the fresh round only, and *before* the
+    /// fresh rows join the training set, exactly as the monolithic
+    /// loop ordered it — then record.
+    fn record_round(&mut self) {
+        let (pool, scorer) = (self.core.pool, self.core.scorer);
+        let round = std::mem::take(&mut self.round_ok);
+        if !self.using_hifi && !round.is_empty() {
             if let (Some(h), Some(c0)) = (&self.hifi, &self.combiner) {
-                let actual: Vec<f64> = results.iter().map(|r| r.value).collect();
-                let xs: Vec<_> = idxs.iter().map(|&i| pool.feats.workflow[i]).collect();
+                let actual: Vec<f64> = round.iter().map(|&(_, y)| y).collect();
+                let xs: Vec<_> = round.iter().map(|&(i, _)| pool.feats.workflow[i]).collect();
                 let pred_h = scorer.score(h, &xs);
-                let cx: Vec<[f32; F_MAX]> = idxs
+                let cx: Vec<[f32; F_MAX]> = round
                     .iter()
-                    .map(|&i| combiner_features(&self.per_comp_preds, i))
+                    .map(|&(i, _)| combiner_features(&self.per_comp_preds, i))
                     .collect();
                 let pred_l = scorer.score(c0, &cx);
                 if recall_sum_123(&pred_h, &actual) >= recall_sum_123(&pred_l, &actual) {
@@ -228,30 +257,60 @@ impl AlphSession<'_> {
                 }
             }
         }
-        for (&i, r) in idxs.iter().zip(results) {
-            self.core.record_workflow(i, r.value);
+        for &(i, y) in &round {
+            self.core.record_workflow(i, y);
         }
-        self.hifi = Some(train_hifi(prob, pool, &self.core.measured));
-        self.core.refit();
-        self.combiner = Some(self.train_combiner());
-        self.core.refit();
+    }
+
+    /// The round (and any outlier re-measures) is fully resolved:
+    /// retrain both models, advance the iteration, select the next
+    /// `C_meas`.
+    fn close_round(&mut self) {
+        let (prob, pool, scorer) = (self.core.prob, self.core.pool, self.core.scorer);
+        let rows = self.core.train_measured();
+        if !rows.is_empty() {
+            self.hifi = Some(train_hifi(prob, pool, &rows));
+            self.core.refit();
+            self.combiner = Some(self.train_combiner(&rows));
+            self.core.refit();
+        }
         self.iter += 1;
         if self.iter < self.iters {
-            let scores: Vec<f64> = if self.using_hifi {
-                scorer.score(self.hifi.as_ref().unwrap(), &pool.feats.workflow)
+            let scores: Option<Vec<f64>> = if self.using_hifi {
+                self.hifi
+                    .as_ref()
+                    .map(|h| scorer.score(h, &pool.feats.workflow))
             } else {
-                let c0 = self.combiner.as_ref().unwrap();
-                let cx: Vec<[f32; F_MAX]> = (0..pool.len())
-                    .map(|i| combiner_features(&self.per_comp_preds, i))
-                    .collect();
-                scorer.score(c0, &cx)
+                self.combiner.as_ref().map(|c0| {
+                    let cx: Vec<[f32; F_MAX]> = (0..pool.len())
+                        .map(|i| combiner_features(&self.per_comp_preds, i))
+                        .collect();
+                    scorer.score(c0, &cx)
+                })
             };
-            self.c_meas = top_unmeasured(&scores, &self.core.measured_set, self.m_b);
-            for &i in &self.c_meas {
-                self.core.measured_set.insert(i);
+            match scores {
+                Some(s) => {
+                    self.c_meas = top_unmeasured(&s, &self.core.measured_set, self.m_b);
+                    for &i in &self.c_meas {
+                        self.core.measured_set.insert(i);
+                    }
+                }
+                // no model at all (total blackout): nothing to rank
+                None => self.phase = Phase::Done,
             }
         } else {
             self.phase = Phase::Done;
+        }
+    }
+
+    /// Queue the outlier gate's re-measures if any reading is flagged;
+    /// otherwise close the round.
+    fn gate_or_close(&mut self) {
+        let flagged = self.core.outlier_remeasure_picks();
+        if flagged.is_empty() {
+            self.close_round();
+        } else {
+            self.gate_q = flagged.into_iter().map(|i| (i, 0)).collect();
         }
     }
 }
@@ -267,43 +326,107 @@ impl TunerSession for AlphSession<'_> {
             "ask() with results outstanding"
         );
         if self.phase == Phase::Components {
-            let reqs = self.sample_components();
-            if reqs.is_empty() {
-                self.open_workflow_phase();
-            } else {
+            if !self.comps_sampled {
+                let reqs = self.sample_components();
+                if reqs.is_empty() {
+                    self.open_workflow_phase();
+                } else {
+                    self.core.asked_batches += 1;
+                    return MeasurementBatch::sequential(reqs);
+                }
+            } else if !self.comp_retry.is_empty() {
+                // failed isolated runs with attempt budget left
+                let retry = std::mem::take(&mut self.comp_retry);
                 self.core.asked_batches += 1;
+                let reqs = retry.iter().map(|(a, _)| a.req.clone()).collect();
+                self.pending = Pending::Components(retry);
                 return MeasurementBatch::sequential(reqs);
+            } else {
+                // defensive: tell() normally opens phase 2 itself
+                self.open_workflow_phase();
             }
+        }
+        if !self.batch_retry.is_empty() {
+            let retry = std::mem::take(&mut self.batch_retry);
+            self.core.asked_batches += 1;
+            let reqs = retry
+                .iter()
+                .map(|&(i, _)| self.core.workflow_request(i))
+                .collect();
+            self.pending = Pending::Batch(retry);
+            return MeasurementBatch::fan_out(reqs);
+        }
+        if !self.gate_q.is_empty() {
+            let gate = std::mem::take(&mut self.gate_q);
+            self.core.asked_batches += 1;
+            let reqs = gate
+                .iter()
+                .map(|&(i, _)| self.core.workflow_request(i))
+                .collect();
+            self.pending = Pending::Gate(gate);
+            return MeasurementBatch::sequential(reqs);
         }
         if self.phase == Phase::Done || self.c_meas.is_empty() {
             self.phase = Phase::Done;
             return MeasurementBatch::empty();
         }
         self.core.asked_batches += 1;
-        let reqs: Vec<MeasurementRequest> = self
-            .c_meas
-            .iter()
-            .map(|&i| self.core.workflow_request(i))
+        let picks: Vec<(usize, usize)> = std::mem::take(&mut self.c_meas)
+            .into_iter()
+            .map(|i| (i, 0))
             .collect();
-        self.pending = Pending::Batch(std::mem::take(&mut self.c_meas));
+        let reqs: Vec<MeasurementRequest> = picks
+            .iter()
+            .map(|&(i, _)| self.core.workflow_request(i))
+            .collect();
+        self.pending = Pending::Batch(picks);
         MeasurementBatch::fan_out(reqs)
     }
 
     fn tell(&mut self, results: &[MeasurementResult]) {
         self.core.told_batches += 1;
+        let max_retries = self.core.policy.max_retries;
         match std::mem::replace(&mut self.pending, Pending::None) {
             Pending::None => panic!("tell() without an outstanding batch"),
-            Pending::Components(slots) => {
-                assert_eq!(results.len(), slots.len(), "tell() arity mismatch");
-                for ((slot, x), r) in slots.into_iter().zip(results) {
-                    self.samples[slot].push(x, r.value);
-                    self.core.record_component(r.value);
+            Pending::Components(attempts) => {
+                let core = &mut self.core;
+                let (ok, retry) = triage_results(attempts, results, max_retries, |_, att| {
+                    core.charge_failed_component(att)
+                });
+                for (a, y) in ok {
+                    self.samples[a.slot].push(a.x, y);
+                    self.core.record_component(y);
                 }
-                self.open_workflow_phase();
+                self.comp_retry = retry;
+                if self.comp_retry.is_empty() {
+                    self.open_workflow_phase();
+                }
             }
             Pending::Batch(idxs) => {
-                assert_eq!(results.len(), idxs.len(), "tell() arity mismatch");
-                self.absorb_batch(idxs, results);
+                let core = &mut self.core;
+                let (ok, retry) = triage_results(idxs, results, max_retries, |&i, att| {
+                    core.charge_failed_workflow(i, att)
+                });
+                self.round_ok.extend(ok);
+                self.batch_retry = retry;
+                if !self.batch_retry.is_empty() {
+                    return; // round unresolved: re-ask the failures first
+                }
+                self.record_round();
+                self.gate_or_close();
+            }
+            Pending::Gate(picks) => {
+                let core = &mut self.core;
+                let (ok, retry) = triage_results(picks, results, max_retries, |&i, att| {
+                    core.charge_failed_workflow(i, att)
+                });
+                for (i, y) in ok {
+                    self.core.replace_workflow(i, y);
+                }
+                self.gate_q = retry;
+                if self.gate_q.is_empty() {
+                    self.gate_or_close();
+                }
             }
         }
     }
@@ -323,9 +446,14 @@ impl TunerSession for AlphSession<'_> {
     }
 
     fn finish(self: Box<Self>) -> TunerOutput {
-        let model = self.hifi.expect("finish() before any iteration was told");
+        // a total measurement blackout leaves no model: fall back to a
+        // constant so the session still yields a valid output
+        let model = self
+            .hifi
+            .unwrap_or_else(|| Ensemble::constant(1, 0.0));
         let core = self.core;
-        let best_idx = searcher_best(&model, core.pool, core.scorer, &core.measured);
+        let rows = core.train_measured();
+        let best_idx = searcher_best(&model, core.pool, core.scorer, &rows);
         core.into_output(model, best_idx)
     }
 
@@ -335,6 +463,10 @@ impl TunerSession for AlphSession<'_> {
 
     fn diagnostics(&self) -> &[String] {
         self.core.diag.captured()
+    }
+
+    fn set_failure_policy(&mut self, policy: FailurePolicy) {
+        self.core.policy = policy;
     }
 }
 

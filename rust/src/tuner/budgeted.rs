@@ -22,8 +22,8 @@ use super::common::{
     TunerOutput,
 };
 use super::session::{
-    drive, DiagSink, MeasurementBatch, MeasurementRequest, MeasurementResult, SessionCore,
-    SessionState, TunerSession,
+    drive, DiagSink, FailurePolicy, MeasurementBatch, MeasurementRequest, MeasurementResult,
+    SessionCore, SessionState, TunerSession,
 };
 use crate::config::F_MAX;
 use crate::gbt::Ensemble;
@@ -95,6 +95,9 @@ impl BudgetedCeal {
             round: None,
             phase: Phase::Components,
             pending: Pending::None,
+            retry: None,
+            gate_q: Vec::new(),
+            need_close: false,
         })
     }
 
@@ -126,9 +129,13 @@ enum Phase {
 
 enum Pending {
     None,
-    /// (configurable slot, encoded component features).
-    Component(usize, [f32; F_MAX]),
-    Workflow(usize),
+    /// (configurable slot, encoded features, request for re-issue,
+    /// attempt).
+    Component(usize, [f32; F_MAX], MeasurementRequest, usize),
+    /// (pool index, attempt).
+    Workflow(usize, usize),
+    /// Outlier-gate re-measure: (pool index, attempt).
+    GateWorkflow(usize, usize),
 }
 
 /// One guided round: the selected batch and how far it got before the
@@ -158,6 +165,14 @@ struct BudgetedSession<'a> {
     round: Option<Round>,
     phase: Phase,
     pending: Pending,
+    /// A failed measurement with attempt budget left, re-issued by the
+    /// next `ask` before any new work.
+    retry: Option<Pending>,
+    /// Outlier re-measures queued one at a time.
+    gate_q: Vec<(usize, usize)>,
+    /// The finished round still owes its `post_round` (deferred until
+    /// the outlier gate drains).
+    need_close: bool,
 }
 
 impl BudgetedSession<'_> {
@@ -172,7 +187,7 @@ impl BudgetedSession<'_> {
                     self.cursor += 1;
                     continue;
                 }
-                if self.core.component_cost() >= self.comp_allowance {
+                if self.core.component_spend() >= self.comp_allowance {
                     return None; // `break 'outer`
                 }
                 let comp = self.configurable[slot];
@@ -186,8 +201,9 @@ impl BudgetedSession<'_> {
                     Ok(cfg) => {
                         self.progressed = true;
                         let x = self.core.prob.sim.spec.components[comp].encode(&cfg);
-                        self.pending = Pending::Component(slot, x);
-                        return Some(MeasurementRequest::Component { comp, config: cfg });
+                        let req = MeasurementRequest::Component { comp, config: cfg };
+                        self.pending = Pending::Component(slot, x, req.clone(), 0);
+                        return Some(req);
                     }
                     Err(e) => {
                         // an infeasible component skips only itself
@@ -244,7 +260,8 @@ impl BudgetedSession<'_> {
             }
         }
         if self.core.measured.len() >= 2 {
-            self.hifi = Some(train_hifi(prob, pool, &self.core.measured));
+            let rows = self.core.train_measured();
+            self.hifi = Some(train_hifi(prob, pool, &rows));
             self.core.refit();
         }
     }
@@ -260,6 +277,21 @@ impl TunerSession for BudgetedSession<'_> {
             matches!(self.pending, Pending::None),
             "ask() with results outstanding"
         );
+        // a failed measurement with attempt budget left is re-issued
+        // before any new work (even past a phase boundary: retries are
+        // the overshoot-by-one the budget gate already tolerates)
+        if let Some(p) = self.retry.take() {
+            let req = match &p {
+                Pending::Component(_, _, req, _) => req.clone(),
+                Pending::Workflow(i, _) | Pending::GateWorkflow(i, _) => {
+                    self.core.workflow_request(*i)
+                }
+                Pending::None => unreachable!("retry is never Pending::None"),
+            };
+            self.pending = p;
+            self.core.asked_batches += 1;
+            return MeasurementBatch::sequential(vec![req]);
+        }
         loop {
             match self.phase {
                 Phase::Components => {
@@ -277,18 +309,33 @@ impl TunerSession for BudgetedSession<'_> {
                         let set = &self.core.measured_set;
                         let i = random_unmeasured(pool, set, 1, &mut self.core.sel_rng)[0];
                         self.core.measured_set.insert(i);
-                        self.pending = Pending::Workflow(i);
+                        self.pending = Pending::Workflow(i, 0);
                         self.core.asked_batches += 1;
                         return MeasurementBatch::sequential(vec![self.core.workflow_request(i)]);
                     }
                     // bootstrap over: initial M_H when trainable
                     if self.core.measured.len() >= 2 {
-                        self.hifi = Some(train_hifi(self.core.prob, pool, &self.core.measured));
+                        let rows = self.core.train_measured();
+                        self.hifi = Some(train_hifi(self.core.prob, pool, &rows));
                         self.core.refit();
                     }
                     self.phase = Phase::Guided;
                 }
                 Phase::Guided => {
+                    // drain the outlier gate one re-measure at a time,
+                    // then run the deferred round close
+                    if let Some((i, att)) = self.gate_q.first().copied() {
+                        self.gate_q.remove(0);
+                        self.pending = Pending::GateWorkflow(i, att);
+                        self.core.asked_batches += 1;
+                        let req = self.core.workflow_request(i);
+                        return MeasurementBatch::sequential(vec![req]);
+                    }
+                    if self.need_close {
+                        self.need_close = false;
+                        self.post_round();
+                        continue;
+                    }
                     if let Some(round) = &mut self.round {
                         if round.pos < round.batch_idx.len()
                             && self.core.total_cost() < self.cost_budget
@@ -297,7 +344,7 @@ impl TunerSession for BudgetedSession<'_> {
                             round.pos += 1;
                             round.taken += 1;
                             self.core.measured_set.insert(i);
-                            self.pending = Pending::Workflow(i);
+                            self.pending = Pending::Workflow(i, 0);
                             self.core.asked_batches += 1;
                             let req = self.core.workflow_request(i);
                             return MeasurementBatch::sequential(vec![req]);
@@ -306,6 +353,12 @@ impl TunerSession for BudgetedSession<'_> {
                         let taken = self.round.take().map(|r| r.taken).unwrap_or(0);
                         if taken == 0 {
                             self.phase = Phase::Done;
+                            continue;
+                        }
+                        let flagged = self.core.outlier_remeasure_picks();
+                        if !flagged.is_empty() {
+                            self.gate_q = flagged.into_iter().map(|i| (i, 0)).collect();
+                            self.need_close = true;
                             continue;
                         }
                         self.post_round();
@@ -346,15 +399,43 @@ impl TunerSession for BudgetedSession<'_> {
     fn tell(&mut self, results: &[MeasurementResult]) {
         assert_eq!(results.len(), 1, "tell() arity mismatch");
         self.core.told_batches += 1;
+        let max_retries = self.core.policy.max_retries;
         match std::mem::replace(&mut self.pending, Pending::None) {
             Pending::None => panic!("tell() without an outstanding batch"),
-            Pending::Component(slot, x) => {
-                self.samples[slot].push(x, results[0].value);
-                self.core.record_component(results[0].value);
-            }
-            Pending::Workflow(i) => {
-                self.core.record_workflow(i, results[0].value);
-            }
+            Pending::Component(slot, x, req, att) => match results[0].value() {
+                Some(y) => {
+                    self.samples[slot].push(x, y);
+                    self.core.record_component(y);
+                }
+                None => {
+                    self.core.charge_failed_component(att);
+                    if att < max_retries {
+                        self.retry = Some(Pending::Component(slot, x, req, att + 1));
+                    }
+                    // exhausted: the round-robin pass simply moves on
+                }
+            },
+            Pending::Workflow(i, att) => match results[0].value() {
+                Some(y) => self.core.record_workflow(i, y),
+                None => {
+                    self.core.charge_failed_workflow(i, att);
+                    if att < max_retries {
+                        self.retry = Some(Pending::Workflow(i, att + 1));
+                    }
+                    // exhausted: the pick is skipped (it stays in the
+                    // measured set so it is not re-selected)
+                }
+            },
+            Pending::GateWorkflow(i, att) => match results[0].value() {
+                Some(y) => self.core.replace_workflow(i, y),
+                None => {
+                    self.core.charge_failed_workflow(i, att);
+                    if att < max_retries {
+                        self.retry = Some(Pending::GateWorkflow(i, att + 1));
+                    }
+                    // exhausted: the winsorized original reading stands
+                }
+            },
         }
     }
 
@@ -376,7 +457,8 @@ impl TunerSession for BudgetedSession<'_> {
     fn finish(self: Box<Self>) -> TunerOutput {
         let model = self.hifi.unwrap_or_else(|| Ensemble::constant(1, 0.0));
         let core = self.core;
-        let best_idx = searcher_best(&model, core.pool, core.scorer, &core.measured);
+        let rows = core.train_measured();
+        let best_idx = searcher_best(&model, core.pool, core.scorer, &rows);
         core.into_output(model, best_idx)
     }
 
@@ -386,6 +468,10 @@ impl TunerSession for BudgetedSession<'_> {
 
     fn diagnostics(&self) -> &[String] {
         self.core.diag.captured()
+    }
+
+    fn set_failure_policy(&mut self, policy: FailurePolicy) {
+        self.core.policy = policy;
     }
 }
 
@@ -479,7 +565,7 @@ mod tests {
             assert_eq!(batch.len(), 1, "budgeted sessions step one sample at a time");
             // a synthetic driver: every measurement costs 9 units
             spent += 9.0;
-            session.tell(&[MeasurementResult { value: 9.0 }]);
+            session.tell(&[MeasurementResult::ok(9.0)]);
         }
         let st = session.state();
         assert!(st.done);

@@ -26,8 +26,8 @@ use super::common::{
     TunerOutput,
 };
 use super::session::{
-    sample_component_requests, DiagSink, MeasurementBatch, MeasurementRequest, MeasurementResult,
-    SessionCore, SessionState, TunerSession,
+    sample_component_requests, triage_results, DiagSink, FailurePolicy, MeasurementBatch,
+    MeasurementRequest, MeasurementResult, SessionCore, SessionState, TunerSession,
 };
 use crate::config::F_MAX;
 use crate::gbt::{Ensemble, GbtParams};
@@ -153,6 +153,11 @@ impl Tuner for Ceal {
             iter: 0,
             phase: Phase::Components,
             pending: Pending::None,
+            comps_sampled: false,
+            comp_retry: Vec::new(),
+            batch_retry: Vec::new(),
+            gate_q: Vec::new(),
+            round_ok: Vec::new(),
         })
     }
 }
@@ -166,12 +171,22 @@ enum Phase {
     Done,
 }
 
+/// An in-flight isolated component run: where its reading lands
+/// (`slot`, `x`), the request itself (kept so a retry re-issues it
+/// verbatim), and the attempt counter.
+struct CompAttempt {
+    slot: usize,
+    x: [f32; F_MAX],
+    req: MeasurementRequest,
+}
+
 enum Pending {
     None,
-    /// Per request: (configurable slot, encoded component features).
-    Components(Vec<(usize, [f32; F_MAX])>),
-    /// Pool indices of the in-flight `C_meas` fan-out.
-    Batch(Vec<usize>),
+    Components(Vec<(CompAttempt, usize)>),
+    /// (pool index, attempt) of the in-flight `C_meas` fan-out.
+    Batch(Vec<(usize, usize)>),
+    /// Outlier-gate re-measures (sequential).
+    Gate(Vec<(usize, usize)>),
 }
 
 struct CealSession<'a> {
@@ -198,6 +213,15 @@ struct CealSession<'a> {
     iter: usize,
     phase: Phase,
     pending: Pending,
+    /// Phase-1 requests were drawn (they are drawn once; retries must
+    /// not re-sample the component spaces).
+    comps_sampled: bool,
+    comp_retry: Vec<(CompAttempt, usize)>,
+    batch_retry: Vec<(usize, usize)>,
+    /// Outlier re-measures queued for the next sequential batch.
+    gate_q: Vec<(usize, usize)>,
+    /// Delivered readings of the in-flight round, in told order.
+    round_ok: Vec<(usize, f64)>,
 }
 
 impl CealSession<'_> {
@@ -205,6 +229,7 @@ impl CealSession<'_> {
     /// component runs via the shared
     /// [`sample_component_requests`] protocol.
     fn sample_components(&mut self) -> Vec<MeasurementRequest> {
+        self.comps_sampled = true;
         let mut slots = Vec::new();
         let reqs = sample_component_requests(
             &mut self.core,
@@ -216,7 +241,13 @@ impl CealSession<'_> {
         self.pending = if reqs.is_empty() {
             Pending::None
         } else {
-            Pending::Components(slots)
+            Pending::Components(
+                slots
+                    .into_iter()
+                    .zip(&reqs)
+                    .map(|((slot, x), req)| (CompAttempt { slot, x, req: req.clone() }, 0))
+                    .collect(),
+            )
         };
         reqs
     }
@@ -265,48 +296,57 @@ impl CealSession<'_> {
         self.phase = Phase::Workflow;
     }
 
-    /// The in-flight `C_meas` was measured (line 15 happened): run the
-    /// post-batch half of the loop body — switch detection (lines
-    /// 16-21), M_H refit (line 22) and next-batch selection (lines
-    /// 23-24).
-    fn absorb_batch(&mut self, idxs: Vec<usize>, results: &[MeasurementResult]) {
-        let (prob, pool, scorer) = (self.core.prob, self.core.pool, self.core.scorer);
-        for (&i, r) in idxs.iter().zip(results) {
-            self.core.record_workflow(i, r.value);
+    /// The `C_meas` round's deliveries are all in (line 15 happened,
+    /// minus permanently lost picks): record them and run switch
+    /// detection (lines 16-21).  Both models score everything measured
+    /// so far *including* the fresh batch (which is out-of-sample for
+    /// the current M_H) — a fresh m_B-sized batch alone is too small
+    /// for stable top-1..3 recalls at the paper's budgets.
+    fn record_round(&mut self) {
+        let (pool, scorer) = (self.core.pool, self.core.scorer);
+        let round = std::mem::take(&mut self.round_ok);
+        for &(i, y) in &round {
+            self.core.record_workflow(i, y);
         }
-        // lines 16-21: model switch detection.  Both models score
-        // everything measured so far *including* the fresh batch
-        // (which is out-of-sample for the current M_H) — a fresh
-        // m_B-sized batch alone is too small for stable top-1..3
-        // recalls at the paper's budgets.
         if !self.using_hifi {
-            for (&i, r) in idxs.iter().zip(results) {
-                self.actual.push(r.value);
+            for &(i, y) in &round {
+                self.actual.push(y);
                 self.xs_meas.push(pool.feats.workflow[i]);
                 self.pred_l.push(self.lowfi_scores[i]);
             }
             if let Some(h) = &self.hifi {
-                let pred_h = scorer.score(h, &self.xs_meas);
-                let s_h = recall_sum_123(&pred_h, &self.actual);
-                let s_l = recall_sum_123(&self.pred_l, &self.actual);
-                if s_h >= s_l {
-                    self.using_hifi = true;
+                if !self.xs_meas.is_empty() {
+                    let pred_h = scorer.score(h, &self.xs_meas);
+                    let s_h = recall_sum_123(&pred_h, &self.actual);
+                    let s_l = recall_sum_123(&self.pred_l, &self.actual);
+                    if s_h >= s_l {
+                        self.using_hifi = true;
+                    }
                 }
             }
         }
-        // line 22: train/refine M_H on everything measured
-        self.hifi = Some(train_hifi(prob, pool, &self.core.measured));
+    }
+
+    /// The round (and any outlier re-measures) is fully resolved:
+    /// train M_H (line 22), advance the iteration, and select the next
+    /// `C_meas` (lines 23-24).  M_L's pool scores are borrowed, not
+    /// cloned, per iteration.
+    fn close_round(&mut self) {
+        let (prob, pool, scorer) = (self.core.prob, self.core.pool, self.core.scorer);
+        let rows = self.core.train_measured();
+        if !rows.is_empty() {
+            self.hifi = Some(train_hifi(prob, pool, &rows));
+        }
         self.core.refit();
         self.iter += 1;
-        // lines 23-24: score pool with M, select next batch.  M_L's
-        // pool scores are borrowed, not cloned, per iteration.
         if self.iter < self.iters {
             let hifi_scores;
-            let scores: &[f64] = if self.using_hifi {
-                hifi_scores = scorer.score(self.hifi.as_ref().unwrap(), &pool.feats.workflow);
-                &hifi_scores
-            } else {
-                &self.lowfi_scores
+            let scores: &[f64] = match (self.using_hifi, self.hifi.as_ref()) {
+                (true, Some(h)) => {
+                    hifi_scores = scorer.score(h, &pool.feats.workflow);
+                    &hifi_scores
+                }
+                _ => &self.lowfi_scores,
             };
             self.c_meas = top_unmeasured(scores, &self.core.measured_set, self.m_b);
             for &i in &self.c_meas {
@@ -314,6 +354,17 @@ impl CealSession<'_> {
             }
         } else {
             self.phase = Phase::Done;
+        }
+    }
+
+    /// Queue the outlier gate's re-measures if any reading is flagged;
+    /// otherwise close the round.
+    fn gate_or_close(&mut self) {
+        let flagged = self.core.outlier_remeasure_picks();
+        if flagged.is_empty() {
+            self.close_round();
+        } else {
+            self.gate_q = flagged.into_iter().map(|i| (i, 0)).collect();
         }
     }
 }
@@ -329,15 +380,47 @@ impl TunerSession for CealSession<'_> {
             "ask() with results outstanding"
         );
         if self.phase == Phase::Components {
-            let reqs = self.sample_components();
-            if reqs.is_empty() {
-                // m_R = 0 (or every component space infeasible): no
-                // isolated runs to charge — straight to phase 2.
-                self.open_workflow_phase();
-            } else {
+            if !self.comps_sampled {
+                let reqs = self.sample_components();
+                if reqs.is_empty() {
+                    // m_R = 0 (or every component space infeasible): no
+                    // isolated runs to charge — straight to phase 2.
+                    self.open_workflow_phase();
+                } else {
+                    self.core.asked_batches += 1;
+                    return MeasurementBatch::sequential(reqs);
+                }
+            } else if !self.comp_retry.is_empty() {
+                // failed isolated runs with attempt budget left
+                let retry = std::mem::take(&mut self.comp_retry);
                 self.core.asked_batches += 1;
+                let reqs = retry.iter().map(|(a, _)| a.req.clone()).collect();
+                self.pending = Pending::Components(retry);
                 return MeasurementBatch::sequential(reqs);
+            } else {
+                // defensive: tell() normally opens phase 2 itself
+                self.open_workflow_phase();
             }
+        }
+        if !self.batch_retry.is_empty() {
+            let retry = std::mem::take(&mut self.batch_retry);
+            self.core.asked_batches += 1;
+            let reqs = retry
+                .iter()
+                .map(|&(i, _)| self.core.workflow_request(i))
+                .collect();
+            self.pending = Pending::Batch(retry);
+            return MeasurementBatch::fan_out(reqs);
+        }
+        if !self.gate_q.is_empty() {
+            let gate = std::mem::take(&mut self.gate_q);
+            self.core.asked_batches += 1;
+            let reqs = gate
+                .iter()
+                .map(|&(i, _)| self.core.workflow_request(i))
+                .collect();
+            self.pending = Pending::Gate(gate);
+            return MeasurementBatch::sequential(reqs);
         }
         if self.phase == Phase::Done || self.c_meas.is_empty() {
             // an exhausted pool leaves nothing to select: the
@@ -349,30 +432,64 @@ impl TunerSession for CealSession<'_> {
         }
         // line 15: the C_meas fan-out
         self.core.asked_batches += 1;
-        let reqs: Vec<MeasurementRequest> = self
-            .c_meas
-            .iter()
-            .map(|&i| self.core.workflow_request(i))
+        let picks: Vec<(usize, usize)> = std::mem::take(&mut self.c_meas)
+            .into_iter()
+            .map(|i| (i, 0))
             .collect();
-        self.pending = Pending::Batch(std::mem::take(&mut self.c_meas));
+        let reqs: Vec<MeasurementRequest> = picks
+            .iter()
+            .map(|&(i, _)| self.core.workflow_request(i))
+            .collect();
+        self.pending = Pending::Batch(picks);
         MeasurementBatch::fan_out(reqs)
     }
 
     fn tell(&mut self, results: &[MeasurementResult]) {
         self.core.told_batches += 1;
+        let max_retries = self.core.policy.max_retries;
         match std::mem::replace(&mut self.pending, Pending::None) {
             Pending::None => panic!("tell() without an outstanding batch"),
-            Pending::Components(slots) => {
-                assert_eq!(results.len(), slots.len(), "tell() arity mismatch");
-                for ((slot, x), r) in slots.into_iter().zip(results) {
-                    self.samples[slot].push(x, r.value);
-                    self.core.record_component(r.value);
+            Pending::Components(attempts) => {
+                let core = &mut self.core;
+                let (ok, retry) = triage_results(attempts, results, max_retries, |_, att| {
+                    core.charge_failed_component(att)
+                });
+                for (a, y) in ok {
+                    self.samples[a.slot].push(a.x, y);
+                    self.core.record_component(y);
                 }
-                self.open_workflow_phase();
+                self.comp_retry = retry;
+                if self.comp_retry.is_empty() {
+                    // phase 1 resolved (permanently lost runs are
+                    // skipped: the component models train on less)
+                    self.open_workflow_phase();
+                }
             }
             Pending::Batch(idxs) => {
-                assert_eq!(results.len(), idxs.len(), "tell() arity mismatch");
-                self.absorb_batch(idxs, results);
+                let core = &mut self.core;
+                let (ok, retry) = triage_results(idxs, results, max_retries, |&i, att| {
+                    core.charge_failed_workflow(i, att)
+                });
+                self.round_ok.extend(ok);
+                self.batch_retry = retry;
+                if !self.batch_retry.is_empty() {
+                    return; // round unresolved: re-ask the failures first
+                }
+                self.record_round();
+                self.gate_or_close();
+            }
+            Pending::Gate(picks) => {
+                let core = &mut self.core;
+                let (ok, retry) = triage_results(picks, results, max_retries, |&i, att| {
+                    core.charge_failed_workflow(i, att)
+                });
+                for (i, y) in ok {
+                    self.core.replace_workflow(i, y);
+                }
+                self.gate_q = retry;
+                if self.gate_q.is_empty() {
+                    self.gate_or_close();
+                }
             }
         }
     }
@@ -392,9 +509,14 @@ impl TunerSession for CealSession<'_> {
     }
 
     fn finish(self: Box<Self>) -> TunerOutput {
-        let model = self.hifi.expect("finish() before any iteration was told");
+        // a total measurement blackout leaves no model: fall back to a
+        // constant so the session still yields a valid output
+        let model = self
+            .hifi
+            .unwrap_or_else(|| Ensemble::constant(1, 0.0));
         let core = self.core;
-        let best_idx = searcher_best(&model, core.pool, core.scorer, &core.measured);
+        let rows = core.train_measured();
+        let best_idx = searcher_best(&model, core.pool, core.scorer, &rows);
         core.into_output(model, best_idx)
     }
 
@@ -404,6 +526,10 @@ impl TunerSession for CealSession<'_> {
 
     fn diagnostics(&self) -> &[String] {
         self.core.diag.captured()
+    }
+
+    fn set_failure_policy(&mut self, policy: FailurePolicy) {
+        self.core.policy = policy;
     }
 }
 
@@ -534,6 +660,51 @@ mod tests {
         assert!(st.component_runs > 0);
         assert!(st.workflow_runs > 0);
         let out = session.finish();
+        assert!(out.best_idx < pool.len());
+    }
+
+    /// A failed pick inside the `C_meas` fan-out is re-asked (as a
+    /// fan-out sub-batch) before the iteration advances and the model
+    /// refits; the round closes on the combined deliveries.
+    #[test]
+    fn fan_out_failures_retry_before_the_round_closes() {
+        use super::super::session::{BatchMode, Evaluator, FailureKind};
+        let prob = problem();
+        let pool = Pool::generate(&prob, 150, 37);
+        let tuner = Ceal::new(CealParams::no_hist());
+        let mut rng = Pcg32::new(14, 14);
+        let mut session = tuner.session(&prob, &pool, &Scorer::Native, 30, &mut rng);
+        let mut col = Collector::new(&prob, Pcg32::new(15, 15));
+
+        let comps = session.ask();
+        session.tell(&col.evaluate(&comps));
+        let refits_before = session.state().model_refits;
+
+        // first C_meas round: fail the first pick
+        let round = session.ask();
+        assert_eq!(round.mode, BatchMode::FanOut);
+        let mut results = col.evaluate(&round);
+        results[0] = MeasurementResult::failed(FailureKind::Crash);
+        session.tell(&results);
+        assert_eq!(session.state().failed_runs, 1);
+        // round unresolved: no refit yet, retry batch is a fan-out
+        assert_eq!(session.state().model_refits, refits_before);
+        let retry = session.ask();
+        assert_eq!(retry.mode, BatchMode::FanOut);
+        assert_eq!(retry.len(), 1);
+        session.tell(&col.evaluate(&retry));
+        // now the round closed: the iteration refit happened
+        assert_eq!(session.state().model_refits, refits_before + 1);
+
+        loop {
+            let batch = session.ask();
+            if batch.is_empty() {
+                break;
+            }
+            session.tell(&col.evaluate(&batch));
+        }
+        let out = session.finish();
+        assert_eq!(out.failed_runs, 1);
         assert!(out.best_idx < pool.len());
     }
 

@@ -169,9 +169,10 @@ impl Pool {
         let n = self.len();
         let nf = self.feats.n_workflow.min(F_MAX);
         let xs = &self.feats.workflow;
-        let by_dist_then_index = |a: &(f64, usize), b: &(f64, usize)| {
-            a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1))
-        };
+        // total_cmp: same order as partial_cmp for the finite
+        // distances this sees, with no NaN panic path
+        let by_dist_then_index =
+            |a: &(f64, usize), b: &(f64, usize)| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1));
         let width = crate::util::parallel::width_for(n, KNN_PAR_MIN);
         let mut graph: Vec<Vec<usize>> = vec![Vec::new(); n];
         crate::util::parallel::for_each_chunk_mut(width, ROWS, &mut graph, |ci, rows| {
@@ -358,10 +359,13 @@ pub struct TunerOutput {
     pub measured: Vec<(usize, f64)>,
     /// Searcher's pick: pool index with the best predicted objective.
     pub best_idx: usize,
-    /// Total collection cost (incl. component runs unless historical).
+    /// Total collection cost (incl. component runs unless historical,
+    /// plus wall-clock charges for failed measurement attempts).
     pub collection_cost: f64,
     /// Workflow runs actually performed.
     pub workflow_runs: usize,
+    /// Measurement attempts that failed or timed out.
+    pub failed_runs: usize,
 }
 
 /// An auto-tuning algorithm.
@@ -515,8 +519,10 @@ pub fn top_unmeasured(
         idx.clear();
         return idx;
     }
+    // total_cmp keeps a degenerate (NaN-scored) model from panicking
+    // mid-sort; NaN sorts last instead, after every real score
     let by_score_then_index =
-        |a: &usize, b: &usize| scores[*a].partial_cmp(&scores[*b]).unwrap().then(a.cmp(b));
+        |a: &usize, b: &usize| scores[*a].total_cmp(&scores[*b]).then(a.cmp(b));
     if k < idx.len() {
         idx.select_nth_unstable_by(k - 1, by_score_then_index);
         idx.truncate(k);

@@ -1,0 +1,423 @@
+//! Deterministic fault injection for the measurement path.
+//!
+//! [`FaultInjector`] wraps any [`Evaluator`] and makes some of its
+//! answers fail, time out, straggle or arrive silently corrupted,
+//! according to a [`FaultPlan`].  The injector follows the same
+//! derivation discipline as `Collector::measure_config_batch`'s
+//! per-slot noise streams: every fault decision is drawn from a fresh
+//! [`Pcg32`] keyed by `(injector seed, request fingerprint, attempt
+//! number)`, never from a shared stream consumed across the batch.
+//! Consequences:
+//!
+//! * the fault schedule is a pure function of the request sequence —
+//!   the same session asking the same requests hits the same faults,
+//!   bit for bit, regardless of thread count or batch packing;
+//! * a *retry* of a request is a fresh attempt (the per-fingerprint
+//!   occurrence counter advances), so transient failures are
+//!   survivable rather than sticky;
+//! * composing with [`TraceRecorder`](super::trace::TraceRecorder)
+//!   records post-injection outcomes, so a faulted session replays
+//!   bit-exactly without re-running the injector.
+//!
+//! Requests the injector fails outright (crash/timeout) are *not*
+//! forwarded to the wrapped evaluator: the run never happened, so the
+//! simulator's noise stream is not consumed for that slot.  Surviving
+//! requests are forwarded as a sub-batch in the original mode and
+//! order — safe under both batch modes because fan-out slots draw from
+//! per-slot child streams (see the partial-batch notes in
+//! [`super::session`]).
+
+use std::collections::HashMap;
+
+use crate::util::rng::{fnv1a, Pcg32};
+
+use super::session::{
+    BatchMode, Evaluator, FailureKind, MeasurementBatch, MeasurementRequest, MeasurementResult,
+};
+
+/// What to inject and how often.  All probabilities are independent
+/// per measurement attempt, in `[0, 1)`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultPlan {
+    /// Probability an attempt fails outright (crash or transport
+    /// loss, split evenly).
+    pub p_fail: f64,
+    /// Probability an attempt exceeds its deadline.
+    pub p_timeout: f64,
+    /// Probability a delivered reading straggles: its observed cost is
+    /// multiplied by `straggler_mult`.
+    pub p_straggle: f64,
+    pub straggler_mult: f64,
+    /// Probability a delivered reading is silently corrupted: scaled
+    /// by `corrupt_mult` or `1/corrupt_mult` (one more draw decides
+    /// the direction), so corruption can fake both a terrible and a
+    /// too-good-to-be-true configuration.
+    pub p_corrupt: f64,
+    pub corrupt_mult: f64,
+    /// Isolated runs of this component index always crash (targeted
+    /// per-component failure), if set.
+    pub target_component: Option<usize>,
+}
+
+impl FaultPlan {
+    /// No faults at all; wrapping an evaluator with this plan is an
+    /// exact identity (pinned by a test below).
+    pub fn none() -> FaultPlan {
+        FaultPlan {
+            p_fail: 0.0,
+            p_timeout: 0.0,
+            p_straggle: 0.0,
+            straggler_mult: 1.0,
+            p_corrupt: 0.0,
+            corrupt_mult: 1.0,
+            target_component: None,
+        }
+    }
+
+    /// The CLI's `--faults p_fail,p_timeout,seed` plan: transient
+    /// failures and timeouts, plus a light corruption/straggler tail
+    /// scaled off the failure rate so the outlier gate has something
+    /// real to catch.
+    pub fn transient(p_fail: f64, p_timeout: f64) -> FaultPlan {
+        FaultPlan {
+            p_fail,
+            p_timeout,
+            p_straggle: p_fail / 4.0,
+            straggler_mult: 3.0,
+            p_corrupt: p_fail / 8.0,
+            corrupt_mult: 50.0,
+            target_component: None,
+        }
+    }
+
+    pub fn is_none(&self) -> bool {
+        *self == FaultPlan::none()
+    }
+}
+
+/// A fault plan plus the seed of its schedule stream — everything
+/// needed to reproduce a fault schedule exactly.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultSpec {
+    pub plan: FaultPlan,
+    pub seed: u64,
+}
+
+impl FaultSpec {
+    /// Per-repetition schedule seed: campaigns give every repetition
+    /// its own independent fault stream, derived deterministically so
+    /// rep-level parallelism cannot reorder schedules.
+    pub fn seed_for_rep(&self, rep: usize) -> u64 {
+        Pcg32::new(self.seed, rep as u64).next_u64()
+    }
+}
+
+/// One decided fate for a request attempt.
+enum Fate {
+    /// Run it; scale the delivered reading by `mult` (1.0 = clean).
+    Deliver { mult: f64 },
+    Fail(FailureKind),
+    TimeOut,
+}
+
+/// An [`Evaluator`] wrapper that injects deterministic faults (module
+/// docs).  Compose as `TraceRecorder(FaultInjector(Collector))` to
+/// record a faulted session.
+pub struct FaultInjector<'e> {
+    inner: &'e mut dyn Evaluator,
+    plan: FaultPlan,
+    seed: u64,
+    /// Attempt count per request fingerprint: retries of an identical
+    /// request draw a fresh fate.
+    attempts: HashMap<u64, u64>,
+}
+
+impl<'e> FaultInjector<'e> {
+    pub fn new(inner: &'e mut dyn Evaluator, plan: FaultPlan, seed: u64) -> FaultInjector<'e> {
+        FaultInjector {
+            inner,
+            plan,
+            seed,
+            attempts: HashMap::new(),
+        }
+    }
+
+    fn decide(&mut self, req: &MeasurementRequest) -> Fate {
+        if let (Some(target), MeasurementRequest::Component { comp, .. }) =
+            (self.plan.target_component, req)
+        {
+            if *comp == target {
+                return Fate::Fail(FailureKind::Crash);
+            }
+        }
+        let key = request_fingerprint(req);
+        let attempt = self.attempts.entry(key).or_insert(0);
+        let mut rng = Pcg32::new(self.seed ^ key, *attempt);
+        *attempt += 1;
+        // fixed draw order keeps schedules stable as plans evolve
+        let u_fail = rng.f64();
+        let u_timeout = rng.f64();
+        let u_straggle = rng.f64();
+        let u_corrupt = rng.f64();
+        let u_aux = rng.f64();
+        if u_fail < self.plan.p_fail {
+            return Fate::Fail(if u_aux < 0.5 {
+                FailureKind::Crash
+            } else {
+                FailureKind::Transport
+            });
+        }
+        if u_timeout < self.plan.p_timeout {
+            return Fate::TimeOut;
+        }
+        let mut mult = 1.0;
+        if u_straggle < self.plan.p_straggle {
+            mult *= self.plan.straggler_mult;
+        }
+        if u_corrupt < self.plan.p_corrupt {
+            mult *= if u_aux < 0.5 {
+                self.plan.corrupt_mult
+            } else {
+                1.0 / self.plan.corrupt_mult
+            };
+        }
+        Fate::Deliver { mult }
+    }
+}
+
+impl Evaluator for FaultInjector<'_> {
+    fn evaluate(&mut self, batch: &MeasurementBatch) -> Vec<MeasurementResult> {
+        let fates: Vec<Fate> = batch.requests.iter().map(|r| self.decide(r)).collect();
+        let survivors: Vec<MeasurementRequest> = batch
+            .requests
+            .iter()
+            .zip(&fates)
+            .filter(|(_, f)| matches!(f, Fate::Deliver { .. }))
+            .map(|(r, _)| r.clone())
+            .collect();
+        let mut delivered = if survivors.is_empty() {
+            Vec::new()
+        } else {
+            self.inner.evaluate(&MeasurementBatch {
+                mode: batch.mode,
+                requests: survivors,
+            })
+        }
+        .into_iter();
+        fates
+            .into_iter()
+            .map(|fate| match fate {
+                Fate::Deliver { mult } => {
+                    let r = delivered
+                        .next()
+                        .expect("inner evaluator answered every surviving request");
+                    match r.value() {
+                        Some(v) if mult != 1.0 => MeasurementResult::ok(v * mult),
+                        _ => r,
+                    }
+                }
+                Fate::Fail(kind) => MeasurementResult::failed(kind),
+                Fate::TimeOut => MeasurementResult::timed_out(),
+            })
+            .collect()
+    }
+}
+
+/// Stable fingerprint of a request (what it *is*, not where it sits
+/// in a batch): workflow requests hash their pool index, component
+/// requests their component index and exact configuration.
+fn request_fingerprint(req: &MeasurementRequest) -> u64 {
+    let mut bytes = Vec::with_capacity(40);
+    match req {
+        MeasurementRequest::Workflow { pool_idx, .. } => {
+            bytes.push(0u8);
+            bytes.extend_from_slice(&(*pool_idx as u64).to_le_bytes());
+        }
+        MeasurementRequest::Component { comp, config } => {
+            bytes.push(1u8);
+            bytes.extend_from_slice(&(*comp as u64).to_le_bytes());
+            for v in config {
+                bytes.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+    }
+    fnv1a(&bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Config, WorkflowId};
+    use crate::sim::Objective;
+    use crate::tuner::common::{Collector, Pool, Problem};
+    use crate::tuner::session::MeasurementOutcome;
+
+    fn workflow_batch(pool: &Pool, idxs: &[usize], mode: BatchMode) -> MeasurementBatch {
+        MeasurementBatch {
+            mode,
+            requests: idxs
+                .iter()
+                .map(|&i| MeasurementRequest::Workflow {
+                    pool_idx: i,
+                    config: pool.configs[i].clone(),
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn no_fault_plan_is_identity() {
+        let prob = Problem::new(WorkflowId::LV, Objective::CompTime);
+        let pool = Pool::generate(&prob, 30, 5);
+        let rng = Pcg32::new(9, 0);
+        let batch = workflow_batch(&pool, &[1, 4, 9, 16], BatchMode::FanOut);
+
+        let mut bare = Collector::new(&prob, rng.clone());
+        let want = bare.evaluate(&batch);
+        let mut col = Collector::new(&prob, rng.clone());
+        let mut inj = FaultInjector::new(&mut col, FaultPlan::none(), 123);
+        let got = inj.evaluate(&batch);
+        assert_eq!(got, want);
+        assert_eq!(col.total_cost(), bare.total_cost());
+    }
+
+    #[test]
+    fn schedule_is_deterministic_and_seed_sensitive() {
+        let prob = Problem::new(WorkflowId::LV, Objective::CompTime);
+        let pool = Pool::generate(&prob, 40, 5);
+        let rng = Pcg32::new(2, 0);
+        let plan = FaultPlan::transient(0.4, 0.1);
+        let batch = workflow_batch(&pool, &(0..40).collect::<Vec<_>>(), BatchMode::FanOut);
+
+        let run = |seed: u64| {
+            let mut col = Collector::new(&prob, rng.clone());
+            let mut inj = FaultInjector::new(&mut col, plan, seed);
+            inj.evaluate(&batch)
+        };
+        let a = run(7);
+        assert_eq!(a, run(7), "same seed, same schedule");
+        assert_ne!(a, run(8), "different seed, different schedule");
+        let failures = a.iter().filter(|r| !r.is_ok()).count();
+        assert!(failures > 0, "a 40-request batch at p~0.5 must lose some");
+        assert!(failures < 40, "... and keep some");
+    }
+
+    #[test]
+    fn schedule_ignores_batch_packing() {
+        // the same requests split across different batch shapes must
+        // meet the same fates — the schedule keys on the request, not
+        // on batch position
+        let prob = Problem::new(WorkflowId::LV, Objective::CompTime);
+        let pool = Pool::generate(&prob, 30, 5);
+        let rng = Pcg32::new(4, 0);
+        let plan = FaultPlan::transient(0.5, 0.1);
+
+        let fates_of = |groups: &[&[usize]]| {
+            let mut col = Collector::new(&prob, rng.clone());
+            let mut inj = FaultInjector::new(&mut col, plan, 11);
+            groups
+                .iter()
+                .flat_map(|g| {
+                    inj.evaluate(&workflow_batch(&pool, g, BatchMode::FanOut))
+                        .into_iter()
+                        .map(|r| r.is_ok())
+                        .collect::<Vec<_>>()
+                })
+                .collect::<Vec<bool>>()
+        };
+        assert_eq!(
+            fates_of(&[&[3, 5, 8, 13, 21]]),
+            fates_of(&[&[3], &[5, 8], &[13, 21]])
+        );
+    }
+
+    #[test]
+    fn retries_draw_fresh_fates() {
+        let plan = FaultPlan {
+            p_fail: 0.5,
+            ..FaultPlan::none()
+        };
+        // a stub evaluator so fates are observable without a simulator
+        struct Ones;
+        impl Evaluator for Ones {
+            fn evaluate(&mut self, batch: &MeasurementBatch) -> Vec<MeasurementResult> {
+                batch.requests.iter().map(|_| MeasurementResult::ok(1.0)).collect()
+            }
+        }
+        let mut inner = Ones;
+        let mut inj = FaultInjector::new(&mut inner, plan, 3);
+        let req = MeasurementRequest::Workflow {
+            pool_idx: 17,
+            config: Config(vec![]),
+        };
+        let batch = MeasurementBatch::sequential(vec![req]);
+        let fates: Vec<bool> = (0..32).map(|_| inj.evaluate(&batch)[0].is_ok()).collect();
+        assert!(fates.iter().any(|&b| b), "some attempt must survive");
+        assert!(fates.iter().any(|&b| !b), "some attempt must fail");
+    }
+
+    #[test]
+    fn targeted_component_always_crashes() {
+        struct Ones;
+        impl Evaluator for Ones {
+            fn evaluate(&mut self, batch: &MeasurementBatch) -> Vec<MeasurementResult> {
+                batch.requests.iter().map(|_| MeasurementResult::ok(1.0)).collect()
+            }
+        }
+        let plan = FaultPlan {
+            target_component: Some(1),
+            ..FaultPlan::none()
+        };
+        let mut inner = Ones;
+        let mut inj = FaultInjector::new(&mut inner, plan, 0);
+        let batch = MeasurementBatch::sequential(vec![
+            MeasurementRequest::Component {
+                comp: 0,
+                config: vec![4],
+            },
+            MeasurementRequest::Component {
+                comp: 1,
+                config: vec![4],
+            },
+        ]);
+        let res = inj.evaluate(&batch);
+        assert_eq!(res[0].outcome, MeasurementOutcome::Ok(1.0));
+        assert_eq!(
+            res[1].outcome,
+            MeasurementOutcome::Failed(FailureKind::Crash)
+        );
+    }
+
+    #[test]
+    fn corruption_scales_delivered_values() {
+        struct Ones;
+        impl Evaluator for Ones {
+            fn evaluate(&mut self, batch: &MeasurementBatch) -> Vec<MeasurementResult> {
+                batch.requests.iter().map(|_| MeasurementResult::ok(1.0)).collect()
+            }
+        }
+        let plan = FaultPlan {
+            p_corrupt: 1.0,
+            corrupt_mult: 50.0,
+            ..FaultPlan::none()
+        };
+        let mut inner = Ones;
+        let mut inj = FaultInjector::new(&mut inner, plan, 5);
+        let batch = MeasurementBatch::sequential(
+            (0..16)
+                .map(|i| MeasurementRequest::Workflow {
+                    pool_idx: i,
+                    config: Config(vec![]),
+                })
+                .collect(),
+        );
+        let res = inj.evaluate(&batch);
+        for r in &res {
+            let v = r.value().expect("corruption still delivers");
+            assert!(v == 50.0 || v == 1.0 / 50.0, "scaled by the mult, got {v}");
+        }
+        // both directions occur across 16 independent draws
+        assert!(res.iter().any(|r| r.value() == Some(50.0)));
+        assert!(res.iter().any(|r| r.value() == Some(1.0 / 50.0)));
+    }
+}

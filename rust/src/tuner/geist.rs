@@ -16,8 +16,10 @@ use super::common::{
     TunerOutput,
 };
 use super::session::{
-    MeasurementBatch, MeasurementResult, SessionCore, SessionState, TunerSession,
+    triage_results, FailurePolicy, MeasurementBatch, MeasurementResult, SessionCore,
+    SessionState, TunerSession,
 };
+use crate::gbt::Ensemble;
 use crate::surrogate::Scorer;
 use crate::util::rng::Pcg32;
 use crate::util::stats;
@@ -113,6 +115,9 @@ impl Tuner for Geist {
             iter: 0,
             bootstrapped: false,
             pending: Vec::new(),
+            retry: Vec::new(),
+            in_gate: false,
+            forced_done: false,
         })
     }
 }
@@ -125,12 +130,39 @@ struct GeistSession<'a> {
     batch: usize,
     iter: usize,
     bootstrapped: bool,
-    pending: Vec<usize>,
+    /// In-flight (pool index, attempt) pairs.
+    pending: Vec<(usize, usize)>,
+    /// Failed picks with attempt budget left, re-asked next batch.
+    retry: Vec<(usize, usize)>,
+    /// True while the in-flight batch re-measures gate-flagged points.
+    in_gate: bool,
+    /// Set when the pool runs dry before the iteration budget does.
+    forced_done: bool,
 }
 
 impl GeistSession<'_> {
     fn done(&self) -> bool {
-        self.bootstrapped && (self.batch == 0 || self.iter >= self.iters)
+        self.forced_done || (self.bootstrapped && (self.batch == 0 || self.iter >= self.iters))
+    }
+
+    fn issue(&mut self, picks: Vec<(usize, usize)>) -> MeasurementBatch {
+        self.core.asked_batches += 1;
+        let reqs = picks
+            .iter()
+            .map(|&(i, _)| self.core.workflow_request(i))
+            .collect();
+        self.pending = picks;
+        MeasurementBatch::sequential(reqs)
+    }
+
+    /// The logical batch is fully resolved: advance the iteration
+    /// (GEIST trains only at `finish`, so there is nothing to refit).
+    fn close_batch(&mut self) {
+        if self.bootstrapped {
+            self.iter += 1;
+        } else {
+            self.bootstrapped = true;
+        }
     }
 
     /// One iteration's picks: exploit (label propagation over the k-NN
@@ -164,10 +196,11 @@ impl GeistSession<'_> {
             self.core.measured_set.insert(i);
         }
         if n_explore > 0 {
+            let avail = pool.len() - self.core.measured_set.len();
             picks.extend(random_unmeasured(
                 pool,
                 &self.core.measured_set,
-                n_explore,
+                n_explore.min(avail),
                 &mut self.core.sel_rng,
             ));
         }
@@ -182,37 +215,66 @@ impl TunerSession for GeistSession<'_> {
 
     fn ask(&mut self) -> MeasurementBatch {
         assert!(self.pending.is_empty(), "ask() with results outstanding");
+        if !self.retry.is_empty() {
+            let retry = std::mem::take(&mut self.retry);
+            return self.issue(retry);
+        }
         if self.done() {
             return MeasurementBatch::empty();
         }
-        self.core.asked_batches += 1;
+        self.in_gate = false;
         let picks = if !self.bootstrapped {
+            let avail = self.core.pool.len() - self.core.measured_set.len();
             random_unmeasured(
                 self.core.pool,
                 &self.core.measured_set,
-                self.m0,
+                self.m0.min(avail),
                 &mut self.core.sel_rng,
             )
         } else {
             self.iteration_picks()
         };
-        let reqs = self.core.take_workflow_picks(&picks);
-        self.pending = picks;
-        MeasurementBatch::sequential(reqs)
+        if picks.is_empty() {
+            self.forced_done = true;
+            return MeasurementBatch::empty();
+        }
+        for &i in &picks {
+            self.core.measured_set.insert(i);
+        }
+        self.issue(picks.into_iter().map(|i| (i, 0)).collect())
     }
 
     fn tell(&mut self, results: &[MeasurementResult]) {
-        let picks = std::mem::take(&mut self.pending);
-        assert_eq!(results.len(), picks.len(), "tell() arity mismatch");
+        let pending = std::mem::take(&mut self.pending);
         self.core.told_batches += 1;
-        for (&i, r) in picks.iter().zip(results) {
-            self.core.record_workflow(i, r.value);
+        let max_retries = self.core.policy.max_retries;
+        let in_gate = self.in_gate;
+        let core = &mut self.core;
+        let (ok, retry) = triage_results(pending, results, max_retries, |&i, att| {
+            core.charge_failed_workflow(i, att)
+        });
+        for (i, y) in ok {
+            if in_gate {
+                self.core.replace_workflow(i, y);
+            } else {
+                self.core.record_workflow(i, y);
+            }
         }
-        if self.bootstrapped {
-            self.iter += 1;
-        } else {
-            self.bootstrapped = true;
+        self.retry = retry;
+        if !self.retry.is_empty() {
+            return; // batch unresolved: re-ask the failures first
         }
+        let flagged = self.core.outlier_remeasure_picks();
+        if !flagged.is_empty() {
+            // re-measure flagged readings before closing the iteration
+            self.in_gate = true;
+            self.retry = flagged.into_iter().map(|i| (i, 0)).collect();
+            return;
+        }
+        if self.in_gate {
+            self.in_gate = false;
+        }
+        self.close_batch();
     }
 
     fn state(&self) -> SessionState {
@@ -229,9 +291,19 @@ impl TunerSession for GeistSession<'_> {
     fn finish(self: Box<Self>) -> TunerOutput {
         assert!(self.done(), "finish() before the session completed");
         let core = self.core;
-        let model = train_hifi(core.prob, core.pool, &core.measured);
-        let best_idx = searcher_best(&model, core.pool, core.scorer, &core.measured);
+        let rows = core.train_measured();
+        let model = if rows.is_empty() {
+            // every measurement attempt failed: no data, constant model
+            Ensemble::constant(1, 0.0)
+        } else {
+            train_hifi(core.prob, core.pool, &rows)
+        };
+        let best_idx = searcher_best(&model, core.pool, core.scorer, &rows);
         core.into_output(model, best_idx)
+    }
+
+    fn set_failure_policy(&mut self, policy: FailurePolicy) {
+        self.core.policy = policy;
     }
 }
 

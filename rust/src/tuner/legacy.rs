@@ -55,6 +55,7 @@ pub fn run_rs(
         best_idx,
         collection_cost: col.total_cost(),
         workflow_runs: col.workflow_runs,
+        failed_runs: 0,
     }
 }
 
@@ -103,6 +104,7 @@ pub fn run_al(
         best_idx,
         collection_cost: col.total_cost(),
         workflow_runs: col.workflow_runs,
+        failed_runs: 0,
     }
 }
 
@@ -172,6 +174,7 @@ pub fn run_geist(
         best_idx,
         collection_cost: col.total_cost(),
         workflow_runs: col.workflow_runs,
+        failed_runs: 0,
     }
 }
 
@@ -329,6 +332,7 @@ pub fn run_ceal(
         best_idx,
         collection_cost: col.total_cost(),
         workflow_runs: col.workflow_runs,
+        failed_runs: 0,
     }
 }
 
@@ -469,6 +473,7 @@ pub fn run_alph(
         best_idx,
         collection_cost: col.total_cost(),
         workflow_runs: col.workflow_runs,
+        failed_runs: 0,
     }
 }
 
@@ -593,5 +598,6 @@ pub fn run_budgeted(
         best_idx,
         collection_cost: col.total_cost(),
         workflow_runs: col.workflow_runs,
+        failed_runs: 0,
     }
 }

@@ -22,6 +22,7 @@ pub mod alph;
 pub mod budgeted;
 pub mod ceal;
 pub mod common;
+pub mod faults;
 pub mod geist;
 pub mod legacy;
 pub mod rs;
@@ -33,10 +34,11 @@ pub use alph::Alph;
 pub use budgeted::{BudgetedCeal, BudgetedCealParams};
 pub use ceal::{Ceal, CealParams};
 pub use common::{Collector, Pool, Problem, Tuner, TunerOutput};
+pub use faults::{FaultInjector, FaultPlan, FaultSpec};
 pub use geist::Geist;
 pub use rs::RandomSampling;
 pub use session::{
-    drive, BatchMode, DiagSink, Evaluator, MeasurementBatch, MeasurementRequest,
-    MeasurementResult, SessionState, TunerSession,
+    drive, BatchMode, DiagSink, Evaluator, FailureKind, FailurePolicy, MeasurementBatch,
+    MeasurementOutcome, MeasurementRequest, MeasurementResult, SessionState, TunerSession,
 };
-pub use trace::{TraceHeader, TraceRecorder, TraceReplayer, TRACE_VERSION};
+pub use trace::{TraceError, TraceHeader, TraceRecorder, TraceReplayer, TRACE_VERSION};

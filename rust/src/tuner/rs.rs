@@ -2,13 +2,20 @@
 //! uniformly random pool configurations, train once, search.
 //!
 //! Session shape: one sequential batch of `m` random picks, then done.
+//! Under failures the session retries each failed pick up to the
+//! policy's attempt budget, then substitutes fresh random picks for
+//! permanently lost ones (bounded rounds), and finally — with the
+//! outlier gate armed — re-measures flagged readings once before
+//! training.
 
 use super::common::{
     random_unmeasured, searcher_best, train_hifi, Pool, Problem, Tuner, TunerOutput,
 };
 use super::session::{
-    MeasurementBatch, MeasurementResult, SessionCore, SessionState, TunerSession,
+    triage_results, FailurePolicy, MeasurementBatch, MeasurementResult, SessionCore,
+    SessionState, TunerSession,
 };
+use crate::gbt::Ensemble;
 use crate::surrogate::Scorer;
 use crate::util::rng::Pcg32;
 
@@ -31,6 +38,11 @@ impl Tuner for RandomSampling {
             core: SessionCore::new(prob, pool, scorer, rng),
             m: m.min(pool.len()),
             pending: Vec::new(),
+            retry: Vec::new(),
+            in_gate: false,
+            issued_main: false,
+            sub_rounds: 0,
+            got: 0,
             done: false,
         })
     }
@@ -39,9 +51,30 @@ impl Tuner for RandomSampling {
 struct RsSession<'a> {
     core: SessionCore<'a>,
     m: usize,
-    /// Pool indices of the in-flight batch (empty when none).
-    pending: Vec<usize>,
+    /// In-flight (pool index, attempt) pairs (empty when none).
+    pending: Vec<(usize, usize)>,
+    /// Failed picks with attempt budget left, re-asked next batch.
+    retry: Vec<(usize, usize)>,
+    /// True while the in-flight batch re-measures gate-flagged points.
+    in_gate: bool,
+    issued_main: bool,
+    /// Substitute-sampling rounds spent replacing lost picks.
+    sub_rounds: usize,
+    /// Successfully recorded samples (gate re-measures not counted).
+    got: usize,
     done: bool,
+}
+
+impl RsSession<'_> {
+    fn issue(&mut self, picks: Vec<(usize, usize)>) -> MeasurementBatch {
+        self.core.asked_batches += 1;
+        let reqs = picks
+            .iter()
+            .map(|&(i, _)| self.core.workflow_request(i))
+            .collect();
+        self.pending = picks;
+        MeasurementBatch::sequential(reqs)
+    }
 }
 
 impl TunerSession for RsSession<'_> {
@@ -54,26 +87,81 @@ impl TunerSession for RsSession<'_> {
         if self.done {
             return MeasurementBatch::empty();
         }
-        self.core.asked_batches += 1;
-        let picks = random_unmeasured(
-            self.core.pool,
-            &self.core.measured_set,
-            self.m,
-            &mut self.core.sel_rng,
-        );
-        let reqs = self.core.take_workflow_picks(&picks);
-        self.pending = picks;
-        MeasurementBatch::sequential(reqs)
+        if !self.issued_main {
+            self.issued_main = true;
+            let picks = random_unmeasured(
+                self.core.pool,
+                &self.core.measured_set,
+                self.m,
+                &mut self.core.sel_rng,
+            );
+            for &i in &picks {
+                self.core.measured_set.insert(i);
+            }
+            return self.issue(picks.into_iter().map(|i| (i, 0)).collect());
+        }
+        if !self.retry.is_empty() {
+            let retry = std::mem::take(&mut self.retry);
+            return self.issue(retry);
+        }
+        // main batch and retries resolved: top up permanently lost
+        // picks with fresh random draws (bounded rounds)
+        let deficit = self.m.saturating_sub(self.got);
+        let avail = self.core.pool.len() - self.core.measured_set.len();
+        if !self.in_gate
+            && deficit > 0
+            && avail > 0
+            && self.sub_rounds < self.core.policy.substitute_rounds
+        {
+            self.sub_rounds += 1;
+            let k = deficit.min(avail);
+            let picks = random_unmeasured(
+                self.core.pool,
+                &self.core.measured_set,
+                k,
+                &mut self.core.sel_rng,
+            );
+            for &i in &picks {
+                self.core.measured_set.insert(i);
+            }
+            return self.issue(picks.into_iter().map(|i| (i, 0)).collect());
+        }
+        // sampling settled: give flagged readings their re-measure
+        let flagged = self.core.outlier_remeasure_picks();
+        if !flagged.is_empty() {
+            self.in_gate = true;
+            return self.issue(flagged.into_iter().map(|i| (i, 0)).collect());
+        }
+        self.done = true;
+        MeasurementBatch::empty()
     }
 
     fn tell(&mut self, results: &[MeasurementResult]) {
-        let picks = std::mem::take(&mut self.pending);
-        assert_eq!(results.len(), picks.len(), "tell() arity mismatch");
+        let pending = std::mem::take(&mut self.pending);
         self.core.told_batches += 1;
-        for (&i, r) in picks.iter().zip(results) {
-            self.core.record_workflow(i, r.value);
+        let max_retries = self.core.policy.max_retries;
+        let core = &mut self.core;
+        let (ok, retry) = triage_results(pending, results, max_retries, |&i, att| {
+            core.charge_failed_workflow(i, att)
+        });
+        for (i, y) in ok {
+            if self.in_gate {
+                self.core.replace_workflow(i, y);
+            } else {
+                self.core.record_workflow(i, y);
+                self.got += 1;
+            }
         }
-        self.done = true;
+        self.retry = retry;
+        // fault-free fast path: a fully answered main batch completes
+        // the session right here, as the pre-failure-aware code did
+        if !self.in_gate
+            && self.retry.is_empty()
+            && self.got >= self.m
+            && !self.core.policy.outlier_gate
+        {
+            self.done = true;
+        }
     }
 
     fn state(&self) -> SessionState {
@@ -84,9 +172,19 @@ impl TunerSession for RsSession<'_> {
     fn finish(self: Box<Self>) -> TunerOutput {
         assert!(self.done, "finish() before the session completed");
         let core = self.core;
-        let model = train_hifi(core.prob, core.pool, &core.measured);
-        let best_idx = searcher_best(&model, core.pool, core.scorer, &core.measured);
+        let rows = core.train_measured();
+        let model = if rows.is_empty() {
+            // every measurement attempt failed: no data, constant model
+            Ensemble::constant(1, 0.0)
+        } else {
+            train_hifi(core.prob, core.pool, &rows)
+        };
+        let best_idx = searcher_best(&model, core.pool, core.scorer, &rows);
         core.into_output(model, best_idx)
+    }
+
+    fn set_failure_policy(&mut self, policy: FailurePolicy) {
+        self.core.policy = policy;
     }
 }
 
@@ -95,6 +193,7 @@ mod tests {
     use super::*;
     use crate::config::WorkflowId;
     use crate::sim::Objective;
+    use crate::tuner::session::FailureKind;
 
     #[test]
     fn uses_exact_budget() {
@@ -136,7 +235,7 @@ mod tests {
         let batch = session.ask();
         assert_eq!(batch.len(), 10);
         let results: Vec<MeasurementResult> = (0..10)
-            .map(|k| MeasurementResult { value: 1.0 + k as f64 })
+            .map(|k| MeasurementResult::ok(1.0 + k as f64))
             .collect();
         session.tell(&results);
         let st = session.state();
@@ -146,5 +245,51 @@ mod tests {
         assert!(session.ask().is_empty());
         let out = session.finish();
         assert_eq!(out.workflow_runs, 10);
+    }
+
+    #[test]
+    fn retries_then_substitutes_lost_picks() {
+        let prob = Problem::new(WorkflowId::LV, Objective::ExecTime);
+        let pool = Pool::generate(&prob, 60, 9);
+        let mut rng = Pcg32::new(3, 3);
+        let mut session = RandomSampling.session(&prob, &pool, &Scorer::Native, 6, &mut rng);
+        session.set_failure_policy(FailurePolicy {
+            max_retries: 1,
+            ..FailurePolicy::default()
+        });
+
+        // main batch: fail the last two picks
+        let batch = session.ask();
+        assert_eq!(batch.len(), 6);
+        let mut results: Vec<MeasurementResult> = (0..4).map(|_| MeasurementResult::ok(2.0)).collect();
+        results.push(MeasurementResult::failed(FailureKind::Crash));
+        results.push(MeasurementResult::timed_out());
+        session.tell(&results);
+        assert_eq!(session.state().failed_runs, 2);
+        assert!(!session.state().done);
+
+        // retry batch re-asks exactly the two failures; fail one again
+        let retry = session.ask();
+        assert_eq!(retry.len(), 2);
+        session.tell(&[
+            MeasurementResult::ok(2.5),
+            MeasurementResult::failed(FailureKind::Transport),
+        ]);
+
+        // the exhausted pick is substituted with a fresh random one
+        let sub = session.ask();
+        assert_eq!(sub.len(), 1);
+        session.tell(&[MeasurementResult::ok(3.0)]);
+
+        assert!(session.ask().is_empty());
+        let st = session.state();
+        assert!(st.done);
+        assert_eq!(st.workflow_runs, 6);
+        assert_eq!(st.failed_runs, 3);
+        // failure charges landed in the budget accounting
+        assert!(st.collection_cost > 6.0 * 2.0);
+        let out = session.finish();
+        assert_eq!(out.measured.len(), 6);
+        assert_eq!(out.failed_runs, 3);
     }
 }

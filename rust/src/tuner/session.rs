@@ -30,6 +30,32 @@
 //! to keep in sync; for them the contract degenerates to "answer in
 //! order".  Record/replay ([`super::trace`]) verifies the contract: a
 //! replayed session re-issues exactly the recorded requests.
+//!
+//! # Partial batches and lost requests
+//!
+//! The arity contract is unconditional: an evaluator must return one
+//! [`MeasurementResult`] per request, in request order, **even when a
+//! measurement fails or never comes back**.  A lost, crashed or
+//! timed-out request is answered *in its slot* with
+//! [`MeasurementOutcome::Failed`] or [`MeasurementOutcome::TimedOut`]
+//! — never dropped, which would misalign every later slot of the
+//! batch.  The RNG contract is per-*attempt*, not per-value:
+//!
+//! * [`BatchMode::Sequential`]: each request consumes the noise stream
+//!   in order only if the evaluator actually runs it.  An evaluator
+//!   that fails a request *before* launching (the [`super::faults`]
+//!   injector's crash/timeout path) consumes nothing for that slot;
+//!   one that fails it *after* the run consumes the run's draws as
+//!   usual.  Either way is deterministic as long as the evaluator
+//!   itself is.
+//! * [`BatchMode::FanOut`]: every slot draws from an independent child
+//!   stream keyed by its slot index within the batch, so a failed slot
+//!   never shifts a sibling's draws — partial fan-out batches are
+//!   exactly why the per-slot derivation exists.
+//!
+//! Sessions re-request failed measurements themselves (bounded retry,
+//! see [`FailurePolicy`]); an evaluator must treat a re-issued request
+//! as a fresh attempt, not replay the failure.
 
 use std::collections::HashSet;
 
@@ -39,7 +65,11 @@ use crate::surrogate::lowfi::ComponentSamples;
 use crate::surrogate::Scorer;
 use crate::util::rng::Pcg32;
 
+use crate::util::stats;
+
 use super::common::{Collector, Pool, Problem, TunerOutput};
+
+pub use crate::sim::measurement::{FailureKind, MeasurementOutcome};
 
 /// One measurement a session needs performed.
 #[derive(Clone, Debug, PartialEq)]
@@ -54,11 +84,115 @@ pub enum MeasurementRequest {
     Component { comp: usize, config: Vec<i64> },
 }
 
-/// The result of one [`MeasurementRequest`]: the measured objective
-/// value (seconds or core-hours, per the problem's objective).
+/// The result of one [`MeasurementRequest`]: either the measured
+/// objective value (seconds or core-hours, per the problem's
+/// objective) or the failure that prevented one.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct MeasurementResult {
-    pub value: f64,
+    pub outcome: MeasurementOutcome,
+}
+
+impl MeasurementResult {
+    /// A delivered reading.
+    pub fn ok(value: f64) -> MeasurementResult {
+        MeasurementResult {
+            outcome: MeasurementOutcome::Ok(value),
+        }
+    }
+
+    /// A failed attempt (no reading).
+    pub fn failed(kind: FailureKind) -> MeasurementResult {
+        MeasurementResult {
+            outcome: MeasurementOutcome::Failed(kind),
+        }
+    }
+
+    /// An attempt abandoned at its deadline.
+    pub fn timed_out() -> MeasurementResult {
+        MeasurementResult {
+            outcome: MeasurementOutcome::TimedOut,
+        }
+    }
+
+    /// The delivered value, if any.
+    pub fn value(&self) -> Option<f64> {
+        self.outcome.value()
+    }
+
+    pub fn is_ok(&self) -> bool {
+        self.outcome.is_ok()
+    }
+}
+
+/// How a session responds to failed measurements: bounded retry with
+/// a backoff-shaped wall-clock charge, then substitution or skip, plus
+/// an optional robust outlier gate over delivered readings.
+///
+/// Failed runs are not free — a crashed or timed-out run still burned
+/// wall-clock before dying.  Each failed attempt is charged
+/// `failed_cost_frac × expected_cost × min(backoff_growth^attempt,
+/// max_backoff)` where `expected_cost` is the pool's expected
+/// objective value for the configuration (components use the mean
+/// observed component cost).  The growth term models retry backoff as
+/// cost rather than wall-clock sleep, so budget-gated tuners
+/// (BudgetedCeal) see retry spend in their per-sample gates.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FailurePolicy {
+    /// Re-measure attempts allowed after the first failure of a
+    /// request (0 = never retry).
+    pub max_retries: usize,
+    /// Fraction of the expected run cost charged per failed attempt.
+    pub failed_cost_frac: f64,
+    /// Multiplicative backoff of the charge per extra attempt.
+    pub backoff_growth: f64,
+    /// Cap on the backoff multiplier.
+    pub max_backoff: f64,
+    /// Enable the median/MAD outlier gate over delivered workflow
+    /// readings (one deterministic re-measure per flagged point, then
+    /// winsorized for surrogate fits and final selection).  Off by
+    /// default: on a fault-free path the gate must not perturb the
+    /// bit-pinned trajectories.
+    pub outlier_gate: bool,
+    /// Gate threshold in robust z-units on ln(y).
+    pub outlier_k: f64,
+    /// Rounds of substitute sampling a fixed-size session (random
+    /// sampling) may use to replace permanently failed picks.
+    pub substitute_rounds: usize,
+}
+
+impl Default for FailurePolicy {
+    fn default() -> FailurePolicy {
+        FailurePolicy {
+            max_retries: 2,
+            failed_cost_frac: 0.25,
+            backoff_growth: 2.0,
+            max_backoff: 4.0,
+            outlier_gate: false,
+            outlier_k: 6.0,
+            substitute_rounds: 2,
+        }
+    }
+}
+
+impl FailurePolicy {
+    /// The policy campaigns use under fault injection: default retry
+    /// budget with the outlier gate armed.
+    pub fn fault_tolerant() -> FailurePolicy {
+        FailurePolicy {
+            outlier_gate: true,
+            ..FailurePolicy::default()
+        }
+    }
+
+    /// Wall-clock charge for one failed attempt (`attempt` counts from
+    /// 0 on the first failure of a request).
+    pub(crate) fn failure_charge(&self, expected_cost: f64, attempt: usize) -> f64 {
+        let backoff = self
+            .backoff_growth
+            .powi(attempt as i32)
+            .min(self.max_backoff);
+        expected_cost * self.failed_cost_frac * backoff
+    }
 }
 
 /// How an evaluator must consume its randomness across a batch — part
@@ -163,8 +297,11 @@ pub struct SessionState {
     /// Individual measurements performed so far.
     pub workflow_runs: usize,
     pub component_runs: usize,
-    /// Σ objective over told measurements (budget accounting).
+    /// Σ objective over told measurements plus failure charges
+    /// (budget accounting).
     pub collection_cost: f64,
+    /// Failed/timed-out measurement attempts so far.
+    pub failed_runs: usize,
     /// Surrogate (re)fits performed so far.
     pub model_refits: usize,
     /// CEAL-family switch detection: `Some(true)` once the
@@ -204,6 +341,14 @@ pub trait TunerSession {
         let _ = sink;
     }
 
+    /// Configure how the session reacts to failed measurements.  Must
+    /// be called before the first `ask`; the built-in sessions all
+    /// honour it, the default is a no-op for sessions that never see
+    /// failures.
+    fn set_failure_policy(&mut self, policy: FailurePolicy) {
+        let _ = policy;
+    }
+
     /// Warnings captured so far (only under [`DiagSink::Capture`]).
     fn diagnostics(&self) -> &[String] {
         &[]
@@ -233,7 +378,7 @@ impl Evaluator for Collector<'_> {
                             self.measure_component(*comp, config)
                         }
                     };
-                    MeasurementResult { value }
+                    MeasurementResult::ok(value)
                 })
                 .collect(),
             BatchMode::FanOut => {
@@ -249,7 +394,7 @@ impl Evaluator for Collector<'_> {
                     .collect();
                 self.measure_config_batch(&cfgs)
                     .into_iter()
-                    .map(|value| MeasurementResult { value })
+                    .map(MeasurementResult::ok)
                     .collect()
             }
         }
@@ -299,6 +444,16 @@ pub(crate) struct SessionCore<'a> {
     pub(crate) component_runs: usize,
     workflow_cost: f64,
     component_cost: f64,
+    /// Failure charges, kept apart from the successful-run sums so the
+    /// fault-free accounting stays bitwise identical to the pinned
+    /// legacy trajectories (adding `+ 0.0` to a non-negative sum is a
+    /// bitwise no-op).
+    failed_workflow_cost: f64,
+    failed_component_cost: f64,
+    pub(crate) failed_runs: usize,
+    pub(crate) policy: FailurePolicy,
+    /// Pool indices that already spent their one outlier re-measure.
+    remeasured: HashSet<usize>,
     pub(crate) model_refits: usize,
     pub(crate) asked_batches: usize,
     pub(crate) told_batches: usize,
@@ -323,6 +478,11 @@ impl<'a> SessionCore<'a> {
             component_runs: 0,
             workflow_cost: 0.0,
             component_cost: 0.0,
+            failed_workflow_cost: 0.0,
+            failed_component_cost: 0.0,
+            failed_runs: 0,
+            policy: FailurePolicy::default(),
+            remeasured: HashSet::new(),
             model_refits: 0,
             asked_batches: 0,
             told_batches: 0,
@@ -361,12 +521,51 @@ impl<'a> SessionCore<'a> {
         self.component_cost += y;
     }
 
-    pub(crate) fn component_cost(&self) -> f64 {
-        self.component_cost
+    /// Replace pool index `i`'s recorded reading with a fresh
+    /// re-measure (the outlier gate's second opinion).  The re-measure
+    /// is a real run: it counts and costs like any other, but the
+    /// surrogate only ever sees the newer reading.
+    pub(crate) fn replace_workflow(&mut self, i: usize, y: f64) {
+        self.workflow_runs += 1;
+        self.workflow_cost += y;
+        if let Some(slot) = self.measured.iter_mut().rev().find(|(j, _)| *j == i) {
+            slot.1 = y;
+        }
+    }
+
+    /// Charge one failed workflow attempt at pool index `i` against
+    /// the budget (the run burned wall-clock before dying; the
+    /// expected cost is the pool's ground-truth objective value).
+    pub(crate) fn charge_failed_workflow(&mut self, i: usize, attempt: usize) {
+        let charge = self.policy.failure_charge(self.pool.truth[i], attempt);
+        self.failed_workflow_cost += charge;
+        self.failed_runs += 1;
+    }
+
+    /// Charge one failed isolated-component attempt.  The expected
+    /// cost is the mean observed component cost, falling back to the
+    /// pool's best workflow value when nothing has been observed yet —
+    /// always positive, so budget-gated phases terminate even under a
+    /// 100% failure rate.
+    pub(crate) fn charge_failed_component(&mut self, attempt: usize) {
+        let expected = if self.component_runs > 0 {
+            self.component_cost / self.component_runs as f64
+        } else {
+            self.pool.best_value()
+        };
+        self.failed_component_cost += self.policy.failure_charge(expected, attempt);
+        self.failed_runs += 1;
+    }
+
+    /// Component-side spend including failure charges — what
+    /// budget-gated component phases compare against their allowance.
+    pub(crate) fn component_spend(&self) -> f64 {
+        self.component_cost + self.failed_component_cost
     }
 
     pub(crate) fn total_cost(&self) -> f64 {
-        self.workflow_cost + self.component_cost
+        self.workflow_cost + self.component_cost + self.failed_workflow_cost
+            + self.failed_component_cost
     }
 
     pub(crate) fn refit(&mut self) {
@@ -387,9 +586,40 @@ impl<'a> SessionCore<'a> {
             workflow_runs: self.workflow_runs,
             component_runs: self.component_runs,
             collection_cost: self.total_cost(),
+            failed_runs: self.failed_runs,
             model_refits: self.model_refits,
             using_hifi,
         }
+    }
+
+    /// The measured rows a surrogate fit (or the final selection)
+    /// should see.  With the outlier gate off this is the raw record;
+    /// with it on, readings outside the median/MAD band on ln(y) are
+    /// winsorized to the band edge — the "down-weight" step that caps
+    /// a corrupted reading's influence without discarding the row.
+    pub(crate) fn train_measured(&self) -> Vec<(usize, f64)> {
+        if !self.policy.outlier_gate {
+            return self.measured.clone();
+        }
+        winsorize(&self.measured, self.policy.outlier_k).0
+    }
+
+    /// Pool indices whose delivered reading the gate currently flags
+    /// and which still have their one deterministic re-measure
+    /// available.  Marks the returned picks as spent, so every pool
+    /// index is re-measured at most once per session (bounding the
+    /// gate's extra runs).
+    pub(crate) fn outlier_remeasure_picks(&mut self) -> Vec<usize> {
+        if !self.policy.outlier_gate {
+            return Vec::new();
+        }
+        let (_, flagged) = winsorize(&self.measured, self.policy.outlier_k);
+        let picks: Vec<usize> = flagged
+            .into_iter()
+            .filter(|i| !self.remeasured.contains(i))
+            .collect();
+        self.remeasured.extend(picks.iter().copied());
+        picks
     }
 
     /// Finish into the tuner output (searcher already ran → `best_idx`).
@@ -398,10 +628,79 @@ impl<'a> SessionCore<'a> {
             model,
             measured: self.measured,
             best_idx,
-            collection_cost: self.workflow_cost + self.component_cost,
+            collection_cost: self.workflow_cost + self.component_cost
+                + self.failed_workflow_cost
+                + self.failed_component_cost,
             workflow_runs: self.workflow_runs,
+            failed_runs: self.failed_runs,
         }
     }
+}
+
+/// Median/MAD outlier gate on ln(y): readings more than `k` robust
+/// z-units from the median are clamped to the band edge.  Returns the
+/// winsorized rows and the flagged pool indices.  Needs at least four
+/// rows and a positive MAD to act (a degenerate spread means there is
+/// nothing robust to gate against).
+fn winsorize(measured: &[(usize, f64)], k: f64) -> (Vec<(usize, f64)>, Vec<usize>) {
+    if measured.len() < 4 {
+        return (measured.to_vec(), Vec::new());
+    }
+    let lns: Vec<f64> = measured
+        .iter()
+        .map(|&(_, y)| y.max(f64::MIN_POSITIVE).ln())
+        .collect();
+    let med = stats::median(&lns);
+    let devs: Vec<f64> = lns.iter().map(|l| (l - med).abs()).collect();
+    let mad = stats::median(&devs);
+    if mad <= 0.0 {
+        return (measured.to_vec(), Vec::new());
+    }
+    // 1.4826 makes MAD a consistent σ estimate under normality
+    let band = k * 1.4826 * mad;
+    let mut rows = measured.to_vec();
+    let mut flagged = Vec::new();
+    for (row, &ln_y) in rows.iter_mut().zip(&lns) {
+        if (ln_y - med).abs() > band {
+            flagged.push(row.0);
+            row.1 = (med + band * (ln_y - med).signum()).exp();
+        }
+    }
+    (rows, flagged)
+}
+
+/// Split one told batch into successes and retries.  `pending` pairs
+/// each request's session-side meta with its attempt counter (0 on
+/// first issue).  Every non-ok outcome invokes `charge` (failed
+/// attempts always cost wall-clock); entries with attempt budget left
+/// come back in the retry list with the counter advanced, exhausted
+/// ones are dropped.  Successes keep told order, which on the
+/// fault-free path is exactly batch order.
+pub(crate) fn triage_results<M>(
+    pending: Vec<(M, usize)>,
+    results: &[MeasurementResult],
+    max_retries: usize,
+    mut charge: impl FnMut(&M, usize),
+) -> (Vec<(M, f64)>, Vec<(M, usize)>) {
+    assert_eq!(
+        results.len(),
+        pending.len(),
+        "tell must answer the asked batch"
+    );
+    let mut ok = Vec::new();
+    let mut retry = Vec::new();
+    for ((meta, attempt), r) in pending.into_iter().zip(results) {
+        match r.value() {
+            Some(v) => ok.push((meta, v)),
+            None => {
+                charge(&meta, attempt);
+                if attempt < max_retries {
+                    retry.push((meta, attempt + 1));
+                }
+            }
+        }
+    }
+    (ok, retry)
 }
 
 /// Phase-1 component sampling shared by the CEAL-family sessions
@@ -489,6 +788,51 @@ mod tests {
         assert_eq!(d.captured(), ["kept"]);
     }
 
+    #[test]
+    fn failure_charge_backs_off_and_caps() {
+        let p = FailurePolicy::default();
+        assert_eq!(p.failure_charge(100.0, 0), 25.0);
+        assert_eq!(p.failure_charge(100.0, 1), 50.0);
+        assert_eq!(p.failure_charge(100.0, 2), 100.0);
+        // growth 2^3 = 8 capped at 4
+        assert_eq!(p.failure_charge(100.0, 3), 100.0);
+    }
+
+    #[test]
+    fn triage_splits_ok_retry_and_exhausted() {
+        let pending = vec![("a", 0), ("b", 0), ("c", 2)];
+        let results = [
+            MeasurementResult::ok(5.0),
+            MeasurementResult::failed(FailureKind::Crash),
+            MeasurementResult::timed_out(),
+        ];
+        let mut charged = Vec::new();
+        let (ok, retry) = triage_results(pending, &results, 2, |m, att| charged.push((*m, att)));
+        assert_eq!(ok, vec![("a", 5.0)]);
+        // "b" has budget left; "c" exhausted its two retries
+        assert_eq!(retry, vec![("b", 1)]);
+        assert_eq!(charged, vec![("b", 0), ("c", 2)]);
+    }
+
+    #[test]
+    fn winsorize_flags_and_clamps_outliers() {
+        let mut rows: Vec<(usize, f64)> = (0..12).map(|i| (i, 10.0 + (i % 3) as f64)).collect();
+        rows.push((12, 10.0 * 1e6)); // corrupted straggler
+        let (gated, flagged) = winsorize(&rows, 6.0);
+        assert_eq!(flagged, vec![12]);
+        assert!(gated[12].1 < 1e6, "clamped, got {}", gated[12].1);
+        assert!(gated[12].1 > 10.0, "clamps to the band edge, not the median");
+        // inliers untouched bitwise
+        for i in 0..12 {
+            assert_eq!(gated[i], rows[i]);
+        }
+
+        // degenerate spread (MAD 0) and tiny samples gate nothing
+        let flat: Vec<(usize, f64)> = (0..8).map(|i| (i, 3.0)).collect();
+        assert!(winsorize(&flat, 6.0).1.is_empty());
+        assert!(winsorize(&rows[..3], 6.0).1.is_empty());
+    }
+
     /// The collector evaluator must consume its RNG exactly like the
     /// direct measure / measure_pool_batch calls it replaces.
     #[test]
@@ -514,8 +858,8 @@ mod tests {
         ]);
         let res = via.evaluate(&batch);
         assert_eq!(res.len(), 2);
-        assert_eq!(res[0].value, d0);
-        assert_eq!(res[1].value, d1);
+        assert_eq!(res[0].value(), Some(d0));
+        assert_eq!(res[1].value(), Some(d1));
         assert_eq!(via.total_cost(), direct.total_cost());
 
         // fan-out: must match measure_pool_batch draw-for-draw
@@ -533,7 +877,7 @@ mod tests {
         );
         let res = via.evaluate(&batch);
         for (r, (_, y)) in res.iter().zip(&want) {
-            assert_eq!(r.value, *y);
+            assert_eq!(r.value(), Some(*y));
         }
         assert_eq!(via.workflow_runs, direct.workflow_runs);
         assert_eq!(via.total_cost(), direct.total_cost());

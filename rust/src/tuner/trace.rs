@@ -4,7 +4,7 @@
 //!
 //! A trace is a versioned JSON-lines file: one header line, then one
 //! line per measurement batch carrying the requests and the observed
-//! values.  [`TraceRecorder`] wraps a live evaluator and logs every
+//! outcomes.  [`TraceRecorder`] wraps a live evaluator and logs every
 //! batch it answers; [`TraceReplayer`] serves a recorded stream back,
 //! *verifying* that the session re-issues exactly the recorded
 //! requests — so a successful replay certifies the session's
@@ -13,37 +13,102 @@
 //! `ceal tune --record/--replay` (replaying a trace reconstructs the
 //! session's full internal state from the measurement history alone).
 //!
-//! Format (version 1):
+//! Format (version 2):
 //!
 //! ```text
-//! {"algo":"CEAL","format":"ceal-session-trace","m":10,"objective":"comp_time","pool":150,"scorer":"native","seed":"52897","version":1,"workflow":"CH5"}
+//! {"algo":"CEAL","format":"ceal-session-trace","m":10,"objective":"comp_time","pool":150,"scorer":"native","seed":"52897","version":2,"workflow":"CH5"}
 //! {"batch":0,"mode":"seq","reqs":[{"cfg":[430,8],"comp":0}],"ys":[12.5]}
-//! {"batch":1,"mode":"fanout","reqs":[{"pool":3},{"pool":17}],"ys":[101.25,99.5]}
+//! {"batch":1,"mode":"fanout","reqs":[{"pool":3},{"pool":17}],"ys":[101.25,"crash"]}
 //! ```
+//!
+//! Version 2 extends version 1 with fault-tolerant measurement
+//! outcomes: a `ys` entry is either a number (a delivered reading) or
+//! one of the strings `"crash"`, `"transport"`, `"corrupt"`,
+//! `"timeout"` (a failed attempt — see
+//! [`MeasurementOutcome`]); and the header may carry a `faults` object
+//! recording the [`FaultSpec`] the run was injected with, so `--replay`
+//! re-arms the same failure-handling policy.  Version-1 traces (all
+//! `ys` numeric, no `faults`) parse unchanged; this build *writes*
+//! version 2.
 //!
 //! Numbers round-trip exactly (shortest-round-trip float formatting on
 //! write, strtod on read); the seed is a string because u64 seeds can
-//! exceed f64's integer range.  A trace whose `version` differs from
-//! [`TRACE_VERSION`] is rejected up front with a clear error rather
-//! than replayed into garbage.
+//! exceed f64's integer range.  A trace whose `version` is newer than
+//! [`TRACE_VERSION`] is rejected up front with a clear
+//! [`TraceError::Version`] rather than replayed into garbage.  Replay
+//! mismatches no longer panic: the replayer *latches* the first
+//! [`TraceError`] (divergence, exhaustion), answers that batch — and
+//! every later one — with transport failures so the session can wind
+//! down through its normal failure handling, and surfaces the error
+//! through [`TraceReplayer::error`] for the caller to report.
 
 use std::io::Write;
 use std::path::Path;
 
+use crate::sim::{FailureKind, MeasurementOutcome};
 use crate::util::json::{self, Json};
 
 use super::ceal::CealParams;
+use super::faults::{FaultPlan, FaultSpec};
 use super::session::{BatchMode, Evaluator, MeasurementBatch, MeasurementRequest, MeasurementResult};
 
-/// The trace format version this build writes and reads.
-pub const TRACE_VERSION: u64 = 1;
+/// The trace format version this build writes.
+pub const TRACE_VERSION: u64 = 2;
+
+/// The oldest trace format version this build still reads.
+pub const TRACE_MIN_VERSION: u64 = 1;
 
 const TRACE_FORMAT: &str = "ceal-session-trace";
+
+/// Everything that can go wrong loading or replaying a trace.  The
+/// replayer's [`Evaluator`] impl cannot return errors (the trait has no
+/// error channel), so replay-time variants are latched on the replayer
+/// and surfaced after the run via [`TraceReplayer::error`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum TraceError {
+    /// The file could not be read.
+    Io(String),
+    /// The file is not a session trace at all.
+    NotATrace(String),
+    /// A trace from an incompatible (newer or pre-release) format.
+    Version(u64),
+    /// A structurally invalid header or batch line.
+    Malformed(String),
+    /// The session asked for more batches than the trace holds.
+    Exhausted { asked: usize, have: usize },
+    /// The session issued a different batch than was recorded.
+    Divergence { batch: usize, detail: String },
+}
+
+impl std::fmt::Display for TraceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TraceError::Io(e) => f.write_str(e),
+            TraceError::NotATrace(e) => f.write_str(e),
+            TraceError::Version(v) => write!(
+                f,
+                "unsupported session-trace version {v} (this build reads versions \
+                 {TRACE_MIN_VERSION}-{TRACE_VERSION}); re-record the trace with this binary"
+            ),
+            TraceError::Malformed(e) => f.write_str(e),
+            TraceError::Exhausted { asked, have } => write!(
+                f,
+                "trace exhausted: session asked batch {asked} but the trace holds {have} \
+                 (seed/algorithm/build mismatch?)"
+            ),
+            TraceError::Divergence { batch, detail } => {
+                write!(f, "replay divergence at batch {batch}: {detail}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for TraceError {}
 
 /// Trace metadata: everything needed to reconstruct the recorded
 /// session (the pool is regenerated deterministically from
 /// (workflow, objective, pool, seed); the session RNG from
-/// (seed, algo)).
+/// (seed, algo); the fault schedule from `faults`).
 #[derive(Clone, Debug, PartialEq)]
 pub struct TraceHeader {
     pub algo: String,
@@ -60,6 +125,11 @@ pub struct TraceHeader {
     /// CEAL/ALpH hyper-parameter overrides active at record time
     /// (`--iters/--m0/--mr`); `None` means the algorithm defaults.
     pub ceal_params: Option<CealParams>,
+    /// Fault-injection provenance (`--faults`): recorded so a replayed
+    /// session arms the same failure-handling policy that shaped the
+    /// recorded request stream.  `None` for fault-free runs and all
+    /// version-1 traces.
+    pub faults: Option<FaultSpec>,
 }
 
 impl TraceHeader {
@@ -85,34 +155,86 @@ impl TraceHeader {
                 ]),
             ));
         }
+        if let Some(spec) = &self.faults {
+            let mut fp = vec![
+                ("p_fail", Json::Num(spec.plan.p_fail)),
+                ("p_timeout", Json::Num(spec.plan.p_timeout)),
+                ("p_straggle", Json::Num(spec.plan.p_straggle)),
+                ("straggler_mult", Json::Num(spec.plan.straggler_mult)),
+                ("p_corrupt", Json::Num(spec.plan.p_corrupt)),
+                ("corrupt_mult", Json::Num(spec.plan.corrupt_mult)),
+                ("seed", Json::Str(spec.seed.to_string())),
+            ];
+            if let Some(t) = spec.plan.target_component {
+                fp.push(("target", Json::Num(t as f64)));
+            }
+            pairs.push(("faults", Json::obj(fp)));
+        }
         Json::obj(pairs)
     }
 
-    fn from_json(v: &Json) -> Result<TraceHeader, String> {
-        let str_field = |k: &str| -> Result<String, String> {
+    fn from_json(v: &Json) -> Result<TraceHeader, TraceError> {
+        let str_field = |k: &str| -> Result<String, TraceError> {
             v.get(k)
                 .and_then(Json::as_str)
                 .map(str::to_string)
-                .ok_or_else(|| format!("trace header missing string field '{k}'"))
+                .ok_or_else(|| {
+                    TraceError::Malformed(format!("trace header missing string field '{k}'"))
+                })
         };
-        let num_field = |k: &str| -> Result<usize, String> {
-            v.get(k)
-                .and_then(Json::as_usize)
-                .ok_or_else(|| format!("trace header missing numeric field '{k}'"))
+        let num_field = |k: &str| -> Result<usize, TraceError> {
+            v.get(k).and_then(Json::as_usize).ok_or_else(|| {
+                TraceError::Malformed(format!("trace header missing numeric field '{k}'"))
+            })
         };
         let seed: u64 = str_field("seed")?
             .parse()
-            .map_err(|e| format!("bad trace seed: {e}"))?;
+            .map_err(|e| TraceError::Malformed(format!("bad trace seed: {e}")))?;
+        let bad = |k: &str| TraceError::Malformed(format!("bad params.{k}"));
         let ceal_params = match v.get("params") {
             None => None,
             Some(p) => Some(CealParams {
                 iterations: p
                     .get("iterations")
                     .and_then(Json::as_usize)
-                    .ok_or("bad params.iterations")?,
-                m0_frac: p.get("m0_frac").and_then(Json::as_f64).ok_or("bad params.m0_frac")?,
-                mr_frac: p.get("mr_frac").and_then(Json::as_f64).ok_or("bad params.mr_frac")?,
+                    .ok_or_else(|| bad("iterations"))?,
+                m0_frac: p
+                    .get("m0_frac")
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| bad("m0_frac"))?,
+                mr_frac: p
+                    .get("mr_frac")
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| bad("mr_frac"))?,
             }),
+        };
+        let faults = match v.get("faults") {
+            None => None,
+            Some(fj) => {
+                let fbad =
+                    |k: &str| TraceError::Malformed(format!("bad faults.{k} in trace header"));
+                let f64_field = |k: &str| -> Result<f64, TraceError> {
+                    fj.get(k).and_then(Json::as_f64).ok_or_else(|| fbad(k))
+                };
+                let fseed: u64 = fj
+                    .get("seed")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| fbad("seed"))?
+                    .parse()
+                    .map_err(|_| fbad("seed"))?;
+                Some(FaultSpec {
+                    plan: FaultPlan {
+                        p_fail: f64_field("p_fail")?,
+                        p_timeout: f64_field("p_timeout")?,
+                        p_straggle: f64_field("p_straggle")?,
+                        straggler_mult: f64_field("straggler_mult")?,
+                        p_corrupt: f64_field("p_corrupt")?,
+                        corrupt_mult: f64_field("corrupt_mult")?,
+                        target_component: fj.get("target").and_then(Json::as_usize),
+                    },
+                    seed: fseed,
+                })
+            }
         };
         Ok(TraceHeader {
             algo: str_field("algo")?,
@@ -123,6 +245,7 @@ impl TraceHeader {
             seed,
             scorer: str_field("scorer")?,
             ceal_params,
+            faults,
         })
     }
 }
@@ -146,6 +269,27 @@ fn request_json(req: &MeasurementRequest) -> Json {
                 Json::Arr(config.iter().map(|&x| Json::Num(x as f64)).collect()),
             ),
         ]),
+    }
+}
+
+/// A `ys` entry: a number for a delivered reading, a stable fault name
+/// string otherwise.
+fn outcome_json(o: &MeasurementOutcome) -> Json {
+    match o.value() {
+        Some(v) => Json::Num(v),
+        None => Json::Str(
+            o.fault_name()
+                .expect("non-ok outcomes have fault names")
+                .into(),
+        ),
+    }
+}
+
+fn outcome_from_json(v: &Json) -> Option<MeasurementOutcome> {
+    match v {
+        Json::Num(y) => Some(MeasurementOutcome::Ok(*y)),
+        Json::Str(name) => MeasurementOutcome::from_fault_name(name),
+        _ => None,
     }
 }
 
@@ -208,7 +352,7 @@ impl<W: Write> Evaluator for TraceRecorder<'_, W> {
                 ),
                 (
                     "ys",
-                    Json::arr_f64(&results.iter().map(|r| r.value).collect::<Vec<_>>()),
+                    Json::Arr(results.iter().map(|r| outcome_json(&r.outcome)).collect()),
                 ),
             ]);
             let mut text = line.compact();
@@ -256,63 +400,71 @@ impl RecordedRequest {
 pub struct RecordedBatch {
     pub mode: BatchMode,
     pub requests: Vec<RecordedRequest>,
-    pub values: Vec<f64>,
+    pub outcomes: Vec<MeasurementOutcome>,
 }
 
 /// Replays a recorded measurement stream as an [`Evaluator`],
 /// verifying batch-by-batch that the session issues exactly the
 /// recorded requests.  A divergence means the trace belongs to a
-/// different (seed, algorithm, build) and panics with the offending
-/// batch rather than silently answering the wrong question.
+/// different (seed, algorithm, build); instead of panicking, the
+/// replayer latches a [`TraceError`], answers the offending batch (and
+/// every later one) with transport failures so the session can wind
+/// down through its normal failure handling, and reports through
+/// [`error`](Self::error).
 pub struct TraceReplayer {
     pub header: TraceHeader,
     batches: Vec<RecordedBatch>,
     pos: usize,
+    error: Option<TraceError>,
 }
 
 impl TraceReplayer {
     /// Parse a whole trace document.
-    pub fn parse(text: &str) -> Result<TraceReplayer, String> {
+    pub fn parse(text: &str) -> Result<TraceReplayer, TraceError> {
         let mut lines = text.lines().enumerate().filter(|(_, l)| !l.trim().is_empty());
-        let (_, first) = lines.next().ok_or("empty trace file")?;
-        let head = json::parse(first).map_err(|e| format!("trace header: {e}"))?;
+        let (_, first) = lines
+            .next()
+            .ok_or_else(|| TraceError::NotATrace("empty trace file".into()))?;
+        let head = json::parse(first)
+            .map_err(|e| TraceError::NotATrace(format!("trace header: {e}")))?;
         match head.get("format").and_then(Json::as_str) {
             Some(TRACE_FORMAT) => {}
-            _ => return Err(format!("not a {TRACE_FORMAT} file")),
+            _ => return Err(TraceError::NotATrace(format!("not a {TRACE_FORMAT} file"))),
         }
         let version = head
             .get("version")
             .and_then(Json::as_f64)
-            .ok_or("trace header missing 'version'")? as u64;
-        if version != TRACE_VERSION {
-            return Err(format!(
-                "unsupported session-trace version {version} (this build reads version \
-                 {TRACE_VERSION}); re-record the trace with this binary"
-            ));
+            .ok_or_else(|| TraceError::Malformed("trace header missing 'version'".into()))?
+            as u64;
+        if !(TRACE_MIN_VERSION..=TRACE_VERSION).contains(&version) {
+            return Err(TraceError::Version(version));
         }
         let header = TraceHeader::from_json(&head)?;
         let mut batches = Vec::new();
         for (lineno, line) in lines {
-            let v = json::parse(line).map_err(|e| format!("trace line {}: {e}", lineno + 1))?;
+            let v = json::parse(line)
+                .map_err(|e| TraceError::Malformed(format!("trace line {}: {e}", lineno + 1)))?;
             batches.push(Self::parse_batch(&v, lineno + 1)?);
         }
         Ok(TraceReplayer {
             header,
             batches,
             pos: 0,
+            error: None,
         })
     }
 
-    fn parse_batch(v: &Json, lineno: usize) -> Result<RecordedBatch, String> {
+    fn parse_batch(v: &Json, lineno: usize) -> Result<RecordedBatch, TraceError> {
+        let bad = |msg: String| TraceError::Malformed(format!("trace line {lineno}: {msg}"));
         let mode = match v.get("mode").and_then(Json::as_str) {
             Some("seq") => BatchMode::Sequential,
             Some("fanout") => BatchMode::FanOut,
-            other => return Err(format!("trace line {lineno}: bad mode {other:?}")),
+            other => return Err(bad(format!("bad mode {other:?}"))),
         };
         let reqs = v
             .get("reqs")
             .and_then(Json::as_arr)
-            .ok_or_else(|| format!("trace line {lineno}: missing 'reqs'"))?;
+            .ok_or_else(|| bad("missing 'reqs'".into()))?;
         let mut requests = Vec::with_capacity(reqs.len());
         for r in reqs {
             if let Some(idx) = r.get("pool").and_then(Json::as_usize) {
@@ -321,42 +473,42 @@ impl TraceReplayer {
                 let cfg = r
                     .get("cfg")
                     .and_then(Json::as_arr)
-                    .ok_or_else(|| format!("trace line {lineno}: component request missing 'cfg'"))?
+                    .ok_or_else(|| bad("component request missing 'cfg'".into()))?
                     .iter()
                     .map(|x| x.as_f64().map(|f| f as i64))
                     .collect::<Option<Vec<i64>>>()
-                    .ok_or_else(|| format!("trace line {lineno}: non-numeric 'cfg'"))?;
+                    .ok_or_else(|| bad("non-numeric 'cfg'".into()))?;
                 requests.push(RecordedRequest::Component { comp, config: cfg });
             } else {
-                return Err(format!("trace line {lineno}: unrecognized request {r:?}"));
+                return Err(bad(format!("unrecognized request {r:?}")));
             }
         }
-        let values: Vec<f64> = v
+        let outcomes: Vec<MeasurementOutcome> = v
             .get("ys")
             .and_then(Json::as_arr)
-            .ok_or_else(|| format!("trace line {lineno}: missing 'ys'"))?
+            .ok_or_else(|| bad("missing 'ys'".into()))?
             .iter()
-            .map(|x| x.as_f64())
-            .collect::<Option<Vec<f64>>>()
-            .ok_or_else(|| format!("trace line {lineno}: non-numeric 'ys'"))?;
-        if values.len() != requests.len() {
-            return Err(format!(
-                "trace line {lineno}: {} requests but {} values",
+            .map(outcome_from_json)
+            .collect::<Option<Vec<_>>>()
+            .ok_or_else(|| bad("unrecognized 'ys' entry".into()))?;
+        if outcomes.len() != requests.len() {
+            return Err(bad(format!(
+                "{} requests but {} outcomes",
                 requests.len(),
-                values.len()
-            ));
+                outcomes.len()
+            )));
         }
         Ok(RecordedBatch {
             mode,
             requests,
-            values,
+            outcomes,
         })
     }
 
     /// Load a trace from disk.
-    pub fn load(path: &Path) -> Result<TraceReplayer, String> {
+    pub fn load(path: &Path) -> Result<TraceReplayer, TraceError> {
         let text = std::fs::read_to_string(path)
-            .map_err(|e| format!("cannot read trace {}: {e}", path.display()))?;
+            .map_err(|e| TraceError::Io(format!("cannot read trace {}: {e}", path.display())))?;
         TraceReplayer::parse(&text)
     }
 
@@ -371,41 +523,71 @@ impl TraceReplayer {
     pub fn remaining(&self) -> usize {
         self.batches.len() - self.pos
     }
+
+    /// The first replay mismatch, if any.  Once set, every subsequent
+    /// batch is answered with transport failures.
+    pub fn error(&self) -> Option<&TraceError> {
+        self.error.as_ref()
+    }
+
+    /// Check a live batch against the recorded one; `Ok` carries the
+    /// recorded outcomes.
+    fn check(&mut self, batch: &MeasurementBatch) -> Result<Vec<MeasurementOutcome>, TraceError> {
+        if self.pos >= self.batches.len() {
+            return Err(TraceError::Exhausted {
+                asked: self.pos,
+                have: self.batches.len(),
+            });
+        }
+        let rec = &self.batches[self.pos];
+        if rec.mode != batch.mode {
+            return Err(TraceError::Divergence {
+                batch: self.pos,
+                detail: "batch mode changed".into(),
+            });
+        }
+        if rec.requests.len() != batch.len() {
+            return Err(TraceError::Divergence {
+                batch: self.pos,
+                detail: format!(
+                    "batch size changed (recorded {}, session asked {})",
+                    rec.requests.len(),
+                    batch.len()
+                ),
+            });
+        }
+        for (k, (recorded, live)) in rec.requests.iter().zip(&batch.requests).enumerate() {
+            if !recorded.matches(live) {
+                return Err(TraceError::Divergence {
+                    batch: self.pos,
+                    detail: format!("request {k}: recorded {recorded:?}, session asked {live:?}"),
+                });
+            }
+        }
+        self.pos += 1;
+        Ok(self.batches[self.pos - 1].outcomes.clone())
+    }
 }
 
 impl Evaluator for TraceReplayer {
     fn evaluate(&mut self, batch: &MeasurementBatch) -> Vec<MeasurementResult> {
-        let rec = self.batches.get(self.pos).unwrap_or_else(|| {
-            panic!(
-                "trace exhausted: session asked batch {} but the trace holds {} \
-                 (seed/algorithm/build mismatch?)",
-                self.pos,
-                self.batches.len()
-            )
-        });
-        assert_eq!(
-            rec.mode, batch.mode,
-            "replay divergence at batch {}: batch mode changed",
-            self.pos
-        );
-        assert_eq!(
-            rec.requests.len(),
-            batch.len(),
-            "replay divergence at batch {}: batch size changed",
-            self.pos
-        );
-        for (k, (recorded, live)) in rec.requests.iter().zip(&batch.requests).enumerate() {
-            assert!(
-                recorded.matches(live),
-                "replay divergence at batch {} request {k}: recorded {recorded:?}, \
-                 session asked {live:?}",
-                self.pos
-            );
+        if self.error.is_none() {
+            match self.check(batch) {
+                Ok(outcomes) => {
+                    return outcomes
+                        .into_iter()
+                        .map(|outcome| MeasurementResult { outcome })
+                        .collect()
+                }
+                Err(e) => self.error = Some(e),
+            }
         }
-        self.pos += 1;
-        rec.values
+        // latched error: starve the session with transport failures so
+        // it winds down through its normal failure handling
+        batch
+            .requests
             .iter()
-            .map(|&value| MeasurementResult { value })
+            .map(|_| MeasurementResult::failed(FailureKind::Transport))
             .collect()
     }
 }
@@ -424,6 +606,7 @@ mod tests {
             seed: 0xCEA1,
             scorer: "native".into(),
             ceal_params: None,
+            faults: None,
         }
     }
 
@@ -433,7 +616,7 @@ mod tests {
             batch
                 .requests
                 .iter()
-                .map(|_| MeasurementResult { value: self.0 })
+                .map(|_| MeasurementResult::ok(self.0))
                 .collect()
         }
     }
@@ -467,11 +650,48 @@ mod tests {
         assert_eq!(rep.evaluate(&b0), r0);
         assert_eq!(rep.evaluate(&b1), r1);
         assert_eq!(rep.remaining(), 0);
+        assert_eq!(rep.error(), None);
     }
 
+    /// Failed outcomes survive the write→parse→replay round trip
+    /// bit-exactly, as fault-name strings in `ys`.
     #[test]
-    #[should_panic(expected = "replay divergence")]
-    fn replay_rejects_diverging_requests() {
+    fn faulted_outcomes_roundtrip() {
+        struct Flaky;
+        impl Evaluator for Flaky {
+            fn evaluate(&mut self, batch: &MeasurementBatch) -> Vec<MeasurementResult> {
+                batch
+                    .requests
+                    .iter()
+                    .enumerate()
+                    .map(|(k, _)| match k % 4 {
+                        0 => MeasurementResult::ok(1.0 + k as f64),
+                        1 => MeasurementResult::failed(FailureKind::Crash),
+                        2 => MeasurementResult::timed_out(),
+                        _ => MeasurementResult::failed(FailureKind::CorruptedReading),
+                    })
+                    .collect()
+            }
+        }
+        let mut inner = Flaky;
+        let mut buf: Vec<u8> = Vec::new();
+        let mut rec = TraceRecorder::new(&mut inner, &mut buf, &header()).unwrap();
+        let b = MeasurementBatch::fan_out((0..5).map(wf_req).collect());
+        let recorded = rec.evaluate(&b);
+        rec.finish().unwrap();
+
+        let text = String::from_utf8(buf).unwrap();
+        assert!(text.contains("\"crash\""), "{text}");
+        assert!(text.contains("\"timeout\""), "{text}");
+        let mut rep = TraceReplayer::parse(&text).unwrap();
+        assert_eq!(rep.evaluate(&b), recorded);
+        assert_eq!(rep.error(), None);
+    }
+
+    /// A diverging session no longer panics: the replayer latches the
+    /// error, answers with transport failures, and reports it.
+    #[test]
+    fn replay_latches_divergence_as_error() {
         let mut inner = Fixed(1.0);
         let mut buf: Vec<u8> = Vec::new();
         let mut rec = TraceRecorder::new(&mut inner, &mut buf, &header()).unwrap();
@@ -479,30 +699,80 @@ mod tests {
         rec.finish().unwrap();
         let text = String::from_utf8(buf).unwrap();
         let mut rep = TraceReplayer::parse(&text).unwrap();
-        rep.evaluate(&MeasurementBatch::fan_out(vec![wf_req(4)]));
+        let results = rep.evaluate(&MeasurementBatch::fan_out(vec![wf_req(4)]));
+        assert_eq!(results.len(), 1);
+        assert!(!results[0].is_ok());
+        let err = rep.error().expect("divergence latched").to_string();
+        assert!(err.contains("replay divergence at batch 0"), "{err}");
+        // later batches keep failing instead of serving wrong answers
+        let more = rep.evaluate(&MeasurementBatch::fan_out(vec![wf_req(3)]));
+        assert!(!more[0].is_ok());
+    }
+
+    /// Over-reading a trace latches an exhaustion error instead of
+    /// panicking.
+    #[test]
+    fn over_reading_latches_exhausted() {
+        let mut inner = Fixed(1.0);
+        let mut buf: Vec<u8> = Vec::new();
+        let mut rec = TraceRecorder::new(&mut inner, &mut buf, &header()).unwrap();
+        let b = MeasurementBatch::fan_out(vec![wf_req(3)]);
+        rec.evaluate(&b);
+        rec.finish().unwrap();
+        let mut rep = TraceReplayer::parse(&String::from_utf8(buf).unwrap()).unwrap();
+        rep.evaluate(&b);
+        assert_eq!(rep.error(), None);
+        let extra = rep.evaluate(&b);
+        assert!(!extra[0].is_ok());
+        assert_eq!(
+            rep.error(),
+            Some(&TraceError::Exhausted { asked: 1, have: 1 })
+        );
     }
 
     #[test]
-    fn header_with_params_roundtrips() {
+    fn header_with_params_and_faults_roundtrips() {
         let mut h = header();
         h.ceal_params = Some(CealParams {
             iterations: 4,
             m0_frac: 0.125,
             mr_frac: 0.25,
         });
+        h.faults = Some(FaultSpec {
+            plan: FaultPlan::transient(0.25, 0.0625),
+            seed: u64::MAX - 1,
+        });
         let parsed = TraceHeader::from_json(&json::parse(&h.to_json().compact()).unwrap()).unwrap();
         assert_eq!(parsed, h);
+    }
+
+    /// Version-1 traces (all-numeric `ys`, no `faults`) still parse.
+    #[test]
+    fn version_1_traces_still_parse() {
+        let text = "\
+{\"algo\":\"RS\",\"format\":\"ceal-session-trace\",\"m\":2,\"objective\":\"comp_time\",\
+\"pool\":50,\"scorer\":\"native\",\"seed\":\"7\",\"version\":1,\"workflow\":\"LV\"}\n\
+{\"batch\":0,\"mode\":\"seq\",\"reqs\":[{\"pool\":3},{\"pool\":9}],\"ys\":[12.5,101.25]}\n";
+        let rep = TraceReplayer::parse(text).unwrap();
+        assert_eq!(rep.header.faults, None);
+        assert_eq!(
+            rep.batches()[0].outcomes,
+            vec![MeasurementOutcome::Ok(12.5), MeasurementOutcome::Ok(101.25)]
+        );
     }
 
     #[test]
     fn wrong_format_and_version_are_rejected() {
         assert!(TraceReplayer::parse("{\"hello\": 1}")
             .unwrap_err()
+            .to_string()
             .contains("not a ceal-session-trace"));
         let mut h = header().to_json().compact();
-        h = h.replace("\"version\":1", "\"version\":2");
+        h = h.replace("\"version\":2", "\"version\":3");
         let err = TraceReplayer::parse(&h).unwrap_err();
-        assert!(err.contains("version 2"), "{err}");
-        assert!(err.contains("re-record"), "{err}");
+        assert_eq!(err, TraceError::Version(3));
+        let msg = err.to_string();
+        assert!(msg.contains("version 3"), "{msg}");
+        assert!(msg.contains("re-record"), "{msg}");
     }
 }

@@ -1,0 +1,167 @@
+//! Fault-tolerance properties of the measurement layer:
+//!
+//! * every registered algorithm finishes — no panic, no hang — on
+//!   every built-in workflow under a harsh randomized fault schedule
+//!   (20% failures, 5% timeouts, swept schedule seeds);
+//! * an identical (fault plan, schedule seed) reproduces the whole
+//!   trajectory bit-exactly;
+//! * a zero-probability fault injector is an exact identity: wrapping
+//!   the collector must not perturb a single bit of today's fault-free
+//!   behaviour (the session_equivalence pins stay green by the same
+//!   argument);
+//! * the cost-budgeted session (a float budget, not a run count — so
+//!   not part of the campaign roster) terminates under the same
+//!   schedules.
+
+use ceal::config::WorkflowId;
+use ceal::coordinator::{session_rng, tuner_for, Algo};
+use ceal::sim::Objective;
+use ceal::surrogate::Scorer;
+use ceal::tuner::{
+    drive, BudgetedCeal, BudgetedCealParams, Collector, FailurePolicy, FaultInjector, FaultPlan,
+    Pool, Problem, TunerOutput,
+};
+use ceal::util::rng::Pcg32;
+
+const WORKFLOWS: [WorkflowId; 5] = [
+    WorkflowId::LV,
+    WorkflowId::HS,
+    WorkflowId::GP,
+    WorkflowId::CH5,
+    WorkflowId::DM4,
+];
+
+const POOL: usize = 60;
+const M: usize = 12;
+
+/// Drive one session against a fault-injected collector, exactly as a
+/// faulted campaign repetition would.
+fn run_faulted(
+    algo: Algo,
+    prob: &Problem,
+    pool: &Pool,
+    plan: FaultPlan,
+    fault_seed: u64,
+) -> TunerOutput {
+    let tuner = tuner_for(algo, prob, 0xCEA1, None);
+    let mut rng = session_rng(0xCEA1, algo, 0);
+    let mut col = Collector::new(prob, rng.derive_str("collector"));
+    let mut session = tuner.session(prob, pool, &Scorer::Native, M, &mut rng);
+    session.set_failure_policy(FailurePolicy::fault_tolerant());
+    let mut injector = FaultInjector::new(&mut col, plan, fault_seed);
+    drive(session, &mut injector)
+}
+
+fn run_clean(algo: Algo, prob: &Problem, pool: &Pool) -> TunerOutput {
+    let tuner = tuner_for(algo, prob, 0xCEA1, None);
+    let mut rng = session_rng(0xCEA1, algo, 0);
+    let mut col = Collector::new(prob, rng.derive_str("collector"));
+    drive(
+        tuner.session(prob, pool, &Scorer::Native, M, &mut rng),
+        &mut col,
+    )
+}
+
+#[test]
+fn every_algorithm_finishes_on_every_workflow_under_faults() {
+    let plan = FaultPlan::transient(0.2, 0.05);
+    let mut total_failed = 0usize;
+    for wf in WORKFLOWS {
+        let prob = Problem::new(wf, Objective::CompTime);
+        let pool = Pool::generate(&prob, POOL, 0xCEA1);
+        for algo in Algo::ALL {
+            for fault_seed in [11u64, 97] {
+                let out = run_faulted(algo, &prob, &pool, plan, fault_seed);
+                assert!(
+                    out.best_idx < pool.len(),
+                    "{algo} on {wf} (fault seed {fault_seed}): bad best_idx"
+                );
+                assert!(
+                    out.collection_cost.is_finite() && out.collection_cost >= 0.0,
+                    "{algo} on {wf}: non-finite cost"
+                );
+                total_failed += out.failed_runs;
+            }
+        }
+    }
+    assert!(
+        total_failed > 0,
+        "a 20%/5% schedule over {} sessions must hit some attempts",
+        WORKFLOWS.len() * Algo::ALL.len() * 2
+    );
+}
+
+#[test]
+fn identical_fault_spec_reproduces_the_run_bit_exactly() {
+    let plan = FaultPlan::transient(0.2, 0.05);
+    let prob = Problem::new(WorkflowId::LV, Objective::CompTime);
+    let pool = Pool::generate(&prob, POOL, 0xCEA1);
+    let mut any_schedule_diff = false;
+    for algo in [Algo::Rs, Algo::Ceal, Algo::Alph] {
+        let a = run_faulted(algo, &prob, &pool, plan, 7);
+        let b = run_faulted(algo, &prob, &pool, plan, 7);
+        assert_eq!(a.best_idx, b.best_idx, "{algo}");
+        assert_eq!(
+            a.collection_cost.to_bits(),
+            b.collection_cost.to_bits(),
+            "{algo}: cost must be bit-identical"
+        );
+        assert_eq!(a.failed_runs, b.failed_runs, "{algo}");
+        assert_eq!(a.measured, b.measured, "{algo}: trajectory must match");
+        // a different schedule seed must eventually produce a
+        // different run, or the pass above is vacuous
+        let c = run_faulted(algo, &prob, &pool, plan, 8);
+        any_schedule_diff |= c.failed_runs != a.failed_runs || c.measured != a.measured;
+    }
+    assert!(
+        any_schedule_diff,
+        "schedule seed never changed any run — fate derivation is ignoring it"
+    );
+}
+
+/// p_fail = 0 end to end: wrapping the collector in a no-op injector
+/// (and leaving the default policy in place) must reproduce today's
+/// fault-free runs bit for bit.
+#[test]
+fn zero_probability_injector_is_an_exact_identity() {
+    let prob = Problem::new(WorkflowId::HS, Objective::CompTime);
+    let pool = Pool::generate(&prob, POOL, 0xCEA1);
+    for algo in Algo::ALL {
+        let clean = run_clean(algo, &prob, &pool);
+        let tuner = tuner_for(algo, &prob, 0xCEA1, None);
+        let mut rng = session_rng(0xCEA1, algo, 0);
+        let mut col = Collector::new(&prob, rng.derive_str("collector"));
+        let session = tuner.session(&prob, &pool, &Scorer::Native, M, &mut rng);
+        let mut injector = FaultInjector::new(&mut col, FaultPlan::none(), 7);
+        let wrapped = drive(session, &mut injector);
+        assert_eq!(clean.best_idx, wrapped.best_idx, "{algo}");
+        assert_eq!(
+            clean.collection_cost.to_bits(),
+            wrapped.collection_cost.to_bits(),
+            "{algo}: zero-fault cost must be bit-identical"
+        );
+        assert_eq!(clean.measured, wrapped.measured, "{algo}");
+        assert_eq!(wrapped.failed_runs, 0, "{algo}");
+    }
+}
+
+#[test]
+fn budgeted_session_terminates_under_faults() {
+    let prob = Problem::new(WorkflowId::LV, Objective::CompTime);
+    let pool = Pool::generate(&prob, POOL, 0xCEA1);
+    let tuner = BudgetedCeal::new(BudgetedCealParams::default());
+    // a budget in objective units, roughly a dozen median runs
+    let budget = pool.truth.iter().sum::<f64>() / pool.len() as f64 * 12.0;
+    for fault_seed in [11u64, 97] {
+        let mut rng = Pcg32::new(0xB4D6, 0);
+        let mut col = Collector::new(&prob, rng.derive_str("collector"));
+        let mut session =
+            tuner.session_with_cost_budget(&prob, &pool, &Scorer::Native, budget, &mut rng);
+        session.set_failure_policy(FailurePolicy::fault_tolerant());
+        let mut injector =
+            FaultInjector::new(&mut col, FaultPlan::transient(0.2, 0.05), fault_seed);
+        let out = drive(session, &mut injector);
+        assert!(out.best_idx < pool.len());
+        assert!(out.collection_cost.is_finite());
+    }
+}

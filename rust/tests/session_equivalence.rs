@@ -154,6 +154,7 @@ fn replay_equals_record() {
             seed: 77,
             scorer: "native".into(),
             ceal_params: None,
+            faults: None,
         };
 
         // record against the simulator collector

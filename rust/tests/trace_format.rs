@@ -1,14 +1,17 @@
 //! Trace-format stability tests: a checked-in version-1 fixture must
-//! keep replaying on every future build, and a trace written by a
-//! *newer* format version must be rejected with a clear error instead
-//! of being replayed into garbage results.
+//! keep replaying on every future build (the current build writes
+//! version 2 but reads 1..=2), and a trace written by a *newer* format
+//! version must be rejected with a clear error instead of being
+//! replayed into garbage results.
 
 use std::path::PathBuf;
 
 use ceal::config::Config;
+use ceal::sim::MeasurementOutcome;
 use ceal::tuner::trace::RecordedRequest;
 use ceal::tuner::{
-    BatchMode, Evaluator, MeasurementBatch, MeasurementRequest, TraceReplayer, TRACE_VERSION,
+    BatchMode, Evaluator, MeasurementBatch, MeasurementRequest, TraceError, TraceReplayer,
+    TRACE_VERSION,
 };
 
 fn fixture_path() -> PathBuf {
@@ -38,8 +41,11 @@ fn live_requests(rec: &[RecordedRequest]) -> Vec<MeasurementRequest> {
 
 #[test]
 fn checked_in_v1_fixture_replays() {
-    assert_eq!(TRACE_VERSION, 1, "bump the fixture alongside the version");
-    let mut rep = TraceReplayer::load(&fixture_path()).expect("fixture parses");
+    assert_eq!(
+        TRACE_VERSION, 2,
+        "add a new fixture alongside any version bump"
+    );
+    let mut rep = TraceReplayer::load(&fixture_path()).expect("v1 fixture parses");
     assert_eq!(rep.header.algo, "CEAL");
     assert_eq!(rep.header.workflow, "LV");
     assert_eq!(rep.header.objective, "comp_time");
@@ -48,6 +54,7 @@ fn checked_in_v1_fixture_replays() {
     assert_eq!(rep.header.seed, 51905);
     assert_eq!(rep.header.scorer, "native");
     assert_eq!(rep.header.ceal_params, None);
+    assert_eq!(rep.header.faults, None, "v1 traces carry no fault spec");
     assert_eq!(rep.batches().len(), 3);
     assert_eq!(rep.batches()[0].mode, BatchMode::Sequential);
     assert_eq!(rep.batches()[1].mode, BatchMode::FanOut);
@@ -68,38 +75,46 @@ fn checked_in_v1_fixture_replays() {
             requests: live_requests(&batch.requests),
         };
         let results = rep.evaluate(&live);
-        let values: Vec<f64> = results.iter().map(|r| r.value).collect();
-        assert_eq!(values, batch.values);
+        let outcomes: Vec<MeasurementOutcome> = results.iter().map(|r| r.outcome).collect();
+        assert_eq!(outcomes, batch.outcomes);
+        assert!(outcomes.iter().all(|o| o.is_ok()), "v1 ys are all numeric");
     }
     assert_eq!(rep.remaining(), 0);
-    assert_eq!(recorded[2].values, [97.0625]);
+    assert_eq!(rep.error(), None);
+    assert_eq!(recorded[2].outcomes, [MeasurementOutcome::Ok(97.0625)]);
 }
 
 #[test]
 fn bumped_version_is_rejected_with_clear_error() {
-    let newer = fixture_text().replace("\"version\":1", "\"version\":2");
+    let newer = fixture_text().replace("\"version\":1", "\"version\":3");
     assert_ne!(newer, fixture_text(), "replacement must hit");
     let err = TraceReplayer::parse(&newer).unwrap_err();
-    assert!(err.contains("version 2"), "error names the trace version: {err}");
+    assert_eq!(err, TraceError::Version(3));
+    let msg = err.to_string();
+    assert!(msg.contains("version 3"), "error names the trace version: {msg}");
     assert!(
-        err.contains("version 1") && err.contains("re-record"),
-        "error tells the user what to do: {err}"
+        msg.contains("re-record"),
+        "error tells the user what to do: {msg}"
     );
 }
 
 #[test]
 fn non_trace_files_are_rejected() {
     assert!(TraceReplayer::parse("").is_err());
-    let err = TraceReplayer::parse("{\"workflow\": \"LV\"}").unwrap_err();
+    let err = TraceReplayer::parse("{\"workflow\": \"LV\"}")
+        .unwrap_err()
+        .to_string();
     assert!(err.contains("ceal-session-trace"), "{err}");
     // a truncated/corrupt batch line is a parse error, not garbage
     let garbled = format!("{}{}", fixture_text(), "{\"batch\":3,\"mode\":\"seq\"\n");
     assert!(TraceReplayer::parse(&garbled).is_err());
 }
 
+/// Over-reading a trace no longer panics: the replayer latches a
+/// [`TraceError::Exhausted`] and answers with transport failures so
+/// the session winds down through its normal failure handling.
 #[test]
-#[should_panic(expected = "trace exhausted")]
-fn over_reading_a_trace_panics() {
+fn over_reading_a_trace_latches_an_error() {
     let mut rep = TraceReplayer::load(&fixture_path()).unwrap();
     let recorded: Vec<_> = rep.batches().to_vec();
     for batch in &recorded {
@@ -109,5 +124,14 @@ fn over_reading_a_trace_panics() {
         };
         rep.evaluate(&live);
     }
-    rep.evaluate(&MeasurementBatch::sequential(vec![]));
+    assert_eq!(rep.error(), None, "clean replay latches nothing");
+    let extra = rep.evaluate(&MeasurementBatch::sequential(vec![MeasurementRequest::Workflow {
+        pool_idx: 0,
+        config: Config(vec![]),
+    }]));
+    assert_eq!(extra.len(), 1, "arity contract holds even after the error");
+    assert!(!extra[0].is_ok());
+    let err = rep.error().expect("exhaustion latched");
+    assert_eq!(*err, TraceError::Exhausted { asked: 3, have: 3 });
+    assert!(err.to_string().contains("trace exhausted"), "{err}");
 }
