@@ -94,6 +94,40 @@ fn main() {
         });
     }
 
+    // Journaled session at the sweep cell: the same drive with a
+    // write-ahead journal (fsync per record, periodic snapshot
+    // compaction) — its gap vs the clean session row is the price of
+    // crash safety.
+    {
+        use ceal::tuner::{drive_checkpointed, Collector, SessionJournal, TraceHeader};
+        let tuner = Ceal::new(CealParams::no_hist());
+        let header = TraceHeader {
+            algo: "CEAL".into(),
+            workflow: "LV".into(),
+            objective: "comp_time".into(),
+            m: 30,
+            pool_size: 1000,
+            seed: 0xCEA1,
+            scorer: "native".into(),
+            ceal_params: None,
+            faults: None,
+        };
+        let dir = std::env::temp_dir().join(format!("ceal-bench-journal-{}", std::process::id()));
+        let mut rep = 0u64;
+        b.bench("tuner/CEAL/LV_m30_pool1000_journaled", || {
+            rep += 1;
+            let mut journal = SessionJournal::create(&dir, &header, 0).unwrap();
+            let mut rng = Pcg32::new(0xD1CE ^ rep, 0);
+            let mut col = Collector::new(&sweep_prob, rng.derive_str("collector"));
+            drive_checkpointed(
+                tuner.session(&sweep_prob, &sweep_pool, &scorer, 30, &mut rng),
+                &mut col,
+                &mut journal,
+            )
+        });
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
     // Registry-added scenario cells (CEAL vs RS) so new-workflow wiring
     // shows up in every bench run: the CH5 deep chain and DM4 diamond.
     for id in [WorkflowId::CH5, WorkflowId::DM4] {

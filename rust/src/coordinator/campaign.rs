@@ -3,15 +3,18 @@
 //! aggregated over repetitions (§7.3 runs each algorithm 100 times and
 //! reports averages).
 
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 use crate::config::WorkflowId;
 use crate::metrics::{least_number_of_uses, mdape, mdape_top_fraction, recall_score};
 use crate::sim::Objective;
 use crate::surrogate::Scorer;
+use crate::tuner::journal::JOURNAL_FILE;
 use crate::tuner::{
-    drive, ActiveLearning, Alph, Ceal, CealParams, Collector, FailurePolicy, FaultInjector,
-    FaultSpec, Pool, Problem, RandomSampling, Tuner, TunerOutput,
+    drive, drive_checkpointed, replay_into, ActiveLearning, Alph, Ceal, CealParams, Collector,
+    FailurePolicy, FaultInjector, FaultSpec, Pool, Problem, RandomSampling, SessionJournal,
+    TraceError, TraceHeader, Tuner, TunerOutput,
 };
 use crate::util::rng::Pcg32;
 use crate::util::stats;
@@ -311,9 +314,98 @@ pub fn session_rng(seed: u64, algo: Algo, rep: usize) -> Pcg32 {
     Pcg32::new(seed ^ 0xDEED, (rep as u64) << 8 | algo_stream(algo))
 }
 
+/// The checkpoint directory of one repetition under a campaign
+/// checkpoint root: `<root>/<algo>-rep<NNN>` (with `+` mapped to `_`
+/// so the name is shell-friendly).
+pub fn rep_checkpoint_dir(root: &Path, algo: Algo, rep: usize) -> PathBuf {
+    root.join(format!("{}-rep{rep:03}", algo.name().replace('+', "_")))
+}
+
+/// One uninterrupted repetition drive (the pre-checkpoint behaviour).
+fn drive_rep_live(
+    algo: Algo,
+    tuner: &dyn Tuner,
+    prob: &Problem,
+    pool: &Pool,
+    scorer: &Scorer,
+    c: &Campaign,
+    rep: usize,
+) -> TunerOutput {
+    let mut rng = session_rng(c.seed, algo, rep);
+    let mut col = Collector::new(prob, rng.derive_str("collector"));
+    let mut session = tuner.session(prob, pool, scorer, c.m, &mut rng);
+    match &c.faults {
+        Some(spec) if !spec.plan.is_none() => {
+            session.set_failure_policy(FailurePolicy::fault_tolerant());
+            let mut injector = FaultInjector::new(&mut col, spec.plan, spec.seed_for_rep(rep));
+            drive(session, &mut injector)
+        }
+        _ => drive(session, &mut col),
+    }
+}
+
+/// One crash-safe repetition drive: create the rep's journal in `dir`
+/// (or resume it if a journal is already there) and run through
+/// [`drive_checkpointed`].  The result is bit-identical to
+/// [`drive_rep_live`] — the journal only adds durability.
+fn drive_rep_journaled(
+    algo: Algo,
+    tuner: &dyn Tuner,
+    prob: &Problem,
+    pool: &Pool,
+    scorer: &Scorer,
+    c: &Campaign,
+    rep: usize,
+    dir: &Path,
+) -> Result<TunerOutput, TraceError> {
+    let (mut journal, loaded) = if dir.join(JOURNAL_FILE).exists() {
+        let (journal, loaded) = SessionJournal::resume(dir)?;
+        (journal, Some(loaded))
+    } else {
+        let header = TraceHeader {
+            algo: algo.name().into(),
+            workflow: c.workflow.name().into(),
+            objective: c.objective.name().into(),
+            m: c.m,
+            pool_size: c.pool_size,
+            seed: c.seed,
+            scorer: c.scorer.name().into(),
+            ceal_params: c.ceal_params,
+            faults: c.faults,
+        };
+        (SessionJournal::create(dir, &header, rep)?, None)
+    };
+    let mut rng = session_rng(c.seed, algo, rep);
+    let mut col = Collector::new(prob, rng.derive_str("collector"));
+    let mut session = tuner.session(prob, pool, scorer, c.m, &mut rng);
+    let out = match &c.faults {
+        Some(spec) if !spec.plan.is_none() => {
+            session.set_failure_policy(FailurePolicy::fault_tolerant());
+            let mut injector = FaultInjector::new(&mut col, spec.plan, spec.seed_for_rep(rep));
+            if let Some(l) = &loaded {
+                replay_into(session.as_mut(), &mut injector, l)?;
+            }
+            drive_checkpointed(session, &mut injector, &mut journal)
+        }
+        _ => {
+            if let Some(l) = &loaded {
+                replay_into(session.as_mut(), &mut col, l)?;
+            }
+            drive_checkpointed(session, &mut col, &mut journal)
+        }
+    };
+    if let Some(e) = journal.error() {
+        return Err(e.clone());
+    }
+    Ok(out)
+}
+
 /// One repetition: open an ask/tell session and drive it generically
 /// against the simulator-backed collector — campaigns are just another
-/// session driver now, same loop as any external embedder.
+/// session driver now, same loop as any external embedder.  With a
+/// checkpoint dir the rep journals through [`drive_rep_journaled`]; an
+/// unusable checkpoint degrades to a live run with a warning, never a
+/// changed result.
 fn run_rep(
     algo: Algo,
     tuner: &dyn Tuner,
@@ -322,17 +414,20 @@ fn run_rep(
     scorer: &Scorer,
     c: &Campaign,
     rep: usize,
+    checkpoint: Option<&Path>,
 ) -> RepResult {
-    let mut rng = session_rng(c.seed, algo, rep);
-    let mut col = Collector::new(prob, rng.derive_str("collector"));
-    let mut session = tuner.session(prob, pool, scorer, c.m, &mut rng);
-    let out: TunerOutput = match &c.faults {
-        Some(spec) if !spec.plan.is_none() => {
-            session.set_failure_policy(FailurePolicy::fault_tolerant());
-            let mut injector = FaultInjector::new(&mut col, spec.plan, spec.seed_for_rep(rep));
-            drive(session, &mut injector)
-        }
-        _ => drive(session, &mut col),
+    let out: TunerOutput = match checkpoint {
+        Some(dir) => match drive_rep_journaled(algo, tuner, prob, pool, scorer, c, rep, dir) {
+            Ok(out) => out,
+            Err(e) => {
+                eprintln!(
+                    "warning: checkpoint {} unusable ({e}); rerunning rep {rep} live",
+                    dir.display()
+                );
+                drive_rep_live(algo, tuner, prob, pool, scorer, c, rep)
+            }
+        },
+        None => drive_rep_live(algo, tuner, prob, pool, scorer, c, rep),
     };
     // models are log-space: exponentiate to real-scale time predictions
     let preds = crate::tuner::common::predict_times(&out.model, &pool.feats.workflow, scorer);
@@ -374,6 +469,18 @@ fn algo_stream(algo: Algo) -> u64 {
 /// sharing sound across the repetition worker threads of concurrent
 /// campaigns.
 pub fn run_campaign(algo: Algo, c: &Campaign) -> Aggregate {
+    run_campaign_impl(algo, c, None)
+}
+
+/// [`run_campaign`] with per-repetition crash-safe journals under
+/// `root` (one [`rep_checkpoint_dir`] each).  A rerun after a kill
+/// resumes every finished or partial rep from its journal and produces
+/// the same [`Aggregate`] bit-for-bit.
+pub fn run_campaign_checkpointed(algo: Algo, c: &Campaign, root: &Path) -> Aggregate {
+    run_campaign_impl(algo, c, Some(root))
+}
+
+fn run_campaign_impl(algo: Algo, c: &Campaign, ckpt: Option<&Path>) -> Aggregate {
     let prob = Problem::new(c.workflow, c.objective);
     let pool = super::poolcache::shared_pool(&prob, c.pool_size, c.seed, c.threads);
     let expert_value = c
@@ -386,10 +493,13 @@ pub fn run_campaign(algo: Algo, c: &Campaign) -> Aggregate {
     let reps: Vec<RepResult> = if c.threads <= 1 {
         let scorer = c.scorer.build();
         (0..c.reps)
-            .map(|rep| run_rep(algo, tuner.as_ref(), &prob, &pool, &scorer, c, rep))
+            .map(|rep| {
+                let dir = ckpt.map(|root| rep_checkpoint_dir(root, algo, rep));
+                run_rep(algo, tuner.as_ref(), &prob, &pool, &scorer, c, rep, dir.as_deref())
+            })
             .collect()
     } else {
-        run_reps_parallel(algo, tuner.as_ref(), &prob, &pool, c)
+        run_reps_parallel(algo, tuner.as_ref(), &prob, &pool, c, ckpt)
     };
 
     Aggregate {
@@ -440,10 +550,12 @@ fn run_reps_parallel(
     prob: &Problem,
     pool: &Pool,
     c: &Campaign,
+    ckpt: Option<&Path>,
 ) -> Vec<RepResult> {
     crate::util::parallel::map_indexed(c.threads, c.reps, |rep| {
+        let dir = ckpt.map(|root| rep_checkpoint_dir(root, algo, rep));
         with_thread_scorer(c.scorer, |scorer| {
-            run_rep(algo, tuner, prob, pool, scorer, c, rep)
+            run_rep(algo, tuner, prob, pool, scorer, c, rep, dir.as_deref())
         })
     })
 }
@@ -516,6 +628,40 @@ mod tests {
             assert_eq!(agg.reps.len(), 3, "{algo}");
             assert!(agg.mean_cost() > 0.0, "{algo}");
         }
+    }
+
+    /// Journaling a campaign changes durability, never results: the
+    /// checkpointed run matches the live one bit-for-bit, and a rerun
+    /// over the finished checkpoints resumes every rep from disk to
+    /// the same aggregate.
+    #[test]
+    fn checkpointed_campaign_matches_live_and_resumes() {
+        let root = std::env::temp_dir().join(format!(
+            "ceal-campaign-ckpt-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&root);
+        let c = Campaign::new(WorkflowId::LV, Objective::CompTime, 12)
+            .with_reps(2)
+            .with_pool_size(80)
+            .with_threads(1)
+            .with_seed(0xCCC1);
+        let live = run_campaign(Algo::Ceal, &c);
+        let ckpt = run_campaign_checkpointed(Algo::Ceal, &c, &root);
+        assert!(
+            rep_checkpoint_dir(&root, Algo::Ceal, 0).join(JOURNAL_FILE).exists(),
+            "each rep must leave its journal behind"
+        );
+        let resumed = run_campaign_checkpointed(Algo::Ceal, &c, &root);
+        for ((a, b), r) in live.reps.iter().zip(&ckpt.reps).zip(&resumed.reps) {
+            assert_eq!(a.best_value, b.best_value, "journaling must not change results");
+            assert_eq!(a.cost, b.cost);
+            assert_eq!(a.workflow_runs, b.workflow_runs);
+            assert_eq!(b.best_value, r.best_value, "resume must reproduce the rep");
+            assert_eq!(b.cost, r.cost);
+            assert_eq!(b.workflow_runs, r.workflow_runs);
+        }
+        let _ = std::fs::remove_dir_all(&root);
     }
 
     #[test]

@@ -9,7 +9,8 @@ pub mod history;
 pub mod poolcache;
 
 pub use campaign::{
-    run_campaign, session_rng, tuner_for, Aggregate, Algo, Campaign, RepResult, ScorerKind,
+    rep_checkpoint_dir, run_campaign, run_campaign_checkpointed, session_rng, tuner_for,
+    Aggregate, Algo, Campaign, RepResult, ScorerKind,
 };
 pub use expert::expert_config;
 pub use history::historical_samples;

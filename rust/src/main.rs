@@ -28,32 +28,94 @@
 //!   --faults F,T,S    inject deterministic measurement faults:
 //!                     failure probability F, timeout probability T,
 //!                     schedule seed S (see README "Failure semantics")
+//!   --checkpoint-dir DIR
+//!                     run ONE session crash-safely: every ask/tell is
+//!                     journaled to DIR before it happens (see README
+//!                     "Crash recovery")
+//!   --resume DIR      resume a killed --checkpoint-dir session from
+//!                     its journal; the finished run is bit-identical
+//!                     to the uninterrupted one
+//!   --measure-deadline SECS
+//!                     watchdog for --checkpoint-dir/--resume: a batch
+//!                     older than SECS is journaled as timed out and
+//!                     flows through the session's retry handling
 //! ```
 //!
 //! `ceal robustness` runs the quality-vs-failure-rate degradation
 //! sweep (all algorithms under increasing fault rates).
+//!
+//! Exit codes: `0` success; `1` usage or runtime error; `2` corrupted,
+//! truncated or incompatible trace/journal/checkpoint; `3` the
+//! requested configuration space admits no feasible configuration.
 
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
+use std::time::Duration;
 
 use ceal::config::WorkflowId;
 use ceal::coordinator::{run_campaign, session_rng, tuner_for, Algo, PoolCache, ScorerKind};
 use ceal::exper::{self, ExpCtx};
 use ceal::sim::{Objective, WorkflowRegistry};
 use ceal::tuner::{
-    drive, Collector, FailurePolicy, FaultInjector, FaultPlan, FaultSpec, Pool, Problem,
-    TraceHeader, TraceRecorder, TraceReplayer, TunerOutput,
+    drive, drive_checkpointed, replay_into, Collector, DeadlineEvaluator, Evaluator,
+    FailurePolicy, FaultInjector, FaultPlan, FaultSpec, LoadedCheckpoint, Pool, Problem,
+    SessionJournal, TraceError, TraceHeader, TraceRecorder, TraceReplayer, TunerOutput,
+    TunerSession,
 };
 use ceal::util::cli::Args;
 use ceal::util::csv::CsvWriter;
 use ceal::util::table::fnum;
 
+/// Corrupted/truncated/incompatible trace, journal or checkpoint.
+const EXIT_TRACE: u8 = 2;
+/// The requested space admits no feasible configuration.
+const EXIT_INFEASIBLE: u8 = 3;
+
+/// A CLI failure with its process exit code (documented in the module
+/// header): generic errors exit 1, trace/journal errors 2, infeasible
+/// spaces 3 — so scripts and the CI cells can tell them apart.
+struct CliError {
+    code: u8,
+    msg: String,
+}
+
+impl CliError {
+    fn trace(e: TraceError) -> CliError {
+        CliError {
+            code: EXIT_TRACE,
+            msg: e.to_string(),
+        }
+    }
+
+    fn infeasible(msg: String) -> CliError {
+        CliError {
+            code: EXIT_INFEASIBLE,
+            msg,
+        }
+    }
+}
+
+impl From<String> for CliError {
+    fn from(msg: String) -> CliError {
+        CliError { code: 1, msg }
+    }
+}
+
+impl From<&str> for CliError {
+    fn from(msg: &str) -> CliError {
+        CliError {
+            code: 1,
+            msg: msg.to_string(),
+        }
+    }
+}
+
 fn main() -> ExitCode {
     match run() {
         Ok(()) => ExitCode::SUCCESS,
         Err(e) => {
-            eprintln!("error: {e}");
-            ExitCode::FAILURE
+            eprintln!("error: {}", e.msg);
+            ExitCode::from(e.code)
         }
     }
 }
@@ -76,7 +138,7 @@ fn parse_ctx(args: &Args) -> Result<ExpCtx, String> {
     Ok(ctx)
 }
 
-fn run() -> Result<(), String> {
+fn run() -> Result<(), CliError> {
     let args = Args::parse_env()?;
     let ctx = parse_ctx(&args)?;
     match args.subcommand.as_deref() {
@@ -88,7 +150,7 @@ fn run() -> Result<(), String> {
                 .parse()
                 .map_err(|e| format!("bad table number: {e}"))?;
             if !exper::run_table(n, &ctx) {
-                return Err(format!("no table {n} (have 1, 2)"));
+                return Err(format!("no table {n} (have 1, 2)").into());
             }
         }
         Some("fig") => {
@@ -99,7 +161,7 @@ fn run() -> Result<(), String> {
                 .parse()
                 .map_err(|e| format!("bad figure number: {e}"))?;
             if !exper::run_fig(n, &ctx) {
-                return Err(format!("no figure {n} (have 4..13)"));
+                return Err(format!("no figure {n} (have 4..13)").into());
             }
         }
         Some("all") => exper::run_all(&ctx),
@@ -110,7 +172,7 @@ fn run() -> Result<(), String> {
         other => {
             eprintln!("{}", usage());
             if let Some(cmd) = other {
-                return Err(format!("unknown subcommand '{cmd}'"));
+                return Err(format!("unknown subcommand '{cmd}'").into());
             }
         }
     }
@@ -165,7 +227,26 @@ fn parse_faults(args: &Args) -> Result<Option<FaultSpec>, String> {
     }))
 }
 
-fn tune(args: &Args, ctx: &ExpCtx) -> Result<(), String> {
+/// `--measure-deadline SECS`: the wall-clock watchdog for journaled
+/// sessions.
+fn parse_deadline(args: &Args) -> Result<Option<Duration>, String> {
+    let Some(s) = args.opt("measure-deadline") else {
+        return Ok(None);
+    };
+    let secs: f64 = s
+        .parse()
+        .map_err(|e| format!("bad --measure-deadline '{s}': {e}"))?;
+    if !(secs > 0.0) {
+        return Err("--measure-deadline must be a positive number of seconds".into());
+    }
+    Ok(Some(Duration::from_secs_f64(secs)))
+}
+
+fn tune(args: &Args, ctx: &ExpCtx) -> Result<(), CliError> {
+    let deadline = parse_deadline(args)?;
+    if let Some(dir) = args.opt_path("resume") {
+        return resume_session(args, ctx, &dir, deadline);
+    }
     if let Some(path) = args.opt_path("replay") {
         return replay_session(args, ctx, &path);
     }
@@ -188,19 +269,35 @@ fn tune(args: &Args, ctx: &ExpCtx) -> Result<(), String> {
     let m = args.opt_usize("m", 50)?;
     let overrides = ceal_overrides(args, algo)?;
     let faults = parse_faults(args)?;
+    let header = TraceHeader {
+        algo: algo.name().into(),
+        workflow: wf.name().into(),
+        objective: obj.name().into(),
+        m,
+        pool_size: ctx.pool_size,
+        seed: ctx.seed,
+        scorer: ctx.scorer.name().into(),
+        ceal_params: overrides,
+        faults: faults.clone(),
+    };
 
+    if let Some(dir) = args.opt_path("checkpoint-dir") {
+        if args.opt("record").is_some() {
+            return Err(
+                "--record conflicts with --checkpoint-dir (the journal already records the \
+                 measurement stream)"
+                    .into(),
+            );
+        }
+        return checkpointed_session(ctx, &dir, Some(&header), deadline);
+    }
+    if deadline.is_some() {
+        return Err(
+            "--measure-deadline requires a journaled session (--checkpoint-dir or --resume)"
+                .into(),
+        );
+    }
     if let Some(path) = args.opt_path("record") {
-        let header = TraceHeader {
-            algo: algo.name().into(),
-            workflow: wf.name().into(),
-            objective: obj.name().into(),
-            m,
-            pool_size: ctx.pool_size,
-            seed: ctx.seed,
-            scorer: ctx.scorer.name().into(),
-            ceal_params: overrides,
-            faults,
-        };
         return run_single_session(ctx, &header, Some(path.as_path()), None);
     }
 
@@ -225,7 +322,7 @@ fn tune(args: &Args, ctx: &ExpCtx) -> Result<(), String> {
             ctx.seed,
             ctx.threads,
         )
-        .map_err(|e| format!("cannot tune {wf}: {e}"))?;
+        .map_err(|e| CliError::infeasible(format!("cannot tune {wf}: {e}")))?;
     let mut campaign = ctx.campaign(wf, obj, m);
     if let Some(p) = overrides {
         campaign = campaign.with_ceal_params(p);
@@ -295,23 +392,159 @@ fn tune(args: &Args, ctx: &ExpCtx) -> Result<(), String> {
 /// `ceal tune --replay`: every session setting comes from the trace
 /// header, so flags that would contradict it are rejected rather than
 /// silently ignored.
-fn replay_session(args: &Args, ctx: &ExpCtx, path: &Path) -> Result<(), String> {
+fn replay_session(args: &Args, ctx: &ExpCtx, path: &Path) -> Result<(), CliError> {
     let pinned = [
         "workflow", "objective", "algo", "m", "seed", "pool", "scorer", "mr", "m0", "iters",
-        "record", "faults",
+        "record", "faults", "checkpoint-dir", "measure-deadline",
     ];
     for flag in pinned {
         if args.opt(flag).is_some() {
             return Err(format!(
                 "--{flag} conflicts with --replay: the trace header pins the session settings"
-            ));
+            )
+            .into());
         }
     }
     // TraceError carries the structured load failure (bad version,
     // malformed line, not a trace); its Display is the user message
-    let replayer = TraceReplayer::load(path).map_err(|e| e.to_string())?;
+    let replayer = TraceReplayer::load(path).map_err(CliError::trace)?;
     let header = replayer.header.clone();
     run_single_session(ctx, &header, None, Some(replayer))
+}
+
+/// `ceal tune --resume DIR`: every session setting comes from the
+/// checkpoint's journal header, so flags that would contradict it are
+/// rejected rather than silently ignored.
+fn resume_session(
+    args: &Args,
+    ctx: &ExpCtx,
+    dir: &Path,
+    deadline: Option<Duration>,
+) -> Result<(), CliError> {
+    let pinned = [
+        "workflow", "objective", "algo", "m", "seed", "pool", "scorer", "mr", "m0", "iters",
+        "record", "replay", "faults", "checkpoint-dir",
+    ];
+    for flag in pinned {
+        if args.opt(flag).is_some() {
+            return Err(format!(
+                "--{flag} conflicts with --resume: the checkpoint pins the session settings"
+            )
+            .into());
+        }
+    }
+    checkpointed_session(ctx, dir, None, deadline)
+}
+
+/// Resolve a trace/journal header's cell names against the registries.
+fn resolve_header(header: &TraceHeader) -> Result<(WorkflowId, Objective, Algo), String> {
+    let wf = WorkflowId::from_name(&header.workflow).ok_or_else(|| {
+        format!(
+            "workflow '{}' is not registered (registered: {})",
+            header.workflow,
+            WorkflowRegistry::global().names().join(" | ")
+        )
+    })?;
+    let obj = Objective::from_name(&header.objective)
+        .ok_or_else(|| format!("objective '{}' unknown", header.objective))?;
+    let algo = Algo::from_name(&header.algo).ok_or_else(|| {
+        format!(
+            "algorithm '{}' is not registered (registered: {})",
+            header.algo,
+            Algo::names().join(" | ")
+        )
+    })?;
+    Ok((wf, obj, algo))
+}
+
+/// Run one crash-safe session: fresh (`header` given, journal created
+/// in `dir`) or resumed (`header` absent — everything reloads from
+/// `dir`, the journaled exchanges replay into a rebuilt session, and
+/// tuning continues from exactly where the crash hit).
+fn checkpointed_session(
+    ctx: &ExpCtx,
+    dir: &Path,
+    fresh: Option<&TraceHeader>,
+    deadline: Option<Duration>,
+) -> Result<(), CliError> {
+    let (mut journal, loaded) = match fresh {
+        Some(header) => (
+            SessionJournal::create(dir, header, 0).map_err(CliError::trace)?,
+            None,
+        ),
+        None => {
+            let (journal, loaded) = SessionJournal::resume(dir).map_err(CliError::trace)?;
+            for note in &loaded.recovered {
+                eprintln!("warning: {note}");
+            }
+            (journal, Some(loaded))
+        }
+    };
+    let header = journal.header().clone();
+    let rep = journal.rep();
+    let (wf, obj, algo) = resolve_header(&header)?;
+    let prob = Problem::new(wf, obj);
+    let pool = PoolCache::global()
+        .try_get_or_generate(&prob, header.pool_size, header.seed, ctx.threads)
+        .map_err(|e| CliError::infeasible(format!("cannot build pool for {wf}: {e}")))?;
+    let scorer = ScorerKind::from_name(&header.scorer)
+        .ok_or_else(|| format!("scorer '{}' unknown (native|pjrt)", header.scorer))?
+        .build();
+    let tuner = tuner_for(algo, &prob, header.seed, header.ceal_params);
+    let mut rng = session_rng(header.seed, algo, rep);
+    let mut col = Collector::new(&prob, rng.derive_str("collector"));
+    let mut session = tuner.session(&prob, &pool, &scorer, header.m, &mut rng);
+    if header.faults.is_some() {
+        session.set_failure_policy(FailurePolicy::fault_tolerant());
+    }
+
+    // The evaluator stack mirrors the campaign composition (injector
+    // innermost, so the journal records the post-fault stream); the
+    // deadline watchdog wraps the whole stack.
+    let out = match (&header.faults, deadline) {
+        (Some(spec), Some(d)) => {
+            let mut injector = FaultInjector::new(&mut col, spec.plan, spec.seed_for_rep(rep));
+            let mut watchdog = DeadlineEvaluator::new(&mut injector, d);
+            run_journaled(session, &mut watchdog, &mut journal, loaded.as_ref())?
+        }
+        (Some(spec), None) => {
+            let mut injector = FaultInjector::new(&mut col, spec.plan, spec.seed_for_rep(rep));
+            run_journaled(session, &mut injector, &mut journal, loaded.as_ref())?
+        }
+        (None, Some(d)) => {
+            let mut watchdog = DeadlineEvaluator::new(&mut col, d);
+            run_journaled(session, &mut watchdog, &mut journal, loaded.as_ref())?
+        }
+        (None, None) => run_journaled(session, &mut col, &mut journal, loaded.as_ref())?,
+    };
+    let provenance = match &loaded {
+        Some(l) => format!(
+            "resumed from {} ({} journaled exchanges replayed)",
+            dir.display(),
+            l.exchanges.len()
+        ),
+        None => format!("checkpointing to {}", dir.display()),
+    };
+    report_session(ctx, &header, obj, &pool, &out, &provenance)
+}
+
+/// Replay the checkpointed exchanges (if resuming) and drive the rest
+/// of the session through the journal; journaling errors latched
+/// during the run surface here with the trace exit code.
+fn run_journaled(
+    mut session: Box<dyn TunerSession + '_>,
+    evaluator: &mut dyn Evaluator,
+    journal: &mut SessionJournal,
+    loaded: Option<&LoadedCheckpoint>,
+) -> Result<TunerOutput, CliError> {
+    if let Some(l) = loaded {
+        replay_into(session.as_mut(), evaluator, l).map_err(CliError::trace)?;
+    }
+    let out = drive_checkpointed(session, evaluator, journal);
+    if let Some(e) = journal.error() {
+        return Err(CliError::trace(e.clone()));
+    }
+    Ok(out)
 }
 
 /// Run exactly one tuning session (campaign rep 0 of the header's
@@ -322,29 +555,14 @@ fn run_single_session(
     header: &TraceHeader,
     record_to: Option<&Path>,
     replay_from: Option<TraceReplayer>,
-) -> Result<(), String> {
-    let wf = WorkflowId::from_name(&header.workflow).ok_or_else(|| {
-        format!(
-            "trace workflow '{}' is not registered (registered: {})",
-            header.workflow,
-            WorkflowRegistry::global().names().join(" | ")
-        )
-    })?;
-    let obj = Objective::from_name(&header.objective)
-        .ok_or_else(|| format!("trace objective '{}' unknown", header.objective))?;
-    let algo = Algo::from_name(&header.algo).ok_or_else(|| {
-        format!(
-            "trace algorithm '{}' is not registered (registered: {})",
-            header.algo,
-            Algo::names().join(" | ")
-        )
-    })?;
+) -> Result<(), CliError> {
+    let (wf, obj, algo) = resolve_header(header)?;
     let prob = Problem::new(wf, obj);
     // The pool regenerates deterministically from the header — replay
     // needs it for selection/feature state, not for measurements.
     let pool = PoolCache::global()
         .try_get_or_generate(&prob, header.pool_size, header.seed, ctx.threads)
-        .map_err(|e| format!("cannot build pool for {wf}: {e}"))?;
+        .map_err(|e| CliError::infeasible(format!("cannot build pool for {wf}: {e}")))?;
     // the header pins the scoring backend: replay must score with the
     // backend the session was recorded under
     let scorer = ScorerKind::from_name(&header.scorer)
@@ -364,13 +582,16 @@ fn run_single_session(
         Some(mut replayer) => {
             let out = drive(session, &mut replayer);
             if let Some(e) = replayer.error() {
-                return Err(e.to_string());
+                return Err(CliError::trace(e.clone()));
             }
             if replayer.remaining() > 0 {
-                return Err(format!(
-                    "replay left {} unconsumed batches — the trace does not match this build",
-                    replayer.remaining()
-                ));
+                return Err(CliError {
+                    code: EXIT_TRACE,
+                    msg: format!(
+                        "replay left {} unconsumed batches — the trace does not match this build",
+                        replayer.remaining()
+                    ),
+                });
             }
             let n = replayer.batches().len();
             (out, format!("replayed {n} batches from trace"))
@@ -397,22 +618,24 @@ fn run_single_session(
 }
 
 /// Drive one live session through a [`TraceRecorder`] wrapping `live`,
-/// returning the output and the number of batches written.
+/// returning the output and the number of batches written.  The trace
+/// accumulates in memory and lands via one atomic rename, so a crash
+/// mid-session never leaves a torn trace file behind.
 fn record_run(
     live: &mut dyn ceal::tuner::Evaluator,
     session: Box<dyn ceal::tuner::TunerSession + '_>,
     path: &Path,
     header: &TraceHeader,
 ) -> Result<(TunerOutput, u64), String> {
-    let file = std::fs::File::create(path)
-        .map_err(|e| format!("cannot create {}: {e}", path.display()))?;
-    let mut recorder = TraceRecorder::new(live, std::io::BufWriter::new(file), header)
+    let mut recorder = TraceRecorder::new(live, Vec::new(), header)
         .map_err(|e| format!("cannot write trace header: {e}"))?;
     let out = drive(session, &mut recorder);
     let n = recorder.batches_written();
-    recorder
+    let buf = recorder
         .finish()
         .map_err(|e| format!("trace write failed: {e}"))?;
+    ceal::util::fsio::atomic_write(path, &buf)
+        .map_err(|e| format!("cannot write {}: {e}", path.display()))?;
     Ok((out, n))
 }
 
@@ -425,7 +648,7 @@ fn report_session(
     pool: &Pool,
     out: &TunerOutput,
     provenance: &str,
-) -> Result<(), String> {
+) -> Result<(), CliError> {
     let best_cfg = &pool.configs[out.best_idx];
     let best_truth = pool.truth[out.best_idx];
     println!(

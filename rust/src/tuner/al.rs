@@ -15,7 +15,7 @@ use super::common::{
 };
 use super::session::{
     triage_results, FailurePolicy, MeasurementBatch, MeasurementResult, SessionCore,
-    SessionState, TunerSession,
+    SessionDigest, SessionState, TunerSession,
 };
 use crate::gbt::Ensemble;
 use crate::surrogate::Scorer;
@@ -218,6 +218,10 @@ impl TunerSession for AlSession<'_> {
             "refine"
         };
         self.core.state(phase, self.done(), None)
+    }
+
+    fn digest(&self) -> Option<SessionDigest> {
+        Some(self.core.digest(&self.state()))
     }
 
     fn finish(self: Box<Self>) -> TunerOutput {

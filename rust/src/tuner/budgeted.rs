@@ -23,7 +23,7 @@ use super::common::{
 };
 use super::session::{
     drive, DiagSink, FailurePolicy, MeasurementBatch, MeasurementRequest, MeasurementResult,
-    SessionCore, SessionState, TunerSession,
+    SessionCore, SessionDigest, SessionState, TunerSession,
 };
 use crate::config::F_MAX;
 use crate::gbt::Ensemble;
@@ -452,6 +452,10 @@ impl TunerSession for BudgetedSession<'_> {
             Some(self.using_hifi)
         };
         self.core.state(phase, done, using)
+    }
+
+    fn digest(&self) -> Option<SessionDigest> {
+        Some(self.core.digest(&self.state()))
     }
 
     fn finish(self: Box<Self>) -> TunerOutput {

@@ -27,7 +27,7 @@ use super::common::{
 };
 use super::session::{
     sample_component_requests, triage_results, DiagSink, FailurePolicy, MeasurementBatch,
-    MeasurementRequest, MeasurementResult, SessionCore, SessionState, TunerSession,
+    MeasurementRequest, MeasurementResult, SessionCore, SessionDigest, SessionState, TunerSession,
 };
 use crate::config::F_MAX;
 use crate::gbt::{Ensemble, GbtParams};
@@ -506,6 +506,10 @@ impl TunerSession for CealSession<'_> {
             Some(self.using_hifi)
         };
         self.core.state(phase, done, using)
+    }
+
+    fn digest(&self) -> Option<SessionDigest> {
+        Some(self.core.digest(&self.state()))
     }
 
     fn finish(self: Box<Self>) -> TunerOutput {

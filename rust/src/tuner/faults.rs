@@ -32,7 +32,8 @@ use std::collections::HashMap;
 use crate::util::rng::{fnv1a, Pcg32};
 
 use super::session::{
-    BatchMode, Evaluator, FailureKind, MeasurementBatch, MeasurementRequest, MeasurementResult,
+    BatchMode, Evaluator, EvaluatorState, FailureKind, MeasurementBatch, MeasurementRequest,
+    MeasurementResult,
 };
 
 /// What to inject and how often.  All probabilities are independent
@@ -183,6 +184,23 @@ impl<'e> FaultInjector<'e> {
         }
         Fate::Deliver { mult }
     }
+
+    /// Advance the attempt counter for `req` exactly as one
+    /// [`decide`](Self::decide) call would, without drawing a fate —
+    /// the crash-recovery fast-forward behind
+    /// [`Evaluator::note_replayed`].  Mirrors `decide` precisely:
+    /// targeted-component crashes return before touching the counter,
+    /// so they are skipped here too.
+    fn note_attempt(&mut self, req: &MeasurementRequest) {
+        if let (Some(target), MeasurementRequest::Component { comp, .. }) =
+            (self.plan.target_component, req)
+        {
+            if *comp == target {
+                return;
+            }
+        }
+        *self.attempts.entry(request_fingerprint(req)).or_insert(0) += 1;
+    }
 }
 
 impl Evaluator for FaultInjector<'_> {
@@ -220,6 +238,19 @@ impl Evaluator for FaultInjector<'_> {
                 Fate::TimeOut => MeasurementResult::timed_out(),
             })
             .collect()
+    }
+
+    fn checkpoint_state(&mut self) -> Option<EvaluatorState> {
+        self.inner.checkpoint_state()
+    }
+
+    fn restore_state(&mut self, state: &EvaluatorState) -> bool {
+        self.inner.restore_state(state)
+    }
+
+    fn note_replayed(&mut self, req: &MeasurementRequest) {
+        self.note_attempt(req);
+        self.inner.note_replayed(req);
     }
 }
 
@@ -354,6 +385,41 @@ mod tests {
         let fates: Vec<bool> = (0..32).map(|_| inj.evaluate(&batch)[0].is_ok()).collect();
         assert!(fates.iter().any(|&b| b), "some attempt must survive");
         assert!(fates.iter().any(|&b| !b), "some attempt must fail");
+    }
+
+    /// Priming an injector with `note_replayed` must put its attempt
+    /// counters exactly where a real evaluation would have — the
+    /// post-resume fate stream continues the pre-crash one.
+    #[test]
+    fn note_replayed_primes_attempt_counters() {
+        struct Ones;
+        impl Evaluator for Ones {
+            fn evaluate(&mut self, batch: &MeasurementBatch) -> Vec<MeasurementResult> {
+                batch.requests.iter().map(|_| MeasurementResult::ok(1.0)).collect()
+            }
+        }
+        let plan = FaultPlan {
+            p_fail: 0.5,
+            ..FaultPlan::none()
+        };
+        let batch = MeasurementBatch::sequential(
+            (0..8)
+                .map(|i| MeasurementRequest::Workflow {
+                    pool_idx: i,
+                    config: Config(vec![]),
+                })
+                .collect(),
+        );
+        let mut a_inner = Ones;
+        let mut a = FaultInjector::new(&mut a_inner, plan, 3);
+        let _first = a.evaluate(&batch);
+        let want = a.evaluate(&batch);
+        let mut b_inner = Ones;
+        let mut b = FaultInjector::new(&mut b_inner, plan, 3);
+        for req in &batch.requests {
+            b.note_replayed(req);
+        }
+        assert_eq!(b.evaluate(&batch), want, "primed counters must continue the stream");
     }
 
     #[test]

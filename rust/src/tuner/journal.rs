@@ -1,0 +1,1400 @@
+//! Crash-safe tuning sessions: a durable write-ahead journal plus
+//! periodic snapshot compaction, and the loader that rebuilds a
+//! mid-flight session from them.
+//!
+//! A checkpoint directory holds two files:
+//!
+//! * `journal.jsonl` — one unsealed header line (the [`TraceHeader`]
+//!   with the journal format/version and the campaign rep), then one
+//!   CRC-sealed record per session event: an `ask` record *before* a
+//!   batch is issued to the evaluator, a `tell` record — carrying the
+//!   outcomes and the evaluator's post-batch RNG state — *before* the
+//!   results are applied to the session.  Every append is fsynced, so
+//!   a crash loses at most the record being written.
+//! * `snapshot.json` — a single CRC-sealed object produced by periodic
+//!   compaction: the full exchange history so far plus the session's
+//!   [`SessionDigest`] at that point.  The snapshot is written
+//!   atomically *first*, then the journal is truncated back to its
+//!   header; a crash between the two leaves a tail whose records are
+//!   already in the snapshot, which the loader skips by sequence
+//!   number.
+//!
+//! Recovery never re-measures what was already told: the session is
+//! rebuilt from its construction arguments and the journaled exchanges
+//! are replayed through the ordinary `ask`/`tell` path
+//! ([`replay_into`]), which reconstructs the full internal state —
+//! surrogates, budgets, RNG positions — because session behaviour is a
+//! pure function of construction arguments and told values (the
+//! determinism contract of [`super::session`]).  The rebuilt state is
+//! verified against the snapshot's digest, the evaluator's noise
+//! stream is restored from the last tell record, and fault-injection
+//! attempt counters are fast-forwarded via
+//! [`Evaluator::note_replayed`] — so kill-at-any-point + resume is
+//! bit-identical to the uninterrupted run (pinned by
+//! `tests/crash_resume.rs`).
+//!
+//! Torn-write semantics: a final journal line that fails to parse or
+//! CRC-check is the expected crash artifact — the exchange it
+//! described never completed, so the loader drops it (noting the
+//! recovery) and the session simply redoes that step.  Corruption
+//! anywhere *else* is bit rot, reported as a hard
+//! [`TraceError::Crc`]/[`TraceError::Malformed`] — never a panic, and
+//! never a silent resume from wrong state.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+use crate::sim::MeasurementOutcome;
+use crate::util::fsio;
+use crate::util::json::{self, Json};
+use crate::util::rng::RngSnapshot;
+
+use super::common::TunerOutput;
+use super::session::{
+    BatchMode, Evaluator, EvaluatorState, MeasurementBatch, MeasurementResult, SessionDigest,
+    TunerSession,
+};
+use super::trace::{
+    mode_from_name, mode_name, outcome_json, parse_outcomes, parse_recorded_requests,
+    RecordedRequest, TraceError, TraceHeader,
+};
+
+/// File names inside a checkpoint directory.
+pub const JOURNAL_FILE: &str = "journal.jsonl";
+pub const SNAPSHOT_FILE: &str = "snapshot.json";
+
+/// The journal/snapshot format version this build writes and the
+/// newest it reads (version compatibility policy: a newer on-disk
+/// version is rejected with [`TraceError::Version`] rather than
+/// resumed into garbage; older versions remain readable).
+pub const JOURNAL_VERSION: u64 = 1;
+
+const JOURNAL_FORMAT: &str = "ceal-session-journal";
+const SNAPSHOT_FORMAT: &str = "ceal-session-snapshot";
+
+/// Compact the journal into a snapshot every this many completed
+/// exchanges (tunable per journal for tests via
+/// [`SessionJournal::set_snapshot_every`]).
+pub const DEFAULT_SNAPSHOT_EVERY: usize = 8;
+
+/// One completed ask/tell round as persisted: what was asked, what
+/// came back, and the evaluator's stochastic state after the batch.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Exchange {
+    pub mode: BatchMode,
+    pub requests: Vec<RecordedRequest>,
+    pub outcomes: Vec<MeasurementOutcome>,
+    /// Evaluator noise-stream position after this exchange (absent for
+    /// evaluators with no internal randomness).
+    pub eval: Option<EvaluatorState>,
+}
+
+/// Everything recovered from a checkpoint directory: the run identity,
+/// the full exchange history (snapshot + journal tail merged), and the
+/// crash residue.
+#[derive(Clone, Debug)]
+pub struct LoadedCheckpoint {
+    pub header: TraceHeader,
+    /// Campaign rep index the checkpoint belongs to (0 for single
+    /// sessions).
+    pub rep: usize,
+    /// All completed exchanges, oldest first.
+    pub exchanges: Vec<Exchange>,
+    /// How many of `exchanges` came from the snapshot; the rebuilt
+    /// session's digest is verified at this boundary.
+    pub snapshot_told: usize,
+    /// Session digest captured when the snapshot was compacted.
+    pub snapshot_digest: Option<SessionDigest>,
+    /// A batch that was journaled as asked but never told (the crash
+    /// hit mid-measurement); the resumed session re-asks it and the
+    /// evaluator re-measures it live.
+    pub pending_ask: Option<(BatchMode, Vec<RecordedRequest>)>,
+    /// Human-readable notes about crash artifacts dropped during
+    /// recovery (torn final record).
+    pub recovered: Vec<String>,
+}
+
+impl LoadedCheckpoint {
+    /// The evaluator state to restore after replay: the noise-stream
+    /// position recorded with the last completed exchange.
+    pub fn eval(&self) -> Option<EvaluatorState> {
+        self.exchanges.last().and_then(|e| e.eval)
+    }
+}
+
+/// The write-ahead journal for one tuning session.  IO and divergence
+/// errors are *latched* (the measurement loop has no error channel,
+/// mirroring [`super::trace::TraceRecorder`]): journaling stops at the
+/// first error, the tuning run itself continues, and the caller checks
+/// [`error`](Self::error) afterwards.  Creation, loading and resume
+/// return hard errors instead.
+pub struct SessionJournal {
+    dir: PathBuf,
+    header: TraceHeader,
+    rep: usize,
+    file: fs::File,
+    /// Completed exchanges (snapshot + tail), mirroring disk.
+    history: Vec<Exchange>,
+    /// How many of `history` the on-disk snapshot covers.
+    snapshotted: usize,
+    /// A journaled-but-untold ask inherited from a resume: the next
+    /// `record_ask` must match it instead of appending a duplicate.
+    pending: Option<(BatchMode, Vec<RecordedRequest>)>,
+    /// The in-flight ask awaiting its tell.
+    current: Option<(BatchMode, Vec<RecordedRequest>)>,
+    last_digest: Option<SessionDigest>,
+    snapshot_every: usize,
+    error: Option<TraceError>,
+}
+
+impl SessionJournal {
+    /// Start a fresh journal in `dir` (created if needed); any stale
+    /// snapshot from a previous run is removed so the directory always
+    /// describes exactly one session.
+    pub fn create(dir: &Path, header: &TraceHeader, rep: usize) -> Result<SessionJournal, TraceError> {
+        fs::create_dir_all(dir).map_err(|e| {
+            TraceError::Io(format!("cannot create checkpoint dir {}: {e}", dir.display()))
+        })?;
+        let snap = dir.join(SNAPSHOT_FILE);
+        if snap.exists() {
+            fs::remove_file(&snap).map_err(|e| {
+                TraceError::Io(format!("cannot clear stale snapshot {}: {e}", snap.display()))
+            })?;
+        }
+        let mut line = header_json(header, rep).compact();
+        line.push('\n');
+        let path = dir.join(JOURNAL_FILE);
+        fsio::atomic_write(&path, line.as_bytes()).map_err(|e| {
+            TraceError::Io(format!("cannot write journal {}: {e}", path.display()))
+        })?;
+        let file = open_append(&path)?;
+        Ok(SessionJournal {
+            dir: dir.to_path_buf(),
+            header: header.clone(),
+            rep,
+            file,
+            history: Vec::new(),
+            snapshotted: 0,
+            pending: None,
+            current: None,
+            last_digest: None,
+            snapshot_every: DEFAULT_SNAPSHOT_EVERY,
+            error: None,
+        })
+    }
+
+    /// Reopen a checkpoint directory after a crash: load and validate
+    /// everything on disk, rewrite the journal tail cleanly (dropping
+    /// any torn final record so future appends start on a record
+    /// boundary), and return the journal plus what must be replayed.
+    pub fn resume(dir: &Path) -> Result<(SessionJournal, LoadedCheckpoint), TraceError> {
+        let loaded = load_checkpoint(dir)?;
+        let mut text = header_json(&loaded.header, loaded.rep).compact();
+        text.push('\n');
+        for (seq, ex) in loaded.exchanges.iter().enumerate().skip(loaded.snapshot_told) {
+            text.push_str(&ask_line(seq, ex.mode, &ex.requests));
+            text.push('\n');
+            text.push_str(&tell_line(seq, &ex.outcomes, ex.eval.as_ref()));
+            text.push('\n');
+        }
+        if let Some((mode, reqs)) = &loaded.pending_ask {
+            text.push_str(&ask_line(loaded.exchanges.len(), *mode, reqs));
+            text.push('\n');
+        }
+        let path = dir.join(JOURNAL_FILE);
+        fsio::atomic_write(&path, text.as_bytes()).map_err(|e| {
+            TraceError::Io(format!("cannot rewrite journal {}: {e}", path.display()))
+        })?;
+        let file = open_append(&path)?;
+        let journal = SessionJournal {
+            dir: dir.to_path_buf(),
+            header: loaded.header.clone(),
+            rep: loaded.rep,
+            file,
+            history: loaded.exchanges.clone(),
+            snapshotted: loaded.snapshot_told,
+            pending: loaded.pending_ask.clone(),
+            current: None,
+            last_digest: loaded.snapshot_digest.clone(),
+            snapshot_every: DEFAULT_SNAPSHOT_EVERY,
+            error: None,
+        };
+        Ok((journal, loaded))
+    }
+
+    /// Durably record a batch *before* it is issued to the evaluator.
+    pub fn record_ask(&mut self, batch: &MeasurementBatch) {
+        if self.error.is_some() {
+            return;
+        }
+        assert!(self.current.is_none(), "record_ask with a tell outstanding");
+        let recorded: Vec<RecordedRequest> =
+            batch.requests.iter().map(RecordedRequest::of).collect();
+        if let Some((mode, reqs)) = self.pending.take() {
+            // a resumed session re-asking its journaled in-flight
+            // batch: verify instead of appending a duplicate record
+            if mode != batch.mode || reqs != recorded {
+                self.error = Some(TraceError::Divergence {
+                    batch: self.history.len(),
+                    detail: "resumed session re-asked a different batch than journaled".into(),
+                });
+                return;
+            }
+            self.current = Some((mode, reqs));
+            return;
+        }
+        let line = ask_line(self.history.len(), batch.mode, &recorded);
+        self.append(&line);
+        self.current = Some((batch.mode, recorded));
+    }
+
+    /// Durably record a batch's results (and the evaluator's post-batch
+    /// state) *before* they are applied to the session.
+    pub fn record_tell(&mut self, results: &[MeasurementResult], eval: Option<EvaluatorState>) {
+        if self.error.is_some() {
+            return;
+        }
+        let (mode, requests) = match self.current.take() {
+            Some(c) => c,
+            None => {
+                self.error = Some(TraceError::Malformed(
+                    "record_tell without a recorded ask".into(),
+                ));
+                return;
+            }
+        };
+        let outcomes: Vec<MeasurementOutcome> = results.iter().map(|r| r.outcome).collect();
+        let line = tell_line(self.history.len(), &outcomes, eval.as_ref());
+        self.append(&line);
+        self.history.push(Exchange {
+            mode,
+            requests,
+            outcomes,
+            eval,
+        });
+    }
+
+    /// Called after the results were applied to the session; captures
+    /// the post-apply digest and compacts the journal into a snapshot
+    /// when enough exchanges accumulated.
+    pub fn after_apply(&mut self, digest: Option<SessionDigest>) {
+        if self.error.is_some() {
+            return;
+        }
+        self.last_digest = digest;
+        if self.history.len() - self.snapshotted >= self.snapshot_every {
+            self.compact();
+        }
+    }
+
+    /// The first journaling error, if any (journaling stopped there;
+    /// the checkpoint on disk is stale but uncorrupted).
+    pub fn error(&self) -> Option<&TraceError> {
+        self.error.as_ref()
+    }
+
+    pub fn header(&self) -> &TraceHeader {
+        &self.header
+    }
+
+    pub fn rep(&self) -> usize {
+        self.rep
+    }
+
+    /// Completed exchanges recorded so far.
+    pub fn exchanges(&self) -> usize {
+        self.history.len()
+    }
+
+    /// Override the compaction period (minimum 1).
+    pub fn set_snapshot_every(&mut self, every: usize) {
+        self.snapshot_every = every.max(1);
+    }
+
+    fn append(&mut self, line: &str) {
+        let mut bytes = Vec::with_capacity(line.len() + 1);
+        bytes.extend_from_slice(line.as_bytes());
+        bytes.push(b'\n');
+        let res = self
+            .file
+            .write_all(&bytes)
+            .and_then(|_| self.file.sync_data());
+        if let Err(e) = res {
+            self.error = Some(TraceError::Io(format!("journal append failed: {e}")));
+        }
+    }
+
+    /// Fold the journal into `snapshot.json` and truncate the journal
+    /// back to its header.  Ordering is what makes this crash-safe:
+    /// the snapshot lands atomically first, so until the truncation
+    /// the directory holds the new snapshot *and* the full tail —
+    /// loadable either way (stale tail records are skipped by seq).
+    fn compact(&mut self) {
+        let snap = snapshot_text(&self.header, self.rep, &self.history, self.last_digest.as_ref());
+        let snap_path = self.dir.join(SNAPSHOT_FILE);
+        if let Err(e) = fsio::atomic_write(&snap_path, snap.as_bytes()) {
+            self.error = Some(TraceError::Io(format!("snapshot write failed: {e}")));
+            return;
+        }
+        let mut line = header_json(&self.header, self.rep).compact();
+        line.push('\n');
+        let path = self.dir.join(JOURNAL_FILE);
+        match fsio::atomic_write(&path, line.as_bytes()).and_then(|_| {
+            fs::OpenOptions::new().append(true).open(&path)
+        }) {
+            Ok(f) => {
+                self.file = f;
+                self.snapshotted = self.history.len();
+            }
+            Err(e) => {
+                self.error = Some(TraceError::Io(format!("journal compaction failed: {e}")));
+            }
+        }
+    }
+}
+
+fn open_append(path: &Path) -> Result<fs::File, TraceError> {
+    fs::OpenOptions::new()
+        .append(true)
+        .open(path)
+        .map_err(|e| TraceError::Io(format!("cannot open journal {}: {e}", path.display())))
+}
+
+// ---------------------------------------------------------------------
+// record encoding
+
+/// Seal a record: the CRC-32 of the record's canonical compact JSON
+/// (sans the `crc` key itself) is stored alongside it, so any byte of
+/// bit rot in a record is detected on load.
+fn seal(mut m: BTreeMap<String, Json>) -> String {
+    m.remove("crc");
+    let body = Json::Obj(m.clone()).compact();
+    m.insert(
+        "crc".to_string(),
+        Json::Str(format!("{:08x}", fsio::crc32(body.as_bytes()))),
+    );
+    Json::Obj(m).compact()
+}
+
+/// Parse and CRC-verify a sealed record, returning the body (without
+/// the seal).
+fn unseal(line: &str, context: &str) -> Result<Json, TraceError> {
+    let v = json::parse(line).map_err(|e| TraceError::Malformed(format!("{context}: {e}")))?;
+    let mut m = match v {
+        Json::Obj(m) => m,
+        _ => {
+            return Err(TraceError::Malformed(format!(
+                "{context}: not a JSON object"
+            )))
+        }
+    };
+    let crc = match m.remove("crc") {
+        Some(Json::Str(s)) => u32::from_str_radix(&s, 16)
+            .map_err(|_| TraceError::Malformed(format!("{context}: bad 'crc' seal")))?,
+        _ => {
+            return Err(TraceError::Malformed(format!(
+                "{context}: missing 'crc' seal"
+            )))
+        }
+    };
+    let body = Json::Obj(m);
+    if fsio::crc32(body.compact().as_bytes()) != crc {
+        return Err(TraceError::Crc {
+            context: context.to_string(),
+        });
+    }
+    Ok(body)
+}
+
+/// The journal's (unsealed) header line: the trace header plus the
+/// journal format/version and the campaign rep.
+fn header_json(header: &TraceHeader, rep: usize) -> Json {
+    let mut m = match header.to_json() {
+        Json::Obj(m) => m,
+        _ => unreachable!("trace headers serialize to objects"),
+    };
+    m.insert("format".to_string(), Json::Str(JOURNAL_FORMAT.into()));
+    m.insert("version".to_string(), Json::Num(JOURNAL_VERSION as f64));
+    if rep != 0 {
+        m.insert("rep".to_string(), Json::Num(rep as f64));
+    }
+    Json::Obj(m)
+}
+
+fn check_format(v: &Json, format: &str, max_version: u64) -> Result<(), TraceError> {
+    match v.get("format").and_then(Json::as_str) {
+        Some(f) if f == format => {}
+        _ => return Err(TraceError::NotATrace(format!("not a {format} file"))),
+    }
+    let version = v
+        .get("version")
+        .and_then(Json::as_f64)
+        .ok_or_else(|| TraceError::Malformed(format!("{format} header missing 'version'")))?
+        as u64;
+    if version == 0 || version > max_version {
+        return Err(TraceError::Version(version));
+    }
+    Ok(())
+}
+
+fn recorded_request_json(r: &RecordedRequest) -> Json {
+    match r {
+        RecordedRequest::Workflow { pool_idx } => {
+            Json::obj(vec![("pool", Json::Num(*pool_idx as f64))])
+        }
+        RecordedRequest::Component { comp, config } => Json::obj(vec![
+            ("comp", Json::Num(*comp as f64)),
+            (
+                "cfg",
+                Json::Arr(config.iter().map(|&x| Json::Num(x as f64)).collect()),
+            ),
+        ]),
+    }
+}
+
+/// RNG positions persist as decimal strings (u64 exceeds f64's exact
+/// integer range); the Box-Muller spare persists as its raw bits.
+fn rng_json(s: &RngSnapshot) -> Json {
+    Json::obj(vec![
+        ("inc", Json::Str(s.inc.to_string())),
+        (
+            "spare",
+            match s.spare_normal {
+                Some(v) => Json::Str(v.to_bits().to_string()),
+                None => Json::Null,
+            },
+        ),
+        ("state", Json::Str(s.state.to_string())),
+    ])
+}
+
+fn rng_from_json(v: &Json, context: &str) -> Result<RngSnapshot, TraceError> {
+    let bad = |k: &str| TraceError::Malformed(format!("{context}: bad rng field '{k}'"));
+    let u64_field = |k: &str| -> Result<u64, TraceError> {
+        v.get(k)
+            .and_then(Json::as_str)
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| bad(k))
+    };
+    let spare_normal = match v.get("spare") {
+        None | Some(Json::Null) => None,
+        Some(Json::Str(s)) => Some(f64::from_bits(s.parse().map_err(|_| bad("spare"))?)),
+        Some(_) => return Err(bad("spare")),
+    };
+    Ok(RngSnapshot {
+        state: u64_field("state")?,
+        inc: u64_field("inc")?,
+        spare_normal,
+    })
+}
+
+fn eval_json(e: &EvaluatorState) -> Json {
+    Json::obj(vec![("rng", rng_json(&e.rng))])
+}
+
+fn eval_from_json(v: &Json, context: &str) -> Result<EvaluatorState, TraceError> {
+    let rng = v
+        .get("rng")
+        .ok_or_else(|| TraceError::Malformed(format!("{context}: eval state missing 'rng'")))?;
+    Ok(EvaluatorState {
+        rng: rng_from_json(rng, context)?,
+    })
+}
+
+fn digest_json(d: &SessionDigest) -> Json {
+    let mut pairs = vec![
+        ("asked", Json::Num(d.asked_batches as f64)),
+        ("comp_runs", Json::Num(d.component_runs as f64)),
+        ("cost_bits", Json::Str(d.cost_bits.to_string())),
+        ("done", Json::Bool(d.done)),
+        ("failed_runs", Json::Num(d.failed_runs as f64)),
+        ("phase", Json::Str(d.phase.clone())),
+        ("refits", Json::Num(d.model_refits as f64)),
+        ("sel_rng", rng_json(&d.sel_rng)),
+        ("told", Json::Num(d.told_batches as f64)),
+        ("wf_runs", Json::Num(d.workflow_runs as f64)),
+    ];
+    if let Some(h) = d.using_hifi {
+        pairs.push(("using_hifi", Json::Bool(h)));
+    }
+    Json::obj(pairs)
+}
+
+fn digest_from_json(v: &Json) -> Result<SessionDigest, TraceError> {
+    let bad = |k: &str| TraceError::Malformed(format!("snapshot digest: bad field '{k}'"));
+    let num = |k: &str| -> Result<usize, TraceError> {
+        v.get(k).and_then(Json::as_usize).ok_or_else(|| bad(k))
+    };
+    let cost_bits: u64 = v
+        .get("cost_bits")
+        .and_then(Json::as_str)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| bad("cost_bits"))?;
+    let done = match v.get("done") {
+        Some(Json::Bool(b)) => *b,
+        _ => return Err(bad("done")),
+    };
+    let using_hifi = match v.get("using_hifi") {
+        None => None,
+        Some(Json::Bool(b)) => Some(*b),
+        Some(_) => return Err(bad("using_hifi")),
+    };
+    Ok(SessionDigest {
+        phase: v
+            .get("phase")
+            .and_then(Json::as_str)
+            .ok_or_else(|| bad("phase"))?
+            .to_string(),
+        done,
+        asked_batches: num("asked")?,
+        told_batches: num("told")?,
+        workflow_runs: num("wf_runs")?,
+        component_runs: num("comp_runs")?,
+        failed_runs: num("failed_runs")?,
+        model_refits: num("refits")?,
+        cost_bits,
+        sel_rng: rng_from_json(
+            v.get("sel_rng").ok_or_else(|| bad("sel_rng"))?,
+            "snapshot digest",
+        )?,
+        using_hifi,
+    })
+}
+
+fn ask_line(seq: usize, mode: BatchMode, requests: &[RecordedRequest]) -> String {
+    let mut m = BTreeMap::new();
+    m.insert("kind".to_string(), Json::Str("ask".into()));
+    m.insert("mode".to_string(), Json::Str(mode_name(mode).into()));
+    m.insert(
+        "reqs".to_string(),
+        Json::Arr(requests.iter().map(recorded_request_json).collect()),
+    );
+    m.insert("seq".to_string(), Json::Num(seq as f64));
+    seal(m)
+}
+
+fn tell_line(seq: usize, outcomes: &[MeasurementOutcome], eval: Option<&EvaluatorState>) -> String {
+    let mut m = BTreeMap::new();
+    m.insert("kind".to_string(), Json::Str("tell".into()));
+    m.insert("seq".to_string(), Json::Num(seq as f64));
+    m.insert(
+        "ys".to_string(),
+        Json::Arr(outcomes.iter().map(outcome_json).collect()),
+    );
+    if let Some(e) = eval {
+        m.insert("eval".to_string(), eval_json(e));
+    }
+    seal(m)
+}
+
+fn exchange_json(e: &Exchange) -> Json {
+    let mut pairs = vec![
+        ("mode", Json::Str(mode_name(e.mode).into())),
+        (
+            "reqs",
+            Json::Arr(e.requests.iter().map(recorded_request_json).collect()),
+        ),
+        (
+            "ys",
+            Json::Arr(e.outcomes.iter().map(outcome_json).collect()),
+        ),
+    ];
+    if let Some(ev) = &e.eval {
+        pairs.push(("eval", eval_json(ev)));
+    }
+    Json::obj(pairs)
+}
+
+fn snapshot_text(
+    header: &TraceHeader,
+    rep: usize,
+    history: &[Exchange],
+    digest: Option<&SessionDigest>,
+) -> String {
+    let mut m = BTreeMap::new();
+    m.insert("format".to_string(), Json::Str(SNAPSHOT_FORMAT.into()));
+    m.insert("version".to_string(), Json::Num(JOURNAL_VERSION as f64));
+    m.insert("header".to_string(), header.to_json());
+    if rep != 0 {
+        m.insert("rep".to_string(), Json::Num(rep as f64));
+    }
+    m.insert(
+        "exchanges".to_string(),
+        Json::Arr(history.iter().map(exchange_json).collect()),
+    );
+    if let Some(d) = digest {
+        m.insert("digest".to_string(), digest_json(d));
+    }
+    let mut text = seal(m);
+    text.push('\n');
+    text
+}
+
+// ---------------------------------------------------------------------
+// loading
+
+struct Snapshot {
+    header: TraceHeader,
+    rep: usize,
+    exchanges: Vec<Exchange>,
+    digest: Option<SessionDigest>,
+}
+
+fn parse_exchange(v: &Json, k: usize) -> Result<Exchange, TraceError> {
+    let context = format!("snapshot exchange {k}");
+    let bad = |msg: String| TraceError::Malformed(format!("{context}: {msg}"));
+    let mode = mode_from_name(v.get("mode").and_then(Json::as_str)).map_err(&bad)?;
+    let requests = parse_recorded_requests(v.get("reqs")).map_err(&bad)?;
+    let outcomes = parse_outcomes(v.get("ys")).map_err(&bad)?;
+    if outcomes.len() != requests.len() {
+        return Err(bad(format!(
+            "{} requests but {} outcomes",
+            requests.len(),
+            outcomes.len()
+        )));
+    }
+    let eval = match v.get("eval") {
+        None => None,
+        Some(e) => Some(eval_from_json(e, &context)?),
+    };
+    Ok(Exchange {
+        mode,
+        requests,
+        outcomes,
+        eval,
+    })
+}
+
+fn parse_snapshot(text: &str) -> Result<Snapshot, TraceError> {
+    let v = unseal(text.trim(), "snapshot")?;
+    check_format(&v, SNAPSHOT_FORMAT, JOURNAL_VERSION)?;
+    let header = TraceHeader::from_json(
+        v.get("header")
+            .ok_or_else(|| TraceError::Malformed("snapshot missing 'header'".into()))?,
+    )?;
+    let rep = v.get("rep").and_then(Json::as_usize).unwrap_or(0);
+    let exchanges = v
+        .get("exchanges")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| TraceError::Malformed("snapshot missing 'exchanges'".into()))?
+        .iter()
+        .enumerate()
+        .map(|(k, e)| parse_exchange(e, k))
+        .collect::<Result<Vec<_>, _>>()?;
+    let digest = match v.get("digest") {
+        None => None,
+        Some(d) => Some(digest_from_json(d)?),
+    };
+    Ok(Snapshot {
+        header,
+        rep,
+        exchanges,
+        digest,
+    })
+}
+
+enum TailRecord {
+    Ask {
+        seq: usize,
+        mode: BatchMode,
+        requests: Vec<RecordedRequest>,
+    },
+    Tell {
+        seq: usize,
+        outcomes: Vec<MeasurementOutcome>,
+        eval: Option<EvaluatorState>,
+    },
+}
+
+fn parse_record(v: &Json, context: &str) -> Result<TailRecord, TraceError> {
+    let bad = |msg: String| TraceError::Malformed(format!("{context}: {msg}"));
+    let seq = v
+        .get("seq")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| bad("missing 'seq'".into()))?;
+    match v.get("kind").and_then(Json::as_str) {
+        Some("ask") => {
+            let mode = mode_from_name(v.get("mode").and_then(Json::as_str)).map_err(&bad)?;
+            let requests = parse_recorded_requests(v.get("reqs")).map_err(&bad)?;
+            if requests.is_empty() {
+                return Err(bad("empty ask batch".into()));
+            }
+            Ok(TailRecord::Ask {
+                seq,
+                mode,
+                requests,
+            })
+        }
+        Some("tell") => {
+            let outcomes = parse_outcomes(v.get("ys")).map_err(&bad)?;
+            let eval = match v.get("eval") {
+                None => None,
+                Some(e) => Some(eval_from_json(e, context)?),
+            };
+            Ok(TailRecord::Tell {
+                seq,
+                outcomes,
+                eval,
+            })
+        }
+        other => Err(bad(format!("unrecognized record kind {other:?}"))),
+    }
+}
+
+fn parse_journal_header(line: &str) -> Result<(TraceHeader, usize), TraceError> {
+    let v = json::parse(line)
+        .map_err(|e| TraceError::NotATrace(format!("journal header: {e}")))?;
+    check_format(&v, JOURNAL_FORMAT, JOURNAL_VERSION)?;
+    let header = TraceHeader::from_json(&v)?;
+    let rep = v.get("rep").and_then(Json::as_usize).unwrap_or(0);
+    Ok((header, rep))
+}
+
+/// Load and validate a checkpoint directory without touching it:
+/// snapshot (if any) merged with the journal tail into the complete
+/// exchange history, crash residue classified (torn final record →
+/// dropped with a note; corruption elsewhere → hard error).
+pub fn load_checkpoint(dir: &Path) -> Result<LoadedCheckpoint, TraceError> {
+    let snap_path = dir.join(SNAPSHOT_FILE);
+    let snapshot = match fs::read_to_string(&snap_path) {
+        Ok(text) => Some(parse_snapshot(&text)?),
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => None,
+        Err(e) => {
+            return Err(TraceError::Io(format!(
+                "cannot read snapshot {}: {e}",
+                snap_path.display()
+            )))
+        }
+    };
+    let path = dir.join(JOURNAL_FILE);
+    let text = fs::read_to_string(&path)
+        .map_err(|e| TraceError::Io(format!("cannot read journal {}: {e}", path.display())))?;
+    let mut lines = text.lines().enumerate().filter(|(_, l)| !l.trim().is_empty());
+    let (_, first) = lines
+        .next()
+        .ok_or_else(|| TraceError::NotATrace("empty journal file".into()))?;
+    let (header, rep) = parse_journal_header(first)?;
+
+    let (mut exchanges, snapshot_told, snapshot_digest) = match snapshot {
+        Some(s) => {
+            if s.header != header || s.rep != rep {
+                return Err(TraceError::Malformed(
+                    "snapshot and journal headers disagree (mixed checkpoint directories?)".into(),
+                ));
+            }
+            let told = s.exchanges.len();
+            (s.exchanges, told, s.digest)
+        }
+        None => (Vec::new(), 0, None),
+    };
+
+    let tail: Vec<(usize, &str)> = lines.collect();
+    let last = tail.len();
+    let mut pending_ask: Option<(BatchMode, Vec<RecordedRequest>)> = None;
+    let mut recovered = Vec::new();
+    for (k, (lineno, line)) in tail.into_iter().enumerate() {
+        let context = format!("journal line {}", lineno + 1);
+        let rec = match unseal(line, &context).and_then(|v| parse_record(&v, &context)) {
+            Ok(r) => r,
+            Err(e) if k + 1 == last => {
+                // a torn or half-written final record is the expected
+                // crash artifact: the event never completed, drop it
+                recovered.push(format!("dropped torn final journal record ({e})"));
+                continue;
+            }
+            Err(e) => return Err(e),
+        };
+        match rec {
+            TailRecord::Ask {
+                seq,
+                mode,
+                requests,
+            } => {
+                if seq < snapshot_told {
+                    continue; // pre-compaction residue, already in the snapshot
+                }
+                if pending_ask.is_some() || seq != exchanges.len() {
+                    return Err(TraceError::Malformed(format!(
+                        "{context}: ask record out of sequence (seq {seq}, {} exchanges loaded)",
+                        exchanges.len()
+                    )));
+                }
+                pending_ask = Some((mode, requests));
+            }
+            TailRecord::Tell {
+                seq,
+                outcomes,
+                eval,
+            } => {
+                if seq < snapshot_told {
+                    continue;
+                }
+                let (mode, requests) = pending_ask.take().ok_or_else(|| {
+                    TraceError::Malformed(format!(
+                        "{context}: tell record without a matching ask"
+                    ))
+                })?;
+                if seq != exchanges.len() {
+                    return Err(TraceError::Malformed(format!(
+                        "{context}: tell record out of sequence (seq {seq}, {} exchanges loaded)",
+                        exchanges.len()
+                    )));
+                }
+                if outcomes.len() != requests.len() {
+                    return Err(TraceError::Malformed(format!(
+                        "{context}: {} requests but {} outcomes",
+                        requests.len(),
+                        outcomes.len()
+                    )));
+                }
+                exchanges.push(Exchange {
+                    mode,
+                    requests,
+                    outcomes,
+                    eval,
+                });
+            }
+        }
+    }
+    Ok(LoadedCheckpoint {
+        header,
+        rep,
+        exchanges,
+        snapshot_told,
+        snapshot_digest,
+        pending_ask,
+        recovered,
+    })
+}
+
+// ---------------------------------------------------------------------
+// replay and driving
+
+fn verify_replayed_batch(
+    k: usize,
+    batch: &MeasurementBatch,
+    mode: BatchMode,
+    requests: &[RecordedRequest],
+) -> Result<(), TraceError> {
+    let diverged = |detail: String| TraceError::Divergence { batch: k, detail };
+    if batch.mode != mode {
+        return Err(diverged("batch mode changed on resume".into()));
+    }
+    if batch.len() != requests.len() {
+        return Err(diverged(format!(
+            "batch size changed (journaled {}, session asked {})",
+            requests.len(),
+            batch.len()
+        )));
+    }
+    for (i, (recorded, live)) in requests.iter().zip(&batch.requests).enumerate() {
+        if !recorded.matches(live) {
+            return Err(diverged(format!(
+                "request {i}: journaled {recorded:?}, session asked {live:?}"
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// Rebuild a freshly constructed session to the checkpointed state by
+/// replaying the journaled exchanges through the ordinary ask/tell
+/// path.  Each replayed ask is verified against the journal (a
+/// divergence means a different seed/algorithm/build); replayed
+/// requests are announced to the evaluator via
+/// [`Evaluator::note_replayed`] so per-request bookkeeping (fault
+/// attempt counters) fast-forwards without re-measuring; at the
+/// snapshot boundary the rebuilt digest is checked against the
+/// checkpointed one; and finally the evaluator's noise stream is
+/// restored to its last journaled position.  Returns the number of
+/// exchanges replayed.
+pub fn replay_into(
+    session: &mut dyn TunerSession,
+    evaluator: &mut dyn Evaluator,
+    loaded: &LoadedCheckpoint,
+) -> Result<usize, TraceError> {
+    for (k, ex) in loaded.exchanges.iter().enumerate() {
+        let batch = session.ask();
+        verify_replayed_batch(k, &batch, ex.mode, &ex.requests)?;
+        for req in &batch.requests {
+            evaluator.note_replayed(req);
+        }
+        let results: Vec<MeasurementResult> = ex
+            .outcomes
+            .iter()
+            .map(|&outcome| MeasurementResult { outcome })
+            .collect();
+        session.tell(&results);
+        if k + 1 == loaded.snapshot_told {
+            if let (Some(want), Some(got)) = (&loaded.snapshot_digest, &session.digest()) {
+                if want != got {
+                    return Err(TraceError::StateMismatch {
+                        detail: format!(
+                            "after replaying {} exchanges the rebuilt session digest differs \
+                             from the checkpointed one (checkpointed {want:?}, rebuilt {got:?})",
+                            k + 1
+                        ),
+                    });
+                }
+            }
+        }
+    }
+    if let Some(state) = loaded.eval() {
+        evaluator.restore_state(&state);
+    }
+    Ok(loaded.exchanges.len())
+}
+
+/// [`super::session::drive`] with a write-ahead journal: every ask is
+/// journaled before it reaches the evaluator and every tell before it
+/// reaches the session, so a crash at any point is recoverable from
+/// disk.  Journaling reads only immutable state (digests, evaluator
+/// snapshots), so the tuning trajectory is bit-identical to the plain
+/// driver; journaling errors are latched on `journal` for the caller.
+pub fn drive_checkpointed(
+    mut session: Box<dyn TunerSession + '_>,
+    evaluator: &mut dyn Evaluator,
+    journal: &mut SessionJournal,
+) -> TunerOutput {
+    loop {
+        let batch = session.ask();
+        if batch.is_empty() {
+            break;
+        }
+        journal.record_ask(&batch);
+        let results = evaluator.evaluate(&batch);
+        assert_eq!(
+            results.len(),
+            batch.len(),
+            "evaluator must answer every request of a batch"
+        );
+        journal.record_tell(&results, evaluator.checkpoint_state());
+        session.tell(&results);
+        journal.after_apply(session.digest());
+    }
+    session.finish()
+}
+
+/// A measurement watchdog: forwards batches to `inner` and converts
+/// any batch that took longer than `deadline` wall-clock into all
+/// [`MeasurementOutcome::TimedOut`] slots, which then flow through the
+/// session's ordinary retry/backoff handling (and are journaled as
+/// timeouts like any other outcome).  Wall-clock–dependent by nature,
+/// so it is excluded from the bit-equivalence contracts.
+pub struct DeadlineEvaluator<'e> {
+    inner: &'e mut dyn Evaluator,
+    deadline: Duration,
+    timed_out_batches: usize,
+}
+
+impl<'e> DeadlineEvaluator<'e> {
+    pub fn new(inner: &'e mut dyn Evaluator, deadline: Duration) -> DeadlineEvaluator<'e> {
+        DeadlineEvaluator {
+            inner,
+            deadline,
+            timed_out_batches: 0,
+        }
+    }
+
+    /// Batches abandoned at the deadline so far.
+    pub fn timed_out_batches(&self) -> usize {
+        self.timed_out_batches
+    }
+}
+
+impl Evaluator for DeadlineEvaluator<'_> {
+    fn evaluate(&mut self, batch: &MeasurementBatch) -> Vec<MeasurementResult> {
+        let start = Instant::now();
+        let results = self.inner.evaluate(batch);
+        if start.elapsed() > self.deadline {
+            self.timed_out_batches += 1;
+            return batch
+                .requests
+                .iter()
+                .map(|_| MeasurementResult::timed_out())
+                .collect();
+        }
+        results
+    }
+
+    fn checkpoint_state(&mut self) -> Option<EvaluatorState> {
+        self.inner.checkpoint_state()
+    }
+
+    fn restore_state(&mut self, state: &EvaluatorState) -> bool {
+        self.inner.restore_state(state)
+    }
+
+    fn note_replayed(&mut self, req: &super::session::MeasurementRequest) {
+        self.inner.note_replayed(req);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::WorkflowId;
+    use crate::sim::Objective;
+    use crate::tuner::common::{Collector, Pool, Problem, Tuner};
+    use crate::tuner::rs::RandomSampling;
+    use crate::tuner::session::{drive, MeasurementRequest};
+    use crate::util::rng::Pcg32;
+
+    fn temp_checkpoint_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "ceal_journal_{tag}_{}",
+            std::process::id()
+        ));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn header() -> TraceHeader {
+        TraceHeader {
+            algo: "RS".into(),
+            workflow: "LV".into(),
+            objective: "comp_time".into(),
+            m: 10,
+            pool_size: 40,
+            seed: 0xCEA1,
+            scorer: "native".into(),
+            ceal_params: None,
+            faults: None,
+        }
+    }
+
+    /// An evaluator with a deterministic internal counter, so tests
+    /// can tell exchanges apart.
+    struct Counting {
+        next: f64,
+    }
+    impl Evaluator for Counting {
+        fn evaluate(&mut self, batch: &MeasurementBatch) -> Vec<MeasurementResult> {
+            batch
+                .requests
+                .iter()
+                .map(|_| {
+                    self.next += 1.0;
+                    MeasurementResult::ok(self.next)
+                })
+                .collect()
+        }
+    }
+
+    fn wf_req(i: usize) -> MeasurementRequest {
+        MeasurementRequest::Workflow {
+            pool_idx: i,
+            config: crate::config::Config(vec![]),
+        }
+    }
+
+    #[test]
+    fn seal_roundtrips_and_detects_tampering() {
+        let mut m = BTreeMap::new();
+        m.insert("kind".to_string(), Json::Str("ask".into()));
+        m.insert("seq".to_string(), Json::Num(3.0));
+        let line = seal(m);
+        assert!(line.contains("\"crc\":\""), "{line}");
+        let body = unseal(&line, "test").unwrap();
+        assert_eq!(body.get("seq").and_then(Json::as_usize), Some(3));
+        // flip one payload byte: the seal must catch it
+        let tampered = line.replace("\"seq\":3", "\"seq\":4");
+        assert_eq!(
+            unseal(&tampered, "test"),
+            Err(TraceError::Crc {
+                context: "test".into()
+            })
+        );
+    }
+
+    #[test]
+    fn rng_and_digest_json_roundtrip() {
+        let snap = RngSnapshot {
+            state: u64::MAX - 17,
+            inc: 0x9E37_79B9_7F4A_7C15,
+            spare_normal: Some(-1.25e-3),
+        };
+        let back = rng_from_json(&rng_json(&snap), "test").unwrap();
+        assert_eq!(back, snap);
+
+        let d = SessionDigest {
+            phase: "refine".into(),
+            done: false,
+            asked_batches: 3,
+            told_batches: 3,
+            workflow_runs: 17,
+            component_runs: 4,
+            failed_runs: 1,
+            model_refits: 2,
+            cost_bits: 4638387860618067575,
+            sel_rng: snap,
+            using_hifi: Some(true),
+        };
+        let back = digest_from_json(&digest_json(&d)).unwrap();
+        assert_eq!(back, d);
+    }
+
+    #[test]
+    fn journal_roundtrips_exchanges_and_pending_ask() {
+        let dir = temp_checkpoint_dir("roundtrip");
+        let mut j = SessionJournal::create(&dir, &header(), 2).unwrap();
+        let mut eval = Counting { next: 0.0 };
+
+        let b0 = MeasurementBatch::sequential(vec![
+            MeasurementRequest::Component {
+                comp: 1,
+                config: vec![4, 8],
+            },
+            wf_req(3),
+        ]);
+        j.record_ask(&b0);
+        let r0 = eval.evaluate(&b0);
+        j.record_tell(&r0, None);
+        j.after_apply(None);
+
+        let b1 = MeasurementBatch::fan_out(vec![wf_req(5), wf_req(9)]);
+        j.record_ask(&b1); // asked, never told: the crash window
+        assert_eq!(j.error(), None);
+
+        let loaded = load_checkpoint(&dir).unwrap();
+        assert_eq!(loaded.rep, 2);
+        assert_eq!(loaded.header, header());
+        assert_eq!(loaded.exchanges.len(), 1);
+        assert_eq!(loaded.snapshot_told, 0);
+        assert_eq!(loaded.exchanges[0].mode, BatchMode::Sequential);
+        assert_eq!(
+            loaded.exchanges[0].outcomes,
+            vec![MeasurementOutcome::Ok(1.0), MeasurementOutcome::Ok(2.0)]
+        );
+        let (mode, reqs) = loaded.pending_ask.as_ref().expect("pending ask survives");
+        assert_eq!(*mode, BatchMode::FanOut);
+        assert_eq!(
+            reqs,
+            &vec![
+                RecordedRequest::Workflow { pool_idx: 5 },
+                RecordedRequest::Workflow { pool_idx: 9 }
+            ]
+        );
+        assert!(loaded.recovered.is_empty());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_final_record_is_dropped_with_a_note() {
+        let dir = temp_checkpoint_dir("torn");
+        let mut j = SessionJournal::create(&dir, &header(), 0).unwrap();
+        let mut eval = Counting { next: 0.0 };
+        let b = MeasurementBatch::sequential(vec![wf_req(1)]);
+        j.record_ask(&b);
+        let r = eval.evaluate(&b);
+        j.record_tell(&r, None);
+        drop(j);
+        // simulate a crash mid-append: half a record, no newline
+        let path = dir.join(JOURNAL_FILE);
+        let mut f = fs::OpenOptions::new().append(true).open(&path).unwrap();
+        f.write_all(b"{\"crc\":\"0000beef\",\"kind\":\"as").unwrap();
+        drop(f);
+
+        let loaded = load_checkpoint(&dir).unwrap();
+        assert_eq!(loaded.exchanges.len(), 1);
+        assert_eq!(loaded.pending_ask, None);
+        assert_eq!(loaded.recovered.len(), 1, "{:?}", loaded.recovered);
+        assert!(loaded.recovered[0].contains("torn final"), "{:?}", loaded.recovered);
+
+        // resume rewrites the journal cleanly: reloading recovers nothing
+        let (j2, _) = SessionJournal::resume(&dir).unwrap();
+        drop(j2);
+        let reloaded = load_checkpoint(&dir).unwrap();
+        assert!(reloaded.recovered.is_empty());
+        assert_eq!(reloaded.exchanges.len(), 1);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corruption_before_the_final_record_is_a_hard_error() {
+        let dir = temp_checkpoint_dir("corrupt");
+        let mut j = SessionJournal::create(&dir, &header(), 0).unwrap();
+        let mut eval = Counting { next: 0.0 };
+        for k in 0..2 {
+            let b = MeasurementBatch::sequential(vec![wf_req(k)]);
+            j.record_ask(&b);
+            let r = eval.evaluate(&b);
+            j.record_tell(&r, None);
+            j.after_apply(None);
+        }
+        drop(j);
+        // flip a digit inside the *second* line (first tail record)
+        let path = dir.join(JOURNAL_FILE);
+        let text = fs::read_to_string(&path).unwrap();
+        let mut lines: Vec<String> = text.lines().map(str::to_string).collect();
+        assert!(lines.len() >= 3);
+        lines[1] = lines[1].replace("\"pool\":0", "\"pool\":7");
+        fs::write(&path, format!("{}\n", lines.join("\n"))).unwrap();
+
+        let err = load_checkpoint(&dir).unwrap_err();
+        assert!(
+            matches!(err, TraceError::Crc { .. }),
+            "want CRC error, got {err:?}"
+        );
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn compaction_folds_history_into_the_snapshot() {
+        let dir = temp_checkpoint_dir("compact");
+        let mut j = SessionJournal::create(&dir, &header(), 0).unwrap();
+        j.set_snapshot_every(2);
+        let mut eval = Counting { next: 0.0 };
+        let digest = SessionDigest {
+            phase: "refine".into(),
+            done: false,
+            asked_batches: 2,
+            told_batches: 2,
+            workflow_runs: 2,
+            component_runs: 0,
+            failed_runs: 0,
+            model_refits: 0,
+            cost_bits: 0,
+            sel_rng: RngSnapshot {
+                state: 1,
+                inc: 3,
+                spare_normal: None,
+            },
+            using_hifi: None,
+        };
+        for k in 0..3 {
+            let b = MeasurementBatch::sequential(vec![wf_req(k)]);
+            j.record_ask(&b);
+            let r = eval.evaluate(&b);
+            j.record_tell(&r, eval.checkpoint_state());
+            j.after_apply(Some(digest.clone()));
+        }
+        assert_eq!(j.error(), None);
+        drop(j);
+        assert!(dir.join(SNAPSHOT_FILE).exists());
+        // the journal was truncated at the 2-exchange compaction: only
+        // the third exchange remains in the tail
+        let text = fs::read_to_string(dir.join(JOURNAL_FILE)).unwrap();
+        assert_eq!(text.lines().count(), 3, "{text}");
+
+        let loaded = load_checkpoint(&dir).unwrap();
+        assert_eq!(loaded.exchanges.len(), 3);
+        assert_eq!(loaded.snapshot_told, 2);
+        assert_eq!(loaded.snapshot_digest, Some(digest));
+        assert_eq!(
+            loaded.exchanges[2].outcomes,
+            vec![MeasurementOutcome::Ok(3.0)]
+        );
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    /// The full contract on a real session: journal a run, "crash",
+    /// rebuild by replay, continue — outputs must match the
+    /// uninterrupted run bit-for-bit.
+    #[test]
+    fn journaled_run_resumes_bit_identically() {
+        let prob = Problem::new(WorkflowId::LV, Objective::CompTime);
+        let pool = Pool::generate(&prob, 40, 7);
+        let tuner = RandomSampling;
+        let head = header();
+
+        // uninterrupted reference
+        let mut rng = Pcg32::new(51, 0);
+        let mut col = Collector::new(&prob, Pcg32::new(52, 0));
+        let want = drive(
+            tuner.session(&prob, &pool, &crate::surrogate::Scorer::Native, 10, &mut rng),
+            &mut col,
+        );
+
+        // journaled run, abandoned after the first exchange
+        let dir = temp_checkpoint_dir("resume");
+        {
+            let mut j = SessionJournal::create(&dir, &head, 0).unwrap();
+            let mut rng = Pcg32::new(51, 0);
+            let mut session =
+                tuner.session(&prob, &pool, &crate::surrogate::Scorer::Native, 10, &mut rng);
+            let mut col = Collector::new(&prob, Pcg32::new(52, 0));
+            let batch = session.ask();
+            j.record_ask(&batch);
+            let results = Evaluator::evaluate(&mut col, &batch);
+            j.record_tell(&results, Evaluator::checkpoint_state(&mut col));
+            session.tell(&results);
+            j.after_apply(session.digest());
+            assert_eq!(j.error(), None);
+            // session and collector dropped here: the "crash"
+        }
+
+        // resume from disk and finish
+        let (mut j, loaded) = SessionJournal::resume(&dir).unwrap();
+        let mut rng = Pcg32::new(51, 0);
+        let mut session =
+            tuner.session(&prob, &pool, &crate::surrogate::Scorer::Native, 10, &mut rng);
+        let mut col = Collector::new(&prob, Pcg32::new(52, 0));
+        replay_into(session.as_mut(), &mut col, &loaded).unwrap();
+        let got = drive_checkpointed(session, &mut col, &mut j);
+        assert_eq!(j.error(), None);
+
+        assert_eq!(got.best_idx, want.best_idx);
+        assert_eq!(got.measured, want.measured);
+        assert_eq!(
+            got.collection_cost.to_bits(),
+            want.collection_cost.to_bits()
+        );
+        assert_eq!(got.workflow_runs, want.workflow_runs);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn deadline_evaluator_times_out_slow_batches() {
+        let mut inner = Counting { next: 0.0 };
+        let mut dl = DeadlineEvaluator::new(&mut inner, Duration::from_secs(3600));
+        let b = MeasurementBatch::sequential(vec![wf_req(0), wf_req(1)]);
+        let ok = dl.evaluate(&b);
+        assert!(ok.iter().all(MeasurementResult::is_ok));
+        assert_eq!(dl.timed_out_batches(), 0);
+
+        struct Slow;
+        impl Evaluator for Slow {
+            fn evaluate(&mut self, batch: &MeasurementBatch) -> Vec<MeasurementResult> {
+                std::thread::sleep(Duration::from_millis(5));
+                batch
+                    .requests
+                    .iter()
+                    .map(|_| MeasurementResult::ok(1.0))
+                    .collect()
+            }
+        }
+        let mut slow = Slow;
+        let mut dl = DeadlineEvaluator::new(&mut slow, Duration::from_millis(1));
+        let late = dl.evaluate(&b);
+        assert!(late.iter().all(|r| !r.is_ok()));
+        assert_eq!(
+            late[0].outcome,
+            MeasurementOutcome::TimedOut,
+            "deadline converts to timeouts"
+        );
+        assert_eq!(dl.timed_out_batches(), 1);
+    }
+
+    #[test]
+    fn resume_rejects_a_foreign_checkpoint() {
+        let dir = temp_checkpoint_dir("foreign");
+        fs::create_dir_all(&dir).unwrap();
+        fs::write(dir.join(JOURNAL_FILE), "{\"hello\":1}\n").unwrap();
+        let err = load_checkpoint(&dir).unwrap_err();
+        assert!(
+            matches!(err, TraceError::NotATrace(_)),
+            "want NotATrace, got {err:?}"
+        );
+        // a future journal version is refused up front
+        let mut line = header_json(&header(), 0).compact();
+        line = line.replace("\"version\":1", "\"version\":99");
+        line.push('\n');
+        fs::write(dir.join(JOURNAL_FILE), line).unwrap();
+        assert_eq!(load_checkpoint(&dir).unwrap_err(), TraceError::Version(99));
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

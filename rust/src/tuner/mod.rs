@@ -24,6 +24,7 @@ pub mod ceal;
 pub mod common;
 pub mod faults;
 pub mod geist;
+pub mod journal;
 pub mod legacy;
 pub mod rs;
 pub mod session;
@@ -36,9 +37,14 @@ pub use ceal::{Ceal, CealParams};
 pub use common::{Collector, Pool, Problem, Tuner, TunerOutput};
 pub use faults::{FaultInjector, FaultPlan, FaultSpec};
 pub use geist::Geist;
+pub use journal::{
+    drive_checkpointed, load_checkpoint, replay_into, DeadlineEvaluator, Exchange,
+    LoadedCheckpoint, SessionJournal, JOURNAL_FILE, JOURNAL_VERSION, SNAPSHOT_FILE,
+};
 pub use rs::RandomSampling;
 pub use session::{
-    drive, BatchMode, DiagSink, Evaluator, FailureKind, FailurePolicy, MeasurementBatch,
-    MeasurementOutcome, MeasurementRequest, MeasurementResult, SessionState, TunerSession,
+    drive, BatchMode, DiagSink, Evaluator, EvaluatorState, FailureKind, FailurePolicy,
+    MeasurementBatch, MeasurementOutcome, MeasurementRequest, MeasurementResult, SessionDigest,
+    SessionState, TunerSession,
 };
 pub use trace::{TraceError, TraceHeader, TraceRecorder, TraceReplayer, TRACE_VERSION};

@@ -13,7 +13,7 @@ use super::common::{
 };
 use super::session::{
     triage_results, FailurePolicy, MeasurementBatch, MeasurementResult, SessionCore,
-    SessionState, TunerSession,
+    SessionDigest, SessionState, TunerSession,
 };
 use crate::gbt::Ensemble;
 use crate::surrogate::Scorer;
@@ -167,6 +167,10 @@ impl TunerSession for RsSession<'_> {
     fn state(&self) -> SessionState {
         let phase = if self.done { "done" } else { "sample" };
         self.core.state(phase, self.done, None)
+    }
+
+    fn digest(&self) -> Option<SessionDigest> {
+        Some(self.core.digest(&self.state()))
     }
 
     fn finish(self: Box<Self>) -> TunerOutput {

@@ -63,7 +63,7 @@ use crate::config::{Config, F_MAX};
 use crate::gbt::Ensemble;
 use crate::surrogate::lowfi::ComponentSamples;
 use crate::surrogate::Scorer;
-use crate::util::rng::Pcg32;
+use crate::util::rng::{Pcg32, RngSnapshot};
 
 use crate::util::stats;
 
@@ -309,6 +309,38 @@ pub struct SessionState {
     pub using_hifi: Option<bool>,
 }
 
+/// A bit-exact fingerprint of a mid-session tuner state, used by the
+/// crash-safe journal ([`super::journal`]): after rebuilding a session
+/// by replaying its journaled measurement exchanges, the rebuilt
+/// digest must equal the one captured at checkpoint time, or the
+/// resume is rejected as diverged (different build, seed, or a
+/// corrupted checkpoint) instead of silently continuing from the
+/// wrong state.
+///
+/// The digest covers everything [`SessionState`] reports — phase,
+/// progress counters, the collection cost *to the bit* — plus the raw
+/// position of the session's selection RNG stream, which determines
+/// every future pick.  It deliberately does not embed the measured
+/// set or surrogate models: those are pure functions of the replayed
+/// exchanges, and the counters + cost bits + RNG position pin them
+/// transitively.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SessionDigest {
+    pub phase: String,
+    pub done: bool,
+    pub asked_batches: usize,
+    pub told_batches: usize,
+    pub workflow_runs: usize,
+    pub component_runs: usize,
+    pub failed_runs: usize,
+    pub model_refits: usize,
+    /// `collection_cost.to_bits()` — float equality is exact here.
+    pub cost_bits: u64,
+    /// Raw position of the selection stream.
+    pub sel_rng: RngSnapshot,
+    pub using_hifi: Option<bool>,
+}
+
 /// A stepwise tuning algorithm: ask for measurements, accept results,
 /// repeat until the budget is spent, then finish into a
 /// [`TunerOutput`].
@@ -353,6 +385,14 @@ pub trait TunerSession {
     fn diagnostics(&self) -> &[String] {
         &[]
     }
+
+    /// Bit-exact state digest for crash-safe checkpointing (see
+    /// [`SessionDigest`]).  All built-in sessions implement it;
+    /// `None` (the default) means the session cannot be
+    /// digest-verified on resume and the journal skips that check.
+    fn digest(&self) -> Option<SessionDigest> {
+        None
+    }
 }
 
 /// Anything that can perform a session's measurement batches.  The
@@ -363,6 +403,43 @@ pub trait Evaluator {
     /// Perform every request of `batch`, returning results in request
     /// order (see the module-level determinism contract).
     fn evaluate(&mut self, batch: &MeasurementBatch) -> Vec<MeasurementResult>;
+
+    /// Capture the evaluator-side stochastic state after a batch, for
+    /// the crash journal.  The simulator-backed [`Collector`] returns
+    /// its measurement-noise stream position; decorators forward to
+    /// their inner evaluator; evaluators with no internal randomness
+    /// (external drivers, replayers) keep the default `None`.
+    fn checkpoint_state(&mut self) -> Option<EvaluatorState> {
+        None
+    }
+
+    /// Restore state captured by
+    /// [`checkpoint_state`](Self::checkpoint_state).  Returns whether
+    /// anything was restored (the default restores nothing).
+    fn restore_state(&mut self, state: &EvaluatorState) -> bool {
+        let _ = state;
+        false
+    }
+
+    /// Crash-recovery fast-forward: a journaled request is being
+    /// replayed into a rebuilt session *without* re-measuring.
+    /// Evaluators with per-request bookkeeping (the fault injector's
+    /// attempt counters) advance it here so post-resume decisions sit
+    /// at the same stream positions as the uninterrupted run; the
+    /// default is a no-op.
+    fn note_replayed(&mut self, req: &MeasurementRequest) {
+        let _ = req;
+    }
+}
+
+/// Durable evaluator-side state captured into the crash journal with
+/// every tell record: the raw measurement-noise stream position of the
+/// innermost stochastic evaluator.  Restoring it on resume makes
+/// post-resume live measurements draw the same noise as the
+/// uninterrupted run would have.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EvaluatorState {
+    pub rng: RngSnapshot,
 }
 
 impl Evaluator for Collector<'_> {
@@ -398,6 +475,17 @@ impl Evaluator for Collector<'_> {
                     .collect()
             }
         }
+    }
+
+    fn checkpoint_state(&mut self) -> Option<EvaluatorState> {
+        Some(EvaluatorState {
+            rng: self.rng().snapshot(),
+        })
+    }
+
+    fn restore_state(&mut self, state: &EvaluatorState) -> bool {
+        *self.rng() = Pcg32::from_snapshot(state.rng);
+        true
     }
 }
 
@@ -570,6 +658,24 @@ impl<'a> SessionCore<'a> {
 
     pub(crate) fn refit(&mut self) {
         self.model_refits += 1;
+    }
+
+    /// Build the crash-checkpoint digest from a progress snapshot plus
+    /// the selection stream's raw position (see [`SessionDigest`]).
+    pub(crate) fn digest(&self, s: &SessionState) -> SessionDigest {
+        SessionDigest {
+            phase: s.phase.to_string(),
+            done: s.done,
+            asked_batches: s.asked_batches,
+            told_batches: s.told_batches,
+            workflow_runs: s.workflow_runs,
+            component_runs: s.component_runs,
+            failed_runs: s.failed_runs,
+            model_refits: s.model_refits,
+            cost_bits: s.collection_cost.to_bits(),
+            sel_rng: self.sel_rng.snapshot(),
+            using_hifi: s.using_hifi,
+        }
     }
 
     pub(crate) fn state(

@@ -78,6 +78,13 @@ pub enum TraceError {
     Exhausted { asked: usize, have: usize },
     /// The session issued a different batch than was recorded.
     Divergence { batch: usize, detail: String },
+    /// A CRC-sealed journal/snapshot record whose checksum does not
+    /// match its content (bit rot or a torn write that still parses).
+    Crc { context: String },
+    /// A resumed session's rebuilt state digest differs from the
+    /// checkpointed one — the checkpoint belongs to a different
+    /// (seed, algorithm, build).
+    StateMismatch { detail: String },
 }
 
 impl std::fmt::Display for TraceError {
@@ -99,6 +106,14 @@ impl std::fmt::Display for TraceError {
             TraceError::Divergence { batch, detail } => {
                 write!(f, "replay divergence at batch {batch}: {detail}")
             }
+            TraceError::Crc { context } => {
+                write!(f, "CRC mismatch in {context}: record is corrupted")
+            }
+            TraceError::StateMismatch { detail } => write!(
+                f,
+                "resume state mismatch: {detail} (checkpoint from a different \
+                 seed/algorithm/build?)"
+            ),
         }
     }
 }
@@ -133,7 +148,7 @@ pub struct TraceHeader {
 }
 
 impl TraceHeader {
-    fn to_json(&self) -> Json {
+    pub(crate) fn to_json(&self) -> Json {
         let mut pairs = vec![
             ("format", Json::Str(TRACE_FORMAT.into())),
             ("version", Json::Num(TRACE_VERSION as f64)),
@@ -173,7 +188,7 @@ impl TraceHeader {
         Json::obj(pairs)
     }
 
-    fn from_json(v: &Json) -> Result<TraceHeader, TraceError> {
+    pub(crate) fn from_json(v: &Json) -> Result<TraceHeader, TraceError> {
         let str_field = |k: &str| -> Result<String, TraceError> {
             v.get(k)
                 .and_then(Json::as_str)
@@ -250,14 +265,22 @@ impl TraceHeader {
     }
 }
 
-fn mode_name(mode: BatchMode) -> &'static str {
+pub(crate) fn mode_name(mode: BatchMode) -> &'static str {
     match mode {
         BatchMode::Sequential => "seq",
         BatchMode::FanOut => "fanout",
     }
 }
 
-fn request_json(req: &MeasurementRequest) -> Json {
+pub(crate) fn mode_from_name(name: Option<&str>) -> Result<BatchMode, String> {
+    match name {
+        Some("seq") => Ok(BatchMode::Sequential),
+        Some("fanout") => Ok(BatchMode::FanOut),
+        other => Err(format!("bad mode {other:?}")),
+    }
+}
+
+pub(crate) fn request_json(req: &MeasurementRequest) -> Json {
     match req {
         MeasurementRequest::Workflow { pool_idx, .. } => {
             Json::obj(vec![("pool", Json::Num(*pool_idx as f64))])
@@ -274,7 +297,7 @@ fn request_json(req: &MeasurementRequest) -> Json {
 
 /// A `ys` entry: a number for a delivered reading, a stable fault name
 /// string otherwise.
-fn outcome_json(o: &MeasurementOutcome) -> Json {
+pub(crate) fn outcome_json(o: &MeasurementOutcome) -> Json {
     match o.value() {
         Some(v) => Json::Num(v),
         None => Json::Str(
@@ -285,7 +308,7 @@ fn outcome_json(o: &MeasurementOutcome) -> Json {
     }
 }
 
-fn outcome_from_json(v: &Json) -> Option<MeasurementOutcome> {
+pub(crate) fn outcome_from_json(v: &Json) -> Option<MeasurementOutcome> {
     match v {
         Json::Num(y) => Some(MeasurementOutcome::Ok(*y)),
         Json::Str(name) => MeasurementOutcome::from_fault_name(name),
@@ -364,6 +387,18 @@ impl<W: Write> Evaluator for TraceRecorder<'_, W> {
         self.batches += 1;
         results
     }
+
+    fn checkpoint_state(&mut self) -> Option<super::session::EvaluatorState> {
+        self.inner.checkpoint_state()
+    }
+
+    fn restore_state(&mut self, state: &super::session::EvaluatorState) -> bool {
+        self.inner.restore_state(state)
+    }
+
+    fn note_replayed(&mut self, req: &MeasurementRequest) {
+        self.inner.note_replayed(req);
+    }
 }
 
 /// A request as recorded in a trace (workflow requests are identified
@@ -376,8 +411,21 @@ pub enum RecordedRequest {
 }
 
 impl RecordedRequest {
+    /// The recorded form of a live request (what the journal persists).
+    pub(crate) fn of(req: &MeasurementRequest) -> RecordedRequest {
+        match req {
+            MeasurementRequest::Workflow { pool_idx, .. } => RecordedRequest::Workflow {
+                pool_idx: *pool_idx,
+            },
+            MeasurementRequest::Component { comp, config } => RecordedRequest::Component {
+                comp: *comp,
+                config: config.clone(),
+            },
+        }
+    }
+
     /// Does a live request match this recorded one?
-    fn matches(&self, req: &MeasurementRequest) -> bool {
+    pub(crate) fn matches(&self, req: &MeasurementRequest) -> bool {
         match (self, req) {
             (
                 RecordedRequest::Workflow { pool_idx },
@@ -401,6 +449,42 @@ pub struct RecordedBatch {
     pub mode: BatchMode,
     pub requests: Vec<RecordedRequest>,
     pub outcomes: Vec<MeasurementOutcome>,
+}
+
+/// Parse a `reqs` array (shared by trace batch lines and journal
+/// records); errors carry no line context — callers add it.
+pub(crate) fn parse_recorded_requests(v: Option<&Json>) -> Result<Vec<RecordedRequest>, String> {
+    let reqs = v.and_then(Json::as_arr).ok_or("missing 'reqs'")?;
+    let mut requests = Vec::with_capacity(reqs.len());
+    for r in reqs {
+        if let Some(idx) = r.get("pool").and_then(Json::as_usize) {
+            requests.push(RecordedRequest::Workflow { pool_idx: idx });
+        } else if let Some(comp) = r.get("comp").and_then(Json::as_usize) {
+            let cfg = r
+                .get("cfg")
+                .and_then(Json::as_arr)
+                .ok_or("component request missing 'cfg'")?
+                .iter()
+                .map(|x| x.as_f64().map(|f| f as i64))
+                .collect::<Option<Vec<i64>>>()
+                .ok_or("non-numeric 'cfg'")?;
+            requests.push(RecordedRequest::Component { comp, config: cfg });
+        } else {
+            return Err(format!("unrecognized request {r:?}"));
+        }
+    }
+    Ok(requests)
+}
+
+/// Parse a `ys` array (shared by trace batch lines and journal
+/// records).
+pub(crate) fn parse_outcomes(v: Option<&Json>) -> Result<Vec<MeasurementOutcome>, String> {
+    v.and_then(Json::as_arr)
+        .ok_or("missing 'ys'")?
+        .iter()
+        .map(outcome_from_json)
+        .collect::<Option<Vec<_>>>()
+        .ok_or_else(|| "unrecognized 'ys' entry".to_string())
 }
 
 /// Replays a recorded measurement stream as an [`Evaluator`],
@@ -456,41 +540,9 @@ impl TraceReplayer {
 
     fn parse_batch(v: &Json, lineno: usize) -> Result<RecordedBatch, TraceError> {
         let bad = |msg: String| TraceError::Malformed(format!("trace line {lineno}: {msg}"));
-        let mode = match v.get("mode").and_then(Json::as_str) {
-            Some("seq") => BatchMode::Sequential,
-            Some("fanout") => BatchMode::FanOut,
-            other => return Err(bad(format!("bad mode {other:?}"))),
-        };
-        let reqs = v
-            .get("reqs")
-            .and_then(Json::as_arr)
-            .ok_or_else(|| bad("missing 'reqs'".into()))?;
-        let mut requests = Vec::with_capacity(reqs.len());
-        for r in reqs {
-            if let Some(idx) = r.get("pool").and_then(Json::as_usize) {
-                requests.push(RecordedRequest::Workflow { pool_idx: idx });
-            } else if let Some(comp) = r.get("comp").and_then(Json::as_usize) {
-                let cfg = r
-                    .get("cfg")
-                    .and_then(Json::as_arr)
-                    .ok_or_else(|| bad("component request missing 'cfg'".into()))?
-                    .iter()
-                    .map(|x| x.as_f64().map(|f| f as i64))
-                    .collect::<Option<Vec<i64>>>()
-                    .ok_or_else(|| bad("non-numeric 'cfg'".into()))?;
-                requests.push(RecordedRequest::Component { comp, config: cfg });
-            } else {
-                return Err(bad(format!("unrecognized request {r:?}")));
-            }
-        }
-        let outcomes: Vec<MeasurementOutcome> = v
-            .get("ys")
-            .and_then(Json::as_arr)
-            .ok_or_else(|| bad("missing 'ys'".into()))?
-            .iter()
-            .map(outcome_from_json)
-            .collect::<Option<Vec<_>>>()
-            .ok_or_else(|| bad("unrecognized 'ys' entry".into()))?;
+        let mode = mode_from_name(v.get("mode").and_then(Json::as_str)).map_err(&bad)?;
+        let requests = parse_recorded_requests(v.get("reqs")).map_err(&bad)?;
+        let outcomes = parse_outcomes(v.get("ys")).map_err(&bad)?;
         if outcomes.len() != requests.len() {
             return Err(bad(format!(
                 "{} requests but {} outcomes",

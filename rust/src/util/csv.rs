@@ -1,7 +1,5 @@
 //! Tiny CSV writer for experiment outputs under `results/`.
 
-use std::fs;
-use std::io::Write as _;
 use std::path::Path;
 
 /// In-memory CSV table with a fixed header.
@@ -60,13 +58,11 @@ impl CsvWriter {
         out
     }
 
-    /// Write to a file, creating parent directories.
+    /// Write to a file atomically (temp file + rename), creating
+    /// parent directories — a crash mid-save can never leave a torn
+    /// results artifact.
     pub fn save(&self, path: &Path) -> std::io::Result<()> {
-        if let Some(parent) = path.parent() {
-            fs::create_dir_all(parent)?;
-        }
-        let mut f = fs::File::create(path)?;
-        f.write_all(self.to_string().as_bytes())
+        super::fsio::atomic_write(path, self.to_string().as_bytes())
     }
 }
 

@@ -1,0 +1,128 @@
+//! Durable file I/O for crash-safe artifacts: atomic whole-file writes
+//! (temp file + fsync + rename) and the CRC-32 used to seal journal and
+//! snapshot records.
+//!
+//! Everything that must never be observed torn — the measurement
+//! journal, session snapshots, recorded traces, and results CSVs —
+//! goes through [`atomic_write`]: readers either see the previous
+//! complete file or the new complete one, never a prefix.
+
+use std::fs;
+use std::io::Write as _;
+use std::path::Path;
+
+/// CRC-32 (IEEE 802.3, the zlib polynomial) lookup table, built at
+/// compile time.
+const CRC32_TABLE: [u32; 256] = {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 {
+                0xEDB8_8320 ^ (c >> 1)
+            } else {
+                c >> 1
+            };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+};
+
+/// CRC-32 checksum (IEEE polynomial, reflected, zlib-compatible).
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC32_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+/// Replace `path` atomically with `bytes`: write a sibling temp file,
+/// fsync it, and rename it over the destination.  Parent directories
+/// are created as needed; on any failure the destination is untouched
+/// (the temp file is cleaned up best-effort).
+pub fn atomic_write(path: &Path, bytes: &[u8]) -> std::io::Result<()> {
+    let parent = path.parent().filter(|p| !p.as_os_str().is_empty());
+    if let Some(dir) = parent {
+        fs::create_dir_all(dir)?;
+    }
+    let mut tmp_name = path
+        .file_name()
+        .ok_or_else(|| {
+            std::io::Error::new(
+                std::io::ErrorKind::InvalidInput,
+                format!("atomic_write: no file name in {}", path.display()),
+            )
+        })?
+        .to_os_string();
+    // per-process suffix so concurrent writers of *different* files in
+    // one directory can never collide on temp names
+    tmp_name.push(format!(".tmp{}", std::process::id()));
+    let tmp = path.with_file_name(tmp_name);
+    let write = (|| {
+        let mut f = fs::File::create(&tmp)?;
+        f.write_all(bytes)?;
+        f.sync_all()?;
+        drop(f);
+        fs::rename(&tmp, path)
+    })();
+    if write.is_err() {
+        let _ = fs::remove_file(&tmp);
+        return write;
+    }
+    // make the rename itself durable; not all platforms support
+    // fsyncing a directory handle, so this is best-effort
+    if let Some(dir) = parent {
+        if let Ok(d) = fs::File::open(dir) {
+            let _ = d.sync_all();
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_path(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("ceal_fsio_{}_{tag}", std::process::id()))
+    }
+
+    #[test]
+    fn crc32_matches_known_vectors() {
+        // reference values from the zlib crc32() function
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b"The quick brown fox jumps over the lazy dog"), 0x414F_A339);
+    }
+
+    #[test]
+    fn atomic_write_roundtrips_and_replaces() {
+        let path = temp_path("roundtrip.txt");
+        atomic_write(&path, b"first").unwrap();
+        assert_eq!(fs::read(&path).unwrap(), b"first");
+        atomic_write(&path, b"second, longer content").unwrap();
+        assert_eq!(fs::read(&path).unwrap(), b"second, longer content");
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn atomic_write_creates_parent_dirs_and_leaves_no_temp() {
+        let dir = temp_path("nested");
+        let _ = fs::remove_dir_all(&dir);
+        let path = dir.join("a/b/out.csv");
+        atomic_write(&path, b"x,y\n").unwrap();
+        assert_eq!(fs::read(&path).unwrap(), b"x,y\n");
+        let entries: Vec<_> = fs::read_dir(path.parent().unwrap())
+            .unwrap()
+            .map(|e| e.unwrap().file_name())
+            .collect();
+        assert_eq!(entries, vec![std::ffi::OsString::from("out.csv")]);
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

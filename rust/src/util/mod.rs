@@ -12,6 +12,7 @@
 pub mod bench;
 pub mod cli;
 pub mod csv;
+pub mod fsio;
 pub mod json;
 pub mod parallel;
 pub mod prop;

@@ -1,0 +1,529 @@
+//! Crash-safety pinning for journaled sessions: killing a
+//! `--checkpoint-dir` run at *any* interruption point (after the ask
+//! was journaled, after the tell was journaled, after the tell was
+//! applied) and resuming from disk must produce a `TunerOutput`
+//! bit-identical to the uninterrupted run — for every algorithm, with
+//! and without fault injection, across the workflow registry.  Also
+//! pins the recovery semantics of damaged checkpoints: a torn final
+//! record is dropped and re-measured, corruption anywhere else is a
+//! structured `TraceError`, never a panic.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use ceal::config::WorkflowId;
+use ceal::coordinator::historical_samples;
+use ceal::sim::Objective;
+use ceal::surrogate::Scorer;
+use ceal::tuner::{
+    drive, drive_checkpointed, load_checkpoint, replay_into, ActiveLearning, Alph, BudgetedCeal,
+    BudgetedCealParams, Ceal, CealParams, Collector, Evaluator, FailurePolicy, FaultInjector,
+    FaultPlan, Geist, Pool, Problem, RandomSampling, SessionJournal, TraceError, TraceHeader,
+    Tuner, TunerOutput, TunerSession, JOURNAL_FILE,
+};
+use ceal::util::rng::Pcg32;
+
+/// Unique temp dir per test case (tests run in one process, so the
+/// pid alone is not enough).
+fn checkpoint_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("ceal-crash-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn header_for(tuner: &dyn Tuner, wf: WorkflowId, obj: Objective, m: usize, seed: u64) -> TraceHeader {
+    TraceHeader {
+        algo: tuner.name().into(),
+        workflow: wf.name().into(),
+        objective: obj.name().into(),
+        m,
+        pool_size: 0,
+        seed,
+        scorer: "native".into(),
+        ceal_params: None,
+        faults: None,
+    }
+}
+
+/// The bit-identity check: trajectory, searcher pick, accounting and
+/// the trained model itself.
+fn assert_identical(label: &str, a: &TunerOutput, b: &TunerOutput) {
+    assert_eq!(a.measured, b.measured, "{label}: measured trajectories diverge");
+    assert_eq!(a.best_idx, b.best_idx, "{label}: searcher picks diverge");
+    assert_eq!(
+        a.collection_cost.to_bits(),
+        b.collection_cost.to_bits(),
+        "{label}: collection cost diverges ({} vs {})",
+        a.collection_cost,
+        b.collection_cost
+    );
+    assert_eq!(a.workflow_runs, b.workflow_runs, "{label}: run counts diverge");
+    assert_eq!(a.failed_runs, b.failed_runs, "{label}: failure counts diverge");
+    assert_eq!(a.model, b.model, "{label}: final models diverge");
+}
+
+/// Drive a journaled session and abandon it mid-flight, simulating a
+/// kill during exchange `kill_at` at one of three interruption points:
+/// 0 = right after the ask was journaled (measurement lost mid-air),
+/// 1 = right after the tell was journaled but before the session saw
+/// it, 2 = right after the tell was applied.  Returns the number of
+/// exchanges fully applied before the kill.
+fn drive_until_kill(
+    mut session: Box<dyn TunerSession + '_>,
+    evaluator: &mut dyn Evaluator,
+    journal: &mut SessionJournal,
+    kill_at: usize,
+    flavor: usize,
+) -> usize {
+    let mut k = 0;
+    loop {
+        let batch = session.ask();
+        if batch.is_empty() {
+            return k; // finished before the kill point
+        }
+        journal.record_ask(&batch);
+        if k == kill_at && flavor == 0 {
+            return k;
+        }
+        let results = evaluator.evaluate(&batch);
+        journal.record_tell(&results, evaluator.checkpoint_state());
+        if k == kill_at && flavor == 1 {
+            return k;
+        }
+        session.tell(&results);
+        journal.after_apply(session.digest());
+        if k == kill_at {
+            return k + 1;
+        }
+        k += 1;
+    }
+}
+
+/// Shared fixture: one (tuner, cell, fault) scenario.  All runs —
+/// reference, killed, resumed — construct RNG, collector and session
+/// in exactly the campaign's order.
+struct Scenario<'a> {
+    tuner: &'a dyn Tuner,
+    prob: &'a Problem,
+    pool: &'a Pool,
+    wf: WorkflowId,
+    obj: Objective,
+    m: usize,
+    seed: u64,
+    stream: u64,
+    faults: Option<(FaultPlan, u64)>,
+}
+
+impl Scenario<'_> {
+    fn rng(&self) -> Pcg32 {
+        Pcg32::new(self.seed, self.stream)
+    }
+
+    /// The uninterrupted plain run this whole suite compares against.
+    fn reference(&self) -> TunerOutput {
+        let mut rng = self.rng();
+        let mut col = Collector::new(self.prob, rng.derive_str("collector"));
+        let mut session = self
+            .tuner
+            .session(self.prob, self.pool, &Scorer::Native, self.m, &mut rng);
+        match self.faults {
+            Some((plan, fseed)) => {
+                session.set_failure_policy(FailurePolicy::fault_tolerant());
+                let mut inj = FaultInjector::new(&mut col, plan, fseed);
+                drive(session, &mut inj)
+            }
+            None => drive(session, &mut col),
+        }
+    }
+
+    /// Journal an uninterrupted run into `dir` (to learn the exchange
+    /// count and pin journaling-changes-nothing).
+    fn journaled(&self, dir: &Path) -> (TunerOutput, usize) {
+        let header = header_for(self.tuner, self.wf, self.obj, self.m, self.seed);
+        let mut journal = SessionJournal::create(dir, &header, 0).unwrap();
+        journal.set_snapshot_every(3);
+        let mut rng = self.rng();
+        let mut col = Collector::new(self.prob, rng.derive_str("collector"));
+        let mut session = self
+            .tuner
+            .session(self.prob, self.pool, &Scorer::Native, self.m, &mut rng);
+        let out = match self.faults {
+            Some((plan, fseed)) => {
+                session.set_failure_policy(FailurePolicy::fault_tolerant());
+                let mut inj = FaultInjector::new(&mut col, plan, fseed);
+                drive_checkpointed(session, &mut inj, &mut journal)
+            }
+            None => drive_checkpointed(session, &mut col, &mut journal),
+        };
+        assert!(journal.error().is_none(), "{:?}", journal.error());
+        (out, journal.exchanges())
+    }
+
+    /// Run into `dir`, get killed during exchange `kill_at` at
+    /// `flavor`, then resume from disk and finish.
+    fn killed_then_resumed(&self, dir: &Path, kill_at: usize, flavor: usize) -> TunerOutput {
+        let _ = std::fs::remove_dir_all(dir);
+        let header = header_for(self.tuner, self.wf, self.obj, self.m, self.seed);
+        {
+            let mut journal = SessionJournal::create(dir, &header, 0).unwrap();
+            journal.set_snapshot_every(3);
+            let mut rng = self.rng();
+            let mut col = Collector::new(self.prob, rng.derive_str("collector"));
+            let mut session = self
+                .tuner
+                .session(self.prob, self.pool, &Scorer::Native, self.m, &mut rng);
+            match self.faults {
+                Some((plan, fseed)) => {
+                    session.set_failure_policy(FailurePolicy::fault_tolerant());
+                    let mut inj = FaultInjector::new(&mut col, plan, fseed);
+                    drive_until_kill(session, &mut inj, &mut journal, kill_at, flavor);
+                }
+                None => {
+                    drive_until_kill(session, &mut col, &mut journal, kill_at, flavor);
+                }
+            }
+            assert!(journal.error().is_none(), "{:?}", journal.error());
+            // the killed process goes away here: file handle dropped,
+            // nothing flushed beyond what the journal already synced
+        }
+        self.resume(dir)
+    }
+
+    /// Resume a checkpoint directory and run to completion.
+    fn resume(&self, dir: &Path) -> TunerOutput {
+        let (mut journal, loaded) = SessionJournal::resume(dir).unwrap();
+        journal.set_snapshot_every(3);
+        let mut rng = self.rng();
+        let mut col = Collector::new(self.prob, rng.derive_str("collector"));
+        let mut session = self
+            .tuner
+            .session(self.prob, self.pool, &Scorer::Native, self.m, &mut rng);
+        let out = match self.faults {
+            Some((plan, fseed)) => {
+                session.set_failure_policy(FailurePolicy::fault_tolerant());
+                let mut inj = FaultInjector::new(&mut col, plan, fseed);
+                replay_into(session.as_mut(), &mut inj, &loaded).unwrap();
+                drive_checkpointed(session, &mut inj, &mut journal)
+            }
+            None => {
+                replay_into(session.as_mut(), &mut col, &loaded).unwrap();
+                drive_checkpointed(session, &mut col, &mut journal)
+            }
+        };
+        assert!(journal.error().is_none(), "{:?}", journal.error());
+        out
+    }
+
+    /// The full kill matrix for this scenario: journaling changes
+    /// nothing, and every sampled (kill point, flavor) resumes to the
+    /// reference bits.  `thorough` kills at every exchange × every
+    /// flavor; otherwise kill points are sampled and flavors cycled.
+    fn pin_kill_matrix(&self, tag: &str, thorough: bool) {
+        let reference = self.reference();
+        let dir = checkpoint_dir(tag);
+        let (journaled, n) = self.journaled(&dir);
+        assert_identical(&format!("{tag}/journaled"), &reference, &journaled);
+        assert!(n >= 2, "{tag}: want a multi-exchange session, got {n}");
+        let kill_points: Vec<usize> = if thorough {
+            (0..n).collect()
+        } else {
+            let mut pts = vec![0, n / 3, (2 * n) / 3, n - 1];
+            pts.dedup();
+            pts
+        };
+        for kill_at in kill_points {
+            let flavors: Vec<usize> = if thorough { vec![0, 1, 2] } else { vec![kill_at % 3] };
+            for flavor in flavors {
+                let out = self.killed_then_resumed(&dir, kill_at, flavor);
+                assert_identical(
+                    &format!("{tag}/kill@{kill_at}.f{flavor}"),
+                    &reference,
+                    &out,
+                );
+            }
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+fn all_tuners(prob: &Problem, seed: u64) -> Vec<(Box<dyn Tuner>, &'static str)> {
+    let hist = Arc::new(historical_samples(prob, 60, seed ^ 0x415));
+    vec![
+        (Box::new(RandomSampling) as Box<dyn Tuner>, "RS"),
+        (Box::new(ActiveLearning::default()), "AL"),
+        (Box::new(Geist::default()), "GEIST"),
+        (Box::new(Ceal::new(CealParams::no_hist())), "CEAL"),
+        (
+            Box::new(Ceal::with_historical(CealParams::with_hist(), Arc::clone(&hist))),
+            "CEAL_hist",
+        ),
+        (Box::new(Alph::new(CealParams::no_hist())), "ALpH"),
+        (
+            Box::new(Alph::with_historical(CealParams::with_hist(), hist)),
+            "ALpH_hist",
+        ),
+    ]
+}
+
+/// Every algorithm on the LV cell: kill, resume, compare bits.
+#[test]
+fn every_algorithm_survives_kills_on_lv() {
+    let prob = Problem::new(WorkflowId::LV, Objective::CompTime);
+    let pool = Pool::generate(&prob, 48, 0xC0DE);
+    for (i, (tuner, name)) in all_tuners(&prob, 0xC0DE).into_iter().enumerate() {
+        let sc = Scenario {
+            tuner: tuner.as_ref(),
+            prob: &prob,
+            pool: &pool,
+            wf: WorkflowId::LV,
+            obj: Objective::CompTime,
+            m: 10,
+            seed: 0xC0DE,
+            stream: 30 + i as u64,
+            faults: None,
+        };
+        sc.pin_kill_matrix(&format!("lv-{name}"), false);
+    }
+}
+
+/// The same matrix under 20%/5% transient fault injection: the journal
+/// records the post-fault stream and the injector's attempt counters
+/// fast-forward on replay, so faulted runs resume bit-identically too.
+#[test]
+fn every_algorithm_survives_kills_under_faults() {
+    let prob = Problem::new(WorkflowId::LV, Objective::CompTime);
+    let pool = Pool::generate(&prob, 48, 0xFA17);
+    for (i, (tuner, name)) in all_tuners(&prob, 0xFA17).into_iter().enumerate() {
+        let sc = Scenario {
+            tuner: tuner.as_ref(),
+            prob: &prob,
+            pool: &pool,
+            wf: WorkflowId::LV,
+            obj: Objective::CompTime,
+            m: 10,
+            seed: 0xFA17,
+            stream: 50 + i as u64,
+            faults: Some((FaultPlan::transient(0.2, 0.05), 0xF0 + i as u64)),
+        };
+        sc.pin_kill_matrix(&format!("faulted-{name}"), false);
+    }
+}
+
+/// The thorough cell: CEAL on LV killed after *every* exchange at
+/// *every* interruption point.
+#[test]
+fn ceal_survives_every_kill_point_and_flavor() {
+    let prob = Problem::new(WorkflowId::LV, Objective::CompTime);
+    let pool = Pool::generate(&prob, 48, 0xA1);
+    let tuner = Ceal::new(CealParams::no_hist());
+    let sc = Scenario {
+        tuner: &tuner,
+        prob: &prob,
+        pool: &pool,
+        wf: WorkflowId::LV,
+        obj: Objective::CompTime,
+        m: 10,
+        seed: 0xA1,
+        stream: 4,
+        faults: None,
+    };
+    sc.pin_kill_matrix("thorough-ceal", true);
+}
+
+/// The rest of the workflow registry, one algorithm per cell.
+#[test]
+fn kills_resume_across_the_workflow_registry() {
+    let prob_seed = 0x5EED;
+    let cells: Vec<(WorkflowId, Objective, Box<dyn Tuner>, &str)> = vec![
+        (
+            WorkflowId::HS,
+            Objective::ExecTime,
+            Box::new(ActiveLearning::default()) as Box<dyn Tuner>,
+            "hs-AL",
+        ),
+        (
+            WorkflowId::GP,
+            Objective::CompTime,
+            Box::new(Geist::default()),
+            "gp-GEIST",
+        ),
+        (
+            WorkflowId::CH5,
+            Objective::ExecTime,
+            Box::new(Alph::new(CealParams::no_hist())),
+            "ch5-ALpH",
+        ),
+        (
+            WorkflowId::DM4,
+            Objective::ExecTime,
+            Box::new(Ceal::new(CealParams::no_hist())),
+            "dm4-CEAL",
+        ),
+    ];
+    for (k, (wf, obj, tuner, tag)) in cells.into_iter().enumerate() {
+        let prob = Problem::new(wf, obj);
+        let pool = Pool::generate(&prob, 48, prob_seed + k as u64);
+        let sc = Scenario {
+            tuner: tuner.as_ref(),
+            prob: &prob,
+            pool: &pool,
+            wf,
+            obj,
+            m: 10,
+            seed: prob_seed + k as u64,
+            stream: 70 + k as u64,
+            faults: None,
+        };
+        sc.pin_kill_matrix(tag, false);
+    }
+}
+
+/// Budgeted CEAL journals through the same machinery; its sessions are
+/// built with a cost budget instead of a sample budget.
+#[test]
+fn budgeted_ceal_survives_kills() {
+    let prob = Problem::new(WorkflowId::LV, Objective::CompTime);
+    let pool = Pool::generate(&prob, 48, 0xB06);
+    let budgeted = BudgetedCeal::new(BudgetedCealParams::default());
+    let budget = 40.0 * prob.objective.value(&prob.sim.expected(&pool.configs[0])).max(1.0);
+    let header = TraceHeader {
+        algo: "budgeted".into(),
+        workflow: "LV".into(),
+        objective: "comp_time".into(),
+        m: 0,
+        pool_size: 0,
+        seed: 0xB06,
+        scorer: "native".into(),
+        ceal_params: None,
+        faults: None,
+    };
+
+    let reference = {
+        let mut rng = Pcg32::new(0xB06, 9);
+        let mut col = Collector::new(&prob, rng.derive_str("collector"));
+        let session =
+            budgeted.session_with_cost_budget(&prob, &pool, &Scorer::Native, budget, &mut rng);
+        drive(session, &mut col)
+    };
+    let dir = checkpoint_dir("budgeted");
+    // count the exchanges via an uninterrupted journaled run
+    let n = {
+        let mut journal = SessionJournal::create(&dir, &header, 0).unwrap();
+        journal.set_snapshot_every(3);
+        let mut rng = Pcg32::new(0xB06, 9);
+        let mut col = Collector::new(&prob, rng.derive_str("collector"));
+        let session =
+            budgeted.session_with_cost_budget(&prob, &pool, &Scorer::Native, budget, &mut rng);
+        let out = drive_checkpointed(session, &mut col, &mut journal);
+        assert!(journal.error().is_none());
+        assert_identical("budgeted/journaled", &reference, &out);
+        journal.exchanges()
+    };
+    assert!(n >= 2, "budgeted session should take several exchanges, got {n}");
+    for kill_at in [0, n / 2, n - 1] {
+        for flavor in [0, 1, 2] {
+            let _ = std::fs::remove_dir_all(&dir);
+            {
+                let mut journal = SessionJournal::create(&dir, &header, 0).unwrap();
+                journal.set_snapshot_every(3);
+                let mut rng = Pcg32::new(0xB06, 9);
+                let mut col = Collector::new(&prob, rng.derive_str("collector"));
+                let session = budgeted
+                    .session_with_cost_budget(&prob, &pool, &Scorer::Native, budget, &mut rng);
+                drive_until_kill(session, &mut col, &mut journal, kill_at, flavor);
+                assert!(journal.error().is_none());
+            }
+            let (mut journal, loaded) = SessionJournal::resume(&dir).unwrap();
+            journal.set_snapshot_every(3);
+            let mut rng = Pcg32::new(0xB06, 9);
+            let mut col = Collector::new(&prob, rng.derive_str("collector"));
+            let mut session = budgeted
+                .session_with_cost_budget(&prob, &pool, &Scorer::Native, budget, &mut rng);
+            replay_into(session.as_mut(), &mut col, &loaded).unwrap();
+            let out = drive_checkpointed(session, &mut col, &mut journal);
+            assert!(journal.error().is_none(), "{:?}", journal.error());
+            assert_identical(&format!("budgeted/kill@{kill_at}.f{flavor}"), &reference, &out);
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Damaged checkpoints: corruption in the middle of the journal is a
+/// structured CRC error; a torn final record is crash residue — it is
+/// dropped with a note and the lost measurement is simply redone.
+#[test]
+fn damaged_journals_fail_structurally_or_recover() {
+    let prob = Problem::new(WorkflowId::LV, Objective::CompTime);
+    let pool = Pool::generate(&prob, 48, 0xDA4A);
+    let tuner = Ceal::new(CealParams::no_hist());
+    let sc = Scenario {
+        tuner: &tuner,
+        prob: &prob,
+        pool: &pool,
+        wf: WorkflowId::LV,
+        obj: Objective::CompTime,
+        m: 10,
+        seed: 0xDA4A,
+        stream: 8,
+        faults: None,
+    };
+    let reference = sc.reference();
+    let dir = checkpoint_dir("damaged");
+
+    // fixture: an uninterrupted journaled run with compaction held
+    // off, so the journal file itself holds every record
+    let journal_fixture = || {
+        let _ = std::fs::remove_dir_all(&dir);
+        let header = header_for(&tuner, WorkflowId::LV, Objective::CompTime, 10, 0xDA4A);
+        let mut journal = SessionJournal::create(&dir, &header, 0).unwrap();
+        journal.set_snapshot_every(100_000);
+        let mut rng = Pcg32::new(0xDA4A, 8);
+        let mut col = Collector::new(&prob, rng.derive_str("collector"));
+        let session = tuner.session(&prob, &pool, &Scorer::Native, 10, &mut rng);
+        let out = drive_checkpointed(session, &mut col, &mut journal);
+        assert!(journal.error().is_none());
+        out
+    };
+
+    // corrupt a record in the middle of the journal -> hard CRC error
+    journal_fixture();
+    let path = dir.join(JOURNAL_FILE);
+    let text = std::fs::read_to_string(&path).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert!(lines.len() > 3, "journal should hold several records");
+    let mut damaged: Vec<String> = lines.iter().map(|l| l.to_string()).collect();
+    damaged[2] = damaged[2]
+        .chars()
+        .map(|c| if c.is_ascii_digit() { '9' } else { c })
+        .collect();
+    std::fs::write(&path, format!("{}\n", damaged.join("\n"))).unwrap();
+    match load_checkpoint(&dir) {
+        Err(TraceError::Crc { .. }) | Err(TraceError::Malformed(_)) => {}
+        other => panic!("corrupt middle record must be a structured error, got {other:?}"),
+    }
+
+    // garbage bytes instead of a journal -> structured, not a panic
+    std::fs::write(&path, b"\x00\xff\x00 not a journal\n").unwrap();
+    assert!(
+        load_checkpoint(&dir).is_err(),
+        "garbage journal must be an error"
+    );
+
+    // torn final record: recovered note + the run completes to the
+    // reference bits (the dropped record is re-measured live)
+    let fixture_out = journal_fixture();
+    assert_identical("damaged/fixture", &reference, &fixture_out);
+    let text = std::fs::read_to_string(&path).unwrap();
+    let cut = text.trim_end().rfind('\n').unwrap();
+    // keep half of the final record: a torn write, as after a crash
+    let keep = cut + (text.len() - cut) / 2;
+    std::fs::write(&path, &text.as_bytes()[..keep]).unwrap();
+    let loaded = load_checkpoint(&dir).unwrap();
+    assert!(
+        !loaded.recovered.is_empty(),
+        "a torn final record must surface a recovery note"
+    );
+    let out = sc.resume(&dir);
+    assert_identical("torn-final", &reference, &out);
+    let _ = std::fs::remove_dir_all(&dir);
+}

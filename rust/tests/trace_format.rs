@@ -18,6 +18,11 @@ fn fixture_path() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/session_trace_v1.jsonl")
 }
 
+fn damaged_fixture_path(kind: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join(format!("tests/fixtures/session_trace_v1_{kind}.jsonl"))
+}
+
 fn fixture_text() -> String {
     std::fs::read_to_string(fixture_path()).expect("fixture readable")
 }
@@ -108,6 +113,35 @@ fn non_trace_files_are_rejected() {
     // a truncated/corrupt batch line is a parse error, not garbage
     let garbled = format!("{}{}", fixture_text(), "{\"batch\":3,\"mode\":\"seq\"\n");
     assert!(TraceReplayer::parse(&garbled).is_err());
+}
+
+/// Checked-in damaged fixtures: a trace whose final line was cut
+/// mid-record (the classic crash/partial-copy artifact) and one with
+/// garbage spliced into a middle record.  Both must load as structured
+/// `TraceError`s that name the failing line — never a panic, never a
+/// silently shortened replay.
+#[test]
+fn damaged_fixtures_load_as_structured_errors() {
+    let truncated = std::fs::read_to_string(damaged_fixture_path("truncated")).unwrap();
+    match TraceReplayer::parse(&truncated) {
+        Err(TraceError::Malformed(msg)) => {
+            assert!(
+                msg.contains("batch line 3") || msg.contains("line 4"),
+                "error should locate the torn record: {msg}"
+            );
+        }
+        other => panic!("truncated fixture must be Malformed, got {other:?}"),
+    }
+
+    let corrupt = std::fs::read_to_string(damaged_fixture_path("corrupt")).unwrap();
+    match TraceReplayer::parse(&corrupt) {
+        Err(TraceError::Malformed(_)) => {}
+        other => panic!("corrupt fixture must be Malformed, got {other:?}"),
+    }
+
+    // loading via the file path goes through the same parser
+    assert!(TraceReplayer::load(&damaged_fixture_path("truncated")).is_err());
+    assert!(TraceReplayer::load(&damaged_fixture_path("corrupt")).is_err());
 }
 
 /// Over-reading a trace no longer panics: the replayer latches a
