@@ -62,7 +62,7 @@ fn main() {
     println!(
         "tuned config {} -> true objective {:.3} (pool best {:.3})",
         pool.configs[out.best_idx],
-        pool.truth[out.best_idx],
+        pool.truth_of(out.best_idx),
         pool.best_value(),
     );
 }

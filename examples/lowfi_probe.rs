@@ -18,7 +18,7 @@ fn main() {
                 let scores = lf.score(&pool.feats, &Scorer::Native);
                 let r: Vec<String> = [5, 10, 25]
                     .iter()
-                    .map(|&n| format!("{:.0}%", recall_score(n, &scores, &pool.truth) * 100.0))
+                    .map(|&n| format!("{:.0}%", recall_score(n, &scores, pool.truth()) * 100.0))
                     .collect();
                 println!("{} {} hist={:<4} recall@5/10/25 = {}", id, obj, n_hist, r.join(" / "));
             }

@@ -31,7 +31,7 @@ fn main() {
         "pool of {} feasible configs; best {:.3} core-h at {}",
         pool.len(),
         pool.best_value(),
-        pool.configs[pool.best_idx]
+        pool.configs[pool.best_idx()]
     );
 
     // Score configurations through the AOT artifacts when available
@@ -43,7 +43,7 @@ fn main() {
     // Auto-tune with CEAL under a 25-workflow-run budget.
     let mut rng = Pcg32::new(7, 0);
     let out = Ceal::new(CealParams::no_hist()).run(&prob, &pool, &scorer, 25, &mut rng);
-    let tuned = pool.truth[out.best_idx];
+    let tuned = pool.truth_of(out.best_idx);
     println!(
         "CEAL spent {} workflow runs (cost {:.1} core-h) and proposes {}",
         out.workflow_runs, out.collection_cost, pool.configs[out.best_idx]

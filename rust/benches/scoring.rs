@@ -4,7 +4,7 @@
 //! and small-batch sizes, plus the fused low-fidelity combination.
 
 use ceal::config::{lv_spec, Config, F_MAX};
-use ceal::gbt::{train_log, GbtParams};
+use ceal::gbt::{train_log, GbtParams, QuantizedEnsemble};
 use ceal::runtime::Runtime;
 use ceal::sim::Objective;
 use ceal::surrogate::{PoolFeatures, Scorer};
@@ -61,6 +61,32 @@ fn main() {
             b.bench_items(&format!("scoring/flat_predict/pool2000_t{t}"), 2000.0, || {
                 flat.predict_batch(&feats.workflow)
             });
+        });
+    }
+
+    // Million-config pool rows at 1e5 candidates: the quantized SoA
+    // path against the dense flat baseline, plus the once-per-refit
+    // build cost.  Candidates are sampled without the feasibility
+    // filter — feature encoding is all that scoring exercises.
+    println!("== pool scoring at 1e5 configs (quantized SoA vs flat) ==");
+    let big_configs: Vec<Config> = (0..100_000).map(|_| spec.sample(&mut rng)).collect();
+    let big = PoolFeatures::encode(&spec, &big_configs);
+    ceal::util::parallel::with_threads(1, || {
+        b.bench_items("scoring/flat_predict/pool1e5_t1", 100_000.0, || {
+            flat.predict_batch(&big.workflow)
+        });
+    });
+    b.bench_items("scoring/quantized_build/pool1e5", 100_000.0, || {
+        QuantizedEnsemble::build(&ens, &big.workflow)
+    });
+    let quant = QuantizedEnsemble::build(&ens, &big.workflow);
+    for t in [1usize, 4, 8] {
+        ceal::util::parallel::with_threads(t, || {
+            b.bench_items(
+                &format!("scoring/quantized_predict/pool1e5_t{t}"),
+                100_000.0,
+                || quant.predict_all(),
+            );
         });
     }
 

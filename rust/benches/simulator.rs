@@ -80,4 +80,11 @@ fn main() {
     bfast.bench_items("pool/cached_lookup", 2000.0, || {
         cache.get_or_generate(&prob, 2000, 7, threads)
     });
+    // Million-config candidate generation: lazy pools sample and
+    // encode the full candidate stream but never run the simulator,
+    // so this measures the sampling+dedup+encoding side alone.
+    let mut blazy = Bencher::from_env(1, 2);
+    blazy.bench_items("pool/lazy_generate1e6", 1_000_000.0, || {
+        Pool::generate_lazy(&prob, 1_000_000, 7)
+    });
 }

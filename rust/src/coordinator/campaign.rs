@@ -429,17 +429,32 @@ fn run_rep(
         },
         None => drive_rep_live(algo, tuner, prob, pool, scorer, c, rep),
     };
-    // models are log-space: exponentiate to real-scale time predictions
-    let preds = crate::tuner::common::predict_times(&out.model, &pool.feats.workflow, scorer);
-    let recalls: Vec<f64> = (1..=10)
-        .map(|n| recall_score(n, &preds, &pool.truth))
-        .collect();
+    // Exhaustive model-quality metrics (recalls, MdAPE, normalized
+    // best) compare against the materialized test set, so they only
+    // exist on eager pools; a lazy pool reports NaN for them rather
+    // than forcing O(pool) simulator runs and an O(pool) prediction
+    // vector.  The best-config value itself needs just one on-demand
+    // truth cell either way.
+    let (recalls, mdape_all, mdape_top2, norm_best) = match pool.truth_eager() {
+        Some(truth) => {
+            // models are log-space: exponentiate to real-scale times
+            let preds =
+                crate::tuner::common::predict_times(&out.model, &pool.feats.workflow, scorer);
+            (
+                (1..=10).map(|n| recall_score(n, &preds, truth)).collect(),
+                mdape(truth, &preds),
+                mdape_top_fraction(truth, &preds, 0.02),
+                pool.truth_of(out.best_idx) / pool.best_value(),
+            )
+        }
+        None => (vec![f64::NAN; 10], f64::NAN, f64::NAN, f64::NAN),
+    };
     RepResult {
-        best_value: pool.truth[out.best_idx],
-        norm_best: pool.truth[out.best_idx] / pool.best_value(),
+        best_value: pool.truth_of(out.best_idx),
+        norm_best,
         recalls,
-        mdape_all: mdape(&pool.truth, &preds),
-        mdape_top2: mdape_top_fraction(&pool.truth, &preds, 0.02),
+        mdape_all,
+        mdape_top2,
         cost: out.collection_cost,
         workflow_runs: out.workflow_runs,
         failed_runs: out.failed_runs,
@@ -507,7 +522,8 @@ fn run_campaign_impl(algo: Algo, c: &Campaign, ckpt: Option<&Path>) -> Aggregate
         campaign_m: c.m,
         workflow: c.workflow,
         objective: c.objective,
-        pool_best: pool.best_value(),
+        // lazy pools have no exhaustive best: report NaN in the CSV
+        pool_best: pool.truth_eager().map_or(f64::NAN, |_| pool.best_value()),
         expert_value,
         reps,
     }

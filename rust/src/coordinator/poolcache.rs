@@ -11,18 +11,31 @@
 //! [`PoolCache`] memoizes generated pools as `Arc<Pool>` keyed by
 //! [`PoolKey`].  **Sharing contract:** pools are immutable after
 //! generation — tuners receive `&Pool` and must never mutate it; the
-//! lazily built per-`k` kNN graphs are the only interior state (see
-//! [`Pool::knn_graph`]).  Ground-truth measurement inside a miss is
-//! parallelized across the requesting campaign's worker threads via
-//! [`Pool::generate_par`] and is thread-count invariant.
+//! lazily built per-`k` kNN graphs and the lazy-truth cache are the
+//! only interior state (see [`Pool::knn_graph`]).  Generation routes
+//! through [`Pool::try_generate_auto`]: cells at or above
+//! [`crate::tuner::LAZY_POOL_MIN`] come back *lazy* (features only, no
+//! up-front ground truth), smaller cells are built eagerly via the
+//! parallel reference path and are thread-count invariant.
+//!
+//! **Memory cap:** the cache is bytes-accounted ([`Pool::approx_bytes`])
+//! against a cap (default 2 GiB, `CEAL_POOL_CACHE_BYTES` env override,
+//! [`PoolCache::set_cap_bytes`] for the CLI flag).  Inserting a pool
+//! that pushes the total over the cap evicts least-recently-used cells
+//! — never the one just requested — and counts each eviction; callers
+//! holding an evicted `Arc<Pool>` keep it alive, the cache just drops
+//! its reference.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::config::WorkflowId;
 use crate::sim::Objective;
 use crate::tuner::{Pool, Problem};
+
+/// Default LRU cap: 2 GiB of pool bytes.
+const DEFAULT_CAP_BYTES: usize = 2 * 1024 * 1024 * 1024;
 
 /// Cache key for a pool cell, keyed by the workflow's *registry name*
 /// (a [`WorkflowId`] is a thin alias over one) — any registered
@@ -62,17 +75,38 @@ impl PoolKey {
 struct Slot {
     pool: OnceLock<Arc<Pool>>,
     hits: AtomicUsize,
+    /// Logical LRU timestamp (cache-wide tick at last request).
+    last_used: AtomicU64,
 }
 
-/// Memoized pool store; see the module docs for the sharing contract.
-#[derive(Default)]
+/// Memoized pool store; see the module docs for the sharing contract
+/// and the memory cap.
 pub struct PoolCache {
     map: Mutex<HashMap<PoolKey, Arc<Slot>>>,
+    /// Monotonic logical clock for LRU ordering.
+    tick: AtomicU64,
+    cap_bytes: AtomicUsize,
+    evictions: AtomicUsize,
+}
+
+impl Default for PoolCache {
+    fn default() -> PoolCache {
+        PoolCache::new()
+    }
 }
 
 impl PoolCache {
     pub fn new() -> PoolCache {
-        PoolCache::default()
+        let cap = std::env::var("CEAL_POOL_CACHE_BYTES")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .unwrap_or(DEFAULT_CAP_BYTES);
+        PoolCache {
+            map: Mutex::new(HashMap::new()),
+            tick: AtomicU64::new(0),
+            cap_bytes: AtomicUsize::new(cap),
+            evictions: AtomicUsize::new(0),
+        }
     }
 
     /// The process-wide cache used by
@@ -98,21 +132,25 @@ impl PoolCache {
             "PoolCache keys don't capture a customized Machine — use Pool::generate_par directly"
         );
         let key = PoolKey::for_problem(prob, pool_size, seed);
-        let slot = {
-            let mut map = self.map.lock().unwrap();
-            Arc::clone(map.entry(key).or_default())
-        };
+        let slot = self.slot(&key);
         let mut built = false;
         let pool = slot.pool.get_or_init(|| {
             built = true;
-            Arc::new(Pool::generate_par(prob, pool_size, seed, threads))
+            let pool = Pool::try_generate_auto(prob, pool_size, seed, threads)
+                .unwrap_or_else(|e| panic!("pool generation failed: {e}"));
+            Arc::new(pool)
         });
         if !built {
             // served from cache — including racers that blocked on the
             // builder inside get_or_init
             slot.hits.fetch_add(1, Ordering::Relaxed);
         }
-        Arc::clone(pool)
+        let pool = Arc::clone(pool);
+        self.touch(&slot);
+        if built {
+            self.enforce_cap(Some(&key));
+        }
+        pool
     }
 
     /// Fallible counterpart of [`get_or_generate`](Self::get_or_generate):
@@ -134,16 +172,18 @@ impl PoolCache {
             "PoolCache keys don't capture a customized Machine — use Pool::generate_par directly"
         );
         let key = PoolKey::for_problem(prob, pool_size, seed);
-        let slot = {
-            let mut map = self.map.lock().unwrap();
-            Arc::clone(map.entry(key).or_default())
-        };
+        let slot = self.slot(&key);
         if let Some(pool) = slot.pool.get() {
             slot.hits.fetch_add(1, Ordering::Relaxed);
-            return Ok(Arc::clone(pool));
+            let pool = Arc::clone(pool);
+            self.touch(&slot);
+            return Ok(pool);
         }
-        let fresh = Arc::new(Pool::try_generate_par(prob, pool_size, seed, threads)?);
-        Ok(Arc::clone(slot.pool.get_or_init(|| fresh)))
+        let fresh = Arc::new(Pool::try_generate_auto(prob, pool_size, seed, threads)?);
+        let pool = Arc::clone(slot.pool.get_or_init(|| fresh));
+        self.touch(&slot);
+        self.enforce_cap(Some(&key));
+        Ok(pool)
     }
 
     /// How many times `key` was served from cache (None = never built).
@@ -169,9 +209,87 @@ impl PoolCache {
         self.len() == 0
     }
 
+    /// Total approximate bytes of every resident pool.
+    pub fn resident_bytes(&self) -> usize {
+        self.map
+            .lock()
+            .unwrap()
+            .values()
+            .filter_map(|s| s.pool.get())
+            .map(|p| p.approx_bytes())
+            .sum()
+    }
+
+    /// LRU evictions performed so far (process lifetime of this cache).
+    pub fn evictions(&self) -> usize {
+        self.evictions.load(Ordering::Relaxed)
+    }
+
+    pub fn cap_bytes(&self) -> usize {
+        self.cap_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Override the byte cap (CLI `--pool-cache-bytes`) and enforce it
+    /// immediately.
+    pub fn set_cap_bytes(&self, bytes: usize) {
+        self.cap_bytes.store(bytes, Ordering::Relaxed);
+        self.enforce_cap(None);
+    }
+
     /// Drop every cached pool (memory reclamation between suites).
     pub fn clear(&self) {
         self.map.lock().unwrap().clear();
+    }
+
+    fn slot(&self, key: &PoolKey) -> Arc<Slot> {
+        let mut map = self.map.lock().unwrap();
+        Arc::clone(map.entry(*key).or_default())
+    }
+
+    fn touch(&self, slot: &Slot) {
+        let t = self.tick.fetch_add(1, Ordering::Relaxed) + 1;
+        slot.last_used.store(t, Ordering::Relaxed);
+    }
+
+    /// Evict least-recently-used built cells until the resident total
+    /// fits the cap.  `keep` (the cell just requested) is never
+    /// evicted, so a single oversized pool stays usable — the cap
+    /// bounds the *cache*, not one campaign's working set.
+    fn enforce_cap(&self, keep: Option<&PoolKey>) {
+        let cap = self.cap_bytes.load(Ordering::Relaxed);
+        let mut map = self.map.lock().unwrap();
+        loop {
+            let mut total = 0usize;
+            let mut victim: Option<(PoolKey, u64)> = None;
+            for (k, s) in map.iter() {
+                if s.pool.get().is_none() {
+                    continue;
+                }
+                total += s.pool.get().map_or(0, |p| p.approx_bytes());
+                if Some(k) == keep {
+                    continue;
+                }
+                let lu = s.last_used.load(Ordering::Relaxed);
+                let older = match victim {
+                    Some((_, v)) => lu < v,
+                    None => true,
+                };
+                if older {
+                    victim = Some((*k, lu));
+                }
+            }
+            if total <= cap {
+                return;
+            }
+            match victim.take() {
+                Some((k, _)) => {
+                    map.remove(&k);
+                    self.evictions.fetch_add(1, Ordering::Relaxed);
+                }
+                // only the protected cell remains — nothing to evict
+                None => return,
+            }
+        }
     }
 }
 
@@ -197,8 +315,8 @@ mod tests {
         let cached = cache.get_or_generate(&p, 50, 0xCAFE, 2);
         let fresh = Pool::generate(&p, 50, 0xCAFE);
         assert_eq!(cached.configs, fresh.configs);
-        assert_eq!(cached.truth, fresh.truth);
-        assert_eq!(cached.best_idx, fresh.best_idx);
+        assert_eq!(cached.truth(), fresh.truth());
+        assert_eq!(cached.best_idx(), fresh.best_idx());
     }
 
     #[test]
@@ -228,10 +346,55 @@ mod tests {
         // same configs for same (workflow, size, seed), different truth
         // per objective
         assert_eq!(a.configs, b.configs);
-        assert_ne!(a.truth, b.truth);
+        assert_ne!(a.truth(), b.truth());
         assert!(!Arc::ptr_eq(&a, &c));
         assert!(!Arc::ptr_eq(&a, &d));
         cache.clear();
         assert!(cache.is_empty());
+    }
+
+    /// LRU cap: inserting past the cap evicts the least-recently-used
+    /// cell, never the one just built, and counts each eviction.
+    /// Callers holding an evicted Arc keep their pool alive.
+    #[test]
+    fn lru_cap_evicts_oldest_cells() {
+        let cache = PoolCache::new();
+        let p = prob();
+        let a = cache.get_or_generate(&p, 30, 1, 1);
+        let one_pool = cache.resident_bytes();
+        assert!(one_pool > 0);
+        let _b = cache.get_or_generate(&p, 30, 2, 1);
+        // cap to roughly one pool: enforcing evicts the LRU cell (seed 1)
+        cache.set_cap_bytes(one_pool + one_pool / 2);
+        assert_eq!(cache.evictions(), 1, "set_cap_bytes enforces immediately");
+        // rebuilding seed 1 is itself protected, so seed 2 goes; then
+        // inserting seed 3 (protected) evicts the rebuilt seed 1
+        let a2 = cache.get_or_generate(&p, 30, 1, 1);
+        assert!(Arc::ptr_eq(&a, &a2) || a.configs == a2.configs);
+        let c = cache.get_or_generate(&p, 30, 3, 1);
+        assert!(cache.evictions() >= 2);
+        assert!(cache.resident_bytes() <= cache.cap_bytes() || cache.len() == 1);
+        // the freshly built pool must still be resident
+        let key3 = PoolKey::for_problem(&p, 30, 3);
+        assert!(cache.hit_count(&key3).is_some());
+        drop(c);
+        // evicted pools stay usable through outstanding Arcs
+        assert_eq!(a.len(), 30);
+    }
+
+    /// Large cells generate lazily through the cache: no materialized
+    /// truth, memory bounded by the feature side.
+    #[test]
+    fn auto_lazy_above_threshold() {
+        let cache = PoolCache::new();
+        let p = prob();
+        let small = cache.try_get_or_generate(&p, 50, 9, 1).unwrap();
+        assert!(!small.is_lazy());
+        let big = cache
+            .try_get_or_generate(&p, crate::tuner::LAZY_POOL_MIN, 9, 1)
+            .unwrap();
+        assert!(big.is_lazy());
+        assert!(big.truth_eager().is_none());
+        assert_eq!(big.len(), crate::tuner::LAZY_POOL_MIN);
     }
 }

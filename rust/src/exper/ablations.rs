@@ -72,7 +72,7 @@ fn switch_policy(ctx: &ExpCtx, csv: &mut CsvWriter) {
             .map(|rep| {
                 let mut rng = Pcg32::new(ctx.seed ^ 0xAB1, rep as u64);
                 let out = Ceal::new(params).run(&prob, &pool, &scorer, 50, &mut rng);
-                pool.truth[out.best_idx] / pool.best_value()
+                pool.truth_of(out.best_idx) / pool.best_value()
             })
             .collect();
         let mean = stats::mean(&vals);
@@ -101,7 +101,7 @@ fn budget_mode(ctx: &ExpCtx, csv: &mut CsvWriter) {
         let mut rng = Pcg32::new(ctx.seed ^ 0xAB2, rep as u64);
         let out = Ceal::new(CealParams::no_hist()).run(&prob, &pool, &scorer, 50, &mut rng);
         spend.push(out.collection_cost);
-        count_vals.push(pool.truth[out.best_idx] / pool.best_value());
+        count_vals.push(pool.truth_of(out.best_idx) / pool.best_value());
     }
     let budget = stats::mean(&spend);
     let budgeted_vals: Vec<f64> = (0..ctx.reps)
@@ -110,7 +110,7 @@ fn budget_mode(ctx: &ExpCtx, csv: &mut CsvWriter) {
             let out = BudgetedCeal::new(BudgetedCealParams::default()).run_with_cost_budget(
                 &prob, &pool, &scorer, budget, &mut rng,
             );
-            pool.truth[out.best_idx] / pool.best_value()
+            pool.truth_of(out.best_idx) / pool.best_value()
         })
         .collect();
     let mut t = Table::new(&["variant", "normalized best", "budget (core-h)"]).align_left(&[0]);
@@ -155,7 +155,7 @@ fn combination_function(ctx: &ExpCtx, csv: &mut CsvWriter) {
             let hist = historical_samples(&prob, 500, ctx.seed ^ 0x415);
             let nf = prob.n_component_features();
             let lf = LowFiModel::fit(&hist, &nf, obj, &gbt_params_for(500));
-            let matched = recall_score(10, &lf.score(&pool.feats, &scorer), &pool.truth);
+            let matched = recall_score(10, &lf.score(&pool.feats, &scorer), pool.truth());
             // mismatched: swap the combination function
             let other = match obj {
                 Objective::ExecTime => Objective::CompTime,
@@ -165,7 +165,7 @@ fn combination_function(ctx: &ExpCtx, csv: &mut CsvWriter) {
                 comps: lf.comps.clone(),
                 objective: other,
             };
-            let mismatched = recall_score(10, &swapped.score(&pool.feats, &scorer), &pool.truth);
+            let mismatched = recall_score(10, &swapped.score(&pool.feats, &scorer), pool.truth());
             t.row(&[
                 wf.name().into(),
                 obj.name().into(),

@@ -38,7 +38,7 @@ pub fn compute(ctx: &ExpCtx) -> Vec<Fig4Row> {
             out.push(Fig4Row {
                 objective: obj,
                 n,
-                lowfi_recall: recall_score(n, &scores, &pool.truth),
+                lowfi_recall: recall_score(n, &scores, pool.truth()),
                 // expected recall of uniformly random ranking
                 random_recall: n as f64 / pool.len() as f64,
             });

@@ -24,7 +24,7 @@ pub fn run(ctx: &ExpCtx) {
             // same cell key as every campaign at this (wf, obj, seed):
             // the cache makes this table free after any figure ran
             let pool = ctx.shared_pool(&prob, ctx.pool_size, ctx.seed);
-            let best_cfg = &pool.configs[pool.best_idx];
+            let best_cfg = &pool.configs[pool.best_idx()];
             let best_val = pool.best_value();
             let exp_cfg = expert_config(id, obj);
             let exp_val = obj.value(&prob.sim.expected(&exp_cfg));

@@ -41,6 +41,13 @@ const PREDICT_PAR_ROWS: usize = 512;
 /// worker count.
 const PREDICT_CHUNK: usize = 128;
 
+/// Pool size at which scoring routes through [`QuantizedEnsemble`]:
+/// below it the pre-coding pass costs more than it saves; above it
+/// the integer-compare traversal over cache-resident code columns
+/// wins.  Legacy pools (≤2000 configs) never cross it, so every
+/// historical bitwise pin keeps exercising the dense-float path.
+pub const QUANTIZE_MIN_ROWS: usize = 4096;
+
 /// A trained oblivious-GBT ensemble (compact, depth = `depth`).
 #[derive(Clone, Debug, PartialEq)]
 pub struct Ensemble {
@@ -318,6 +325,224 @@ impl FlatEnsemble {
     }
 }
 
+/// Column-major pool feature codes: `u8` when every column has at
+/// most 255 candidate cuts, `u16` otherwise (node counts cap cuts at
+/// `TREES_MAX * DEPTH_MAX = 384`, so `u16` always suffices).
+enum Codes {
+    U8(Vec<u8>),
+    U16(Vec<u16>),
+}
+
+/// A pool-quantized view of one [`Ensemble`]: the same binning idea as
+/// `hist::BinnedDataset` (a row's code per column = number of candidate
+/// cuts strictly below its value) applied to *scoring* instead of
+/// training.
+///
+/// `build` pre-codes the pool's feature columns once against the
+/// ensemble's own thresholds — sorted, deduplicated cut lists per used
+/// feature — after which tree traversal is pure integer compares over
+/// flat column-major code arrays (`codes[col * n_rows + row]`), with
+/// thresholds stored as cut ranks and leaf tables as the ensemble's
+/// flat f32 arrays.  One `u8`/`u16` lane per row per used feature is
+/// cache-resident at 10^6 rows where the dense `[f32; F_MAX]` rows are
+/// not, and the inner loop (`code > cut_rank`) auto-vectorizes.
+///
+/// ## Exactness contract
+///
+/// For ascending deduplicated cuts, `code(x) = #{k : x > cut_k}`
+/// satisfies `x > cut_r ⟺ code(x) > r` for every node rank `r`
+/// (NaN feature values code to 0 and fall left everywhere, exactly as
+/// `NaN > thr` is false; NaN thresholds get the sentinel rank
+/// `cuts.len()`, which no code exceeds, exactly as `x > NaN` is
+/// false).  Leaf selection is therefore *identical* to
+/// [`Ensemble::leaf_index`], and the accumulation order (bias seed,
+/// then trees ascending) matches [`Ensemble::predict_batch`], so
+/// predictions are **bitwise equal** to `predict_batch` — and
+/// bin-boundary-consistent with [`FlatEnsemble::predict_batch`] to the
+/// same tolerance `predict_batch` itself is.  Differential tests pin
+/// both.
+pub struct QuantizedEnsemble {
+    n_rows: usize,
+    depth: usize,
+    n_trees: usize,
+    bias: f32,
+    codes: Codes,
+    /// Per-node code-column index, `[n_trees * depth]`.
+    node_col: Vec<u32>,
+    /// Per-node cut rank (the quantized threshold), `[n_trees * depth]`.
+    node_cut: Vec<u16>,
+    /// Flat leaf tables, `[n_trees * 2^depth]` (copied from the ensemble).
+    leaves: Vec<f32>,
+}
+
+impl QuantizedEnsemble {
+    /// Pre-code `xs` against `ens`'s thresholds.  O(n · used_features ·
+    /// log cuts) — done once per refit (per selection pass), then every
+    /// traversal touches only the code columns.
+    pub fn build(ens: &Ensemble, xs: &[[f32; F_MAX]]) -> QuantizedEnsemble {
+        let n_rows = xs.len();
+        let n_trees = ens.n_trees();
+        let n_nodes = n_trees * ens.depth;
+        // Used feature set, in ascending feature order.
+        let mut used: Vec<u32> = ens.feat[..n_nodes].to_vec();
+        used.sort_unstable();
+        used.dedup();
+        // Per used feature: ascending deduplicated finite cut list.
+        // f32 `==` dedup merges -0.0/0.0 (identical `>` predicates);
+        // NaN thresholds are excluded and handled by sentinel rank.
+        let cuts_per_col: Vec<Vec<f32>> = used
+            .iter()
+            .map(|&f| {
+                let mut cuts: Vec<f32> = (0..n_nodes)
+                    .filter(|&i| ens.feat[i] == f && !ens.thr[i].is_nan())
+                    .map(|i| ens.thr[i])
+                    .collect();
+                cuts.sort_unstable_by(f32::total_cmp);
+                cuts.dedup();
+                cuts
+            })
+            .collect();
+        let node_col: Vec<u32> = ens.feat[..n_nodes]
+            .iter()
+            .map(|f| used.binary_search(f).expect("used feature") as u32)
+            .collect();
+        let node_cut: Vec<u16> = (0..n_nodes)
+            .map(|i| {
+                let cuts = &cuts_per_col[node_col[i] as usize];
+                let thr = ens.thr[i];
+                if thr.is_nan() {
+                    cuts.len() as u16 // `x > NaN` is never true
+                } else {
+                    cuts.iter().position(|&c| c == thr).expect("cut present") as u16
+                }
+            })
+            .collect();
+        let max_cuts = cuts_per_col.iter().map(Vec::len).max().unwrap_or(0);
+        // One coding task per column: chunk size = n_rows aligns each
+        // `for_each_chunk_mut` chunk with exactly one code column.
+        let width = parallel::width_for(n_rows.saturating_mul(used.len()), PREDICT_PAR_ROWS);
+        let code_col = |codes: &mut [u16], col: usize| {
+            let f = used[col] as usize;
+            let cuts = &cuts_per_col[col];
+            for (r, c) in codes.iter_mut().enumerate() {
+                *c = cuts.partition_point(|&t| xs[r][f] > t) as u16;
+            }
+        };
+        let codes = if max_cuts <= u8::MAX as usize {
+            let mut codes = vec![0u8; used.len() * n_rows];
+            parallel::for_each_chunk_mut(width, n_rows.max(1), &mut codes, |col, slice| {
+                let f = used[col] as usize;
+                let cuts = &cuts_per_col[col];
+                for (r, c) in slice.iter_mut().enumerate() {
+                    *c = cuts.partition_point(|&t| xs[r][f] > t) as u8;
+                }
+            });
+            Codes::U8(codes)
+        } else {
+            let mut codes = vec![0u16; used.len() * n_rows];
+            parallel::for_each_chunk_mut(width, n_rows.max(1), &mut codes, |col, slice| {
+                code_col(slice, col)
+            });
+            Codes::U16(codes)
+        };
+        QuantizedEnsemble {
+            n_rows,
+            depth: ens.depth,
+            n_trees,
+            bias: ens.bias,
+            codes,
+            node_col,
+            node_cut,
+            leaves: ens.leaves.clone(),
+        }
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    /// Approximate resident bytes of the coded pool (for cache
+    /// accounting).
+    pub fn approx_bytes(&self) -> usize {
+        let code_bytes = match &self.codes {
+            Codes::U8(v) => v.len(),
+            Codes::U16(v) => v.len() * 2,
+        };
+        code_bytes
+            + self.node_col.len() * 4
+            + self.node_cut.len() * 2
+            + self.leaves.len() * 4
+    }
+
+    /// Predict every pooled row — bitwise equal to
+    /// `Ensemble::predict_batch` over the rows `build` coded.  Fixed
+    /// [`PREDICT_CHUNK`]-row chunks shard across the worker pool (one
+    /// writer per chunk), so results are worker-count-invariant.
+    pub fn predict_all(&self) -> Vec<f32> {
+        let mut out = vec![self.bias; self.n_rows];
+        let width = parallel::width_for(self.n_rows, PREDICT_PAR_ROWS);
+        parallel::for_each_chunk_mut(width, PREDICT_CHUNK, &mut out, |ci, acc| {
+            self.predict_block(ci * PREDICT_CHUNK, acc);
+        });
+        out
+    }
+
+    /// Predict the row range `[start, start + acc.len())` into `acc` —
+    /// the per-chunk form `Scorer::score_fold` streams through without
+    /// materializing an O(pool) vector.
+    pub fn predict_range_into(&self, start: usize, acc: &mut [f32]) {
+        assert!(start + acc.len() <= self.n_rows, "range beyond coded pool");
+        acc.fill(self.bias);
+        self.predict_block(start, acc);
+    }
+
+    fn predict_block(&self, start: usize, acc_all: &mut [f32]) {
+        match &self.codes {
+            Codes::U8(c) => self.predict_block_t(c, |r| r as u8, start, acc_all),
+            Codes::U16(c) => self.predict_block_t(c, |r| r, start, acc_all),
+        }
+    }
+
+    /// Generic over the code lane width: [`PREDICT_BLOCK`]-row
+    /// sub-blocks, tree-major sweep, leaf-index bit packing via
+    /// `code > cut_rank` integer compares down the column-major code
+    /// arrays.
+    fn predict_block_t<T: Copy + Ord>(
+        &self,
+        codes: &[T],
+        conv: impl Fn(u16) -> T,
+        start: usize,
+        acc_all: &mut [f32],
+    ) {
+        let leaves_w = 1usize << self.depth;
+        let mut leaf_idx = [0usize; PREDICT_BLOCK];
+        let mut off = start;
+        for acc in acc_all.chunks_mut(PREDICT_BLOCK) {
+            let m = acc.len();
+            for t in 0..self.n_trees {
+                let base = t * self.depth;
+                leaf_idx[..m].fill(0);
+                for d in 0..self.depth {
+                    let col = self.node_col[base + d] as usize * self.n_rows;
+                    let cut = conv(self.node_cut[base + d]);
+                    let bit = 1usize << d;
+                    let col_codes = &codes[col + off..col + off + m];
+                    for (li, &c) in leaf_idx[..m].iter_mut().zip(col_codes) {
+                        if c > cut {
+                            *li |= bit;
+                        }
+                    }
+                }
+                let leaves = &self.leaves[t * leaves_w..(t + 1) * leaves_w];
+                for (a, &li) in acc.iter_mut().zip(leaf_idx[..m].iter()) {
+                    *a += leaves[li];
+                }
+            }
+            off += m;
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -447,5 +672,125 @@ mod tests {
         let mut rng = Pcg32::new(1, 0);
         let e = random_ensemble(&mut rng, TREES_MAX + 1, 2, 3);
         e.flatten();
+    }
+
+    /// Random rows plus adversarial ones: exact threshold hits (the
+    /// bin-boundary contract), NaN features, and ±0.0.
+    fn quantize_test_rows(rng: &mut Pcg32, e: &Ensemble, n: usize) -> Vec<[f32; F_MAX]> {
+        let mut xs: Vec<[f32; F_MAX]> = (0..n)
+            .map(|_| {
+                let mut x = [0f32; F_MAX];
+                for v in x.iter_mut() {
+                    *v = rng.f32() * 2.0 - 0.5;
+                }
+                x
+            })
+            .collect();
+        for (i, x) in xs.iter_mut().enumerate() {
+            match i % 5 {
+                // land some features exactly on a node threshold:
+                // `x > thr` must stay false on both paths
+                0 if !e.feat.is_empty() => {
+                    let k = i % e.feat.len();
+                    x[e.feat[k] as usize] = e.thr[k];
+                }
+                1 => x[i % F_MAX] = f32::NAN,
+                2 => x[i % F_MAX] = -0.0,
+                3 => x[i % F_MAX] = 0.0,
+                _ => {}
+            }
+        }
+        xs
+    }
+
+    #[test]
+    fn quantized_matches_predict_batch_bitwise() {
+        let mut rng = Pcg32::new(2024, 8);
+        for (trees, depth) in [(1usize, 1usize), (8, 3), (48, 4), (64, 6)] {
+            let e = random_ensemble(&mut rng, trees, depth, 6);
+            let xs = quantize_test_rows(&mut rng, &e, 300);
+            let q = QuantizedEnsemble::build(&e, &xs);
+            let want = e.predict_batch(&xs);
+            let got = q.predict_all();
+            assert_eq!(got.len(), want.len());
+            for i in 0..want.len() {
+                assert!(
+                    got[i].to_bits() == want[i].to_bits(),
+                    "trees={trees} depth={depth} row {i}: quantized {} vs batch {}",
+                    got[i],
+                    want[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_range_matches_all_and_flat_stays_close() {
+        let mut rng = Pcg32::new(7, 81);
+        let e = random_ensemble(&mut rng, 32, 4, 5);
+        let xs = quantize_test_rows(&mut rng, &e, 401);
+        let q = QuantizedEnsemble::build(&e, &xs);
+        let all = q.predict_all();
+        // chunked range predictions re-assemble the full vector bitwise
+        let mut buf = [0f32; 96];
+        let mut start = 0;
+        while start < xs.len() {
+            let m = 96.min(xs.len() - start);
+            q.predict_range_into(start, &mut buf[..m]);
+            for i in 0..m {
+                assert_eq!(buf[i].to_bits(), all[start + i].to_bits());
+            }
+            start += m;
+        }
+        // bin-boundary-consistent with the artifact-shaped evaluator
+        let flat = e.flatten().predict_batch(&xs);
+        for i in 0..xs.len() {
+            if xs[i].iter().any(|v| v.is_nan()) {
+                // NaN rows fall left on every path; still finite output
+                assert!(all[i].is_finite() && flat[i].is_finite());
+            }
+            assert!(
+                (all[i] - flat[i]).abs() < 1e-4,
+                "row {i}: quantized {} vs flat {}",
+                all[i],
+                flat[i]
+            );
+        }
+    }
+
+    #[test]
+    fn quantized_u16_lane_when_cuts_exceed_u8() {
+        // every node tests feature 0 with a distinct threshold:
+        // TREES_MAX*DEPTH_MAX = 384 cuts on one column forces u16 codes
+        let depth = DEPTH_MAX;
+        let trees = TREES_MAX;
+        let leaves_w = 1 << depth;
+        let mut rng = Pcg32::new(5, 5);
+        let e = Ensemble {
+            n_features: 2,
+            depth,
+            feat: vec![0; trees * depth],
+            thr: (0..trees * depth).map(|i| i as f32 / 384.0).collect(),
+            leaves: (0..trees * leaves_w).map(|_| rng.normal() as f32).collect(),
+            bias: 0.25,
+        };
+        let xs = quantize_test_rows(&mut rng, &e, 200);
+        let q = QuantizedEnsemble::build(&e, &xs);
+        assert!(matches!(q.codes, Codes::U16(_)));
+        let want = e.predict_batch(&xs);
+        let got = q.predict_all();
+        for i in 0..want.len() {
+            assert_eq!(got[i].to_bits(), want[i].to_bits(), "row {i}");
+        }
+    }
+
+    #[test]
+    fn quantized_constant_ensemble() {
+        let e = Ensemble::constant(3, 1.5);
+        let xs = vec![[0.4f32; F_MAX]; 50];
+        let q = QuantizedEnsemble::build(&e, &xs);
+        assert!(q.predict_all().iter().all(|&v| v == 1.5));
+        assert_eq!(q.n_rows(), 50);
+        assert!(q.approx_bytes() < 64);
     }
 }

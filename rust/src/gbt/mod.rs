@@ -41,14 +41,22 @@
 //! block/dispatch setup entirely.  Training parallelizes the same
 //! way: one task per feature per tree level, single writer per
 //! histogram cell, ordered split reduction.
+//!
+//! At pool scale (≥ [`ensemble::QUANTIZE_MIN_ROWS`] rows) scoring
+//! additionally routes through [`ensemble::QuantizedEnsemble`]: the
+//! training-side binning idea applied to inference — pool features
+//! pre-coded once into flat `u8`/`u16` columns against the ensemble's
+//! own cut lists, thresholds as cut ranks, traversal as integer
+//! compares — with predictions bitwise equal to
+//! `Ensemble::predict_batch`.
 
 pub mod ensemble;
 pub mod hist;
 pub mod train;
 
 pub use ensemble::{
-    Ensemble, FlatEnsemble, DEPTH_MAX, LEAVES_MAX, NEG_PRED, PREDICT_BLOCK, PREDICT_SMALL,
-    TREES_MAX,
+    Ensemble, FlatEnsemble, QuantizedEnsemble, DEPTH_MAX, LEAVES_MAX, NEG_PRED, PREDICT_BLOCK,
+    PREDICT_SMALL, QUANTIZE_MIN_ROWS, TREES_MAX,
 };
 pub use hist::BinnedDataset;
 pub use train::{train, train_exact, train_log, train_log_exact, GbtParams};

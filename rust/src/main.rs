@@ -15,6 +15,9 @@
 //!   --seed N          root seed                        [0xCEA1]
 //!   --threads N       worker threads ($CEAL_THREADS)   [#cpus]
 //!   --scorer S        native | pjrt                    [native]
+//!   --pool-cache-bytes N
+//!                     pool-cache memory cap in bytes
+//!                     ($CEAL_POOL_CACHE_BYTES)         [2 GiB]
 //! tune flags:
 //!   --workflow W      any registered workflow (see `ceal info`) [LV]
 //!   --objective O     exec | comp                      [comp]
@@ -135,6 +138,12 @@ fn parse_ctx(args: &Args) -> Result<ExpCtx, String> {
     let scorer_name = args.opt_or("scorer", "native");
     ctx.scorer = ScorerKind::from_name(scorer_name)
         .ok_or_else(|| format!("unknown --scorer '{scorer_name}' (native|pjrt)"))?;
+    // Precedence mirrors --threads: --pool-cache-bytes > env > default
+    // (the cache already folded $CEAL_POOL_CACHE_BYTES in at startup).
+    if args.opt("pool-cache-bytes").is_some() {
+        let bytes = args.opt_usize("pool-cache-bytes", 0)?;
+        PoolCache::global().set_cap_bytes(bytes);
+    }
     Ok(ctx)
 }
 
@@ -650,7 +659,7 @@ fn report_session(
     provenance: &str,
 ) -> Result<(), CliError> {
     let best_cfg = &pool.configs[out.best_idx];
-    let best_truth = pool.truth[out.best_idx];
+    let best_truth = pool.truth_of(out.best_idx);
     println!(
         "session: {} on {} ({}), m={}, pool={}, seed={}",
         header.algo, header.workflow, header.objective, header.m, header.pool_size, header.seed

@@ -6,4 +6,4 @@ pub mod lowfi;
 pub mod scorer;
 
 pub use lowfi::LowFiModel;
-pub use scorer::{PoolFeatures, Scorer};
+pub use scorer::{PoolFeatures, Scorer, SCORE_CHUNK};

@@ -14,9 +14,27 @@
 //! and external drivers never see it.
 
 use crate::config::{Config, WorkflowSpec, F_MAX};
-use crate::gbt::Ensemble;
+use crate::gbt::{Ensemble, QuantizedEnsemble, QUANTIZE_MIN_ROWS};
 use crate::runtime::Runtime;
 use crate::sim::Objective;
+
+/// Fixed row width of the fused [`Scorer::score_fold`] chunks: small
+/// enough that a chunk's scores live in a stack-adjacent scratch
+/// buffer, below `Ensemble::predict_batch`'s internal parallel
+/// threshold (each chunk evaluates serially inside its own task), and
+/// independent of the worker count so chunk boundaries — and therefore
+/// fold results — never change with parallelism.
+pub const SCORE_CHUNK: usize = 256;
+
+/// Warn exactly once per process when the PJRT backend degrades to
+/// native scoring — the structured-failure analogue of a transport
+/// fault: report it, keep the run alive.
+fn warn_pjrt_degraded(what: &str, err: &crate::runtime::Error) {
+    static ONCE: std::sync::Once = std::sync::Once::new();
+    ONCE.call_once(|| {
+        eprintln!("warning: PJRT {what} failed ({err:#}); degrading to the native scorer");
+    });
+}
 
 /// Precomputed feature encodings for a fixed configuration pool.
 #[derive(Clone, Debug)]
@@ -108,17 +126,97 @@ impl Scorer {
     /// calls — skip the dispatch entirely.
     pub fn score(&self, ens: &Ensemble, xs: &[[f32; F_MAX]]) -> Vec<f64> {
         match self {
-            Scorer::Native => ens
-                .predict_batch(xs)
-                .into_iter()
-                .map(|v| v as f64)
-                .collect(),
-            Scorer::Pjrt(rt) => rt
-                .score(&ens.flatten(), xs)
-                .expect("PJRT ensemble scoring failed")
-                .into_iter()
-                .map(|v| v as f64)
-                .collect(),
+            Scorer::Native => native_preds(ens, xs).into_iter().map(|v| v as f64).collect(),
+            Scorer::Pjrt(rt) => match rt.score(&ens.flatten(), xs) {
+                Ok(v) => v.into_iter().map(|v| v as f64).collect(),
+                // A backend fault degrades like a transport failure:
+                // warn once, answer from the exact native mirror.
+                Err(e) => {
+                    warn_pjrt_degraded("ensemble scoring", &e);
+                    native_preds(ens, xs).into_iter().map(|v| v as f64).collect()
+                }
+            },
+        }
+    }
+
+    /// Fused score-and-fold: evaluate `model` over `xs` in fixed
+    /// [`SCORE_CHUNK`]-row chunks and fold each chunk's raw (log-space,
+    /// `f64`) predictions into a per-chunk accumulator, returning the
+    /// accumulators in chunk order — the streaming backbone of
+    /// `top_unmeasured_model`/`searcher_best`, which never allocate an
+    /// O(pool) score vector.
+    ///
+    /// Per-row predictions are bitwise identical to
+    /// [`score`](Self::score) on the native path (`predict_batch` is
+    /// chunk-size-invariant, and the quantized pool-scale route is
+    /// bitwise-pinned to it), so any order-respecting reduction over
+    /// the folds equals the same reduction over the materialized
+    /// vector.  Native chunks fan across the worker pool (fixed
+    /// boundaries, one accumulator per chunk — worker-count-invariant);
+    /// the PJRT path walks chunks sequentially on the calling thread,
+    /// degrading any backend fault to the native mirror with a
+    /// one-time warning.
+    pub fn score_fold<R: Send>(
+        &self,
+        ens: &Ensemble,
+        xs: &[[f32; F_MAX]],
+        make: impl Fn() -> R + Sync,
+        fold: impl Fn(&mut R, usize, &[f64]) + Sync,
+    ) -> Vec<R> {
+        let n = xs.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let n_chunks = n.div_ceil(SCORE_CHUNK);
+        match self {
+            Scorer::Native => {
+                // Pool-scale batches pre-code once and traverse the
+                // quantized SoA columns; the codes are shared read-only
+                // across every chunk task.
+                let quant = (n >= QUANTIZE_MIN_ROWS).then(|| QuantizedEnsemble::build(ens, xs));
+                let width = crate::util::parallel::width_for(n, QUANTIZE_MIN_ROWS.min(1024));
+                crate::util::parallel::map_indexed(width, n_chunks, |ci| {
+                    let lo = ci * SCORE_CHUNK;
+                    let hi = (lo + SCORE_CHUNK).min(n);
+                    let preds: Vec<f64> = match &quant {
+                        Some(q) => {
+                            let mut buf = vec![0.0f32; hi - lo];
+                            q.predict_range_into(lo, &mut buf);
+                            buf.into_iter().map(|v| v as f64).collect()
+                        }
+                        None => ens
+                            .predict_batch(&xs[lo..hi])
+                            .into_iter()
+                            .map(|v| v as f64)
+                            .collect(),
+                    };
+                    let mut acc = make();
+                    fold(&mut acc, lo, &preds);
+                    acc
+                })
+            }
+            Scorer::Pjrt(rt) => {
+                let flat = ens.flatten();
+                let mut out = Vec::with_capacity(n_chunks);
+                for ci in 0..n_chunks {
+                    let lo = ci * SCORE_CHUNK;
+                    let hi = (lo + SCORE_CHUNK).min(n);
+                    let preds: Vec<f64> = match rt.score(&flat, &xs[lo..hi]) {
+                        Ok(v) => v.into_iter().map(|v| v as f64).collect(),
+                        Err(e) => {
+                            warn_pjrt_degraded("ensemble scoring", &e);
+                            native_preds(ens, &xs[lo..hi])
+                                .into_iter()
+                                .map(|v| v as f64)
+                                .collect()
+                        }
+                    };
+                    let mut acc = make();
+                    fold(&mut acc, lo, &preds);
+                    out.push(acc);
+                }
+                out
+            }
         }
     }
 
@@ -144,51 +242,70 @@ impl Scorer {
     ) -> Vec<f64> {
         assert_eq!(comps.len(), feats.per_component.len());
         match self {
-            Scorer::Native => {
-                // Fold each component's batched predictions straight
-                // into the combined score — no per-row `parts` vector,
-                // no per-component score matrix.  Matches
-                // `Objective::combine` over exp(prediction): max folds
-                // from -inf, sum folds from 0.
-                let init = match objective {
-                    Objective::ExecTime => f64::NEG_INFINITY,
-                    Objective::CompTime => 0.0,
-                };
-                let mut out = vec![init; feats.len()];
-                for (e, xs) in comps.iter().zip(&feats.per_component) {
-                    // ragged views must fail loudly, not leave `init`
-                    // rows that would read as best-possible scores
-                    assert_eq!(xs.len(), out.len(), "ragged per-component views");
-                    let preds = e.predict_batch(xs);
-                    match objective {
-                        Objective::ExecTime => {
-                            for (o, p) in out.iter_mut().zip(&preds) {
-                                *o = o.max((*p as f64).exp());
-                            }
-                        }
-                        Objective::CompTime => {
-                            for (o, p) in out.iter_mut().zip(&preds) {
-                                *o += (*p as f64).exp();
-                            }
-                        }
-                    }
-                }
-                out
-            }
+            Scorer::Native => native_lowfi(comps, feats, objective),
             Scorer::Pjrt(rt) => {
                 let packed: Vec<(crate::gbt::FlatEnsemble, &[[f32; F_MAX]])> = comps
                     .iter()
                     .zip(&feats.per_component)
                     .map(|(e, xs)| (e.flatten(), xs.as_slice()))
                     .collect();
-                rt.lowfi_score(&packed, objective.mode())
-                    .expect("PJRT lowfi scoring failed")
-                    .into_iter()
-                    .map(|v| v as f64)
-                    .collect()
+                match rt.lowfi_score(&packed, objective.mode()) {
+                    Ok(v) => v.into_iter().map(|v| v as f64).collect(),
+                    // Same degradation contract as `score`: a backend
+                    // fault must not kill the session.
+                    Err(e) => {
+                        warn_pjrt_degraded("lowfi scoring", &e);
+                        native_lowfi(comps, feats, objective)
+                    }
+                }
             }
         }
     }
+}
+
+/// Native batch predictions, routed through the quantized SoA kernel
+/// at pool scale.  `QuantizedEnsemble::predict_all` is bitwise-pinned
+/// to `Ensemble::predict_batch`, so the cutover is invisible to every
+/// equivalence test — it only changes how fast the answer arrives.
+fn native_preds(ens: &Ensemble, xs: &[[f32; F_MAX]]) -> Vec<f32> {
+    if xs.len() >= QUANTIZE_MIN_ROWS {
+        QuantizedEnsemble::build(ens, xs).predict_all()
+    } else {
+        ens.predict_batch(xs)
+    }
+}
+
+/// Native low-fidelity combine: fold each component's batched
+/// predictions straight into the combined score — no per-row `parts`
+/// vector, no per-component score matrix.  Matches
+/// `Objective::combine` over exp(prediction): max folds from -inf,
+/// sum folds from 0.  Also the fallback target when the PJRT lowfi
+/// path degrades.
+fn native_lowfi(comps: &[Ensemble], feats: &PoolFeatures, objective: Objective) -> Vec<f64> {
+    let init = match objective {
+        Objective::ExecTime => f64::NEG_INFINITY,
+        Objective::CompTime => 0.0,
+    };
+    let mut out = vec![init; feats.len()];
+    for (e, xs) in comps.iter().zip(&feats.per_component) {
+        // ragged views must fail loudly, not leave `init` rows that
+        // would read as best-possible scores
+        assert_eq!(xs.len(), out.len(), "ragged per-component views");
+        let preds = native_preds(e, xs);
+        match objective {
+            Objective::ExecTime => {
+                for (o, p) in out.iter_mut().zip(&preds) {
+                    *o = o.max((*p as f64).exp());
+                }
+            }
+            Objective::CompTime => {
+                for (o, p) in out.iter_mut().zip(&preds) {
+                    *o += (*p as f64).exp();
+                }
+            }
+        }
+    }
+    out
 }
 
 #[cfg(test)]

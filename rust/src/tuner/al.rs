@@ -10,7 +10,7 @@
 //! skipped, and the batch closes on whatever was delivered.
 
 use super::common::{
-    random_unmeasured, searcher_best, top_unmeasured, train_hifi, Pool, Problem, Tuner,
+    random_unmeasured, searcher_best, top_unmeasured_model, train_hifi, Pool, Problem, Tuner,
     TunerOutput,
 };
 use super::session::{
@@ -142,10 +142,14 @@ impl TunerSession for AlSession<'_> {
             random_unmeasured(self.core.pool, &self.core.measured_set, k, &mut self.core.sel_rng)
         } else {
             match self.model.as_ref() {
-                Some(model) => {
-                    let preds = self.core.scorer.score(model, &self.core.pool.feats.workflow);
-                    top_unmeasured(&preds, &self.core.measured_set, self.batch)
-                }
+                // fused score-and-select: no O(pool) prediction vector
+                Some(model) => top_unmeasured_model(
+                    model,
+                    self.core.pool,
+                    self.core.scorer,
+                    &self.core.measured_set,
+                    self.batch,
+                ),
                 // every bootstrap attempt failed: refine blind
                 None => {
                     let k = self.batch.min(avail);
@@ -258,12 +262,12 @@ mod tests {
         let half = out.measured.len() / 2;
         let first: f64 = out.measured[..half]
             .iter()
-            .map(|&(i, _)| pool.truth[i])
+            .map(|&(i, _)| pool.truth_of(i))
             .sum::<f64>()
             / half as f64;
         let second: f64 = out.measured[half..]
             .iter()
-            .map(|&(i, _)| pool.truth[i])
+            .map(|&(i, _)| pool.truth_of(i))
             .sum::<f64>()
             / (out.measured.len() - half) as f64;
         assert!(

@@ -14,8 +14,8 @@ use std::sync::Arc;
 
 use super::ceal::{gbt_params_for, CealParams};
 use super::common::{
-    random_unmeasured, searcher_best, top_unmeasured, train_hifi, Pool, Problem, Tuner,
-    TunerOutput,
+    random_unmeasured, searcher_best, top_unmeasured_model, train_hifi, Pool, Problem, TopK,
+    Tuner, TunerOutput,
 };
 use super::session::{
     sample_component_requests, triage_results, DiagSink, FailurePolicy, MeasurementBatch,
@@ -276,21 +276,41 @@ impl AlphSession<'_> {
         }
         self.iter += 1;
         if self.iter < self.iters {
-            let scores: Option<Vec<f64>> = if self.using_hifi {
-                self.hifi
-                    .as_ref()
-                    .map(|h| scorer.score(h, &pool.feats.workflow))
+            let picks: Option<Vec<usize>> = if self.using_hifi {
+                // fused score-and-select over the pool features
+                self.hifi.as_ref().map(|h| {
+                    top_unmeasured_model(h, pool, scorer, &self.core.measured_set, self.m_b)
+                })
             } else {
+                // Combiner selection streams in fixed SCORE_CHUNK-row
+                // windows: encode P_1..P_J rows for one chunk, score
+                // it, feed a bounded TopK — never the O(pool) combiner
+                // feature matrix or score vector.  Per-row scores are
+                // batch-size-invariant, so picks match the old
+                // materialize-everything pass exactly.
                 self.combiner.as_ref().map(|c0| {
-                    let cx: Vec<[f32; F_MAX]> = (0..pool.len())
-                        .map(|i| combiner_features(&self.per_comp_preds, i))
-                        .collect();
-                    scorer.score(c0, &cx)
+                    const CHUNK: usize = crate::surrogate::SCORE_CHUNK;
+                    let mut top = TopK::new(self.m_b);
+                    let mut cx: Vec<[f32; F_MAX]> = Vec::with_capacity(CHUNK);
+                    let mut lo = 0;
+                    while lo < pool.len() {
+                        let hi = (lo + CHUNK).min(pool.len());
+                        cx.clear();
+                        cx.extend((lo..hi).map(|i| combiner_features(&self.per_comp_preds, i)));
+                        for (j, s) in scorer.score(c0, &cx).into_iter().enumerate() {
+                            let i = lo + j;
+                            if !self.core.measured_set.contains(&i) {
+                                top.offer(s, i);
+                            }
+                        }
+                        lo = hi;
+                    }
+                    top.into_indices()
                 })
             };
-            match scores {
-                Some(s) => {
-                    self.c_meas = top_unmeasured(&s, &self.core.measured_set, self.m_b);
+            match picks {
+                Some(p) => {
+                    self.c_meas = p;
                     for &i in &self.c_meas {
                         self.core.measured_set.insert(i);
                     }

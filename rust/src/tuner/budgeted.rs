@@ -18,8 +18,8 @@
 
 use super::ceal::gbt_params_for;
 use super::common::{
-    random_unmeasured, searcher_best, top_unmeasured, train_hifi, Collector, Pool, Problem,
-    TunerOutput,
+    random_unmeasured, searcher_best, top_unmeasured, top_unmeasured_model, train_hifi, Collector,
+    Pool, Problem, TunerOutput,
 };
 use super::session::{
     drive, DiagSink, FailurePolicy, MeasurementBatch, MeasurementRequest, MeasurementResult,
@@ -369,21 +369,20 @@ impl TunerSession for BudgetedSession<'_> {
                             self.phase = Phase::Done;
                             continue;
                         }
-                        // M_L's pool scores are borrowed, not cloned
-                        let hifi_scores;
-                        let scores: &[f64] = match (&self.hifi, self.using_hifi) {
-                            (Some(h), true) => {
-                                hifi_scores =
-                                    self.core.scorer.score(h, &self.core.pool.feats.workflow);
-                                &hifi_scores
-                            }
-                            _ => &self.lowfi_scores,
+                        // Hifi selection fuses score-and-select (no
+                        // O(pool) score vector); M_L's materialized
+                        // pool scores are borrowed, as before.
+                        let k = self.params.batch.min(self.core.pool.len());
+                        let batch_idx = match (&self.hifi, self.using_hifi) {
+                            (Some(h), true) => top_unmeasured_model(
+                                h,
+                                self.core.pool,
+                                self.core.scorer,
+                                &self.core.measured_set,
+                                k,
+                            ),
+                            _ => top_unmeasured(&self.lowfi_scores, &self.core.measured_set, k),
                         };
-                        let batch_idx = top_unmeasured(
-                            scores,
-                            &self.core.measured_set,
-                            self.params.batch.min(self.core.pool.len()),
-                        );
                         if batch_idx.is_empty() {
                             self.phase = Phase::Done;
                             continue;
@@ -526,8 +525,8 @@ mod tests {
             let mut r2 = Pcg32::new(60 + rep, 2);
             let s = tuner.run_with_cost_budget(&prob, &pool, &Scorer::Native, 150.0, &mut r1);
             let l = tuner.run_with_cost_budget(&prob, &pool, &Scorer::Native, 1200.0, &mut r2);
-            small_sum += pool.truth[s.best_idx];
-            large_sum += pool.truth[l.best_idx];
+            small_sum += pool.truth_of(s.best_idx);
+            large_sum += pool.truth_of(l.best_idx);
         }
         assert!(
             large_sum <= small_sum * 1.1,

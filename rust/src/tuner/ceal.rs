@@ -22,8 +22,8 @@
 use std::sync::Arc;
 
 use super::common::{
-    random_unmeasured, searcher_best, top_unmeasured, train_hifi, Pool, Problem, Tuner,
-    TunerOutput,
+    random_unmeasured, searcher_best, top_unmeasured, top_unmeasured_model, train_hifi, Pool,
+    Problem, Tuner, TunerOutput,
 };
 use super::session::{
     sample_component_requests, triage_results, DiagSink, FailurePolicy, MeasurementBatch,
@@ -340,15 +340,15 @@ impl CealSession<'_> {
         self.core.refit();
         self.iter += 1;
         if self.iter < self.iters {
-            let hifi_scores;
-            let scores: &[f64] = match (self.using_hifi, self.hifi.as_ref()) {
+            // Hifi selection fuses score-and-select (no O(pool) score
+            // vector); the lowfi scores were materialized once at phase
+            // open and are reused per iteration, as before.
+            self.c_meas = match (self.using_hifi, self.hifi.as_ref()) {
                 (true, Some(h)) => {
-                    hifi_scores = scorer.score(h, &pool.feats.workflow);
-                    &hifi_scores
+                    top_unmeasured_model(h, pool, scorer, &self.core.measured_set, self.m_b)
                 }
-                _ => &self.lowfi_scores,
+                _ => top_unmeasured(&self.lowfi_scores, &self.core.measured_set, self.m_b),
             };
-            self.c_meas = top_unmeasured(scores, &self.core.measured_set, self.m_b);
             for &i in &self.c_meas {
                 self.core.measured_set.insert(i);
             }
@@ -605,8 +605,8 @@ mod tests {
             let mut r2 = Pcg32::new(100 + rep, 2);
             let c = Ceal::new(CealParams::no_hist()).run(&prob, &pool, &scorer, 25, &mut r1);
             let r = super::super::rs::RandomSampling.run(&prob, &pool, &scorer, 25, &mut r2);
-            ceal_sum += pool.truth[c.best_idx];
-            rs_sum += pool.truth[r.best_idx];
+            ceal_sum += pool.truth_of(c.best_idx);
+            rs_sum += pool.truth_of(r.best_idx);
         }
         assert!(
             ceal_sum < rs_sum,

@@ -50,13 +50,26 @@ impl Problem {
 /// Pools are immutable once generated and may be shared (`Arc<Pool>`)
 /// across every algorithm and repetition of a campaign cell — see
 /// [`crate::coordinator::PoolCache`].  Tuners must never mutate a pool.
+///
+/// The truth side comes in two physical forms behind one accessor
+/// surface ([`truth_of`](Self::truth_of) and friends):
+///
+/// * **Eager** ([`generate_par`](Self::generate_par)) — every config's
+///   noise-free objective is measured at generation time, exactly as
+///   the paper's §7.1 test set.  This is the reference path; all
+///   exhaustive metrics (recall, MdAPE, normalized best) require it.
+/// * **Lazy** ([`generate_lazy`](Self::generate_lazy)) — candidates
+///   are sampled from the *identical* seed stream but no simulator
+///   runs happen up front; a config's truth is computed (and cached)
+///   only when something asks for it — failure-cost charges, the final
+///   best-config report.  This is what makes 10^5–10^6-config pools
+///   affordable: memory and generation time are bounded by the feature
+///   side.  `truth_of(i)` is bit-identical across the two forms (the
+///   same deterministic `expected_with` measurement).
 pub struct Pool {
     pub configs: Vec<Config>,
     pub feats: PoolFeatures,
-    /// Noise-free objective value per config (the test-set measurement).
-    pub truth: Vec<f64>,
-    /// Index of the best configuration in the pool.
-    pub best_idx: usize,
+    truth: TruthSide,
     /// Lazily built k-NN parameter graphs (GEIST), one per requested
     /// `k` — pools are shared across algorithms, so callers may
     /// legitimately disagree on `k`.  Per-k `OnceLock` slots keep the
@@ -67,8 +80,49 @@ pub struct Pool {
 
 type KnnSlot = std::sync::OnceLock<std::sync::Arc<Vec<Vec<usize>>>>;
 
+/// The two physical truth representations; see [`Pool`].
+enum TruthSide {
+    Eager {
+        /// Noise-free objective value per config (the test set).
+        truth: Vec<f64>,
+        /// Index of the best configuration in the pool.
+        best_idx: usize,
+    },
+    Lazy(LazyTruth),
+}
+
+/// On-demand truth: the owned simulator + objective recompute any
+/// config's noise-free measurement exactly as eager generation would
+/// have, caching each value the first time it is asked for.
+struct LazyTruth {
+    sim: WorkflowSim,
+    objective: Objective,
+    cache: std::sync::Mutex<HashMap<usize, f64>>,
+}
+
+impl LazyTruth {
+    fn value_of(&self, cfg: &Config, i: usize) -> f64 {
+        if let Some(&v) = self.cache.lock().unwrap().get(&i) {
+            return v;
+        }
+        // Compute outside the lock: the value is deterministic, so a
+        // concurrent duplicate computation is benign (same bits).
+        let v = self
+            .objective
+            .value(&self.sim.expected_with(cfg, &mut SimWorkspace::new()));
+        self.cache.lock().unwrap().insert(i, v);
+        v
+    }
+}
+
 /// Pool size used by the paper (§7.1).
 pub const POOL_SIZE: usize = 2000;
+
+/// Pool sizes at or above this generate lazily by default (see
+/// [`Pool::try_generate_auto`]): eager ground truth at these scales
+/// costs O(size) simulator runs and O(size) resident doubles for a
+/// test set nothing exhaustively consumes.
+pub const LAZY_POOL_MIN: usize = 16_384;
 
 impl Pool {
     /// Generate a deduplicated feasible pool and measure its ground
@@ -100,27 +154,63 @@ impl Pool {
         seed: u64,
         threads: usize,
     ) -> Result<Pool, crate::sim::InfeasibleSpace> {
-        let mut rng = Pcg32::new(seed, 0x9001);
-        let spec = &prob.sim.spec;
-        let mut seen: HashSet<Config> = HashSet::with_capacity(size * 2);
-        let mut configs = Vec::with_capacity(size);
-        let feasible = |c: &Config| prob.sim.feasible(c);
-        while configs.len() < size {
-            let c = spec.try_sample_feasible(&mut rng, &feasible, 100_000)?;
-            if seen.insert(c.clone()) {
-                configs.push(c);
-            }
-        }
-        let feats = PoolFeatures::encode(spec, &configs);
+        let (configs, feats) = sample_pool_configs(prob, size, seed)?;
         let truth = measure_truth(prob, &configs, threads);
         let best_idx = stats::argmin(&truth).expect("non-empty pool");
         Ok(Pool {
             configs,
             feats,
-            truth,
-            best_idx,
+            truth: TruthSide::Eager { truth, best_idx },
             knn: std::sync::Mutex::new(HashMap::new()),
         })
+    }
+
+    /// [`try_generate_lazy`](Self::try_generate_lazy), panicking on an
+    /// infeasible space (mirror of [`generate_par`](Self::generate_par)).
+    pub fn generate_lazy(prob: &Problem, size: usize, seed: u64) -> Pool {
+        Pool::try_generate_lazy(prob, size, seed)
+            .unwrap_or_else(|e| panic!("pool generation failed: {e}"))
+    }
+
+    /// Generate a *lazy* pool: the candidate configs come off the exact
+    /// seed stream of [`try_generate_par`](Self::try_generate_par)
+    /// (bitwise-equal `configs`/`feats` for the same `(problem, size,
+    /// seed)`), but no ground truth is measured up front — each
+    /// config's noise-free objective is computed on first access via
+    /// [`truth_of`](Self::truth_of).  Generation cost and resident
+    /// memory are bounded by sampling + feature encoding alone.
+    pub fn try_generate_lazy(
+        prob: &Problem,
+        size: usize,
+        seed: u64,
+    ) -> Result<Pool, crate::sim::InfeasibleSpace> {
+        let (configs, feats) = sample_pool_configs(prob, size, seed)?;
+        Ok(Pool {
+            configs,
+            feats,
+            truth: TruthSide::Lazy(LazyTruth {
+                sim: prob.sim.clone(),
+                objective: prob.objective,
+                cache: std::sync::Mutex::new(HashMap::new()),
+            }),
+            knn: std::sync::Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Generation policy: eager (the reference) below
+    /// [`LAZY_POOL_MIN`], lazy at or above it.  What the pool cache
+    /// and CLI use so `--pool 100000` never materializes a truth side.
+    pub fn try_generate_auto(
+        prob: &Problem,
+        size: usize,
+        seed: u64,
+        threads: usize,
+    ) -> Result<Pool, crate::sim::InfeasibleSpace> {
+        if size >= LAZY_POOL_MIN {
+            Pool::try_generate_lazy(prob, size, seed)
+        } else {
+            Pool::try_generate_par(prob, size, seed, threads)
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -131,8 +221,86 @@ impl Pool {
         self.configs.is_empty()
     }
 
+    /// Is the truth side on-demand (no materialized test set)?
+    pub fn is_lazy(&self) -> bool {
+        matches!(self.truth, TruthSide::Lazy(_))
+    }
+
+    /// Ground truth of pool index `i`.  Eager pools index the test
+    /// set; lazy pools run the deterministic noise-free measurement on
+    /// first access and cache it — bit-identical to the eager value.
+    pub fn truth_of(&self, i: usize) -> f64 {
+        match &self.truth {
+            TruthSide::Eager { truth, .. } => truth[i],
+            TruthSide::Lazy(l) => l.value_of(&self.configs[i], i),
+        }
+    }
+
+    /// The full materialized test set, or `None` on a lazy pool.
+    /// Exhaustive metrics (recall, MdAPE, pool-normalized best) must
+    /// gate on this instead of forcing O(pool) simulator runs.
+    pub fn truth_eager(&self) -> Option<&[f64]> {
+        match &self.truth {
+            TruthSide::Eager { truth, .. } => Some(truth),
+            TruthSide::Lazy(_) => None,
+        }
+    }
+
+    /// The materialized test set (panics on a lazy pool — use
+    /// [`truth_eager`](Self::truth_eager) or
+    /// [`truth_of`](Self::truth_of) in lazy-capable paths).
+    pub fn truth(&self) -> &[f64] {
+        self.truth_eager()
+            .expect("lazy pool has no materialized ground truth")
+    }
+
+    /// Index of the true-best configuration (requires eager truth).
+    pub fn best_idx(&self) -> usize {
+        match &self.truth {
+            TruthSide::Eager { best_idx, .. } => *best_idx,
+            TruthSide::Lazy(_) => panic!("lazy pool has no materialized best index"),
+        }
+    }
+
     pub fn best_value(&self) -> f64 {
-        self.truth[self.best_idx]
+        self.truth()[self.best_idx()]
+    }
+
+    /// Lazily computed truth cells so far (0 for eager pools) — the
+    /// lazy path's memory/diagnostic counter.
+    pub fn lazy_truth_count(&self) -> usize {
+        match &self.truth {
+            TruthSide::Eager { .. } => 0,
+            TruthSide::Lazy(l) => l.cache.lock().unwrap().len(),
+        }
+    }
+
+    /// A positive, deterministic stand-in for an expected run cost when
+    /// nothing has been observed yet (component failure charges).
+    /// Eager pools use the pool-best value as before; lazy pools
+    /// measure config 0 once — any fixed pool member works, the charge
+    /// only needs to be positive and reproducible.
+    pub(crate) fn failure_cost_floor(&self) -> f64 {
+        match &self.truth {
+            TruthSide::Eager { .. } => self.best_value(),
+            TruthSide::Lazy(_) => self.truth_of(0),
+        }
+    }
+
+    /// Approximate resident bytes (configs + features + truth side) —
+    /// what the pool cache's LRU cap accounts against.
+    pub fn approx_bytes(&self) -> usize {
+        let n = self.len();
+        let per_cfg = std::mem::size_of::<Config>()
+            + self.configs.first().map_or(0, |c| c.0.len()) * std::mem::size_of::<i64>();
+        let row = std::mem::size_of::<[f32; F_MAX]>();
+        let feat_rows = 1 + self.feats.per_component.len();
+        let truth = match &self.truth {
+            TruthSide::Eager { truth, .. } => truth.len() * std::mem::size_of::<f64>(),
+            // HashMap cell ≈ key + value + bucket overhead
+            TruthSide::Lazy(l) => l.cache.lock().unwrap().len() * 48,
+        };
+        n * per_cfg + n * row * feat_rows + truth
     }
 
     /// k-nearest-neighbor graph over normalized workflow features
@@ -204,6 +372,30 @@ impl Pool {
         });
         graph
     }
+}
+
+/// Shared candidate sampling of eager and lazy generation: the
+/// deduplicated feasible draw off the `(seed, 0x9001)` stream plus the
+/// feature encoding.  Extracting this is what makes the lazy pool's
+/// configs bitwise-equal to the eager reference.
+fn sample_pool_configs(
+    prob: &Problem,
+    size: usize,
+    seed: u64,
+) -> Result<(Vec<Config>, PoolFeatures), crate::sim::InfeasibleSpace> {
+    let mut rng = Pcg32::new(seed, 0x9001);
+    let spec = &prob.sim.spec;
+    let mut seen: HashSet<Config> = HashSet::with_capacity(size * 2);
+    let mut configs = Vec::with_capacity(size);
+    let feasible = |c: &Config| prob.sim.feasible(c);
+    while configs.len() < size {
+        let c = spec.try_sample_feasible(&mut rng, &feasible, 100_000)?;
+        if seen.insert(c.clone()) {
+            configs.push(c);
+        }
+    }
+    let feats = PoolFeatures::encode(spec, &configs);
+    Ok((configs, feats))
 }
 
 /// Noise-free ground truth for every config, fanned across the
@@ -416,17 +608,56 @@ pub trait Tuner: Sync {
 /// unmeasured configurations; where a configuration was actually
 /// measured, the observation replaces the model output — a tuner never
 /// trusts a surrogate over data it already has.
+///
+/// Streaming: scores are consumed chunk-by-chunk as
+/// [`Scorer::score_fold`] produces them — no O(pool) score vector.
+/// Each fixed chunk keeps its first strict minimum, chunks merge in
+/// chunk order, so the pick (first minimum, `partial_cmp` NaN panic
+/// included) is identical to the old materialize-then-`argmin` pass at
+/// any pool size and worker count.
 pub fn searcher_best(
     model: &Ensemble,
     pool: &Pool,
     scorer: &Scorer,
     measured: &[(usize, f64)],
 ) -> usize {
-    let mut scores: Vec<f64> = scorer.score_times(model, &pool.feats.workflow);
-    for &(i, y) in measured {
-        scores[i] = y;
+    let overrides: HashMap<usize, f64> = measured.iter().copied().collect();
+    let mins = scorer.score_fold(
+        model,
+        &pool.feats.workflow,
+        || None::<(f64, usize)>,
+        |best, base, preds| {
+            for (j, p) in preds.iter().enumerate() {
+                let i = base + j;
+                let s = match overrides.get(&i) {
+                    Some(&y) => y,
+                    None => p.exp(),
+                };
+                let better = match best {
+                    // strict `<` keeps the earliest minimum, like
+                    // `min_by`; NaN panics, like `stats::argmin`
+                    Some((b, _)) => {
+                        s.partial_cmp(b).expect("NaN in argmin") == std::cmp::Ordering::Less
+                    }
+                    None => true,
+                };
+                if better {
+                    *best = Some((s, i));
+                }
+            }
+        },
+    );
+    let mut best: Option<(f64, usize)> = None;
+    for m in mins.into_iter().flatten() {
+        let better = match &best {
+            Some((b, _)) => m.0.partial_cmp(b).expect("NaN in argmin") == std::cmp::Ordering::Less,
+            None => true,
+        };
+        if better {
+            best = Some(m);
+        }
     }
-    stats::argmin(&scores).expect("non-empty pool")
+    best.expect("non-empty pool").1
 }
 
 /// Train the workflow (high-fidelity) surrogate on measured samples.
@@ -500,35 +731,133 @@ pub fn random_unmeasured(
     out
 }
 
+/// A bounded selector of the `k` smallest `(score, index)` pairs under
+/// `total_cmp`-then-index order — the streaming replacement for
+/// "materialize every score, partial-sort the survivors".
+///
+/// The order is total and the pairs are distinct (distinct indices),
+/// so the selected *set* is unique: offering candidates in any order —
+/// including per-worker-shard with a final merge — yields the same
+/// `k` picks, and [`into_indices`](Self::into_indices) returns them in
+/// the same ascending order as the old full-sort selection.
+pub struct TopK {
+    k: usize,
+    /// Max-heap on (score, index): the root is the worst kept pick.
+    heap: std::collections::BinaryHeap<ScoredIdx>,
+}
+
+/// `(score, index)` with `total_cmp`-then-index ordering (NaN sorts
+/// last, after every real score — a degenerate model must not panic).
+#[derive(Clone, Copy)]
+struct ScoredIdx(f64, usize);
+
+impl PartialEq for ScoredIdx {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
+impl Eq for ScoredIdx {}
+impl PartialOrd for ScoredIdx {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for ScoredIdx {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.total_cmp(&other.0).then(self.1.cmp(&other.1))
+    }
+}
+
+impl TopK {
+    pub fn new(k: usize) -> TopK {
+        TopK {
+            k,
+            heap: std::collections::BinaryHeap::with_capacity(k + 1),
+        }
+    }
+
+    /// Offer one candidate; keeps at most `k`, O(log k).
+    #[inline]
+    pub fn offer(&mut self, score: f64, idx: usize) {
+        if self.k == 0 {
+            return;
+        }
+        let cand = ScoredIdx(score, idx);
+        if self.heap.len() < self.k {
+            self.heap.push(cand);
+        } else if let Some(worst) = self.heap.peek() {
+            if cand < *worst {
+                self.heap.pop();
+                self.heap.push(cand);
+            }
+        }
+    }
+
+    /// Merge another shard's picks (worker-shard reduction).
+    pub fn merge(&mut self, other: TopK) {
+        for ScoredIdx(s, i) in other.heap {
+            self.offer(s, i);
+        }
+    }
+
+    /// The selected indices in ascending (score, index) order —
+    /// exactly the old `select_nth` + sort output.
+    pub fn into_indices(self) -> Vec<usize> {
+        let mut picks = self.heap.into_vec();
+        picks.sort_unstable();
+        picks.into_iter().map(|ScoredIdx(_, i)| i).collect()
+    }
+}
+
 /// Select the `k` best-scoring unmeasured pool indices (scores are
 /// lower-is-better), in ascending score order with index tie-breaks.
 ///
-/// Partial selection: `select_nth_unstable_by` partitions the k best
-/// candidates in O(pool), then only those k are sorted — the typical
-/// call has k (a batch of a few samples) ≪ pool (2000 configs), where
-/// a full sort wastes an O(pool·log pool) pass per iteration.  The
-/// (score, index) comparator is total, so the selected set and its
-/// final order are deterministic regardless of partition internals.
-pub fn top_unmeasured(
-    scores: &[f64],
+/// One bounded-heap pass: O(pool · log k) time, O(k) extra memory —
+/// no materialized index vector.  The (score, index) order is total,
+/// so the selected set and its final order are deterministic and
+/// identical to the old partial-selection implementation.
+pub fn top_unmeasured(scores: &[f64], measured: &HashSet<usize>, k: usize) -> Vec<usize> {
+    let mut top = TopK::new(k);
+    for (i, &s) in scores.iter().enumerate() {
+        if !measured.contains(&i) {
+            top.offer(s, i);
+        }
+    }
+    top.into_indices()
+}
+
+/// Fused score-and-select: the `k` best unmeasured pool indices under
+/// `model`'s raw (log-space) pool scores, without materializing the
+/// O(pool) score vector — each fixed [`Scorer::score_fold`] chunk
+/// feeds a bounded [`TopK`] shard, shards merge in chunk order.
+/// Equivalent to `top_unmeasured(&scorer.score(model,
+/// &pool.feats.workflow), measured, k)` pick-for-pick (the per-row
+/// scores are bitwise identical and the selection order is total).
+pub fn top_unmeasured_model(
+    model: &Ensemble,
+    pool: &Pool,
+    scorer: &Scorer,
     measured: &HashSet<usize>,
     k: usize,
 ) -> Vec<usize> {
-    let mut idx: Vec<usize> = (0..scores.len()).filter(|i| !measured.contains(i)).collect();
-    if k == 0 {
-        idx.clear();
-        return idx;
+    let shards = scorer.score_fold(
+        model,
+        &pool.feats.workflow,
+        || TopK::new(k),
+        |top, base, preds| {
+            for (j, &p) in preds.iter().enumerate() {
+                let i = base + j;
+                if !measured.contains(&i) {
+                    top.offer(p, i);
+                }
+            }
+        },
+    );
+    let mut all = TopK::new(k);
+    for shard in shards {
+        all.merge(shard);
     }
-    // total_cmp keeps a degenerate (NaN-scored) model from panicking
-    // mid-sort; NaN sorts last instead, after every real score
-    let by_score_then_index =
-        |a: &usize, b: &usize| scores[*a].total_cmp(&scores[*b]).then(a.cmp(b));
-    if k < idx.len() {
-        idx.select_nth_unstable_by(k - 1, by_score_then_index);
-        idx.truncate(k);
-    }
-    idx.sort_unstable_by(by_score_then_index);
-    idx
+    all.into_indices()
 }
 
 #[cfg(test)]
@@ -552,7 +881,7 @@ mod tests {
         // dedup
         let set: HashSet<&Config> = a.configs.iter().collect();
         assert_eq!(set.len(), 50);
-        assert!(a.best_value() <= stats::quantile(&a.truth, 0.1));
+        assert!(a.best_value() <= stats::quantile(a.truth(), 0.1));
     }
 
     #[test]
@@ -623,8 +952,8 @@ mod tests {
         for threads in [2usize, 3, 7] {
             let par = Pool::generate_par(&prob, 60, 17, threads);
             assert_eq!(serial.configs, par.configs, "threads={threads}");
-            assert_eq!(serial.truth, par.truth, "threads={threads}");
-            assert_eq!(serial.best_idx, par.best_idx, "threads={threads}");
+            assert_eq!(serial.truth(), par.truth(), "threads={threads}");
+            assert_eq!(serial.best_idx(), par.best_idx(), "threads={threads}");
         }
     }
 
@@ -716,19 +1045,118 @@ mod tests {
         assert_eq!(top_unmeasured(&scores, &measured, 99), vec![5, 1, 2, 3, 0, 4]);
     }
 
+    /// The bounded-heap `top_unmeasured` must reproduce the old
+    /// materialize-and-partial-sort selection exactly — picks and order
+    /// — for random scores with deliberate ties, any k, any measured
+    /// set, NaNs included.
+    #[test]
+    fn top_unmeasured_equals_full_sort_reference() {
+        fn reference(scores: &[f64], measured: &HashSet<usize>, k: usize) -> Vec<usize> {
+            let mut idx: Vec<usize> =
+                (0..scores.len()).filter(|i| !measured.contains(i)).collect();
+            if k == 0 {
+                return Vec::new();
+            }
+            let by = |a: &usize, b: &usize| scores[*a].total_cmp(&scores[*b]).then(a.cmp(b));
+            if k < idx.len() {
+                idx.select_nth_unstable_by(k - 1, by);
+                idx.truncate(k);
+            }
+            idx.sort_unstable_by(by);
+            idx
+        }
+
+        crate::util::prop::check("top_unmeasured streaming vs full sort", 60, |rng| {
+            let n = 1 + rng.gen_range(200) as usize;
+            let scores: Vec<f64> = (0..n)
+                .map(|_| match rng.gen_range(5) {
+                    0 => 0.5, // force ties
+                    1 => f64::NAN,
+                    _ => rng.f64(),
+                })
+                .collect();
+            let measured: HashSet<usize> = (0..rng.gen_range(n as u64 / 2 + 1))
+                .map(|_| rng.gen_range(n as u64) as usize)
+                .collect();
+            let k = rng.gen_range(n as u64 + 4) as usize;
+            crate::util::prop::assert_prop(
+                top_unmeasured(&scores, &measured, k) == reference(&scores, &measured, k),
+                "streaming picks diverged from full-sort reference",
+            )
+        });
+    }
+
+    /// Fused score-and-select must equal materialize-then-select, and
+    /// the streaming searcher must equal the materialized argmin — the
+    /// exactness contracts the session tuners lean on.
+    #[test]
+    fn fused_selection_matches_materialized() {
+        let prob = toy_problem();
+        let pool = Pool::generate(&prob, 150, 23);
+        let measured_rows: Vec<(usize, f64)> = (0..25).map(|i| (i * 3, pool.truth_of(i * 3))).collect();
+        let model = train_hifi(&prob, &pool, &measured_rows);
+        let scorer = Scorer::Native;
+        let measured: HashSet<usize> = measured_rows.iter().map(|&(i, _)| i).collect();
+
+        let scores = scorer.score(&model, &pool.feats.workflow);
+        for k in [0usize, 1, 5, 40, 150, 200] {
+            assert_eq!(
+                top_unmeasured_model(&model, &pool, &scorer, &measured, k),
+                top_unmeasured(&scores, &measured, k),
+                "k={k}"
+            );
+        }
+
+        // searcher: reference = materialize, override, argmin
+        let mut times = scorer.score_times(&model, &pool.feats.workflow);
+        for &(i, y) in &measured_rows {
+            times[i] = y;
+        }
+        let want = stats::argmin(&times).unwrap();
+        assert_eq!(searcher_best(&model, &pool, &scorer, &measured_rows), want);
+    }
+
+    /// Lazy pools draw the identical candidate stream as the eager
+    /// reference and produce bit-identical truth on demand.
+    #[test]
+    fn lazy_pool_matches_eager_reference() {
+        let prob = toy_problem();
+        let eager = Pool::generate_par(&prob, 120, 19, 3);
+        let lazy = Pool::generate_lazy(&prob, 120, 19);
+        assert!(lazy.is_lazy() && !eager.is_lazy());
+        assert_eq!(eager.configs, lazy.configs);
+        assert_eq!(eager.feats.workflow, lazy.feats.workflow);
+        assert_eq!(lazy.lazy_truth_count(), 0);
+        for i in (0..120).step_by(7) {
+            assert_eq!(eager.truth_of(i), lazy.truth_of(i), "truth diverged at {i}");
+        }
+        // cached: second read hits the cache, count stays put
+        let n = lazy.lazy_truth_count();
+        assert!(n > 0);
+        let _ = lazy.truth_of(0);
+        assert_eq!(lazy.lazy_truth_count(), n);
+        assert!(eager.truth_eager().is_some() && lazy.truth_eager().is_none());
+        // the failure-cost floor is positive and deterministic on both
+        assert!(eager.failure_cost_floor() > 0.0);
+        assert_eq!(lazy.failure_cost_floor(), lazy.truth_of(0));
+        // auto policy: small stays eager
+        let auto = Pool::try_generate_auto(&prob, 50, 19, 1).unwrap();
+        assert!(!auto.is_lazy());
+    }
+
     #[test]
     fn train_and_search() {
         let prob = toy_problem();
         let pool = Pool::generate(&prob, 60, 9);
         // measure 30 configs with the truth (no noise) and check the
         // searcher lands in a decent region
-        let measured: Vec<(usize, f64)> = (0..30).map(|i| (i, pool.truth[i])).collect();
+        let measured: Vec<(usize, f64)> = (0..30).map(|i| (i, pool.truth_of(i))).collect();
         let model = train_hifi(&prob, &pool, &measured);
         let best = searcher_best(&model, &pool, &Scorer::Native, &measured);
         let rank = pool
-            .truth
+            .truth()
             .iter()
-            .filter(|&&v| v < pool.truth[best])
+            .filter(|&&v| v < pool.truth_of(best))
             .count();
         assert!(rank < 30, "searcher pick should rank near the top, got {rank}");
     }

@@ -323,13 +323,13 @@ mod tests {
         let pool = Pool::generate(&prob, 100, 21);
         let g = Geist::default();
         // label the true best as 1, a bad one as 0
-        let worst = stats::argmax(&pool.truth).unwrap();
-        let labels = vec![(pool.best_idx, 1.0), (worst, 0.0)];
+        let worst = stats::argmax(pool.truth()).unwrap();
+        let labels = vec![(pool.best_idx(), 1.0), (worst, 0.0)];
         let scores = g.propagate(&pool, &labels);
-        assert_eq!(scores[pool.best_idx], 1.0);
+        assert_eq!(scores[pool.best_idx()], 1.0);
         // neighbors of the best should score higher than neighbors of the worst
         let graph = pool.knn_graph(g.knn);
-        let gb = &graph[pool.best_idx];
+        let gb = &graph[pool.best_idx()];
         let gw = &graph[worst];
         let avg_b: f64 = gb.iter().map(|&i| scores[i]).sum::<f64>() / gb.len() as f64;
         let avg_w: f64 = gw.iter().map(|&i| scores[i]).sum::<f64>() / gw.len() as f64;

@@ -34,7 +34,10 @@ pub use al::ActiveLearning;
 pub use alph::Alph;
 pub use budgeted::{BudgetedCeal, BudgetedCealParams};
 pub use ceal::{Ceal, CealParams};
-pub use common::{Collector, Pool, Problem, Tuner, TunerOutput};
+pub use common::{
+    top_unmeasured, top_unmeasured_model, Collector, Pool, Problem, TopK, Tuner, TunerOutput,
+    LAZY_POOL_MIN, POOL_SIZE,
+};
 pub use faults::{FaultInjector, FaultPlan, FaultSpec};
 pub use geist::Geist;
 pub use journal::{

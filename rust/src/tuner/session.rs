@@ -625,21 +625,22 @@ impl<'a> SessionCore<'a> {
     /// the budget (the run burned wall-clock before dying; the
     /// expected cost is the pool's ground-truth objective value).
     pub(crate) fn charge_failed_workflow(&mut self, i: usize, attempt: usize) {
-        let charge = self.policy.failure_charge(self.pool.truth[i], attempt);
+        let charge = self.policy.failure_charge(self.pool.truth_of(i), attempt);
         self.failed_workflow_cost += charge;
         self.failed_runs += 1;
     }
 
     /// Charge one failed isolated-component attempt.  The expected
     /// cost is the mean observed component cost, falling back to the
-    /// pool's best workflow value when nothing has been observed yet —
-    /// always positive, so budget-gated phases terminate even under a
-    /// 100% failure rate.
+    /// pool's failure-cost floor (eager: pool-best value, as before;
+    /// lazy: one fixed member's truth) when nothing has been observed
+    /// yet — always positive, so budget-gated phases terminate even
+    /// under a 100% failure rate.
     pub(crate) fn charge_failed_component(&mut self, attempt: usize) {
         let expected = if self.component_runs > 0 {
             self.component_cost / self.component_runs as f64
         } else {
-            self.pool.best_value()
+            self.pool.failure_cost_floor()
         };
         self.failed_component_cost += self.policy.failure_charge(expected, attempt);
         self.failed_runs += 1;

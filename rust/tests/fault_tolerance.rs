@@ -151,7 +151,7 @@ fn budgeted_session_terminates_under_faults() {
     let pool = Pool::generate(&prob, POOL, 0xCEA1);
     let tuner = BudgetedCeal::new(BudgetedCealParams::default());
     // a budget in objective units, roughly a dozen median runs
-    let budget = pool.truth.iter().sum::<f64>() / pool.len() as f64 * 12.0;
+    let budget = pool.truth().iter().sum::<f64>() / pool.len() as f64 * 12.0;
     for fault_seed in [11u64, 97] {
         let mut rng = Pcg32::new(0xB4D6, 0);
         let mut col = Collector::new(&prob, rng.derive_str("collector"));

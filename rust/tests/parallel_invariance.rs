@@ -82,8 +82,8 @@ fn pool_generation_is_thread_count_invariant() {
     for t in SWEEP {
         let got = with_threads(t, || Pool::generate_par(&prob, 150, 0x9A11, t));
         assert_eq!(reference.configs, got.configs, "configs diverged at {t} threads");
-        assert_eq!(reference.truth, got.truth, "truth diverged at {t} threads");
-        assert_eq!(reference.best_idx, got.best_idx, "best_idx diverged at {t} threads");
+        assert_eq!(reference.truth(), got.truth(), "truth diverged at {t} threads");
+        assert_eq!(reference.best_idx(), got.best_idx(), "best_idx diverged at {t} threads");
     }
 }
 

@@ -1,0 +1,143 @@
+//! Lazy-pool equivalence pins for the million-config pool redesign.
+//!
+//! A lazy pool materializes only the feature/prediction side of the
+//! candidate set; ground truth is simulated on demand and memoized.
+//! Tuner sessions never read pool truth on their happy path (they
+//! measure through the `Collector`), so running any algorithm on a
+//! lazy pool must be *bit-identical* to running it on the eagerly
+//! measured pool built from the same seed — same candidate stream,
+//! same measured trajectory, same searcher pick, same accounting.
+//! These tests pin that for all seven registered session tuners at
+//! the paper's pool size, and check that the on-demand truth cache
+//! stays proportional to what was actually asked for.
+
+use std::sync::Arc;
+
+use ceal::config::WorkflowId;
+use ceal::coordinator::historical_samples;
+use ceal::sim::Objective;
+use ceal::surrogate::Scorer;
+use ceal::tuner::{
+    ActiveLearning, Alph, Ceal, CealParams, Geist, Pool, Problem, RandomSampling, Tuner,
+    TunerOutput, LAZY_POOL_MIN, POOL_SIZE,
+};
+use ceal::util::rng::Pcg32;
+
+/// Bit-identity on everything a session run reports: the measured
+/// trajectory (indices and values), the searcher pick, cost
+/// accounting, and the trained model.
+fn assert_outputs_identical(label: &str, eager: &TunerOutput, lazy: &TunerOutput) {
+    assert_eq!(
+        eager.measured, lazy.measured,
+        "{label}: measured trajectories diverge"
+    );
+    assert_eq!(eager.best_idx, lazy.best_idx, "{label}: searcher picks diverge");
+    assert_eq!(
+        eager.collection_cost.to_bits(),
+        lazy.collection_cost.to_bits(),
+        "{label}: collection cost diverges"
+    );
+    assert_eq!(eager.workflow_runs, lazy.workflow_runs, "{label}: run counts diverge");
+    assert_eq!(eager.model, lazy.model, "{label}: final models diverge");
+}
+
+/// The seven registered session algorithms, in roster order.
+fn roster(prob: &Problem, seed: u64) -> Vec<(&'static str, Box<dyn Tuner>)> {
+    let hist = Arc::new(historical_samples(prob, 60, seed ^ 0x415));
+    vec![
+        ("RS", Box::new(RandomSampling) as Box<dyn Tuner>),
+        ("AL", Box::new(ActiveLearning::default())),
+        ("GEIST", Box::new(Geist::default())),
+        ("CEAL", Box::new(Ceal::new(CealParams::no_hist()))),
+        (
+            "CEAL+hist",
+            Box::new(Ceal::with_historical(
+                CealParams::with_hist(),
+                Arc::clone(&hist),
+            )),
+        ),
+        ("ALpH", Box::new(Alph::new(CealParams::no_hist()))),
+        (
+            "ALpH+hist",
+            Box::new(Alph::with_historical(CealParams::with_hist(), hist)),
+        ),
+    ]
+}
+
+/// Every algorithm, same RNG streams, eager vs lazy pool at the
+/// paper's pool size: bit-identical outputs, and the lazy truth cache
+/// holds only the cells this test itself asked for afterwards.
+#[test]
+fn lazy_pool_trajectories_match_eager_for_every_algorithm() {
+    let prob = Problem::new(WorkflowId::LV, Objective::CompTime);
+    let seed = 0x1A2B;
+    let eager = Pool::generate(&prob, POOL_SIZE, seed);
+    let lazy = Pool::generate_lazy(&prob, POOL_SIZE, seed);
+    assert!(!eager.is_lazy());
+    assert!(lazy.is_lazy());
+    assert!(lazy.truth_eager().is_none(), "lazy pool must not hold a truth vector");
+    // identical candidate stream: the truth side is the only difference
+    assert_eq!(eager.configs, lazy.configs, "candidate streams diverge");
+    assert_eq!(
+        eager.feats.workflow, lazy.feats.workflow,
+        "workflow features diverge"
+    );
+
+    let scorer = Scorer::Native;
+    let m = 20;
+    let tuners = roster(&prob, seed);
+    let n_tuners = tuners.len();
+    for (stream, (name, tuner)) in tuners.into_iter().enumerate() {
+        let mut r_eager = Pcg32::new(0xE4A1, stream as u64);
+        let mut r_lazy = Pcg32::new(0xE4A1, stream as u64);
+        let on_eager = tuner.run(&prob, &eager, &scorer, m, &mut r_eager);
+        let on_lazy = tuner.run(&prob, &lazy, &scorer, m, &mut r_lazy);
+        assert_outputs_identical(name, &on_eager, &on_lazy);
+        // on-demand truth agrees bitwise with the eager measurement
+        assert_eq!(
+            eager.truth_of(on_eager.best_idx).to_bits(),
+            lazy.truth_of(on_lazy.best_idx).to_bits(),
+            "{name}: lazy ground truth diverges from eager"
+        );
+    }
+    // nothing beyond the truth_of() probes above was ever simulated:
+    // the sessions themselves never touched pool truth
+    assert!(
+        lazy.lazy_truth_count() <= n_tuners,
+        "lazy cache grew past the {} explicit probes: {}",
+        n_tuners,
+        lazy.lazy_truth_count()
+    );
+}
+
+/// End-to-end smoke above the auto-lazy threshold: a pool too large to
+/// measure eagerly in a test still tunes, the searcher crosses the
+/// quantized scoring path (pool len > QUANTIZE_MIN_ROWS), and memory
+/// stays on the feature/prediction side — no truth vector, and only
+/// the probed cells in the cache.
+#[test]
+fn large_lazy_pool_tunes_without_materializing_truth() {
+    let prob = Problem::new(WorkflowId::LV, Objective::CompTime);
+    let pool = Pool::generate_lazy(&prob, LAZY_POOL_MIN, 0xB16);
+    assert_eq!(pool.len(), LAZY_POOL_MIN);
+    assert!(pool.is_lazy());
+
+    let mut rng = Pcg32::new(0xB16, 1);
+    let out = Ceal::new(CealParams::no_hist()).run(&prob, &pool, &Scorer::Native, 12, &mut rng);
+    assert!(out.best_idx < pool.len());
+    assert!(out.workflow_runs > 0 && out.workflow_runs <= 12);
+    assert!(out.measured.len() <= 12);
+
+    // the run itself left the truth side untouched; one probe fills
+    // exactly one cell
+    assert_eq!(pool.lazy_truth_count(), 0, "tuning must not force ground truth");
+    let probed = pool.truth_of(out.best_idx);
+    assert!(probed.is_finite() && probed > 0.0);
+    assert_eq!(pool.lazy_truth_count(), 1);
+
+    // memory model: the lazy pool's footprint is dominated by configs
+    // and features, far below what an eager truth vector would add at
+    // this size (accounting sanity, not an allocator measurement)
+    let bytes = pool.approx_bytes();
+    assert!(bytes > 0);
+}

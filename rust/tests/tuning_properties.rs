@@ -85,7 +85,7 @@ fn pool_invariants() {
             )?;
         }
         let best = a.best_value();
-        assert_prop(a.truth.iter().all(|&v| v >= best), "best_value not minimal")
+        assert_prop(a.truth().iter().all(|&v| v >= best), "best_value not minimal")
     });
 }
 
@@ -134,8 +134,8 @@ fn pool_parallel_truth_matches_serial() {
         let threads = 2 + rng.gen_range(6) as usize;
         let par = Pool::generate_par(&prob, n, seed, threads);
         assert_prop(serial.configs == par.configs, "configs diverged")?;
-        assert_prop(serial.truth == par.truth, "truth diverged")?;
-        assert_prop(serial.best_idx == par.best_idx, "best_idx diverged")
+        assert_prop(serial.truth() == par.truth(), "truth diverged")?;
+        assert_prop(serial.best_idx() == par.best_idx(), "best_idx diverged")
     });
 }
 
