@@ -10,7 +10,7 @@
 //! the row-at-a-time path.
 
 use ceal::config::F_MAX;
-use ceal::gbt::{train_log, train_log_exact, GbtParams};
+use ceal::gbt::{train_log, train_log_binned, train_log_exact, BinnedDataset, GbtParams};
 use ceal::util::bench::Bencher;
 use ceal::util::rng::Pcg32;
 
@@ -83,4 +83,15 @@ fn main() {
             });
         });
     }
+
+    // Incremental-refit row: the dataset is binned once (outside the
+    // timed row, as `IncrementalTrainer` retains it across a session's
+    // refits) and each iteration pays only the training sweep —
+    // against `gbt/train_log/n2000`, the gap is the per-refit
+    // sort+bin cost the amortization removes.
+    let params = GbtParams::default();
+    let binned = BinnedDataset::build(&sx, 7, params.n_bins);
+    b.bench_items("gbt/train_log/n2000_incr", 2000.0, || {
+        train_log_binned(&binned, &sy, 7, &params)
+    });
 }

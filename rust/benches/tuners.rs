@@ -128,6 +128,24 @@ fn main() {
         let _ = std::fs::remove_dir_all(&dir);
     }
 
+    // Large-pool amortized cell: a full CEAL run at pool 1e5 (lazy
+    // candidate generation, no materialized truth).  Each iteration's
+    // selection re-ranks into the pool-resident codes and each refit
+    // extends the session's binned dataset, so this row tracks the
+    // end-to-end payoff of the amortized refit path at the scale it
+    // was built for.
+    {
+        let big_prob = Problem::new(WorkflowId::LV, Objective::CompTime);
+        let big_pool = Pool::generate_lazy(&big_prob, 100_000, 0xCEA1);
+        let tuner = Ceal::new(CealParams::no_hist());
+        let mut rep = 0u64;
+        b.bench("tuner/CEAL/LV_m30_pool100000_amortized", || {
+            rep += 1;
+            let mut rng = Pcg32::new(0xFA57 ^ rep, 0);
+            tuner.run(&big_prob, &big_pool, &scorer, 30, &mut rng)
+        });
+    }
+
     // Registry-added scenario cells (CEAL vs RS) so new-workflow wiring
     // shows up in every bench run: the CH5 deep chain and DM4 diamond.
     for id in [WorkflowId::CH5, WorkflowId::DM4] {

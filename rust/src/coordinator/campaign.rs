@@ -438,8 +438,13 @@ fn run_rep(
     let (recalls, mdape_all, mdape_top2, norm_best) = match pool.truth_eager() {
         Some(truth) => {
             // models are log-space: exponentiate to real-scale times
-            let preds =
-                crate::tuner::common::predict_times(&out.model, &pool.feats.workflow, scorer);
+            // (scored through the pool's resident code cache, so a
+            // multi-rep campaign codes the pool once, not per rep)
+            let preds: Vec<f64> = scorer
+                .score_view(&out.model, pool.feats.workflow_view())
+                .into_iter()
+                .map(f64::exp)
+                .collect();
             (
                 (1..=10).map(|n| recall_score(n, &preds, truth)).collect(),
                 mdape(truth, &preds),

@@ -195,6 +195,19 @@ impl PoolCache {
         Some(slot.hits.load(Ordering::Relaxed))
     }
 
+    /// Total cache hits summed over every resident cell (the CLI's
+    /// end-of-run observability line; per-key counts via
+    /// [`hit_count`](Self::hit_count)).
+    pub fn total_hits(&self) -> usize {
+        self.map
+            .lock()
+            .unwrap()
+            .values()
+            .filter(|s| s.pool.get().is_some())
+            .map(|s| s.hits.load(Ordering::Relaxed))
+            .sum()
+    }
+
     /// Number of distinct cells generated so far.
     pub fn len(&self) -> usize {
         self.map

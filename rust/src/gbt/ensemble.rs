@@ -10,6 +10,9 @@
 //! Padding conventions: unused trees carry `thr = +inf`, `leaves = 0`;
 //! the ensemble bias is folded into tree 0's leaves at flatten time.
 
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
 use crate::config::F_MAX;
 use crate::util::parallel;
 
@@ -325,12 +328,180 @@ impl FlatEnsemble {
     }
 }
 
-/// Column-major pool feature codes: `u8` when every column has at
-/// most 255 candidate cuts, `u16` otherwise (node counts cap cuts at
-/// `TREES_MAX * DEPTH_MAX = 384`, so `u16` always suffices).
+/// Column-major pool feature codes.  Ensemble-owned grids (`build`)
+/// need `u8` or `u16` (node counts cap cuts at `TREES_MAX * DEPTH_MAX
+/// = 384`); pool-resident grids ([`PoolCodes`]) rank against every
+/// distinct column value, so a `u32` lane covers pools whose columns
+/// exceed 65 535 uniques.
 enum Codes {
     U8(Vec<u8>),
     U16(Vec<u16>),
+    U32(Vec<u32>),
+}
+
+impl Codes {
+    fn byte_len(&self) -> usize {
+        match self {
+            Codes::U8(v) => v.len(),
+            Codes::U16(v) => v.len() * 2,
+            Codes::U32(v) => v.len() * 4,
+        }
+    }
+}
+
+/// Process-lifetime amortization counters: how often the pool was
+/// coded from scratch, how often a refit only re-ranked thresholds
+/// into an existing grid, how often the legacy full `build` ran, and
+/// how many session refits were skipped by the training-set
+/// fingerprint gate.  Printed by `ceal tune` / `ceal info` and
+/// asserted by the CI amortization cell.
+static POOL_CODE_BUILDS: AtomicU64 = AtomicU64::new(0);
+static QUANT_RERANKS: AtomicU64 = AtomicU64::new(0);
+static QUANT_FULL_BUILDS: AtomicU64 = AtomicU64::new(0);
+static REFIT_SKIPS: AtomicU64 = AtomicU64::new(0);
+
+/// Snapshot of the process-wide amortization counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct AmortCounters {
+    /// Full O(pool · F) [`PoolCodes::build`] passes.
+    pub pool_code_builds: u64,
+    /// O(trees · depth · log uniques) [`QuantizedEnsemble::rerank`]s.
+    pub quant_reranks: u64,
+    /// Legacy per-call [`QuantizedEnsemble::build`]s (O(pool · used)).
+    pub quant_full_builds: u64,
+    /// Session refits skipped by the training-set fingerprint gate.
+    pub refit_skips: u64,
+}
+
+/// Read the process-wide amortization counters.
+pub fn amortization_counters() -> AmortCounters {
+    AmortCounters {
+        pool_code_builds: POOL_CODE_BUILDS.load(Ordering::Relaxed),
+        quant_reranks: QUANT_RERANKS.load(Ordering::Relaxed),
+        quant_full_builds: QUANT_FULL_BUILDS.load(Ordering::Relaxed),
+        refit_skips: REFIT_SKIPS.load(Ordering::Relaxed),
+    }
+}
+
+/// Count one fingerprint-gated refit skip (see `gbt::IncrementalTrainer`).
+pub(crate) fn note_refit_skip() {
+    REFIT_SKIPS.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Pool-resident feature codes: every feature column of a candidate
+/// pool ranked once against its own sorted distinct values, so that
+/// *any* ensemble refit can be quantized against the pool by merely
+/// re-ranking its thresholds into the fixed grid
+/// ([`QuantizedEnsemble::rerank`]) — no O(pool) work per refit.
+///
+/// Per column the grid is the ascending list of distinct finite values
+/// (`f32::total_cmp` sort, numeric `==` dedup merges `-0.0`/`0.0`,
+/// NaNs excluded).  A row's code is `#{u : u < x} + 1` for finite `x`
+/// and `0` for NaN; a threshold's rank is `#{u : u ≤ thr}` (sentinel
+/// `uniques.len()` for NaN).  Then for every pool row
+///
+/// ```text
+/// x > thr  ⟺  code(x) > rank(thr)
+/// ```
+///
+/// — if `x > thr`, every unique ≤ thr is < x, so
+/// `#{u < x} ≥ #{u ≤ thr}`; if `x ≤ thr`, `x` itself is a unique
+/// counted by `≤ thr` but not by `< x`, so `code(x) ≤ rank(thr)`.  NaN
+/// rows code to 0 and fall left everywhere (as `NaN > thr` is false);
+/// NaN thresholds rank to the sentinel no code exceeds (as `x > NaN`
+/// is false).  Leaf selection after re-ranking is therefore identical
+/// to [`Ensemble::leaf_index`], bit for bit.
+///
+/// All `F_MAX` columns are coded (column-major, stride = `n_rows`) so
+/// node feature indices address code columns directly; one lane width
+/// serves the whole pool (`u8`/`u16`/`u32` by the largest per-column
+/// unique count).
+pub struct PoolCodes {
+    n_rows: usize,
+    /// Per feature column: ascending deduplicated finite values.
+    uniques: Vec<Vec<f32>>,
+    /// Column-major rank codes, `[F_MAX * n_rows]`.
+    codes: Codes,
+}
+
+impl PoolCodes {
+    /// Rank-code every feature column of `xs`.  O(pool · F · log pool)
+    /// — paid **once per (pool, scorer)**, not per refit.
+    pub fn build(xs: &[[f32; F_MAX]]) -> PoolCodes {
+        let n_rows = xs.len();
+        let uniques: Vec<Vec<f32>> = (0..F_MAX)
+            .map(|f| {
+                let mut vals: Vec<f32> =
+                    xs.iter().map(|row| row[f]).filter(|v| !v.is_nan()).collect();
+                vals.sort_unstable_by(f32::total_cmp);
+                vals.dedup();
+                vals
+            })
+            .collect();
+        let max_code = uniques.iter().map(Vec::len).max().unwrap_or(0);
+        // One coding task per column (chunk size = n_rows aligns each
+        // `for_each_chunk_mut` chunk with exactly one code column).
+        let width = parallel::width_for(n_rows.saturating_mul(F_MAX), PREDICT_PAR_ROWS);
+        macro_rules! code_lane {
+            ($ty:ty) => {{
+                let mut codes = vec![0 as $ty; F_MAX * n_rows];
+                parallel::for_each_chunk_mut(width, n_rows.max(1), &mut codes, |f, slice| {
+                    let u = &uniques[f];
+                    for (r, c) in slice.iter_mut().enumerate() {
+                        let x = xs[r][f];
+                        *c = if x.is_nan() {
+                            0
+                        } else {
+                            (u.partition_point(|&v| v < x) + 1) as $ty
+                        };
+                    }
+                });
+                codes
+            }};
+        }
+        let codes = if max_code <= u8::MAX as usize {
+            Codes::U8(code_lane!(u8))
+        } else if max_code <= u16::MAX as usize {
+            Codes::U16(code_lane!(u16))
+        } else {
+            Codes::U32(code_lane!(u32))
+        };
+        POOL_CODE_BUILDS.fetch_add(1, Ordering::Relaxed);
+        PoolCodes {
+            n_rows,
+            uniques,
+            codes,
+        }
+    }
+
+    /// Rank of threshold `thr` in column `f`'s grid: `#{u : u ≤ thr}`,
+    /// with the NaN sentinel `uniques.len()` that no code exceeds.
+    pub fn rank_of(&self, f: usize, thr: f32) -> u32 {
+        let u = &self.uniques[f];
+        if thr.is_nan() {
+            u.len() as u32
+        } else {
+            u.partition_point(|&v| v <= thr) as u32
+        }
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    /// Approximate resident bytes (code lanes + unique grids).
+    pub fn approx_bytes(&self) -> usize {
+        self.codes.byte_len() + self.uniques.iter().map(|u| u.len() * 4).sum::<usize>()
+    }
+}
+
+/// Where a [`QuantizedEnsemble`]'s code columns live: owned (built
+/// per call against the ensemble's own cut grid) or shared with a
+/// pool-resident [`PoolCodes`] (built once per pool, re-used by every
+/// refit's re-rank).
+enum CodeStore {
+    Owned(Codes),
+    Shared(Arc<PoolCodes>),
 }
 
 /// A pool-quantized view of one [`Ensemble`]: the same binning idea as
@@ -338,14 +509,18 @@ enum Codes {
 /// cuts strictly below its value) applied to *scoring* instead of
 /// training.
 ///
-/// `build` pre-codes the pool's feature columns once against the
-/// ensemble's own thresholds — sorted, deduplicated cut lists per used
-/// feature — after which tree traversal is pure integer compares over
-/// flat column-major code arrays (`codes[col * n_rows + row]`), with
-/// thresholds stored as cut ranks and leaf tables as the ensemble's
-/// flat f32 arrays.  One `u8`/`u16` lane per row per used feature is
-/// cache-resident at 10^6 rows where the dense `[f32; F_MAX]` rows are
-/// not, and the inner loop (`code > cut_rank`) auto-vectorizes.
+/// Two construction routes share one traversal kernel: `build`
+/// pre-codes the pool's feature columns against the ensemble's own
+/// thresholds (sorted, deduplicated cut lists per used feature), while
+/// `rerank` borrows a pool-resident [`PoolCodes`] grid and only ranks
+/// the ensemble's thresholds into it — O(trees · depth · log uniques)
+/// per refit instead of O(pool · F).  Either way tree traversal is
+/// pure integer compares over flat column-major code arrays
+/// (`codes[col * n_rows + row]`), with thresholds stored as cut ranks
+/// and leaf tables as the ensemble's flat f32 arrays.  One narrow
+/// integer lane per row per coded feature is cache-resident at 10^6
+/// rows where the dense `[f32; F_MAX]` rows are not, and the inner
+/// loop (`code > cut_rank`) auto-vectorizes.
 ///
 /// ## Exactness contract
 ///
@@ -366,20 +541,24 @@ pub struct QuantizedEnsemble {
     depth: usize,
     n_trees: usize,
     bias: f32,
-    codes: Codes,
+    codes: CodeStore,
     /// Per-node code-column index, `[n_trees * depth]`.
     node_col: Vec<u32>,
     /// Per-node cut rank (the quantized threshold), `[n_trees * depth]`.
-    node_cut: Vec<u16>,
+    node_cut: Vec<u32>,
     /// Flat leaf tables, `[n_trees * 2^depth]` (copied from the ensemble).
     leaves: Vec<f32>,
 }
 
 impl QuantizedEnsemble {
     /// Pre-code `xs` against `ens`'s thresholds.  O(n · used_features ·
-    /// log cuts) — done once per refit (per selection pass), then every
-    /// traversal touches only the code columns.
+    /// log cuts) — the from-scratch reference path.  On the refit loop
+    /// prefer [`Self::rerank`] against a cached [`PoolCodes`]: the
+    /// pool is coded **once per (pool, scorer)** and each refit pays
+    /// only O(trees · depth · log uniques) to re-rank its thresholds,
+    /// with bitwise-identical predictions.
     pub fn build(ens: &Ensemble, xs: &[[f32; F_MAX]]) -> QuantizedEnsemble {
+        QUANT_FULL_BUILDS.fetch_add(1, Ordering::Relaxed);
         let n_rows = xs.len();
         let n_trees = ens.n_trees();
         let n_nodes = n_trees * ens.depth;
@@ -406,14 +585,14 @@ impl QuantizedEnsemble {
             .iter()
             .map(|f| used.binary_search(f).expect("used feature") as u32)
             .collect();
-        let node_cut: Vec<u16> = (0..n_nodes)
+        let node_cut: Vec<u32> = (0..n_nodes)
             .map(|i| {
                 let cuts = &cuts_per_col[node_col[i] as usize];
                 let thr = ens.thr[i];
                 if thr.is_nan() {
-                    cuts.len() as u16 // `x > NaN` is never true
+                    cuts.len() as u32 // `x > NaN` is never true
                 } else {
-                    cuts.iter().position(|&c| c == thr).expect("cut present") as u16
+                    cuts.iter().position(|&c| c == thr).expect("cut present") as u32
                 }
             })
             .collect();
@@ -450,7 +629,34 @@ impl QuantizedEnsemble {
             depth: ens.depth,
             n_trees,
             bias: ens.bias,
-            codes,
+            codes: CodeStore::Owned(codes),
+            node_col,
+            node_cut,
+            leaves: ens.leaves.clone(),
+        }
+    }
+
+    /// Quantize `ens` against an existing pool grid: re-rank every
+    /// node threshold into `pool`'s per-column unique arrays.
+    /// O(trees · depth · log uniques) — **no O(pool) work** — and the
+    /// [`PoolCodes`] exactness contract makes predictions bitwise
+    /// equal to [`Self::build`] over the same rows.
+    pub fn rerank(ens: &Ensemble, pool: &Arc<PoolCodes>) -> QuantizedEnsemble {
+        let n_trees = ens.n_trees();
+        let n_nodes = n_trees * ens.depth;
+        // Shared grids code all F_MAX columns, so node columns are the
+        // raw feature indices — no used-feature compaction needed.
+        let node_col: Vec<u32> = ens.feat[..n_nodes].to_vec();
+        let node_cut: Vec<u32> = (0..n_nodes)
+            .map(|i| pool.rank_of(ens.feat[i] as usize, ens.thr[i]))
+            .collect();
+        QUANT_RERANKS.fetch_add(1, Ordering::Relaxed);
+        QuantizedEnsemble {
+            n_rows: pool.n_rows,
+            depth: ens.depth,
+            n_trees,
+            bias: ens.bias,
+            codes: CodeStore::Shared(Arc::clone(pool)),
             node_col,
             node_cut,
             leaves: ens.leaves.clone(),
@@ -462,15 +668,16 @@ impl QuantizedEnsemble {
     }
 
     /// Approximate resident bytes of the coded pool (for cache
-    /// accounting).
+    /// accounting).  Shared pool grids are accounted once on the cache
+    /// side ([`PoolCodes::approx_bytes`]), not per re-ranked view.
     pub fn approx_bytes(&self) -> usize {
         let code_bytes = match &self.codes {
-            Codes::U8(v) => v.len(),
-            Codes::U16(v) => v.len() * 2,
+            CodeStore::Owned(codes) => codes.byte_len(),
+            CodeStore::Shared(_) => 0,
         };
         code_bytes
             + self.node_col.len() * 4
-            + self.node_cut.len() * 2
+            + self.node_cut.len() * 4
             + self.leaves.len() * 4
     }
 
@@ -497,9 +704,14 @@ impl QuantizedEnsemble {
     }
 
     fn predict_block(&self, start: usize, acc_all: &mut [f32]) {
-        match &self.codes {
+        let codes = match &self.codes {
+            CodeStore::Owned(codes) => codes,
+            CodeStore::Shared(pool) => &pool.codes,
+        };
+        match codes {
             Codes::U8(c) => self.predict_block_t(c, |r| r as u8, start, acc_all),
-            Codes::U16(c) => self.predict_block_t(c, |r| r, start, acc_all),
+            Codes::U16(c) => self.predict_block_t(c, |r| r as u16, start, acc_all),
+            Codes::U32(c) => self.predict_block_t(c, |r| r, start, acc_all),
         }
     }
 
@@ -510,7 +722,7 @@ impl QuantizedEnsemble {
     fn predict_block_t<T: Copy + Ord>(
         &self,
         codes: &[T],
-        conv: impl Fn(u16) -> T,
+        conv: impl Fn(u32) -> T,
         start: usize,
         acc_all: &mut [f32],
     ) {
@@ -776,12 +988,118 @@ mod tests {
         };
         let xs = quantize_test_rows(&mut rng, &e, 200);
         let q = QuantizedEnsemble::build(&e, &xs);
-        assert!(matches!(q.codes, Codes::U16(_)));
+        assert!(matches!(q.codes, CodeStore::Owned(Codes::U16(_))));
         let want = e.predict_batch(&xs);
         let got = q.predict_all();
         for i in 0..want.len() {
             assert_eq!(got[i].to_bits(), want[i].to_bits(), "row {i}");
         }
+        // the same ensemble re-ranked against a pool grid stays bitwise
+        let pool = Arc::new(PoolCodes::build(&xs));
+        let r = QuantizedEnsemble::rerank(&e, &pool);
+        let rr = r.predict_all();
+        for i in 0..want.len() {
+            assert_eq!(rr[i].to_bits(), want[i].to_bits(), "rerank row {i}");
+        }
+    }
+
+    /// Re-ranked quantization ≡ full build ≡ dense batch, bitwise —
+    /// over adversarial rows (exact-threshold hits, NaN features,
+    /// ±0.0) and a NaN-threshold node, across many ensembles sharing
+    /// ONE pool grid (the amortized refit shape).
+    #[test]
+    fn reranked_matches_full_build_bitwise() {
+        let mut rng = Pcg32::new(909, 3);
+        let probe = random_ensemble(&mut rng, 8, 3, 6);
+        let xs = quantize_test_rows(&mut rng, &probe, 333);
+        let pool = Arc::new(PoolCodes::build(&xs));
+        for (trees, depth) in [(1usize, 1usize), (8, 3), (48, 4), (64, 6)] {
+            let mut e = random_ensemble(&mut rng, trees, depth, 6);
+            // exercise the NaN-threshold sentinel rank
+            e.thr[0] = f32::NAN;
+            // and thresholds that collide exactly with pool values
+            if e.thr.len() > 1 {
+                e.thr[1] = xs[7][e.feat[1] as usize];
+            }
+            let want = e.predict_batch(&xs);
+            let full = QuantizedEnsemble::build(&e, &xs).predict_all();
+            let rer = QuantizedEnsemble::rerank(&e, &pool).predict_all();
+            for i in 0..want.len() {
+                assert_eq!(
+                    full[i].to_bits(),
+                    want[i].to_bits(),
+                    "trees={trees} depth={depth} full row {i}"
+                );
+                assert_eq!(
+                    rer[i].to_bits(),
+                    want[i].to_bits(),
+                    "trees={trees} depth={depth} rerank row {i}"
+                );
+            }
+        }
+    }
+
+    /// `x > thr ⟺ code > rank` for the pool grid, probed directly on
+    /// boundary values: exact hits, just-below/above, NaN, ±0.0.
+    #[test]
+    fn pool_codes_rank_predicate_exact() {
+        let vals = [0.5f32, -0.0, 1.0, 0.5, f32::NAN, 0.0, -2.0, 1.5];
+        let xs: Vec<[f32; F_MAX]> = vals
+            .iter()
+            .map(|&v| {
+                let mut x = [0f32; F_MAX];
+                x[0] = v;
+                x
+            })
+            .collect();
+        let pool = PoolCodes::build(&xs);
+        let codes: Vec<u32> = xs
+            .iter()
+            .map(|row| {
+                let x = row[0];
+                if x.is_nan() {
+                    0
+                } else {
+                    (pool.uniques[0].partition_point(|&u| u < x) + 1) as u32
+                }
+            })
+            .collect();
+        for &thr in &[-2.0f32, -0.5, -0.0, 0.0, 0.25, 0.5, 1.0, 1.25, 1.5, 2.0, f32::NAN] {
+            let rank = pool.rank_of(0, thr);
+            for (i, &x) in vals.iter().enumerate() {
+                assert_eq!(
+                    x > thr,
+                    codes[i] > rank,
+                    "x={x} thr={thr}: code {} rank {rank}",
+                    codes[i]
+                );
+            }
+        }
+    }
+
+    /// Pools whose columns carry more than 65 535 distinct values
+    /// force the u32 lane; predictions stay bitwise-equal.
+    #[test]
+    fn pool_codes_u32_lane_when_uniques_exceed_u16() {
+        let n = u16::MAX as usize + 10;
+        let xs: Vec<[f32; F_MAX]> = (0..n)
+            .map(|i| {
+                let mut x = [0f32; F_MAX];
+                x[0] = i as f32; // distinct up to 2^24: all unique here
+                x[1] = (i % 7) as f32;
+                x
+            })
+            .collect();
+        let pool = Arc::new(PoolCodes::build(&xs));
+        assert!(matches!(pool.codes, Codes::U32(_)));
+        let mut rng = Pcg32::new(31, 7);
+        let e = random_ensemble(&mut rng, 8, 3, 2);
+        let want = e.predict_batch(&xs);
+        let got = QuantizedEnsemble::rerank(&e, &pool).predict_all();
+        for i in (0..n).step_by(997) {
+            assert_eq!(got[i].to_bits(), want[i].to_bits(), "row {i}");
+        }
+        assert_eq!(got.len(), want.len());
     }
 
     #[test]

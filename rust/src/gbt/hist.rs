@@ -1,13 +1,22 @@
 //! Feature quantization for histogram-binned GBT training.
 //!
-//! Each feature column is quantized **once** per training call into
-//! `u8` bin codes against its sorted candidate-threshold list.  The
-//! code of a sample is the number of thresholds strictly below its
-//! value, so for candidate cut `k` the right child is exactly
-//! `{i : code(i) > k}` — bit-for-bit the same partition the exact
-//! trainer derives from `x > thr`.  Split search then needs one
-//! O(n·F) histogram pass per tree level plus an O(leaves·F·bins)
-//! scan, instead of rescanning all n samples per candidate.
+//! Each feature column is quantized into `u8` bin codes against its
+//! sorted candidate-threshold list.  The code of a sample is the
+//! number of thresholds strictly below its value, so for candidate cut
+//! `k` the right child is exactly `{i : code(i) > k}` — bit-for-bit
+//! the same partition the exact trainer derives from `x > thr`.
+//! Split search then needs one O(n·F) histogram pass per tree level
+//! plus an O(leaves·F·bins) scan, instead of rescanning all n samples
+//! per candidate.
+//!
+//! A dataset quantizes once per *session*, not once per training call:
+//! [`BinnedDataset::push_rows`] appends fresh measurements by merging
+//! their values into the per-feature sorted-unique arrays, re-deriving
+//! the candidate thresholds from the merged uniques, and re-coding a
+//! column **only when its thresholds actually changed** — the exact
+//! drift criterion, so the incremental dataset is always bitwise equal
+//! to a from-scratch [`BinnedDataset::build`] of the concatenated rows
+//! (pinned by property tests below).
 
 use crate::config::F_MAX;
 use crate::util::parallel;
@@ -31,6 +40,14 @@ pub fn candidate_thresholds(xs: &[[f32; F_MAX]], f: usize, n_bins: usize) -> Vec
     let mut vals: Vec<f32> = xs.iter().map(|x| x[f]).collect();
     vals.sort_by(|a, b| a.partial_cmp(b).expect("NaN feature"));
     vals.dedup();
+    thresholds_from_uniques(&vals, n_bins)
+}
+
+/// The threshold rule over an already sorted-and-deduplicated value
+/// array — the shared tail of [`candidate_thresholds`] and the
+/// incremental [`BinnedDataset::push_rows`] path (which maintains the
+/// unique arrays across appends instead of re-sorting every call).
+pub(crate) fn thresholds_from_uniques(vals: &[f32], n_bins: usize) -> Vec<f32> {
     if vals.len() < 2 {
         return Vec::new();
     }
@@ -47,16 +64,27 @@ pub fn candidate_thresholds(xs: &[[f32; F_MAX]], f: usize, n_bins: usize) -> Vec
     out
 }
 
-/// A dataset quantized once for histogram training.
+/// A dataset quantized once per session, extended in place as fresh
+/// measurements arrive ([`Self::push_rows`]).
 pub struct BinnedDataset {
     pub n_rows: usize,
     pub n_features: usize,
+    /// The bin budget the thresholds were derived under (push_rows
+    /// re-derives with the same budget).
+    bin_budget: usize,
     /// Sorted candidate thresholds per feature; cut `k` sends a sample
     /// right iff `x > thresholds[f][k]`.
     pub thresholds: Vec<Vec<f32>>,
-    /// Feature-major bin codes:
-    /// `codes[f*n_rows + i] = #{k : xs[i][f] > thresholds[f][k]}`.
-    codes: Vec<u8>,
+    /// Per-feature sorted distinct values the thresholds derive from
+    /// (stable first-occurrence representatives among numeric ties,
+    /// matching stable-sort + dedup of the raw column).
+    uniques: Vec<Vec<f32>>,
+    /// Per-feature raw value columns, kept for full column re-codes
+    /// when an append shifts that feature's threshold grid.
+    raw: Vec<Vec<f32>>,
+    /// Per-feature bin codes, one per row:
+    /// `codes[f][i] = #{k : xs[i][f] > thresholds[f][k]}`.
+    codes: Vec<Vec<u8>>,
     /// Per-feature offset into a per-leaf histogram row; feature `f`
     /// owns slots `offset[f] .. offset[f] + n_bins(f)`.
     offsets: Vec<usize>,
@@ -64,51 +92,136 @@ pub struct BinnedDataset {
     pub total_bins: usize,
 }
 
+/// Merge a batch of (stable-sorted, deduplicated) new values into an
+/// existing unique array, keeping the *existing* representative on
+/// numeric ties — exactly what stable-sort + dedup of the concatenated
+/// column produces, since earlier rows sort ahead of later equals.
+fn merge_uniques(existing: &[f32], new_vals: &[f32]) -> Vec<f32> {
+    let mut out = Vec::with_capacity(existing.len() + new_vals.len());
+    let (mut i, mut j) = (0, 0);
+    while i < existing.len() && j < new_vals.len() {
+        if existing[i] <= new_vals[j] {
+            if existing[i] == new_vals[j] {
+                j += 1; // numeric tie: the existing representative wins
+            }
+            out.push(existing[i]);
+            i += 1;
+        } else {
+            out.push(new_vals[j]);
+            j += 1;
+        }
+    }
+    out.extend_from_slice(&existing[i..]);
+    out.extend_from_slice(&new_vals[j..]);
+    out
+}
+
 impl BinnedDataset {
     /// Quantize the first `n_features` columns of `xs` against at most
     /// `n_bins` candidate thresholds per feature.
     ///
     /// Features quantize independently, so the pass forks one task per
-    /// feature across the worker pool (each task sorts its candidate
-    /// quantiles and writes its own `codes[f*n .. (f+1)*n]` column —
-    /// single writer per slot, bit-identical for any worker count).
+    /// feature across the worker pool (each task sorts its own unique
+    /// array and writes its own code column — single writer per slot,
+    /// bit-identical for any worker count).
     pub fn build(xs: &[[f32; F_MAX]], n_features: usize, n_bins: usize) -> BinnedDataset {
         let n = xs.len();
         let width = parallel::width_for(n * n_features, PAR_MIN_CELLS);
-        let mut codes = vec![0u8; n_features * n];
-        let cp = parallel::SendPtr::new(codes.as_mut_ptr());
-        let thresholds: Vec<Vec<f32>> = parallel::map_indexed(width, n_features, |f| {
-            let thr = candidate_thresholds(xs, f, n_bins);
-            if !thr.is_empty() {
-                // SAFETY: column f is exclusive to this task.
-                let col = unsafe { std::slice::from_raw_parts_mut(cp.get().add(f * n), n) };
-                for (c, x) in col.iter_mut().zip(xs) {
-                    let v = x[f];
-                    *c = thr.partition_point(|&t| v > t) as u8;
-                }
-            }
-            thr
+        let cols = parallel::map_indexed(width, n_features, |f| {
+            let raw: Vec<f32> = xs.iter().map(|x| x[f]).collect();
+            let mut uniq = raw.clone();
+            uniq.sort_by(|a, b| a.partial_cmp(b).expect("NaN feature"));
+            uniq.dedup();
+            let thr = thresholds_from_uniques(&uniq, n_bins);
+            let codes: Vec<u8> = raw
+                .iter()
+                .map(|&v| thr.partition_point(|&t| v > t) as u8)
+                .collect();
+            (raw, uniq, thr, codes)
         });
-        let mut offsets = Vec::with_capacity(n_features);
-        let mut total_bins = 0usize;
-        for thr in &thresholds {
-            offsets.push(total_bins);
-            total_bins += thr.len() + 1;
-        }
-        BinnedDataset {
+        let mut b = BinnedDataset {
             n_rows: n,
             n_features,
-            thresholds,
-            codes,
-            offsets,
-            total_bins,
+            bin_budget: n_bins,
+            thresholds: Vec::with_capacity(n_features),
+            uniques: Vec::with_capacity(n_features),
+            raw: Vec::with_capacity(n_features),
+            codes: Vec::with_capacity(n_features),
+            offsets: Vec::new(),
+            total_bins: 0,
+        };
+        for (raw, uniq, thr, codes) in cols {
+            b.raw.push(raw);
+            b.uniques.push(uniq);
+            b.thresholds.push(thr);
+            b.codes.push(codes);
+        }
+        b.rebuild_offsets();
+        b
+    }
+
+    /// Append rows, keeping the dataset **bitwise equal** to a
+    /// from-scratch [`Self::build`] of the concatenated rows:
+    ///
+    /// 1. merge the new values into each feature's sorted-unique array
+    ///    (O(uniques + new) per column, no full re-sort);
+    /// 2. re-derive that column's thresholds from the merged uniques
+    ///    (the same rule `build` applies);
+    /// 3. if the thresholds are bit-identical to before, bin only the
+    ///    new rows; otherwise re-code the stored raw column once.
+    ///
+    /// Step 3 is the exact drift criterion — a column pays its O(n)
+    /// re-code only when its grid actually moved, and the result never
+    /// diverges from the reference.  Appends are session-sized (a few
+    /// rows against a few hundred), so the pass runs inline.
+    pub fn push_rows(&mut self, xs_new: &[[f32; F_MAX]]) {
+        if xs_new.is_empty() {
+            return;
+        }
+        for f in 0..self.n_features {
+            let mut fresh: Vec<f32> = xs_new.iter().map(|x| x[f]).collect();
+            fresh.sort_by(|a, b| a.partial_cmp(b).expect("NaN feature"));
+            fresh.dedup();
+            let merged = merge_uniques(&self.uniques[f], &fresh);
+            let thr = thresholds_from_uniques(&merged, self.bin_budget);
+            let unchanged = thr.len() == self.thresholds[f].len()
+                && thr
+                    .iter()
+                    .zip(&self.thresholds[f])
+                    .all(|(a, b)| a.to_bits() == b.to_bits());
+            self.raw[f].extend(xs_new.iter().map(|x| x[f]));
+            if unchanged {
+                self.codes[f].extend(
+                    xs_new
+                        .iter()
+                        .map(|x| thr.partition_point(|&t| x[f] > t) as u8),
+                );
+            } else {
+                let raw = &self.raw[f];
+                self.codes[f].clear();
+                self.codes[f]
+                    .extend(raw.iter().map(|&v| thr.partition_point(|&t| v > t) as u8));
+            }
+            self.uniques[f] = merged;
+            self.thresholds[f] = thr;
+        }
+        self.n_rows += xs_new.len();
+        self.rebuild_offsets();
+    }
+
+    fn rebuild_offsets(&mut self) {
+        self.offsets.clear();
+        self.total_bins = 0;
+        for thr in &self.thresholds {
+            self.offsets.push(self.total_bins);
+            self.total_bins += thr.len() + 1;
         }
     }
 
     /// Bin codes of feature `f`, one per row.
     #[inline]
     pub fn feature_codes(&self, f: usize) -> &[u8] {
-        &self.codes[f * self.n_rows..(f + 1) * self.n_rows]
+        &self.codes[f]
     }
 
     /// Number of histogram bins of feature `f` (thresholds + 1).
@@ -366,6 +479,110 @@ mod tests {
                 assert!((g - want_g).abs() < 1e-9, "leaf {l} feature {f}");
             }
         }
+    }
+
+    /// Bitwise structural equality of two datasets: thresholds, codes,
+    /// offsets, bin layout.
+    fn assert_binned_identical(a: &BinnedDataset, b: &BinnedDataset, label: &str) {
+        assert_eq!(a.n_rows, b.n_rows, "{label}: n_rows");
+        assert_eq!(a.total_bins, b.total_bins, "{label}: total_bins");
+        for f in 0..a.n_features {
+            assert_eq!(
+                a.thresholds[f].len(),
+                b.thresholds[f].len(),
+                "{label}: f={f} threshold count"
+            );
+            assert!(
+                a.thresholds[f]
+                    .iter()
+                    .zip(&b.thresholds[f])
+                    .all(|(x, y)| x.to_bits() == y.to_bits()),
+                "{label}: f={f} thresholds diverge"
+            );
+            assert_eq!(a.feature_codes(f), b.feature_codes(f), "{label}: f={f} codes");
+            assert_eq!(a.offset(f), b.offset(f), "{label}: f={f} offset");
+            assert!(
+                a.uniques[f]
+                    .iter()
+                    .zip(&b.uniques[f])
+                    .all(|(x, y)| x.to_bits() == y.to_bits())
+                    && a.uniques[f].len() == b.uniques[f].len(),
+                "{label}: f={f} uniques diverge"
+            );
+        }
+    }
+
+    /// Property pin: any append schedule of `push_rows` calls is
+    /// bitwise equal to one from-scratch `build` of the concatenation —
+    /// across random chunk sizes, duplicate values (quantized features
+    /// collide constantly), and several bin budgets.
+    #[test]
+    fn push_rows_matches_from_scratch_rebuild_bitwise() {
+        let mut rng = Pcg32::new(0x9135, 0);
+        for trial in 0..12u64 {
+            let n_bins = [4usize, 16, 32, 255][trial as usize % 4];
+            let nf = 3 + (trial as usize % 4);
+            // coarse value lattice → plenty of cross-batch duplicates
+            let row = |rng: &mut Pcg32| {
+                let mut x = [0f32; F_MAX];
+                for v in x.iter_mut().take(nf) {
+                    *v = (rng.gen_range(23) as f32) / 7.0 - 1.0;
+                }
+                x
+            };
+            let n0 = 1 + rng.gen_range(40) as usize;
+            let mut all: Vec<[f32; F_MAX]> = (0..n0).map(|_| row(&mut rng)).collect();
+            let mut inc = BinnedDataset::build(&all, nf, n_bins);
+            for _ in 0..5 {
+                let k = rng.gen_range(25) as usize; // may be 0: no-op append
+                let fresh: Vec<[f32; F_MAX]> = (0..k).map(|_| row(&mut rng)).collect();
+                inc.push_rows(&fresh);
+                all.extend_from_slice(&fresh);
+                let scratch = BinnedDataset::build(&all, nf, n_bins);
+                assert_binned_identical(&inc, &scratch, &format!("trial {trial} n={}", all.len()));
+            }
+        }
+    }
+
+    /// Appends that leave every grid unchanged (pure duplicates) take
+    /// the cheap append path; appends that move a grid re-code — either
+    /// way the reference equality holds, including ±0.0 ties.
+    #[test]
+    fn push_rows_duplicate_and_signed_zero_appends() {
+        let base: Vec<[f32; F_MAX]> = [0.0f32, 1.0, 2.0, 3.0, 1.0, 2.0]
+            .iter()
+            .map(|&v| {
+                let mut x = [0f32; F_MAX];
+                x[0] = v;
+                x[1] = -v;
+                x
+            })
+            .collect();
+        let mut inc = BinnedDataset::build(&base, 2, 8);
+        let mut all = base.clone();
+        // batch 1: pure duplicates (grids must not move)
+        let thr_before: Vec<u32> = inc.thresholds[0].iter().map(|t| t.to_bits()).collect();
+        let dup: Vec<[f32; F_MAX]> = all[1..3].to_vec();
+        inc.push_rows(&dup);
+        all.extend_from_slice(&dup);
+        let thr_after: Vec<u32> = inc.thresholds[0].iter().map(|t| t.to_bits()).collect();
+        assert_eq!(thr_before, thr_after, "duplicate append moved the grid");
+        assert_binned_identical(&inc, &BinnedDataset::build(&all, 2, 8), "dup batch");
+        // batch 2: -0.0 against an existing +0.0 (numeric tie: the
+        // existing representative must win, as stable sort+dedup does)
+        let mut z = [0f32; F_MAX];
+        z[0] = -0.0;
+        z[1] = 7.0;
+        inc.push_rows(&[z]);
+        all.push(z);
+        assert_binned_identical(&inc, &BinnedDataset::build(&all, 2, 8), "signed zero");
+        // batch 3: new extremes force a re-code of both columns
+        let mut e = [0f32; F_MAX];
+        e[0] = -5.0;
+        e[1] = 11.0;
+        inc.push_rows(&[e]);
+        all.push(e);
+        assert_binned_identical(&inc, &BinnedDataset::build(&all, 2, 8), "grid shift");
     }
 
     /// The per-feature parallel fill must be bit-identical to the

@@ -45,18 +45,44 @@
 //! At pool scale (≥ [`ensemble::QUANTIZE_MIN_ROWS`] rows) scoring
 //! additionally routes through [`ensemble::QuantizedEnsemble`]: the
 //! training-side binning idea applied to inference — pool features
-//! pre-coded once into flat `u8`/`u16` columns against the ensemble's
-//! own cut lists, thresholds as cut ranks, traversal as integer
-//! compares — with predictions bitwise equal to
+//! coded into flat `u8`/`u16`/`u32` columns, thresholds as cut ranks,
+//! traversal as integer compares — with predictions bitwise equal to
 //! `Ensemble::predict_batch`.
+//!
+//! ## Amortized refits
+//!
+//! Both sides of a tuning iteration amortize across the session:
+//!
+//! * **Selection** — [`ensemble::PoolCodes`] codes each pool feature
+//!   column *once per pool* by rank in its sorted-unique value array
+//!   (model-independent); each refit's `QuantizedEnsemble` is then
+//!   produced by [`ensemble::QuantizedEnsemble::rerank`], which only
+//!   re-ranks the new ensemble's thresholds into that fixed grid —
+//!   O(trees·depth·log uniques) instead of the O(pool·F) recode of
+//!   [`ensemble::QuantizedEnsemble::build`].  Exact because `x > thr`
+//!   is decided entirely by `rank(x)` vs `rank_of(thr)`.
+//! * **Training** — [`hist::BinnedDataset::push_rows`] extends a
+//!   session's binned dataset with the rows added since the last
+//!   refit (bitwise equal to rebuilding from the concatenation), and
+//!   [`train::IncrementalTrainer`] wraps it with a fingerprint gate
+//!   that returns the cached ensemble outright when the exact
+//!   training inputs are unchanged.  [`train_log_binned`] trains
+//!   straight from a retained dataset.
+//!
+//! [`ensemble::amortization_counters`] exposes process-wide counters
+//! (pool code builds, re-ranks, full quantized builds, refit skips)
+//! so tests and the CLI can assert the amortization actually holds.
 
 pub mod ensemble;
 pub mod hist;
 pub mod train;
 
 pub use ensemble::{
-    Ensemble, FlatEnsemble, QuantizedEnsemble, DEPTH_MAX, LEAVES_MAX, NEG_PRED, PREDICT_BLOCK,
-    PREDICT_SMALL, QUANTIZE_MIN_ROWS, TREES_MAX,
+    amortization_counters, AmortCounters, Ensemble, FlatEnsemble, PoolCodes, QuantizedEnsemble,
+    DEPTH_MAX, LEAVES_MAX, NEG_PRED, PREDICT_BLOCK, PREDICT_SMALL, QUANTIZE_MIN_ROWS, TREES_MAX,
 };
 pub use hist::BinnedDataset;
-pub use train::{train, train_exact, train_log, train_log_exact, GbtParams};
+pub use train::{
+    train, train_exact, train_log, train_log_binned, train_log_exact, GbtParams,
+    IncrementalTrainer,
+};

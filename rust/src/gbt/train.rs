@@ -107,8 +107,14 @@ fn ln_targets(y: &[f64]) -> Vec<f64> {
 /// bias and sample count when training should proceed.
 fn prepare(xs: &[[f32; F_MAX]], y: &[f64], n_features: usize, p: &GbtParams) -> Result<f64, Ensemble> {
     assert_eq!(xs.len(), y.len(), "xs/y length mismatch");
+    prepare_targets(y, n_features, p)
+}
+
+/// The target-side half of [`prepare`] — shared with the pre-binned
+/// entry point, which has no feature matrix to length-check.
+fn prepare_targets(y: &[f64], n_features: usize, p: &GbtParams) -> Result<f64, Ensemble> {
     assert!(n_features >= 1 && n_features <= F_MAX);
-    let n = xs.len();
+    let n = y.len();
     if n == 0 {
         return Err(Ensemble::constant(n_features, 0.0));
     }
@@ -130,15 +136,51 @@ pub fn train(xs: &[[f32; F_MAX]], y: &[f64], n_features: usize, p: &GbtParams) -
         Ok(b) => b,
         Err(degenerate) => return degenerate,
     };
-    let n = xs.len();
+    // Quantize every feature once; all trees share the bin codes.
+    let binned = BinnedDataset::build(xs, n_features, p.n_bins);
+    train_core(y, n_features, p, &binned, bias)
+}
+
+/// Log-space histogram training over an already-binned dataset — the
+/// incremental refit path.  `binned` must cover exactly the rows `y`
+/// labels (built or extended via [`BinnedDataset::push_rows`] from the
+/// same feature rows and bin budget); the result is bitwise-identical
+/// to [`train_log`] over those rows, because training reads features
+/// only through the bin codes and push_rows keeps those codes equal to
+/// a from-scratch rebuild.
+pub fn train_log_binned(
+    binned: &BinnedDataset,
+    y: &[f64],
+    n_features: usize,
+    p: &GbtParams,
+) -> Ensemble {
+    assert_eq!(binned.n_rows, y.len(), "binned/y length mismatch");
+    assert_eq!(binned.n_features, n_features, "binned/n_features mismatch");
+    let ln = ln_targets(y);
+    let bias = match prepare_targets(&ln, n_features, p) {
+        Ok(b) => b,
+        Err(degenerate) => return degenerate,
+    };
+    train_core(&ln, n_features, p, binned, bias)
+}
+
+/// The boosting loop both [`train`] and [`train_log_binned`] share:
+/// everything after binning.  Features are read exclusively through
+/// `binned`'s codes and thresholds.
+fn train_core(
+    y: &[f64],
+    n_features: usize,
+    p: &GbtParams,
+    binned: &BinnedDataset,
+    bias: f64,
+) -> Ensemble {
+    let n = binned.n_rows;
     let leaves_w = 1usize << p.depth;
     let mut pred = vec![bias; n];
     let mut feat_out: Vec<u32> = Vec::with_capacity(p.n_trees * p.depth);
     let mut thr_out: Vec<f32> = Vec::with_capacity(p.n_trees * p.depth);
     let mut leaves_out: Vec<f32> = Vec::with_capacity(p.n_trees * leaves_w);
 
-    // Quantize every feature once; all trees share the bin codes.
-    let binned = BinnedDataset::build(xs, n_features, p.n_bins);
     // >= n_features: even a constant feature owns one bin.
     let stride = binned.total_bins;
     // Scratch reused across levels/trees (peak size: deepest level).
@@ -469,6 +511,178 @@ pub fn train_exact(xs: &[[f32; F_MAX]], y: &[f64], n_features: usize, p: &GbtPar
     }
 }
 
+/// FNV-1a over the exact training inputs: feature bits, target bits,
+/// feature count and hyper-parameters.  Collisions are the only risk,
+/// and 64-bit FNV over session-sized inputs makes them negligible;
+/// the gate is an optimization, never a correctness dependency — a
+/// miss just retrains.
+fn training_fingerprint(
+    xs: &[[f32; F_MAX]],
+    y: &[f64],
+    n_features: usize,
+    p: &GbtParams,
+) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    let mut eat = |bytes: &[u8]| {
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    };
+    eat(&(n_features as u64).to_le_bytes());
+    eat(&(p.n_trees as u64).to_le_bytes());
+    eat(&(p.depth as u64).to_le_bytes());
+    eat(&p.learning_rate.to_bits().to_le_bytes());
+    eat(&p.lambda.to_bits().to_le_bytes());
+    eat(&(p.n_bins as u64).to_le_bytes());
+    eat(&p.min_child_weight.to_bits().to_le_bytes());
+    eat(&(xs.len() as u64).to_le_bytes());
+    for x in xs {
+        for v in x.iter() {
+            eat(&v.to_bits().to_le_bytes());
+        }
+    }
+    for v in y {
+        eat(&v.to_bits().to_le_bytes());
+    }
+    h
+}
+
+/// Bit-exact row-prefix equality (`==` would conflate `-0.0`/`0.0`,
+/// which the binned grids distinguish structurally).
+fn rows_equal_bits(a: &[[f32; F_MAX]], b: &[[f32; F_MAX]]) -> bool {
+    a.len() == b.len()
+        && a.iter()
+            .zip(b)
+            .all(|(ra, rb)| ra.iter().zip(rb).all(|(x, y)| x.to_bits() == y.to_bits()))
+}
+
+/// A session-resident log-space trainer that amortizes refits:
+///
+/// * **Fingerprint gate** — if the exact training inputs (rows,
+///   targets, hyper-parameters) match the previous call bit for bit,
+///   the cached ensemble is returned without training at all (CEAL's
+///   phase structure retrains on unchanged data whenever a round adds
+///   only component measurements).
+/// * **Incremental binning** — when the new feature rows extend the
+///   previous ones (the append-only growth of a session's measured
+///   set), fresh rows are merged into the retained [`BinnedDataset`]
+///   via [`BinnedDataset::push_rows`] instead of re-sorting and
+///   re-binning the whole set; target-only changes (winsorization,
+///   outlier re-measures) retrain on the existing grid for free.
+/// * Anything else — different feature count, bin budget, or a
+///   non-prefix feature matrix — falls back to a full rebuild.
+///
+/// Every returned ensemble is **bitwise identical** to
+/// `train_log(xs, y, n_features, p)` on the same inputs (push_rows'
+/// rebuild-equivalence plus [`train_log_binned`]'s shared core), so
+/// amortized sessions reproduce from-scratch sessions exactly.
+pub struct IncrementalTrainer {
+    binned: Option<BinnedDataset>,
+    xs_seen: Vec<[f32; F_MAX]>,
+    n_features: usize,
+    bin_budget: usize,
+    fp: Option<u64>,
+    model: Option<Ensemble>,
+    refits: u64,
+    skips: u64,
+    rebuilds: u64,
+}
+
+impl Default for IncrementalTrainer {
+    fn default() -> Self {
+        IncrementalTrainer::new()
+    }
+}
+
+impl std::fmt::Debug for IncrementalTrainer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("IncrementalTrainer")
+            .field("rows", &self.xs_seen.len())
+            .field("refits", &self.refits)
+            .field("skips", &self.skips)
+            .field("rebuilds", &self.rebuilds)
+            .finish()
+    }
+}
+
+impl IncrementalTrainer {
+    pub fn new() -> IncrementalTrainer {
+        IncrementalTrainer {
+            binned: None,
+            xs_seen: Vec::new(),
+            n_features: 0,
+            bin_budget: 0,
+            fp: None,
+            model: None,
+            refits: 0,
+            skips: 0,
+            rebuilds: 0,
+        }
+    }
+
+    /// Amortized [`train_log`]: same signature, same (bitwise) result,
+    /// per-call cost proportional to what actually changed.
+    pub fn train_log(
+        &mut self,
+        xs: &[[f32; F_MAX]],
+        y: &[f64],
+        n_features: usize,
+        p: &GbtParams,
+    ) -> Ensemble {
+        let fp = training_fingerprint(xs, y, n_features, p);
+        if self.fp == Some(fp) {
+            if let Some(model) = &self.model {
+                self.skips += 1;
+                super::ensemble::note_refit_skip();
+                return model.clone();
+            }
+        }
+        let n_prev = self.xs_seen.len();
+        let extendable = self.binned.is_some()
+            && self.n_features == n_features
+            && self.bin_budget == p.n_bins
+            && xs.len() >= n_prev
+            && rows_equal_bits(&xs[..n_prev], &self.xs_seen);
+        if extendable {
+            if xs.len() > n_prev {
+                self.binned
+                    .as_mut()
+                    .expect("extendable implies binned")
+                    .push_rows(&xs[n_prev..]);
+                self.xs_seen.extend_from_slice(&xs[n_prev..]);
+            }
+        } else {
+            self.binned = Some(BinnedDataset::build(xs, n_features, p.n_bins));
+            self.xs_seen = xs.to_vec();
+            self.n_features = n_features;
+            self.bin_budget = p.n_bins;
+            self.rebuilds += 1;
+        }
+        let model =
+            train_log_binned(self.binned.as_ref().expect("binned present"), y, n_features, p);
+        self.refits += 1;
+        self.fp = Some(fp);
+        self.model = Some(model.clone());
+        model
+    }
+
+    /// Trainings actually performed (gate misses).
+    pub fn refits(&self) -> u64 {
+        self.refits
+    }
+
+    /// Fingerprint-gated skips (cached model returned).
+    pub fn skips(&self) -> u64 {
+        self.skips
+    }
+
+    /// Full from-scratch re-bins (first call, or a non-append change).
+    pub fn rebuilds(&self) -> u64 {
+        self.rebuilds
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -637,5 +851,88 @@ mod tests {
                 );
             }
         }
+    }
+
+    fn assert_ensembles_bitwise(a: &Ensemble, b: &Ensemble, label: &str) {
+        assert_eq!(a.n_features, b.n_features, "{label}: n_features");
+        assert_eq!(a.depth, b.depth, "{label}: depth");
+        assert_eq!(a.feat, b.feat, "{label}: feat");
+        assert_eq!(a.bias.to_bits(), b.bias.to_bits(), "{label}: bias");
+        assert_eq!(a.thr.len(), b.thr.len(), "{label}: thr len");
+        for (i, (x, y)) in a.thr.iter().zip(&b.thr).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{label}: thr[{i}]");
+        }
+        assert_eq!(a.leaves.len(), b.leaves.len(), "{label}: leaves len");
+        for (i, (x, y)) in a.leaves.iter().zip(&b.leaves).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{label}: leaves[{i}]");
+        }
+    }
+
+    #[test]
+    fn incremental_trainer_matches_train_log_bitwise() {
+        // Randomized append schedules: each call extends the previous
+        // rows by 0..30 new ones (sometimes with repeated coarse
+        // values, sometimes signed zeros), and the amortized trainer
+        // must reproduce from-scratch train_log bit for bit.
+        let mut rng = Pcg32::new(0xA11CE, 9);
+        for trial in 0..6u32 {
+            let nf = 2 + (rng.next_u32() % 4) as usize;
+            let p = if trial % 2 == 0 { GbtParams::small_data() } else { GbtParams::default() };
+            let mut tr = IncrementalTrainer::new();
+            let mut xs: Vec<[f32; F_MAX]> = Vec::new();
+            let mut y: Vec<f64> = Vec::new();
+            for step in 0..5u32 {
+                let add = (rng.next_u32() % 31) as usize;
+                for _ in 0..add {
+                    let mut x = [0f32; F_MAX];
+                    for v in x.iter_mut().take(nf) {
+                        let lattice = (rng.next_u32() % 17) as f32 / 8.0 - 1.0;
+                        *v = if rng.next_u32() % 7 == 0 { -0.0 } else { lattice };
+                    }
+                    let t = 3.0 + 2.0 * x[0] as f64 - x[1] as f64;
+                    xs.push(x);
+                    y.push(t.exp());
+                }
+                let inc = tr.train_log(&xs, &y, nf, &p);
+                let scratch = train_log(&xs, &y, nf, &p);
+                assert_ensembles_bitwise(&inc, &scratch, &format!("trial={trial} step={step}"));
+            }
+            assert_eq!(tr.rebuilds(), 1, "trial={trial}: only the first call re-bins");
+        }
+    }
+
+    #[test]
+    fn incremental_trainer_skips_identical_inputs() {
+        let mut rng = Pcg32::new(42, 1);
+        let (xs, y0) = make_data(&mut rng, 60, |x| (1.0 + x[0] as f64).exp());
+        let y: Vec<f64> = y0.iter().map(|v| v.max(1e-9)).collect();
+        let p = GbtParams::small_data();
+        let mut tr = IncrementalTrainer::new();
+        let a = tr.train_log(&xs, &y, 3, &p);
+        assert_eq!((tr.refits(), tr.skips()), (1, 0));
+        let b = tr.train_log(&xs, &y, 3, &p);
+        assert_eq!((tr.refits(), tr.skips()), (1, 1), "identical inputs skip training");
+        assert_ensembles_bitwise(&a, &b, "skip returns the cached model");
+
+        // Target-only change: retrains (no skip) but keeps the binned
+        // grid — no rebuild.
+        let y2: Vec<f64> = y.iter().map(|v| v * 1.5).collect();
+        let c = tr.train_log(&xs, &y2, 3, &p);
+        assert_eq!((tr.refits(), tr.skips(), tr.rebuilds()), (2, 1, 1));
+        assert_ensembles_bitwise(&c, &train_log(&xs, &y2, 3, &p), "y-only change");
+
+        // Changed hyper-parameters (bin budget) force a full rebuild.
+        let mut p2 = p.clone();
+        p2.n_bins = p.n_bins / 2;
+        let d = tr.train_log(&xs, &y2, 3, &p2);
+        assert_eq!(tr.rebuilds(), 2, "bin-budget change re-bins");
+        assert_ensembles_bitwise(&d, &train_log(&xs, &y2, 3, &p2), "params change");
+
+        // A non-prefix feature change (mutated first row) also rebuilds.
+        let mut xs2 = xs.clone();
+        xs2[0][0] += 0.25;
+        let e = tr.train_log(&xs2, &y2, 3, &p2);
+        assert_eq!(tr.rebuilds(), 3, "mutated prefix re-bins");
+        assert_ensembles_bitwise(&e, &train_log(&xs2, &y2, 3, &p2), "prefix change");
     }
 }

@@ -370,6 +370,7 @@ fn tune(args: &Args, ctx: &ExpCtx) -> Result<(), CliError> {
     if failed > 0 {
         println!("failed attempts: {failed} across {} reps", agg.reps.len());
     }
+    print_cache_stats();
     // Per-rep CSV with shortest-round-trip floats: two identical
     // invocations yield byte-identical files, which is what the CI
     // fault-determinism cell compares.
@@ -678,6 +679,7 @@ fn report_session(
         fnum(out.collection_cost, 3),
         obj.unit()
     );
+    print_cache_stats();
     let mut w = CsvWriter::new(&[
         "algo",
         "workflow",
@@ -717,6 +719,27 @@ fn report_session(
     Ok(())
 }
 
+/// Pool-cache and refit-amortization counters, printed (never written
+/// to a CSV — output files must stay byte-identical run to run) so the
+/// once-per-pool invariants are observable without a profiler.  The CI
+/// amortization cell greps these lines.
+fn print_cache_stats() {
+    let cache = PoolCache::global();
+    println!(
+        "pool cache    : {} pools resident ({} bytes, cap {}), {} hits, {} evictions",
+        cache.len(),
+        cache.resident_bytes(),
+        cache.cap_bytes(),
+        cache.total_hits(),
+        cache.evictions()
+    );
+    let c = ceal::gbt::amortization_counters();
+    println!(
+        "amortization  : pool code builds {}, quantized re-ranks {}, full quantized builds {}, refit skips {}",
+        c.pool_code_builds, c.quant_reranks, c.quant_full_builds, c.refit_skips
+    );
+}
+
 fn info() {
     println!("ceal {} — CEAL in-situ workflow auto-tuning reproduction", env!("CARGO_PKG_VERSION"));
     println!("artifacts dir: {}", ceal::runtime::artifacts_dir().display());
@@ -754,6 +777,7 @@ fn info() {
     println!("algorithm roster ({} registered):", Algo::ALL.len());
     println!("  {}", Algo::names().join(" | "));
     println!("  (+ budgeted CEAL via the library API: BudgetedCeal::run_with_cost_budget)");
+    print_cache_stats();
 }
 
 fn usage() -> &'static str {

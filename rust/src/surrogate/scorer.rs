@@ -14,9 +14,11 @@
 //! and external drivers never see it.
 
 use crate::config::{Config, WorkflowSpec, F_MAX};
-use crate::gbt::{Ensemble, QuantizedEnsemble, QUANTIZE_MIN_ROWS};
+use crate::gbt::{Ensemble, PoolCodes, QuantizedEnsemble, QUANTIZE_MIN_ROWS};
 use crate::runtime::Runtime;
 use crate::sim::Objective;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock};
 
 /// Fixed row width of the fused [`Scorer::score_fold`] chunks: small
 /// enough that a chunk's scores live in a stack-adjacent scratch
@@ -36,6 +38,81 @@ fn warn_pjrt_degraded(what: &str, err: &crate::runtime::Error) {
     });
 }
 
+/// Lazily-built pool-resident [`PoolCodes`] for one feature view.
+///
+/// The codes depend only on the feature rows — never on a model — so
+/// one build serves *every* refit against that view: subsequent
+/// ensembles re-rank their thresholds into the fixed code grid
+/// ([`QuantizedEnsemble::rerank`]) instead of re-coding the pool.
+/// `get_or_build` races are resolved by `OnceLock` (first build wins;
+/// any concurrent build of the same rows is bit-identical anyway).
+pub struct CodeCache {
+    slot: OnceLock<Arc<PoolCodes>>,
+    builds: AtomicU64,
+}
+
+impl CodeCache {
+    pub fn new() -> CodeCache {
+        CodeCache { slot: OnceLock::new(), builds: AtomicU64::new(0) }
+    }
+
+    /// The pool codes for `rows`, building them on first use.  Callers
+    /// must always pass the same rows for a given cache (the cache is
+    /// owned by the feature view it encodes).
+    pub fn get_or_build(&self, rows: &[[f32; F_MAX]]) -> Arc<PoolCodes> {
+        self.slot
+            .get_or_init(|| {
+                self.builds.fetch_add(1, Ordering::Relaxed);
+                Arc::new(PoolCodes::build(rows))
+            })
+            .clone()
+    }
+
+    /// How many times this cache actually coded its rows (0 or 1 —
+    /// asserted by the amortization tests).
+    pub fn builds(&self) -> u64 {
+        self.builds.load(Ordering::Relaxed)
+    }
+
+    /// Resident bytes of the built codes (0 before first use).
+    pub fn approx_bytes(&self) -> usize {
+        self.slot.get().map_or(0, |c| c.approx_bytes())
+    }
+}
+
+impl Default for CodeCache {
+    fn default() -> Self {
+        CodeCache::new()
+    }
+}
+
+impl std::fmt::Debug for CodeCache {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("CodeCache")
+            .field("built", &self.slot.get().is_some())
+            .field("builds", &self.builds())
+            .finish()
+    }
+}
+
+/// A borrowed feature view: the rows plus (optionally) their
+/// pool-resident code cache.  Views over the full pool carry a cache
+/// and take the amortized re-rank route at pool scale; ad-hoc row sets
+/// (measured subsets, single configs) use [`FeatView::plain`] and fall
+/// back to direct prediction.
+#[derive(Clone, Copy)]
+pub struct FeatView<'a> {
+    pub rows: &'a [[f32; F_MAX]],
+    pub codes: Option<&'a CodeCache>,
+}
+
+impl<'a> FeatView<'a> {
+    /// A view with no code cache (small or one-off row sets).
+    pub fn plain(rows: &'a [[f32; F_MAX]]) -> FeatView<'a> {
+        FeatView { rows, codes: None }
+    }
+}
+
 /// Precomputed feature encodings for a fixed configuration pool.
 #[derive(Clone, Debug)]
 pub struct PoolFeatures {
@@ -48,11 +125,17 @@ pub struct PoolFeatures {
     /// Real (unpadded) feature count of the workflow view — lanes
     /// `n_workflow..F_MAX` are zero padding in every row.
     pub n_workflow: usize,
+    /// Once-per-pool rank codes of the workflow view (built lazily on
+    /// the first pool-scale scoring pass; `Clone` shares the cache).
+    pub workflow_codes: Arc<CodeCache>,
+    /// Once-per-pool rank codes of each per-component view.
+    pub component_codes: Vec<Arc<CodeCache>>,
 }
 
 impl PoolFeatures {
     pub fn encode(spec: &WorkflowSpec, configs: &[Config]) -> PoolFeatures {
         let configurable = spec.configurable();
+        let component_codes = configurable.iter().map(|_| Arc::new(CodeCache::new())).collect();
         PoolFeatures {
             workflow: configs.iter().map(|c| spec.encode_workflow(c)).collect(),
             per_component: configurable
@@ -61,6 +144,8 @@ impl PoolFeatures {
                 .collect(),
             configurable,
             n_workflow: spec.n_params(),
+            workflow_codes: Arc::new(CodeCache::new()),
+            component_codes,
         }
     }
 
@@ -72,8 +157,22 @@ impl PoolFeatures {
         self.workflow.is_empty()
     }
 
-    /// Row-subset view (for scoring C_meas etc.).
+    /// The workflow rows with their pool-resident code cache.
+    pub fn workflow_view(&self) -> FeatView<'_> {
+        FeatView { rows: &self.workflow, codes: Some(&self.workflow_codes) }
+    }
+
+    /// Component view `k` (index into `per_component`) with its cache.
+    pub fn component_view(&self, k: usize) -> FeatView<'_> {
+        FeatView { rows: &self.per_component[k], codes: Some(&self.component_codes[k]) }
+    }
+
+    /// Row-subset view (for scoring C_meas etc.).  Subsets carry fresh
+    /// (empty) code caches: they are measured-set-sized, so they score
+    /// directly and never pay a code build.
     pub fn subset(&self, idx: &[usize]) -> PoolFeatures {
+        let component_codes =
+            self.per_component.iter().map(|_| Arc::new(CodeCache::new())).collect();
         PoolFeatures {
             workflow: idx.iter().map(|&i| self.workflow[i]).collect(),
             per_component: self
@@ -83,6 +182,8 @@ impl PoolFeatures {
                 .collect(),
             configurable: self.configurable.clone(),
             n_workflow: self.n_workflow,
+            workflow_codes: Arc::new(CodeCache::new()),
+            component_codes,
         }
     }
 }
@@ -125,15 +226,23 @@ impl Scorer {
     /// any worker count), while small batches — the tuners' per-config
     /// calls — skip the dispatch entirely.
     pub fn score(&self, ens: &Ensemble, xs: &[[f32; F_MAX]]) -> Vec<f64> {
+        self.score_view(ens, FeatView::plain(xs))
+    }
+
+    /// [`score`](Self::score) over a [`FeatView`]: when the view
+    /// carries a pool-resident [`CodeCache`], pool-scale native scoring
+    /// re-ranks the ensemble's thresholds into the cached codes
+    /// (O(trees·depth·log uniques)) instead of re-coding all rows.
+    pub fn score_view(&self, ens: &Ensemble, view: FeatView<'_>) -> Vec<f64> {
         match self {
-            Scorer::Native => native_preds(ens, xs).into_iter().map(|v| v as f64).collect(),
-            Scorer::Pjrt(rt) => match rt.score(&ens.flatten(), xs) {
+            Scorer::Native => native_preds_view(ens, view).into_iter().map(|v| v as f64).collect(),
+            Scorer::Pjrt(rt) => match rt.score(&ens.flatten(), view.rows) {
                 Ok(v) => v.into_iter().map(|v| v as f64).collect(),
                 // A backend fault degrades like a transport failure:
                 // warn once, answer from the exact native mirror.
                 Err(e) => {
                     warn_pjrt_degraded("ensemble scoring", &e);
-                    native_preds(ens, xs).into_iter().map(|v| v as f64).collect()
+                    native_preds_view(ens, view).into_iter().map(|v| v as f64).collect()
                 }
             },
         }
@@ -163,6 +272,20 @@ impl Scorer {
         make: impl Fn() -> R + Sync,
         fold: impl Fn(&mut R, usize, &[f64]) + Sync,
     ) -> Vec<R> {
+        self.score_fold_view(ens, FeatView::plain(xs), make, fold)
+    }
+
+    /// [`score_fold`](Self::score_fold) over a [`FeatView`]; with a
+    /// code cache the pool-scale quantized route becomes a per-refit
+    /// threshold re-rank against the once-per-pool codes.
+    pub fn score_fold_view<R: Send>(
+        &self,
+        ens: &Ensemble,
+        view: FeatView<'_>,
+        make: impl Fn() -> R + Sync,
+        fold: impl Fn(&mut R, usize, &[f64]) + Sync,
+    ) -> Vec<R> {
+        let xs = view.rows;
         let n = xs.len();
         if n == 0 {
             return Vec::new();
@@ -170,10 +293,14 @@ impl Scorer {
         let n_chunks = n.div_ceil(SCORE_CHUNK);
         match self {
             Scorer::Native => {
-                // Pool-scale batches pre-code once and traverse the
-                // quantized SoA columns; the codes are shared read-only
-                // across every chunk task.
-                let quant = (n >= QUANTIZE_MIN_ROWS).then(|| QuantizedEnsemble::build(ens, xs));
+                // Pool-scale batches traverse the quantized SoA
+                // columns, shared read-only across every chunk task.
+                // A cached view re-ranks thresholds into its resident
+                // codes; only cache-less views pay the O(n·F) recode.
+                let quant = (n >= QUANTIZE_MIN_ROWS).then(|| match view.codes {
+                    Some(cache) => QuantizedEnsemble::rerank(ens, &cache.get_or_build(xs)),
+                    None => QuantizedEnsemble::build(ens, xs),
+                });
                 let width = crate::util::parallel::width_for(n, QUANTIZE_MIN_ROWS.min(1024));
                 crate::util::parallel::map_indexed(width, n_chunks, |ci| {
                     let lo = ci * SCORE_CHUNK;
@@ -205,7 +332,7 @@ impl Scorer {
                         Ok(v) => v.into_iter().map(|v| v as f64).collect(),
                         Err(e) => {
                             warn_pjrt_degraded("ensemble scoring", &e);
-                            native_preds(ens, &xs[lo..hi])
+                            native_preds_view(ens, FeatView::plain(&xs[lo..hi]))
                                 .into_iter()
                                 .map(|v| v as f64)
                                 .collect()
@@ -265,11 +392,17 @@ impl Scorer {
 
 /// Native batch predictions, routed through the quantized SoA kernel
 /// at pool scale.  `QuantizedEnsemble::predict_all` is bitwise-pinned
-/// to `Ensemble::predict_batch`, so the cutover is invisible to every
-/// equivalence test — it only changes how fast the answer arrives.
-fn native_preds(ens: &Ensemble, xs: &[[f32; F_MAX]]) -> Vec<f32> {
+/// to `Ensemble::predict_batch` (and `rerank` to `build`), so the
+/// cutover is invisible to every equivalence test — it only changes
+/// how fast the answer arrives.  Views with a [`CodeCache`] re-rank
+/// into the resident codes; plain views code on the spot.
+fn native_preds_view(ens: &Ensemble, view: FeatView<'_>) -> Vec<f32> {
+    let xs = view.rows;
     if xs.len() >= QUANTIZE_MIN_ROWS {
-        QuantizedEnsemble::build(ens, xs).predict_all()
+        match view.codes {
+            Some(cache) => QuantizedEnsemble::rerank(ens, &cache.get_or_build(xs)).predict_all(),
+            None => QuantizedEnsemble::build(ens, xs).predict_all(),
+        }
     } else {
         ens.predict_batch(xs)
     }
@@ -280,18 +413,20 @@ fn native_preds(ens: &Ensemble, xs: &[[f32; F_MAX]]) -> Vec<f32> {
 /// vector, no per-component score matrix.  Matches
 /// `Objective::combine` over exp(prediction): max folds from -inf,
 /// sum folds from 0.  Also the fallback target when the PJRT lowfi
-/// path degrades.
+/// path degrades.  Component predictions ride the per-component code
+/// caches, so repeated lowfi passes over the same pool re-rank rather
+/// than re-code.
 fn native_lowfi(comps: &[Ensemble], feats: &PoolFeatures, objective: Objective) -> Vec<f64> {
     let init = match objective {
         Objective::ExecTime => f64::NEG_INFINITY,
         Objective::CompTime => 0.0,
     };
     let mut out = vec![init; feats.len()];
-    for (e, xs) in comps.iter().zip(&feats.per_component) {
+    for (k, (e, xs)) in comps.iter().zip(&feats.per_component).enumerate() {
         // ragged views must fail loudly, not leave `init` rows that
         // would read as best-possible scores
         assert_eq!(xs.len(), out.len(), "ragged per-component views");
-        let preds = native_preds(e, xs);
+        let preds = native_preds_view(e, feats.component_view(k));
         match objective {
             Objective::ExecTime => {
                 for (o, p) in out.iter_mut().zip(&preds) {
@@ -367,5 +502,50 @@ mod tests {
             assert!((mx[i] - p0.max(p1)).abs() < 1e-6 * p0.max(p1));
             assert!((sm[i] - (p0 + p1)).abs() < 1e-6 * (p0 + p1));
         }
+    }
+
+    #[test]
+    fn cached_view_matches_plain_scoring_and_codes_once() {
+        // Pool large enough to cross QUANTIZE_MIN_ROWS, so the cached
+        // view takes the re-rank route and the plain call the full
+        // build route — results must agree bit for bit, and repeated
+        // scoring passes must code the pool exactly once.
+        let spec = lv_spec();
+        let mut rng = Pcg32::new(31, 5);
+        let configs: Vec<Config> =
+            (0..QUANTIZE_MIN_ROWS + 64).map(|_| spec.sample(&mut rng)).collect();
+        let f = PoolFeatures::encode(&spec, &configs);
+        let y: Vec<f64> = f.workflow[..64].iter().map(|x| 1.5 + x[0] as f64).collect();
+        let models: Vec<Ensemble> = (0..3)
+            .map(|k| {
+                let yk: Vec<f64> = y.iter().map(|v| v + k as f64 * 0.1).collect();
+                train(&f.workflow[..64], &yk, f.n_workflow, &GbtParams::small_data())
+            })
+            .collect();
+        let scorer = Scorer::Native;
+        for ens in &models {
+            let plain = scorer.score(ens, &f.workflow);
+            let cached = scorer.score_view(ens, f.workflow_view());
+            assert_eq!(plain.len(), cached.len());
+            for (a, b) in plain.iter().zip(&cached) {
+                assert_eq!(a.to_bits(), b.to_bits(), "view scoring must be bitwise exact");
+            }
+            // the fused fold sees the same per-row bits
+            let folded = scorer.score_fold_view(
+                ens,
+                f.workflow_view(),
+                Vec::new,
+                |acc: &mut Vec<f64>, _lo, preds| acc.extend_from_slice(preds),
+            );
+            let flat: Vec<f64> = folded.into_iter().flatten().collect();
+            for (a, b) in plain.iter().zip(&flat) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+        assert_eq!(
+            f.workflow_codes.builds(),
+            1,
+            "three models x two passes each must share one pool code build"
+        );
     }
 }

@@ -10,7 +10,7 @@
 //! skipped, and the batch closes on whatever was delivered.
 
 use super::common::{
-    random_unmeasured, searcher_best, top_unmeasured_model, train_hifi, Pool, Problem, Tuner,
+    random_unmeasured, searcher_best, top_unmeasured_model, Pool, Problem, Tuner,
     TunerOutput,
 };
 use super::session::{
@@ -115,7 +115,7 @@ impl AlSession<'_> {
         }
         let rows = self.core.train_measured();
         if !rows.is_empty() {
-            self.model = Some(train_hifi(self.core.prob, self.core.pool, &rows));
+            self.model = Some(self.core.fit_hifi(&rows));
         }
         self.core.refit();
     }

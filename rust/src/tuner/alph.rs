@@ -14,7 +14,7 @@ use std::sync::Arc;
 
 use super::ceal::{gbt_params_for, CealParams};
 use super::common::{
-    random_unmeasured, searcher_best, top_unmeasured_model, train_hifi, Pool, Problem, TopK,
+    random_unmeasured, searcher_best, top_unmeasured_model, Pool, Problem, TopK,
     Tuner, TunerOutput,
 };
 use super::session::{
@@ -22,7 +22,7 @@ use super::session::{
     MeasurementRequest, MeasurementResult, SessionCore, SessionDigest, SessionState, TunerSession,
 };
 use crate::config::F_MAX;
-use crate::gbt::{train_log, Ensemble};
+use crate::gbt::{train_log, Ensemble, IncrementalTrainer};
 use crate::metrics::recall_sum_123;
 use crate::surrogate::lowfi::ComponentSamples;
 use crate::surrogate::Scorer;
@@ -96,6 +96,7 @@ impl Tuner for Alph {
             using_hifi: false,
             hifi: None,
             combiner: None,
+            combiner_fit: IncrementalTrainer::new(),
             c_meas: Vec::new(),
             iter: 0,
             phase: Phase::Components,
@@ -146,6 +147,10 @@ struct AlphSession<'a> {
     using_hifi: bool,
     hifi: Option<Ensemble>,
     combiner: Option<Ensemble>,
+    /// Amortized trainer for the combiner M_0 (the hifi model rides
+    /// the core's trainer); its skip counts flow into the session's
+    /// `model_refit_skips`.
+    combiner_fit: IncrementalTrainer,
     c_meas: Vec<usize>,
     iter: usize,
     phase: Phase,
@@ -204,10 +209,19 @@ impl AlphSession<'_> {
                 }
             })
             .collect();
+        // Component views score through their pool-resident code
+        // caches — at pool scale this re-ranks each model's thresholds
+        // instead of re-coding the O(pool·F) component features.
         self.per_comp_preds = comp_models
             .iter()
-            .zip(&pool.feats.per_component)
-            .map(|(e, xs)| scorer.score(e, xs).into_iter().map(f64::exp).collect())
+            .enumerate()
+            .map(|(k, e)| {
+                scorer
+                    .score_view(e, pool.feats.component_view(k))
+                    .into_iter()
+                    .map(f64::exp)
+                    .collect()
+            })
             .collect();
         self.core.refit();
 
@@ -225,14 +239,17 @@ impl AlphSession<'_> {
         self.phase = Phase::Workflow;
     }
 
-    fn train_combiner(&self, rows: &[(usize, f64)]) -> Ensemble {
+    fn train_combiner(&mut self, rows: &[(usize, f64)]) -> Ensemble {
         let n_j = self.per_comp_preds.len();
         let xs: Vec<[f32; F_MAX]> = rows
             .iter()
             .map(|&(i, _)| combiner_features(&self.per_comp_preds, i))
             .collect();
         let y: Vec<f64> = rows.iter().map(|&(_, y)| y).collect();
-        train_log(&xs, &y, n_j.max(1), &gbt_params_for(y.len()))
+        let skips_before = self.combiner_fit.skips();
+        let model = self.combiner_fit.train_log(&xs, &y, n_j.max(1), &gbt_params_for(y.len()));
+        self.core.note_refit_skips(self.combiner_fit.skips() - skips_before);
+        model
     }
 
     /// The round's deliveries are all in: run switch detection —
@@ -266,10 +283,10 @@ impl AlphSession<'_> {
     /// retrain both models, advance the iteration, select the next
     /// `C_meas`.
     fn close_round(&mut self) {
-        let (prob, pool, scorer) = (self.core.prob, self.core.pool, self.core.scorer);
+        let (pool, scorer) = (self.core.pool, self.core.scorer);
         let rows = self.core.train_measured();
         if !rows.is_empty() {
-            self.hifi = Some(train_hifi(prob, pool, &rows));
+            self.hifi = Some(self.core.fit_hifi(&rows));
             self.core.refit();
             self.combiner = Some(self.train_combiner(&rows));
             self.core.refit();

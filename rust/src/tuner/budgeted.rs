@@ -18,7 +18,7 @@
 
 use super::ceal::gbt_params_for;
 use super::common::{
-    random_unmeasured, searcher_best, top_unmeasured, top_unmeasured_model, train_hifi, Collector,
+    random_unmeasured, searcher_best, top_unmeasured, top_unmeasured_model, Collector,
     Pool, Problem, TunerOutput,
 };
 use super::session::{
@@ -237,7 +237,7 @@ impl BudgetedSession<'_> {
     /// measured, then retrain M_H (both exactly as the monolithic loop
     /// ordered them).
     fn post_round(&mut self) {
-        let (prob, pool, scorer) = (self.core.prob, self.core.pool, self.core.scorer);
+        let (pool, scorer) = (self.core.pool, self.core.scorer);
         if let Some(h) = &self.hifi {
             if !self.using_hifi {
                 let actual: Vec<f64> = self.core.measured.iter().map(|&(_, y)| y).collect();
@@ -261,7 +261,7 @@ impl BudgetedSession<'_> {
         }
         if self.core.measured.len() >= 2 {
             let rows = self.core.train_measured();
-            self.hifi = Some(train_hifi(prob, pool, &rows));
+            self.hifi = Some(self.core.fit_hifi(&rows));
             self.core.refit();
         }
     }
@@ -316,7 +316,7 @@ impl TunerSession for BudgetedSession<'_> {
                     // bootstrap over: initial M_H when trainable
                     if self.core.measured.len() >= 2 {
                         let rows = self.core.train_measured();
-                        self.hifi = Some(train_hifi(self.core.prob, pool, &rows));
+                        self.hifi = Some(self.core.fit_hifi(&rows));
                         self.core.refit();
                     }
                     self.phase = Phase::Guided;

@@ -22,7 +22,7 @@
 use std::sync::Arc;
 
 use super::common::{
-    random_unmeasured, searcher_best, top_unmeasured, top_unmeasured_model, train_hifi, Pool,
+    random_unmeasured, searcher_best, top_unmeasured, top_unmeasured_model, Pool,
     Problem, Tuner, TunerOutput,
 };
 use super::session::{
@@ -332,10 +332,10 @@ impl CealSession<'_> {
     /// `C_meas` (lines 23-24).  M_L's pool scores are borrowed, not
     /// cloned, per iteration.
     fn close_round(&mut self) {
-        let (prob, pool, scorer) = (self.core.prob, self.core.pool, self.core.scorer);
+        let (pool, scorer) = (self.core.pool, self.core.scorer);
         let rows = self.core.train_measured();
         if !rows.is_empty() {
-            self.hifi = Some(train_hifi(prob, pool, &rows));
+            self.hifi = Some(self.core.fit_hifi(&rows));
         }
         self.core.refit();
         self.iter += 1;

@@ -622,9 +622,9 @@ pub fn searcher_best(
     measured: &[(usize, f64)],
 ) -> usize {
     let overrides: HashMap<usize, f64> = measured.iter().copied().collect();
-    let mins = scorer.score_fold(
+    let mins = scorer.score_fold_view(
         model,
-        &pool.feats.workflow,
+        pool.feats.workflow_view(),
         || None::<(f64, usize)>,
         |best, base, preds| {
             for (j, p) in preds.iter().enumerate() {
@@ -840,9 +840,9 @@ pub fn top_unmeasured_model(
     measured: &HashSet<usize>,
     k: usize,
 ) -> Vec<usize> {
-    let shards = scorer.score_fold(
+    let shards = scorer.score_fold_view(
         model,
-        &pool.feats.workflow,
+        pool.feats.workflow_view(),
         || TopK::new(k),
         |top, base, preds| {
             for (j, &p) in preds.iter().enumerate() {

@@ -12,7 +12,7 @@
 use std::collections::HashSet;
 
 use super::common::{
-    random_unmeasured, searcher_best, top_unmeasured, train_hifi, Pool, Problem, Tuner,
+    random_unmeasured, searcher_best, top_unmeasured, Pool, Problem, Tuner,
     TunerOutput,
 };
 use super::session::{
@@ -294,13 +294,13 @@ impl TunerSession for GeistSession<'_> {
 
     fn finish(self: Box<Self>) -> TunerOutput {
         assert!(self.done(), "finish() before the session completed");
-        let core = self.core;
+        let mut core = self.core;
         let rows = core.train_measured();
         let model = if rows.is_empty() {
             // every measurement attempt failed: no data, constant model
             Ensemble::constant(1, 0.0)
         } else {
-            train_hifi(core.prob, core.pool, &rows)
+            core.fit_hifi(&rows)
         };
         let best_idx = searcher_best(&model, core.pool, core.scorer, &rows);
         core.into_output(model, best_idx)

@@ -60,7 +60,7 @@
 use std::collections::HashSet;
 
 use crate::config::{Config, F_MAX};
-use crate::gbt::Ensemble;
+use crate::gbt::{Ensemble, IncrementalTrainer};
 use crate::surrogate::lowfi::ComponentSamples;
 use crate::surrogate::Scorer;
 use crate::util::rng::{Pcg32, RngSnapshot};
@@ -304,6 +304,10 @@ pub struct SessionState {
     pub failed_runs: usize,
     /// Surrogate (re)fits performed so far.
     pub model_refits: usize,
+    /// Refit calls answered from the fingerprint-gated model cache
+    /// (no training happened; the refit still counts above, keeping
+    /// the digest/trajectory accounting identical to from-scratch).
+    pub model_refit_skips: usize,
     /// CEAL-family switch detection: `Some(true)` once the
     /// high-fidelity model has overtaken the low-fidelity one.
     pub using_hifi: Option<bool>,
@@ -543,6 +547,14 @@ pub(crate) struct SessionCore<'a> {
     /// Pool indices that already spent their one outlier re-measure.
     remeasured: HashSet<usize>,
     pub(crate) model_refits: usize,
+    /// Refits answered from the fingerprint cache (observability only
+    /// — deliberately absent from [`SessionDigest`], since a skip is
+    /// behaviorally identical to the training it avoided).
+    pub(crate) model_refit_skips: usize,
+    /// Session-resident amortized trainer for the high-fidelity
+    /// surrogate: keeps the binned dataset across rounds so each refit
+    /// only bins the rows added since the last one.
+    hifi_fit: IncrementalTrainer,
     pub(crate) asked_batches: usize,
     pub(crate) told_batches: usize,
     pub(crate) diag: Diagnostics,
@@ -572,6 +584,8 @@ impl<'a> SessionCore<'a> {
             policy: FailurePolicy::default(),
             remeasured: HashSet::new(),
             model_refits: 0,
+            model_refit_skips: 0,
+            hifi_fit: IncrementalTrainer::new(),
             asked_batches: 0,
             told_batches: 0,
             diag: Diagnostics::default(),
@@ -661,6 +675,34 @@ impl<'a> SessionCore<'a> {
         self.model_refits += 1;
     }
 
+    /// Train (or fetch) the high-fidelity workflow surrogate on
+    /// `measured` rows through the session's amortized trainer.
+    /// Bitwise identical to [`super::common::train_hifi`] on the same
+    /// rows; repeated calls with unchanged rows return the cached
+    /// model, counted in `model_refit_skips` (the refit itself is
+    /// still accounted by the caller's [`refit`](Self::refit), keeping
+    /// digests identical to the from-scratch path).
+    pub(crate) fn fit_hifi(&mut self, measured: &[(usize, f64)]) -> Ensemble {
+        let xs: Vec<[f32; F_MAX]> = measured
+            .iter()
+            .map(|&(i, _)| self.pool.feats.workflow[i])
+            .collect();
+        let y: Vec<f64> = measured.iter().map(|&(_, y)| y).collect();
+        let params = crate::gbt::GbtParams::small_data();
+        let skips_before = self.hifi_fit.skips();
+        let model =
+            self.hifi_fit.train_log(&xs, &y, self.prob.n_workflow_features(), &params);
+        self.model_refit_skips += (self.hifi_fit.skips() - skips_before) as usize;
+        model
+    }
+
+    /// Bump the skip counter for a fingerprint-gated reuse that
+    /// happened outside [`fit_hifi`](Self::fit_hifi) (e.g. ALpH's
+    /// combiner trainer).
+    pub(crate) fn note_refit_skips(&mut self, n: u64) {
+        self.model_refit_skips += n as usize;
+    }
+
     /// Build the crash-checkpoint digest from a progress snapshot plus
     /// the selection stream's raw position (see [`SessionDigest`]).
     pub(crate) fn digest(&self, s: &SessionState) -> SessionDigest {
@@ -695,6 +737,7 @@ impl<'a> SessionCore<'a> {
             collection_cost: self.total_cost(),
             failed_runs: self.failed_runs,
             model_refits: self.model_refits,
+            model_refit_skips: self.model_refit_skips,
             using_hifi,
         }
     }

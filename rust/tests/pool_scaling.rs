@@ -140,4 +140,43 @@ fn large_lazy_pool_tunes_without_materializing_truth() {
     // this size (accounting sanity, not an allocator measurement)
     let bytes = pool.approx_bytes();
     assert!(bytes > 0);
+
+    // Amortization invariant: the whole run coded the pool's workflow
+    // features exactly once — every per-refit selection pass re-ranked
+    // into that resident grid instead of re-coding O(pool·F).  The
+    // per-cache counters (not the process-global ones) keep this
+    // assertion immune to tests running in parallel.
+    assert_eq!(
+        pool.feats.workflow_codes.builds(),
+        1,
+        "a CEAL run must build the workflow pool codes exactly once"
+    );
+    assert!(
+        pool.feats.workflow_codes.approx_bytes() > 0,
+        "built codes must be resident"
+    );
+    for cc in &pool.feats.component_codes {
+        assert!(
+            cc.builds() <= 1,
+            "component views must never code more than once"
+        );
+    }
+
+    // Exactness: the model this run actually produced, re-ranked into
+    // the resident codes, scores the pool bit-identically to a
+    // from-scratch quantized build over the raw features.
+    use ceal::gbt::QuantizedEnsemble;
+    let codes = pool.feats.workflow_codes.get_or_build(&pool.feats.workflow);
+    let reranked = QuantizedEnsemble::rerank(&out.model, &codes);
+    let rebuilt = QuantizedEnsemble::build(&out.model, &pool.feats.workflow);
+    let a = reranked.predict_all();
+    let b = rebuilt.predict_all();
+    assert_eq!(a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "re-ranked vs rebuilt prediction diverges at row {i}"
+        );
+    }
 }
