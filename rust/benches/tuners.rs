@@ -128,6 +128,36 @@ fn main() {
         let _ = std::fs::remove_dir_all(&dir);
     }
 
+    // Served session at the sweep cell: the same journaled drive pushed
+    // through the ask/tell wire protocol (in-process transport, one
+    // daemon-side journal per session) — its gap vs the journaled row
+    // is the price of the codec + session-multiplexing machinery.
+    {
+        use ceal::coordinator::{session_rng, Algo};
+        use ceal::serve::{Loopback, OpenSpec, ServeClient, SessionManager};
+        use ceal::tuner::Collector;
+        let root = std::env::temp_dir().join(format!("ceal-bench-serve-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        let mgr = SessionManager::new(&root, 1, None).unwrap();
+        let spec = OpenSpec {
+            workflow: "LV".into(),
+            objective: "comp_time".into(),
+            algo: "CEAL".into(),
+            m: 30,
+            pool_size: 1000,
+            seed: 0xCEA1,
+            scorer: "native".into(),
+        };
+        b.bench("serve/ask_tell_roundtrip", || {
+            let mut client = ServeClient::new(Loopback(&mgr));
+            client.open(&spec).unwrap();
+            let mut rng = session_rng(0xCEA1, Algo::Ceal, 0);
+            let mut col = Collector::new(&sweep_prob, rng.derive_str("collector"));
+            client.drive(&mut col, None).unwrap()
+        });
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
     // Large-pool amortized cell: a full CEAL run at pool 1e5 (lazy
     // candidate generation, no materialized truth).  Each iteration's
     // selection re-ranks into the pool-resident codes and each refit

@@ -13,8 +13,8 @@ use crate::surrogate::Scorer;
 use crate::tuner::journal::JOURNAL_FILE;
 use crate::tuner::{
     drive, drive_checkpointed, replay_into, ActiveLearning, Alph, Ceal, CealParams, Collector,
-    FailurePolicy, FaultInjector, FaultSpec, Pool, Problem, RandomSampling, SessionJournal,
-    TraceError, TraceHeader, Tuner, TunerOutput,
+    DiagSink, FailurePolicy, FaultInjector, FaultSpec, Pool, Problem, RandomSampling,
+    SessionJournal, TraceError, TraceHeader, Tuner, TunerOutput,
 };
 use crate::util::rng::Pcg32;
 use crate::util::stats;
@@ -378,6 +378,9 @@ fn drive_rep_journaled(
     let mut rng = session_rng(c.seed, algo, rep);
     let mut col = Collector::new(prob, rng.derive_str("collector"));
     let mut session = tuner.session(prob, pool, scorer, c.m, &mut rng);
+    // journaled reps keep their retry/straggler warnings beside the
+    // exchanges they explain, one diag.log per journal directory
+    session.set_diag_sink(DiagSink::File(dir.join("diag.log")));
     let out = match &c.faults {
         Some(spec) if !spec.plan.is_none() => {
             session.set_failure_policy(FailurePolicy::fault_tolerant());

@@ -38,6 +38,7 @@ pub mod exper;
 pub mod gbt;
 pub mod metrics;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod surrogate;
 pub mod tuner;

@@ -6,6 +6,8 @@
 //! ceal fig <4..13>          reproduce a paper figure
 //! ceal all                  everything (the `make repro` target)
 //! ceal tune                 one tuning campaign (see flags below)
+//! ceal serve                multi-tenant ask/tell tuning daemon
+//! ceal client               one-shot client driving a served session
 //! ceal info                 runtime/artifact diagnostics
 //!
 //! common flags:
@@ -42,6 +44,19 @@
 //!                     watchdog for --checkpoint-dir/--resume: a batch
 //!                     older than SECS is journaled as timed out and
 //!                     flows through the session's retry handling
+//! serve flags (see README "Serving"):
+//!   --addr A          listen address                   [127.0.0.1:7433]
+//!   --serve-root DIR  one journal dir per session token [serve]
+//!   --session-ttl SECS
+//!                     evict idle sessions to disk after SECS [900]
+//!   --no-session-ttl  keep every session resident forever
+//! client flags:
+//!   --addr A          daemon address                   [127.0.0.1:7433]
+//!   --token T         resume an existing session by token
+//!   --token-file PATH write the session token to PATH on open
+//!   --throttle-ms N   sleep N ms between exchanges (CI kill windows)
+//!   (fresh opens also take --workflow/--objective/--algo/--m and the
+//!    common --pool/--seed/--scorer; resume pins them from the token)
 //! ```
 //!
 //! `ceal robustness` runs the quality-vs-failure-rate degradation
@@ -58,15 +73,17 @@ use std::time::Duration;
 use ceal::config::WorkflowId;
 use ceal::coordinator::{run_campaign, session_rng, tuner_for, Algo, PoolCache, ScorerKind};
 use ceal::exper::{self, ExpCtx};
+use ceal::serve::{OpenSpec, ServeClient, ServeConfig, ServeError, TcpTransport};
 use ceal::sim::{Objective, WorkflowRegistry};
 use ceal::tuner::{
-    drive, drive_checkpointed, replay_into, Collector, DeadlineEvaluator, Evaluator,
+    drive, drive_checkpointed, replay_into, Collector, DeadlineEvaluator, DiagSink, Evaluator,
     FailurePolicy, FaultInjector, FaultPlan, FaultSpec, LoadedCheckpoint, Pool, Problem,
     SessionJournal, TraceError, TraceHeader, TraceRecorder, TraceReplayer, TunerOutput,
     TunerSession,
 };
 use ceal::util::cli::Args;
 use ceal::util::csv::CsvWriter;
+use ceal::util::json::Json;
 use ceal::util::table::fnum;
 
 /// Corrupted/truncated/incompatible trace, journal or checkpoint.
@@ -109,6 +126,18 @@ impl From<&str> for CliError {
         CliError {
             code: 1,
             msg: msg.to_string(),
+        }
+    }
+}
+
+impl From<ServeError> for CliError {
+    /// Serve failures carry the CLI's own exit-code taxonomy (and a
+    /// remote error preserves the server's code verbatim), so `ceal
+    /// client` exits exactly as the equivalent `ceal tune` would.
+    fn from(e: ServeError) -> CliError {
+        CliError {
+            code: e.code(),
+            msg: e.to_string(),
         }
     }
 }
@@ -177,6 +206,8 @@ fn run() -> Result<(), CliError> {
         Some("ablation") => exper::ablations::run(&ctx),
         Some("robustness") => exper::robustness::run(&ctx),
         Some("tune") => tune(&args, &ctx)?,
+        Some("serve") => serve_cmd(&args, &ctx)?,
+        Some("client") => client_cmd(&args, &ctx)?,
         Some("info") => info(),
         other => {
             eprintln!("{}", usage());
@@ -239,16 +270,7 @@ fn parse_faults(args: &Args) -> Result<Option<FaultSpec>, String> {
 /// `--measure-deadline SECS`: the wall-clock watchdog for journaled
 /// sessions.
 fn parse_deadline(args: &Args) -> Result<Option<Duration>, String> {
-    let Some(s) = args.opt("measure-deadline") else {
-        return Ok(None);
-    };
-    let secs: f64 = s
-        .parse()
-        .map_err(|e| format!("bad --measure-deadline '{s}': {e}"))?;
-    if !(secs > 0.0) {
-        return Err("--measure-deadline must be a positive number of seconds".into());
-    }
-    Ok(Some(Duration::from_secs_f64(secs)))
+    args.opt_secs("measure-deadline")
 }
 
 fn tune(args: &Args, ctx: &ExpCtx) -> Result<(), CliError> {
@@ -507,6 +529,10 @@ fn checkpointed_session(
     if header.faults.is_some() {
         session.set_failure_policy(FailurePolicy::fault_tolerant());
     }
+    // diagnostics (retry/straggler/infeasible-space warnings) belong
+    // to the session, so they land in the journal directory next to
+    // the exchanges they explain instead of an ephemeral stderr
+    session.set_diag_sink(DiagSink::File(dir.join("diag.log")));
 
     // The evaluator stack mirrors the campaign composition (injector
     // innermost, so the journal records the post-fault stream); the
@@ -719,6 +745,162 @@ fn report_session(
     Ok(())
 }
 
+/// `ceal serve`: run the multi-tenant ask/tell daemon until killed.
+fn serve_cmd(args: &Args, ctx: &ExpCtx) -> Result<(), CliError> {
+    let ttl = match args.opt_secs("session-ttl")? {
+        Some(d) => Some(d),
+        None if args.flag("no-session-ttl") => None,
+        None => Some(ceal::serve::DEFAULT_SESSION_TTL),
+    };
+    let cfg = ServeConfig {
+        addr: args.opt_or("addr", "127.0.0.1:7433").to_string(),
+        root: args
+            .opt_path("serve-root")
+            .unwrap_or_else(|| PathBuf::from("serve")),
+        ttl,
+        threads: ctx.threads,
+    };
+    ceal::serve::serve(cfg).map_err(CliError::from)
+}
+
+/// A non-finite float crosses the wire as a string; both forms parse
+/// back to the exact f64 the server measured.
+fn wire_float(v: &Json, key: &str) -> Result<f64, CliError> {
+    match v.get(key) {
+        Some(Json::Num(x)) => Ok(*x),
+        Some(Json::Str(s)) => s
+            .parse()
+            .map_err(|e| CliError::from(format!("bad '{key}' in finish payload: {e}"))),
+        _ => Err(format!("finish payload missing '{key}'").into()),
+    }
+}
+
+fn wire_usize(v: &Json, key: &str) -> Result<usize, CliError> {
+    v.get(key)
+        .and_then(Json::as_usize)
+        .ok_or_else(|| format!("finish payload missing integer '{key}'").into())
+}
+
+/// `ceal client`: open (or resume by token) one served session, drive
+/// it to completion measuring locally, and write the same
+/// `session_best.csv` an equivalent `ceal tune --checkpoint-dir` run
+/// would — byte for byte (the CI kill-resume cell `cmp`s the two).
+fn client_cmd(args: &Args, ctx: &ExpCtx) -> Result<(), CliError> {
+    let addr = args.opt_or("addr", "127.0.0.1:7433");
+    let throttle_ms = args.opt_f64("throttle-ms", 0.0)?;
+    let throttle = (throttle_ms > 0.0).then(|| Duration::from_secs_f64(throttle_ms / 1000.0));
+    let mut client = ServeClient::new(TcpTransport::connect(addr)?);
+    let info = match args.opt("token") {
+        Some(token) => {
+            for flag in ["workflow", "objective", "algo", "m", "pool", "seed", "scorer"] {
+                if args.opt(flag).is_some() {
+                    return Err(format!(
+                        "--{flag} conflicts with --token: the session's journal header pins \
+                         the cell settings"
+                    )
+                    .into());
+                }
+            }
+            client.reopen(token)?
+        }
+        None => client.open(&OpenSpec {
+            workflow: args.opt_or("workflow", "LV").into(),
+            objective: args.opt_or("objective", "comp").into(),
+            algo: args.opt_or("algo", "ceal").into(),
+            m: args.opt_usize("m", 50)?,
+            pool_size: ctx.pool_size,
+            seed: ctx.seed,
+            scorer: ctx.scorer.name().into(),
+        })?,
+    };
+    println!(
+        "session {}: {} on {} ({}), m={}, pool={}, seed={}{}",
+        info.token,
+        info.header.algo,
+        info.header.workflow,
+        info.header.objective,
+        info.header.m,
+        info.header.pool_size,
+        info.header.seed,
+        if info.resumed {
+            format!(" — resumed at {} exchanges", info.exchanges)
+        } else {
+            String::new()
+        }
+    );
+    if let Some(path) = args.opt_path("token-file") {
+        std::fs::write(&path, &info.token)
+            .map_err(|e| format!("cannot write {}: {e}", path.display()))?;
+    }
+    // The client-side evaluator is constructed exactly as `ceal tune`
+    // rep 0 constructs its collector (same seed, same RNG derivation),
+    // then fast-forwarded to the journaled noise position on resume —
+    // so the served run is bit-identical to the uninterrupted local
+    // one no matter how many times either side restarted.
+    let (wf, obj, algo) = resolve_header(&info.header)?;
+    let prob = Problem::new(wf, obj);
+    let mut rng = session_rng(info.header.seed, algo, 0);
+    let mut col = Collector::new(&prob, rng.derive_str("collector"));
+    if let Some(eval) = &info.eval {
+        col.restore_state(eval);
+    }
+    let payload = client.drive(&mut col, throttle)?;
+    let best_idx = wire_usize(&payload, "best_idx")?;
+    let best_config = payload
+        .get("best_config")
+        .and_then(Json::as_str)
+        .ok_or("finish payload missing 'best_config'")?
+        .to_string();
+    let best_truth = wire_float(&payload, "best_truth")?;
+    let collection_cost = wire_float(&payload, "collection_cost")?;
+    println!(
+        "best idx {best_idx}  config {best_config}  truth {} {}",
+        fnum(best_truth, 4),
+        obj.unit()
+    );
+    println!(
+        "measured {} workflow runs, collection cost {} {}",
+        wire_usize(&payload, "workflow_runs")?,
+        fnum(collection_cost, 3),
+        obj.unit()
+    );
+    let mut w = CsvWriter::new(&[
+        "algo",
+        "workflow",
+        "objective",
+        "m",
+        "pool",
+        "seed",
+        "best_idx",
+        "best_config",
+        "best_truth",
+        "collection_cost",
+        "workflow_runs",
+        "failed_runs",
+        "measured",
+    ]);
+    w.row(&[
+        info.header.algo.clone(),
+        info.header.workflow.clone(),
+        info.header.objective.clone(),
+        info.header.m.to_string(),
+        info.header.pool_size.to_string(),
+        info.header.seed.to_string(),
+        best_idx.to_string(),
+        best_config,
+        best_truth.to_string(),
+        collection_cost.to_string(),
+        wire_usize(&payload, "workflow_runs")?.to_string(),
+        wire_usize(&payload, "failed_runs")?.to_string(),
+        wire_usize(&payload, "measured")?.to_string(),
+    ]);
+    let path = ctx.out_dir.join("session_best.csv");
+    w.save(&path)
+        .map_err(|e| format!("cannot write {}: {e}", path.display()))?;
+    println!("best CSV -> {}", path.display());
+    Ok(())
+}
+
 /// Pool-cache and refit-amortization counters, printed (never written
 /// to a CSV — output files must stay byte-identical run to run) so the
 /// once-per-pool invariants are observable without a profiler.  The CI
@@ -781,5 +963,5 @@ fn info() {
 }
 
 fn usage() -> &'static str {
-    "usage: ceal <table N | fig N | all | robustness | tune | info> [flags]\n(see `ceal` source header or README for flags)"
+    "usage: ceal <table N | fig N | all | robustness | tune | serve | client | info> [flags]\n(see `ceal` source header or README for flags)"
 }

@@ -1,0 +1,162 @@
+//! A heap cell that owns one live [`TunerSession`] *together with*
+//! everything the session borrows.
+//!
+//! [`Tuner::session`] hands back `Box<dyn TunerSession + 'a>` — the
+//! session borrows the tuner, problem, pool and scorer for its whole
+//! life.  That contract is perfect for `drive()`-style scoped callers
+//! and unusable for a daemon, whose sessions outlive every stack
+//! frame.  [`SessionCell`] closes the gap without changing the session
+//! API: it boxes the borrowed-from values so their heap addresses are
+//! stable, builds the session against those allocations, and erases
+//! the borrow lifetime so the pair can be stored in a map.
+//!
+//! Safety rests on two structural facts, both local to this file:
+//!
+//! 1. every borrowed-from value is behind a `Box`/`Arc` whose heap
+//!    allocation never moves when the `SessionCell` itself moves, and
+//!    none of them is touched (mutated, replaced or dropped) while the
+//!    session is alive;
+//! 2. `session` is declared *first*, and Rust drops struct fields in
+//!    declaration order — the session is gone before any allocation it
+//!    borrows from is freed.
+
+use std::sync::Arc;
+
+use crate::config::WorkflowId;
+use crate::coordinator::{session_rng, tuner_for, Algo, PoolCache, ScorerKind};
+use crate::serve::protocol::ServeError;
+use crate::sim::{Objective, WorkflowRegistry};
+use crate::surrogate::Scorer;
+use crate::tuner::{
+    DiagSink, FailurePolicy, Pool, Problem, TraceHeader, Tuner, TunerOutput, TunerSession,
+};
+
+/// Resolve a journal/open header's cell names against the registries
+/// (the serve-side twin of the CLI's resolver, with structured
+/// errors).
+pub(crate) fn resolve_header(
+    header: &TraceHeader,
+) -> Result<(WorkflowId, Objective, Algo), ServeError> {
+    let wf = WorkflowId::from_name(&header.workflow).ok_or_else(|| {
+        ServeError::Usage(format!(
+            "workflow '{}' is not registered (registered: {})",
+            header.workflow,
+            WorkflowRegistry::global().names().join(" | ")
+        ))
+    })?;
+    let obj = Objective::from_name(&header.objective).ok_or_else(|| {
+        ServeError::Usage(format!("objective '{}' unknown (exec|comp)", header.objective))
+    })?;
+    let algo = Algo::from_name(&header.algo).ok_or_else(|| {
+        ServeError::Usage(format!(
+            "algorithm '{}' is not registered (registered: {})",
+            header.algo,
+            Algo::names().join(" | ")
+        ))
+    })?;
+    Ok((wf, obj, algo))
+}
+
+/// One tenant's live session plus the cell state it borrows.  Field
+/// order is load-bearing: see the module header.
+pub(crate) struct SessionCell {
+    /// `'static` is a lie told only inside this struct: the session
+    /// really borrows the four fields below.  `None` once finished.
+    session: Option<Box<dyn TunerSession + 'static>>,
+    #[allow(dead_code)] // owned for the session's borrows, never read
+    tuner: Box<dyn Tuner>,
+    #[allow(dead_code)]
+    scorer: Box<Scorer>,
+    pool: Arc<Pool>,
+    #[allow(dead_code)]
+    prob: Box<Problem>,
+}
+
+impl SessionCell {
+    /// Construct the cell for a header exactly as `ceal tune
+    /// --checkpoint-dir` constructs its session: same pool cache key,
+    /// same tuner, same RNG derivations — a serve-hosted session is
+    /// bit-identical to a CLI-driven one by construction.
+    pub(crate) fn build(
+        header: &TraceHeader,
+        rep: usize,
+        threads: usize,
+    ) -> Result<SessionCell, ServeError> {
+        let (wf, obj, algo) = resolve_header(header)?;
+        let prob = Box::new(Problem::new(wf, obj));
+        let pool = PoolCache::global()
+            .try_get_or_generate(&prob, header.pool_size, header.seed, threads)
+            .map_err(|e| ServeError::Infeasible(format!("cannot build pool for {wf}: {e}")))?;
+        let scorer = Box::new(
+            ScorerKind::from_name(&header.scorer)
+                .ok_or_else(|| {
+                    ServeError::Usage(format!(
+                        "scorer '{}' unknown (native|pjrt)",
+                        header.scorer
+                    ))
+                })?
+                .build(),
+        );
+        let tuner = tuner_for(algo, &prob, header.seed, header.ceal_params);
+        let mut rng = session_rng(header.seed, algo, rep);
+        let session: Box<dyn TunerSession + '_> =
+            tuner.session(&prob, &pool, &scorer, header.m, &mut rng);
+        // SAFETY: the session borrows `tuner`, `prob`, `pool` and
+        // `scorer` — all heap allocations behind Box/Arc moved into
+        // the same struct below, so their addresses outlive the
+        // session: the struct never exposes them, never mutates them,
+        // and drops `session` first (declaration order).  Erasing the
+        // lifetime is therefore sound for every use reachable through
+        // this struct's API.  Same pattern as the scoped-pointer
+        // erasure in `util::parallel`.
+        let session: Box<dyn TunerSession + 'static> = unsafe {
+            std::mem::transmute::<Box<dyn TunerSession + '_>, Box<dyn TunerSession + 'static>>(
+                session,
+            )
+        };
+        Ok(SessionCell {
+            session: Some(session),
+            tuner,
+            scorer,
+            pool,
+            prob,
+        })
+    }
+
+    /// The live session.  Panics only if called after `finish`, which
+    /// the manager's state machine rules out (finish unloads the
+    /// tenant).
+    pub(crate) fn session_mut(&mut self) -> &mut dyn TunerSession {
+        self.session
+            .as_mut()
+            .expect("session already finished")
+            .as_mut()
+    }
+
+    /// Route the session's library warnings into `sink` (the manager
+    /// points this at the tenant's `diag.log`).
+    pub(crate) fn set_diag_sink(&mut self, sink: DiagSink) {
+        self.session_mut().set_diag_sink(sink);
+    }
+
+    /// Arm the fault-tolerant policy when the header calls for it.
+    pub(crate) fn arm_from_header(&mut self, header: &TraceHeader) {
+        if header.faults.is_some() {
+            self.session_mut()
+                .set_failure_policy(FailurePolicy::fault_tolerant());
+        }
+    }
+
+    /// Consume the session into its output (panics if the session is
+    /// not done — callers check first).
+    pub(crate) fn finish(&mut self) -> TunerOutput {
+        self.session
+            .take()
+            .expect("session already finished")
+            .finish()
+    }
+
+    pub(crate) fn pool(&self) -> &Pool {
+        &self.pool
+    }
+}

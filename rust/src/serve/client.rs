@@ -1,0 +1,285 @@
+//! Client half of the serve protocol: a typed wrapper over any
+//! line-oriented transport.
+//!
+//! The same [`ServeClient`] drives a real daemon over TCP
+//! ([`TcpTransport`], used by `ceal client`) or an in-process
+//! [`SessionManager`] ([`Loopback`], used by the soak tests and the
+//! `serve/ask_tell_roundtrip` bench) — both paths go through the
+//! identical line codec, so the tests exercise exactly what the wire
+//! carries.
+//!
+//! Measurement happens on *this* side: the server's `ask` batches
+//! carry full configuration values, the client evaluates them with its
+//! own [`Evaluator`] (typically a `Collector` seeded exactly like
+//! `ceal tune`'s), and each `tell` ships the outcomes together with
+//! the evaluator's noise-stream checkpoint, which is what lets a
+//! crashed-and-restarted client resume bit-identically by token.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use crate::serve::manager::SessionManager;
+use crate::serve::protocol::{
+    ask_line, batch_from_json, close_line, finish_line, open_line, parse_response, reopen_line,
+    state_line, tell_line, OpenSpec, ServeError,
+};
+use crate::tuner::journal::eval_from_json;
+use crate::tuner::{
+    Evaluator, EvaluatorState, MeasurementBatch, MeasurementResult, TraceError, TraceHeader,
+};
+use crate::util::json::Json;
+
+fn io_err(msg: String) -> ServeError {
+    ServeError::Trace(TraceError::Io(msg))
+}
+
+/// One request line out, one response line back.
+pub trait LineTransport {
+    fn exchange(&mut self, line: &str) -> Result<String, ServeError>;
+}
+
+/// Blocking TCP transport for a remote daemon.
+pub struct TcpTransport {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl TcpTransport {
+    pub fn connect(addr: &str) -> Result<TcpTransport, ServeError> {
+        let stream = TcpStream::connect(addr)
+            .map_err(|e| io_err(format!("cannot connect to {addr}: {e}")))?;
+        let writer = stream
+            .try_clone()
+            .map_err(|e| io_err(format!("cannot clone connection: {e}")))?;
+        Ok(TcpTransport {
+            reader: BufReader::new(stream),
+            writer,
+        })
+    }
+}
+
+impl LineTransport for TcpTransport {
+    fn exchange(&mut self, line: &str) -> Result<String, ServeError> {
+        self.writer
+            .write_all(line.as_bytes())
+            .and_then(|()| self.writer.write_all(b"\n"))
+            .and_then(|()| self.writer.flush())
+            .map_err(|e| io_err(format!("send failed: {e}")))?;
+        let mut resp = String::new();
+        let n = self
+            .reader
+            .read_line(&mut resp)
+            .map_err(|e| io_err(format!("receive failed: {e}")))?;
+        if n == 0 {
+            return Err(io_err("server closed the connection".into()));
+        }
+        Ok(resp.trim_end().to_string())
+    }
+}
+
+/// In-process transport: drives a [`SessionManager`] directly through
+/// the same line codec the TCP path uses.
+pub struct Loopback<'m>(pub &'m SessionManager);
+
+impl LineTransport for Loopback<'_> {
+    fn exchange(&mut self, line: &str) -> Result<String, ServeError> {
+        Ok(self.0.handle_line(line))
+    }
+}
+
+/// Decoded `open` response.
+#[derive(Clone, Debug)]
+pub struct OpenInfo {
+    pub token: String,
+    pub resumed: bool,
+    pub done: bool,
+    pub exchanges: usize,
+    /// The session's pinned cell settings (journal header) — a
+    /// resuming client rebuilds its evaluator from these.
+    pub header: TraceHeader,
+    /// Last journaled evaluator checkpoint (resume only): restore it
+    /// into the client-side evaluator to continue the noise stream
+    /// where the journal left it.
+    pub eval: Option<EvaluatorState>,
+}
+
+/// Decoded `ask` response.
+#[derive(Clone, Debug)]
+pub struct AskReply {
+    pub done: bool,
+    pub seq: usize,
+    /// Present iff `!done`.
+    pub batch: Option<MeasurementBatch>,
+}
+
+/// Decoded `tell` response.
+#[derive(Clone, Copy, Debug)]
+pub struct TellReply {
+    pub applied: bool,
+    pub duplicate: bool,
+    pub done: bool,
+}
+
+fn bool_field(v: &Json, key: &str) -> bool {
+    v.get(key).and_then(Json::as_bool).unwrap_or(false)
+}
+
+fn usize_field(v: &Json, key: &str, what: &str) -> Result<usize, ServeError> {
+    v.get(key)
+        .and_then(Json::as_usize)
+        .ok_or_else(|| io_err(format!("{what} response missing integer '{key}'")))
+}
+
+/// Typed protocol client over any transport.
+pub struct ServeClient<T: LineTransport> {
+    transport: T,
+    token: Option<String>,
+}
+
+impl<T: LineTransport> ServeClient<T> {
+    pub fn new(transport: T) -> ServeClient<T> {
+        ServeClient {
+            transport,
+            token: None,
+        }
+    }
+
+    /// The session token, once `open`/`reopen` succeeded.
+    pub fn token(&self) -> Option<&str> {
+        self.token.as_deref()
+    }
+
+    fn require_token(&self) -> Result<&str, ServeError> {
+        self.token
+            .as_deref()
+            .ok_or_else(|| ServeError::Usage("no session open on this client".into()))
+    }
+
+    fn roundtrip(&mut self, line: &str) -> Result<Json, ServeError> {
+        let resp = self.transport.exchange(line)?;
+        parse_response(&resp)
+    }
+
+    fn decode_open(&mut self, v: &Json) -> Result<OpenInfo, ServeError> {
+        let token = v
+            .get("token")
+            .and_then(Json::as_str)
+            .ok_or_else(|| io_err("open response missing 'token'".into()))?
+            .to_string();
+        let header = v
+            .get("header")
+            .ok_or_else(|| io_err("open response missing 'header'".into()))
+            .and_then(|h| TraceHeader::from_json(h).map_err(ServeError::Trace))?;
+        let eval = match v.get("eval") {
+            None | Some(Json::Null) => None,
+            Some(e) => Some(eval_from_json(e, "open eval state").map_err(ServeError::Trace)?),
+        };
+        let info = OpenInfo {
+            token: token.clone(),
+            resumed: bool_field(v, "resumed"),
+            done: bool_field(v, "done"),
+            exchanges: usize_field(v, "exchanges", "open")?,
+            header,
+            eval,
+        };
+        self.token = Some(token);
+        Ok(info)
+    }
+
+    /// Open a fresh session for `spec`.
+    pub fn open(&mut self, spec: &OpenSpec) -> Result<OpenInfo, ServeError> {
+        let v = self.roundtrip(&open_line(spec))?;
+        self.decode_open(&v)
+    }
+
+    /// Resume an existing session by token (across client restarts,
+    /// daemon restarts, or both).
+    pub fn reopen(&mut self, token: &str) -> Result<OpenInfo, ServeError> {
+        let v = self.roundtrip(&reopen_line(token))?;
+        self.decode_open(&v)
+    }
+
+    pub fn ask(&mut self) -> Result<AskReply, ServeError> {
+        let line = ask_line(self.require_token()?);
+        let v = self.roundtrip(&line)?;
+        let done = bool_field(&v, "done");
+        let seq = usize_field(&v, "seq", "ask")?;
+        let batch = if done {
+            None
+        } else {
+            let b = v
+                .get("batch")
+                .ok_or_else(|| io_err("ask response missing 'batch'".into()))?;
+            Some(batch_from_json(b)?)
+        };
+        Ok(AskReply { done, seq, batch })
+    }
+
+    pub fn tell(
+        &mut self,
+        seq: usize,
+        results: &[MeasurementResult],
+        eval: Option<&EvaluatorState>,
+    ) -> Result<TellReply, ServeError> {
+        let line = tell_line(self.require_token()?, seq, results, eval);
+        let v = self.roundtrip(&line)?;
+        Ok(TellReply {
+            applied: bool_field(&v, "applied"),
+            duplicate: bool_field(&v, "duplicate"),
+            done: bool_field(&v, "done"),
+        })
+    }
+
+    /// Raw progress snapshot (the `state` object plus `done` and
+    /// `exchanges`).
+    pub fn state(&mut self) -> Result<Json, ServeError> {
+        let line = state_line(self.require_token()?);
+        self.roundtrip(&line)
+    }
+
+    /// Finish the session, returning the result payload (idempotent on
+    /// the server: repeat calls answer from `result.json`).
+    pub fn finish(&mut self) -> Result<Json, ServeError> {
+        let line = finish_line(self.require_token()?);
+        self.roundtrip(&line)
+    }
+
+    /// Evict the session to disk (it stays resumable by token).
+    pub fn close(&mut self) -> Result<(), ServeError> {
+        let line = close_line(self.require_token()?);
+        self.roundtrip(&line)?;
+        Ok(())
+    }
+
+    /// Drive the open session to completion with a client-side
+    /// evaluator: ask, measure locally, tell (shipping the evaluator
+    /// checkpoint), repeat; then finish.  `throttle` inserts a sleep
+    /// after each tell — the CI kill-resume cell uses it to widen the
+    /// SIGKILL window.
+    pub fn drive(
+        &mut self,
+        evaluator: &mut dyn Evaluator,
+        throttle: Option<Duration>,
+    ) -> Result<Json, ServeError> {
+        loop {
+            let ask = self.ask()?;
+            if ask.done {
+                break;
+            }
+            let batch = ask
+                .batch
+                .expect("ask replies carry a batch unless done");
+            let results = evaluator.evaluate(&batch);
+            let eval = evaluator.checkpoint_state();
+            let reply = self.tell(ask.seq, &results, eval.as_ref())?;
+            if let Some(d) = throttle {
+                std::thread::sleep(d);
+            }
+            if reply.done {
+                break;
+            }
+        }
+        self.finish()
+    }
+}

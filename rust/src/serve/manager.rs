@@ -1,0 +1,788 @@
+//! The token-keyed session manager: every verb of the wire protocol,
+//! independent of any transport.
+//!
+//! One [`SessionManager`] multiplexes all tenants over the process's
+//! worker pool.  Sessions own no threads: each verb executes on the
+//! calling connection's thread under that tenant's own mutex, and the
+//! heavy phases inside ask/tell (surrogate refits, pool scoring)
+//! fan out through `util::parallel` exactly as CLI-driven sessions
+//! do.  The global map lock is held only to look up or insert a
+//! tenant's `Arc`, never across session work — a slow tenant delays
+//! nobody else.
+//!
+//! Durability is by construction, not by protocol discipline:
+//!
+//! - every session lives under the PR 7 write-ahead
+//!   [`SessionJournal`] in `<serve-root>/<token>/`, so the daemon can
+//!   be SIGKILLed at any instant and a restart on the same root
+//!   recovers every in-flight session bit-identically;
+//! - an idle tenant is *evicted* by simply dropping its in-memory
+//!   half (the journal already holds everything) and is lazily
+//!   rehydrated — [`SessionJournal::resume`] + `replay_into` — on its
+//!   next touch.  Eviction, daemon restart and client reconnect are
+//!   therefore the same code path;
+//! - a journaled-but-untold ask is re-materialized on rehydration (and
+//!   verified against the journal), so a `tell` that raced a crash or
+//!   arrived on a different connection than its `ask` still applies.
+//!
+//! `tell` is seq-keyed and idempotent: re-telling an already-answered
+//! exchange is acknowledged as a duplicate without re-applying; a
+//! `tell` for a seq the session never issued is a structured
+//! `unknown-request` error.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{Algo, ScorerKind};
+use crate::serve::cell::SessionCell;
+use crate::serve::protocol::{
+    batch_json, err_line, ok_line, parse_request, state_json, OpenSpec, Request, ServeError,
+};
+use crate::sim::{Objective, WorkflowRegistry};
+use crate::tuner::journal::checkpoint_exists;
+use crate::tuner::{
+    replay_into, DiagSink, Evaluator, EvaluatorState, MeasurementBatch, MeasurementResult,
+    SessionJournal, TraceError, TraceHeader,
+};
+use crate::util::fsio;
+use crate::util::json::{self, Json};
+
+/// Default idle TTL before a session is evicted to disk.
+pub const DEFAULT_SESSION_TTL: Duration = Duration::from_secs(900);
+
+/// Per-tenant diagnostics file (the session's `DiagSink::File`
+/// target), kept beside the journal in the token directory.
+pub const DIAG_FILE: &str = "diag.log";
+
+/// The idempotent finish artifact: written atomically when a session
+/// finishes, answered verbatim on any repeat `finish`.
+pub const RESULT_FILE: &str = "result.json";
+
+/// The evaluator is on the *client* side of the wire, so rehydration
+/// replays journaled outcomes with no evaluator at all: the journal
+/// carries every told value, `replay_into` never measures, and the
+/// client's own evaluator state is restored client-side from the
+/// journaled checkpoint returned by `open`.
+struct RemoteEvaluator;
+
+impl Evaluator for RemoteEvaluator {
+    fn evaluate(&mut self, _batch: &MeasurementBatch) -> Vec<MeasurementResult> {
+        unreachable!("replay never measures; live measurement happens client-side")
+    }
+}
+
+/// A tenant's in-memory half.  Everything here is reconstructible from
+/// the journal: dropping a `Live` *is* eviction.
+struct Live {
+    cell: SessionCell,
+    journal: SessionJournal,
+    /// The asked-but-untold batch, keyed by its exchange seq
+    /// (`journal.exchanges()` at ask time).  Kept so a re-`ask` after
+    /// a reconnect is answered idempotently instead of panicking the
+    /// session, and so `tell` can check arity.
+    outstanding: Option<(usize, MeasurementBatch)>,
+    /// True once `ask` returned (or would return) the empty batch.
+    done: bool,
+    /// Last evaluator checkpoint journaled with a tell — returned on
+    /// resume-by-token so a restarted client can restore its own
+    /// noise stream.
+    last_eval: Option<EvaluatorState>,
+}
+
+struct Tenant {
+    dir: PathBuf,
+    live: Option<Live>,
+    last_used: Instant,
+}
+
+impl Tenant {
+    fn unloaded(dir: PathBuf) -> Tenant {
+        Tenant {
+            dir,
+            live: None,
+            last_used: Instant::now(),
+        }
+    }
+}
+
+/// Lock a tenant, treating a poisoned mutex like a crash: the
+/// in-memory half may be torn mid-update, but the write-ahead journal
+/// is the source of truth, so dropping the live state and rehydrating
+/// is always safe.
+fn lock_tenant(arc: &Arc<Mutex<Tenant>>) -> MutexGuard<'_, Tenant> {
+    match arc.lock() {
+        Ok(g) => g,
+        Err(poisoned) => {
+            let mut g = poisoned.into_inner();
+            g.live = None;
+            g
+        }
+    }
+}
+
+/// Non-finite floats have no JSON literal; encode them as strings
+/// (`"NaN"`, `"inf"`, `"-inf"` all parse back via `str::parse`).
+/// Lazy pools report `NaN` ground truth by design, so `finish`
+/// payloads must survive them.
+fn float_json(x: f64) -> Json {
+    if x.is_finite() {
+        Json::Num(x)
+    } else {
+        Json::Str(x.to_string())
+    }
+}
+
+/// The multi-tenant session registry for one serve root.
+pub struct SessionManager {
+    root: PathBuf,
+    threads: usize,
+    ttl: Option<Duration>,
+    next_token: AtomicU64,
+    tenants: Mutex<HashMap<String, Arc<Mutex<Tenant>>>>,
+}
+
+impl SessionManager {
+    /// Open (creating if needed) a serve root.  `ttl: None` disables
+    /// idle eviction (tests drive eviction explicitly).
+    pub fn new(
+        root: &Path,
+        threads: usize,
+        ttl: Option<Duration>,
+    ) -> Result<SessionManager, ServeError> {
+        std::fs::create_dir_all(root).map_err(|e| {
+            ServeError::Trace(TraceError::Io(format!(
+                "cannot create serve root {}: {e}",
+                root.display()
+            )))
+        })?;
+        Ok(SessionManager {
+            root: root.to_path_buf(),
+            threads,
+            ttl,
+            next_token: AtomicU64::new(0),
+            tenants: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// The configured idle TTL.
+    pub fn ttl(&self) -> Option<Duration> {
+        self.ttl
+    }
+
+    /// The one transport-facing entry point: one request line in, one
+    /// response line out.  Never panics outward, never drops the
+    /// conversation — every failure is a structured error response.
+    pub fn handle_line(&self, line: &str) -> String {
+        match parse_request(line).and_then(|req| self.handle(req)) {
+            Ok(resp) => resp,
+            Err(e) => err_line(&e),
+        }
+    }
+
+    /// Dispatch one decoded request.
+    pub fn handle(&self, req: Request) -> Result<String, ServeError> {
+        match req {
+            Request::Open { token: Some(t), .. } => self.open_resume(&t),
+            Request::Open { spec, .. } => {
+                self.open_fresh(&spec.expect("parse_request yields spec when token absent"))
+            }
+            Request::Ask { token } => self.ask(&token),
+            Request::Tell {
+                token,
+                seq,
+                results,
+                eval,
+            } => self.tell(&token, seq, &results, eval),
+            Request::State { token } => self.state(&token),
+            Request::Finish { token } => self.finish(&token),
+            Request::Close { token } => self.close(&token),
+        }
+    }
+
+    // ---- verb implementations --------------------------------------
+
+    fn open_fresh(&self, spec: &OpenSpec) -> Result<String, ServeError> {
+        let header = header_for(spec)?;
+        let token = self.allocate_token();
+        let dir = self.root.join(&token);
+        let journal =
+            SessionJournal::create(&dir, &header, 0).map_err(ServeError::Trace)?;
+        let mut cell = SessionCell::build(&header, 0, self.threads)?;
+        cell.set_diag_sink(DiagSink::File(dir.join(DIAG_FILE)));
+        cell.arm_from_header(&header);
+        let live = Live {
+            cell,
+            journal,
+            outstanding: None,
+            done: false,
+            last_eval: None,
+        };
+        let tenant = Tenant {
+            dir,
+            live: Some(live),
+            last_used: Instant::now(),
+        };
+        self.tenants
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .insert(token.clone(), Arc::new(Mutex::new(tenant)));
+        Ok(ok_line(vec![
+            ("token", Json::Str(token)),
+            ("resumed", Json::Bool(false)),
+            ("done", Json::Bool(false)),
+            ("exchanges", Json::Num(0.0)),
+            ("header", header.to_json()),
+        ]))
+    }
+
+    fn open_resume(&self, token: &str) -> Result<String, ServeError> {
+        self.with_live(token, |live| {
+            let done = live.done;
+            let exchanges = live.journal.exchanges();
+            let mut pairs = vec![
+                ("token", Json::Str(token.into())),
+                ("resumed", Json::Bool(true)),
+                ("done", Json::Bool(done)),
+                ("exchanges", Json::Num(exchanges as f64)),
+                ("header", live.journal.header().to_json()),
+            ];
+            if let Some(eval) = &live.last_eval {
+                pairs.push(("eval", crate::tuner::journal::eval_json(eval)));
+            }
+            Ok(ok_line(pairs))
+        })
+    }
+
+    fn ask(&self, token: &str) -> Result<String, ServeError> {
+        self.with_live(token, |live| {
+            if let Some((seq, batch)) = &live.outstanding {
+                // idempotent re-ask: same batch, same seq — the
+                // reconnecting client picks up where it left off
+                return Ok(ok_line(vec![
+                    ("done", Json::Bool(false)),
+                    ("seq", Json::Num(*seq as f64)),
+                    ("batch", batch_json(batch)),
+                ]));
+            }
+            if live.done {
+                return Ok(ok_line(vec![
+                    ("done", Json::Bool(true)),
+                    ("seq", Json::Num(live.journal.exchanges() as f64)),
+                ]));
+            }
+            let batch = live.cell.session_mut().try_ask().ok_or_else(|| {
+                ServeError::Trace(TraceError::StateMismatch {
+                    detail: "session has an untold batch the manager lost track of".into(),
+                })
+            })?;
+            if batch.is_empty() {
+                live.done = true;
+                return Ok(ok_line(vec![
+                    ("done", Json::Bool(true)),
+                    ("seq", Json::Num(live.journal.exchanges() as f64)),
+                ]));
+            }
+            let seq = live.journal.exchanges();
+            live.journal.record_ask(&batch);
+            if let Some(e) = live.journal.error() {
+                return Err(ServeError::Trace(e.clone()));
+            }
+            let resp = ok_line(vec![
+                ("done", Json::Bool(false)),
+                ("seq", Json::Num(seq as f64)),
+                ("batch", batch_json(&batch)),
+            ]);
+            live.outstanding = Some((seq, batch));
+            Ok(resp)
+        })
+    }
+
+    fn tell(
+        &self,
+        token: &str,
+        seq: usize,
+        results: &[MeasurementResult],
+        eval: Option<EvaluatorState>,
+    ) -> Result<String, ServeError> {
+        self.with_live(token, |live| {
+            let duplicate = |seq: usize| {
+                Ok(ok_line(vec![
+                    ("duplicate", Json::Bool(true)),
+                    ("seq", Json::Num(seq as f64)),
+                ]))
+            };
+            match &live.outstanding {
+                Some((cur, batch)) if seq == *cur => {
+                    if results.len() != batch.len() {
+                        return Err(ServeError::Usage(format!(
+                            "tell for seq {seq} carries {} results but the batch has {} \
+                             requests",
+                            results.len(),
+                            batch.len()
+                        )));
+                    }
+                    live.journal.record_tell(results, eval);
+                    live.cell.session_mut().tell(results);
+                    let digest = live.cell.session_mut().digest();
+                    live.journal.after_apply(digest);
+                    live.outstanding = None;
+                    live.last_eval = eval;
+                    live.done = live.cell.session_mut().state().done;
+                    if let Some(e) = live.journal.error() {
+                        return Err(ServeError::Trace(e.clone()));
+                    }
+                    Ok(ok_line(vec![
+                        ("applied", Json::Bool(true)),
+                        ("seq", Json::Num(seq as f64)),
+                        ("done", Json::Bool(live.done)),
+                    ]))
+                }
+                Some((cur, _)) if seq < *cur => duplicate(seq),
+                Some((cur, _)) => Err(ServeError::UnknownRequest {
+                    seq,
+                    detail: format!("the outstanding batch is seq {cur}"),
+                }),
+                None if seq < live.journal.exchanges() => duplicate(seq),
+                None => Err(ServeError::UnknownRequest {
+                    seq,
+                    detail: "no batch is outstanding".into(),
+                }),
+            }
+        })
+    }
+
+    fn state(&self, token: &str) -> Result<String, ServeError> {
+        self.with_live(token, |live| {
+            let s = live.cell.session_mut().state();
+            Ok(ok_line(vec![
+                ("done", Json::Bool(live.done || s.done)),
+                ("exchanges", Json::Num(live.journal.exchanges() as f64)),
+                ("state", state_json(&s)),
+            ]))
+        })
+    }
+
+    fn finish(&self, token: &str) -> Result<String, ServeError> {
+        validate_token(token)?;
+        let arc = self.tenant_arc(token);
+        let mut t = lock_tenant(&arc);
+        t.last_used = Instant::now();
+        let result_path = t.dir.join(RESULT_FILE);
+        // idempotent repeat finish: answer from the sealed artifact
+        if let Ok(text) = std::fs::read_to_string(&result_path) {
+            let payload = json::parse(&text).map_err(|e| {
+                ServeError::Trace(TraceError::Malformed(format!(
+                    "corrupt {}: {e}",
+                    result_path.display()
+                )))
+            })?;
+            return Ok(ok_payload(payload));
+        }
+        if let Err(e) = self.ensure_live(&mut t) {
+            drop(t);
+            self.forget_if_unloaded(token, &e);
+            return Err(e);
+        }
+        let live = t.live.as_mut().expect("ensure_live populated");
+        if live.outstanding.is_some() {
+            return Err(ServeError::NotDone(
+                "cannot finish: the last asked batch has not been told yet".into(),
+            ));
+        }
+        if !live.done {
+            // the session may be complete without having issued its
+            // empty ask yet; probe — and if it still wants work, keep
+            // the freshly asked batch outstanding for the next ask
+            let batch = live.cell.session_mut().try_ask().ok_or_else(|| {
+                ServeError::Trace(TraceError::StateMismatch {
+                    detail: "session has an untold batch the manager lost track of".into(),
+                })
+            })?;
+            if batch.is_empty() {
+                live.done = true;
+            } else {
+                let seq = live.journal.exchanges();
+                live.journal.record_ask(&batch);
+                if let Some(e) = live.journal.error() {
+                    return Err(ServeError::Trace(e.clone()));
+                }
+                live.outstanding = Some((seq, batch));
+                return Err(ServeError::NotDone(
+                    "cannot finish: the session still needs measurements".into(),
+                ));
+            }
+        }
+        let out = live.cell.finish();
+        let pool = live.cell.pool();
+        let payload = Json::obj(vec![
+            ("token", Json::Str(token.into())),
+            ("best_idx", Json::Num(out.best_idx as f64)),
+            (
+                "best_config",
+                Json::Str(pool.configs[out.best_idx].to_string()),
+            ),
+            ("best_truth", float_json(pool.truth_of(out.best_idx))),
+            ("collection_cost", float_json(out.collection_cost)),
+            ("workflow_runs", Json::Num(out.workflow_runs as f64)),
+            ("failed_runs", Json::Num(out.failed_runs as f64)),
+            ("measured", Json::Num(out.measured.len() as f64)),
+        ]);
+        fsio::atomic_write(&result_path, payload.compact().as_bytes()).map_err(|e| {
+            ServeError::Trace(TraceError::Io(format!(
+                "cannot write {}: {e}",
+                result_path.display()
+            )))
+        })?;
+        // unload: the journal and result stay on disk (reopenable by
+        // token); the in-memory tenant is spent
+        t.live = None;
+        drop(t);
+        self.forget(token);
+        Ok(ok_payload(payload))
+    }
+
+    fn close(&self, token: &str) -> Result<String, ServeError> {
+        validate_token(token)?;
+        let dir = self.root.join(token);
+        let arc = self.tenant_arc(token);
+        let mut t = lock_tenant(&arc);
+        let known = t.live.is_some() || checkpoint_exists(&dir) || dir.join(RESULT_FILE).is_file();
+        t.live = None;
+        drop(t);
+        self.forget(token);
+        if !known {
+            return Err(ServeError::UnknownToken(token.into()));
+        }
+        Ok(ok_line(vec![
+            ("closed", Json::Bool(true)),
+            ("token", Json::Str(token.into())),
+        ]))
+    }
+
+    // ---- eviction ---------------------------------------------------
+
+    /// Evict every tenant idle for at least `ttl` (its in-memory half
+    /// drops; the journal remains).  Busy tenants are skipped — a held
+    /// lock means the tenant is anything but idle.  Returns the number
+    /// evicted.
+    pub fn evict_idle(&self, ttl: Duration) -> usize {
+        let arcs: Vec<Arc<Mutex<Tenant>>> = {
+            let map = self.tenants.lock().unwrap_or_else(|p| p.into_inner());
+            map.values().cloned().collect()
+        };
+        let mut evicted = 0;
+        for arc in arcs {
+            if let Ok(mut t) = arc.try_lock() {
+                if t.live.is_some() && t.last_used.elapsed() >= ttl {
+                    t.live = None;
+                    evicted += 1;
+                }
+            }
+        }
+        evicted
+    }
+
+    /// One sweep at the configured TTL (no-op when eviction is off).
+    pub fn sweep(&self) -> usize {
+        match self.ttl {
+            Some(ttl) => self.evict_idle(ttl),
+            None => 0,
+        }
+    }
+
+    /// Tenants currently resident in memory (diagnostic).
+    pub fn live_sessions(&self) -> usize {
+        let map = self.tenants.lock().unwrap_or_else(|p| p.into_inner());
+        map.values()
+            .filter(|arc| arc.try_lock().map(|t| t.live.is_some()).unwrap_or(true))
+            .count()
+    }
+
+    // ---- internals --------------------------------------------------
+
+    fn allocate_token(&self) -> String {
+        loop {
+            let n = self.next_token.fetch_add(1, Ordering::Relaxed) + 1;
+            let token = format!("s{n:06}");
+            let dir = self.root.join(&token);
+            // skip tokens a previous daemon incarnation handed out:
+            // restart on the same root must never clobber a session
+            if !checkpoint_exists(&dir) && !dir.join(RESULT_FILE).is_file() {
+                return token;
+            }
+        }
+    }
+
+    fn tenant_arc(&self, token: &str) -> Arc<Mutex<Tenant>> {
+        let mut map = self.tenants.lock().unwrap_or_else(|p| p.into_inner());
+        map.entry(token.to_string())
+            .or_insert_with(|| Arc::new(Mutex::new(Tenant::unloaded(self.root.join(token)))))
+            .clone()
+    }
+
+    fn forget(&self, token: &str) {
+        let mut map = self.tenants.lock().unwrap_or_else(|p| p.into_inner());
+        map.remove(token);
+    }
+
+    /// Drop the placeholder a failed lookup left behind, so bad tokens
+    /// don't accumulate map entries.
+    fn forget_if_unloaded(&self, token: &str, e: &ServeError) {
+        if matches!(e, ServeError::UnknownToken(_)) {
+            let mut map = self.tenants.lock().unwrap_or_else(|p| p.into_inner());
+            if let Some(arc) = map.get(token) {
+                if arc.try_lock().map(|t| t.live.is_none()).unwrap_or(false) {
+                    map.remove(token);
+                }
+            }
+        }
+    }
+
+    /// Run `f` with the tenant's live half, rehydrating from the
+    /// journal first if it was evicted (or if this daemon just
+    /// restarted and has never seen the token).
+    fn with_live<F>(&self, token: &str, f: F) -> Result<String, ServeError>
+    where
+        F: FnOnce(&mut Live) -> Result<String, ServeError>,
+    {
+        validate_token(token)?;
+        let arc = self.tenant_arc(token);
+        let mut t = lock_tenant(&arc);
+        t.last_used = Instant::now();
+        if let Err(e) = self.ensure_live(&mut t) {
+            drop(t);
+            self.forget_if_unloaded(token, &e);
+            return Err(e);
+        }
+        f(t.live.as_mut().expect("ensure_live populated"))
+    }
+
+    /// Rehydrate an evicted tenant: resume the journal, rebuild the
+    /// cell, replay every journaled exchange, and re-materialize the
+    /// in-flight ask (verified against the journal) if one was pending
+    /// at eviction/crash time.
+    fn ensure_live(&self, t: &mut Tenant) -> Result<(), ServeError> {
+        if t.live.is_some() {
+            return Ok(());
+        }
+        if !checkpoint_exists(&t.dir) {
+            let token = t
+                .dir
+                .file_name()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default();
+            return Err(ServeError::UnknownToken(token));
+        }
+        let (mut journal, loaded) = SessionJournal::resume(&t.dir).map_err(ServeError::Trace)?;
+        for note in &loaded.recovered {
+            // crash residue (torn final record) — goes to the
+            // tenant's own diag file, not the shared stderr
+            append_diag(&t.dir, note);
+        }
+        let header = journal.header().clone();
+        let mut cell = SessionCell::build(&header, journal.rep(), self.threads)?;
+        cell.set_diag_sink(DiagSink::File(t.dir.join(DIAG_FILE)));
+        cell.arm_from_header(&header);
+        replay_into(cell.session_mut(), &mut RemoteEvaluator, &loaded)
+            .map_err(ServeError::Trace)?;
+        let done = cell.session_mut().state().done;
+        let last_eval = loaded.eval();
+        let mut outstanding = None;
+        if journal.has_pending() {
+            // the crash/eviction hit between an ask and its tell:
+            // re-issue the batch now so a reconnecting client's tell
+            // (or re-ask) finds it, and let record_ask verify it
+            // against the journaled one
+            let batch = cell.session_mut().try_ask().ok_or_else(|| {
+                ServeError::Trace(TraceError::StateMismatch {
+                    detail: "journal holds a pending ask but the rebuilt session has an \
+                             untold batch"
+                        .into(),
+                })
+            })?;
+            let seq = journal.exchanges();
+            journal.record_ask(&batch);
+            if let Some(e) = journal.error() {
+                return Err(ServeError::Trace(e.clone()));
+            }
+            outstanding = Some((seq, batch));
+        }
+        t.live = Some(Live {
+            cell,
+            journal,
+            outstanding,
+            done,
+            last_eval,
+        });
+        Ok(())
+    }
+}
+
+/// Append one warning line to the tenant's diag file (best-effort;
+/// falls back to stderr like `DiagSink::File`).
+fn append_diag(dir: &Path, msg: &str) {
+    use std::io::Write as _;
+    let ok = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(dir.join(DIAG_FILE))
+        .and_then(|mut f| writeln!(f, "warning: {msg}"));
+    if ok.is_err() {
+        eprintln!("warning: {msg}");
+    }
+}
+
+/// Tokens name directories under the serve root: constrain them to a
+/// safe alphabet so a hostile token can never traverse outside it.
+fn validate_token(token: &str) -> Result<(), ServeError> {
+    let ok = !token.is_empty()
+        && token.len() <= 64
+        && !token.starts_with('.')
+        && token
+            .chars()
+            .all(|c| c.is_ascii_alphanumeric() || matches!(c, '-' | '_' | '.'));
+    if ok {
+        Ok(())
+    } else {
+        Err(ServeError::Usage(format!(
+            "invalid token '{token}' (want 1-64 chars of [A-Za-z0-9._-], not starting \
+             with '.')"
+        )))
+    }
+}
+
+/// Build the canonical journal header for a fresh open: names resolve
+/// through the same registries as the CLI, so the header (and the
+/// session it pins) is exactly what `ceal tune` would produce.
+fn header_for(spec: &OpenSpec) -> Result<TraceHeader, ServeError> {
+    let wf = crate::config::WorkflowId::from_name(&spec.workflow).ok_or_else(|| {
+        ServeError::Usage(format!(
+            "unknown workflow '{}' (registered: {})",
+            spec.workflow,
+            WorkflowRegistry::global().names().join(" | ")
+        ))
+    })?;
+    let obj = Objective::from_name(&spec.objective).ok_or_else(|| {
+        ServeError::Usage(format!("unknown objective '{}' (exec|comp)", spec.objective))
+    })?;
+    let algo = Algo::from_name(&spec.algo).ok_or_else(|| {
+        ServeError::Usage(format!(
+            "unknown algorithm '{}' (registered: {})",
+            spec.algo,
+            Algo::names().join(" | ")
+        ))
+    })?;
+    let scorer = ScorerKind::from_name(&spec.scorer).ok_or_else(|| {
+        ServeError::Usage(format!("unknown scorer '{}' (native|pjrt)", spec.scorer))
+    })?;
+    if spec.m == 0 {
+        return Err(ServeError::Usage("'m' must be at least 1".into()));
+    }
+    if spec.pool_size == 0 {
+        return Err(ServeError::Usage("'pool' must be at least 1".into()));
+    }
+    Ok(TraceHeader {
+        algo: algo.name().into(),
+        workflow: wf.name().into(),
+        objective: obj.name().into(),
+        m: spec.m,
+        pool_size: spec.pool_size,
+        seed: spec.seed,
+        scorer: scorer.name().into(),
+        ceal_params: None,
+        faults: None,
+    })
+}
+
+/// Wrap a payload object as a successful response (used by `finish`,
+/// whose payload must round-trip through `result.json` verbatim).
+fn ok_payload(payload: Json) -> String {
+    let mut map = match payload {
+        Json::Obj(map) => map,
+        other => {
+            let mut m = std::collections::BTreeMap::new();
+            m.insert("result".to_string(), other);
+            m
+        }
+    };
+    map.insert("ok".to_string(), Json::Bool(true));
+    map.insert(
+        "v".to_string(),
+        Json::Num(crate::serve::protocol::PROTO_VERSION as f64),
+    );
+    Json::Obj(map).compact()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_root(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("ceal-serve-mgr-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn token_validation_rejects_traversal() {
+        assert!(validate_token("s000001").is_ok());
+        assert!(validate_token("retuned-cell_7.a").is_ok());
+        assert!(validate_token("").is_err());
+        assert!(validate_token("..").is_err());
+        assert!(validate_token("a/b").is_err());
+        assert!(validate_token("a\\b").is_err());
+        assert!(validate_token(&"x".repeat(65)).is_err());
+    }
+
+    #[test]
+    fn unknown_token_is_structured_and_leaves_no_placeholder() {
+        let root = temp_root("unknown");
+        let mgr = SessionManager::new(&root, 1, None).unwrap();
+        let resp = mgr.handle_line(r#"{"verb":"ask","token":"s999999"}"#);
+        assert!(resp.contains("\"ok\":false"), "{resp}");
+        assert!(resp.contains("unknown-token"), "{resp}");
+        assert_eq!(
+            mgr.tenants.lock().unwrap().len(),
+            0,
+            "failed lookups must not leak map entries"
+        );
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn bad_requests_are_structured_usage_errors() {
+        let root = temp_root("usage");
+        let mgr = SessionManager::new(&root, 1, None).unwrap();
+        for line in [
+            "not json at all",
+            r#"{"no":"verb"}"#,
+            r#"{"verb":"warp","token":"s1"}"#,
+            r#"{"verb":"tell","token":"s1"}"#,
+            r#"{"verb":"open","token":"../escape"}"#,
+        ] {
+            let resp = mgr.handle_line(line);
+            assert!(resp.contains("\"ok\":false"), "{line} -> {resp}");
+            assert!(resp.contains("\"code\":1"), "{line} -> {resp}");
+        }
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn nonfinite_floats_survive_the_wire() {
+        assert_eq!(float_json(2.5), Json::Num(2.5));
+        let nan = float_json(f64::NAN);
+        assert_eq!(nan, Json::Str("NaN".into()));
+        let text = Json::obj(vec![("best_truth", nan)]).compact();
+        let back = json::parse(&text).unwrap();
+        let parsed: f64 = back
+            .get("best_truth")
+            .and_then(Json::as_str)
+            .unwrap()
+            .parse()
+            .unwrap();
+        assert!(parsed.is_nan());
+    }
+}

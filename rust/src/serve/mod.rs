@@ -1,0 +1,35 @@
+//! `ceal serve` — the tuning daemon: every registered workflow ×
+//! algorithm as a long-running, multi-tenant ask/tell service.
+//!
+//! Layering (one module per concern):
+//!
+//! * [`protocol`] — the versioned line-delimited JSON codec and the
+//!   structured [`ServeError`](protocol::ServeError) taxonomy (shared
+//!   with the CLI's exit codes);
+//! * [`cell`] — one tenant's live session plus everything it borrows,
+//!   stored as a single movable heap cell;
+//! * [`manager`] — the token-keyed [`SessionManager`](manager::SessionManager):
+//!   verb semantics, idempotent tells, lazy rehydration from the
+//!   write-ahead journal, idle eviction;
+//! * [`server`] — the `std::net` TCP front end (thread per
+//!   connection, sessions independent of connections);
+//! * [`client`] — the typed client over TCP or in-process loopback,
+//!   used by `ceal client`, the soak tests and the benches.
+//!
+//! The invariant the whole subsystem is built around: a serve-hosted
+//! session is **bit-identical** to `drive()` of the same (workflow,
+//! algorithm, seed) — same pool, same RNG derivations, same journal
+//! format — no matter how its exchanges are interleaved with other
+//! tenants, split across connections, evicted and rehydrated, or
+//! interrupted by a daemon SIGKILL.
+
+pub mod cell;
+pub mod client;
+pub mod manager;
+pub mod protocol;
+pub mod server;
+
+pub use client::{AskReply, LineTransport, Loopback, OpenInfo, ServeClient, TcpTransport};
+pub use manager::{SessionManager, DEFAULT_SESSION_TTL};
+pub use protocol::{OpenSpec, Request, ServeError, PROTO_VERSION};
+pub use server::{serve, ServeConfig};

@@ -1,0 +1,648 @@
+//! The serve wire protocol: versioned, line-delimited compact JSON.
+//!
+//! One request per line, one response per line, always an object.
+//! Every response carries `"v"` (the protocol version) and `"ok"`;
+//! failures are *structured responses* — `{"ok":false,"err":{...}}`
+//! with a stable error `kind` and the CLI's documented exit-code
+//! taxonomy — never connection drops, so a scripted client can tell
+//! "bad request" from "corrupt journal" from "infeasible space"
+//! without parsing prose.
+//!
+//! Verbs (see the README "Serving" section for the message table):
+//!
+//! | verb     | direction of payload                                  |
+//! |----------|-------------------------------------------------------|
+//! | `open`   | cell spec (fresh) or `token` (resume by token)        |
+//! | `ask`    | → next measurement batch (`reqs` carry full configs)  |
+//! | `tell`   | ← outcomes for one asked batch (`seq`-keyed)          |
+//! | `state`  | → progress snapshot                                   |
+//! | `finish` | → best config / cost summary (idempotent)             |
+//! | `close`  | evict the session to disk (reopenable by token)       |
+//!
+//! The codec is shared by the server, the in-process test client and
+//! `ceal client`, so both directions round-trip through the same
+//! functions.  Measurement outcomes reuse the session-trace encoding
+//! (numbers for readings, stable fault names for failures) and
+//! evaluator checkpoints reuse the journal's encoding, which is what
+//! makes a daemon-side journal replayable against a client-side
+//! evaluator.
+
+use crate::config::Config;
+use crate::tuner::journal::{eval_from_json, eval_json};
+use crate::tuner::trace::{
+    mode_from_name, mode_name, outcome_from_json, outcome_json, parse_outcomes,
+};
+use crate::tuner::{
+    EvaluatorState, MeasurementBatch, MeasurementRequest, MeasurementResult, SessionState,
+    TraceError,
+};
+use crate::util::json::{self, Json};
+
+/// Wire protocol version.  Bumped on any incompatible change; an
+/// `open` carrying a different version is refused with a structured
+/// `usage` error naming both versions.
+pub const PROTO_VERSION: u64 = 1;
+
+/// Exit-code taxonomy shared with the CLI (`main.rs` module header):
+/// corrupted/truncated/incompatible journal or protocol stream.
+pub const CODE_TRACE: u8 = 2;
+/// The requested configuration space admits no feasible configuration.
+pub const CODE_INFEASIBLE: u8 = 3;
+
+/// A structured protocol failure: every variant maps to a stable wire
+/// `kind` plus the CLI exit-code taxonomy, so `ceal client` exits with
+/// the same codes an equivalent `ceal tune` invocation would.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ServeError {
+    /// Malformed or unsupported request (bad JSON, unknown verb,
+    /// missing field, version mismatch).  Exit code 1.
+    Usage(String),
+    /// No session with that token, in memory or on the serve root.
+    UnknownToken(String),
+    /// A `tell` whose `seq` names neither the outstanding batch nor an
+    /// already-answered one.
+    UnknownRequest { seq: usize, detail: String },
+    /// `finish` before the session's last batch was told.
+    NotDone(String),
+    /// The cell's configuration space admits no feasible
+    /// configuration.  Exit code 3.
+    Infeasible(String),
+    /// Journal/trace failure underneath the session (corrupt journal,
+    /// divergence on rehydration, IO).  Exit code 2.
+    Trace(TraceError),
+    /// Client side only: a structured error decoded from a response —
+    /// preserves the server's kind and exit code verbatim.
+    Remote { kind: String, code: u8, msg: String },
+}
+
+impl ServeError {
+    /// Stable wire identifier for this failure class.
+    pub fn kind(&self) -> &str {
+        match self {
+            ServeError::Usage(_) => "usage",
+            ServeError::UnknownToken(_) => "unknown-token",
+            ServeError::UnknownRequest { .. } => "unknown-request",
+            ServeError::NotDone(_) => "not-done",
+            ServeError::Infeasible(_) => "infeasible",
+            ServeError::Trace(e) => trace_error_kind(e),
+            ServeError::Remote { kind, .. } => kind,
+        }
+    }
+
+    /// The CLI exit code this failure maps to (1 usage, 2
+    /// trace/journal, 3 infeasible).
+    pub fn code(&self) -> u8 {
+        match self {
+            ServeError::Infeasible(_) => CODE_INFEASIBLE,
+            ServeError::Trace(_) => CODE_TRACE,
+            ServeError::Remote { code, .. } => *code,
+            _ => 1,
+        }
+    }
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Usage(msg) => write!(f, "{msg}"),
+            ServeError::UnknownToken(token) => write!(f, "unknown session token '{token}'"),
+            ServeError::UnknownRequest { seq, detail } => {
+                write!(f, "tell for unknown request seq {seq}: {detail}")
+            }
+            ServeError::NotDone(msg) => write!(f, "{msg}"),
+            ServeError::Infeasible(msg) => write!(f, "{msg}"),
+            ServeError::Trace(e) => write!(f, "{e}"),
+            ServeError::Remote { kind, msg, .. } => write!(f, "{kind}: {msg}"),
+        }
+    }
+}
+
+/// The stable wire `kind` of each [`TraceError`] variant.
+pub fn trace_error_kind(e: &TraceError) -> &'static str {
+    match e {
+        TraceError::Io(_) => "io",
+        TraceError::NotATrace(_) => "not-a-trace",
+        TraceError::Version(_) => "version",
+        TraceError::Malformed(_) => "malformed",
+        TraceError::Exhausted { .. } => "exhausted",
+        TraceError::Divergence { .. } => "divergence",
+        TraceError::Crc { .. } => "crc",
+        TraceError::StateMismatch { .. } => "state-mismatch",
+    }
+}
+
+/// The cell parameters of a fresh `open` (what `ceal tune` takes from
+/// flags).  `ceal_params`/`faults` overrides are deliberately not on
+/// the wire: the daemon serves registered cells at their registered
+/// defaults.
+#[derive(Clone, Debug, PartialEq)]
+pub struct OpenSpec {
+    pub workflow: String,
+    pub objective: String,
+    pub algo: String,
+    pub m: usize,
+    pub pool_size: usize,
+    pub seed: u64,
+    pub scorer: String,
+}
+
+impl Default for OpenSpec {
+    fn default() -> Self {
+        OpenSpec {
+            workflow: "LV".into(),
+            objective: "comp".into(),
+            algo: "ceal".into(),
+            m: 50,
+            pool_size: 2000,
+            seed: 0xCEA1,
+            scorer: "native".into(),
+        }
+    }
+}
+
+/// A decoded request line.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    /// Fresh session (`spec`) or resume by token (`token`) — never
+    /// both: a token pins the cell settings in its journal header,
+    /// exactly like `ceal tune --resume` refuses contradicting flags.
+    Open {
+        token: Option<String>,
+        spec: Option<OpenSpec>,
+    },
+    Ask {
+        token: String,
+    },
+    Tell {
+        token: String,
+        seq: usize,
+        results: Vec<MeasurementResult>,
+        eval: Option<EvaluatorState>,
+    },
+    State {
+        token: String,
+    },
+    Finish {
+        token: String,
+    },
+    Close {
+        token: String,
+    },
+}
+
+fn required_token(v: &Json, verb: &str) -> Result<String, ServeError> {
+    v.get("token")
+        .and_then(Json::as_str)
+        .map(str::to_string)
+        .ok_or_else(|| ServeError::Usage(format!("'{verb}' needs a string 'token'")))
+}
+
+/// Accept a u64 as a JSON number or (for values beyond 2^53) a decimal
+/// string — the same latitude the journal header gives seeds.
+fn u64_field(v: &Json, key: &str) -> Result<Option<u64>, ServeError> {
+    match v.get(key) {
+        None => Ok(None),
+        Some(Json::Num(x)) if *x >= 0.0 && x.fract() == 0.0 => Ok(Some(*x as u64)),
+        Some(Json::Str(s)) => s
+            .parse()
+            .map(Some)
+            .map_err(|e| ServeError::Usage(format!("bad '{key}' '{s}': {e}"))),
+        Some(_) => Err(ServeError::Usage(format!(
+            "'{key}' must be a non-negative integer"
+        ))),
+    }
+}
+
+fn usize_field(v: &Json, key: &str) -> Result<Option<usize>, ServeError> {
+    match v.get(key) {
+        None => Ok(None),
+        Some(Json::Num(x)) if *x >= 0.0 && x.fract() == 0.0 => Ok(Some(*x as usize)),
+        Some(_) => Err(ServeError::Usage(format!(
+            "'{key}' must be a non-negative integer"
+        ))),
+    }
+}
+
+fn str_field(v: &Json, key: &str) -> Result<Option<String>, ServeError> {
+    match v.get(key) {
+        None => Ok(None),
+        Some(Json::Str(s)) => Ok(Some(s.clone())),
+        Some(_) => Err(ServeError::Usage(format!("'{key}' must be a string"))),
+    }
+}
+
+/// Decode one request line.  Protocol-version enforcement happens here
+/// for `open` (the verb that establishes a conversation); other verbs
+/// tolerate an absent `v` since their token already names a session.
+pub fn parse_request(line: &str) -> Result<Request, ServeError> {
+    let v = json::parse(line).map_err(|e| ServeError::Usage(format!("bad request JSON: {e}")))?;
+    let verb = v
+        .get("verb")
+        .and_then(Json::as_str)
+        .ok_or_else(|| ServeError::Usage("request needs a string 'verb'".into()))?;
+    if let Some(pv) = u64_field(&v, "v")? {
+        if pv != PROTO_VERSION {
+            return Err(ServeError::Usage(format!(
+                "protocol version {pv} unsupported (this daemon speaks {PROTO_VERSION})"
+            )));
+        }
+    }
+    match verb {
+        "open" => {
+            let token = str_field(&v, "token")?;
+            if token.is_some() {
+                for key in ["workflow", "objective", "algo", "m", "pool", "seed", "scorer"] {
+                    if v.get(key).is_some() {
+                        return Err(ServeError::Usage(format!(
+                            "'{key}' conflicts with 'token': resuming by token pins the cell \
+                             settings from its journal header"
+                        )));
+                    }
+                }
+                return Ok(Request::Open { token, spec: None });
+            }
+            let d = OpenSpec::default();
+            let spec = OpenSpec {
+                workflow: str_field(&v, "workflow")?.unwrap_or(d.workflow),
+                objective: str_field(&v, "objective")?.unwrap_or(d.objective),
+                algo: str_field(&v, "algo")?.unwrap_or(d.algo),
+                m: usize_field(&v, "m")?.unwrap_or(d.m),
+                pool_size: usize_field(&v, "pool")?.unwrap_or(d.pool_size),
+                seed: u64_field(&v, "seed")?.unwrap_or(d.seed),
+                scorer: str_field(&v, "scorer")?.unwrap_or(d.scorer),
+            };
+            Ok(Request::Open {
+                token: None,
+                spec: Some(spec),
+            })
+        }
+        "ask" => Ok(Request::Ask {
+            token: required_token(&v, "ask")?,
+        }),
+        "tell" => {
+            let token = required_token(&v, "tell")?;
+            let seq = usize_field(&v, "seq")?
+                .ok_or_else(|| ServeError::Usage("'tell' needs an integer 'seq'".into()))?;
+            let outcomes = parse_outcomes(v.get("ys"))
+                .map_err(|e| ServeError::Usage(format!("bad 'ys': {e}")))?;
+            let results = outcomes
+                .into_iter()
+                .map(|outcome| MeasurementResult { outcome })
+                .collect();
+            let eval = match v.get("eval") {
+                None | Some(Json::Null) => None,
+                Some(e) => Some(
+                    eval_from_json(e, "tell eval state").map_err(ServeError::Trace)?,
+                ),
+            };
+            Ok(Request::Tell {
+                token,
+                seq,
+                results,
+                eval,
+            })
+        }
+        "state" => Ok(Request::State {
+            token: required_token(&v, "state")?,
+        }),
+        "finish" => Ok(Request::Finish {
+            token: required_token(&v, "finish")?,
+        }),
+        "close" => Ok(Request::Close {
+            token: required_token(&v, "close")?,
+        }),
+        other => Err(ServeError::Usage(format!(
+            "unknown verb '{other}' (open|ask|tell|state|finish|close)"
+        ))),
+    }
+}
+
+// ---- request encoding (client side) --------------------------------
+
+pub fn open_line(spec: &OpenSpec) -> String {
+    Json::obj(vec![
+        ("verb", Json::Str("open".into())),
+        ("v", Json::Num(PROTO_VERSION as f64)),
+        ("workflow", Json::Str(spec.workflow.clone())),
+        ("objective", Json::Str(spec.objective.clone())),
+        ("algo", Json::Str(spec.algo.clone())),
+        ("m", Json::Num(spec.m as f64)),
+        ("pool", Json::Num(spec.pool_size as f64)),
+        ("seed", Json::Str(spec.seed.to_string())),
+        ("scorer", Json::Str(spec.scorer.clone())),
+    ])
+    .compact()
+}
+
+pub fn reopen_line(token: &str) -> String {
+    Json::obj(vec![
+        ("verb", Json::Str("open".into())),
+        ("v", Json::Num(PROTO_VERSION as f64)),
+        ("token", Json::Str(token.into())),
+    ])
+    .compact()
+}
+
+fn token_verb_line(verb: &str, token: &str) -> String {
+    Json::obj(vec![
+        ("verb", Json::Str(verb.into())),
+        ("token", Json::Str(token.into())),
+    ])
+    .compact()
+}
+
+pub fn ask_line(token: &str) -> String {
+    token_verb_line("ask", token)
+}
+
+pub fn state_line(token: &str) -> String {
+    token_verb_line("state", token)
+}
+
+pub fn finish_line(token: &str) -> String {
+    token_verb_line("finish", token)
+}
+
+pub fn close_line(token: &str) -> String {
+    token_verb_line("close", token)
+}
+
+pub fn tell_line(
+    token: &str,
+    seq: usize,
+    results: &[MeasurementResult],
+    eval: Option<&EvaluatorState>,
+) -> String {
+    let ys = Json::Arr(results.iter().map(|r| outcome_json(&r.outcome)).collect());
+    let mut pairs = vec![
+        ("verb", Json::Str("tell".into())),
+        ("token", Json::Str(token.into())),
+        ("seq", Json::Num(seq as f64)),
+        ("ys", ys),
+    ];
+    if let Some(e) = eval {
+        pairs.push(("eval", eval_json(e)));
+    }
+    Json::obj(pairs).compact()
+}
+
+// ---- batch / state / response encoding (server side) ---------------
+
+/// Encode a measurement batch for the wire.  Unlike the journal's
+/// recorded form, workflow requests carry their full configuration
+/// values — the client measures without any pool access.
+pub fn batch_json(batch: &MeasurementBatch) -> Json {
+    let reqs = batch
+        .requests
+        .iter()
+        .map(|r| match r {
+            MeasurementRequest::Workflow { pool_idx, config } => Json::obj(vec![
+                ("pool", Json::Num(*pool_idx as f64)),
+                (
+                    "cfg",
+                    Json::Arr(config.0.iter().map(|&x| Json::Num(x as f64)).collect()),
+                ),
+            ]),
+            MeasurementRequest::Component { comp, config } => Json::obj(vec![
+                ("comp", Json::Num(*comp as f64)),
+                (
+                    "cfg",
+                    Json::Arr(config.iter().map(|&x| Json::Num(x as f64)).collect()),
+                ),
+            ]),
+        })
+        .collect();
+    Json::obj(vec![
+        ("mode", Json::Str(mode_name(batch.mode).into())),
+        ("reqs", Json::Arr(reqs)),
+    ])
+}
+
+fn cfg_values(r: &Json) -> Result<Vec<i64>, ServeError> {
+    r.get("cfg")
+        .and_then(Json::as_arr)
+        .map(|a| a.iter().filter_map(Json::as_f64).map(|x| x as i64).collect())
+        .ok_or_else(|| ServeError::Usage("request missing 'cfg' values".into()))
+}
+
+/// Decode a wire batch back into live measurement requests.
+pub fn batch_from_json(v: &Json) -> Result<MeasurementBatch, ServeError> {
+    let mode = mode_from_name(v.get("mode").and_then(Json::as_str))
+        .map_err(ServeError::Usage)?;
+    let reqs = v
+        .get("reqs")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| ServeError::Usage("batch missing 'reqs'".into()))?;
+    let mut requests = Vec::with_capacity(reqs.len());
+    for r in reqs {
+        if let Some(pool_idx) = r.get("pool").and_then(Json::as_usize) {
+            requests.push(MeasurementRequest::Workflow {
+                pool_idx,
+                config: Config(cfg_values(r)?),
+            });
+        } else if let Some(comp) = r.get("comp").and_then(Json::as_usize) {
+            requests.push(MeasurementRequest::Component {
+                comp,
+                config: cfg_values(r)?,
+            });
+        } else {
+            return Err(ServeError::Usage(
+                "request is neither workflow ('pool') nor component ('comp')".into(),
+            ));
+        }
+    }
+    Ok(MeasurementBatch { mode, requests })
+}
+
+/// Encode a progress snapshot for the `state` response.
+pub fn state_json(s: &SessionState) -> Json {
+    Json::obj(vec![
+        ("phase", Json::Str(s.phase.into())),
+        ("done", Json::Bool(s.done)),
+        ("asked", Json::Num(s.asked_batches as f64)),
+        ("told", Json::Num(s.told_batches as f64)),
+        ("workflow_runs", Json::Num(s.workflow_runs as f64)),
+        ("component_runs", Json::Num(s.component_runs as f64)),
+        ("cost", Json::Num(s.collection_cost)),
+        ("failed_runs", Json::Num(s.failed_runs as f64)),
+        ("refits", Json::Num(s.model_refits as f64)),
+        (
+            "using_hifi",
+            match s.using_hifi {
+                Some(b) => Json::Bool(b),
+                None => Json::Null,
+            },
+        ),
+    ])
+}
+
+/// A successful response line: `pairs` plus the protocol preamble.
+pub fn ok_line(mut pairs: Vec<(&str, Json)>) -> String {
+    let mut all = vec![
+        ("ok", Json::Bool(true)),
+        ("v", Json::Num(PROTO_VERSION as f64)),
+    ];
+    all.append(&mut pairs);
+    Json::obj(all).compact()
+}
+
+/// A structured failure response line.
+pub fn err_line(e: &ServeError) -> String {
+    Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("v", Json::Num(PROTO_VERSION as f64)),
+        (
+            "err",
+            Json::obj(vec![
+                ("kind", Json::Str(e.kind().into())),
+                ("code", Json::Num(e.code() as f64)),
+                ("msg", Json::Str(e.to_string())),
+            ]),
+        ),
+    ])
+    .compact()
+}
+
+/// Client side: parse a response line, turning `{"ok":false}` into the
+/// structured error it carries.
+pub fn parse_response(line: &str) -> Result<Json, ServeError> {
+    let v = json::parse(line)
+        .map_err(|e| ServeError::Usage(format!("bad response JSON: {e}")))?;
+    match v.get("ok").and_then(Json::as_bool) {
+        Some(true) => Ok(v),
+        Some(false) => {
+            let err = v.get("err");
+            let kind = err
+                .and_then(|e| e.get("kind"))
+                .and_then(Json::as_str)
+                .unwrap_or("usage")
+                .to_string();
+            let code = err
+                .and_then(|e| e.get("code"))
+                .and_then(Json::as_usize)
+                .unwrap_or(1) as u8;
+            let msg = err
+                .and_then(|e| e.get("msg"))
+                .and_then(Json::as_str)
+                .unwrap_or("unspecified server error")
+                .to_string();
+            Err(ServeError::Remote { kind, code, msg })
+        }
+        None => Err(ServeError::Usage(
+            "response missing boolean 'ok'".into(),
+        )),
+    }
+}
+
+/// Decode the `ys` of a tell (also used by tests to build results from
+/// raw outcome JSON).
+pub fn outcome_from_wire(v: &Json) -> Option<MeasurementResult> {
+    outcome_from_json(v).map(|outcome| MeasurementResult { outcome })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::FailureKind;
+    use crate::tuner::MeasurementOutcome;
+
+    #[test]
+    fn request_lines_roundtrip() {
+        let spec = OpenSpec {
+            workflow: "HS".into(),
+            objective: "exec".into(),
+            algo: "al+h".into(),
+            m: 12,
+            pool_size: 300,
+            seed: u64::MAX,
+            scorer: "native".into(),
+        };
+        match parse_request(&open_line(&spec)).unwrap() {
+            Request::Open { token: None, spec: Some(got) } => assert_eq!(got, spec),
+            other => panic!("unexpected parse: {other:?}"),
+        }
+        match parse_request(&reopen_line("s000007")).unwrap() {
+            Request::Open { token: Some(t), spec: None } => assert_eq!(t, "s000007"),
+            other => panic!("unexpected parse: {other:?}"),
+        }
+        let results = vec![
+            MeasurementResult::ok(1.25),
+            MeasurementResult {
+                outcome: MeasurementOutcome::Failed(FailureKind::Crash),
+            },
+            MeasurementResult {
+                outcome: MeasurementOutcome::TimedOut,
+            },
+        ];
+        let eval = EvaluatorState {
+            rng: crate::util::rng::Pcg32::new(5, 9).snapshot(),
+        };
+        let line = tell_line("s000001", 3, &results, Some(&eval));
+        match parse_request(&line).unwrap() {
+            Request::Tell {
+                token,
+                seq,
+                results: got,
+                eval: got_eval,
+            } => {
+                assert_eq!(token, "s000001");
+                assert_eq!(seq, 3);
+                assert_eq!(got, results);
+                assert_eq!(got_eval, Some(eval));
+            }
+            other => panic!("unexpected parse: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn open_with_token_refuses_cell_flags() {
+        let line = r#"{"verb":"open","token":"s000001","m":10}"#;
+        match parse_request(line) {
+            Err(ServeError::Usage(msg)) => assert!(msg.contains("conflicts"), "{msg}"),
+            other => panic!("want usage error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn version_mismatch_is_usage_error() {
+        let line = r#"{"verb":"open","v":99,"workflow":"LV"}"#;
+        match parse_request(line) {
+            Err(ServeError::Usage(msg)) => assert!(msg.contains("version"), "{msg}"),
+            other => panic!("want usage error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn batch_roundtrips_with_full_configs() {
+        let batch = MeasurementBatch::fan_out(vec![
+            MeasurementRequest::Workflow {
+                pool_idx: 4,
+                config: Config(vec![8, 2, 1, 100, 4, 2, 1]),
+            },
+            MeasurementRequest::Component {
+                comp: 1,
+                config: vec![16, 4],
+            },
+        ]);
+        let back = batch_from_json(&batch_json(&batch)).unwrap();
+        assert_eq!(back, batch);
+    }
+
+    #[test]
+    fn error_lines_carry_kind_and_code() {
+        let e = ServeError::Trace(TraceError::Crc {
+            context: "journal line 3".into(),
+        });
+        let line = err_line(&e);
+        match parse_response(&line) {
+            Err(ServeError::Remote { kind, code, .. }) => {
+                assert_eq!(kind, "crc");
+                assert_eq!(code, CODE_TRACE);
+            }
+            other => panic!("want remote error, got {other:?}"),
+        }
+        let ok = ok_line(vec![("token", Json::Str("s1".into()))]);
+        let v = parse_response(&ok).unwrap();
+        assert_eq!(v.get("token").and_then(Json::as_str), Some("s1"));
+    }
+}

@@ -1,0 +1,138 @@
+//! The TCP front half of `ceal serve`: a zero-dependency
+//! line-oriented listener over one [`SessionManager`].
+//!
+//! Transport is deliberately boring — `std::net`, one thread per
+//! connection, blocking reads — because all the concurrency that
+//! matters lives in the manager: connection threads only parse lines
+//! and block on *their own tenant's* mutex, so a slow or stalled
+//! client can never hold up another tenant's ask/tell.  Sessions are
+//! not tied to connections at all (a token can be driven from many
+//! connections, sequentially or concurrently), which is what makes
+//! client crash/reconnect and daemon kill/restart symmetric.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::panic::AssertUnwindSafe;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::serve::manager::{SessionManager, DEFAULT_SESSION_TTL};
+use crate::serve::protocol::{err_line, ServeError};
+use crate::tuner::TraceError;
+
+/// `ceal serve` settings (flag defaults live in `main.rs`).
+pub struct ServeConfig {
+    /// Listen address, e.g. `127.0.0.1:7433`; port 0 picks a free one.
+    pub addr: String,
+    /// Serve root: one journal directory per session token.
+    pub root: PathBuf,
+    /// Idle TTL before a session is evicted to disk (`None` disables).
+    pub ttl: Option<Duration>,
+    /// Worker threads for pool generation / scoring.
+    pub threads: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            addr: "127.0.0.1:7433".into(),
+            root: PathBuf::from("serve"),
+            ttl: Some(DEFAULT_SESSION_TTL),
+            threads: 0,
+        }
+    }
+}
+
+/// Answer one request line, translating a handler panic into a
+/// structured `io` error response instead of a dropped connection.
+/// Panics cannot corrupt sessions: the journal is write-ahead and the
+/// poisoned tenant rehydrates from it on its next touch.
+fn answer(mgr: &SessionManager, line: &str) -> String {
+    std::panic::catch_unwind(AssertUnwindSafe(|| mgr.handle_line(line))).unwrap_or_else(|_| {
+        err_line(&ServeError::Trace(TraceError::Io(
+            "internal error while handling request (session state was rolled back to its \
+             journal)"
+                .into(),
+        )))
+    })
+}
+
+fn serve_connection(mgr: &SessionManager, stream: TcpStream) {
+    let peer = stream
+        .peer_addr()
+        .map(|a| a.to_string())
+        .unwrap_or_else(|_| "?".into());
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(e) => {
+            eprintln!("serve: cannot clone stream for {peer}: {e}");
+            return;
+        }
+    };
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = match line {
+            Ok(l) => l,
+            Err(_) => break, // client went away mid-line
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let resp = answer(mgr, &line);
+        if writer
+            .write_all(resp.as_bytes())
+            .and_then(|()| writer.write_all(b"\n"))
+            .and_then(|()| writer.flush())
+            .is_err()
+        {
+            break; // client stopped reading; its session stays resumable
+        }
+    }
+}
+
+/// Run the daemon: bind, spawn the TTL sweeper, and serve connections
+/// until the process dies.  Never returns except on bind failure.
+pub fn serve(cfg: ServeConfig) -> Result<(), String> {
+    let mgr = Arc::new(
+        SessionManager::new(&cfg.root, cfg.threads, cfg.ttl)
+            .map_err(|e| format!("cannot open serve root: {e}"))?,
+    );
+    let listener =
+        TcpListener::bind(&cfg.addr).map_err(|e| format!("cannot bind {}: {e}", cfg.addr))?;
+    let local = listener
+        .local_addr()
+        .map(|a| a.to_string())
+        .unwrap_or_else(|_| cfg.addr.clone());
+    println!(
+        "ceal serve: listening on {local} (root {}, ttl {})",
+        cfg.root.display(),
+        match cfg.ttl {
+            Some(t) => format!("{}s", t.as_secs_f64()),
+            None => "off".into(),
+        }
+    );
+    if let Some(ttl) = cfg.ttl {
+        let sweeper = Arc::clone(&mgr);
+        // sweep a few times per TTL so eviction lag is bounded by a
+        // fraction of the TTL, not a whole extra TTL
+        let period = ttl.div_f64(4.0).max(Duration::from_millis(50));
+        std::thread::spawn(move || loop {
+            std::thread::sleep(period);
+            let evicted = sweeper.sweep();
+            if evicted > 0 {
+                eprintln!("serve: evicted {evicted} idle session(s) to disk");
+            }
+        });
+    }
+    for conn in listener.incoming() {
+        match conn {
+            Ok(stream) => {
+                let mgr = Arc::clone(&mgr);
+                std::thread::spawn(move || serve_connection(&mgr, stream));
+            }
+            Err(e) => eprintln!("serve: accept failed: {e}"),
+        }
+    }
+    Ok(())
+}

@@ -309,6 +309,15 @@ impl SessionJournal {
         self.history.len()
     }
 
+    /// True while a journaled ask awaits its tell — either freshly
+    /// recorded or inherited from a resumed checkpoint.  Multi-tenant
+    /// drivers use this after rehydration to know the in-flight batch
+    /// must be re-issued (and verified) before the next tell can
+    /// apply.
+    pub fn has_pending(&self) -> bool {
+        self.pending.is_some()
+    }
+
     /// Override the compaction period (minimum 1).
     pub fn set_snapshot_every(&mut self, every: usize) {
         self.snapshot_every = every.max(1);
@@ -491,11 +500,11 @@ fn rng_from_json(v: &Json, context: &str) -> Result<RngSnapshot, TraceError> {
     })
 }
 
-fn eval_json(e: &EvaluatorState) -> Json {
+pub(crate) fn eval_json(e: &EvaluatorState) -> Json {
     Json::obj(vec![("rng", rng_json(&e.rng))])
 }
 
-fn eval_from_json(v: &Json, context: &str) -> Result<EvaluatorState, TraceError> {
+pub(crate) fn eval_from_json(v: &Json, context: &str) -> Result<EvaluatorState, TraceError> {
     let rng = v
         .get("rng")
         .ok_or_else(|| TraceError::Malformed(format!("{context}: eval state missing 'rng'")))?;
@@ -751,6 +760,14 @@ fn parse_journal_header(line: &str) -> Result<(TraceHeader, usize), TraceError> 
     let header = TraceHeader::from_json(&v)?;
     let rep = v.get("rep").and_then(Json::as_usize).unwrap_or(0);
     Ok((header, rep))
+}
+
+/// True when `dir` holds a (possibly in-flight) checkpointed session:
+/// the journal file exists.  Token-keyed serve roots use this to tell
+/// "unknown token" apart from "evicted/crashed session to rehydrate"
+/// without attempting a full load.
+pub fn checkpoint_exists(dir: &Path) -> bool {
+    dir.join(JOURNAL_FILE).is_file()
 }
 
 /// Load and validate a checkpoint directory without touching it:

@@ -246,7 +246,7 @@ impl MeasurementBatch {
 /// Where a session routes library warnings (e.g. "component space
 /// admits no feasible configuration") instead of printing them
 /// unconditionally: the embedding caller chooses.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+#[derive(Clone, Debug, PartialEq, Eq, Default)]
 pub enum DiagSink {
     /// Print `warning: …` to stderr as they occur (the CLI default and
     /// the pre-session behaviour).
@@ -256,6 +256,13 @@ pub enum DiagSink {
     Silent,
     /// Collect warnings for [`TunerSession::diagnostics`].
     Capture,
+    /// Append `warning: …` lines to a file.  Multi-tenant drivers (the
+    /// serve daemon, journaled campaign reps) point this at the
+    /// session's own journal directory (`diag.log`) so warnings from
+    /// concurrent sessions never interleave on the shared stderr.
+    /// Falls back to stderr if the file cannot be written, so a bad
+    /// path never swallows a diagnostic.
+    File(std::path::PathBuf),
 }
 
 /// A session-owned warning sink (see [`DiagSink`]).
@@ -267,10 +274,21 @@ pub(crate) struct Diagnostics {
 
 impl Diagnostics {
     pub(crate) fn warn(&mut self, msg: String) {
-        match self.sink {
+        match &self.sink {
             DiagSink::Stderr => eprintln!("warning: {msg}"),
             DiagSink::Silent => {}
             DiagSink::Capture => self.captured.push(msg),
+            DiagSink::File(path) => {
+                use std::io::Write as _;
+                let appended = std::fs::OpenOptions::new()
+                    .create(true)
+                    .append(true)
+                    .open(path)
+                    .and_then(|mut f| writeln!(f, "warning: {msg}"));
+                if appended.is_err() {
+                    eprintln!("warning: {msg}");
+                }
+            }
         }
     }
 
@@ -360,6 +378,22 @@ pub trait TunerSession {
     /// session is complete.  Panics if the previous batch has not been
     /// told yet.
     fn ask(&mut self) -> MeasurementBatch;
+
+    /// Non-blocking variant of [`ask`](Self::ask): `None` when the
+    /// previous batch has not been told yet (where `ask` would panic),
+    /// `Some(batch)` otherwise.  This is the surface a multi-tenant
+    /// driver uses when asks and tells arrive from different
+    /// connections and strict alternation cannot be assumed at the
+    /// call site.  Every built-in session counts `asked_batches` only
+    /// for real (non-empty) issues, so the default implementation is
+    /// exact for them.
+    fn try_ask(&mut self) -> Option<MeasurementBatch> {
+        let s = self.state();
+        if s.asked_batches > s.told_batches {
+            return None;
+        }
+        Some(self.ask())
+    }
 
     /// Report the results of the last asked batch, in request order.
     fn tell(&mut self, results: &[MeasurementResult]);
@@ -936,6 +970,24 @@ mod tests {
         d.set_sink(DiagSink::Capture);
         d.warn("kept".into());
         assert_eq!(d.captured(), ["kept"]);
+    }
+
+    #[test]
+    fn diagnostics_file_sink_appends() {
+        let path = std::env::temp_dir().join(format!(
+            "ceal-diag-sink-{}-{:?}.log",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_file(&path);
+        let mut d = Diagnostics::default();
+        d.set_sink(DiagSink::File(path.clone()));
+        d.warn("first".into());
+        d.warn("second".into());
+        let text = std::fs::read_to_string(&path).expect("diag file written");
+        assert_eq!(text, "warning: first\nwarning: second\n");
+        assert!(d.captured().is_empty(), "file sink does not capture");
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

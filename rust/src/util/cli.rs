@@ -92,6 +92,22 @@ impl Args {
                 .map_err(|e| format!("--{name} expects an integer, got '{v}': {e}")),
         }
     }
+
+    /// Duration-valued option in (possibly fractional) seconds
+    /// (`--session-ttl 900`, `--measure-deadline 0.5`), `None` when
+    /// absent; zero and negative values are rejected.
+    pub fn opt_secs(&self, name: &str) -> Result<Option<std::time::Duration>, String> {
+        let Some(s) = self.opt(name) else {
+            return Ok(None);
+        };
+        let secs: f64 = s
+            .parse()
+            .map_err(|e| format!("bad --{name} '{s}': {e}"))?;
+        if !(secs > 0.0) {
+            return Err(format!("--{name} must be a positive number of seconds"));
+        }
+        Ok(Some(std::time::Duration::from_secs_f64(secs)))
+    }
 }
 
 #[cfg(test)]
@@ -124,6 +140,19 @@ mod tests {
         let a = parse(&["x", "--dry-run", "--out", "results"]);
         assert!(a.flag("dry-run"));
         assert_eq!(a.opt("out"), Some("results"));
+    }
+
+    #[test]
+    fn secs_option_parses_and_rejects_nonpositive() {
+        let a = parse(&["x", "--session-ttl", "1.5"]);
+        assert_eq!(
+            a.opt_secs("session-ttl").unwrap(),
+            Some(std::time::Duration::from_millis(1500))
+        );
+        assert_eq!(a.opt_secs("absent").unwrap(), None);
+        assert!(parse(&["x", "--ttl", "0"]).opt_secs("ttl").is_err());
+        assert!(parse(&["x", "--ttl", "-3"]).opt_secs("ttl").is_err());
+        assert!(parse(&["x", "--ttl", "soon"]).opt_secs("ttl").is_err());
     }
 
     #[test]

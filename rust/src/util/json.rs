@@ -54,6 +54,13 @@ impl Json {
         }
     }
 
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
@@ -387,6 +394,14 @@ mod tests {
         let v = parse(text).unwrap();
         assert_eq!(v.get("pool_n").unwrap().as_usize(), Some(2048));
         assert_eq!(v.get("artifacts").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn bool_accessor() {
+        let v = parse(r#"{"ok": true, "dup": false, "n": 1}"#).unwrap();
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(v.get("dup").unwrap().as_bool(), Some(false));
+        assert_eq!(v.get("n").unwrap().as_bool(), None);
     }
 
     #[test]

@@ -1,0 +1,362 @@
+//! Protocol-semantics pinning for the serve subsystem, driven entirely
+//! in-process through [`Loopback`] (the same line codec TCP carries):
+//!
+//! - re-asks are idempotent (same seq, same batch — no session panic);
+//! - a tell for an already-answered seq is acknowledged as a duplicate
+//!   and NOT re-applied (the final trajectory stays bit-identical to a
+//!   serial `drive()`), pinned for all seven algorithms on LV;
+//! - a tell for a seq the session never issued is a structured
+//!   `unknown-request` error; wrong arity is a structured `usage`
+//!   error; a bogus token is `unknown-token` — never a dropped
+//!   conversation or a panic;
+//! - idle sessions evict to disk and lazily rehydrate with no effect
+//!   on the trajectory; a manager "killed" between an ask and its tell
+//!   re-materializes the in-flight batch after restart, so the tell
+//!   applies without a re-ask;
+//! - per-session diagnostics land in the session's own `diag.log`.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use ceal::config::WorkflowId;
+use ceal::coordinator::{session_rng, tuner_for, Algo, PoolCache, ScorerKind};
+use ceal::serve::{Loopback, OpenSpec, ServeClient, ServeError, SessionManager};
+use ceal::sim::Objective;
+use ceal::tuner::{drive, Collector, Evaluator, Problem, TunerOutput};
+use ceal::util::json::Json;
+
+fn temp_root(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("ceal-serveproto-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+const M: usize = 6;
+const POOL: usize = 64;
+const SEED: u64 = 0xA11;
+
+fn spec_for(algo: Algo) -> OpenSpec {
+    OpenSpec {
+        workflow: "LV".into(),
+        objective: "comp".into(),
+        algo: algo.name().into(),
+        m: M,
+        pool_size: POOL,
+        seed: SEED,
+        scorer: "native".into(),
+    }
+}
+
+/// The uninterrupted local reference: the exact construction `ceal
+/// tune --checkpoint-dir` (and the daemon) uses, driven serially.
+fn serial_drive(algo: Algo) -> TunerOutput {
+    let prob = Problem::new(WorkflowId::LV, Objective::CompTime);
+    let pool = PoolCache::global()
+        .try_get_or_generate(&prob, POOL, SEED, 2)
+        .expect("LV pool");
+    let scorer = ScorerKind::Native.build();
+    let tuner = tuner_for(algo, &prob, SEED, None);
+    let mut rng = session_rng(SEED, algo, 0);
+    let mut col = Collector::new(&prob, rng.derive_str("collector"));
+    let session = tuner.session(&prob, &pool, &scorer, M, &mut rng);
+    drive(session, &mut col)
+}
+
+/// The client-side evaluator, constructed exactly as `ceal client`
+/// constructs it from the open response's header.
+fn client_collector(prob: &Problem, algo: Algo) -> Collector<'_> {
+    let mut rng = session_rng(SEED, algo, 0);
+    Collector::new(prob, rng.derive_str("collector"))
+}
+
+fn assert_payload_matches(label: &str, payload: &Json, reference: &TunerOutput) {
+    assert_eq!(
+        payload.get("best_idx").and_then(Json::as_usize),
+        Some(reference.best_idx),
+        "{label}: best_idx diverges"
+    );
+    let cost = payload
+        .get("collection_cost")
+        .and_then(Json::as_f64)
+        .expect("payload collection_cost");
+    assert_eq!(
+        cost.to_bits(),
+        reference.collection_cost.to_bits(),
+        "{label}: collection cost diverges ({cost} vs {})",
+        reference.collection_cost
+    );
+    assert_eq!(
+        payload.get("workflow_runs").and_then(Json::as_usize),
+        Some(reference.workflow_runs),
+        "{label}: workflow_runs diverges"
+    );
+    assert_eq!(
+        payload.get("failed_runs").and_then(Json::as_usize),
+        Some(reference.failed_runs),
+        "{label}: failed_runs diverges"
+    );
+    assert_eq!(
+        payload.get("measured").and_then(Json::as_usize),
+        Some(reference.measured.len()),
+        "{label}: measured count diverges"
+    );
+}
+
+/// Duplicate and out-of-order tells, re-ask idempotency and arity
+/// checking, pinned against the serial reference for every registered
+/// algorithm.
+#[test]
+fn perturbed_tells_stay_bit_identical_for_all_algorithms() {
+    let root = temp_root("perturb");
+    let mgr = SessionManager::new(&root, 2, None).unwrap();
+    for &algo in Algo::ALL.iter() {
+        let label = algo.name();
+        let prob = Problem::new(WorkflowId::LV, Objective::CompTime);
+        let mut col = client_collector(&prob, algo);
+        let mut client = ServeClient::new(Loopback(&mgr));
+        let info = client.open(&spec_for(algo)).unwrap();
+        assert!(!info.resumed);
+
+        // a tell before any ask names no known request
+        match client.tell(0, &[], None) {
+            Err(ServeError::Remote { kind, code, .. }) => {
+                assert_eq!(kind, "unknown-request", "{label}");
+                assert_eq!(code, 1, "{label}");
+            }
+            other => panic!("{label}: want unknown-request, got {other:?}"),
+        }
+
+        loop {
+            let a1 = client.ask().unwrap();
+            if a1.done {
+                break;
+            }
+            // re-ask is idempotent: same seq, same batch
+            let a2 = client.ask().unwrap();
+            assert_eq!(a1.seq, a2.seq, "{label}: re-ask changed seq");
+            assert_eq!(a1.batch, a2.batch, "{label}: re-ask changed batch");
+            let batch = a1.batch.unwrap();
+            let results = col.evaluate(&batch);
+            // a tell for a seq that was never asked is refused
+            match client.tell(a1.seq + 7, &results, None) {
+                Err(ServeError::Remote { kind, .. }) => {
+                    assert_eq!(kind, "unknown-request", "{label}")
+                }
+                other => panic!("{label}: want unknown-request, got {other:?}"),
+            }
+            // wrong arity on the right seq is refused, not applied
+            if results.len() > 1 {
+                match client.tell(a1.seq, &results[..1], None) {
+                    Err(ServeError::Remote { kind, .. }) => assert_eq!(kind, "usage", "{label}"),
+                    other => panic!("{label}: want usage error, got {other:?}"),
+                }
+            }
+            let eval = col.checkpoint_state();
+            let r = client.tell(a1.seq, &results, eval.as_ref()).unwrap();
+            assert!(r.applied, "{label}: tell not applied");
+            // re-telling the answered seq is a duplicate ack, not a
+            // second application
+            let d = client.tell(a1.seq, &results, None).unwrap();
+            assert!(d.duplicate, "{label}: duplicate tell not acknowledged");
+            assert!(!d.applied, "{label}: duplicate tell re-applied");
+            if r.done {
+                break;
+            }
+        }
+        let payload = client.finish().unwrap();
+        assert_payload_matches(label, &payload, &serial_drive(algo));
+        // finish is idempotent: the sealed artifact answers repeats
+        let again = client.finish().unwrap();
+        assert_eq!(
+            again.get("best_idx").and_then(Json::as_usize),
+            payload.get("best_idx").and_then(Json::as_usize),
+            "{label}: repeated finish diverges"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// Idle eviction mid-session is invisible to the trajectory: evict
+/// after every exchange (TTL ~ 0), rehydrate lazily on the next verb,
+/// finish bit-identical to the serial reference.
+#[test]
+fn eviction_and_rehydration_mid_session_change_nothing() {
+    let root = temp_root("evict");
+    let ttl = Duration::from_millis(1);
+    let mgr = SessionManager::new(&root, 2, Some(ttl)).unwrap();
+    let algo = Algo::Ceal;
+    let prob = Problem::new(WorkflowId::LV, Objective::CompTime);
+    let mut col = client_collector(&prob, algo);
+    let mut client = ServeClient::new(Loopback(&mgr));
+    client.open(&spec_for(algo)).unwrap();
+    let mut evictions = 0;
+    loop {
+        let ask = client.ask().unwrap();
+        if ask.done {
+            break;
+        }
+        let batch = ask.batch.unwrap();
+        let results = col.evaluate(&batch);
+        let eval = col.checkpoint_state();
+        let r = client.tell(ask.seq, &results, eval.as_ref()).unwrap();
+        // idle long enough for the TTL, then force a sweep: the
+        // tenant's in-memory half drops, the journal stays
+        std::thread::sleep(Duration::from_millis(3));
+        evictions += mgr.sweep();
+        if r.done {
+            break;
+        }
+    }
+    assert!(evictions > 0, "sweep never evicted the idle session");
+    let payload = client.finish().unwrap();
+    assert_payload_matches("evict/rehydrate", &payload, &serial_drive(algo));
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// Kill the daemon between an ask and its tell: a new manager on the
+/// same root must re-materialize the in-flight batch from the journal
+/// so the held tell applies with no re-ask, and the session must still
+/// finish bit-identical.
+#[test]
+fn pending_ask_survives_manager_restart() {
+    let root = temp_root("pending");
+    let algo = Algo::Alph;
+    let prob = Problem::new(WorkflowId::LV, Objective::CompTime);
+    let mut col = client_collector(&prob, algo);
+
+    let mgr = SessionManager::new(&root, 2, None).unwrap();
+    let mut client = ServeClient::new(Loopback(&mgr));
+    client.open(&spec_for(algo)).unwrap();
+    let token = client.token().unwrap().to_string();
+    // first exchange completes normally; the second ask is left
+    // hanging when the "daemon" dies
+    let a = client.ask().unwrap();
+    let results = col.evaluate(a.batch.as_ref().unwrap());
+    client
+        .tell(a.seq, &results, col.checkpoint_state().as_ref())
+        .unwrap();
+    let held = client.ask().unwrap();
+    assert!(!held.done, "session finished before the kill point");
+    let held_batch = held.batch.clone().unwrap();
+    drop(client);
+    drop(mgr); // SIGKILL equivalent: in-memory state is gone
+
+    let mgr = SessionManager::new(&root, 2, None).unwrap();
+    let mut client = ServeClient::new(Loopback(&mgr));
+    let info = client.reopen(&token).unwrap();
+    assert!(info.resumed);
+    assert!(!info.done);
+    // restore the client-side noise stream exactly as `ceal client`
+    // does on resume
+    if let Some(eval) = &info.eval {
+        col.restore_state(eval);
+    }
+    // tell the held batch FIRST — no re-ask — proving the journal
+    // re-materialized the in-flight request
+    let results = col.evaluate(&held_batch);
+    let r = client
+        .tell(held.seq, &results, col.checkpoint_state().as_ref())
+        .unwrap();
+    assert!(r.applied, "held tell not applied after restart");
+    // drive the remainder normally
+    loop {
+        let ask = client.ask().unwrap();
+        if ask.done {
+            break;
+        }
+        let results = col.evaluate(ask.batch.as_ref().unwrap());
+        let r = client
+            .tell(ask.seq, &results, col.checkpoint_state().as_ref())
+            .unwrap();
+        if r.done {
+            break;
+        }
+    }
+    let payload = client.finish().unwrap();
+    assert_payload_matches("pending-ask restart", &payload, &serial_drive(algo));
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// Unknown tokens are structured errors with the documented kind, on
+/// every token-bearing verb.
+#[test]
+fn unknown_token_is_structured_on_every_verb() {
+    let root = temp_root("unknown");
+    let mgr = SessionManager::new(&root, 1, None).unwrap();
+    for line in [
+        r#"{"verb":"open","token":"s424242"}"#,
+        r#"{"verb":"ask","token":"s424242"}"#,
+        r#"{"verb":"tell","token":"s424242","seq":0,"ys":[]}"#,
+        r#"{"verb":"state","token":"s424242"}"#,
+        r#"{"verb":"close","token":"s424242"}"#,
+    ] {
+        let resp = mgr.handle_line(line);
+        assert!(resp.contains("\"ok\":false"), "{line} -> {resp}");
+        assert!(resp.contains("unknown-token"), "{line} -> {resp}");
+    }
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// Satellite: per-session diagnostics go to the session's own journal
+/// directory, not a shared stderr.  A daemon that crashed mid-append
+/// leaves a torn final journal record; on rehydration the recovery
+/// note must land in that session's `diag.log` — and the session must
+/// still finish bit-identical to the serial reference.
+#[test]
+fn recovery_diagnostics_land_in_the_sessions_diag_log() {
+    let root = temp_root("diag");
+    let algo = Algo::Ceal;
+    let prob = Problem::new(WorkflowId::LV, Objective::CompTime);
+    let mut col = client_collector(&prob, algo);
+    let token;
+    {
+        let mgr = SessionManager::new(&root, 2, None).unwrap();
+        let mut client = ServeClient::new(Loopback(&mgr));
+        client.open(&spec_for(algo)).unwrap();
+        token = client.token().unwrap().to_string();
+        let a = client.ask().unwrap();
+        let results = col.evaluate(a.batch.as_ref().unwrap());
+        client
+            .tell(a.seq, &results, col.checkpoint_state().as_ref())
+            .unwrap();
+    } // daemon "dies"
+    // crash artifact: a half-written record at the journal tail
+    {
+        use std::io::Write as _;
+        let jpath = root.join(&token).join(ceal::tuner::JOURNAL_FILE);
+        let mut f = std::fs::OpenOptions::new()
+            .append(true)
+            .open(&jpath)
+            .unwrap();
+        write!(f, "{{\"type\":\"ask\",\"seq\":").unwrap();
+    }
+    let mgr = SessionManager::new(&root, 2, None).unwrap();
+    let mut client = ServeClient::new(Loopback(&mgr));
+    let info = client.reopen(&token).unwrap();
+    assert!(info.resumed);
+    let diag = std::fs::read_to_string(root.join(&token).join("diag.log"))
+        .expect("diag.log missing from the session directory");
+    assert!(
+        diag.contains("torn final journal record"),
+        "recovery note missing from diag.log: {diag:?}"
+    );
+    if let Some(eval) = &info.eval {
+        col.restore_state(eval);
+    }
+    loop {
+        let ask = client.ask().unwrap();
+        if ask.done {
+            break;
+        }
+        let results = col.evaluate(ask.batch.as_ref().unwrap());
+        let r = client
+            .tell(ask.seq, &results, col.checkpoint_state().as_ref())
+            .unwrap();
+        if r.done {
+            break;
+        }
+    }
+    let payload = client.finish().unwrap();
+    assert_payload_matches("diag/torn-record", &payload, &serial_drive(algo));
+    let _ = std::fs::remove_dir_all(&root);
+}

@@ -1,0 +1,307 @@
+//! The serve subsystem's headline artifact: a soak of hundreds of
+//! interleaved sessions — every registered workflow × all seven
+//! algorithms × several seeds, round-robined one exchange at a time
+//! through one multiplexed [`SessionManager`] — with the daemon
+//! "SIGKILLed" (dropped) and restarted on the same serve root twice
+//! mid-soak, once with asked-but-untold batches deliberately held
+//! across the restart and told to the new daemon *before any re-ask*.
+//!
+//! Every session's finish payload must be bit-identical to a serial
+//! `drive()` of the same (workflow, objective, algorithm, seed) cell:
+//! same best index and config, bit-equal collection cost and ground
+//! truth, same run/failure/measurement counts.  Interleaving,
+//! multiplexing, restarts and out-of-order tells are pure plumbing —
+//! they may not perturb a single trajectory.
+//!
+//! Session count defaults to 210 (≥200 per the subsystem's acceptance
+//! bar); `CEAL_SOAK_SESSIONS` overrides it (CI smoke runs 100).
+
+use std::collections::HashMap;
+
+use ceal::config::WorkflowId;
+use ceal::coordinator::{session_rng, tuner_for, Algo, PoolCache, ScorerKind};
+use ceal::serve::protocol::{
+    ask_line, batch_from_json, finish_line, open_line, tell_line, OpenSpec,
+};
+use ceal::serve::SessionManager;
+use ceal::sim::Objective;
+use ceal::tuner::{drive, Collector, Evaluator, MeasurementBatch, Problem, TunerOutput};
+use ceal::util::json::Json;
+
+const WORKFLOWS: [WorkflowId; 5] = [
+    WorkflowId::LV,
+    WorkflowId::HS,
+    WorkflowId::GP,
+    WorkflowId::CH5,
+    WorkflowId::DM4,
+];
+const SEEDS: usize = 6;
+const BASE_SEED: u64 = 0x50AC;
+const M: usize = 6;
+const POOL: usize = 48;
+const THREADS: usize = 2;
+
+/// One cell of the soak cross-product.
+#[derive(Clone, Copy)]
+struct Cell {
+    wf: WorkflowId,
+    obj: Objective,
+    algo: Algo,
+    seed: u64,
+}
+
+fn cell_for(i: usize) -> Cell {
+    let wf = WORKFLOWS[i % WORKFLOWS.len()];
+    let algo = Algo::ALL[(i / WORKFLOWS.len()) % Algo::ALL.len()];
+    let seed_idx = (i / (WORKFLOWS.len() * Algo::ALL.len())) % SEEDS;
+    let obj = if i % 2 == 0 {
+        Objective::CompTime
+    } else {
+        Objective::ExecTime
+    };
+    Cell {
+        wf,
+        obj,
+        algo,
+        seed: BASE_SEED + 1000 * seed_idx as u64,
+    }
+}
+
+fn spec_for(c: &Cell) -> OpenSpec {
+    OpenSpec {
+        workflow: c.wf.name().into(),
+        objective: c.obj.name().into(),
+        algo: c.algo.name().into(),
+        m: M,
+        pool_size: POOL,
+        seed: c.seed,
+        scorer: "native".into(),
+    }
+}
+
+/// The serial reference: identical construction, driven start to
+/// finish with no daemon in the loop.
+fn serial_reference(c: &Cell) -> (TunerOutput, String, f64) {
+    let prob = Problem::new(c.wf, c.obj);
+    let pool = PoolCache::global()
+        .try_get_or_generate(&prob, POOL, c.seed, THREADS)
+        .unwrap_or_else(|e| panic!("pool for {}: {e}", c.wf.name()));
+    let scorer = ScorerKind::Native.build();
+    let tuner = tuner_for(c.algo, &prob, c.seed, None);
+    let mut rng = session_rng(c.seed, c.algo, 0);
+    let mut col = Collector::new(&prob, rng.derive_str("collector"));
+    let session = tuner.session(&prob, &pool, &scorer, M, &mut rng);
+    let out = drive(session, &mut col);
+    let best_config = pool.configs[out.best_idx].to_string();
+    let best_truth = pool.truth_of(out.best_idx);
+    (out, best_config, best_truth)
+}
+
+struct Sess<'p> {
+    cell: Cell,
+    col: Collector<'p>,
+    token: String,
+    /// An asked batch deliberately held (untold) across a daemon
+    /// restart.
+    held: Option<(usize, MeasurementBatch)>,
+    payload: Option<Json>,
+}
+
+fn rpc(mgr: &SessionManager, line: &str) -> Json {
+    let resp = mgr.handle_line(line);
+    ceal::serve::protocol::parse_response(&resp)
+        .unwrap_or_else(|e| panic!("request {line} failed: {e} ({resp})"))
+}
+
+fn get_usize(v: &Json, key: &str) -> usize {
+    v.get(key)
+        .and_then(Json::as_usize)
+        .unwrap_or_else(|| panic!("missing '{key}' in {}", v.compact()))
+}
+
+fn is_done(v: &Json) -> bool {
+    v.get("done").and_then(Json::as_bool).unwrap_or(false)
+}
+
+fn finish(mgr: &SessionManager, s: &mut Sess<'_>) {
+    s.payload = Some(rpc(mgr, &finish_line(&s.token)));
+}
+
+/// One ask/evaluate/tell exchange (or the finish, once done).
+fn step(mgr: &SessionManager, s: &mut Sess<'_>) {
+    if s.payload.is_some() {
+        return; // finished during this round's hold_ask pass
+    }
+    if let Some((seq, batch)) = s.held.take() {
+        // the tell reaches the restarted daemon before any re-ask:
+        // only the journal's re-materialized pending batch can answer
+        let results = s.col.evaluate(&batch);
+        let eval = s.col.checkpoint_state();
+        let v = rpc(mgr, &tell_line(&s.token, seq, &results, eval.as_ref()));
+        assert!(
+            v.get("applied").and_then(Json::as_bool).unwrap_or(false),
+            "held tell for {} not applied after restart: {}",
+            s.token,
+            v.compact()
+        );
+        if is_done(&v) {
+            finish(mgr, s);
+        }
+        return;
+    }
+    let a = rpc(mgr, &ask_line(&s.token));
+    if is_done(&a) {
+        finish(mgr, s);
+        return;
+    }
+    let seq = get_usize(&a, "seq");
+    let batch = batch_from_json(a.get("batch").expect("ask batch")).expect("batch decodes");
+    let results = s.col.evaluate(&batch);
+    let eval = s.col.checkpoint_state();
+    let v = rpc(mgr, &tell_line(&s.token, seq, &results, eval.as_ref()));
+    if is_done(&v) {
+        finish(mgr, s);
+    }
+}
+
+/// Ask and hold the batch untold (simulating a client whose tell is
+/// in flight when the daemon dies).  Sessions that turn out to be
+/// complete finish instead.
+fn hold_ask(mgr: &SessionManager, s: &mut Sess<'_>) {
+    let a = rpc(mgr, &ask_line(&s.token));
+    if is_done(&a) {
+        finish(mgr, s);
+        return;
+    }
+    let seq = get_usize(&a, "seq");
+    let batch = batch_from_json(a.get("batch").expect("ask batch")).expect("batch decodes");
+    s.held = Some((seq, batch));
+}
+
+#[test]
+fn soak_interleaved_sessions_bit_identical_across_daemon_restarts() {
+    let count: usize = std::env::var("CEAL_SOAK_SESSIONS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(210);
+    let root = std::env::temp_dir().join(format!("ceal-serve-soak-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+
+    let cells: Vec<Cell> = (0..count).map(cell_for).collect();
+    let probs: Vec<Problem> = cells.iter().map(|c| Problem::new(c.wf, c.obj)).collect();
+
+    let mut mgr = SessionManager::new(&root, THREADS, None).unwrap();
+    let mut sessions: Vec<Sess<'_>> = cells
+        .iter()
+        .zip(&probs)
+        .map(|(c, prob)| {
+            let v = rpc(&mgr, &open_line(&spec_for(c)));
+            let token = v
+                .get("token")
+                .and_then(Json::as_str)
+                .expect("open token")
+                .to_string();
+            let mut rng = session_rng(c.seed, c.algo, 0);
+            Sess {
+                cell: *c,
+                col: Collector::new(prob, rng.derive_str("collector")),
+                token,
+                held: None,
+                payload: None,
+            }
+        })
+        .collect();
+
+    let mut round = 0usize;
+    loop {
+        let unfinished: Vec<usize> = sessions
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.payload.is_none())
+            .map(|(i, _)| i)
+            .collect();
+        if unfinished.is_empty() {
+            break;
+        }
+        match round {
+            // kill-round: half the tenants have an asked-but-untold
+            // batch in flight when the daemon dies; their tells hit
+            // the restarted daemon first
+            2 => {
+                for &i in &unfinished {
+                    if i % 2 == 0 {
+                        hold_ask(&mgr, &mut sessions[i]);
+                    }
+                }
+                mgr = SessionManager::new(&root, THREADS, None).unwrap();
+            }
+            // plain SIGKILL/restart between clean exchanges
+            5 => {
+                mgr = SessionManager::new(&root, THREADS, None).unwrap();
+            }
+            _ => {}
+        }
+        for &i in &unfinished {
+            step(&mgr, &mut sessions[i]);
+        }
+        round += 1;
+        assert!(round < 10_000, "soak failed to converge");
+    }
+
+    // every trajectory bit-identical to its serial reference
+    type CellKey = (&'static str, &'static str, &'static str, u64);
+    let mut refs: HashMap<CellKey, (TunerOutput, String, f64)> = HashMap::new();
+    for s in &sessions {
+        let c = &s.cell;
+        let key = (c.wf.name(), c.obj.name(), c.algo.name(), c.seed);
+        let (reference, best_config, best_truth) =
+            refs.entry(key).or_insert_with(|| serial_reference(c));
+        let p = s.payload.as_ref().expect("session finished");
+        let label = format!("{}/{}/{}/{:x}", c.wf.name(), c.obj.name(), c.algo.name(), c.seed);
+        assert_eq!(
+            p.get("best_idx").and_then(Json::as_usize),
+            Some(reference.best_idx),
+            "{label}: best_idx diverges"
+        );
+        assert_eq!(
+            p.get("best_config").and_then(Json::as_str),
+            Some(best_config.as_str()),
+            "{label}: best_config diverges"
+        );
+        let truth = p
+            .get("best_truth")
+            .and_then(Json::as_f64)
+            .unwrap_or_else(|| panic!("{label}: payload best_truth missing"));
+        assert_eq!(
+            truth.to_bits(),
+            best_truth.to_bits(),
+            "{label}: best_truth diverges"
+        );
+        let cost = p
+            .get("collection_cost")
+            .and_then(Json::as_f64)
+            .unwrap_or_else(|| panic!("{label}: payload collection_cost missing"));
+        assert_eq!(
+            cost.to_bits(),
+            reference.collection_cost.to_bits(),
+            "{label}: collection cost diverges ({cost} vs {})",
+            reference.collection_cost
+        );
+        assert_eq!(
+            p.get("workflow_runs").and_then(Json::as_usize),
+            Some(reference.workflow_runs),
+            "{label}: workflow_runs diverges"
+        );
+        assert_eq!(
+            p.get("failed_runs").and_then(Json::as_usize),
+            Some(reference.failed_runs),
+            "{label}: failed_runs diverges"
+        );
+        assert_eq!(
+            p.get("measured").and_then(Json::as_usize),
+            Some(reference.measured.len()),
+            "{label}: measured count diverges"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&root);
+}
